@@ -1,0 +1,26 @@
+//! Paper Fig. 1 — activation outliers before/after QuaRot, as a bench
+//! target (the richer visual version lives in examples/outliers.rs).
+//! Expected shape: max/median channel ratio collapses toward ~1.5 after
+//! rotation at every site/layer where the baseline shows outliers.
+
+use anyhow::Result;
+
+use quarot::bench_support::{record, Artifacts};
+use quarot::eval;
+use quarot::util::bench::Table;
+
+fn main() -> Result<()> {
+    let art = Artifacts::load("tiny-mha")?;
+    let base = art.calib(false, 4)?;
+    let rot = art.calib(true, 4)?;
+    let site_names = ["attn-in", "out-proj-in", "ffn-in", "down-proj-in"];
+    let mut t = Table::new(
+        "Fig 1 — channel |act| max/median ratio, baseline vs QuaRot",
+        &["site", "layer", "baseline", "quarot"]);
+    for (b, r) in eval::outlier_stats(&base.amax).iter()
+        .zip(eval::outlier_stats(&rot.amax).iter()) {
+        t.row(vec![site_names[b.site].into(), format!("{}", b.layer),
+                   format!("{:.2}", b.ratio), format!("{:.2}", r.ratio)]);
+    }
+    record("fig1_outliers", &t.render())
+}

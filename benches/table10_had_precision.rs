@@ -1,0 +1,33 @@
+//! Paper Table 10 (Appendix A.7) — precision of the *online* Hadamard
+//! transforms: f32 vs bf16 (the paper's FP32-vs-FP16 ablation, emulated on
+//! the f32 CPU runtime by rounding Hadamard outputs to bf16 in-graph).
+//! Expected shape: indistinguishable (the paper concludes "noise").
+
+use anyhow::Result;
+
+use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::coordinator::runner::{QuantSpec, Variant};
+use quarot::eval;
+use quarot::util::bench::Table;
+
+fn main() -> Result<()> {
+    let windows = eval_windows();
+    let mut t = Table::new("Table 10 — online-Hadamard precision (W4A4KV4 RTN)",
+                           &["model", "had precision", "ppl"]);
+    for model in ["tiny-mha", "small-mha"] {
+        let art = match Artifacts::load(model) {
+            Ok(a) => a,
+            Err(_) => continue,
+        };
+        let eval_toks = art.corpus.split("eval")?;
+        for (label, variant) in [("f32", Variant::Quarot),
+                                 ("bf16", Variant::QuarotH16)] {
+            let spec = QuantSpec { variant, ..QuantSpec::quarot(4) };
+            let runner = art.runner_prefill_only(spec, None)?;
+            let p = eval::perplexity(&runner, eval_toks, windows)?;
+            println!("  [{model}] had {label}: {p:.4}");
+            t.row(vec![model.into(), label.into(), format!("{p:.4}")]);
+        }
+    }
+    record("table10_had_precision", &t.render())
+}

@@ -1,0 +1,48 @@
+//! Paper Tables 11/12/13 (Appendix A.8/A.9) — QuaRot on the other model
+//! families: the harder-to-quantize LLAMA-3 proxy (`small-mha`, Kronecker
+//! H12 FFN), the GQA 70B proxy and the Phi-3 proxy, at RTN/GPTQ ×
+//! INT4/6/8.  Expected shape: same orderings as Table 3 on every config.
+
+use anyhow::Result;
+
+use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::coordinator::runner::{QuantSpec, WeightQuant};
+use quarot::eval;
+use quarot::quant::gptq::GptqCfg;
+use quarot::util::bench::Table;
+
+fn main() -> Result<()> {
+    let windows = eval_windows();
+    let mut t = Table::new(
+        "Tables 11-13 — alternative architectures (LLAMA-3/GQA/Phi proxies)",
+        &["model", "method", "precision", "ppl"]);
+    for model in ["small-mha", "tiny-gqa", "phi-proxy"] {
+        let art = match Artifacts::load(model) {
+            Ok(a) => a,
+            Err(_) => continue,
+        };
+        let eval_toks = art.corpus.split("eval")?;
+        let calib_rot = art.calib(true, 2)?;
+        let fp = art.runner_prefill_only(QuantSpec::fp16_baseline(), None)?;
+        let p = eval::perplexity(&fp, eval_toks, windows)?;
+        t.row(vec![model.into(), "Baseline".into(), "FP16".into(),
+                   format!("{p:.4}")]);
+        drop(fp);
+        for bits in [4u32, 8] {
+            for (method, spec) in [
+                ("QuaRot-RTN", QuantSpec::quarot(bits)),
+                ("QuaRot-GPTQ", QuantSpec {
+                    weights: WeightQuant::Gptq(GptqCfg::new(bits), calib_rot.clone()),
+                    ..QuantSpec::quarot(bits)
+                }),
+            ] {
+                let runner = art.runner_prefill_only(spec, None)?;
+                let p = eval::perplexity(&runner, eval_toks, windows)?;
+                println!("  [{model}] {method} INT{bits}: {p:.4}");
+                t.row(vec![model.into(), method.into(), format!("INT{bits}"),
+                           format!("{p:.4}")]);
+            }
+        }
+    }
+    record("table11_alt_models", &t.render())
+}

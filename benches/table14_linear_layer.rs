@@ -1,0 +1,73 @@
+//! Paper Fig. 7 / Table 14 — the 4-bit linear layer vs the high-precision
+//! baseline, with and without the online Hadamard transform, across the
+//! LLaMA FFN layer shapes.  Staged on the native CPU GEMM substrate
+//! (DESIGN.md §1): the reproduction target is the *ratio* (paper: 3.2-4.3×
+//! on a 3090) and the ≤7 % Hadamard overhead, not absolute ms.
+//!
+//! Shapes are scaled-down (seq 256; the paper's K×N kept for the two
+//! in-model sizes, plus the real LLaMA shapes at reduced seq to keep the
+//! 1-core runtime sane).
+
+use anyhow::Result;
+
+use quarot::gemm;
+use quarot::hadamard;
+use quarot::bench_support::record;
+use quarot::util::bench::{bench_auto, Table};
+use quarot::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let t_tokens = 64usize;
+    let shapes: &[(usize, usize)] = &[
+        (1024, 256),   // tiny-mha W_down
+        (256, 1024),   // tiny-mha W_up
+        (4096, 4096),  // LLAMA2-7B attn (paper row 1)
+        (2560, 1024), // LLAMA2-7B W_down-like, 2^7·20 exercises the H20 path
+    ];
+    let mut t = Table::new(
+        "Fig 7 / Table 14 — linear layer: f32 vs int8 vs packed-int4 (ms)",
+        &["K x N", "f32", "int8", "int4", "int4+had", "speedup4",
+          "had ovh %"]);
+    let mut rng = Rng::new(0);
+    for &(k, n) in shapes {
+        let x: Vec<f32> = rng.normal_vec(t_tokens * k);
+        let w: Vec<f32> = rng.normal_vec(k * n);
+        let wf = gemm::WeightsF32::from_row_major(&w, k, n);
+        let w8 = gemm::WeightsI8::quantize(&w, k, n, 8);
+        let w4 = gemm::WeightsI4::quantize(&w, k, n);
+        let mut y = vec![0.0f32; t_tokens * n];
+        let mut scratch: Vec<i8> = Vec::new();
+        let budget = 300.0;
+
+        let s_f32 = bench_auto(budget, || gemm::gemm_f32(&x, t_tokens, &wf, &mut y));
+        let s_i8 = bench_auto(budget, || {
+            gemm::gemm_i8(&x, t_tokens, &w8, 8, 0.9, &mut y, &mut scratch)
+        });
+        let s_i4 = bench_auto(budget, || {
+            gemm::gemm_i4(&x, t_tokens, &w4, 0.9, &mut y, &mut scratch)
+        });
+        // int4 + online Hadamard on the activation (the W_down path)
+        let mut xh = x.clone();
+        let s_i4h = bench_auto(budget, || {
+            xh.copy_from_slice(&x);
+            for row in xh.chunks_exact_mut(k) {
+                hadamard::wht(row);
+            }
+            gemm::gemm_i4(&xh, t_tokens, &w4, 0.9, &mut y, &mut scratch)
+        });
+        let sp = s_f32.median_ms() / s_i4.median_ms();
+        let ovh = (s_i4h.median_ms() / s_i4.median_ms() - 1.0) * 100.0;
+        println!("  {k}x{n}: f32 {:.2}ms i4 {:.2}ms → {sp:.2}x (had +{ovh:.1}%)",
+                 s_f32.median_ms(), s_i4.median_ms());
+        t.row(vec![
+            format!("{k}x{n}"),
+            format!("{:.2}", s_f32.median_ms()),
+            format!("{:.2}", s_i8.median_ms()),
+            format!("{:.2}", s_i4.median_ms()),
+            format!("{:.2}", s_i4h.median_ms()),
+            format!("{sp:.2}x"),
+            format!("{ovh:.1}"),
+        ]);
+    }
+    record("table14_linear_layer", &t.render())
+}

@@ -1,0 +1,61 @@
+//! Paper Table 15 — decoding one token with a 2047-entry KV cache: FP16 vs
+//! INT4-packed cache, across the LLAMA-2 head geometries and batch sizes.
+//! Expected shape: int4 loses at batch 1 (quant overhead) and wins once
+//! the cache IO dominates (paper: crossover ≈ batch 8-16, up to 1.72×).
+
+use anyhow::Result;
+
+use quarot::attention::{decode_f32, decode_quant, CacheF32, CacheQuant};
+use quarot::bench_support::record;
+use quarot::util::bench::{bench_auto, Table};
+use quarot::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let ctx = 2047usize;
+    let geoms: &[(usize, usize)] = &[(32, 128), (40, 128), (64, 128)];
+    let batches = [1usize, 4, 16];
+    let mut t = Table::new(
+        "Table 15 — decode w/ 2047-token cache: fp32 vs packed-int4 (ms/token)",
+        &["heads x dh", "batch", "fp32", "int4", "ratio"]);
+    let mut rng = Rng::new(1);
+    for &(h, dh) in geoms {
+        // one sequence's caches, reused across the batch (IO volume is what
+        // matters; contents are irrelevant to timing)
+        let mut kf = CacheF32::new(h, dh, ctx);
+        let mut vf = CacheF32::new(h, dh, ctx);
+        let mut kq = CacheQuant::new(h, dh, 128.min(dh), 4);
+        let mut vq = CacheQuant::new(h, dh, 128.min(dh), 4);
+        for _ in 0..ctx {
+            let kt = rng.normal_vec(h * dh);
+            let vt = rng.normal_vec(h * dh);
+            kf.append(&kt);
+            vf.append(&vt);
+            kq.append(&kt, 0.95);
+            vq.append(&vt, 0.95);
+        }
+        let q: Vec<f32> = rng.normal_vec(h * dh);
+        let mut out = vec![0.0f32; h * dh];
+        let (mut sc, mut kb, mut s8) = (Vec::new(), Vec::new(), Vec::new());
+        for &b in &batches {
+            let fp = bench_auto(200.0, || {
+                for _ in 0..b {
+                    decode_f32(&q, h, &kf, &vf, &mut out, &mut sc);
+                }
+            });
+            let i4 = bench_auto(200.0, || {
+                for _ in 0..b {
+                    decode_quant(&q, h, &kq, &vq, &mut out, &mut sc,
+                                 &mut kb, &mut s8);
+                }
+            });
+            let ratio = fp.median_ms() / i4.median_ms();
+            println!("  {h}x{dh} b={b}: fp {:.2}ms i4 {:.2}ms ratio {ratio:.2}",
+                     fp.median_ms(), i4.median_ms());
+            t.row(vec![format!("{h}x{dh}"), format!("{b}"),
+                       format!("{:.2}", fp.median_ms()),
+                       format!("{:.2}", i4.median_ms()),
+                       format!("{ratio:.2}")]);
+        }
+    }
+    record("table15_kv_decode", &t.render())
+}

@@ -1,0 +1,71 @@
+//! Paper Fig. 4 (left) / Table 16 — prefill speedup of the 4-bit block vs
+//! FP16 across batch sizes.  Composed from measured native-GEMM times for
+//! every linear layer of one transformer block (the same methodology as
+//! the paper's single-block measurement), LLaMA-7B and 70B shapes, seq
+//! scaled to keep 1-core runtime sane.  Expected shape: speedup grows with
+//! batch and with model size (paper: 1.97→2.16× on 7B, 3.16→3.33× on 70B).
+
+use anyhow::Result;
+
+use quarot::gemm;
+use quarot::bench_support::record;
+use quarot::util::bench::{bench, Table};
+use quarot::util::prng::Rng;
+
+struct BlockShape {
+    name: &'static str,
+    d: usize,
+    d_kv: usize,
+    dff: usize,
+}
+
+fn main() -> Result<()> {
+    // paper shapes scaled 1/8 in width (runtime ∝ d², still bandwidth-true)
+    let blocks = [
+        BlockShape { name: "LLAMA2-7B/8", d: 512, d_kv: 512, dff: 1376 },
+        BlockShape { name: "LLAMA2-70B/8", d: 1024, d_kv: 128, dff: 3584 },
+    ];
+    let seq = 64usize;
+    let batches = [1usize, 4, 16];
+    let mut t = Table::new(
+        "Fig 4L / Table 16 — prefill block speedup (int4 vs f32, composed)",
+        &["block", "batch", "f32 ms", "int4 ms", "speedup"]);
+    let mut rng = Rng::new(2);
+    for b in &blocks {
+        // per-block linear layers: wq(d,d) wk/wv(d,dkv) wo(d,d)
+        // wup/wgate(d,dff) wdown(dff,d)
+        let layers: Vec<(usize, usize)> = vec![
+            (b.d, b.d), (b.d, b.d_kv), (b.d, b.d_kv), (b.d, b.d),
+            (b.d, b.dff), (b.d, b.dff), (b.dff, b.d),
+        ];
+        let prepared: Vec<(gemm::WeightsF32, gemm::WeightsI4)> = layers.iter()
+            .map(|&(k, n)| {
+                let w = rng.normal_vec(k * n);
+                (gemm::WeightsF32::from_row_major(&w, k, n),
+                 gemm::WeightsI4::quantize(&w, k, n))
+            })
+            .collect();
+        for &batch in &batches {
+            let tokens = seq * batch;
+            let mut f32_ms = 0.0f64;
+            let mut i4_ms = 0.0f64;
+            for (i, &(k, n)) in layers.iter().enumerate() {
+                let x = rng.normal_vec(tokens * k);
+                let mut y = vec![0.0f32; tokens * n];
+                let mut scratch = Vec::new();
+                let (wf, w4) = &prepared[i];
+                f32_ms += bench(1, 3, || gemm::gemm_f32(&x, tokens, wf, &mut y))
+                    .median_ms();
+                i4_ms += bench(1, 3, || {
+                    gemm::gemm_i4(&x, tokens, w4, 0.9, &mut y, &mut scratch)
+                }).median_ms();
+            }
+            let sp = f32_ms / i4_ms;
+            println!("  {} b={batch}: f32 {f32_ms:.1}ms i4 {i4_ms:.1}ms → {sp:.2}x",
+                     b.name);
+            t.row(vec![b.name.into(), format!("{batch}"), format!("{f32_ms:.1}"),
+                       format!("{i4_ms:.1}"), format!("{sp:.2}x")]);
+        }
+    }
+    record("table16_prefill_speedup", &t.render())
+}

@@ -1,0 +1,72 @@
+//! Paper Fig. 4 (right) / Table 17 — peak decode memory: fp16 cache vs the
+//! packed-int4 paged cache, across sequence lengths and batch sizes, for
+//! the 7B (MHA) and 70B (GQA) head geometries.  Measured from the actual
+//! page-pool accounting of the coordinator's KV-cache manager.  Expected
+//! shape: ~3.6-3.9× saving, slightly higher for GQA (fixed overheads
+//! amortize), growing with sequence length.
+
+use anyhow::Result;
+
+use quarot::coordinator::kvcache::{PagePool, SeqCache};
+use quarot::model::ModelConfig;
+use quarot::bench_support::record;
+use quarot::util::bench::Table;
+use quarot::util::prng::Rng;
+
+fn cfg(name: &str, n_heads: usize, n_kv: usize, layers: usize) -> ModelConfig {
+    ModelConfig {
+        name: name.into(), vocab: 512, d_model: n_heads * 128,
+        n_layers: layers, n_heads, n_kv_heads: n_kv, d_head: 128,
+        d_ff: 4 * n_heads * 128, max_seq: 128, cache_seq: 4096,
+        decode_batch: 16, kv_group: 128, rope_theta: 1e4, train_ppl: 0.0,
+    }
+}
+
+fn main() -> Result<()> {
+    // one-layer-scaled geometries (the paper measures a single block too)
+    let models = [cfg("LLAMA2-7B-like (MHA)", 32, 32, 1),
+                  cfg("LLAMA2-70B-like (GQA)", 64, 8, 1)];
+    let mut t = Table::new(
+        "Fig 4R / Table 17 — KV memory: fp16-equiv vs packed-int4 pages",
+        &["model", "batch", "seq", "fp16 MB", "int4 MB", "saving"]);
+    let mut rng = Rng::new(3);
+    for m in &models {
+        for &(batch, seqs) in &[(1usize, [256usize, 1024, 4096]),
+                                (16, [256, 1024, 2048])] {
+            for &seq in &seqs {
+                let geom = SeqCache::new(m, 4, 0.95, 32).geom();
+                let pages_needed =
+                    2 * m.n_layers * batch * seq.div_ceil(32) + 64;
+                let mut pool = PagePool::new(geom.page_bytes(), pages_needed);
+                let mut caches: Vec<SeqCache> = (0..batch)
+                    .map(|_| SeqCache::new(m, 4, 0.95, 32))
+                    .collect();
+                let d = m.d_kv();
+                let kt = rng.normal_vec(d);
+                let vt = rng.normal_vec(d);
+                for c in caches.iter_mut() {
+                    for _ in 0..seq {
+                        for l in 0..m.n_layers {
+                            c.append_layer(&mut pool, l, &kt, &vt, m.kv_group)?;
+                        }
+                        c.bump();
+                    }
+                }
+                let packed: usize = caches.iter().map(|c| c.bytes()).sum();
+                let fp16: usize = caches.iter().map(|c| c.fp16_equiv_bytes()).sum();
+                let saving = fp16 as f64 / packed as f64;
+                println!("  {} b={batch} s={seq}: {:.2} MB → {:.2} MB ({saving:.2}x)",
+                         m.name, fp16 as f64 / 1e6, packed as f64 / 1e6);
+                t.row(vec![m.name.clone(), format!("{batch}"), format!("{seq}"),
+                           format!("{:.2}", fp16 as f64 / 1e6),
+                           format!("{:.2}", packed as f64 / 1e6),
+                           format!("{saving:.2}x")]);
+                for c in caches.iter_mut() {
+                    c.free(&mut pool);
+                }
+                assert_eq!(pool.in_use(), 0);
+            }
+        }
+    }
+    record("table17_memory", &t.render())
+}

@@ -1,0 +1,61 @@
+//! Paper Table 1 — WikiText-2(-proxy) perplexity at W4A4KV4 for the method
+//! matrix: FP16 baseline, SmoothQuant, naive RTN (OmniQuant's core without
+//! re-training; documented substitution), QUIK-style outlier retention,
+//! QuaRot (GPTQ) and QuaRot-128G.  Expected *shape* (paper): baseline <
+//! QuaRot ≈ QuaRot-128G < QUIK ≪ SmoothQuant/RTN.
+
+use anyhow::Result;
+
+use quarot::bench_support::{available_models, eval_windows, record, Artifacts};
+use quarot::coordinator::runner::{QuantSpec, Variant, WeightQuant};
+use quarot::eval;
+use quarot::quant::{gptq::GptqCfg, rtn::WeightQuantCfg};
+use quarot::util::bench::Table;
+
+fn main() -> Result<()> {
+    let windows = eval_windows();
+    let mut t = Table::new(
+        "Table 1 — 4-bit (W4A4KV4) perplexity",
+        &["method", "model", "ppl"]);
+    for model in available_models() {
+        let art = Artifacts::load(&model)?;
+        let eval_toks = art.corpus.split("eval")?;
+        let calib_base = art.calib(false, 4)?;
+        let calib_rot = art.calib(true, 4)?;
+
+        let base4 = |w| QuantSpec {
+            variant: Variant::Baseline, act_bits: 4, act_clip: 0.9,
+            kv_bits: 4, kv_bits_v: 4, kv_clip: 0.95, weights: w,
+            outliers: 0, smooth: false,
+        };
+        let rows: Vec<(&str, QuantSpec, bool)> = vec![
+            ("Baseline FP16", QuantSpec::fp16_baseline(), false),
+            ("SmoothQuant RTN", QuantSpec {
+                smooth: true, ..base4(WeightQuant::Rtn(WeightQuantCfg::rtn(4)))
+            }, true),
+            ("RTN (no rotation)",
+             base4(WeightQuant::Rtn(WeightQuantCfg::rtn(4))), false),
+            ("QUIK-like (16 outliers)", QuantSpec {
+                outliers: 16,
+                ..base4(WeightQuant::Rtn(WeightQuantCfg::rtn(4)))
+            }, true),
+            ("QuaRot (GPTQ)", QuantSpec {
+                weights: WeightQuant::Gptq(GptqCfg::new(4), calib_rot.clone()),
+                ..QuantSpec::quarot(4)
+            }, false),
+            ("QuaRot-128G", QuantSpec {
+                weights: WeightQuant::Gptq(GptqCfg::grouped(4, 128),
+                                           calib_rot.clone()),
+                ..QuantSpec::quarot(4)
+            }, false),
+        ];
+        for (label, spec, needs_base_calib) in rows {
+            let stats = if needs_base_calib { Some(&calib_base) } else { None };
+            let runner = art.runner_prefill_only(spec, stats)?;
+            let p = eval::perplexity(&runner, eval_toks, windows)?;
+            println!("  [{model}] {label:28} {p:.4}");
+            t.row(vec![label.into(), model.clone(), format!("{p:.4}")]);
+        }
+    }
+    record("table1_ppl_4bit", &t.render())
+}

@@ -1,0 +1,43 @@
+//! Paper Table 2 — zero-shot accuracy (six probe tasks) of FP16 vs 4-bit
+//! QuaRot.  Expected shape: QuaRot within a few points of FP16, with the
+//! gap shrinking for the larger/GQA configs.
+
+use anyhow::Result;
+
+use quarot::bench_support::{available_models, probe_items, record, Artifacts};
+use quarot::coordinator::runner::{QuantSpec, WeightQuant};
+use quarot::eval;
+use quarot::quant::gptq::GptqCfg;
+use quarot::util::bench::Table;
+
+fn main() -> Result<()> {
+    let items = probe_items();
+    let mut header = vec!["model".to_string(), "method".to_string()];
+    let mut t: Option<Table> = None;
+    for model in available_models() {
+        let art = Artifacts::load(&model)?;
+        let calib_rot = art.calib(true, 4)?;
+        for (label, spec) in [
+            ("FP16", QuantSpec::fp16_baseline()),
+            ("QuaRot", QuantSpec {
+                weights: WeightQuant::Gptq(GptqCfg::new(4), calib_rot.clone()),
+                ..QuantSpec::quarot(4)
+            }),
+        ] {
+            let runner = art.runner_prefill_only(spec, None)?;
+            let (scores, avg) = eval::score_all(&runner, &art.probes, items)?;
+            if t.is_none() {
+                header.extend(scores.iter().map(|s| s.name.clone()));
+                header.push("Avg.".into());
+                let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+                t = Some(Table::new("Table 2 — zero-shot probe accuracy", &hrefs));
+            }
+            let mut row = vec![model.clone(), label.to_string()];
+            row.extend(scores.iter().map(|s| format!("{:.3}", s.accuracy)));
+            row.push(format!("{avg:.3}"));
+            println!("  [{model}] {label}: avg {avg:.3}");
+            t.as_mut().unwrap().row(row);
+        }
+    }
+    record("table2_zeroshot", &t.unwrap().render())
+}

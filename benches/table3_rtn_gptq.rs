@@ -1,0 +1,46 @@
+//! Paper Table 3 / Table 9 — QuaRot-RTN vs QuaRot-GPTQ at INT4/6/8.
+//! Expected shape: INT8 ≈ lossless for both; at INT4 GPTQ < RTN, with the
+//! gap shrinking as the model grows.
+
+use anyhow::Result;
+
+use quarot::bench_support::{available_models, eval_windows, record, Artifacts};
+use quarot::coordinator::runner::{QuantSpec, WeightQuant};
+use quarot::eval;
+use quarot::quant::gptq::GptqCfg;
+use quarot::util::bench::Table;
+
+fn main() -> Result<()> {
+    let windows = eval_windows();
+    let mut t = Table::new(
+        "Table 3/9 — QuaRot RTN vs GPTQ across precisions",
+        &["model", "method", "precision", "ppl"]);
+    for model in available_models() {
+        let art = Artifacts::load(&model)?;
+        let eval_toks = art.corpus.split("eval")?;
+        let calib_rot = art.calib(true, 4)?;
+        {
+            let fp = art.runner_prefill_only(QuantSpec::fp16_baseline(), None)?;
+            let p = eval::perplexity(&fp, eval_toks, windows)?;
+            t.row(vec![model.clone(), "Baseline".into(), "FP16".into(),
+                       format!("{p:.4}")]);
+            println!("  [{model}] FP16 {p:.4}");
+        }
+        for bits in [4u32, 6, 8] {
+            for (method, spec) in [
+                ("QuaRot-RTN", QuantSpec::quarot(bits)),
+                ("QuaRot-GPTQ", QuantSpec {
+                    weights: WeightQuant::Gptq(GptqCfg::new(bits), calib_rot.clone()),
+                    ..QuantSpec::quarot(bits)
+                }),
+            ] {
+                let runner = art.runner_prefill_only(spec, None)?;
+                let p = eval::perplexity(&runner, eval_toks, windows)?;
+                println!("  [{model}] {method} INT{bits} {p:.4}");
+                t.row(vec![model.clone(), method.into(), format!("INT{bits}"),
+                           format!("{p:.4}")]);
+            }
+        }
+    }
+    record("table3_rtn_gptq", &t.render())
+}

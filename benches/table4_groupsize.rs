@@ -1,0 +1,40 @@
+//! Paper Table 4 — group-size ablation for QuaRot-GPTQ weights
+//! (per-column vs 256G/128G/64G).  Expected shape: smaller groups →
+//! monotonically better ppl, diminishing returns.
+
+use anyhow::Result;
+
+use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::coordinator::runner::{QuantSpec, WeightQuant};
+use quarot::eval;
+use quarot::quant::gptq::GptqCfg;
+use quarot::util::bench::Table;
+
+fn main() -> Result<()> {
+    let windows = eval_windows();
+    let model = "tiny-mha";
+    let art = Artifacts::load(model)?;
+    let eval_toks = art.corpus.split("eval")?;
+    let calib_rot = art.calib(true, 4)?;
+
+    let mut t = Table::new("Table 4 — group-wise weight quantization",
+                           &["method", "ppl"]);
+    let fp = art.runner_prefill_only(QuantSpec::fp16_baseline(), None)?;
+    t.row(vec!["Baseline".into(),
+               format!("{:.4}", eval::perplexity(&fp, eval_toks, windows)?)]);
+    drop(fp);
+    // group sizes must divide every weight's input dim; tiny-mha: 256/1024
+    for (label, group) in [("QuaRot (per-column)", 0usize),
+                           ("QuaRot-256G", 256), ("QuaRot-128G", 128),
+                           ("QuaRot-64G", 64)] {
+        let spec = QuantSpec {
+            weights: WeightQuant::Gptq(GptqCfg::grouped(4, group), calib_rot.clone()),
+            ..QuantSpec::quarot(4)
+        };
+        let runner = art.runner_prefill_only(spec, None)?;
+        let p = eval::perplexity(&runner, eval_toks, windows)?;
+        println!("  {label:24} {p:.4}");
+        t.row(vec![label.into(), format!("{p:.4}")]);
+    }
+    record("table4_groupsize", &t.render())
+}

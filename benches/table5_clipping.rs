@@ -1,0 +1,44 @@
+//! Paper Table 5 (Appendix A.2) — clipping-ratio ablation: input
+//! (activation) clipping and KV-cache clipping swept independently with
+//! everything else held in high precision.  Expected shape: a shallow
+//! optimum near 0.9 (acts) / 0.95 (KV).
+
+use anyhow::Result;
+
+use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::coordinator::runner::QuantSpec;
+use quarot::eval;
+use quarot::util::bench::Table;
+
+fn main() -> Result<()> {
+    let windows = eval_windows();
+    let art = Artifacts::load("tiny-mha")?;
+    let eval_toks = art.corpus.split("eval")?;
+    let mut t = Table::new("Table 5 — clipping-ratio ablation",
+                           &["what", "clip", "ppl"]);
+    for clip in [1.0f32, 0.95, 0.9, 0.85] {
+        // input quantization only (weights + KV stay high precision)
+        let spec = QuantSpec {
+            act_bits: 4, act_clip: clip, kv_bits: 16, kv_bits_v: 16,
+            weights: quarot::coordinator::runner::WeightQuant::None,
+            ..QuantSpec::quarot(4)
+        };
+        let runner = art.runner_prefill_only(spec, None)?;
+        let p = eval::perplexity(&runner, eval_toks, windows)?;
+        println!("  acts clip {clip}: {p:.4}");
+        t.row(vec!["input quant".into(), format!("{clip}"), format!("{p:.4}")]);
+    }
+    for clip in [1.0f32, 0.95, 0.9, 0.85] {
+        // KV quantization only
+        let spec = QuantSpec {
+            act_bits: 0, kv_bits: 4, kv_bits_v: 4, kv_clip: clip,
+            weights: quarot::coordinator::runner::WeightQuant::None,
+            ..QuantSpec::quarot(4)
+        };
+        let runner = art.runner_prefill_only(spec, None)?;
+        let p = eval::perplexity(&runner, eval_toks, windows)?;
+        println!("  KV clip {clip}: {p:.4}");
+        t.row(vec!["KV quant".into(), format!("{clip}"), format!("{p:.4}")]);
+    }
+    record("table5_clipping", &t.render())
+}

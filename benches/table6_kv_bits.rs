@@ -1,0 +1,38 @@
+//! Paper Table 6 (Appendix A.3) — KV-cache precision grid: K bits × V bits
+//! with everything else FP16.  Expected shape: keys more sensitive than
+//! values (K3V4 worse than K4V3... actually paper: K4V3 better than K3V4),
+//! graceful down to 3 bits, sharp cliff at K2.
+
+use anyhow::Result;
+
+use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::coordinator::runner::{QuantSpec, WeightQuant};
+use quarot::eval;
+use quarot::util::bench::Table;
+
+fn main() -> Result<()> {
+    let windows = eval_windows();
+    let mut t = Table::new("Table 6 — KV-cache bit grid (group=head_dim, asym)",
+                           &["K bits", "V bits", "model", "ppl"]);
+    for model in ["tiny-mha", "tiny-gqa"] {
+        let art = match Artifacts::load(model) {
+            Ok(a) => a,
+            Err(_) => continue,
+        };
+        let eval_toks = art.corpus.split("eval")?;
+        for (kb, vb) in [(16u32, 16u32), (4, 4), (4, 3), (4, 2),
+                         (3, 4), (3, 3), (3, 2), (2, 4), (2, 2)] {
+            let spec = QuantSpec {
+                act_bits: 0, kv_bits: kb, kv_bits_v: vb, kv_clip: 0.95,
+                weights: WeightQuant::None,
+                ..QuantSpec::quarot(4)
+            };
+            let runner = art.runner_prefill_only(spec, None)?;
+            let p = eval::perplexity(&runner, eval_toks, windows)?;
+            println!("  [{model}] K{kb} V{vb}: {p:.4}");
+            t.row(vec![format!("{kb}"), format!("{vb}"), model.into(),
+                       format!("{p:.4}")]);
+        }
+    }
+    record("table6_kv_bits", &t.render())
+}

@@ -1,0 +1,56 @@
+//! Paper Table 7 (Appendix A.4) — weight-only quantization (A16, KV16):
+//! RTN/GPTQ at W4/W3/W2 with and without the QuaRot rotation.  Expected
+//! shape: rotation helps both quantizers at every width; W2 only survives
+//! with QuaRot+GPTQ.
+
+use anyhow::Result;
+
+use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::coordinator::runner::{QuantSpec, Variant, WeightQuant};
+use quarot::eval;
+use quarot::quant::{gptq::GptqCfg, rtn::WeightQuantCfg};
+use quarot::util::bench::Table;
+
+fn main() -> Result<()> {
+    let windows = eval_windows();
+    let art = Artifacts::load("tiny-mha")?;
+    let eval_toks = art.corpus.split("eval")?;
+    let calib_base = art.calib(false, 4)?;
+    let calib_rot = art.calib(true, 4)?;
+
+    let mut t = Table::new("Table 7 — weight-only quantization (A16KV16)",
+                           &["method", "W bits", "ppl"]);
+    let weight_only = |variant: Variant, w: WeightQuant| QuantSpec {
+        variant, act_bits: 0, act_clip: 1.0, kv_bits: 16, kv_bits_v: 16,
+        kv_clip: 1.0, weights: w, outliers: 0, smooth: false,
+    };
+    let p_base = {
+        let fp = art.runner_prefill_only(QuantSpec::fp16_baseline(), None)?;
+        let p = eval::perplexity(&fp, eval_toks, windows)?;
+        t.row(vec!["Baseline".into(), "-".into(), format!("{p:.4}")]);
+        p
+    };
+    for bits in [4u32, 3, 2] {
+        let rows: Vec<(&str, QuantSpec)> = vec![
+            ("RTN", weight_only(Variant::Baseline,
+                WeightQuant::Rtn(WeightQuantCfg::asymmetric(bits)))),
+            ("GPTQ", weight_only(Variant::Baseline,
+                WeightQuant::Gptq(GptqCfg::new(bits), calib_base.clone()))),
+            ("QuaRot-RTN", weight_only(Variant::Quarot,
+                WeightQuant::Rtn(WeightQuantCfg::asymmetric(bits)))),
+            ("QuaRot-GPTQ", weight_only(Variant::Quarot,
+                WeightQuant::Gptq(GptqCfg::new(bits), calib_rot.clone()))),
+        ];
+        for (label, spec) in rows {
+            let runner = art.runner_prefill_only(spec, None)?;
+            let p = eval::perplexity(&runner, eval_toks, windows)?;
+            // the paper prints "Inf" for catastrophic (>100) ppl; our scale
+            // is ~p_base, so use a relative blow-up threshold instead
+            let shown = if p > 20.0 * p_base { "Inf".to_string() }
+                        else { format!("{p:.4}") };
+            println!("  {label:12} W{bits}: {shown}");
+            t.row(vec![label.into(), format!("{bits}"), shown]);
+        }
+    }
+    record("table7_weight_only", &t.render())
+}

@@ -1,0 +1,37 @@
+//! Paper Table 8 (Appendix A.5) — randomized Hadamard Q vs QR-of-Gaussian
+//! random orthogonal Q for the fused rotation (online ops stay Hadamard).
+//! Expected shape: Hadamard < random-orthogonal < unrotated RTN.
+
+use anyhow::Result;
+
+use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::coordinator::runner::{QuantSpec, Variant};
+use quarot::eval;
+use quarot::util::bench::Table;
+
+fn main() -> Result<()> {
+    let windows = eval_windows();
+    let mut t = Table::new("Table 8 — rotation matrix ablation (W4A4KV4 RTN)",
+                           &["model", "rotation", "ppl"]);
+    for model in ["tiny-mha", "tiny-gqa"] {
+        let art = match Artifacts::load(model) {
+            Ok(a) => a,
+            Err(_) => continue,
+        };
+        let eval_toks = art.corpus.split("eval")?;
+        {
+            let fp = art.runner_prefill_only(QuantSpec::fp16_baseline(), None)?;
+            t.row(vec![model.into(), "Baseline FP16".into(),
+                       format!("{:.4}", eval::perplexity(&fp, eval_toks, windows)?)]);
+        }
+        for (label, variant) in [("QuaRot (Hadamard)", Variant::Quarot),
+                                 ("QuaRot (Random orth.)", Variant::QuarotRandom)] {
+            let spec = QuantSpec { variant, ..QuantSpec::quarot(4) };
+            let runner = art.runner_prefill_only(spec, None)?;
+            let p = eval::perplexity(&runner, eval_toks, windows)?;
+            println!("  [{model}] {label}: {p:.4}");
+            t.row(vec![model.into(), label.into(), format!("{p:.4}")]);
+        }
+    }
+    record("table8_random_orth", &t.render())
+}

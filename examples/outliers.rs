@@ -1,0 +1,67 @@
+//! Figure 1 reproduction: distribution of activations at the FFN input,
+//! before vs after QuaRot's rotation — the visual core of the paper.
+//!
+//! Prints per-site/per-layer channel max-to-median ratios plus an ASCII
+//! histogram of channel |activation| maxima for the first layer.
+//!
+//! Run: `cargo run --release --example outliers`.
+
+use anyhow::Result;
+
+use quarot::bench_support::{record, Artifacts};
+use quarot::eval;
+use quarot::util::bench::Table;
+use quarot::util::cli::Args;
+
+fn histogram(vals: &[f32], buckets: usize) -> String {
+    let mx = vals.iter().fold(0.0f32, |m, &v| m.max(v));
+    let mut counts = vec![0usize; buckets];
+    for &v in vals {
+        let b = ((v / mx) * (buckets as f32 - 1.0)) as usize;
+        counts[b.min(buckets - 1)] += 1;
+    }
+    let peak = *counts.iter().max().unwrap();
+    counts.iter().enumerate().map(|(i, &c)| {
+        let bar = "#".repeat((c * 40 / peak.max(1)).max(usize::from(c > 0)));
+        format!("{:6.2}-{:6.2} | {bar} {c}",
+                mx * i as f32 / buckets as f32,
+                mx * (i + 1) as f32 / buckets as f32)
+    }).collect::<Vec<_>>().join("\n")
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = args.str_or("model", "tiny-mha");
+    let art = Artifacts::load(&model)?;
+    let windows = args.usize_or("windows", 4);
+
+    println!("[outliers] collecting activation stats (baseline)...");
+    let base = art.calib(false, windows)?;
+    println!("[outliers] collecting activation stats (rotated)...");
+    let rot = art.calib(true, windows)?;
+
+    let mut out = String::new();
+    let site_names = ["attn-in", "out-proj-in", "ffn-in", "down-proj-in"];
+    let mut t = Table::new(
+        "Fig.1 — per-channel |act| max/median ratio (outliers ⇔ ratio ≫ 1)",
+        &["site", "layer", "baseline", "quarot", "reduction"]);
+    for (b, r) in eval::outlier_stats(&base.amax).iter()
+        .zip(eval::outlier_stats(&rot.amax).iter()) {
+        t.row(vec![
+            site_names[b.site].into(),
+            format!("{}", b.layer),
+            format!("{:.2}", b.ratio),
+            format!("{:.2}", r.ratio),
+            format!("{:.1}×", b.ratio / r.ratio.max(1e-6)),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    out.push_str("\nchannel |act| maxima, FFN input, layer 0 — BASELINE:\n");
+    out.push_str(&histogram(&base.amax[2][0], 12));
+    out.push_str("\n\nchannel |act| maxima, FFN input, layer 0 — QUAROT:\n");
+    out.push_str(&histogram(&rot.amax[2][0], 12));
+    out.push('\n');
+    record("fig1_outliers", &out)?;
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Quantization-scheme explorer: sweep a handful of schemes over one model
+//! and print paper-style ppl rows — the workflow a practitioner adopting
+//! QuaRot would actually run on their own checkpoint.
+//!
+//! Run: `cargo run --release --example quantize_eval [-- --model tiny-mha]`.
+
+use anyhow::Result;
+
+use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::coordinator::runner::{QuantSpec, Variant, WeightQuant};
+use quarot::eval;
+use quarot::quant::{gptq::GptqCfg, rtn::WeightQuantCfg};
+use quarot::util::bench::Table;
+use quarot::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = args.str_or("model", "tiny-mha");
+    let art = Artifacts::load(&model)?;
+    let windows = args.usize_or("windows", eval_windows());
+    let eval_toks = art.corpus.split("eval")?;
+
+    println!("[quantize_eval] calibrating (rotated space, for GPTQ)...");
+    let stats_rot = art.calib(true, 4)?;
+
+    let rows: Vec<(&str, QuantSpec)> = vec![
+        ("FP16 baseline", QuantSpec::fp16_baseline()),
+        ("RTN W4A4KV4 (no rotation)", QuantSpec {
+            variant: Variant::Baseline,
+            act_bits: 4, act_clip: 0.9, kv_bits: 4, kv_bits_v: 4, kv_clip: 0.95,
+            weights: WeightQuant::Rtn(WeightQuantCfg::rtn(4)),
+            outliers: 0, smooth: false,
+        }),
+        ("QuaRot-RTN W4A4KV4", QuantSpec::quarot(4)),
+        ("QuaRot-GPTQ W4A4KV4", QuantSpec {
+            weights: WeightQuant::Gptq(GptqCfg::new(4), stats_rot.clone()),
+            ..QuantSpec::quarot(4)
+        }),
+        ("QuaRot-GPTQ-128G", QuantSpec {
+            weights: WeightQuant::Gptq(GptqCfg::grouped(4, 128), stats_rot.clone()),
+            ..QuantSpec::quarot(4)
+        }),
+        ("QuaRot-RTN W8A8KV8", QuantSpec::quarot(8)),
+    ];
+
+    let mut t = Table::new(
+        &format!("quantize_eval — {model} ({windows} eval windows)"),
+        &["scheme", "ppl"]);
+    for (label, spec) in rows {
+        let runner = art.runner(spec, Some(&stats_rot))?;
+        let p = eval::perplexity(&runner, eval_toks, windows)?;
+        println!("  {label:32} {p:.4}");
+        t.row(vec![label.into(), format!("{p:.4}")]);
+    }
+    record("quantize_eval", &t.render())?;
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: load the QuaRot-INT4 model, generate a few sequences, and
+//! compare against the FP16 baseline — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+
+use quarot::bench_support::Artifacts;
+use quarot::coordinator::batcher::{GenerationEngine, Request};
+use quarot::coordinator::runner::QuantSpec;
+use quarot::coordinator::sampler::Sampling;
+
+fn main() -> Result<()> {
+    let art = Artifacts::load("tiny-mha")?;
+
+    // A prompt from the held-out corpus (token ids — the synthetic language
+    // has no detokenizer; see DESIGN.md §1).
+    let eval = art.corpus.split("eval")?;
+    let prompt: Vec<u16> = eval[..12].to_vec();
+
+    for (label, spec) in [
+        ("FP16 baseline", QuantSpec::fp16_baseline()),
+        ("QuaRot W4A4KV4", QuantSpec::quarot(4)),
+    ] {
+        println!("== {label} ==");
+        let runner = art.runner(spec, None)?;
+        let mut engine = GenerationEngine::new(runner, 512, 7);
+        engine.submit(Request {
+            id: 0,
+            prompt: prompt.clone(),
+            max_new_tokens: 24,
+            sampling: Sampling::Greedy,
+            stop_token: None,
+        });
+        for c in engine.run_to_completion()? {
+            println!("prompt  {:?}", prompt);
+            println!("output  {:?}", c.tokens);
+            println!("ttft {:.1} ms | {:.1} tok/s | peak cache {} B \
+                      (fp16-equiv {} B)",
+                     c.ttft_ms,
+                     c.tokens.len() as f64 / (c.decode_ms / 1e3).max(1e-9),
+                     engine.stats.peak_cache_bytes,
+                     engine.stats.peak_cache_fp16_bytes);
+        }
+        println!();
+    }
+    Ok(())
+}

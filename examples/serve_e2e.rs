@@ -1,0 +1,123 @@
+//! End-to-end serving validation (the required full-system driver).
+//!
+//! Boots the complete stack — AOT-compiled QuaRot-INT4 graphs, paged
+//! quantized KV cache, continuous batcher, TCP server — submits a batch of
+//! concurrent generation requests through the network front-end, and
+//! reports per-request latency, aggregate throughput, KV-cache memory vs
+//! the FP16-equivalent, and the held-out perplexity of the served INT4
+//! model next to the f32 baseline.  Results are recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! Run: `cargo run --release --example serve_e2e [-- --requests 12]`.
+
+use anyhow::Result;
+
+use quarot::bench_support::{record, Artifacts};
+use quarot::coordinator::batcher::GenerationEngine;
+use quarot::coordinator::runner::QuantSpec;
+use quarot::eval;
+use quarot::server::{serve, Client};
+use quarot::util::bench::Table;
+use quarot::util::cli::Args;
+use quarot::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = args.str_or("model", "tiny-mha");
+    let n_requests = args.usize_or("requests", 10);
+    let max_new = args.usize_or("max-new", 24);
+
+    println!("[e2e] starting server with QuaRot-INT4 engine ({model})...");
+    let m2 = model.clone();
+    let handle = serve(
+        move || {
+            let art = Artifacts::load(&m2)?;
+            let runner = art.runner(QuantSpec::quarot(4), None)?;
+            Ok(GenerationEngine::new(runner, 2048, 7))
+        },
+        0,
+    )?;
+    let port = handle.port;
+
+    // build prompts from held-out data
+    let art = Artifacts::load(&model)?;
+    let eval_toks = art.corpus.split("eval")?;
+    let mut rng = Rng::new(42);
+    let prompts: Vec<Vec<u16>> = (0..n_requests)
+        .map(|_| {
+            let len = 8 + rng.below(17);
+            let off = rng.below(eval_toks.len() - len - 1);
+            eval_toks[off..off + len].to_vec()
+        })
+        .collect();
+
+    // concurrent clients
+    println!("[e2e] submitting {n_requests} concurrent requests...");
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for p in prompts {
+        joins.push(std::thread::spawn(move || -> Result<(f64, f64, usize)> {
+            let mut c = Client::connect(port)?;
+            let resp = c.generate(&p, max_new)?;
+            let err = resp.get("error").and_then(|e| e.as_str());
+            if let Some(e) = err {
+                anyhow::bail!("server error: {e}");
+            }
+            Ok((
+                resp.get("ttft_ms").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+                resp.get("tokens_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                resp.get("tokens").and_then(|v| v.as_arr()).map(|a| a.len()).unwrap_or(0),
+            ))
+        }));
+    }
+    let mut ttfts = Vec::new();
+    let mut tps = Vec::new();
+    let mut total_tokens = 0usize;
+    for j in joins {
+        let (ttft, t, n) = j.join().unwrap()?;
+        ttfts.push(ttft);
+        tps.push(t);
+        total_tokens += n;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut stats_client = Client::connect(port)?;
+    let stats = stats_client.stats()?;
+    handle.shutdown();
+
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = ttfts[ttfts.len() / 2];
+    let p95 = ttfts[(ttfts.len() - 1) * 95 / 100];
+    let agg_tps = total_tokens as f64 / wall;
+    let cache_b = stats.get("peak_cache_bytes").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let cache_fp16 = stats.get("peak_cache_fp16_bytes").and_then(|v| v.as_f64())
+        .unwrap_or(0.0);
+    let saving = cache_fp16 / cache_b.max(1.0);
+
+    // accuracy of the served model vs baseline
+    println!("[e2e] measuring served-model perplexity vs f32 baseline...");
+    let windows = 8;
+    let r_int4 = art.runner(QuantSpec::quarot(4), None)?;
+    let ppl_int4 = eval::perplexity(&r_int4, eval_toks, windows)?;
+    drop(r_int4);
+    let r_fp = art.runner(QuantSpec::fp16_baseline(), None)?;
+    let ppl_fp = eval::perplexity(&r_fp, eval_toks, windows)?;
+
+    let mut t = Table::new(
+        &format!("E2E serving — {model}, QuaRot W4A4KV4, {n_requests} requests"),
+        &["metric", "value"]);
+    t.row(vec!["requests completed".into(), format!("{n_requests}")]);
+    t.row(vec!["total generated tokens".into(), format!("{total_tokens}")]);
+    t.row(vec!["wall time (s)".into(), format!("{wall:.2}")]);
+    t.row(vec!["aggregate throughput (tok/s)".into(), format!("{agg_tps:.1}")]);
+    t.row(vec!["median TTFT (ms)".into(), format!("{med:.1}")]);
+    t.row(vec!["p95 TTFT (ms)".into(), format!("{p95:.1}")]);
+    t.row(vec!["mean per-req decode tok/s".into(),
+               format!("{:.1}", tps.iter().sum::<f64>() / tps.len() as f64)]);
+    t.row(vec!["peak KV cache (packed B)".into(), format!("{cache_b:.0}")]);
+    t.row(vec!["peak KV cache (fp16-equiv B)".into(), format!("{cache_fp16:.0}")]);
+    t.row(vec!["KV memory saving ×".into(), format!("{saving:.2}")]);
+    t.row(vec!["ppl INT4 (served)".into(), format!("{ppl_int4:.3}")]);
+    t.row(vec!["ppl f32 baseline".into(), format!("{ppl_fp:.3}")]);
+    record("e2e_serving", &t.render())?;
+    Ok(())
+}

@@ -1,0 +1,305 @@
+"""AOT compile path: train → rotate → lower every graph variant to HLO text.
+
+``make artifacts`` runs this once; the rust runtime then never touches
+python.  Per model config we emit into ``artifacts/<name>/``:
+
+  weights.bin      base.* (trained, unfused), rot.* (QuaRot-rotated),
+                   rnd.* (random-orthogonal-rotated, Table 8)
+  manifest.json    graph inventory: file, ordered input/output specs
+  *.hlo.txt        the lowered graphs:
+
+    baseline_prefill   unrotated, fake-quant + QUIK outlier masks
+    baseline_decode    unrotated, f32 KV cache (the FP16 serving baseline)
+    quarot_prefill     rotated + online Hadamards + fake-quant
+    quarot_decode      rotated, quantized-KV-cache decode (Pallas kernel)
+    quarot_prefill_h16 Table 10: online Hadamards rounded to bf16
+    collect_baseline   calibration stats (Hessians + amax) in original space
+    collect_quarot     calibration stats in rotated space
+    qlinear_<K>x<N>    standalone Pallas INT-GEMM linear layer (Fig 7)
+    linear_<K>x<N>     f32 reference linear layer (Fig 7 baseline)
+    wht_<d>            standalone online-Hadamard op (Fig 7 overhead split)
+
+Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5 protos with
+64-bit ids; the text parser reassigns ids) — see /opt/xla-example/README.md.
+
+Shared across configs: artifacts/corpus.bin, artifacts/probes.bin.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, io, model as M, quarot, train
+from .configs import CONFIGS, DEFAULT_BUILD, ModelConfig
+from .hadamard_utils import random_orthogonal
+from .kernels import qmatmul as qmm_k
+
+WEIGHT_ORDER = ("embed", "final_norm", "lm_head", "attn_norm", "wq", "wk",
+                "wv", "wo", "ffn_norm", "wup", "wgate", "wdown")
+MASK_ORDER = ("mask_attn", "mask_out", "mask_ffn", "mask_down")
+
+_DT = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32", jnp.int8.dtype: "i8"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _weight_specs(cfg: ModelConfig) -> dict:
+    d, da, dkv, dff, v, L = (cfg.d_model, cfg.d_attn, cfg.d_kv, cfg.d_ff,
+                             cfg.vocab, cfg.n_layers)
+    return {
+        "embed": _spec((v, d)), "final_norm": _spec((d,)),
+        "lm_head": _spec((d, v)), "attn_norm": _spec((L, d)),
+        "wq": _spec((L, d, da)), "wk": _spec((L, d, dkv)),
+        "wv": _spec((L, d, dkv)), "wo": _spec((L, da, d)),
+        "ffn_norm": _spec((L, d)), "wup": _spec((L, d, dff)),
+        "wgate": _spec((L, d, dff)), "wdown": _spec((L, dff, d)),
+    }
+
+
+def _mask_specs(cfg: ModelConfig) -> dict:
+    L = cfg.n_layers
+    return {
+        "mask_attn": _spec((L, cfg.d_model)),
+        "mask_out": _spec((L, cfg.d_attn)),
+        "mask_ffn": _spec((L, cfg.d_model)),
+        "mask_down": _spec((L, cfg.d_ff)),
+    }
+
+
+def _cache_specs(cfg: ModelConfig) -> list:
+    L, B, S = cfg.n_layers, cfg.decode_batch, cfg.cache_seq
+    hk, dh = cfg.n_kv_heads, cfg.d_head
+    ng = dh // cfg.group
+    code = _spec((L, B, S, hk, dh), jnp.int8)
+    side = _spec((L, B, S, hk, ng))
+    return [code, side, side, code, side, side]
+
+
+def _io_entry(name, s):
+    return {"name": name, "dtype": _DT[s.dtype], "shape": list(s.shape)}
+
+
+class GraphSet:
+    """Collects lowered graphs + manifest entries for one config."""
+
+    def __init__(self, cfg: ModelConfig, outdir: str):
+        self.cfg, self.outdir = cfg, outdir
+        self.manifest = {}
+
+    def lower(self, name: str, fn, inputs: list[tuple[str, jax.ShapeDtypeStruct]],
+              outputs: list[str]):
+        specs = [s for _, s in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.outdir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *specs)
+        flat, _ = jax.tree.flatten(out_shapes)
+        self.manifest[name] = {
+            "file": fname,
+            "inputs": [_io_entry(n, s) for n, s in inputs],
+            "outputs": [_io_entry(n, s) for n, s in zip(outputs, flat)],
+        }
+        print(f"  lowered {name}: {len(text) / 1e6:.2f} MB hlo", flush=True)
+
+
+def build_graphs(cfg: ModelConfig, outdir: str) -> dict:
+    gs = GraphSet(cfg, outdir)
+    B, S = 1, cfg.max_seq
+    DB, CS = cfg.decode_batch, cfg.cache_seq
+    L, hk, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    wspecs = _weight_specs(cfg)
+    mspecs = _mask_specs(cfg)
+    weights_in = [(k, wspecs[k]) for k in WEIGHT_ORDER]
+    masks_in = [(k, mspecs[k]) for k in MASK_ORDER]
+    scalars = [("act_levels", _spec((1,))), ("act_clip", _spec((1,)))]
+    kv_scalars = [("k_qmax", _spec((1,))), ("v_qmax", _spec((1,))),
+                  ("kv_clip", _spec((1,)))]
+    tok_prefill = ("tokens", _spec((B, S), jnp.int32))
+    tok_decode = ("tokens", _spec((DB,), jnp.int32))
+    lens_in = ("cur_lens", _spec((DB,), jnp.int32))
+    cache_names = ["k_codes", "k_scale", "k_zero", "v_codes", "v_scale", "v_zero"]
+    cache_in = list(zip(cache_names, _cache_specs(cfg)))
+    kv_out = ["k_rot", "v_rot"]
+
+    def wdict(args, keys):
+        return dict(zip(keys, args))
+
+    # ---- prefill graphs ----
+    def mk_prefill(mode, with_masks):
+        def fn(tokens, levels, clip, k_qmax, v_qmax, kv_clip, *rest):
+            if with_masks:
+                masks = wdict(rest[:4], MASK_ORDER)
+                params = wdict(rest[4:], WEIGHT_ORDER)
+            else:
+                masks, params = None, wdict(rest, WEIGHT_ORDER)
+            return M.prefill(cfg, mode, params, tokens, levels[0], clip[0],
+                             masks=masks,
+                             kv_args=(k_qmax[0], v_qmax[0], kv_clip[0]))
+        return fn
+
+    gs.lower("baseline_prefill", mk_prefill(M.BASELINE_QUANT, True),
+             [tok_prefill] + scalars + kv_scalars + masks_in + weights_in,
+             ["logits"] + kv_out)
+    gs.lower("quarot_prefill", mk_prefill(M.QUAROT, False),
+             [tok_prefill] + scalars + kv_scalars + weights_in,
+             ["logits"] + kv_out)
+    gs.lower("quarot_prefill_h16", mk_prefill(M.QUAROT_BF16HAD, False),
+             [tok_prefill] + scalars + kv_scalars + weights_in,
+             ["logits"] + kv_out)
+
+    # ---- decode graphs ----
+    def mk_decode(mode):
+        def fn(tokens, cur_lens, kc, ks, kz, vc, vs, vz, levels, clip, *ws):
+            params = wdict(ws, WEIGHT_ORDER)
+            return M.decode(cfg, mode, params, tokens, cur_lens,
+                            (kc, ks, kz, vc, vs, vz), levels[0], clip[0])
+        return fn
+
+    gs.lower("quarot_decode", mk_decode(M.QUAROT),
+             [tok_decode, lens_in] + cache_in + scalars + weights_in,
+             ["logits", "k_new", "v_new"])
+
+    # FP16-equivalent baseline decode: raw f32 cache, no rotation/quant.
+    def mk_baseline_decode():
+        fkc = ("k_cache", _spec((L, DB, CS, hk, dh)))
+        fvc = ("v_cache", _spec((L, DB, CS, hk, dh)))
+
+        def fn(tokens, cur_lens, k_cache, v_cache, levels, clip, *ws):
+            params = wdict(ws, WEIGHT_ORDER)
+            ng = dh // cfg.group
+            one = jnp.ones((L, DB, CS, hk, ng), jnp.float32)
+            zero = jnp.zeros((L, DB, CS, hk, ng), jnp.float32)
+            # f32 cache flows through the same attention math with scale=1,
+            # zero=0; codes arg takes the raw values (ref path, no int cast).
+            mode = M.Mode(rotated=False, quant_acts=True, use_kernels=False)
+            return M.decode(cfg, mode, params, tokens, cur_lens,
+                            (k_cache, one, zero, v_cache, one, zero),
+                            levels[0], clip[0])
+        return fn, [tok_decode, lens_in, fkc, fvc] + scalars + weights_in
+
+    fn, ins = mk_baseline_decode()
+    gs.lower("baseline_decode", fn, ins, ["logits", "k_new", "v_new"])
+
+    # ---- calibration graphs ----
+    def mk_collect(mode):
+        def fn(tokens, *ws):
+            return M.collect(cfg, mode, wdict(ws, WEIGHT_ORDER), tokens)
+        return fn
+
+    stat_out = ["h_attn", "amax_attn", "h_out", "amax_out",
+                "h_ffn", "amax_ffn", "h_down", "amax_down", "logit_amax"]
+    gs.lower("collect_baseline", mk_collect(M.BASELINE), [tok_prefill] + weights_in,
+             stat_out)
+    gs.lower("collect_quarot", mk_collect(M.QUAROT), [tok_prefill] + weights_in,
+             stat_out)
+
+    # ---- standalone kernel graphs (Fig 7 / Table 14 artifacts) ----
+    t = 128
+    for (k, n) in {(cfg.d_ff, cfg.d_model), (cfg.d_model, cfg.d_ff)}:
+        gs.lower(
+            f"qlinear_{k}x{n}",
+            lambda x, wi, wsc: qmm_k.qmatmul(x, wi, wsc, levels=7, clip=0.9),
+            [("x", _spec((t, k))), ("w_int", _spec((k, n), jnp.int8)),
+             ("w_scale", _spec((n,)))], ["y"])
+        gs.lower(
+            f"linear_{k}x{n}", lambda x, w: x @ w,
+            [("x", _spec((t, k))), ("w", _spec((k, n)))], ["y"])
+    from .kernels import hadamard as hk
+    gs.lower(f"wht_{cfg.d_ff}", lambda x: hk.wht(x),
+             [("x", _spec((t, cfg.d_ff)))], ["y"])
+    return gs.manifest
+
+
+def build_config(cfg: ModelConfig, root: str, corpus: dict[str, np.ndarray],
+                 force: bool = False) -> None:
+    outdir = os.path.join(root, cfg.name)
+    os.makedirs(outdir, exist_ok=True)
+    wpath = os.path.join(outdir, "weights.bin")
+    mpath = os.path.join(outdir, "manifest.json")
+    if not force and os.path.exists(wpath) and os.path.exists(mpath):
+        print(f"[{cfg.name}] artifacts exist, skipping (use --force to rebuild)")
+        return
+
+    print(f"[{cfg.name}] training ({cfg.param_count() / 1e6:.1f}M params)...",
+          flush=True)
+    params = train.train(cfg, corpus["train"])
+    ppl = train.evaluate_ppl(cfg, params, corpus["eval"])
+    print(f"[{cfg.name}] eval ppl {ppl:.3f}")
+
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    # explicit Q so the sign vector can ship to rust (model/transform.rs
+    # rebuilds the identical rotation from `meta.q_signs`)
+    from .hadamard_utils import hadamard_matrix, random_signs
+    signs = random_signs(cfg.d_model, seed=17)
+    q_had = hadamard_matrix(cfg.d_model) * signs[None, :]
+    rot = quarot.rotate_params(cfg, np_params, q_matrix=q_had)
+    rnd = quarot.rotate_params(
+        cfg, np_params, q_matrix=random_orthogonal(cfg.d_model, seed=23))
+    tensors = {"meta.q_signs": signs.astype(np.float32)}
+    for pre, ps in (("base", np_params), ("rot", rot), ("rnd", rnd)):
+        for k, v in ps.items():
+            tensors[f"{pre}.{k}"] = np.asarray(v, np.float32)
+    io.write_weights(wpath, tensors)
+
+    print(f"[{cfg.name}] lowering graphs...", flush=True)
+    manifest = {
+        "model": {
+            "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "d_head": cfg.d_head,
+            "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+            "cache_seq": cfg.cache_seq, "decode_batch": cfg.decode_batch,
+            "kv_group": cfg.group, "rope_theta": cfg.rope_theta,
+            "train_ppl": ppl,
+        },
+        "weight_order": list(WEIGHT_ORDER),
+        "mask_order": list(MASK_ORDER),
+        "graphs": build_graphs(cfg, outdir),
+    }
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[{cfg.name}] done.")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", nargs="*", default=DEFAULT_BUILD)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cpath = os.path.join(args.out, "corpus.bin")
+    ppath = os.path.join(args.out, "probes.bin")
+    vocab = CONFIGS[args.configs[0]].vocab
+    if args.force or not os.path.exists(cpath):
+        print("building corpus...", flush=True)
+        splits = data.build_splits(vocab)
+        io.write_corpus(cpath, vocab, splits)
+        io.write_probes(ppath, data.build_probes(vocab))
+    _, corpus = io.read_corpus(cpath)
+
+    for name in args.configs:
+        build_config(CONFIGS[name], args.out, corpus, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

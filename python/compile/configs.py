@@ -1,0 +1,115 @@
+"""Model configurations.
+
+The paper evaluates LLAMA-2 {7B, 13B, 70B} (+ LLAMA-3 and Phi-3 in the
+appendix).  Those checkpoints are unavailable here (DESIGN.md §1), so each is
+proxied by a tiny LLaMA-*architecture* model trained at artifact-build time:
+
+* ``tiny-mha``   — the LLAMA2-7B proxy (MHA, pow-2 dims, fast-path Hadamards)
+* ``small-mha``  — the LLAMA2-13B proxy; d_ff = 1536 = 2^7·12 exercises the
+                   Kronecker H_12 construction the paper needs for LLaMA's
+                   non-pow-2 FFN sizes (11008, 13824, ...)
+* ``tiny-gqa``   — the LLAMA2-70B proxy: grouped-query attention, which is
+                   what gives the 70B its distinct KV-memory behaviour
+* ``phi-proxy``  — the Phi-3-mini stand-in for Appendix A.9
+
+All dims keep n_heads and head_dim powers of two, which the paper requires
+for the Hadamard-heads identity (eq. 9).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    max_seq: int            # prefill sequence length (static in the graphs)
+    cache_seq: int          # decode KV-cache capacity (static in the graphs)
+    decode_batch: int       # decode graph batch (serving slots)
+    rope_theta: float = 10000.0
+    kv_group: int = 0       # 0 → head_dim (the paper's group 128 == d_head)
+    # outlier-inducing recipe (DESIGN.md §1): a few embedding channels are
+    # initialized hot so the residual stream develops the outlier features
+    # QuaRot exists to remove.  Purely a property of the synthetic checkpoint.
+    outlier_channels: int = 4
+    outlier_scale: float = 8.0
+    # training
+    train_steps: int = 250
+    train_batch: int = 16
+    train_seq: int = 128
+    lr: float = 2e-3
+
+    def __post_init__(self):
+        assert self.d_model == self.n_heads * self.d_head
+        assert self.n_heads % self.n_kv_heads == 0
+        assert self.n_heads & (self.n_heads - 1) == 0, "eq. (9) needs pow-2 heads"
+        assert self.d_head & (self.d_head - 1) == 0, "eq. (9) needs pow-2 head dim"
+
+    @property
+    def group(self) -> int:
+        return self.kv_group or self.d_head
+
+    @property
+    def d_attn(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def d_kv(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    def param_count(self) -> int:
+        per_layer = (
+            self.d_model * self.d_attn          # wq
+            + 2 * self.d_model * self.d_kv      # wk, wv
+            + self.d_attn * self.d_model        # wo
+            + 2 * self.d_model * self.d_ff      # wup, wgate
+            + self.d_ff * self.d_model          # wdown
+            + 2 * self.d_model                  # norms
+        )
+        return (
+            self.n_layers * per_layer
+            + 2 * self.vocab * self.d_model     # embed + head
+            + self.d_model                      # final norm
+        )
+
+
+CONFIGS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        ModelConfig(
+            name="tiny-mha", vocab=512, d_model=256, n_layers=4,
+            n_heads=8, n_kv_heads=8, d_head=32, d_ff=1024,
+            max_seq=128, cache_seq=256, decode_batch=8,
+            train_steps=250,
+        ),
+        ModelConfig(
+            name="small-mha", vocab=512, d_model=512, n_layers=6,
+            n_heads=8, n_kv_heads=8, d_head=64, d_ff=1536,
+            max_seq=128, cache_seq=256, decode_batch=8,
+            train_steps=140,
+        ),
+        ModelConfig(
+            name="tiny-gqa", vocab=512, d_model=256, n_layers=4,
+            n_heads=8, n_kv_heads=2, d_head=32, d_ff=1024,
+            max_seq=128, cache_seq=256, decode_batch=8,
+            train_steps=250,
+        ),
+        ModelConfig(
+            name="phi-proxy", vocab=512, d_model=128, n_layers=2,
+            n_heads=4, n_kv_heads=4, d_head=32, d_ff=512,
+            max_seq=128, cache_seq=256, decode_batch=8,
+            train_steps=120,
+        ),
+    ]
+}
+
+# Which configs `make artifacts` builds by default.  All benches run on these.
+DEFAULT_BUILD = ["tiny-mha", "small-mha", "tiny-gqa", "phi-proxy"]

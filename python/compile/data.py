@@ -1,0 +1,139 @@
+"""Synthetic corpus + probe-task generator (the WikiText-2 / zero-shot stand-in).
+
+A zipfian bigram-mixture language (DESIGN.md §1): every token has a
+power-law-weighted successor table over a permuted vocabulary, mixed with a
+global unigram zipf.  The chain has enough structure for a small transformer
+to reach ppl well below the unigram floor, which is what the quantization
+tables need — a model whose quality measurably *degrades* when quantized.
+
+The probe tasks proxy the paper's six zero-shot suites (Table 2).  Each is a
+multiple-choice ranking task built from held-out chain samples, with
+difficulty knobs (context length, number of choices, distractor source)
+chosen so the six tasks span easy→hard like PIQA→ARC-c do:
+
+  piqa-proxy   ctx 8,  2 choices, unigram distractors       (easy)
+  wino-proxy   ctx 12, 2 choices, 1-token-swapped gold      (medium)
+  hswag-proxy  ctx 16, 4 choices, wrong-start chain samples (medium)
+  arce-proxy   ctx 6,  4 choices, unigram distractors       (easy)
+  arcc-proxy   ctx 6,  4 choices, bigram-plausible distractors (hard)
+  lambada-proxy ctx 24, exact next-token match              (hard)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _zipf_probs(n: int, alpha: float, rng: np.random.Generator) -> np.ndarray:
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    p /= p.sum()
+    return p[rng.permutation(n)]
+
+
+class BigramLanguage:
+    """The synthetic data-generating process."""
+
+    def __init__(self, vocab: int, seed: int = 0, alpha: float = 1.2,
+                 mix_unigram: float = 0.15):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab
+        self.unigram = _zipf_probs(vocab, alpha, rng)
+        # per-token successor tables: zipf over an independent permutation
+        self.bigram = np.stack([_zipf_probs(vocab, alpha, rng) for _ in range(vocab)])
+        self.trans = (1 - mix_unigram) * self.bigram + mix_unigram * self.unigram[None]
+        self.trans /= self.trans.sum(axis=1, keepdims=True)
+
+    def sample(self, n: int, rng: np.random.Generator,
+               start: int | None = None) -> np.ndarray:
+        out = np.empty(n, np.uint16)
+        tok = start if start is not None else rng.integers(self.vocab)
+        for i in range(n):
+            tok = rng.choice(self.vocab, p=self.trans[tok])
+            out[i] = tok
+        return out
+
+    def sample_fast(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        """Vectorized inverse-CDF sampling (the python loop is too slow >100k)."""
+        cdf = np.cumsum(self.trans, axis=1)
+        out = np.empty(n, np.uint16)
+        tok = int(rng.integers(self.vocab))
+        us = rng.random(n)
+        for i in range(n):
+            tok = int(np.searchsorted(cdf[tok], us[i]))
+            out[i] = min(tok, self.vocab - 1)
+        return out
+
+
+def build_splits(vocab: int, seed: int = 0, train: int = 150_000,
+                 calib: int = 16_384, evals: int = 16_384) -> dict[str, np.ndarray]:
+    lang = BigramLanguage(vocab, seed)
+    rng = np.random.default_rng(seed + 1)
+    return {
+        "train": lang.sample_fast(train, rng),
+        "calib": lang.sample_fast(calib, rng),
+        "eval": lang.sample_fast(evals, rng),
+    }
+
+
+def build_probes(vocab: int, seed: int = 0, n_items: int = 200) -> list[dict]:
+    lang = BigramLanguage(vocab, seed)
+    rng = np.random.default_rng(seed + 2)
+
+    def chain(n, start=None):
+        return lang.sample(n, rng, start)
+
+    def unigram_seq(n):
+        return rng.choice(vocab, size=n, p=lang.unigram).astype(np.uint16)
+
+    def mc_task(name, ctx_len, cont_len, n_choices, distractor):
+        items = []
+        for _ in range(n_items):
+            seq = chain(ctx_len + cont_len)
+            ctx, gold_cont = seq[:ctx_len], seq[ctx_len:]
+            choices = [gold_cont]
+            while len(choices) < n_choices:
+                d = distractor(ctx, gold_cont, cont_len)
+                if not any(np.array_equal(d, c) for c in choices):
+                    choices.append(d)
+            order = rng.permutation(n_choices)
+            items.append({
+                "ctx": ctx,
+                "choices": [choices[i] for i in order],
+                "gold": int(np.where(order == 0)[0][0]),
+            })
+        return {"name": name, "items": items}
+
+    def d_unigram(ctx, gold, n):
+        return unigram_seq(n)
+
+    def d_swap(ctx, gold, n):
+        d = gold.copy()
+        i = rng.integers(n)
+        d[i] = rng.integers(vocab)
+        return d
+
+    def d_wrong_start(ctx, gold, n):
+        return chain(n, start=int(rng.integers(vocab)))
+
+    def d_bigram(ctx, gold, n):
+        # chain-plausible but conditioned on a *perturbed* context ending —
+        # locally well-formed (hard) yet distinguishable from the gold
+        # continuation, unlike sampling from the true conditional
+        wrong = int((int(ctx[-1]) + 1 + rng.integers(vocab - 1)) % vocab)
+        return chain(n, start=wrong)
+
+    tasks = [
+        mc_task("piqa-proxy", 8, 3, 2, d_unigram),
+        mc_task("wino-proxy", 12, 3, 2, d_swap),
+        mc_task("hswag-proxy", 16, 4, 4, d_wrong_start),
+        mc_task("arce-proxy", 6, 2, 4, d_unigram),
+        mc_task("arcc-proxy", 6, 2, 4, d_bigram),
+    ]
+    # lambada-proxy: exact next-token prediction
+    items = []
+    for _ in range(n_items):
+        seq = chain(25)
+        items.append({"ctx": seq[:24], "choices": [], "gold_token": int(seq[24])})
+    tasks.append({"name": "lambada-proxy", "items": items})
+    return tasks

@@ -1,0 +1,115 @@
+"""Dense Hadamard-matrix construction and transform helpers.
+
+QuaRot (Sec. 3.1) needs Hadamard matrices of size ``d`` for every dimension it
+rotates: the hidden size (fused rotation ``Q``), the FFN intermediate size
+(online transform before ``W_down``), the head dimension (``H_{d_h}``) and the
+number of heads (``H_{n_h}``).  For ``d = 2^n`` these are Sylvester
+(Walsh-Hadamard) constructions; for ``d = 2^n * m`` with ``m`` in a small table
+of known Hadamard sizes we use the Kronecker construction
+``H_d = H_{2^n} ⊗ H_m`` exactly as the paper describes (citing Sloane's
+tables).  We ship ``H_12`` and ``H_20`` which cover every dimension used by the
+model configs in this repo (and the LLaMA FFN sizes 11008/13824 in spirit).
+
+Everything here is *build-time only*: the dense matrices are used to (a) fuse
+rotations into weights (quarot.py), and (b) serve as oracles for the fast
+Pallas WHT kernel (kernels/hadamard.py) and the rust `hadamard` module.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# --- known Hadamard matrices of non-power-of-two order -----------------------
+# First rows of circulant-ish constructions from Sloane's tables (had.12,
+# had.20.will).  We store full matrices generated from the standard Paley
+# construction to keep this file self-contained, then verify orthogonality at
+# import time (cheap, and guards against transcription bugs).
+
+
+def _paley_hadamard(q: int) -> np.ndarray:
+    """Paley construction I: Hadamard matrix of order q+1 for prime q ≡ 3 mod 4."""
+    assert q % 4 == 3
+    residues = {(i * i) % q for i in range(1, q)}
+
+    def chi(a: int) -> int:
+        a %= q
+        if a == 0:
+            return 0
+        return 1 if a in residues else -1
+
+    n = q + 1
+    h = np.ones((n, n), dtype=np.int64)
+    # Jacobsthal matrix
+    for i in range(q):
+        for j in range(q):
+            if i == j:
+                h[i + 1, j + 1] = -1
+            else:
+                h[i + 1, j + 1] = chi(j - i)
+    # first row/col all ones; fix signs: H = [[1, 1...],[1^T, Q - I]] variant
+    return h
+
+
+HAD_12 = _paley_hadamard(11)
+HAD_20 = _paley_hadamard(19)
+
+for _m in (HAD_12, HAD_20):
+    _n = _m.shape[0]
+    assert (_m @ _m.T == _n * np.eye(_n, dtype=np.int64)).all(), "bad Hadamard table"
+
+_KNOWN = {1: np.ones((1, 1), dtype=np.int64), 12: HAD_12, 20: HAD_20}
+
+
+def decompose_dim(d: int) -> tuple[int, int]:
+    """Split ``d = 2^n * m`` with m in the known-Hadamard table.
+
+    Returns (pow2_part, m).  Raises if no decomposition exists.
+    """
+    for m in sorted(_KNOWN, reverse=True):  # prefer the largest known factor
+        if d % m == 0:
+            p = d // m
+            if p & (p - 1) == 0:  # power of two (incl. 1)
+                return p, m
+    raise ValueError(f"no Hadamard construction for size {d}")
+
+
+def hadamard_matrix(d: int, dtype=np.float64) -> np.ndarray:
+    """Orthonormal Hadamard matrix of order ``d`` (entries ±1/sqrt(d))."""
+    p, m = decompose_dim(d)
+    h = _KNOWN[m].astype(np.float64)
+    hp = np.array([[1.0]])
+    while hp.shape[0] < p:
+        hp = np.block([[hp, hp], [hp, -hp]])
+    full = np.kron(hp, h)  # convention: H_d = H_{2^n} ⊗ H_m
+    return (full / np.sqrt(d)).astype(dtype)
+
+
+def random_signs(d: int, seed: int) -> np.ndarray:
+    """Deterministic ±1 sign vector for the *randomized* Hadamard (Sec. 3.1)."""
+    rng = np.random.default_rng(seed)
+    return rng.choice(np.array([-1.0, 1.0]), size=d)
+
+
+def randomized_hadamard(d: int, seed: int, dtype=np.float64) -> np.ndarray:
+    """Q = H · diag(s): the rotation QuaRot fuses into the weights."""
+    return (hadamard_matrix(d) * random_signs(d, seed)[None, :]).astype(dtype)
+
+
+def random_orthogonal(d: int, seed: int, dtype=np.float64) -> np.ndarray:
+    """QR-of-Gaussian orthogonal matrix — the Table 8 ablation baseline."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((d, d))
+    q, r = np.linalg.qr(a)
+    # sign-fix so the factorization is unique/deterministic
+    q = q * np.sign(np.diag(r))[None, :]
+    return q.astype(dtype)
+
+
+def wht_reference(x: np.ndarray) -> np.ndarray:
+    """Dense-oracle Walsh-Hadamard transform of the *rows* of x: x @ H_d.
+
+    H_d is symmetric for the pure Sylvester construction but NOT for the
+    Kronecker H_{2^n} ⊗ H_m construction, so we always form x @ H explicitly.
+    """
+    d = x.shape[-1]
+    return x @ hadamard_matrix(d, dtype=x.dtype)

@@ -1,0 +1,135 @@
+"""Binary artifact formats shared with the rust side (rust/src/model/io.rs).
+
+Everything is little-endian, versioned and magic-tagged.  Three containers:
+
+* ``weights.bin``  ("QWTS") — named tensor archive (f32 / i8 / i32).
+* ``corpus.bin``   ("QCRP") — token splits (train/calib/eval) as u16 streams.
+* ``probes.bin``   ("QPRB") — the six zero-shot probe tasks (Table 2 proxy):
+  multiple-choice items with a context, N candidate continuations and a gold
+  index; n_choices == 0 marks a LAMBADA-style exact-next-token task.
+
+Kept deliberately dumb so the rust parser is ~100 lines with no deps.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int8): 1, np.dtype(np.int32): 2}
+
+
+def write_weights(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(b"QWTS")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            code = _DTYPES[arr.dtype]
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            raw = arr.tobytes()
+            f.write(struct.pack("<Q", len(raw)))
+            f.write(raw)
+
+
+def read_weights(path: str) -> dict[str, np.ndarray]:
+    inv = {v: k for k, v in _DTYPES.items()}
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"QWTS"
+        _, n = struct.unpack("<II", f.read(8))
+        for _ in range(n):
+            (ln,) = struct.unpack("<H", f.read(2))
+            name = f.read(ln).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            shape = tuple(struct.unpack("<I", f.read(4))[0] for _ in range(ndim))
+            (nb,) = struct.unpack("<Q", f.read(8))
+            out[name] = np.frombuffer(f.read(nb), dtype=inv[code]).reshape(shape)
+    return out
+
+
+def write_corpus(path: str, vocab: int, splits: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(b"QCRP")
+        f.write(struct.pack("<III", 1, vocab, len(splits)))
+        for name, toks in splits.items():
+            toks = np.asarray(toks, np.uint16)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", len(toks)))
+            f.write(toks.tobytes())
+
+
+def read_corpus(path: str) -> tuple[int, dict[str, np.ndarray]]:
+    with open(path, "rb") as f:
+        assert f.read(4) == b"QCRP"
+        _, vocab, n = struct.unpack("<III", f.read(12))
+        splits = {}
+        for _ in range(n):
+            (ln,) = struct.unpack("<H", f.read(2))
+            name = f.read(ln).decode()
+            (cnt,) = struct.unpack("<I", f.read(4))
+            splits[name] = np.frombuffer(f.read(2 * cnt), dtype=np.uint16)
+        return vocab, splits
+
+
+def write_probes(path: str, tasks: list[dict]) -> None:
+    """tasks: [{name, items: [{ctx: u16[], choices: [u16[]], gold: int}]}].
+
+    ``choices == []`` with ``gold_token`` set marks an exact-next-token item.
+    """
+    with open(path, "wb") as f:
+        f.write(b"QPRB")
+        f.write(struct.pack("<II", 1, len(tasks)))
+        for t in tasks:
+            nb = t["name"].encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", len(t["items"])))
+            for it in t["items"]:
+                ctx = np.asarray(it["ctx"], np.uint16)
+                choices = it.get("choices", [])
+                f.write(struct.pack("<HB", len(ctx), len(choices)))
+                f.write(ctx.tobytes())
+                if choices:
+                    f.write(struct.pack("<B", it["gold"]))
+                    for ch in choices:
+                        ch = np.asarray(ch, np.uint16)
+                        f.write(struct.pack("<H", len(ch)))
+                        f.write(ch.tobytes())
+                else:
+                    f.write(struct.pack("<H", it["gold_token"]))
+
+
+def read_probes(path: str) -> list[dict]:
+    with open(path, "rb") as f:
+        assert f.read(4) == b"QPRB"
+        _, n = struct.unpack("<II", f.read(8))
+        tasks = []
+        for _ in range(n):
+            (ln,) = struct.unpack("<H", f.read(2))
+            name = f.read(ln).decode()
+            (cnt,) = struct.unpack("<I", f.read(4))
+            items = []
+            for _ in range(cnt):
+                cl, nch = struct.unpack("<HB", f.read(3))
+                ctx = np.frombuffer(f.read(2 * cl), dtype=np.uint16)
+                if nch:
+                    (gold,) = struct.unpack("<B", f.read(1))
+                    choices = []
+                    for _ in range(nch):
+                        (chl,) = struct.unpack("<H", f.read(2))
+                        choices.append(np.frombuffer(f.read(2 * chl), dtype=np.uint16))
+                    items.append({"ctx": ctx, "choices": choices, "gold": gold})
+                else:
+                    (gt,) = struct.unpack("<H", f.read(2))
+                    items.append({"ctx": ctx, "choices": [], "gold_token": gt})
+            tasks.append({"name": name, "items": items})
+        return tasks

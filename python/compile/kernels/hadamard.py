@@ -1,0 +1,128 @@
+"""Pallas fast Walsh-Hadamard transform (the paper's *online Hadamard* op).
+
+QuaRot inserts three online Hadamard transforms per transformer layer
+(Sec. 4): one of size d_ff before ``W_down`` (Stage 1b), head-wise ``H_{d_h}``
+on queries/keys after RoPE (Stage 1d), and the cross-head ``H_{n_h} ⊗ I``
+*Hadamard heads* block before ``W_out`` (Stage 1c).  The CUDA implementation
+in the paper uses warp-level butterflies (fast-hadamard-transform); here the
+kernel is re-thought for a TPU-style memory hierarchy:
+
+* the (tokens × d) activation is tiled into VMEM-sized blocks of
+  ``block_tokens`` rows via ``BlockSpec`` — the HBM↔VMEM schedule replaces the
+  CUDA threadblock staging;
+* within a block the transform is log2(p) butterfly stages expressed as
+  reshape + add/sub over the trailing axis, which vectorizes onto the VPU's
+  (8, 128) lanes with no matmul at all;
+* the odd factor m of d = 2^n·m (m ∈ {1, 12, 20}, Kronecker construction,
+  Sec. 3.1) is handled by one small dense (m × m) contraction that the MXU
+  would absorb for free.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated against :mod:`ref` and real-TPU
+behaviour is estimated analytically in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import hadamard_utils as hu
+
+# Default token-block: (128 tokens × d lanes) f32 double-buffered stays well
+# under a 16 MiB VMEM budget for every d used in this repo (d ≤ 2048:
+# 128·2048·4·2 = 2 MiB).
+DEFAULT_BLOCK_TOKENS = 128
+
+
+def _butterfly(y: jnp.ndarray, p: int, m: int) -> jnp.ndarray:
+    """log2(p) WHT butterfly stages over a (rows, p*m) block."""
+    rows = y.shape[0]
+    h = 1
+    while h < p:
+        y = y.reshape(rows, p // (2 * h), 2, h * m)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack((a + b, a - b), axis=2)
+        h *= 2
+    return y.reshape(rows, p * m)
+
+
+def _wht_kernel(x_ref, o_ref, *, p: int, m: int):
+    x = x_ref[...]
+    y = _butterfly(x, p, m)
+    o_ref[...] = y * (1.0 / np.sqrt(p))
+
+
+def _wht_kernel_kron(x_ref, hm_ref, o_ref, *, p: int, m: int):
+    x = x_ref[...]
+    rows, d = x.shape
+    y = x.reshape(rows, p, m)
+    y = (y @ hm_ref[...]) * (1.0 / np.sqrt(m))
+    y = y.reshape(rows, d)
+    y = _butterfly(y, p, m)
+    o_ref[...] = y * (1.0 / np.sqrt(p))
+
+
+def wht(x: jnp.ndarray, block_tokens: int = DEFAULT_BLOCK_TOKENS) -> jnp.ndarray:
+    """Orthonormal x @ H_d over the last axis of a 2-D (T, d) array."""
+    t, d = x.shape
+    p, m = hu.decompose_dim(d)
+    bt = min(block_tokens, t)
+    if t % bt != 0:  # pad to a whole number of blocks; cheap and trace-static
+        pad = (-t) % bt
+        return wht(jnp.pad(x, ((0, pad), (0, 0))), block_tokens=bt)[:t]
+    if m == 1:
+        kernel = functools.partial(_wht_kernel, p=p, m=m)
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+            grid=(t // bt,),
+            in_specs=[pl.BlockSpec((bt, d), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            interpret=True,
+        )(x)
+    hm = jnp.asarray(hu._KNOWN[m], dtype=x.dtype)
+    kernel = functools.partial(_wht_kernel_kron, p=p, m=m)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x, hm)
+
+
+def wht_lastdim(x: jnp.ndarray, block_tokens: int = DEFAULT_BLOCK_TOKENS) -> jnp.ndarray:
+    """x @ H over the last axis for arbitrary-rank x (reshapes to 2-D)."""
+    shape = x.shape
+    y = wht(x.reshape(-1, shape[-1]), block_tokens)
+    return y.reshape(shape)
+
+
+def had_headdim(x: jnp.ndarray) -> jnp.ndarray:
+    """Head-wise online transform: (..., n_h, d_h) → each head @ H_{d_h}."""
+    return wht_lastdim(x)
+
+
+def had_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """*Hadamard heads* (Stage 1c): x @ (H_{n_h} ⊗ I_{d_h}) on (..., n_h·d_h).
+
+    Implemented exactly as the paper suggests: reshape to expose the Kronecker
+    structure, WHT over the head axis, reshape back.
+    """
+    d = x.shape[-1]
+    dh = d // n_heads
+    y = x.reshape(*x.shape[:-1], n_heads, dh)
+    y = jnp.swapaxes(y, -1, -2)  # (..., d_h, n_h): heads become the lane axis
+    y = wht_lastdim(y)
+    y = jnp.swapaxes(y, -1, -2)
+    return y.reshape(x.shape)

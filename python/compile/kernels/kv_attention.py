@@ -1,0 +1,89 @@
+"""Pallas quantized-KV decode attention (QuaRot Stage 2c / Appendix A.10).
+
+The paper's ``Decode`` routine loads INT4 KV segments, dequantizes them
+in-register and runs an online-softmax (FlashAttention-style) accumulation
+with the FP16 query.  Here each (batch, q-head) pair is one Pallas program;
+the program streams the cached keys/values for its kv-head (GQA maps several
+q-heads onto one kv-head through the BlockSpec index map), dequantizes with
+the per-group asymmetric scales, folds in the current token's (not yet
+cached) key/value, and normalizes once — numerically identical to softmax
+over the concatenated scores.
+
+TPU adaptation: the cache block for one program is (S, d_h) int8 + two
+(S, d_h/group) f32 side tensors — at S=4096, d_h=128 that is 0.5 MiB + 32 KiB
+in VMEM, far under budget; scores and the (d_h,) accumulator stay in
+registers/VMEM.  ``interpret=True`` as everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kv_decode_kernel(q_ref, kc_ref, ks_ref, kz_ref, vc_ref, vs_ref, vz_ref,
+                      kn_ref, vn_ref, len_ref, o_ref, *,
+                      group: int, sm_scale: float):
+    q = q_ref[0, 0, :]                     # (dh,)
+    cur_len = len_ref[0]
+    s, dh = kc_ref.shape[1], kc_ref.shape[3]
+    ng = dh // group
+
+    def deq(codes_ref, sc_ref, zp_ref):
+        codes = codes_ref[0, :, 0, :].astype(jnp.float32)    # (S, dh)
+        sc = sc_ref[0, :, 0, :]                              # (S, ng)
+        zp = zp_ref[0, :, 0, :]
+        g = codes.reshape(s, ng, group)
+        return (g * sc[..., None] + zp[..., None]).reshape(s, dh)
+
+    k = deq(kc_ref, ks_ref, kz_ref)
+    v = deq(vc_ref, vs_ref, vz_ref)
+    scores = (k @ q) * sm_scale                               # (S,)
+    valid = jnp.arange(s) < cur_len
+    scores = jnp.where(valid, scores, -jnp.inf)
+    self_score = jnp.sum(kn_ref[0, 0, :] * q) * sm_scale      # current token
+    m = jnp.maximum(jnp.max(scores), self_score)
+    p = jnp.where(valid, jnp.exp(scores - m), 0.0)
+    p_self = jnp.exp(self_score - m)
+    denom = jnp.sum(p) + p_self
+    out = (p @ v + p_self * vn_ref[0, 0, :]) / denom
+    o_ref[0, 0, :] = out
+
+
+def kv_decode_attention(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
+                        k_new, v_new, cur_len, *, group: int, sm_scale: float):
+    """Single-token decode over a quantized cache.  Shapes as in ref.py:
+
+    q (B,H,dh) f32 | {k,v}_codes (B,S,Hk,dh) int8 |
+    {k,v}_{scale,zero} (B,S,Hk,dh/group) f32 | {k,v}_new (B,Hk,dh) f32 |
+    cur_len (B,) int32 per-slot valid-cache lengths (each sequence in a
+    continuous-batching decode batch sits at its own position); scalars
+    broadcast.  Returns (B,H,dh) f32.
+    """
+    b, h, dh = q.shape
+    _, s, hk, _ = k_codes.shape
+    rep = h // hk
+    ng = dh // group
+    kernel = functools.partial(_kv_decode_kernel, group=group, sm_scale=sm_scale)
+    ln = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+
+    kv_spec = pl.BlockSpec((1, s, 1, dh), lambda bi, hi: (bi, 0, hi // rep, 0))
+    sc_spec = pl.BlockSpec((1, s, 1, ng), lambda bi, hi: (bi, 0, hi // rep, 0))
+    new_spec = pl.BlockSpec((1, 1, dh), lambda bi, hi: (bi, hi // rep, 0))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda bi, hi: (bi, hi, 0)),   # q
+            kv_spec, sc_spec, sc_spec,                               # k
+            kv_spec, sc_spec, sc_spec,                               # v
+            new_spec, new_spec,                                      # k_new, v_new
+            pl.BlockSpec((1,), lambda bi, hi: (bi,)),                # cur_len[b]
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda bi, hi: (bi, hi, 0)),
+        interpret=True,
+    )(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero, k_new, v_new, ln)

@@ -1,0 +1,84 @@
+"""Pallas INT-b GEMM with INT32 accumulation (QuaRot's CUTLASS kernel analogue).
+
+The paper's 4-bit linear layer is: quantize the FP16 activation per token,
+run an INT4×INT4 CUTLASS TensorCore GEMM into an INT32 accumulator, then
+dequantize by row-scale × column-scale back to FP16 (Sec. 5.2, Fig. 7).
+
+TPU adaptation (DESIGN.md §2): the TensorCore WMMA tile becomes an MXU-shaped
+matmul over (block_m × block_k) activation and (block_k × block_n) weight
+tiles; the HBM↔VMEM schedule the CUDA kernel expressed with threadblocks is a
+3-D Pallas grid with the K axis innermost and an INT32 VMEM accumulator that
+lives across K steps.  ``interpret=True`` (CPU) — MXU utilization for the
+chosen tiles is estimated in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import quant as qk
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _qmm_kernel(xq_ref, w_ref, o_ref, *, nk: int):
+    """One (m, n, k) grid step: INT32 accumulate; epilogue left to caller."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        xq_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def qmatmul_int(xq: jnp.ndarray, w_int: jnp.ndarray,
+                bm: int = DEFAULT_BLOCK_M, bn: int = DEFAULT_BLOCK_N,
+                bk: int = DEFAULT_BLOCK_K) -> jnp.ndarray:
+    """(T, K) int8 × (K, N) int8 → (T, N) int32 via tiled Pallas GEMM."""
+    t, k = xq.shape
+    k2, n = w_int.shape
+    assert k == k2, (xq.shape, w_int.shape)
+    bm, bn, bk = min(bm, t), min(bn, n), min(bk, k)
+    if t % bm or n % bn or k % bk:
+        # Pad to whole tiles; zero rows/cols contribute nothing to the GEMM.
+        pt, pn, pk = (-t) % bm, (-n) % bn, (-k) % bk
+        acc = qmatmul_int(
+            jnp.pad(xq, ((0, pt), (0, pk))), jnp.pad(w_int, ((0, pk), (0, pn))),
+            bm, bn, bk)
+        return acc[:t, :n]
+    kernel = functools.partial(_qmm_kernel, nk=k // bk)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.int32),
+        grid=(t // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(xq, w_int)
+
+
+def qmatmul(x: jnp.ndarray, w_int: jnp.ndarray, w_scale: jnp.ndarray,
+            levels: int = 7, clip: float = 0.9) -> jnp.ndarray:
+    """Full quantized linear layer: quantize → INT GEMM → dequantize.
+
+    x: (T, K) f32; w_int: (K, N) int8 codes; w_scale: (N,) f32 per column.
+    Composes the quantization kernel and the GEMM kernel exactly like the
+    paper composes its quantization kernel with CUTLASS.
+    """
+    xq, xs = qk.quant_int(x, levels, clip)
+    acc = qmatmul_int(xq, w_int)
+    return acc.astype(x.dtype) * xs * w_scale[None, :]

@@ -1,0 +1,151 @@
+"""Pallas on-line quantization kernels (QuaRot Stage 2b).
+
+Two kernels:
+
+* ``fake_quant`` — symmetric per-token quantize+dequantize of a linear-layer
+  input.  This is the op QuaRot inserts in front of every weight matrix; in
+  the paper it is a CUDA kernel that emits packed INT4 + row scales for the
+  CUTLASS GEMM.  For accuracy graphs we keep the dequantized f32 (bit-identical
+  to running the integer pipeline, see test_qmatmul.py), for the integer
+  pipeline :func:`quant_int` emits codes + scales like the paper's kernel.
+* ``kv_fake_quant`` — asymmetric group-wise quantize+dequantize used for the
+  KV cache (paper: group 128 = head_dim, clip 0.95).
+
+TPU adaptation: per-token reductions (amax / min / max) are row-wise over the
+lane axis, which the VPU does natively; blocks are (block_tokens × d) VMEM
+tiles, the same schedule as the Hadamard kernel so XLA can fuse the
+(hadamard → quantize) pair that dominates the paper's overhead budget
+(≤7 %, Fig. 7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_TOKENS = 128
+_EPS = 1e-8
+
+
+def _fake_quant_kernel(x_ref, lv_ref, clip_ref, o_ref):
+    x = x_ref[...]
+    levels = lv_ref[0].astype(x.dtype)
+    clip = clip_ref[0].astype(x.dtype)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(amax * clip, _EPS) / jnp.maximum(levels, 1.0)
+    q = jnp.clip(jnp.round(x / s), -levels, levels)
+    o_ref[...] = jnp.where(levels > 0, q * s, x)
+
+
+def fake_quant(x: jnp.ndarray, levels, clip,
+               block_tokens: int = DEFAULT_BLOCK_TOKENS) -> jnp.ndarray:
+    """Symmetric per-token fake quantization of a 2-D (T, d) activation.
+
+    ``levels``/``clip`` are traced scalars (shape-(1,) f32) so a single lowered
+    graph serves every bit-width; ``levels <= 0`` is a pass-through (FP16/A16
+    sweeps).
+    """
+    t, d = x.shape
+    bt = min(block_tokens, t)
+    if t % bt != 0:
+        pad = (-t) % bt
+        return fake_quant(jnp.pad(x, ((0, pad), (0, 0))), levels, clip, bt)[:t]
+    lv = jnp.asarray(levels, jnp.float32).reshape(1)
+    cl = jnp.asarray(clip, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        _fake_quant_kernel,
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x, lv, cl)
+
+
+def fake_quant_lastdim(x: jnp.ndarray, levels, clip) -> jnp.ndarray:
+    """fake_quant for arbitrary-rank inputs (per-row == per-token on last axis)."""
+    shape = x.shape
+    return fake_quant(x.reshape(-1, shape[-1]), levels, clip).reshape(shape)
+
+
+def _quant_int_kernel(x_ref, o_ref, s_ref, *, levels: float, clip: float):
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(amax * clip, _EPS) / levels
+    o_ref[...] = jnp.clip(jnp.round(x / s), -levels, levels).astype(jnp.int8)
+    s_ref[...] = s
+
+
+def quant_int(x: jnp.ndarray, levels: int, clip: float,
+              block_tokens: int = DEFAULT_BLOCK_TOKENS):
+    """Integer-emitting quantizer: (T, d) f32 → ((T, d) int8, (T, 1) f32 scale).
+
+    This is the exact analogue of the paper's quantization kernel that feeds
+    the CUTLASS INT4 GEMM — here it feeds the Pallas qmatmul kernel.
+    """
+    t, d = x.shape
+    bt = min(block_tokens, t)
+    if t % bt != 0:
+        pad = (-t) % bt
+        q, s = quant_int(jnp.pad(x, ((0, pad), (0, 0))), levels, clip, bt)
+        return q[:t], s[:t]
+    kernel = functools.partial(_quant_int_kernel, levels=float(levels), clip=clip)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((t, d), jnp.int8),
+            jax.ShapeDtypeStruct((t, 1), jnp.float32),
+        ),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, d), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(x)
+
+
+def _kv_fake_quant_kernel(x_ref, o_ref, *, qmax: float, group: int, clip: float):
+    x = x_ref[...]
+    rows, d = x.shape
+    g = x.reshape(rows, d // group, group)
+    mx = jnp.max(g, axis=-1, keepdims=True)
+    mn = jnp.min(g, axis=-1, keepdims=True)
+    center = (mx + mn) * 0.5
+    half = (mx - mn) * 0.5 * clip
+    mn_c = center - half
+    scale = jnp.maximum(2.0 * half, _EPS) / qmax
+    q = jnp.clip(jnp.round((g - mn_c) / scale), 0.0, qmax)
+    o_ref[...] = (q * scale + mn_c).reshape(rows, d)
+
+
+def kv_fake_quant(x: jnp.ndarray, bits: int, group: int, clip: float,
+                  block_tokens: int = DEFAULT_BLOCK_TOKENS) -> jnp.ndarray:
+    """Asymmetric group-wise fake quantization over the last axis (KV cache)."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    t, d = x2.shape
+    bt = min(block_tokens, t)
+    if t % bt != 0:
+        pad = (-t) % bt
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+        t = x2.shape[0]
+    kernel = functools.partial(
+        _kv_fake_quant_kernel, qmax=float(2**bits - 1), group=group, clip=clip)
+    y = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x2)
+    return y[: x.reshape(-1, shape[-1]).shape[0]].reshape(shape)

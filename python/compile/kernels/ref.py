@@ -1,0 +1,195 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis) and double as the implementation used inside graphs when a
+dimension falls outside a kernel's supported envelope.  They mirror the
+quantization scheme of QuaRot Sec. 4 / Sec. 5 exactly:
+
+* activations  — symmetric per-token INT-b, scale = clip * amax(row) / L
+                 with L = 2^(b-1) - 1  (paper: clip 0.9, L = 7 for INT4)
+* KV cache     — asymmetric per-group INT-b, scale = clip * (max-min) / (2^b-1)
+                 (paper: clip 0.95, group 128 = head_dim)
+* int matmul   — INT-b x INT-b with INT32 accumulation, dequantized by
+                 row-scale x column-scale (paper Stage 2b).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import hadamard_utils as hu
+
+_EPS = 1e-8
+
+
+# --- Hadamard ----------------------------------------------------------------
+
+def wht_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """x @ H_d over the last axis, via log2(d) butterfly stages.
+
+    Supports d = 2^n * m for m in the known table (dense H_m on the odd part).
+    Orthonormal (divides by sqrt(d) overall).
+    """
+    d = x.shape[-1]
+    p, m = hu.decompose_dim(d)
+    shape = x.shape
+    # convention H_d = H_{2^n} (x) H_m: index i = i_pow2 * m + i_m
+    y = x.reshape(*shape[:-1], p, m)
+    if m > 1:
+        hm = jnp.asarray(hu._KNOWN[m], dtype=x.dtype)  # un-normalized ±1
+        # right-multiplying rows by H_m: row_vec @ H_m  ==  row_vec @ hm
+        y = (y @ hm) * (1.0 / np.sqrt(m))
+    h = 1
+    while h < p:
+        y = y.reshape(*shape[:-1], p // (2 * h), 2, h * m)
+        a = y[..., 0, :]
+        b = y[..., 1, :]
+        y = jnp.stack((a + b, a - b), axis=-2)
+        h *= 2
+    y = y.reshape(shape)
+    return y * (1.0 / np.sqrt(p))
+
+
+def wht_dense(x: jnp.ndarray) -> jnp.ndarray:
+    """Dense-matmul oracle: x @ H_d."""
+    h = jnp.asarray(hu.hadamard_matrix(x.shape[-1]), dtype=x.dtype)
+    return x @ h
+
+
+def had_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """The paper's *Hadamard heads* block: x @ (H_{n_h} ⊗ I_{d_h}).
+
+    x has last axis n_heads * head_dim; the transform mixes the head axis.
+    """
+    d = x.shape[-1]
+    dh = d // n_heads
+    y = x.reshape(*x.shape[:-1], n_heads, dh)
+    y = jnp.moveaxis(y, -2, -1)  # (..., dh, n_heads)
+    y = wht_rows(y)
+    y = jnp.moveaxis(y, -1, -2)
+    return y.reshape(x.shape)
+
+
+def had_headdim(x: jnp.ndarray) -> jnp.ndarray:
+    """Head-wise transform x_h @ H_{d_h} applied to (..., head_dim) tensors."""
+    return wht_rows(x)
+
+
+# --- activation quantization ---------------------------------------------------
+
+def act_scale(x: jnp.ndarray, levels: jnp.ndarray, clip: jnp.ndarray) -> jnp.ndarray:
+    """Per-token (per-row) symmetric scale: clip * amax / levels."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    return jnp.maximum(amax * clip, _EPS) / levels
+
+
+def fake_quant_act(x: jnp.ndarray, levels, clip) -> jnp.ndarray:
+    """Symmetric per-token fake quantization (quantize + dequantize).
+
+    ``levels`` is the largest representable integer (7 for INT4, 31 for INT6,
+    127 for INT8).  ``levels <= 0`` disables quantization (returns x) so one
+    lowered graph can serve every precision sweep, including FP16/A16.
+    """
+    levels = jnp.asarray(levels, dtype=x.dtype)
+    clip = jnp.asarray(clip, dtype=x.dtype)
+    s = act_scale(x, jnp.maximum(levels, 1.0), clip)
+    q = jnp.clip(jnp.round(x / s), -levels, levels)
+    return jnp.where(levels > 0, q * s, x)
+
+
+def quant_act_int(x: jnp.ndarray, levels: int, clip: float):
+    """Integer-output variant: returns (int8 codes, per-row scale f32)."""
+    s = act_scale(x, jnp.asarray(float(levels), x.dtype), jnp.asarray(clip, x.dtype))
+    q = jnp.clip(jnp.round(x / s), -levels, levels).astype(jnp.int8)
+    return q, s
+
+
+# --- KV-cache (group-wise asymmetric) quantization ----------------------------
+
+def kv_quant(x: jnp.ndarray, bits: int, group: int, clip: float):
+    """Asymmetric group-wise quantization over the last axis.
+
+    Returns (codes, scale, zero) with scale/zero shaped (..., d/group).
+    Codes are stored *signed* (shifted by -2^(bits-1)) so any bits <= 8 fits
+    an int8 buffer: stored = round((x - zero)/scale) - 2^(bits-1).
+    Matches the paper's KV scheme (clip 0.95, group = head_dim); clipping
+    shrinks the range symmetrically about its center.
+    """
+    shape = x.shape
+    g = x.reshape(*shape[:-1], shape[-1] // group, group)
+    mx = jnp.max(g, axis=-1, keepdims=True)
+    mn = jnp.min(g, axis=-1, keepdims=True)
+    center = (mx + mn) * 0.5
+    half = (mx - mn) * 0.5 * clip
+    mn_c = center - half
+    qmax = float(2**bits - 1)
+    offset = float(2 ** (bits - 1))
+    scale = jnp.maximum(2.0 * half, _EPS) / qmax
+    q = jnp.clip(jnp.round((g - mn_c) / scale), 0.0, qmax) - offset
+    return (
+        q.astype(jnp.int8).reshape(shape),
+        scale.squeeze(-1),
+        # fold the signed shift into the zero-point: x ≈ code*scale + zero
+        (mn_c + offset * scale).squeeze(-1),
+    )
+
+
+def kv_dequant(q: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray, group: int):
+    """Inverse of kv_quant: codes * scale + zero, group-wise."""
+    shape = q.shape
+    g = q.astype(scale.dtype).reshape(*shape[:-1], shape[-1] // group, group)
+    x = g * scale[..., None] + zero[..., None]
+    return x.reshape(shape)
+
+
+def kv_fake_quant(x: jnp.ndarray, bits: int, group: int, clip: float):
+    q, s, z = kv_quant(x, bits, group, clip)
+    return kv_dequant(q, s, z, group)
+
+
+# --- quantized matmul ----------------------------------------------------------
+
+def qmatmul(x: jnp.ndarray, w_int: jnp.ndarray, w_scale: jnp.ndarray,
+            levels: int = 7, clip: float = 0.9) -> jnp.ndarray:
+    """INT-b GEMM oracle: per-token quantize x, integer matmul, dequantize.
+
+    x: (T, K) f32;  w_int: (K, N) int8 codes in [-levels, levels];
+    w_scale: (N,) per-column f32.  Output (T, N) f32.
+    """
+    xq, xs = quant_act_int(x, levels, clip)
+    acc = jnp.matmul(xq.astype(jnp.int32), w_int.astype(jnp.int32))
+    return acc.astype(x.dtype) * xs * w_scale[None, :]
+
+
+# --- quantized-KV attention decode ----------------------------------------------
+
+def kv_decode_attention(q, k_codes, k_scale, k_zero, v_codes, v_scale, v_zero,
+                        k_new, v_new, cur_len, *, group: int, sm_scale: float):
+    """Single-token decode attention over a quantized cache + current token.
+
+    q:        (B, H, dh) f32 — current query (FP16-equivalent, paper Stage 2c)
+    k_codes:  (B, S, Hk, dh) int8 codes; k_scale/k_zero: (B, S, Hk, dh/group)
+    v_*:      same layout as k_*
+    k_new/v_new: (B, Hk, dh) f32 — current token's key/value (attends to self)
+    cur_len:  (B,) int32 (scalars broadcast) — valid cached positions (<= S)
+    Supports GQA: H q-heads share Hk kv-heads (H % Hk == 0).
+    """
+    B, S, Hk, dh = k_codes.shape
+    H = q.shape[1]
+    rep = H // Hk
+    k = kv_dequant(k_codes, k_scale, k_zero, group)  # (B,S,Hk,dh)
+    v = kv_dequant(v_codes, v_scale, v_zero, group)
+    k = jnp.repeat(k, rep, axis=2)  # (B,S,H,dh)
+    v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q, k) * sm_scale
+    lens = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    mask = jnp.arange(S)[None, None, :] < lens[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    self_scores = jnp.einsum("bhd,bhd->bh", q, jnp.repeat(k_new, rep, axis=1)) * sm_scale
+    all_scores = jnp.concatenate([scores, self_scores[..., None]], axis=-1)
+    p = jax.nn.softmax(all_scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p[..., :S], v)
+    out = out + p[..., S, None] * jnp.repeat(v_new, rep, axis=1)
+    return out

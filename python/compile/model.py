@@ -1,0 +1,438 @@
+"""LLaMA-architecture transformer with the QuaRot forward-pass rewrites.
+
+One parametric forward function serves every graph variant the rust runtime
+loads (DESIGN.md §3).  Weights are *graph arguments* (never constants) so the
+same lowered executable evaluates any quantized weight set the rust
+quantization toolchain produces.  A :class:`Mode` selects which QuaRot
+machinery is inserted:
+
+* ``rotated``      — insert the online Hadamard ops (Stages 1b/1c/1d).  The
+                     *fused* rotations (Stage 1a) live in the weights, applied
+                     offline by quarot.py; the graph is agnostic to them.
+* ``quant_acts``   — insert per-token fake-quant in front of every weight
+                     matrix (Stage 2b).  ``act_levels <= 0`` at call time
+                     degrades to a pass-through, so quantized graphs subsume
+                     the FP16 baseline.
+* ``outlier_mask`` — per-layer per-channel masks that keep marked activation
+                     features unquantized (the QUIK baseline of Table 1;
+                     QuaRot itself always runs with zero masks).
+* ``had_bf16``     — round online-Hadamard outputs to bf16 (Table 10's FP16-
+                     Hadamard ablation, emulated on the f32 CPU runtime).
+
+Layer loop is a ``lax.scan`` over stacked (L, ...) weights: small HLO, and
+the Pallas kernels lower inside the loop body.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import hadamard as hk
+from .kernels import kv_attention as kva
+from .kernels import quant as qk
+from .kernels import ref
+
+_NORM_EPS = 1e-5
+
+
+@dataclasses.dataclass(frozen=True)
+class Mode:
+    rotated: bool = False
+    quant_acts: bool = False
+    outlier_mask: bool = False
+    had_bf16: bool = False
+    use_kernels: bool = True   # False → pure-jnp refs (fast tracing in tests)
+
+
+BASELINE = Mode()
+BASELINE_QUANT = Mode(quant_acts=True, outlier_mask=True)
+QUAROT = Mode(rotated=True, quant_acts=True)
+QUAROT_BF16HAD = Mode(rotated=True, quant_acts=True, had_bf16=True)
+
+
+# --- parameter pytree ---------------------------------------------------------
+
+LAYER_KEYS = ("attn_norm", "wq", "wk", "wv", "wo",
+              "ffn_norm", "wup", "wgate", "wdown")
+GLOBAL_KEYS = ("embed", "final_norm", "lm_head")
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Random init with the outlier-inducing embedding recipe (DESIGN.md §1)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 12)
+    d, da, dkv, dff, v, L = (cfg.d_model, cfg.d_attn, cfg.d_kv, cfg.d_ff,
+                             cfg.vocab, cfg.n_layers)
+
+    def w(k, shape, scale=None):
+        scale = scale or (1.0 / jnp.sqrt(shape[0]))
+        return jax.random.normal(k, shape, jnp.float32) * scale
+
+    embed = w(ks[0], (v, d), 0.7)
+    if cfg.outlier_channels > 0:
+        # heat up a few channels: pre-norm residual streams keep them hot,
+        # reproducing the outlier features of Fig. 1.
+        hot = jnp.zeros((d,)).at[: cfg.outlier_channels].set(1.0)
+        embed = embed * (1.0 + (cfg.outlier_scale - 1.0) * hot[None, :])
+    return {
+        "embed": embed,
+        "final_norm": jnp.ones((d,)),
+        "lm_head": w(ks[1], (d, v)),
+        "attn_norm": jnp.ones((L, d)),
+        "wq": w(ks[2], (L, d, da)),
+        "wk": w(ks[3], (L, d, dkv)),
+        "wv": w(ks[4], (L, d, dkv)),
+        "wo": w(ks[5], (L, da, d), scale=0.5 / jnp.sqrt(da)),
+        "ffn_norm": jnp.ones((L, d)),
+        "wup": w(ks[6], (L, d, dff)),
+        "wgate": w(ks[7], (L, d, dff)),
+        "wdown": w(ks[8], (L, dff, d), scale=0.5 / jnp.sqrt(dff)),
+    }
+
+
+# --- building blocks -----------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    """Pre-norm RMSNorm; computed in f32 like the paper (Stage 2b note)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + _NORM_EPS) * gamma
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding on (..., T, H, dh); positions (..., T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _maybe_bf16(x: jnp.ndarray, mode: Mode) -> jnp.ndarray:
+    if mode.had_bf16:
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    return x
+
+
+def _wht(x: jnp.ndarray, mode: Mode) -> jnp.ndarray:
+    y = hk.wht_lastdim(x) if mode.use_kernels else ref.wht_rows(x)
+    return _maybe_bf16(y, mode)
+
+
+def _had_heads(x: jnp.ndarray, n_heads: int, mode: Mode) -> jnp.ndarray:
+    y = hk.had_heads(x, n_heads) if mode.use_kernels else ref.had_heads(x, n_heads)
+    return _maybe_bf16(y, mode)
+
+
+def _had_headdim(x: jnp.ndarray, mode: Mode) -> jnp.ndarray:
+    y = hk.had_headdim(x) if mode.use_kernels else ref.wht_rows(x)
+    return _maybe_bf16(y, mode)
+
+
+def _kv_fake_quant_traced(x, qmax, clip, group: int):
+    """Group-wise asymmetric fake-quant with *traced* qmax (0 → off).
+
+    The prefill graphs use this to emulate cache quantization during
+    perplexity evaluation (paper Tables 1/3/6): attention consumes the
+    fake-quantized keys/values exactly as decode would consume the
+    dequantized cache.
+    """
+    qmax = jnp.asarray(qmax, x.dtype)
+    clip = jnp.asarray(clip, x.dtype)
+    shape = x.shape
+    g = x.reshape(*shape[:-1], shape[-1] // group, group)
+    mx = jnp.max(g, axis=-1, keepdims=True)
+    mn = jnp.min(g, axis=-1, keepdims=True)
+    center = (mx + mn) * 0.5
+    half = (mx - mn) * 0.5 * clip
+    lo = center - half
+    scale = jnp.maximum(2.0 * half, 1e-8) / jnp.maximum(qmax, 1.0)
+    q = jnp.clip(jnp.round((g - lo) / scale), 0.0, jnp.maximum(qmax, 1.0))
+    y = (q * scale + lo).reshape(shape)
+    return jnp.where(qmax > 0, y, x)
+
+
+def _quant_site(x, levels, clip, mask, mode: Mode):
+    """Activation fake-quant at one of the four per-layer sites.
+
+    ``mask`` (channels,) ∈ {0,1}: 1 → feature kept in high precision and
+    excluded from the shared scale (QUIK-style outlier retention).
+    """
+    if not mode.quant_acts:
+        return x
+    if mode.outlier_mask and mask is not None:
+        keep = mask
+        scaled = jnp.abs(x) * (1.0 - keep)
+        amax = jnp.max(scaled, axis=-1, keepdims=True)
+        lv = jnp.asarray(levels, x.dtype)
+        s = jnp.maximum(amax * jnp.asarray(clip, x.dtype), 1e-8) / jnp.maximum(lv, 1.0)
+        q = jnp.clip(jnp.round(x / s), -lv, lv) * s
+        q = jnp.where(keep > 0, x, q)
+        return jnp.where(lv > 0, q, x)
+    if mode.use_kernels:
+        return qk.fake_quant_lastdim(x, levels, clip)
+    return ref.fake_quant_act(x, levels, clip)
+
+
+# --- layer body ------------------------------------------------------------------
+
+def _attention_prefill(q, k, v, cfg: ModelConfig):
+    """Causal f32 attention (paper: prefill attends over dequantized KV)."""
+    b, s, h, dh = q.shape
+    rep = cfg.n_heads // cfg.n_kv_heads
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(dh))
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal[None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def _layer_prefill(cfg: ModelConfig, mode: Mode, x, positions, lw, levels, clip,
+                   kv_args=None):
+    b, s, d = x.shape
+    h_att = rmsnorm(x, lw["attn_norm"])
+    h_att = _quant_site(h_att, levels, clip, lw.get("mask_attn"), mode)
+
+    q = (h_att @ lw["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = (h_att @ lw["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = (h_att @ lw["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if mode.rotated:  # Stage 1d: online head-wise Hadamard after RoPE
+        q = _had_headdim(q, mode)
+        k = _had_headdim(k, mode)
+
+    # cache-quantization emulation (prefill ppl with quantized KV)
+    k_att, v_att = k, v
+    if kv_args is not None:
+        k_qmax, v_qmax, kv_clip = kv_args
+        k_att = _kv_fake_quant_traced(k, k_qmax, kv_clip, cfg.group)
+        v_att = _kv_fake_quant_traced(v, v_qmax, kv_clip, cfg.group)
+
+    att = _attention_prefill(q, k_att, v_att, cfg).reshape(b, s, cfg.d_attn)
+    if mode.rotated:  # Stage 1c completion: Hadamard heads before out-proj
+        att = _had_heads(att, cfg.n_heads, mode)
+    att = _quant_site(att, levels, clip, lw.get("mask_out"), mode)
+    x = x + att @ lw["wo"]
+
+    h_ffn = rmsnorm(x, lw["ffn_norm"])
+    h_ffn = _quant_site(h_ffn, levels, clip, lw.get("mask_ffn"), mode)
+    up = h_ffn @ lw["wup"]
+    gate = h_ffn @ lw["wgate"]
+    act = up * jax.nn.silu(gate)
+    if mode.rotated:  # Stage 1b: online Hadamard before down-proj
+        act = _wht(act, mode)
+    act = _quant_site(act, levels, clip, lw.get("mask_down"), mode)
+    x = x + act @ lw["wdown"]
+    return x, (k, v)
+
+
+def prefill(cfg: ModelConfig, mode: Mode, params: dict, tokens: jnp.ndarray,
+            act_levels, act_clip, masks: dict | None = None, kv_args=None):
+    """Full-sequence forward.  tokens (B, S) int32.
+
+    Returns (logits (B,S,V), k (L,B,S,Hk,dh), v (L,B,S,Hk,dh)); k is
+    post-RoPE (+ post-Hadamard when rotated) — exactly what the paper's
+    Post-RoPE cache stores; v carries the fused (I⊗H_dh) rotation.
+
+    ``kv_args = (k_qmax, v_qmax, kv_clip)`` (traced scalars, qmax 0 → off)
+    makes attention consume fake-quantized K/V, emulating a quantized cache
+    for perplexity measurement (paper Tables 1/3/6).
+    """
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = params["embed"][tokens]
+
+    layer_weights = {k: params[k] for k in LAYER_KEYS}
+    if masks is not None:
+        layer_weights.update(masks)
+
+    def body(x, lw):
+        x, kv = _layer_prefill(cfg, mode, x, positions, lw, act_levels, act_clip,
+                               kv_args=kv_args)
+        return x, kv
+
+    x, (ks, vs) = jax.lax.scan(body, x, layer_weights)
+    h = rmsnorm(x, params["final_norm"])
+    logits = h @ params["lm_head"]
+    return logits, ks, vs
+
+
+def _layer_decode(cfg: ModelConfig, mode: Mode, x, positions, cur_lens,
+                  lw, cache, levels, clip):
+    """Single-token step.  x (B, d); cache = per-layer quantized KV args."""
+    b, d = x.shape
+    h_att = rmsnorm(x, lw["attn_norm"])
+    h_att = _quant_site(h_att, levels, clip, lw.get("mask_attn"), mode)
+
+    q = (h_att @ lw["wq"]).reshape(b, 1, cfg.n_heads, cfg.d_head)
+    k = (h_att @ lw["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    v = (h_att @ lw["wv"]).reshape(b, cfg.n_kv_heads, cfg.d_head)
+    q = rope(q, positions[:, None], cfg.rope_theta)
+    k = rope(k, positions[:, None], cfg.rope_theta)
+    if mode.rotated:
+        q = _had_headdim(q, mode)
+        k = _had_headdim(k, mode)
+    q = q[:, 0]  # (B, H, dh)
+    k_new = k[:, 0]  # (B, Hk, dh)
+    v_new = v
+
+    kc, ksc, kz, vc, vsc, vz = cache
+    sm = 1.0 / float(cfg.d_head) ** 0.5  # python float: kernels take it static
+    fn = kva.kv_decode_attention if mode.use_kernels else ref.kv_decode_attention
+    att = fn(q, kc, ksc, kz, vc, vsc, vz, k_new, v_new, cur_lens,
+             group=cfg.group, sm_scale=sm)          # (B, H, dh)
+    att = att.reshape(b, cfg.d_attn)
+    if mode.rotated:
+        att = _had_heads(att, cfg.n_heads, mode)
+    att = _quant_site(att, levels, clip, lw.get("mask_out"), mode)
+    x = x + att @ lw["wo"]
+
+    h_ffn = rmsnorm(x, lw["ffn_norm"])
+    h_ffn = _quant_site(h_ffn, levels, clip, lw.get("mask_ffn"), mode)
+    up = h_ffn @ lw["wup"]
+    gate = h_ffn @ lw["wgate"]
+    act = up * jax.nn.silu(gate)
+    if mode.rotated:
+        act = _wht(act, mode)
+    act = _quant_site(act, levels, clip, lw.get("mask_down"), mode)
+    x = x + act @ lw["wdown"]
+    return x, (k_new, v_new)
+
+
+def decode(cfg: ModelConfig, mode: Mode, params: dict, tokens: jnp.ndarray,
+           cur_lens: jnp.ndarray, caches: tuple, act_levels, act_clip,
+           masks: dict | None = None):
+    """One decode step for a batch of slots.
+
+    tokens (B,) int32; cur_lens (B,) int32 (doubles as the RoPE position);
+    caches = (k_codes (L,B,S,Hk,dh) i8, k_scale (L,B,S,Hk,ng) f32, k_zero,
+              v_codes, v_scale, v_zero).
+    Returns (logits (B,V), k_new (L,B,Hk,dh), v_new (L,B,Hk,dh)); the rust
+    coordinator quantizes k_new/v_new into the cache (the paper's Append).
+    """
+    x = params["embed"][tokens]
+    positions = cur_lens.astype(jnp.int32)
+
+    layer_weights = {k: params[k] for k in LAYER_KEYS}
+    if masks is not None:
+        layer_weights.update(masks)
+
+    def body(x, lw_cache):
+        lw, cache = lw_cache
+        x, kv = _layer_decode(cfg, mode, x, positions, cur_lens, lw, cache,
+                              act_levels, act_clip)
+        return x, kv
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (layer_weights, caches))
+    h = rmsnorm(x, params["final_norm"])
+    logits = h @ params["lm_head"]
+    return logits, k_new, v_new
+
+
+def collect(cfg: ModelConfig, mode: Mode, params: dict, tokens: jnp.ndarray):
+    """Calibration pass: per-layer Hessian contributions + channel amax.
+
+    Runs the *rotated, unquantized* forward and returns, per layer and per
+    quantization site, X^T X over all tokens (GPTQ Hessian contribution) and
+    per-channel max |x| (SmoothQuant / QUIK statistics).  Shipping H instead
+    of raw activations keeps the artifact interface small.
+    """
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = params["embed"][tokens]
+    layer_weights = {k: params[k] for k in LAYER_KEYS}
+    nomode = dataclasses.replace(mode, quant_acts=False)
+
+    def stats(h):
+        f = h.reshape(-1, h.shape[-1])
+        return f.T @ f, jnp.max(jnp.abs(f), axis=0)
+
+    def body(x, lw):
+        h_att = rmsnorm(x, lw["attn_norm"])
+        s1 = stats(h_att)
+        q = (h_att @ lw["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+        k = (h_att @ lw["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+        v = (h_att @ lw["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if nomode.rotated:
+            q = _had_headdim(q, nomode)
+            k = _had_headdim(k, nomode)
+        att = _attention_prefill(q, k, v, cfg).reshape(b, s, cfg.d_attn)
+        if nomode.rotated:
+            att = _had_heads(att, cfg.n_heads, nomode)
+        s2 = stats(att)
+        x = x + att @ lw["wo"]
+        h_ffn = rmsnorm(x, lw["ffn_norm"])
+        s3 = stats(h_ffn)
+        up = h_ffn @ lw["wup"]
+        act = up * jax.nn.silu(h_ffn @ lw["wgate"])
+        if nomode.rotated:
+            act = _wht(act, nomode)
+        s4 = stats(act)
+        x = x + act @ lw["wdown"]
+        return x, (s1, s2, s3, s4)
+
+    x, sites = jax.lax.scan(body, x, layer_weights)
+    (h1, a1), (h2, a2), (h3, a3), (h4, a4) = sites
+    # per-channel |logit| maxima: a real diagnostic, and it keeps
+    # final_norm/lm_head live in the lowered module (XLA prunes unused
+    # parameters, which would desync the manifest ABI).
+    h = rmsnorm(x, params["final_norm"])
+    logit_amax = jnp.max(jnp.abs((h @ params["lm_head"]).reshape(-1, cfg.vocab)),
+                         axis=0)
+    return h1, a1, h2, a2, h3, a3, h4, a4, logit_amax
+
+
+# --- convenience: generate with a python loop (tests / training eval) -----------
+
+def greedy_generate(cfg: ModelConfig, mode: Mode, params: dict,
+                    prompt: jnp.ndarray, n_new: int,
+                    kv_bits: int = 8, kv_clip: float = 1.0) -> jnp.ndarray:
+    """Reference generation loop (prefill + quantized-cache decode).
+
+    Mirrors exactly what the rust coordinator does; used by python tests to
+    pin the expected end-to-end behaviour.
+    """
+    b, s0 = prompt.shape
+    S = cfg.cache_seq
+    L, Hk, dh, ng = cfg.n_layers, cfg.n_kv_heads, cfg.d_head, cfg.d_head // cfg.group
+    logits, ks, vs = prefill(cfg, mode, params, prompt, 0.0, 1.0)
+
+    def quant(xs):
+        return ref.kv_quant(xs, kv_bits, cfg.group, kv_clip)
+
+    kc = jnp.zeros((L, b, S, Hk, dh), jnp.int8)
+    ksc = jnp.zeros((L, b, S, Hk, ng), jnp.float32)
+    kz = jnp.zeros((L, b, S, Hk, ng), jnp.float32)
+    vc, vsc, vz = jnp.zeros_like(kc), jnp.zeros_like(ksc), jnp.zeros_like(kz)
+    q, sc, z = quant(ks)
+    kc, ksc, kz = kc.at[:, :, :s0].set(q), ksc.at[:, :, :s0].set(sc), kz.at[:, :, :s0].set(z)
+    q, sc, z = quant(vs)
+    vc, vsc, vz = vc.at[:, :, :s0].set(q), vsc.at[:, :, :s0].set(sc), vz.at[:, :, :s0].set(z)
+
+    out = [jnp.argmax(logits[:, -1], axis=-1)]
+    cur = jnp.full((b,), s0, jnp.int32)
+    for _ in range(n_new - 1):
+        logits, k_new, v_new = decode(cfg, mode, params, out[-1], cur,
+                                      (kc, ksc, kz, vc, vsc, vz), 0.0, 1.0)
+        q, sc, z = quant(k_new[:, :, None])
+        kc = kc.at[jnp.arange(L)[:, None], jnp.arange(b)[None], cur[None]].set(q[:, :, 0])
+        ksc = ksc.at[jnp.arange(L)[:, None], jnp.arange(b)[None], cur[None]].set(sc[:, :, 0])
+        kz = kz.at[jnp.arange(L)[:, None], jnp.arange(b)[None], cur[None]].set(z[:, :, 0])
+        q, sc, z = quant(v_new[:, :, None])
+        vc = vc.at[jnp.arange(L)[:, None], jnp.arange(b)[None], cur[None]].set(q[:, :, 0])
+        vsc = vsc.at[jnp.arange(L)[:, None], jnp.arange(b)[None], cur[None]].set(sc[:, :, 0])
+        vz = vz.at[jnp.arange(L)[:, None], jnp.arange(b)[None], cur[None]].set(z[:, :, 0])
+        cur = cur + 1
+        out.append(jnp.argmax(logits, axis=-1))
+    return jnp.stack(out, axis=1)

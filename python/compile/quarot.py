@@ -1,0 +1,125 @@
+"""QuaRot Stage 1: fuse rotations into the weights (computational invariance).
+
+Implements Sec. 4 Stages 1a-1d of the paper on the parameter pytree of
+:mod:`model`.  All arithmetic is done in float64 and cast back to f32 so the
+rotated model matches the original to f32 round-off — the property the
+invariance tests pin down.
+
+Row-vector convention (matches model.py): activations are rows, a linear
+layer is ``y = x @ W`` with W shaped (in, out).
+
+Stage 1a  residual rotation Q (randomized Hadamard of size d_model):
+    - RMSNorm scales α are absorbed into every *input-side* weight first
+      (the commutation property, eq. 3, needs scale-free norms), including
+      the final norm into the LM head.
+    - embed ← embed @ Q;  W_in ← Qᵀ diag(α) W_in;  W_out ← W_out @ Q.
+Stage 1b  FFN online Hadamard: W_down ← H_dff @ W_down (graph inserts
+    act ← act @ H_dff before the quantizer).
+Stage 1c  value path: W_v ← W_v (I ⊗ H_dh);  W_o ← (I ⊗ H_dh)ᵀ
+    (H_nh ⊗ I)ᵀ W_o — together with the graph's online *Hadamard heads*
+    (z ← z (H_nh ⊗ I)) attention output is fully H-rotated and undone
+    inside W_o.  GQA: the per-head H_dh on the n_kv value heads carries to
+    all n_q attention-output heads.
+Stage 1d  keys/queries rotate *online* after RoPE (post-RoPE caching);
+    nothing to fuse — handled entirely in the graph.
+
+``rotate_params`` also supports a generic orthogonal Q (Table 8's random-
+orthogonal ablation) — the online ops stay Hadamard, exactly like the paper.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import hadamard_utils as hu
+from .configs import ModelConfig
+
+
+def fuse_norms(params: dict) -> dict:
+    """Absorb RMSNorm scales into adjacent input-side weights (Stage 1a prep).
+
+    Returns a new pytree where every *_norm is all-ones and wq/wk/wv/wup/
+    wgate/lm_head carry diag(α) on their input side.
+    """
+    p = {k: np.array(v, np.float64) for k, v in params.items()}  # deep copies
+    L = p["attn_norm"].shape[0]
+    for l in range(L):
+        a = p["attn_norm"][l][:, None]
+        p["wq"][l] = a * p["wq"][l]
+        p["wk"][l] = a * p["wk"][l]
+        p["wv"][l] = a * p["wv"][l]
+        f = p["ffn_norm"][l][:, None]
+        p["wup"][l] = f * p["wup"][l]
+        p["wgate"][l] = f * p["wgate"][l]
+    p["lm_head"] = p["final_norm"][:, None] * p["lm_head"]
+    p["attn_norm"] = np.ones_like(p["attn_norm"])
+    p["ffn_norm"] = np.ones_like(p["ffn_norm"])
+    p["final_norm"] = np.ones_like(p["final_norm"])
+    return p
+
+
+def rotate_params(cfg: ModelConfig, params: dict, *, seed: int = 0,
+                  q_matrix: np.ndarray | None = None) -> dict:
+    """Full Stage-1 transform.  Input: *unfused* trained params.
+
+    q_matrix overrides the residual rotation (Table 8 uses a QR-of-Gaussian
+    matrix); default is the randomized Hadamard the paper recommends.
+    """
+    d, dff, dh = cfg.d_model, cfg.d_ff, cfg.d_head
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    p = fuse_norms(params)
+
+    Q = np.asarray(q_matrix, np.float64) if q_matrix is not None \
+        else hu.randomized_hadamard(d, seed)
+    H_ff = hu.hadamard_matrix(dff)
+    H_dh = hu.hadamard_matrix(dh)
+    H_nh = hu.hadamard_matrix(nh)
+    # online Hadamard-heads block in the graph: z ← z (H_nh ⊗ I_dh)
+    K_heads = np.kron(H_nh, np.eye(dh))
+
+    out = dict(p)
+    # Stage 1a — residual stream
+    out["embed"] = p["embed"] @ Q
+    out["lm_head"] = Q.T @ p["lm_head"]
+    L = cfg.n_layers
+    for l in range(L):
+        for k in ("wq", "wk", "wv", "wup", "wgate"):
+            out[k][l] = Q.T @ p[k][l]          # input side
+        out["wo"][l] = p["wo"][l] @ Q          # output side
+        out["wdown"][l] = p["wdown"][l] @ Q
+
+        # Stage 1c — value path, per kv-head H_dh on W_v's output columns
+        wv = out["wv"][l].reshape(d, nkv, dh)
+        out["wv"][l] = (wv @ H_dh).reshape(d, nkv * dh)
+        # W_o input side: undo (I⊗H_dh) then undo the online (H_nh⊗I):
+        # z_final = z (I⊗H_dh)(H_nh⊗I) ⇒ W_o ← (H_nh⊗I)ᵀ (I⊗H_dh)ᵀ W_o
+        wo = out["wo"][l].reshape(nh, dh, d)
+        wo = np.einsum("ij,hjd->hid", H_dh.T, wo)      # (I⊗H_dh)ᵀ on input
+        wo = wo.reshape(nh * dh, d)
+        out["wo"][l] = K_heads.T @ wo                   # (H_nh⊗I)ᵀ on input
+
+        # Stage 1b — FFN: undo the online H_dff inside W_down
+        out["wdown"][l] = H_ff.T @ out["wdown"][l]
+
+    return {k: np.asarray(v, np.float32) for k, v in out.items()}
+
+
+def incoherence(x: np.ndarray) -> float:
+    """μ-incoherence of a matrix (eq. 2): max|x| / (||x||_F / sqrt(mn))."""
+    x = np.asarray(x, np.float64)
+    rms = np.linalg.norm(x) / np.sqrt(x.size)
+    return float(np.abs(x).max() / max(rms, 1e-12))
+
+
+def activation_outlier_stats(acts: np.ndarray) -> dict:
+    """Fig. 1 statistics: per-channel max |x|, kurtosis, incoherence."""
+    a = np.asarray(acts, np.float64).reshape(-1, acts.shape[-1])
+    ch_max = np.abs(a).max(axis=0)
+    mu, sd = a.mean(), a.std()
+    kurt = float(np.mean(((a - mu) / max(sd, 1e-12)) ** 4))
+    return {
+        "channel_absmax": ch_max,
+        "max_over_median_channel": float(ch_max.max() / max(np.median(ch_max), 1e-12)),
+        "kurtosis": kurt,
+        "incoherence": incoherence(a),
+    }

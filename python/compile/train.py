@@ -1,0 +1,84 @@
+"""Train the synthetic checkpoints (build-time only; DESIGN.md §1).
+
+Plain Adam + cross-entropy on the bigram-mixture corpus.  Nothing fancy —
+the goal is a checkpoint whose activations show the outlier features of
+Fig. 1 and whose quality measurably degrades under aggressive quantization.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .configs import ModelConfig
+
+
+def _batches(tokens: np.ndarray, batch: int, seq: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        x = np.stack([tokens[i:i + seq] for i in idx]).astype(np.int32)
+        y = np.stack([tokens[i + 1:i + seq + 1] for i in idx]).astype(np.int32)
+        yield jnp.asarray(x), jnp.asarray(y)
+
+
+def loss_fn(cfg: ModelConfig, params, x, y):
+    logits, _, _ = M.prefill(cfg, M.BASELINE, params, x, 0.0, 1.0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1).squeeze(-1)
+    return nll.mean()
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return z, jax.tree.map(jnp.zeros_like, params)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def train_step(cfg: ModelConfig, params, mstate, vstate, step, x, y):
+    lr, b1, b2, eps = cfg.lr, 0.9, 0.999, 1e-8
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, x, y))(params)
+    mstate = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, mstate, grads)
+    vstate = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, vstate, grads)
+    t = step + 1
+    mh = jax.tree.map(lambda m: m / (1 - b1**t), mstate)
+    vh = jax.tree.map(lambda v: v / (1 - b2**t), vstate)
+    params = jax.tree.map(
+        lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mh, vh)
+    return params, mstate, vstate, loss
+
+
+def evaluate_ppl(cfg: ModelConfig, params, tokens: np.ndarray,
+                 seq: int | None = None) -> float:
+    seq = seq or cfg.train_seq
+    n = (len(tokens) - 1) // seq
+    total, count = 0.0, 0
+    for i in range(min(n, 32)):
+        x = jnp.asarray(tokens[i * seq:(i + 1) * seq][None].astype(np.int32))
+        y = jnp.asarray(tokens[i * seq + 1:(i + 1) * seq + 1][None].astype(np.int32))
+        total += float(loss_fn(cfg, params, x, y)) * seq
+        count += seq
+    return float(np.exp(total / count))
+
+
+def train(cfg: ModelConfig, tokens: np.ndarray, seed: int = 0,
+          log_every: int = 100) -> dict:
+    params = M.init_params(cfg, seed)
+    mstate, vstate = adam_init(params)
+    t0 = time.time()
+    losses = []
+    for step, (x, y) in enumerate(
+            _batches(tokens, cfg.train_batch, cfg.train_seq, cfg.train_steps, seed)):
+        params, mstate, vstate, loss = train_step(
+            cfg, params, mstate, vstate, jnp.asarray(step, jnp.float32), x, y)
+        losses.append(float(loss))
+        if step % log_every == 0 or step == cfg.train_steps - 1:
+            print(f"[{cfg.name}] step {step:4d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    return params

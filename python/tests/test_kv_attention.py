@@ -1,0 +1,105 @@
+"""Quantized-KV decode attention kernel vs oracle and vs exact attention."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import kv_attention as kva
+from compile.kernels import ref
+
+
+def _setup(b, s, h, hk, dh, cur_len, bits=4, group=None, seed=0, clip=0.95):
+    group = group or dh
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((b, h, dh)).astype(np.float32)
+    k = rng.standard_normal((b, s, hk, dh)).astype(np.float32)
+    v = rng.standard_normal((b, s, hk, dh)).astype(np.float32)
+    k_new = rng.standard_normal((b, hk, dh)).astype(np.float32)
+    v_new = rng.standard_normal((b, hk, dh)).astype(np.float32)
+    kc, ks, kz = ref.kv_quant(jnp.asarray(k), bits, group, clip)
+    vc, vs, vz = ref.kv_quant(jnp.asarray(v), bits, group, clip)
+    args = (jnp.asarray(q), kc, ks, kz, vc, vs, vz,
+            jnp.asarray(k_new), jnp.asarray(v_new), cur_len)
+    return args, (q, k, v, k_new, v_new), group
+
+
+@pytest.mark.parametrize("b,s,h,hk,dh,cur_len", [
+    (1, 8, 2, 2, 16, 5),
+    (2, 16, 4, 4, 32, 16),
+    (2, 16, 8, 2, 32, 9),    # GQA 4:1
+    (1, 32, 4, 1, 16, 1),    # MQA, single valid cache slot
+])
+def test_kernel_matches_ref(b, s, h, hk, dh, cur_len):
+    args, _, group = _setup(b, s, h, hk, dh, cur_len)
+    sm = 1.0 / np.sqrt(dh)
+    got = np.asarray(kva.kv_decode_attention(*args, group=group, sm_scale=sm))
+    want = np.asarray(ref.kv_decode_attention(*args, group=group, sm_scale=sm))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matches_exact_attention_at_high_bits():
+    """With 8-bit KV the kernel must track exact f32 attention closely."""
+    b, s, h, hk, dh, cur_len = 2, 12, 4, 4, 32, 12
+    args, (q, k, v, k_new, v_new), group = _setup(b, s, h, hk, dh, cur_len,
+                                                  bits=8, clip=1.0)
+    sm = 1.0 / np.sqrt(dh)
+    got = np.asarray(kva.kv_decode_attention(*args, group=group, sm_scale=sm))
+
+    # exact reference: concat cache + current token, plain softmax attention
+    kk = np.concatenate([k, k_new[:, None]], axis=1)  # (b, s+1, hk, dh)
+    vv = np.concatenate([v, v_new[:, None]], axis=1)
+    scores = np.einsum("bhd,bshd->bhs", q, kk) * sm
+    p = jax.nn.softmax(jnp.asarray(scores), axis=-1)
+    want = np.einsum("bhs,bshd->bhd", np.asarray(p), vv)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_masking_ignores_stale_cache():
+    """Entries beyond cur_len must not affect the output."""
+    b, s, h, hk, dh = 1, 16, 2, 2, 16
+    args1, _, group = _setup(b, s, h, hk, dh, cur_len=4, seed=1)
+    # poison the cache beyond cur_len
+    kc = np.asarray(args1[1]).copy()
+    kc[:, 4:] = 7
+    vc = np.asarray(args1[4]).copy()
+    vc[:, 4:] = 15
+    args2 = list(args1)
+    args2[1] = jnp.asarray(kc)
+    args2[4] = jnp.asarray(vc)
+    sm = 1.0 / np.sqrt(dh)
+    out1 = np.asarray(kva.kv_decode_attention(*args1, group=group, sm_scale=sm))
+    out2 = np.asarray(kva.kv_decode_attention(*args2, group=group, sm_scale=sm))
+    np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+
+def test_zero_len_cache_attends_only_to_self():
+    b, s, h, hk, dh = 1, 8, 2, 2, 16
+    args, (_, _, _, _, v_new), group = _setup(b, s, h, hk, dh, cur_len=0, seed=2)
+    sm = 1.0 / np.sqrt(dh)
+    out = np.asarray(kva.kv_decode_attention(*args, group=group, sm_scale=sm))
+    want = np.repeat(v_new, h // hk, axis=1)
+    np.testing.assert_allclose(out, want, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s=st.sampled_from([8, 16, 32]),
+    hk=st.sampled_from([1, 2, 4]),
+    rep=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([16, 32]),
+    bits=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_property(b, s, hk, rep, dh, bits, seed):
+    h = hk * rep
+    cur_len = int(seed % (s + 1))
+    args, _, group = _setup(b, s, h, hk, dh, cur_len, bits=bits, seed=seed)
+    sm = 1.0 / np.sqrt(dh)
+    got = np.asarray(kva.kv_decode_attention(*args, group=group, sm_scale=sm))
+    want = np.asarray(ref.kv_decode_attention(*args, group=group, sm_scale=sm))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    assert np.isfinite(got).all()

@@ -1,0 +1,159 @@
+"""Model forward: shapes, causality, decode/prefill consistency, GQA."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.configs import ModelConfig
+from compile.kernels import ref
+
+TINY = ModelConfig(
+    name="test-mha", vocab=64, d_model=64, n_layers=2, n_heads=4, n_kv_heads=4,
+    d_head=16, d_ff=128, max_seq=16, cache_seq=32, decode_batch=2)
+GQA = dataclasses.replace(TINY, name="test-gqa", n_kv_heads=2)
+NOKERN = dataclasses.replace(M.BASELINE, use_kernels=False)
+QUAROT_NOKERN = dataclasses.replace(M.QUAROT, use_kernels=False)
+
+
+def _tokens(cfg, b=1, s=None, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab, size=(b, s or cfg.max_seq)),
+                       jnp.int32)
+
+
+@pytest.mark.parametrize("cfg", [TINY, GQA], ids=["mha", "gqa"])
+def test_prefill_shapes(cfg):
+    params = M.init_params(cfg)
+    toks = _tokens(cfg, b=2)
+    logits, ks, vs = M.prefill(cfg, NOKERN, params, toks, 0.0, 1.0)
+    s = cfg.max_seq
+    assert logits.shape == (2, s, cfg.vocab)
+    assert ks.shape == (cfg.n_layers, 2, s, cfg.n_kv_heads, cfg.d_head)
+    assert vs.shape == ks.shape
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    cfg = TINY
+    params = M.init_params(cfg)
+    t1 = _tokens(cfg)
+    t2 = np.asarray(t1).copy()
+    t2[0, -1] = (t2[0, -1] + 1) % cfg.vocab
+    l1, _, _ = M.prefill(cfg, NOKERN, params, t1, 0.0, 1.0)
+    l2, _, _ = M.prefill(cfg, NOKERN, params, jnp.asarray(t2), 0.0, 1.0)
+    np.testing.assert_allclose(np.asarray(l1)[0, :-1], np.asarray(l2)[0, :-1],
+                               atol=1e-5)
+    assert np.abs(np.asarray(l1)[0, -1] - np.asarray(l2)[0, -1]).max() > 1e-4
+
+
+@pytest.mark.parametrize("cfg,mode", [
+    (TINY, NOKERN), (GQA, NOKERN), (TINY, QUAROT_NOKERN), (GQA, QUAROT_NOKERN),
+], ids=["mha-base", "gqa-base", "mha-quarot", "gqa-quarot"])
+def test_decode_matches_prefill(cfg, mode):
+    """Prefill(n+1) last-token logits == decode step given prefill(n) cache.
+
+    Cache quantized at 8 bits / clip 1.0 so the comparison tolerance is
+    dominated by the (small) KV quantization error.
+    """
+    params = M.init_params(cfg)
+    b, s0 = 2, 8
+    toks = _tokens(cfg, b=b, s=s0 + 1, seed=3)
+    full_logits, _, _ = M.prefill(cfg, mode, params, toks, 0.0, 1.0)
+
+    # build the cache from the first s0 tokens
+    _, ks, vs = M.prefill(cfg, mode, params, toks[:, :s0], 0.0, 1.0)
+    L, Hk, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    S, ng = cfg.cache_seq, cfg.d_head // cfg.group
+    kc = jnp.zeros((L, b, S, Hk, dh), jnp.int8)
+    side = jnp.zeros((L, b, S, Hk, ng), jnp.float32)
+    q, sc, z = ref.kv_quant(ks, 8, cfg.group, 1.0)
+    kcs = (kc.at[:, :, :s0].set(q), side.at[:, :, :s0].set(sc),
+           side.at[:, :, :s0].set(z))
+    q, sc, z = ref.kv_quant(vs, 8, cfg.group, 1.0)
+    vcs = (kc.at[:, :, :s0].set(q), side.at[:, :, :s0].set(sc),
+           side.at[:, :, :s0].set(z))
+    cur = jnp.full((b,), s0, jnp.int32)
+    logits, k_new, v_new = M.decode(cfg, mode, params, toks[:, s0], cur,
+                                    kcs + vcs, 0.0, 1.0)
+    assert k_new.shape == (L, b, Hk, dh)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(full_logits[:, s0]),
+                               rtol=0.05, atol=0.05)
+
+
+def test_act_quant_changes_but_tracks_logits():
+    cfg = TINY
+    params = M.init_params(cfg)
+    toks = _tokens(cfg)
+    mode = dataclasses.replace(M.QUAROT, use_kernels=False)
+    l16, _, _ = M.prefill(cfg, mode, params, toks, 0.0, 1.0)
+    l8, _, _ = M.prefill(cfg, mode, params, toks, 127.0, 0.9)
+    l4, _, _ = M.prefill(cfg, mode, params, toks, 7.0, 0.9)
+    d8 = np.abs(np.asarray(l8) - np.asarray(l16)).mean()
+    d4 = np.abs(np.asarray(l4) - np.asarray(l16)).mean()
+    assert 0 < d8 < d4, (d8, d4)  # INT8 must hurt less than INT4
+
+
+def test_outlier_mask_site_protection():
+    """QUIK-style masks: protecting all channels == no quantization."""
+    cfg = TINY
+    params = M.init_params(cfg)
+    toks = _tokens(cfg)
+    mode = dataclasses.replace(M.BASELINE_QUANT, use_kernels=False)
+    L = cfg.n_layers
+    ones = {
+        "mask_attn": jnp.ones((L, cfg.d_model)),
+        "mask_out": jnp.ones((L, cfg.d_attn)),
+        "mask_ffn": jnp.ones((L, cfg.d_model)),
+        "mask_down": jnp.ones((L, cfg.d_ff)),
+    }
+    zeros = {k: jnp.zeros_like(v) for k, v in ones.items()}
+    lfp, _, _ = M.prefill(cfg, mode, params, toks, 0.0, 1.0, masks=zeros)
+    lq, _, _ = M.prefill(cfg, mode, params, toks, 7.0, 0.9, masks=zeros)
+    lprot, _, _ = M.prefill(cfg, mode, params, toks, 7.0, 0.9, masks=ones)
+    np.testing.assert_allclose(np.asarray(lprot), np.asarray(lfp), atol=1e-5)
+    assert np.abs(np.asarray(lq) - np.asarray(lfp)).max() > 1e-3
+
+
+def test_kernel_and_ref_modes_agree():
+    """Pallas-kernel graph == pure-jnp graph (QuaRot mode, quantized)."""
+    cfg = TINY
+    params = M.init_params(cfg)
+    toks = _tokens(cfg)
+    lk, ksk, vsk = M.prefill(cfg, M.QUAROT, params, toks, 7.0, 0.9)
+    lr, ksr, vsr = M.prefill(cfg, QUAROT_NOKERN, params, toks, 7.0, 0.9)
+    np.testing.assert_allclose(np.asarray(lk), np.asarray(lr), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(ksk), np.asarray(ksr), atol=2e-4)
+
+
+def test_collect_stats_shapes_and_psd():
+    cfg = TINY
+    params = M.init_params(cfg)
+    toks = _tokens(cfg, b=2)
+    outs = M.collect(cfg, QUAROT_NOKERN, params, toks)
+    h1, a1, h2, a2, h3, a3, h4, a4, logit_amax = outs
+    assert logit_amax.shape == (cfg.vocab,)
+    L = cfg.n_layers
+    assert h1.shape == (L, cfg.d_model, cfg.d_model)
+    assert h4.shape == (L, cfg.d_ff, cfg.d_ff)
+    assert a2.shape == (L, cfg.d_attn)
+    for h in (h1, h2, h3, h4):  # Hessian contributions are PSD Gram matrices
+        eig = np.linalg.eigvalsh(np.asarray(h[0], np.float64))
+        assert eig.min() > -1e-6 * eig.max()  # PSD up to f32 round-off
+
+
+def test_greedy_generate_deterministic():
+    cfg = TINY
+    params = M.init_params(cfg)
+    prompt = _tokens(cfg, b=1, s=4)
+    g1 = np.asarray(M.greedy_generate(cfg, NOKERN, params, prompt, 5))
+    g2 = np.asarray(M.greedy_generate(cfg, NOKERN, params, prompt, 5))
+    assert g1.shape == (1, 5)
+    assert (g1 == g2).all()
+    assert (g1 >= 0).all() and (g1 < cfg.vocab).all()

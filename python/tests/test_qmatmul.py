@@ -1,0 +1,90 @@
+"""Quantized-GEMM kernel vs oracle, and the fake-quant == integer-pipeline
+equivalence that justifies evaluating accuracy with fake-quant graphs."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import qmatmul as qmm
+from compile.kernels import ref
+
+
+def _quant_weight(w: np.ndarray, levels: int):
+    """Per-column symmetric RTN (no clipping) — mirrors rust quant::rtn."""
+    s = np.maximum(np.abs(w).max(axis=0), 1e-8) / levels
+    wq = np.clip(np.round(w / s[None, :]), -levels, levels).astype(np.int8)
+    return wq, s.astype(np.float32)
+
+
+@pytest.mark.parametrize("t,k,n", [(4, 16, 8), (128, 128, 128), (130, 96, 72)])
+def test_qmatmul_int_matches_numpy(t, k, n):
+    rng = np.random.default_rng(0)
+    xq = rng.integers(-7, 8, size=(t, k)).astype(np.int8)
+    wq = rng.integers(-7, 8, size=(k, n)).astype(np.int8)
+    got = np.asarray(qmm.qmatmul_int(jnp.asarray(xq), jnp.asarray(wq)))
+    want = xq.astype(np.int64) @ wq.astype(np.int64)
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("levels", [7, 127])
+def test_qmatmul_matches_ref(levels):
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((32, 64)).astype(np.float32)
+    w = rng.standard_normal((64, 48)).astype(np.float32)
+    wq, ws = _quant_weight(w, levels)
+    got = np.asarray(qmm.qmatmul(jnp.asarray(x), jnp.asarray(wq), jnp.asarray(ws),
+                                 levels=levels, clip=0.9))
+    want = np.asarray(ref.qmatmul(jnp.asarray(x), jnp.asarray(wq), jnp.asarray(ws),
+                                  levels=levels, clip=0.9))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_integer_pipeline_equals_fake_quant_matmul():
+    """deq(int_gemm(q(x), q(w))) == fake_quant(x) @ fake_quant(w).
+
+    This is the identity that lets the accuracy graphs run with fake-quantized
+    f32 weights while the perf kernels run the true integer pipeline — the
+    same accuracy/perf split the paper itself uses (PyTorch fake quant for
+    Tables 1-13, CUTLASS kernels for Figures 4/7).
+    """
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((16, 32)).astype(np.float32)
+    w = rng.standard_normal((32, 24)).astype(np.float32)
+    levels, clip = 7, 0.9
+    wq, ws = _quant_weight(w, levels)
+    w_deq = wq.astype(np.float32) * ws[None, :]
+    x_deq = np.asarray(ref.fake_quant_act(jnp.asarray(x), float(levels), clip))
+    fake = x_deq @ w_deq
+    integer = np.asarray(
+        qmm.qmatmul(jnp.asarray(x), jnp.asarray(wq), jnp.asarray(ws),
+                    levels=levels, clip=clip))
+    np.testing.assert_allclose(integer, fake, rtol=1e-4, atol=1e-4)
+
+
+def test_qmatmul_accumulator_is_int32_exact():
+    """Worst-case magnitudes must not saturate: 7*7*K << 2^31."""
+    k = 4096
+    xq = np.full((2, k), 7, dtype=np.int8)
+    wq = np.full((k, 3), 7, dtype=np.int8)
+    got = np.asarray(qmm.qmatmul_int(jnp.asarray(xq), jnp.asarray(wq)))
+    assert (got == 7 * 7 * k).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 40),
+    k=st.integers(1, 100),
+    n=st.integers(1, 40),
+    levels=st.sampled_from([7, 31, 127]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_property(t, k, n, levels, seed):
+    """Hypothesis sweep over shapes/levels: kernel == oracle exactly."""
+    rng = np.random.default_rng(seed)
+    xq = rng.integers(-levels, levels + 1, size=(t, k)).astype(np.int8)
+    wq = rng.integers(-levels, levels + 1, size=(k, n)).astype(np.int8)
+    got = np.asarray(qmm.qmatmul_int(jnp.asarray(xq), jnp.asarray(wq)))
+    want = xq.astype(np.int64) @ wq.astype(np.int64)
+    assert (got == want).all()

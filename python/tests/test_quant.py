@@ -1,0 +1,131 @@
+"""Quantization kernels vs oracles + scheme invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import quant as qk
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("levels", [7, 31, 127])
+@pytest.mark.parametrize("t,d", [(1, 16), (7, 64), (128, 256), (130, 32)])
+def test_fake_quant_kernel_matches_ref(levels, t, d):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((t, d)).astype(np.float32) * 3.0
+    got = np.asarray(qk.fake_quant(jnp.asarray(x), float(levels), 0.9))
+    want = np.asarray(ref.fake_quant_act(jnp.asarray(x), float(levels), 0.9))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_fake_quant_passthrough_when_disabled():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((9, 32)).astype(np.float32)
+    got = np.asarray(qk.fake_quant(jnp.asarray(x), 0.0, 0.9))
+    np.testing.assert_allclose(got, x)
+
+
+def test_fake_quant_error_bound():
+    """|deq(q(x)) - x| <= scale/2 for values inside the clip range."""
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((50, 64)).astype(np.float32)
+    levels, clip = 7.0, 1.0  # clip=1: no clipping, bound is exact
+    y = np.asarray(ref.fake_quant_act(jnp.asarray(x), levels, clip))
+    amax = np.abs(x).max(axis=-1, keepdims=True)
+    scale = amax / levels
+    assert (np.abs(y - x) <= scale / 2 + 1e-6).all()
+
+
+def test_quant_int_roundtrip_matches_fake_quant():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((33, 48)).astype(np.float32)
+    q, s = qk.quant_int(jnp.asarray(x), 7, 0.9)
+    deq = np.asarray(q).astype(np.float32) * np.asarray(s)
+    want = np.asarray(ref.fake_quant_act(jnp.asarray(x), 7.0, 0.9))
+    np.testing.assert_allclose(deq, want, atol=1e-6)
+    assert np.asarray(q).min() >= -7 and np.asarray(q).max() <= 7
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("group", [8, 16, 32])
+def test_kv_quant_roundtrip_bound(bits, group):
+    """Group-wise asymmetric round-trip stays within half a step (clip=1)."""
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((6, 5, group * 2)).astype(np.float32)
+    y = np.asarray(ref.kv_fake_quant(jnp.asarray(x), bits, group, 1.0))
+    g = x.reshape(-1, group)
+    step = (g.max(-1) - g.min(-1)) / (2**bits - 1)
+    err = np.abs(y.reshape(-1, group) - g).max(-1)
+    assert (err <= step / 2 + 1e-5).all()
+
+
+def test_kv_quant_kernel_matches_ref():
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((4, 10, 64)).astype(np.float32)
+    got = np.asarray(qk.kv_fake_quant(jnp.asarray(x), 4, 32, 0.95))
+    want = np.asarray(ref.kv_fake_quant(jnp.asarray(x), 4, 32, 0.95))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_kv_quant_codes_in_range():
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((20, 32)).astype(np.float32)
+    for bits in (2, 3, 4, 8):
+        q, s, z = ref.kv_quant(jnp.asarray(x), bits, 16, 0.95)
+        qn = np.asarray(q)  # signed storage: [-2^(b-1), 2^(b-1)-1]
+        assert qn.min() >= -(2 ** (bits - 1)) and qn.max() <= 2 ** (bits - 1) - 1
+
+
+def test_kv_quant_constant_group_exact():
+    """A constant group must round-trip exactly (degenerate range)."""
+    x = jnp.full((2, 16), 1.234, dtype=jnp.float32)
+    y = np.asarray(ref.kv_fake_quant(x, 4, 16, 0.95))
+    np.testing.assert_allclose(y, 1.234, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    t=st.integers(1, 50),
+    logd=st.integers(2, 7),
+    levels=st.sampled_from([1, 3, 7, 15, 31, 127]),
+    clip=st.floats(0.5, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_fake_quant_property(t, logd, levels, clip, seed, scale):
+    """Hypothesis: kernel==oracle across shapes/levels/clips/magnitudes,
+    output codes lie on the quantization grid."""
+    d = 2**logd
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((t, d)) * scale).astype(np.float32)
+    got = np.asarray(qk.fake_quant(jnp.asarray(x), float(levels), clip))
+    want = np.asarray(ref.fake_quant_act(jnp.asarray(x), float(levels), clip))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    # grid check: y / s must be integers
+    amax = np.abs(x).max(axis=-1, keepdims=True)
+    s = np.maximum(amax * clip, 1e-8) / levels
+    ratio = got / s
+    np.testing.assert_allclose(ratio, np.round(ratio), atol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    groups=st.integers(1, 4),
+    rows=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kv_quant_property(bits, groups, rows, seed):
+    group = 16
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((rows, groups * group)).astype(np.float32)
+    q, s, z = ref.kv_quant(jnp.asarray(x), bits, group, 0.95)
+    y = np.asarray(ref.kv_dequant(q, s, z, group))
+    # dequantized values stay within the (clipped) group range
+    g = x.reshape(rows, groups, group)
+    lo = g.min(-1) - (g.max(-1) - g.min(-1)) * 0.05
+    hi = g.max(-1) + (g.max(-1) - g.min(-1)) * 0.05
+    yg = y.reshape(rows, groups, group)
+    assert (yg >= lo[..., None] - 1e-5).all() and (yg <= hi[..., None] + 1e-5).all()

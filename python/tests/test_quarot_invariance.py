@@ -1,0 +1,130 @@
+"""Computational invariance (the heart of QuaRot, paper Sec. 3.4/4).
+
+The rotated model run through the *rotated graph* (online Hadamards on) must
+produce the same logits as the original model through the baseline graph —
+in full precision, to f32 round-off.  Plus: the rotation actually kills the
+outliers our synthetic checkpoints are constructed to have (Fig. 1).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model as M, quarot
+from compile.configs import ModelConfig
+from compile.hadamard_utils import random_orthogonal
+
+TINY = ModelConfig(
+    name="inv-mha", vocab=64, d_model=64, n_layers=2, n_heads=4, n_kv_heads=4,
+    d_head=16, d_ff=128, max_seq=16, cache_seq=32, decode_batch=2)
+GQA = dataclasses.replace(TINY, name="inv-gqa", n_kv_heads=2)
+KRON = dataclasses.replace(TINY, name="inv-kron", d_ff=192)  # H_12 path
+BASE = dataclasses.replace(M.BASELINE, use_kernels=False)
+ROT = dataclasses.replace(M.QUAROT, quant_acts=False, use_kernels=False)
+
+
+def _roundtrip(cfg, q_matrix=None, trained_gamma=True, seed=0):
+    params = M.init_params(cfg, seed)
+    if trained_gamma:  # exercise the norm-fusion path with non-trivial scales
+        rng = np.random.default_rng(seed + 9)
+        params = dict(params)
+        params["attn_norm"] = jnp.asarray(
+            1.0 + 0.3 * rng.standard_normal((cfg.n_layers, cfg.d_model)), jnp.float32)
+        params["ffn_norm"] = jnp.asarray(
+            1.0 + 0.3 * rng.standard_normal((cfg.n_layers, cfg.d_model)), jnp.float32)
+        params["final_norm"] = jnp.asarray(
+            1.0 + 0.3 * rng.standard_normal((cfg.d_model,)), jnp.float32)
+    rot = {k: jnp.asarray(v) for k, v in
+           quarot.rotate_params(cfg, {k: np.asarray(v) for k, v in params.items()},
+                                seed=11, q_matrix=q_matrix).items()}
+    toks = jnp.asarray(
+        np.random.default_rng(seed).integers(0, cfg.vocab, (2, cfg.max_seq)),
+        jnp.int32)
+    l_base, _, _ = M.prefill(cfg, BASE, params, toks, 0.0, 1.0)
+    l_rot, ks, vs = M.prefill(cfg, ROT, rot, toks, 0.0, 1.0)
+    return np.asarray(l_base), np.asarray(l_rot), (params, rot, toks, ks, vs)
+
+
+@pytest.mark.parametrize("cfg", [TINY, GQA, KRON], ids=["mha", "gqa", "kron12"])
+def test_invariance_hadamard(cfg):
+    l_base, l_rot, _ = _roundtrip(cfg)
+    scale = np.abs(l_base).max()
+    np.testing.assert_allclose(l_rot, l_base, atol=2e-3 * scale)
+
+
+def test_invariance_random_orthogonal():
+    """Table 8's ablation: any orthogonal Q preserves the model."""
+    q = random_orthogonal(TINY.d_model, seed=5)
+    l_base, l_rot, _ = _roundtrip(TINY, q_matrix=q)
+    scale = np.abs(l_base).max()
+    np.testing.assert_allclose(l_rot, l_base, atol=2e-3 * scale)
+
+
+def test_invariance_with_kernels():
+    """Same property through the Pallas-kernel graph (what actually ships)."""
+    cfg = TINY
+    params = M.init_params(cfg, 1)
+    rot = {k: jnp.asarray(v) for k, v in
+           quarot.rotate_params(cfg, {k: np.asarray(v) for k, v in params.items()},
+                                seed=2).items()}
+    toks = jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab, (1, cfg.max_seq)), jnp.int32)
+    l_base, _, _ = M.prefill(cfg, M.BASELINE, params, toks, 0.0, 1.0)
+    rotk = dataclasses.replace(M.QUAROT, quant_acts=False)
+    l_rot, _, _ = M.prefill(cfg, rotk, rot, toks, 0.0, 1.0)
+    scale = np.abs(np.asarray(l_base)).max()
+    np.testing.assert_allclose(np.asarray(l_rot), np.asarray(l_base),
+                               atol=2e-3 * scale)
+
+
+def test_decode_invariance():
+    """Invariance holds through the decode path (quantized cache, 8-bit)."""
+    from compile.kernels import ref
+    cfg = GQA
+    params = M.init_params(cfg, 2)
+    rot = {k: jnp.asarray(v) for k, v in
+           quarot.rotate_params(cfg, {k: np.asarray(v) for k, v in params.items()},
+                                seed=3).items()}
+    prompt = jnp.asarray(
+        np.random.default_rng(2).integers(0, cfg.vocab, (1, 6)), jnp.int32)
+    g_base = np.asarray(M.greedy_generate(cfg, BASE, params, prompt, 8))
+    g_rot = np.asarray(M.greedy_generate(cfg, ROT, rot, prompt, 8))
+    # argmax tokens are a robust invariance check through 8-bit caches
+    assert (g_base == g_rot).mean() >= 0.75, (g_base, g_rot)
+
+
+def test_rotation_removes_outliers():
+    """Fig. 1: incoherence/outlier ratio of FFN inputs collapses after QuaRot."""
+    cfg = dataclasses.replace(TINY, outlier_channels=4, outlier_scale=12.0)
+    l_base, l_rot, (params, rot, toks, _, _) = _roundtrip(cfg, trained_gamma=False)
+
+    # capture attention-input activations via the collect graph: layer 0 is
+    # where the injected hot channels live at random init (in *trained*
+    # checkpoints the residual stream carries them through every layer)
+    outs_base = M.collect(cfg, BASE, params, toks)
+    outs_rot = M.collect(cfg, ROT, rot, toks)
+    amax_base = np.asarray(outs_base[1])   # amax_attn, (L, d)
+    amax_rot = np.asarray(outs_rot[1])
+    ratio_base = amax_base.max(1) / np.median(amax_base, 1)
+    ratio_rot = amax_rot.max(1) / np.median(amax_rot, 1)
+    assert ratio_base[0] > 4.0, ratio_base          # outliers exist pre-rotation
+    assert ratio_rot[0] < ratio_base[0] / 3         # ... and QuaRot kills them
+    assert (ratio_rot < 2.5).all(), ratio_rot       # uniform everywhere after
+
+
+def test_fused_norms_preserve_model():
+    cfg = TINY
+    params = M.init_params(cfg, 4)
+    rng = np.random.default_rng(5)
+    params["attn_norm"] = jnp.asarray(
+        1 + 0.5 * rng.standard_normal((cfg.n_layers, cfg.d_model)), jnp.float32)
+    fused = {k: jnp.asarray(v, jnp.float32) for k, v in
+             quarot.fuse_norms({k: np.asarray(v) for k, v in params.items()}).items()}
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+    l1, _, _ = M.prefill(cfg, BASE, params, toks, 0.0, 1.0)
+    l2, _, _ = M.prefill(cfg, BASE, fused, toks, 0.0, 1.0)
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(l1),
+                               atol=2e-3 * np.abs(np.asarray(l1)).max())

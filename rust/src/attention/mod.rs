@@ -1,0 +1,375 @@
+//! Native decode attention over f32 and quantized KV caches — the rust twin
+//! of the paper's FlashInfer-based `Decode` routine (Appendix A.10,
+//! Table 15) and the substrate for the memory table (Table 17).
+//!
+//! Layout per sequence: cache[s][h][dh] (token-major), matching the decode
+//! graphs.  The quantized variant streams nibble-packed codes + per-group
+//! scales and fuses dequantization into the score/value loops — the IO
+//! reduction that makes the 4-bit cache win at large batch/long context.
+
+use crate::quant::kv;
+
+/// f32 cache for one sequence: the FP16-equivalent baseline.
+pub struct CacheF32 {
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub data: Vec<f32>, // s * h * dh, appended per token
+    pub len: usize,
+}
+
+impl CacheF32 {
+    pub fn new(n_kv_heads: usize, d_head: usize, capacity: usize) -> Self {
+        CacheF32 {
+            n_kv_heads,
+            d_head,
+            data: Vec::with_capacity(capacity * n_kv_heads * d_head),
+            len: 0,
+        }
+    }
+
+    pub fn append(&mut self, kv_token: &[f32]) {
+        assert_eq!(kv_token.len(), self.n_kv_heads * self.d_head);
+        self.data.extend_from_slice(kv_token);
+        self.len += 1;
+    }
+
+    pub fn bytes(&self) -> usize {
+        // report fp16-equivalent (the paper's baseline is fp16)
+        self.data.len() * 2
+    }
+}
+
+/// Quantized cache for one sequence: nibble/byte-packed codes + group scales.
+pub struct CacheQuant {
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub group: usize,
+    pub bits: u32,
+    pub codes: Vec<u8>, // packed
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+    pub len: usize,
+}
+
+impl CacheQuant {
+    pub fn new(n_kv_heads: usize, d_head: usize, group: usize, bits: u32) -> Self {
+        assert!(bits == 4 || bits == 8, "packed cache supports 4/8 bits");
+        CacheQuant {
+            n_kv_heads,
+            d_head,
+            group,
+            bits,
+            codes: Vec::new(),
+            scales: Vec::new(),
+            zeros: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Quantize + append one token's (h × dh) keys-or-values.
+    pub fn append(&mut self, kv_token: &[f32], clip: f32) {
+        let d = self.n_kv_heads * self.d_head;
+        assert_eq!(kv_token.len(), d);
+        let (codes, scales, zeros) = kv::quant_slab(kv_token, d, self.group,
+                                                    self.bits, clip);
+        if self.bits == 4 {
+            self.codes.extend_from_slice(&kv::pack_nibbles(&codes));
+        } else {
+            self.codes.extend(codes.iter().map(|&c| c as u8));
+        }
+        self.scales.extend_from_slice(&scales);
+        self.zeros.extend_from_slice(&zeros);
+        self.len += 1;
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + (self.scales.len() + self.zeros.len()) * 4
+    }
+
+    /// Dequantize token s, head h into `out` (d_head values).
+    pub fn dequant_head(&self, s: usize, h: usize, out: &mut [f32], scratch: &mut [i8]) {
+        let d = self.n_kv_heads * self.d_head;
+        let groups_per_tok = d / self.group;
+        let tok_groups = s * groups_per_tok + h * (self.d_head / self.group);
+        let start_code = s * d + h * self.d_head;
+        let codes = &mut scratch[..self.d_head];
+        if self.bits == 4 {
+            // packed stream: codes for this head start at bit offset
+            for (i, c) in codes.iter_mut().enumerate() {
+                let idx = start_code + i;
+                let byte = self.codes[idx / 2];
+                let nib = if idx % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                *c = ((nib << 4) as i8) >> 4;
+            }
+        } else {
+            for (i, c) in codes.iter_mut().enumerate() {
+                *c = self.codes[start_code + i] as i8;
+            }
+        }
+        for (gi, chunk) in out.chunks_mut(self.group).enumerate() {
+            let s_ = self.scales[tok_groups + gi];
+            let z_ = self.zeros[tok_groups + gi];
+            for (o, &c) in chunk.iter_mut().zip(&codes[gi * self.group..]) {
+                *o = c as f32 * s_ + z_;
+            }
+        }
+    }
+}
+
+/// One decode step over an f32 cache: q (H × dh) → out (H × dh).
+/// GQA: `rep` q-heads share each kv-head.
+pub fn decode_f32(q: &[f32], n_heads: usize, k: &CacheF32, v: &CacheF32,
+                  out: &mut [f32], scores: &mut Vec<f32>) {
+    let (hk, dh) = (k.n_kv_heads, k.d_head);
+    let rep = n_heads / hk;
+    let s = k.len;
+    let sm = 1.0 / (dh as f32).sqrt();
+    scores.resize(s, 0.0);
+    for h in 0..n_heads {
+        let kvh = h / rep;
+        let qh = &q[h * dh..(h + 1) * dh];
+        let mut mx = f32::MIN;
+        for t in 0..s {
+            let kt = &k.data[(t * hk + kvh) * dh..][..dh];
+            let mut dot = 0.0f32;
+            for i in 0..dh {
+                dot += qh[i] * kt[i];
+            }
+            let sc = dot * sm;
+            scores[t] = sc;
+            mx = mx.max(sc);
+        }
+        let mut denom = 0.0f32;
+        let oh = &mut out[h * dh..(h + 1) * dh];
+        oh.fill(0.0);
+        for t in 0..s {
+            let p = (scores[t] - mx).exp();
+            denom += p;
+            let vt = &v.data[(t * hk + kvh) * dh..][..dh];
+            for i in 0..dh {
+                oh[i] += p * vt[i];
+            }
+        }
+        let inv = 1.0 / denom;
+        for o in oh {
+            *o *= inv;
+        }
+    }
+}
+
+/// One decode step over a quantized cache (fused dequant + online softmax).
+///
+/// Perf notes (EXPERIMENTS.md §Perf): the naive version dequantized each
+/// (token, head) into a buffer and then ran the dot — two passes and a
+/// nibble-extract per element.  This version folds the affine dequant into
+/// the reductions analytically:
+///   q·deq(c)   = scale·(q·c) + zero·Σq            (score pass)
+///   Σₜ pₜ·deq(cₜ) = Σₜ (pₜ·scaleₜ)·cₜ + (Σₜ pₜ·zeroₜ) (value pass)
+/// so the inner loops touch each packed byte once and use integer-from-
+/// nibble directly, with Σq precomputed per (head, group).
+pub fn decode_quant(q: &[f32], n_heads: usize, k: &CacheQuant, v: &CacheQuant,
+                    out: &mut [f32], scores: &mut Vec<f32>,
+                    kbuf: &mut Vec<f32>, scratch: &mut Vec<i8>) {
+    let (hk, dh) = (k.n_kv_heads, k.d_head);
+    let rep = n_heads / hk;
+    let s = k.len;
+    let sm = 1.0 / (dh as f32).sqrt();
+    let d = hk * dh;
+    let groups_per_tok = d / k.group;
+    let gh = dh / k.group; // groups per head
+    scores.resize(s, 0.0);
+    kbuf.resize(dh, 0.0);
+    scratch.resize(dh, 0);
+    for h in 0..n_heads {
+        let kvh = h / rep;
+        let qh = &q[h * dh..(h + 1) * dh];
+        // per-group Σq for the zero-point correction
+        let qsum: Vec<f32> = qh.chunks_exact(k.group)
+            .map(|g| g.iter().sum()).collect();
+        let mut mx = f32::MIN;
+        for t in 0..s {
+            let base = t * d + kvh * dh;
+            let gbase = t * groups_per_tok + kvh * gh;
+            let mut sc = 0.0f32;
+            for gi in 0..gh {
+                let scale = k.scales[gbase + gi];
+                let zero = k.zeros[gbase + gi];
+                let mut dot = 0.0f32;
+                let goff = gi * k.group;
+                if k.bits == 4 {
+                    // packed stream: group starts nibble-aligned (group even)
+                    let cb = (base + goff) / 2;
+                    for (j, &byte) in k.codes[cb..cb + k.group / 2].iter()
+                        .enumerate() {
+                        let lo = (((byte & 0x0F) << 4) as i8 >> 4) as f32;
+                        let hi = ((byte & 0xF0) as i8 >> 4) as f32;
+                        dot += qh[goff + 2 * j] * lo + qh[goff + 2 * j + 1] * hi;
+                    }
+                } else {
+                    let cb = base + goff;
+                    for (j, &c) in k.codes[cb..cb + k.group].iter().enumerate() {
+                        dot += qh[goff + j] * (c as i8) as f32;
+                    }
+                }
+                sc += scale * dot + zero * qsum[gi];
+            }
+            let sc = sc * sm;
+            scores[t] = sc;
+            mx = mx.max(sc);
+        }
+        let mut denom = 0.0f32;
+        let oh = &mut out[h * dh..(h + 1) * dh];
+        oh.fill(0.0);
+        let mut zacc = vec![0.0f32; gh]; // Σₜ pₜ·zeroₜ per group
+        for t in 0..s {
+            let p = (scores[t] - mx).exp();
+            denom += p;
+            let base = t * d + kvh * dh;
+            let gbase = t * groups_per_tok + kvh * gh;
+            for gi in 0..gh {
+                let ps = p * v.scales[gbase + gi];
+                zacc[gi] += p * v.zeros[gbase + gi];
+                let goff = gi * v.group;
+                if v.bits == 4 {
+                    let cb = (base + goff) / 2;
+                    for (j, &byte) in v.codes[cb..cb + v.group / 2].iter()
+                        .enumerate() {
+                        let lo = (((byte & 0x0F) << 4) as i8 >> 4) as f32;
+                        let hi = ((byte & 0xF0) as i8 >> 4) as f32;
+                        oh[goff + 2 * j] += ps * lo;
+                        oh[goff + 2 * j + 1] += ps * hi;
+                    }
+                } else {
+                    let cb = base + goff;
+                    for (j, &c) in v.codes[cb..cb + v.group].iter().enumerate() {
+                        oh[goff + j] += ps * (c as i8) as f32;
+                    }
+                }
+            }
+        }
+        let inv = 1.0 / denom;
+        for gi in 0..gh {
+            for o in &mut oh[gi * v.group..(gi + 1) * v.group] {
+                *o = (*o + zacc[gi]) * inv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::Rng, prop};
+
+    fn fill_caches(s: usize, hk: usize, dh: usize, bits: u32, seed: u64)
+                   -> (CacheF32, CacheF32, CacheQuant, CacheQuant) {
+        let mut rng = Rng::new(seed);
+        let mut kf = CacheF32::new(hk, dh, s);
+        let mut vf = CacheF32::new(hk, dh, s);
+        let mut kq = CacheQuant::new(hk, dh, dh, bits);
+        let mut vq = CacheQuant::new(hk, dh, dh, bits);
+        for _ in 0..s {
+            let kt = rng.normal_vec(hk * dh);
+            let vt = rng.normal_vec(hk * dh);
+            kf.append(&kt);
+            vf.append(&vt);
+            kq.append(&kt, 1.0);
+            vq.append(&vt, 1.0);
+        }
+        (kf, vf, kq, vq)
+    }
+
+    #[test]
+    fn quant_cache_roundtrip() {
+        let (kf, _, kq, _) = fill_caches(5, 2, 16, 8, 0);
+        let mut buf = vec![0.0; 16];
+        let mut scratch = vec![0i8; 16];
+        for s in 0..5 {
+            for h in 0..2 {
+                kq.dequant_head(s, h, &mut buf, &mut scratch);
+                let want = &kf.data[(s * 2 + h) * 16..][..16];
+                prop::assert_close(&buf, want, 0.05).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn decode_quant_tracks_f32_at_8bit() {
+        let (hk, dh, s, nh) = (2usize, 16usize, 12usize, 4usize);
+        let (kf, vf, kq, vq) = fill_caches(s, hk, dh, 8, 1);
+        let mut rng = Rng::new(9);
+        let q = rng.normal_vec(nh * dh);
+        let mut o0 = vec![0.0; nh * dh];
+        let mut o1 = vec![0.0; nh * dh];
+        decode_f32(&q, nh, &kf, &vf, &mut o0, &mut Vec::new());
+        decode_quant(&q, nh, &kq, &vq, &mut o1, &mut Vec::new(),
+                     &mut Vec::new(), &mut Vec::new());
+        prop::assert_close(&o1, &o0, 0.06).unwrap();
+    }
+
+    #[test]
+    fn decode_4bit_reasonable() {
+        let (hk, dh, s, nh) = (2usize, 32usize, 20usize, 2usize);
+        let (kf, vf, kq, vq) = fill_caches(s, hk, dh, 4, 2);
+        let mut rng = Rng::new(10);
+        let q = rng.normal_vec(nh * dh);
+        let mut o0 = vec![0.0; nh * dh];
+        let mut o1 = vec![0.0; nh * dh];
+        decode_f32(&q, nh, &kf, &vf, &mut o0, &mut Vec::new());
+        decode_quant(&q, nh, &kq, &vq, &mut o1, &mut Vec::new(),
+                     &mut Vec::new(), &mut Vec::new());
+        let scale = o0.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        prop::assert_close(&o1, &o0, 0.35 * scale.max(0.1)).unwrap();
+    }
+
+    #[test]
+    fn softmax_normalized_output_in_hull() {
+        // output is a convex combination of values → within [min, max] of V
+        let (hk, dh, s, nh) = (1usize, 8usize, 6usize, 1usize);
+        let (kf, vf, _, _) = fill_caches(s, hk, dh, 8, 3);
+        let mut rng = Rng::new(11);
+        let q = rng.normal_vec(nh * dh);
+        let mut out = vec![0.0; nh * dh];
+        decode_f32(&q, nh, &kf, &vf, &mut out, &mut Vec::new());
+        for i in 0..dh {
+            let col: Vec<f32> = (0..s).map(|t| vf.data[t * dh + i]).collect();
+            let (mn, mx) = col.iter().fold((f32::MAX, f32::MIN),
+                                           |(a, b), &v| (a.min(v), b.max(v)));
+            assert!(out[i] >= mn - 1e-4 && out[i] <= mx + 1e-4);
+        }
+    }
+
+    #[test]
+    fn memory_saving_factor_matches_paper_shape() {
+        // fp16 cache vs int4+scales: paper reports 3.6-3.9× (Table 17)
+        let (hk, dh, s) = (8usize, 128usize, 2048usize);
+        let mut kf = CacheF32::new(hk, dh, s);
+        let mut kq = CacheQuant::new(hk, dh, 128, 4);
+        let mut rng = Rng::new(4);
+        for _ in 0..s {
+            let t = rng.normal_vec(hk * dh);
+            kf.append(&t);
+            kq.append(&t, 0.95);
+        }
+        let factor = kf.bytes() as f64 / kq.bytes() as f64;
+        assert!(factor > 3.0 && factor < 4.0, "saving {factor}");
+    }
+
+    #[test]
+    fn gqa_heads_share_kv() {
+        let (hk, dh, s, nh) = (1usize, 8usize, 4usize, 4usize);
+        let (kf, vf, _, _) = fill_caches(s, hk, dh, 8, 5);
+        let mut rng = Rng::new(12);
+        // identical q for all heads → identical outputs per head
+        let qh = rng.normal_vec(dh);
+        let mut q = Vec::new();
+        for _ in 0..nh {
+            q.extend_from_slice(&qh);
+        }
+        let mut out = vec![0.0; nh * dh];
+        decode_f32(&q, nh, &kf, &vf, &mut out, &mut Vec::new());
+        for h in 1..nh {
+            prop::assert_close(&out[h * dh..(h + 1) * dh], &out[..dh], 1e-5).unwrap();
+        }
+    }
+}

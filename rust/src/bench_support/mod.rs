@@ -1,0 +1,105 @@
+//! Shared plumbing for the `benches/` targets and table-producing CLI
+//! subcommands: artifact discovery, engine/runner construction, spec
+//! shorthands and result recording.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::runner::{CalibStats, QuantSpec, Runner};
+use crate::model::corpus::{load_probes, Corpus, ProbeTask};
+use crate::model::Weights;
+use crate::runtime::Engine;
+
+pub const ARTIFACTS: &str = "artifacts";
+
+/// Default eval budget for table sweeps (windows of max_seq tokens).
+/// Raise with QUAROT_EVAL_WINDOWS for higher-fidelity runs.
+pub fn eval_windows() -> usize {
+    std::env::var("QUAROT_EVAL_WINDOWS").ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12)
+}
+
+pub fn probe_items() -> usize {
+    std::env::var("QUAROT_PROBE_ITEMS").ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40)
+}
+
+pub struct Artifacts {
+    pub dir: String,
+    pub weights: Weights,
+    pub corpus: Corpus,
+    pub probes: Vec<ProbeTask>,
+}
+
+impl Artifacts {
+    pub fn load(model: &str) -> Result<Artifacts> {
+        let dir = format!("{ARTIFACTS}/{model}");
+        if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+            anyhow::bail!(
+                "artifacts for '{model}' not found — run `make artifacts` first");
+        }
+        Ok(Artifacts {
+            weights: Weights::load(&format!("{dir}/weights.bin"))?,
+            corpus: Corpus::load(&format!("{ARTIFACTS}/corpus.bin"))?,
+            probes: load_probes(&format!("{ARTIFACTS}/probes.bin"))?,
+            dir,
+        })
+    }
+
+    /// Fresh engine compiling only the graphs a runner for `spec` needs.
+    pub fn engine_for(&self, spec: &QuantSpec) -> Result<Engine> {
+        let needed: Vec<&str> = vec![
+            spec.variant.prefill_graph(),
+            spec.variant.decode_graph(),
+        ];
+        Engine::load(&self.dir, Some(&needed))
+    }
+
+    pub fn engine_graphs(&self, names: &[&str]) -> Result<Engine> {
+        Engine::load(&self.dir, Some(names))
+    }
+
+    /// Build a runner (engine compiled fresh — PJRT executables are cheap
+    /// to keep but compilation is ~1s per graph, so benches reuse runners).
+    pub fn runner(&self, spec: QuantSpec, stats: Option<&CalibStats>) -> Result<Runner> {
+        let engine = self.engine_for(&spec)?;
+        Runner::new(engine, &self.weights, spec, stats)
+    }
+
+    /// Runner that only compiles the prefill graph — the right tool for the
+    /// ppl/zeroshot table sweeps (decode compilation dominates otherwise).
+    pub fn runner_prefill_only(&self, spec: QuantSpec, stats: Option<&CalibStats>)
+                               -> Result<Runner> {
+        let engine = self.engine_graphs(&[spec.variant.prefill_graph()])?;
+        Runner::new(engine, &self.weights, spec, stats)
+    }
+
+    /// Calibration stats via the collect graph (cached per rotation).
+    pub fn calib(&self, rotated: bool, windows: usize) -> Result<CalibStats> {
+        let graph = if rotated { "collect_quarot" } else { "collect_baseline" };
+        let engine = self.engine_graphs(&[graph])?;
+        Runner::collect_stats(&engine, &self.weights, rotated,
+                              self.corpus.split("calib")?, windows)
+    }
+}
+
+/// Write a rendered table into bench_out/<name>.txt (and echo to stdout).
+pub fn record(name: &str, body: &str) -> Result<()> {
+    std::fs::create_dir_all("bench_out").context("mkdir bench_out")?;
+    std::fs::write(format!("bench_out/{name}.txt"), body)?;
+    println!("{body}");
+    println!("[recorded bench_out/{name}.txt]");
+    Ok(())
+}
+
+/// Which model configs exist locally (some benches sweep all of them).
+pub fn available_models() -> Vec<String> {
+    let mut out = Vec::new();
+    for name in ["tiny-mha", "small-mha", "tiny-gqa", "phi-proxy"] {
+        if std::path::Path::new(&format!("{ARTIFACTS}/{name}/manifest.json")).exists() {
+            out.push(name.to_string());
+        }
+    }
+    out
+}

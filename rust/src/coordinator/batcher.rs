@@ -1,0 +1,375 @@
+//! Continuous-batching generation engine.
+//!
+//! vLLM-style loop specialised to the AOT decode graph's fixed batch width:
+//! requests queue FIFO; free slots take the next request (prefill on the
+//! B=1 graph, K/V quantized into the paged cache = the paper's `Init`),
+//! then every engine tick runs ONE batched decode step over all active
+//! slots (`Decode`), appends the new K/V (`Append`) and samples the next
+//! token.  Finished/failed slots release their pages immediately.
+//!
+//! Metrics per request: time-to-first-token, per-token latency, totals —
+//! the numbers the serving benches and the e2e example report.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::kvcache::{PagePool, SeqCache};
+use super::runner::{DecodeStaging, Runner};
+use super::sampler::{sample, Sampling};
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u16>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+    /// stop generation at this token (e.g. a synthetic EOS); None = run to max
+    pub stop_token: Option<u16>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<u16>,
+    pub ttft_ms: f64,
+    pub decode_ms: f64,
+    pub queued_ms: f64,
+}
+
+struct Slot {
+    req: Request,
+    cache: SeqCache,
+    generated: Vec<u16>,
+    next_token: u16,
+    enqueued: Instant,
+    started: Instant,
+    ttft_ms: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub completed: usize,
+    pub decode_steps: usize,
+    pub decode_tokens: usize,
+    pub total_decode_ms: f64,
+    pub total_prefill_ms: f64,
+    pub peak_cache_bytes: usize,
+    pub peak_cache_fp16_bytes: usize,
+}
+
+impl EngineStats {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.total_decode_ms <= 0.0 {
+            return 0.0;
+        }
+        self.decode_tokens as f64 / (self.total_decode_ms / 1e3)
+    }
+}
+
+/// The generation engine: owns the runner, page pool and slot table.
+pub struct GenerationEngine {
+    pub runner: Runner,
+    pool: PagePool,
+    slots: Vec<Option<Slot>>,
+    queue: VecDeque<(Request, Instant)>,
+    staging: DecodeStaging,
+    rng: Rng,
+    pub stats: EngineStats,
+    tokens_per_page: usize,
+    completions: Vec<Completion>,
+    next_id: u64,
+}
+
+impl GenerationEngine {
+    pub fn new(runner: Runner, pool_pages: usize, seed: u64) -> GenerationEngine {
+        let cfg = runner.cfg.clone();
+        let tokens_per_page = 16usize;
+        let kv_bits = if runner.spec.kv_bits == 16 { 8 } else { runner.spec.kv_bits };
+        let geom = SeqCache::new(&cfg, kv_bits, runner.spec.kv_clip,
+                                 tokens_per_page).geom();
+        let fp = runner.spec.kv_bits == 16;
+        GenerationEngine {
+            staging: DecodeStaging::new(&cfg, fp),
+            pool: PagePool::new(geom.page_bytes(), pool_pages),
+            slots: (0..cfg.decode_batch).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            rng: Rng::new(seed),
+            stats: EngineStats::default(),
+            tokens_per_page,
+            completions: Vec::new(),
+            next_id: 1,
+            runner,
+        }
+    }
+
+    pub fn submit(&mut self, mut req: Request) -> u64 {
+        if req.id == 0 {
+            req.id = self.next_id;
+            self.next_id += 1;
+        }
+        let id = req.id;
+        self.queue.push_back((req, Instant::now()));
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn take_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    fn cache_bits(&self) -> u32 {
+        if self.runner.spec.kv_bits == 16 { 8 } else { self.runner.spec.kv_bits }
+    }
+
+    /// Admit queued requests into free slots (prefill + cache init).
+    fn admit(&mut self) -> Result<()> {
+        for slot_idx in 0..self.slots.len() {
+            if self.slots[slot_idx].is_some() {
+                continue;
+            }
+            let Some((req, enq)) = self.queue.pop_front() else {
+                break;
+            };
+            let t0 = Instant::now();
+            let pre = self.runner.prefill(&req.prompt)?;
+            self.stats.total_prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+
+            let cfg = self.runner.cfg.clone();
+            let fp = self.runner.spec.kv_bits == 16;
+            let mut cache = SeqCache::new(&cfg, self.cache_bits(),
+                                          self.runner.spec.kv_clip,
+                                          self.tokens_per_page);
+            if fp {
+                // fp16-baseline: authoritative values live in the f32 staging
+                let (l_n, b, s, d) = (cfg.n_layers, cfg.decode_batch,
+                                      cfg.cache_seq, cfg.d_kv());
+                for l in 0..l_n {
+                    for t in 0..pre.len {
+                        let src = (l * pre.len + t) * d;
+                        let dst = ((l * b + slot_idx) * s + t) * d;
+                        self.staging.k_f32[dst..dst + d]
+                            .copy_from_slice(&pre.ks[src..src + d]);
+                        self.staging.v_f32[dst..dst + d]
+                            .copy_from_slice(&pre.vs[src..src + d]);
+                    }
+                }
+                cache.set_len(pre.len);
+            } else {
+                cache.init_from_prefill(&mut self.pool, &pre.ks, &pre.vs, pre.len,
+                                        cfg.kv_group)?;
+                // also write the dense staging region for this slot
+                self.load_slot_staging(slot_idx, &cache);
+            }
+
+            let v = cfg.vocab;
+            let last = &pre.logits[(pre.len - 1) * v..pre.len * v];
+            let first_tok = sample(last, req.sampling, &mut self.rng) as u16;
+            let ttft = enq.elapsed().as_secs_f64() * 1e3;
+            self.slots[slot_idx] = Some(Slot {
+                generated: vec![first_tok],
+                next_token: first_tok,
+                enqueued: enq,
+                started: Instant::now(),
+                ttft_ms: ttft,
+                req,
+                cache,
+            });
+        }
+        Ok(())
+    }
+
+    /// Refresh the whole dense staging view of one slot from its pages.
+    fn load_slot_staging(&mut self, slot: usize, cache: &SeqCache) {
+        let cfg = self.runner.cfg.clone();
+        let (l_n, b, s) = (cfg.n_layers, cfg.decode_batch, cfg.cache_seq);
+        let d = cfg.d_kv();
+        let ng = d / cfg.kv_group;
+        let fp = self.runner.spec.kv_bits == 16;
+        let mut codes = vec![0i8; d];
+        let mut scales = vec![0.0f32; ng];
+        let mut zeros = vec![0.0f32; ng];
+        for l in 0..l_n {
+            for t in 0..cache.len {
+                for (want_v, which) in [(false, 0), (true, 1)] {
+                    cache.read_token(&self.pool, l, t, want_v,
+                                     &mut codes, &mut scales, &mut zeros);
+                    let co = ((l * b + slot) * s + t) * d;
+                    let go = ((l * b + slot) * s + t) * ng;
+                    if fp {
+                        let dst = if which == 0 { &mut self.staging.k_f32 }
+                                  else { &mut self.staging.v_f32 };
+                        for gi in 0..ng {
+                            for i in 0..cfg.kv_group {
+                                dst[co + gi * cfg.kv_group + i] =
+                                    codes[gi * cfg.kv_group + i] as f32 * scales[gi]
+                                        + zeros[gi];
+                            }
+                        }
+                    } else {
+                        let (dst_c, dst_s, dst_z) = if which == 0 {
+                            (&mut self.staging.k_codes, &mut self.staging.k_scale,
+                             &mut self.staging.k_zero)
+                        } else {
+                            (&mut self.staging.v_codes, &mut self.staging.v_scale,
+                             &mut self.staging.v_zero)
+                        };
+                        dst_c[co..co + d].copy_from_slice(&codes);
+                        dst_s[go..go + ng].copy_from_slice(&scales);
+                        dst_z[go..go + ng].copy_from_slice(&zeros);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Append one token's K/V into the paged cache AND the staging view.
+    fn append_token(&mut self, slot: usize, k_new: &[f32], v_new: &[f32]) -> Result<()> {
+        let cfg = self.runner.cfg.clone();
+        let (l_n, b, s) = (cfg.n_layers, cfg.decode_batch, cfg.cache_seq);
+        let d = cfg.d_kv();
+        let ng = d / cfg.kv_group;
+        let fp = self.runner.spec.kv_bits == 16;
+        if fp {
+            let sl = self.slots[slot].as_mut().unwrap();
+            let t = sl.cache.len;
+            for l in 0..l_n {
+                let src = (l * b + slot) * d;
+                let dst = ((l * b + slot) * s + t) * d;
+                self.staging.k_f32[dst..dst + d]
+                    .copy_from_slice(&k_new[src..src + d]);
+                self.staging.v_f32[dst..dst + d]
+                    .copy_from_slice(&v_new[src..src + d]);
+            }
+            sl.cache.bump();
+            return Ok(());
+        }
+        let cache_len;
+        {
+            let sl = self.slots[slot].as_mut().unwrap();
+            cache_len = sl.cache.len;
+            for l in 0..l_n {
+                let o = (l * b + slot) * d;
+                sl.cache.append_layer(&mut self.pool, l, &k_new[o..o + d],
+                                      &v_new[o..o + d], cfg.kv_group)?;
+            }
+            sl.cache.bump();
+        }
+        // staging write-through (read back the quantized token so the dense
+        // view is bit-identical to the authoritative pages)
+        let mut codes = vec![0i8; d];
+        let mut scales = vec![0.0f32; ng];
+        let mut zeros = vec![0.0f32; ng];
+        let sl = self.slots[slot].as_ref().unwrap();
+        for l in 0..l_n {
+            for want_v in [false, true] {
+                sl.cache.read_token(&self.pool, l, cache_len, want_v,
+                                    &mut codes, &mut scales, &mut zeros);
+                let co = ((l * b + slot) * s + cache_len) * d;
+                let go = ((l * b + slot) * s + cache_len) * ng;
+                if fp {
+                    let dst = if want_v { &mut self.staging.v_f32 }
+                              else { &mut self.staging.k_f32 };
+                    for gi in 0..ng {
+                        for i in 0..cfg.kv_group {
+                            dst[co + gi * cfg.kv_group + i] =
+                                codes[gi * cfg.kv_group + i] as f32 * scales[gi]
+                                    + zeros[gi];
+                        }
+                    }
+                } else {
+                    let (dst_c, dst_s, dst_z) = if want_v {
+                        (&mut self.staging.v_codes, &mut self.staging.v_scale,
+                         &mut self.staging.v_zero)
+                    } else {
+                        (&mut self.staging.k_codes, &mut self.staging.k_scale,
+                         &mut self.staging.k_zero)
+                    };
+                    dst_c[co..co + d].copy_from_slice(&codes);
+                    dst_s[go..go + ng].copy_from_slice(&scales);
+                    dst_z[go..go + ng].copy_from_slice(&zeros);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One engine tick: admit, batched decode, append, sample, retire.
+    /// Returns number of tokens produced this tick.
+    pub fn tick(&mut self) -> Result<usize> {
+        self.admit()?;
+        let cfg = self.runner.cfg.clone();
+        let b = cfg.decode_batch;
+        let active: Vec<usize> = (0..b).filter(|&i| self.slots[i].is_some()).collect();
+        if active.is_empty() {
+            return Ok(0);
+        }
+        let mut tokens = vec![0i32; b];
+        let mut lens = vec![0i32; b];
+        for &i in &active {
+            let sl = self.slots[i].as_ref().unwrap();
+            tokens[i] = sl.next_token as i32;
+            lens[i] = sl.cache.len as i32;
+        }
+        let t0 = Instant::now();
+        let (logits, k_new, v_new) = self.runner.decode(&tokens, &lens, &self.staging)?;
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.decode_steps += 1;
+        self.stats.decode_tokens += active.len();
+        self.stats.total_decode_ms += step_ms;
+
+        let v = cfg.vocab;
+        let mut produced = 0;
+        for &i in &active {
+            self.append_token(i, &k_new, &v_new)?;
+            let sl = self.slots[i].as_mut().unwrap();
+            let next = sample(&logits[i * v..(i + 1) * v], sl.req.sampling,
+                              &mut self.rng) as u16;
+            sl.generated.push(next);
+            sl.next_token = next;
+            produced += 1;
+            let hit_stop = sl.req.stop_token == Some(next);
+            let full = sl.generated.len() >= sl.req.max_new_tokens
+                || sl.cache.len + 1 >= cfg.cache_seq;
+            if hit_stop || full {
+                let mut slot = self.slots[i].take().unwrap();
+                let decode_ms = slot.started.elapsed().as_secs_f64() * 1e3;
+                slot.cache.free(&mut self.pool);
+                self.stats.completed += 1;
+                self.completions.push(Completion {
+                    id: slot.req.id,
+                    prompt_len: slot.req.prompt.len(),
+                    tokens: slot.generated,
+                    ttft_ms: slot.ttft_ms,
+                    decode_ms,
+                    queued_ms: slot.enqueued.elapsed().as_secs_f64() * 1e3,
+                });
+            }
+        }
+        let cache_bytes: usize = self.slots.iter().flatten().map(|s| s.cache.bytes()).sum();
+        let fp16_bytes: usize = self.slots.iter().flatten()
+            .map(|s| s.cache.fp16_equiv_bytes()).sum();
+        self.stats.peak_cache_bytes = self.stats.peak_cache_bytes.max(cache_bytes);
+        self.stats.peak_cache_fp16_bytes =
+            self.stats.peak_cache_fp16_bytes.max(fp16_bytes);
+        Ok(produced)
+    }
+
+    /// Drive until every submitted request completes.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        while self.pending() > 0 {
+            self.tick()?;
+        }
+        Ok(self.take_completions())
+    }
+
+    pub fn pool_in_use(&self) -> usize {
+        self.pool.in_use()
+    }
+}

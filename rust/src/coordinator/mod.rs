@@ -1,0 +1,16 @@
+//! The serving coordinator (Layer 3 proper): continuous batching over the
+//! AOT-compiled prefill/decode graphs with a paged, *quantized* KV cache —
+//! the paper's inference system re-staged as a vLLM-style runtime.
+//!
+//! * [`kvcache`]  — page-pool allocator + per-sequence packed caches
+//!                  (the 3.9× memory story of Fig. 4/Table 17 lives here).
+//! * [`runner`]   — typed façade over the engine: prefill / decode steps
+//!                  with the weight set of a [`runner::QuantSpec`].
+//! * [`sampler`]  — greedy / temperature / top-k token sampling.
+//! * [`batcher`]  — request queue, slot assignment, the decode loop, and
+//!                  per-request latency/throughput metrics.
+
+pub mod batcher;
+pub mod kvcache;
+pub mod runner;
+pub mod sampler;

@@ -1,0 +1,499 @@
+//! Typed façade over the PJRT engine: assembles graph argument lists from a
+//! quantization spec + the weight archive, and exposes model-level
+//! `prefill` / `decode` / `collect` calls the batcher and the eval harness
+//! share.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{ModelConfig, Weights};
+use crate::quant::{self, sym_levels};
+use crate::runtime::{Engine, HostTensor};
+use crate::tensor::Mat;
+
+/// Which graph family + weight prefix to serve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// unrotated graph + `base.*` weights (FP16 baseline, SmoothQuant, QUIK)
+    Baseline,
+    /// rotated graph + `rot.*` weights (QuaRot)
+    Quarot,
+    /// rotated graph, bf16 online Hadamards (Table 10)
+    QuarotH16,
+    /// rotated graph + `rnd.*` random-orthogonal weights (Table 8)
+    QuarotRandom,
+}
+
+impl Variant {
+    pub fn weight_prefix(self) -> &'static str {
+        match self {
+            Variant::Baseline => "base.",
+            Variant::Quarot | Variant::QuarotH16 => "rot.",
+            Variant::QuarotRandom => "rnd.",
+        }
+    }
+
+    pub fn prefill_graph(self) -> &'static str {
+        match self {
+            Variant::Baseline => "baseline_prefill",
+            Variant::Quarot | Variant::QuarotRandom => "quarot_prefill",
+            Variant::QuarotH16 => "quarot_prefill_h16",
+        }
+    }
+
+    pub fn decode_graph(self) -> &'static str {
+        match self {
+            Variant::Baseline => "baseline_decode",
+            _ => "quarot_decode",
+        }
+    }
+
+    pub fn is_rotated(self) -> bool {
+        !matches!(self, Variant::Baseline)
+    }
+}
+
+/// Weight-side quantization applied before pinning weights to the engine.
+#[derive(Clone, Debug)]
+pub enum WeightQuant {
+    None,
+    Rtn(quant::rtn::WeightQuantCfg),
+    /// GPTQ needs per-site Hessians (from [`Runner::collect_stats`]).
+    Gptq(quant::gptq::GptqCfg, CalibStats),
+}
+
+/// Full serving/eval specification.
+#[derive(Clone, Debug)]
+pub struct QuantSpec {
+    pub variant: Variant,
+    pub act_bits: u32,  // 0 → FP16 activations
+    pub act_clip: f32,
+    /// key-cache bits; 16 → f32 cache (baseline decode graph / quant off)
+    pub kv_bits: u32,
+    /// value-cache bits; defaults to kv_bits (Table 6 sweeps them apart)
+    pub kv_bits_v: u32,
+    pub kv_clip: f32,
+    pub weights: WeightQuant,
+    /// QUIK-style outlier retention count per site (baseline graph only).
+    pub outliers: usize,
+    /// SmoothQuant α-migration before quantization (baseline graph only).
+    pub smooth: bool,
+}
+
+impl QuantSpec {
+    pub fn fp16_baseline() -> Self {
+        QuantSpec {
+            variant: Variant::Baseline, act_bits: 0, act_clip: 1.0,
+            kv_bits: 16, kv_bits_v: 16, kv_clip: 1.0, weights: WeightQuant::None,
+            outliers: 0, smooth: false,
+        }
+    }
+
+    pub fn quarot(bits: u32) -> Self {
+        let kv = bits.min(8);
+        QuantSpec {
+            variant: Variant::Quarot, act_bits: bits, act_clip: 0.9,
+            kv_bits: kv, kv_bits_v: kv, kv_clip: 0.95,
+            weights: WeightQuant::Rtn(quant::rtn::WeightQuantCfg::rtn(bits)),
+            outliers: 0, smooth: false,
+        }
+    }
+
+    pub fn act_levels(&self) -> f32 {
+        if self.act_bits == 0 { 0.0 } else { sym_levels(self.act_bits) as f32 }
+    }
+
+    fn qmax(bits: u32) -> f32 {
+        if bits >= 16 { 0.0 } else { ((1u32 << bits) - 1) as f32 }
+    }
+
+    pub fn k_qmax(&self) -> f32 {
+        Self::qmax(self.kv_bits)
+    }
+
+    pub fn v_qmax(&self) -> f32 {
+        Self::qmax(self.kv_bits_v)
+    }
+}
+
+/// Calibration statistics from the collect graphs: per-layer, per-site
+/// Hessians (site dims) and channel amax.
+#[derive(Clone, Debug, Default)]
+pub struct CalibStats {
+    /// [site][layer] → Hessian (d_site × d_site)
+    pub hessians: Vec<Vec<Mat>>,
+    /// [site][layer] → channel amax
+    pub amax: Vec<Vec<Vec<f32>>>,
+}
+
+/// Site index → which weight matrices it feeds.
+pub const SITE_WEIGHTS: [&[&str]; 4] =
+    [&["wq", "wk", "wv"], &["wo"], &["wup", "wgate"], &["wdown"]];
+pub const SITE_MASKS: [&str; 4] = ["mask_attn", "mask_out", "mask_ffn", "mask_down"];
+
+pub struct Runner {
+    pub engine: Engine,
+    pub cfg: ModelConfig,
+    pub spec: QuantSpec,
+    prefill_graph: String,
+    decode_graph: String,
+}
+
+impl Runner {
+    /// Build a runner: quantize the weights per `spec`, pin them (+ masks)
+    /// on the prefill/decode graphs.
+    pub fn new(mut engine: Engine, weights: &Weights, spec: QuantSpec,
+               stats: Option<&CalibStats>) -> Result<Runner> {
+        let cfg = engine.manifest.model.clone();
+        let prepared = prepare_weights(&cfg, &engine.manifest.weight_order,
+                                       weights, &spec, stats)?;
+        let masks = build_masks(&cfg, &spec, stats)?;
+        let prefill_graph = spec.variant.prefill_graph().to_string();
+        let decode_graph = spec.variant.decode_graph().to_string();
+        let mut prefill_args = Vec::new();
+        if spec.variant == Variant::Baseline {
+            prefill_args.extend(masks.iter().cloned());
+        }
+        prefill_args.extend(prepared.iter().cloned());
+        if engine.has_graph(&prefill_graph) {
+            engine.set_weights(&prefill_graph, &prefill_args)?;
+        }
+        if engine.has_graph(&decode_graph) {
+            engine.set_weights(&decode_graph, &prepared)?;
+        }
+        Ok(Runner { engine, cfg, spec, prefill_graph, decode_graph })
+    }
+
+    /// Prefill `tokens` (padded to max_seq internally).  Returns
+    /// (logits (S, V) for the real length, k, v (L, S_real, d_kv)).
+    pub fn prefill(&self, tokens: &[u16]) -> Result<Prefilled> {
+        let (cfg, s_max) = (&self.cfg, self.cfg.max_seq);
+        let s_real = tokens.len();
+        if s_real == 0 || s_real > s_max {
+            bail!("prefill length {s_real} outside 1..={s_max}");
+        }
+        let mut padded = vec![0i32; s_max];
+        for (p, &t) in padded.iter_mut().zip(tokens) {
+            *p = t as i32;
+        }
+        let dynamic = vec![
+            HostTensor::I32(padded),
+            HostTensor::F32(vec![self.spec.act_levels()]),
+            HostTensor::F32(vec![self.spec.act_clip]),
+            HostTensor::F32(vec![self.spec.k_qmax()]),
+            HostTensor::F32(vec![self.spec.v_qmax()]),
+            HostTensor::F32(vec![self.spec.kv_clip]),
+        ];
+        let out = self.engine.run(&self.prefill_graph, &dynamic)?;
+        let (v, d_kv, l) = (cfg.vocab, cfg.d_kv(), cfg.n_layers);
+        let logits_full = out[0].f32();
+        let ks_full = out[1].f32();
+        let vs_full = out[2].f32();
+        let mut logits = Vec::with_capacity(s_real * v);
+        logits.extend_from_slice(&logits_full[..s_real * v]);
+        // k/v layout (L, 1, S, hk, dh) → keep first s_real tokens per layer
+        let mut ks = Vec::with_capacity(l * s_real * d_kv);
+        let mut vs = Vec::with_capacity(l * s_real * d_kv);
+        for li in 0..l {
+            let o = li * s_max * d_kv;
+            ks.extend_from_slice(&ks_full[o..o + s_real * d_kv]);
+            vs.extend_from_slice(&vs_full[o..o + s_real * d_kv]);
+        }
+        Ok(Prefilled { logits, ks, vs, len: s_real })
+    }
+
+    /// One batched decode step.  `staging` carries the dense cache views.
+    /// Returns (logits (B, V), k_new, v_new (L, B, d_kv)).
+    pub fn decode(&self, tokens: &[i32], cur_lens: &[i32], staging: &DecodeStaging)
+                  -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let dynamic: Vec<HostTensor> = if self.spec.kv_bits == 16 {
+            vec![
+                HostTensor::I32(tokens.to_vec()),
+                HostTensor::I32(cur_lens.to_vec()),
+                HostTensor::F32(staging.k_f32.clone()),
+                HostTensor::F32(staging.v_f32.clone()),
+                HostTensor::F32(vec![self.spec.act_levels()]),
+                HostTensor::F32(vec![self.spec.act_clip]),
+            ]
+        } else {
+            vec![
+                HostTensor::I32(tokens.to_vec()),
+                HostTensor::I32(cur_lens.to_vec()),
+                HostTensor::I8(staging.k_codes.clone()),
+                HostTensor::F32(staging.k_scale.clone()),
+                HostTensor::F32(staging.k_zero.clone()),
+                HostTensor::I8(staging.v_codes.clone()),
+                HostTensor::F32(staging.v_scale.clone()),
+                HostTensor::F32(staging.v_zero.clone()),
+                HostTensor::F32(vec![self.spec.act_levels()]),
+                HostTensor::F32(vec![self.spec.act_clip]),
+            ]
+        };
+        let out = self.engine.run(&self.decode_graph, &dynamic)?;
+        Ok((out[0].f32().to_vec(), out[1].f32().to_vec(), out[2].f32().to_vec()))
+    }
+
+    /// Run the matching collect graph over calibration windows and
+    /// accumulate Hessians + amax (GPTQ / SmoothQuant / QUIK inputs).
+    pub fn collect_stats(engine: &Engine, weights: &Weights, rotated: bool,
+                         calib: &[u16], windows: usize) -> Result<CalibStats> {
+        let cfg = engine.manifest.model.clone();
+        let graph = if rotated { "collect_quarot" } else { "collect_baseline" };
+        let prefix = if rotated { "rot." } else { "base." };
+        let wlist = ordered_weights(&engine.manifest.weight_order, weights, prefix)?;
+        let s = cfg.max_seq;
+        let site_dims = [cfg.d_model, cfg.d_attn(), cfg.d_model, cfg.d_ff];
+        let mut stats = CalibStats {
+            hessians: site_dims.iter()
+                .map(|&d| (0..cfg.n_layers).map(|_| Mat::zeros(d, d)).collect())
+                .collect(),
+            amax: site_dims.iter()
+                .map(|&d| vec![vec![0.0f32; d]; cfg.n_layers])
+                .collect(),
+        };
+        let n_windows = windows.min(calib.len() / s);
+        for w in 0..n_windows {
+            let toks: Vec<i32> = calib[w * s..(w + 1) * s].iter()
+                .map(|&t| t as i32).collect();
+            let mut args = vec![HostTensor::I32(toks)];
+            args.extend(wlist.iter().cloned());
+            let out = engine.run(graph, &args)?;
+            for site in 0..4 {
+                let h = out[site * 2].f32();
+                let a = out[site * 2 + 1].f32();
+                let d = site_dims[site];
+                for l in 0..cfg.n_layers {
+                    let hm = &mut stats.hessians[site][l];
+                    for (dst, src) in hm.data.iter_mut()
+                        .zip(&h[l * d * d..(l + 1) * d * d]) {
+                        *dst += src;
+                    }
+                    for (dst, src) in stats.amax[site][l].iter_mut()
+                        .zip(&a[l * d..(l + 1) * d]) {
+                        *dst = dst.max(*src);
+                    }
+                }
+            }
+        }
+        Ok(stats)
+    }
+}
+
+pub struct Prefilled {
+    pub logits: Vec<f32>,
+    pub ks: Vec<f32>,
+    pub vs: Vec<f32>,
+    pub len: usize,
+}
+
+/// Dense staging buffers for the decode graph's cache inputs.
+pub struct DecodeStaging {
+    pub k_codes: Vec<i8>,
+    pub k_scale: Vec<f32>,
+    pub k_zero: Vec<f32>,
+    pub v_codes: Vec<i8>,
+    pub v_scale: Vec<f32>,
+    pub v_zero: Vec<f32>,
+    /// fp16-baseline path (kv_bits == 16): raw f32 caches.
+    pub k_f32: Vec<f32>,
+    pub v_f32: Vec<f32>,
+}
+
+impl DecodeStaging {
+    pub fn new(cfg: &ModelConfig, fp: bool) -> DecodeStaging {
+        let (l, b, s) = (cfg.n_layers, cfg.decode_batch, cfg.cache_seq);
+        let d = cfg.d_kv();
+        let ng = d / cfg.kv_group;
+        if fp {
+            DecodeStaging {
+                k_codes: vec![], k_scale: vec![], k_zero: vec![],
+                v_codes: vec![], v_scale: vec![], v_zero: vec![],
+                k_f32: vec![0.0; l * b * s * d], v_f32: vec![0.0; l * b * s * d],
+            }
+        } else {
+            DecodeStaging {
+                k_codes: vec![0; l * b * s * d],
+                k_scale: vec![0.0; l * b * s * ng],
+                k_zero: vec![0.0; l * b * s * ng],
+                v_codes: vec![0; l * b * s * d],
+                v_scale: vec![0.0; l * b * s * ng],
+                v_zero: vec![0.0; l * b * s * ng],
+                k_f32: vec![], v_f32: vec![],
+            }
+        }
+    }
+}
+
+/// Pull the named weights out of the archive in manifest order.
+fn ordered_weights(order: &[String], weights: &Weights, prefix: &str)
+                   -> Result<Vec<HostTensor>> {
+    order.iter()
+        .map(|name| {
+            let t = weights.get(&format!("{prefix}{name}"))?;
+            Ok(HostTensor::F32(t.as_f32()))
+        })
+        .collect()
+}
+
+/// Apply the spec's weight-side quantization (RTN/GPTQ ± SmoothQuant/QUIK)
+/// and return graph-ready tensors in manifest order.
+pub fn prepare_weights(cfg: &ModelConfig, order: &[String], weights: &Weights,
+                       spec: &QuantSpec, stats: Option<&CalibStats>)
+                       -> Result<Vec<HostTensor>> {
+    let prefix = spec.variant.weight_prefix();
+    // load all layer weights into Mats per layer
+    let mut mats: std::collections::BTreeMap<String, Vec<Mat>> = Default::default();
+    let mut vecs: std::collections::BTreeMap<String, Vec<f32>> = Default::default();
+    for name in order {
+        let t = weights.get(&format!("{prefix}{name}"))?;
+        match t.shape.len() {
+            3 => {
+                let (l, r, c) = (t.shape[0], t.shape[1], t.shape[2]);
+                let data = t.as_f32();
+                mats.insert(name.clone(), (0..l).map(|li| {
+                    Mat::from_vec(r, c, data[li * r * c..(li + 1) * r * c].to_vec())
+                }).collect());
+            }
+            _ => {
+                vecs.insert(name.clone(), t.as_f32());
+            }
+        }
+    }
+
+    // SmoothQuant migration (baseline only): fold per-channel scales
+    if spec.smooth {
+        let stats = stats.context("SmoothQuant requires calibration stats")?;
+        apply_smoothquant(cfg, &mut mats, &mut vecs, stats);
+    }
+
+    // weight quantization (embed/lm_head stay f32, like the paper)
+    match &spec.weights {
+        WeightQuant::None => {}
+        WeightQuant::Rtn(qcfg) => {
+            for (name, layers) in mats.iter_mut() {
+                if name == "embed" || name == "lm_head" {
+                    continue;
+                }
+                for m in layers.iter_mut() {
+                    if spec.outliers > 0 {
+                        // QUIK: keep calibrated outlier input rows exact
+                        let site = site_of_weight(name);
+                        let stats = stats.context("QUIK requires calib stats")?;
+                        // layer index unknown here; approximate with max over layers
+                        let mut amax = vec![0.0f32; m.rows];
+                        for l in 0..cfg.n_layers {
+                            for (a, b) in amax.iter_mut()
+                                .zip(&stats.amax[site][l]) {
+                                *a = a.max(*b);
+                            }
+                        }
+                        let outl = quant::outlier::top_k_outliers(&amax, spec.outliers);
+                        quant::outlier::fake_quant_weight_with_outliers(m, &outl, qcfg);
+                    } else {
+                        quant::rtn::fake_quant_weight(m, qcfg);
+                    }
+                }
+            }
+        }
+        WeightQuant::Gptq(gcfg, stats) => {
+            for (name, layers) in mats.iter_mut() {
+                if name == "embed" || name == "lm_head" {
+                    continue;
+                }
+                let site = site_of_weight(name);
+                for (l, m) in layers.iter_mut().enumerate() {
+                    quant::gptq::gptq_quantize(m, &stats.hessians[site][l], gcfg);
+                }
+            }
+        }
+    }
+
+    // reassemble in manifest order
+    order.iter().map(|name| {
+        if let Some(layers) = mats.get(name) {
+            let mut flat = Vec::new();
+            for m in layers {
+                flat.extend_from_slice(&m.data);
+            }
+            Ok(HostTensor::F32(flat))
+        } else {
+            Ok(HostTensor::F32(vecs[name].clone()))
+        }
+    }).collect()
+}
+
+fn site_of_weight(name: &str) -> usize {
+    match name {
+        "wq" | "wk" | "wv" => 0,
+        "wo" => 1,
+        "wup" | "wgate" => 2,
+        "wdown" => 3,
+        _ => panic!("no site for {name}"),
+    }
+}
+
+fn apply_smoothquant(cfg: &ModelConfig,
+                     mats: &mut std::collections::BTreeMap<String, Vec<Mat>>,
+                     vecs: &mut std::collections::BTreeMap<String, Vec<f32>>,
+                     stats: &CalibStats) {
+    let scfg = quant::smooth::SmoothCfg::default();
+    for l in 0..cfg.n_layers {
+        // site 0: attn inputs ← fold 1/s into attn_norm gamma
+        let s0 = quant::smooth::smooth_scales(&stats.amax[0][l],
+                                              &mats["wq"][l], &scfg);
+        for name in ["wq", "wk", "wv"] {
+            quant::smooth::apply_to_weight(&mut mats.get_mut(name).unwrap()[l], &s0);
+        }
+        let d = cfg.d_model;
+        quant::smooth::fold_into_producer(
+            &mut vecs.get_mut("attn_norm").unwrap()[l * d..(l + 1) * d], &s0);
+        // site 2: ffn inputs ← fold into ffn_norm
+        let s2 = quant::smooth::smooth_scales(&stats.amax[2][l],
+                                              &mats["wup"][l], &scfg);
+        for name in ["wup", "wgate"] {
+            quant::smooth::apply_to_weight(&mut mats.get_mut(name).unwrap()[l], &s2);
+        }
+        quant::smooth::fold_into_producer(
+            &mut vecs.get_mut("ffn_norm").unwrap()[l * d..(l + 1) * d], &s2);
+        // site 3: down-proj input ← fold 1/s into wup's output columns
+        let s3 = quant::smooth::smooth_scales(&stats.amax[3][l],
+                                              &mats["wdown"][l], &scfg);
+        quant::smooth::apply_to_weight(&mut mats.get_mut("wdown").unwrap()[l], &s3);
+        let wup = &mut mats.get_mut("wup").unwrap()[l];
+        let inv: Vec<f32> = s3.iter().map(|s| 1.0 / s).collect();
+        wup.scale_cols(&inv);
+        // site 1: out-proj input ← fold 1/s into wv's output columns.
+        // Only exact for MHA: with GQA one wv column feeds several q-heads,
+        // so per-channel migration is ill-defined there — skip (SmoothQuant
+        // never targeted GQA models anyway).
+        if cfg.n_heads == cfg.n_kv_heads {
+            let s1 = quant::smooth::smooth_scales(&stats.amax[1][l],
+                                                  &mats["wo"][l], &scfg);
+            quant::smooth::apply_to_weight(&mut mats.get_mut("wo").unwrap()[l], &s1);
+            let wv = &mut mats.get_mut("wv").unwrap()[l];
+            let inv1: Vec<f32> = s1.iter().map(|s| 1.0 / s).collect();
+            wv.scale_cols(&inv1);
+        }
+    }
+}
+
+/// Build the QUIK outlier masks for the baseline graph (zeroes if unused).
+pub fn build_masks(cfg: &ModelConfig, spec: &QuantSpec, stats: Option<&CalibStats>)
+                   -> Result<Vec<HostTensor>> {
+    let dims = [cfg.d_model, cfg.d_attn(), cfg.d_model, cfg.d_ff];
+    let mut out = Vec::with_capacity(4);
+    for (site, &d) in dims.iter().enumerate() {
+        let mut mask = vec![0.0f32; cfg.n_layers * d];
+        if spec.outliers > 0 {
+            let stats = stats.context("outlier masks require calib stats")?;
+            for l in 0..cfg.n_layers {
+                let idx = quant::outlier::top_k_outliers(&stats.amax[site][l],
+                                                         spec.outliers);
+                for i in idx {
+                    mask[l * d + i] = 1.0;
+                }
+            }
+        }
+        out.push(HostTensor::F32(mask));
+    }
+    Ok(out)
+}

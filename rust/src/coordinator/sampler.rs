@@ -1,0 +1,85 @@
+//! Token sampling over the decode logits: greedy, temperature, top-k.
+
+use crate::util::prng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampling {
+    Greedy,
+    /// temperature > 0; top_k == 0 → full distribution
+    TopK { temperature: f32, k: usize },
+}
+
+pub fn sample(logits: &[f32], mode: Sampling, rng: &mut Rng) -> usize {
+    match mode {
+        Sampling::Greedy => argmax(logits),
+        Sampling::TopK { temperature, k } => {
+            let t = temperature.max(1e-3);
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            if k > 0 && k < logits.len() {
+                idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+                idx.truncate(k);
+            }
+            let mx = idx.iter().map(|&i| logits[i]).fold(f32::MIN, f32::max);
+            let weights: Vec<f32> = idx.iter()
+                .map(|&i| ((logits[i] - mx) / t).exp())
+                .collect();
+            idx[rng.categorical(&weights)]
+        }
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// log-softmax value of one index (used by the eval harness).
+pub fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
+    let mx = logits.iter().fold(f32::MIN, |m, &v| m.max(v)) as f64;
+    let lse: f64 = logits.iter().map(|&v| ((v as f64) - mx).exp()).sum::<f64>().ln() + mx;
+    logits[idx] as f64 - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let l = [0.1f32, 3.0, -1.0, 2.9];
+        assert_eq!(sample(&l, Sampling::Greedy, &mut Rng::new(0)), 1);
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let l = [0.0f32, 10.0, 9.5, -5.0];
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let s = sample(&l, Sampling::TopK { temperature: 1.0, k: 2 }, &mut rng);
+            assert!(s == 1 || s == 2);
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let l = [0.0f32, 1.0, 0.8];
+        let mut rng = Rng::new(2);
+        let hits = (0..200)
+            .filter(|_| sample(&l, Sampling::TopK { temperature: 0.05, k: 0 },
+                               &mut rng) == 1)
+            .count();
+        assert!(hits > 190);
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let l = [1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_softmax_at(&l, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,130 @@
+//! Evaluation harness: perplexity (the WikiText-2 stand-in), the six
+//! zero-shot probe tasks (Table 2 stand-in) and activation outlier
+//! statistics (Fig. 1).
+
+use anyhow::Result;
+
+use crate::coordinator::runner::Runner;
+use crate::coordinator::sampler::log_softmax_at;
+use crate::model::corpus::{ProbeTask};
+
+/// Perplexity of `tokens` under the runner's model, measured in windows of
+/// `max_seq` exactly like python/compile/train.evaluate_ppl.
+/// `max_windows` caps the cost for table sweeps.
+pub fn perplexity(runner: &Runner, tokens: &[u16], max_windows: usize) -> Result<f64> {
+    let s = runner.cfg.max_seq;
+    let v = runner.cfg.vocab;
+    let n = ((tokens.len() - 1) / s).min(max_windows);
+    assert!(n > 0, "not enough eval tokens");
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for w in 0..n {
+        let window = &tokens[w * s..w * s + s + 1];
+        let pre = runner.prefill(&window[..s])?;
+        for t in 0..s {
+            let logits = &pre.logits[t * v..(t + 1) * v];
+            nll -= log_softmax_at(logits, window[t + 1] as usize);
+            count += 1;
+        }
+    }
+    Ok((nll / count as f64).exp())
+}
+
+/// Score of one continuation: total logprob of `cont` given `ctx`.
+fn continuation_logprob(runner: &Runner, ctx: &[u16], cont: &[u16]) -> Result<f64> {
+    let v = runner.cfg.vocab;
+    let mut seq = ctx.to_vec();
+    seq.extend_from_slice(cont);
+    let pre = runner.prefill(&seq)?;
+    let mut lp = 0.0f64;
+    for (i, &tok) in cont.iter().enumerate() {
+        let pos = ctx.len() + i - 1; // logits at pos predict token pos+1
+        let logits = &pre.logits[pos * v..(pos + 1) * v];
+        lp += log_softmax_at(logits, tok as usize);
+    }
+    Ok(lp)
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskScore {
+    pub name: String,
+    pub accuracy: f64,
+    pub items: usize,
+}
+
+/// Accuracy on one probe task (multiple-choice ranking, or exact next-token
+/// for the LAMBADA-style task).
+pub fn score_task(runner: &Runner, task: &ProbeTask, max_items: usize)
+                  -> Result<TaskScore> {
+    let v = runner.cfg.vocab;
+    let mut correct = 0usize;
+    let items = task.items.len().min(max_items);
+    for item in task.items.iter().take(items) {
+        if item.choices.is_empty() {
+            let pre = runner.prefill(&item.ctx)?;
+            let pos = item.ctx.len() - 1;
+            let logits = &pre.logits[pos * v..(pos + 1) * v];
+            let am = crate::coordinator::sampler::argmax(logits);
+            if am == item.gold_token as usize {
+                correct += 1;
+            }
+        } else {
+            let mut best = (f64::MIN, 0usize);
+            for (ci, cont) in item.choices.iter().enumerate() {
+                let lp = continuation_logprob(runner, &item.ctx, cont)?;
+                if lp > best.0 {
+                    best = (lp, ci);
+                }
+            }
+            if best.1 == item.gold {
+                correct += 1;
+            }
+        }
+    }
+    Ok(TaskScore {
+        name: task.name.clone(),
+        accuracy: correct as f64 / items as f64,
+        items,
+    })
+}
+
+/// Run all probe tasks; returns scores plus the average (the paper's Avg).
+pub fn score_all(runner: &Runner, tasks: &[ProbeTask], max_items: usize)
+                 -> Result<(Vec<TaskScore>, f64)> {
+    let scores: Vec<TaskScore> = tasks.iter()
+        .map(|t| score_task(runner, t, max_items))
+        .collect::<Result<_>>()?;
+    let avg = scores.iter().map(|s| s.accuracy).sum::<f64>() / scores.len() as f64;
+    Ok((scores, avg))
+}
+
+/// Fig. 1 statistics from calibration amax: per-layer max/median channel
+/// ratio and a flatness summary, per site.
+#[derive(Clone, Debug)]
+pub struct OutlierStats {
+    pub site: usize,
+    pub layer: usize,
+    pub max_channel: f32,
+    pub median_channel: f32,
+    pub ratio: f32,
+}
+
+pub fn outlier_stats(amax: &[Vec<Vec<f32>>]) -> Vec<OutlierStats> {
+    let mut out = Vec::new();
+    for (site, layers) in amax.iter().enumerate() {
+        for (layer, ch) in layers.iter().enumerate() {
+            let mut sorted = ch.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = sorted[sorted.len() / 2];
+            let mx = *sorted.last().unwrap();
+            out.push(OutlierStats {
+                site,
+                layer,
+                max_channel: mx,
+                median_channel: median,
+                ratio: mx / median.max(1e-8),
+            });
+        }
+    }
+    out
+}

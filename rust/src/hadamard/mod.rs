@@ -1,0 +1,289 @@
+//! Fast Walsh–Hadamard transforms — the rust twin of the Pallas kernel
+//! (python/compile/kernels/hadamard.py) and of python's hadamard_utils.
+//!
+//! Conventions match the python side exactly (tested cross-language through
+//! the weights.bin round-trip): orthonormal transforms, Kronecker
+//! construction `H_d = H_{2^n} ⊗ H_m` with m ∈ {1, 12, 20} (Paley tables),
+//! randomized variant `Q = H · diag(s)`.
+
+use crate::tensor::Mat;
+use crate::util::prng::Rng;
+
+/// Paley-I Hadamard matrix of order q+1 (q prime, q ≡ 3 mod 4), entries ±1.
+fn paley(q: usize) -> Mat {
+    assert_eq!(q % 4, 3);
+    let residues: std::collections::HashSet<usize> =
+        (1..q).map(|i| (i * i) % q).collect();
+    let chi = |a: i64| -> f32 {
+        let a = a.rem_euclid(q as i64) as usize;
+        if a == 0 {
+            0.0
+        } else if residues.contains(&a) {
+            1.0
+        } else {
+            -1.0
+        }
+    };
+    let n = q + 1;
+    let mut h = Mat::zeros(n, n);
+    for v in h.data.iter_mut() {
+        *v = 1.0;
+    }
+    for i in 0..q {
+        for j in 0..q {
+            h[(i + 1, j + 1)] = if i == j { -1.0 } else { chi(j as i64 - i as i64) };
+        }
+    }
+    h
+}
+
+fn known_table(m: usize) -> Option<Mat> {
+    match m {
+        1 => Some(Mat::eye(1)),
+        12 => Some(paley(11)),
+        20 => Some(paley(19)),
+        _ => None,
+    }
+}
+
+/// Split d = 2^n · m with m in the known table; None if impossible.
+pub fn decompose_dim(d: usize) -> Option<(usize, usize)> {
+    for m in [20usize, 12, 1] {
+        if d % m == 0 {
+            let p = d / m;
+            if p.is_power_of_two() {
+                return Some((p, m));
+            }
+        }
+    }
+    None
+}
+
+/// In-place orthonormal WHT of a pow-2-length vector.
+pub fn wht_pow2(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let (a, b) = (x[j], x[j + h]);
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    for v in x {
+        *v *= norm;
+    }
+}
+
+/// Orthonormal x ← x @ H_d for general d = 2^n·m (Kronecker construction).
+///
+/// Index convention matches python ref.wht_rows: i = i_pow2 * m + i_m.
+pub fn wht(x: &mut [f32]) {
+    let d = x.len();
+    let (p, m) = decompose_dim(d).unwrap_or_else(|| panic!("no Hadamard for {d}"));
+    if m > 1 {
+        let hm = known_table(m).unwrap();
+        let norm = 1.0 / (m as f32).sqrt();
+        let mut buf = vec![0.0f32; m];
+        for blk in x.chunks_exact_mut(m) {
+            for (j, b) in buf.iter_mut().enumerate() {
+                // row-vector times hm: out[j] = Σ_i blk[i] hm[i][j]
+                *b = (0..m).map(|i| blk[i] * hm[(i, j)]).sum::<f32>() * norm;
+            }
+            blk.copy_from_slice(&buf);
+        }
+    }
+    // butterfly over the pow-2 axis with lane stride m
+    let mut h = 1;
+    while h < p {
+        let stride = h * m;
+        let mut i = 0;
+        while i < d {
+            for j in i..i + stride {
+                let (a, b) = (x[j], x[j + stride]);
+                x[j] = a + b;
+                x[j + stride] = a - b;
+            }
+            i += 2 * stride;
+        }
+        h *= 2;
+    }
+    let norm = 1.0 / (p as f32).sqrt();
+    for v in x {
+        *v *= norm;
+    }
+}
+
+/// Apply WHT to every row of a matrix.
+pub fn wht_rows(m: &mut Mat) {
+    let cols = m.cols;
+    for r in 0..m.rows {
+        let _ = cols;
+        wht(m.row_mut(r));
+    }
+}
+
+/// Dense orthonormal Hadamard matrix (oracle / fusion path).
+pub fn hadamard_matrix(d: usize) -> Mat {
+    let mut h = Mat::eye(d);
+    wht_rows(&mut h);
+    // rows of I transformed give Hᵀ; H may be asymmetric for Kronecker m>1.
+    // wht computes x@H, so row e_i ↦ H[i,:]… e_i @ H = H[i,:]: correct.
+    h
+}
+
+/// Randomized Hadamard Q = H · diag(s) with deterministic ±1 signs.
+pub fn randomized_hadamard(d: usize, seed: u64) -> Mat {
+    let mut q = hadamard_matrix(d);
+    let signs = Rng::new(seed).signs(d);
+    q.scale_cols(&signs);
+    q
+}
+
+/// Online randomized transform x ← x @ (H diag(s)): fast WHT then signs.
+pub fn randomized_wht(x: &mut [f32], signs: &[f32]) {
+    wht(x);
+    for (v, s) in x.iter_mut().zip(signs) {
+        *v *= s;
+    }
+}
+
+/// Head-wise transform: x (…, n_heads·d_head) ← x · (I ⊗ H_dh).
+pub fn had_headdim(x: &mut [f32], d_head: usize) {
+    for h in x.chunks_exact_mut(d_head) {
+        wht(h);
+    }
+}
+
+/// Hadamard-heads (paper Stage 1c): x ← x · (H_nh ⊗ I_dh), mixing heads.
+pub fn had_heads(x: &mut [f32], n_heads: usize) {
+    let d = x.len();
+    let dh = d / n_heads;
+    let mut lane = vec![0.0f32; n_heads];
+    for j in 0..dh {
+        for h in 0..n_heads {
+            lane[h] = x[h * dh + j];
+        }
+        wht(&mut lane);
+        for h in 0..n_heads {
+            x[h * dh + j] = lane[h];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn decompose() {
+        assert_eq!(decompose_dim(256), Some((256, 1)));
+        assert_eq!(decompose_dim(1536), Some((128, 12)));
+        assert_eq!(decompose_dim(320), Some((16, 20)));
+        assert_eq!(decompose_dim(24), Some((2, 12)));
+        assert_eq!(decompose_dim(6), None);
+    }
+
+    #[test]
+    fn hadamard_orthonormal() {
+        for d in [2usize, 8, 12, 20, 24, 64, 256, 1536] {
+            let h = hadamard_matrix(d);
+            let prod = h.matmul(&h.t());
+            for i in 0..d {
+                for j in 0..d {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((prod[(i, j)] - want).abs() < 1e-3,
+                            "d={d} ({i},{j}): {}", prod[(i, j)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wht_matches_dense() {
+        let mut rng = Rng::new(0);
+        for d in [8usize, 12, 24, 48, 128] {
+            let x: Vec<f32> = rng.normal_vec(d);
+            let h = hadamard_matrix(d);
+            let want: Vec<f32> = (0..d)
+                .map(|j| (0..d).map(|i| x[i] * h[(i, j)]).sum())
+                .collect();
+            let mut got = x.clone();
+            wht(&mut got);
+            prop::assert_close(&got, &want, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn wht_preserves_norm_property() {
+        prop::check("wht-norm", 30, |rng| {
+            let d = 1usize << (1 + rng.below(8));
+            let x = rng.normal_vec(d);
+            let n0: f32 = x.iter().map(|v| v * v).sum();
+            let mut y = x.clone();
+            wht(&mut y);
+            let n1: f32 = y.iter().map(|v| v * v).sum();
+            crate::prop_assert!((n0 - n1).abs() < 1e-2 * n0.max(1.0),
+                                "norm {n0} vs {n1} at d={d}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pow2_wht_is_involution() {
+        let mut rng = Rng::new(1);
+        let x = rng.normal_vec(64);
+        let mut y = x.clone();
+        wht(&mut y);
+        wht(&mut y);
+        prop::assert_close(&y, &x, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn randomized_is_orthogonal() {
+        let q = randomized_hadamard(64, 7);
+        let prod = q.matmul(&q.t());
+        for i in 0..64 {
+            assert!((prod[(i, i)] - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn kronecker_heads_identity() {
+        // (I ⊗ H_dh)(H_nh ⊗ I) == full H for pow-2 heads (paper eq. 9)
+        let (nh, dh) = (4usize, 8usize);
+        let d = nh * dh;
+        let mut rng = Rng::new(2);
+        let x = rng.normal_vec(d);
+        let mut via_steps = x.clone();
+        had_headdim(&mut via_steps, dh);
+        had_heads(&mut via_steps, nh);
+        let mut direct = x.clone();
+        wht(&mut direct);
+        prop::assert_close(&via_steps, &direct, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn randomized_wht_matches_matrix() {
+        let d = 32;
+        let seed = 9;
+        let q = randomized_hadamard(d, seed);
+        let signs = Rng::new(seed).signs(d);
+        let mut rng = Rng::new(3);
+        let x = rng.normal_vec(d);
+        let want: Vec<f32> = (0..d)
+            .map(|j| (0..d).map(|i| x[i] * q[(i, j)]).sum())
+            .collect();
+        let mut got = x.clone();
+        randomized_wht(&mut got, &signs);
+        prop::assert_close(&got, &want, 1e-4).unwrap();
+    }
+}

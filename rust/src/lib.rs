@@ -1,0 +1,43 @@
+//! # QuaRot — Outlier-Free 4-Bit Inference in Rotated LLMs
+//!
+//! A three-layer reproduction of the NeurIPS 2024 paper (DESIGN.md):
+//! this crate is **Layer 3** — the serving coordinator, quantization
+//! toolchain, evaluation harness and native performance kernels.  It loads
+//! AOT-compiled HLO artifacts produced by the build-time python layers
+//! (L2 jax model + L1 Pallas kernels) and runs them through the PJRT C API
+//! (`xla` crate); python is never on the request path.
+//!
+//! Module map (bottom-up):
+//!
+//! * [`util`]      — zero-dependency substrates: JSON, PRNG, CLI, bench and
+//!                   property-test harnesses.
+//! * [`tensor`]    — row-major f32 matrices for the offline toolchain.
+//! * [`linalg`]    — Cholesky / triangular solves / QR (GPTQ + Table 8).
+//! * [`hadamard`]  — fast Walsh–Hadamard transforms incl. Kronecker H12/H20.
+//! * [`quant`]     — RTN / GPTQ / SmoothQuant / QUIK weight quantizers,
+//!                   group-wise asymmetric KV codec, int4 packing.
+//! * [`gemm`]      — native f32 / int8 / packed-int4 GEMM (Fig. 7 substrate).
+//! * [`attention`] — native decode attention over f32 and quantized caches
+//!                   (Table 15 substrate).
+//! * [`model`]     — artifact containers: configs, weights.bin, corpus.bin,
+//!                   probes.bin, and the rust-side QuaRot transform.
+//! * [`runtime`]   — PJRT engine: manifest-driven executable registry.
+//! * [`coordinator`] — the serving layer: continuous batcher, paged
+//!                   quantized KV-cache manager, sampler, metrics.
+//! * [`server`]    — threaded TCP front-end with a line-JSON protocol.
+//! * [`eval`]      — perplexity, zero-shot probes, outlier statistics.
+//! * [`bench_support`] — shared workload generators for `cargo bench`.
+
+pub mod attention;
+pub mod bench_support;
+pub mod coordinator;
+pub mod eval;
+pub mod gemm;
+pub mod hadamard;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,251 @@
+//! Dense linear algebra built from scratch (no LAPACK offline): Cholesky,
+//! triangular solves, SPD inverse, Householder QR.  Sized for GPTQ Hessians
+//! (d ≤ ~2k) and the Table-8 random-orthogonal ablation.
+
+use crate::tensor::Mat;
+use crate::util::prng::Rng;
+
+/// Lower-triangular Cholesky of an SPD matrix; returns None if not PD.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)] as f64;
+            for k in 0..j {
+                sum -= l[(i, k)] as f64 * l[(j, k)] as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = sum.sqrt() as f32;
+            } else {
+                l[(i, j)] = (sum / l[(j, j)] as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Cholesky with escalating diagonal damping — the standard GPTQ trick
+/// (`percdamp`): retries with `damp * mean(diag)` added until PD.
+pub fn cholesky_damped(a: &Mat, mut damp: f64) -> (Mat, f64) {
+    let n = a.rows;
+    let mean_diag = (0..n).map(|i| a[(i, i)] as f64).sum::<f64>() / n as f64;
+    loop {
+        let mut ad = a.clone();
+        for i in 0..n {
+            ad[(i, i)] += (damp * mean_diag.max(1e-8)) as f32;
+        }
+        if let Some(l) = cholesky(&ad) {
+            return (l, damp);
+        }
+        damp *= 10.0;
+        assert!(damp < 1e6, "cholesky_damped: matrix is hopeless");
+    }
+}
+
+/// Solve L x = b with L lower-triangular.
+pub fn solve_lower(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut x = vec![0.0f32; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for j in 0..i {
+            sum -= l[(i, j)] as f64 * x[j] as f64;
+        }
+        x[i] = (sum / l[(i, i)] as f64) as f32;
+    }
+    x
+}
+
+/// Solve Lᵀ x = b with L lower-triangular.
+pub fn solve_lower_t(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut sum = b[i] as f64;
+        for j in (i + 1)..n {
+            sum -= l[(j, i)] as f64 * x[j] as f64;
+        }
+        x[i] = (sum / l[(i, i)] as f64) as f32;
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky (column-by-column solves).
+pub fn spd_inverse(a: &Mat, damp: f64) -> Mat {
+    let (l, _) = cholesky_damped(a, damp);
+    let n = a.rows;
+    let mut inv = Mat::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for c in 0..n {
+        e[c] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        inv.set_col(c, &x);
+        e[c] = 0.0;
+    }
+    inv
+}
+
+/// Upper Cholesky factor of A⁻¹, i.e. the `U` such that A⁻¹ = Uᵀ U …
+/// GPTQ wants chol(H⁻¹, upper).  We compute inv then its Cholesky and
+/// transpose; fine at toolchain sizes.
+pub fn inverse_cholesky_upper(a: &Mat, damp: f64) -> Mat {
+    let inv = spd_inverse(a, damp);
+    let (l, _) = cholesky_damped(&inv, 1e-10);
+    l.t()
+}
+
+/// Householder QR; returns Q (m×n, orthonormal columns) for a square input,
+/// sign-fixed so diag(R) > 0 (unique, matches numpy convention in
+/// hadamard_utils.random_orthogonal).
+pub fn qr_orthogonal(a: &Mat) -> Mat {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut r = a.clone();
+    let mut q = Mat::eye(n);
+    for k in 0..n {
+        // Householder vector for column k
+        let mut norm = 0.0f64;
+        for i in k..n {
+            norm += (r[(i, k)] as f64).powi(2);
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-12 {
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+        let mut v = vec![0.0f64; n];
+        for i in k..n {
+            v[i] = r[(i, k)] as f64;
+        }
+        v[k] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-24 {
+            continue;
+        }
+        // apply H = I - 2vvᵀ/|v|² to R (left) and accumulate into Q (right)
+        for c in 0..n {
+            let dot: f64 = (k..n).map(|i| v[i] * r[(i, c)] as f64).sum();
+            let f = 2.0 * dot / vnorm2;
+            for i in k..n {
+                r[(i, c)] = (r[(i, c)] as f64 - f * v[i]) as f32;
+            }
+        }
+        for rr in 0..n {
+            let dot: f64 = (k..n).map(|i| q[(rr, i)] as f64 * v[i]).sum();
+            let f = 2.0 * dot / vnorm2;
+            for i in k..n {
+                q[(rr, i)] = (q[(rr, i)] as f64 - f * v[i]) as f32;
+            }
+        }
+    }
+    // sign fix: make diag(R) positive
+    for k in 0..n {
+        if r[(k, k)] < 0.0 {
+            for rr in 0..n {
+                q[(rr, k)] = -q[(rr, k)];
+            }
+        }
+    }
+    q
+}
+
+/// Random orthogonal matrix (QR of Gaussian) — Table 8's ablation rotation.
+pub fn random_orthogonal(n: usize, rng: &mut Rng) -> Mat {
+    qr_orthogonal(&Mat::randn(n, n, rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let a = Mat::randn(n, n, &mut rng);
+        let mut h = a.matmul(&a.t());
+        for i in 0..n {
+            h[(i, i)] += n as f32; // well conditioned
+        }
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let h = spd(8, 0);
+        let l = cholesky(&h).unwrap();
+        let rec = l.matmul(&l.t());
+        for (x, y) in rec.data.iter().zip(&h.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut m = Mat::eye(3);
+        m[(2, 2)] = -1.0;
+        assert!(cholesky(&m).is_none());
+        let (l, damp) = cholesky_damped(&m, 0.01);
+        assert!(damp > 0.01);
+        assert_eq!(l.rows, 3);
+    }
+
+    #[test]
+    fn solves_are_inverses() {
+        let h = spd(6, 1);
+        let l = cholesky(&h).unwrap();
+        let b: Vec<f32> = (0..6).map(|i| i as f32 - 2.5).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // H x should equal b
+        let hx: Vec<f32> = (0..6)
+            .map(|i| (0..6).map(|j| h[(i, j)] * x[j]).sum())
+            .collect();
+        for (a, b) in hx.iter().zip(&b) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn spd_inverse_works() {
+        let h = spd(5, 2);
+        let inv = spd_inverse(&h, 1e-10);
+        let prod = h.matmul(&inv);
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - want).abs() < 1e-2);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_gives_orthogonal() {
+        let mut rng = Rng::new(3);
+        let q = random_orthogonal(16, &mut rng);
+        let qtq = q.t().matmul(&q);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((qtq[(i, j)] - want).abs() < 1e-4,
+                        "({i},{j}) {}", qtq[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_cholesky_upper_property() {
+        // U from chol(H⁻¹): UᵀU… we use U Uᵀ = H⁻¹ with U upper.
+        let h = spd(6, 4);
+        let u = inverse_cholesky_upper(&h, 1e-10);
+        let rec = u.t().matmul(&u); // (Lᵀ)ᵀ Lᵀ... U = Lᵀ so UᵀU = L Lᵀ = H⁻¹
+        let inv = spd_inverse(&h, 1e-10);
+        for (x, y) in rec.data.iter().zip(&inv.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+}

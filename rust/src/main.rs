@@ -1,0 +1,199 @@
+//! `quarot` CLI — leader entrypoint for the serving stack and the
+//! experiment toolchain.
+//!
+//! Subcommands:
+//!   serve      start the TCP serving front-end (QuaRot-INT4 by default)
+//!   generate   one-shot generation from a token prompt
+//!   ppl        perplexity of a quantization spec on the eval split
+//!   zeroshot   probe-task accuracies
+//!   outliers   Fig.1 activation outlier statistics (base vs rotated)
+//!   verify     cross-language check: rust QuaRot transform == python's
+//!   info       print the model manifest summary
+
+use anyhow::{bail, Context, Result};
+
+use quarot::bench_support::{self, Artifacts};
+use quarot::coordinator::batcher::{GenerationEngine, Request};
+use quarot::coordinator::runner::{QuantSpec, Runner, Variant, WeightQuant};
+use quarot::coordinator::sampler::Sampling;
+use quarot::eval;
+use quarot::model::transform;
+use quarot::quant;
+use quarot::util::bench::Table;
+use quarot::util::cli::Args;
+
+fn spec_from_args(a: &Args) -> Result<QuantSpec> {
+    let scheme = a.str_or("scheme", "quarot-int4");
+    let mut spec = match scheme.as_str() {
+        "fp16" => QuantSpec::fp16_baseline(),
+        "quarot-int4" => QuantSpec::quarot(4),
+        "quarot-int6" => QuantSpec::quarot(6),
+        "quarot-int8" => QuantSpec::quarot(8),
+        "rtn-int4" => QuantSpec {
+            variant: Variant::Baseline,
+            act_bits: 4, act_clip: 0.9, kv_bits: 4, kv_bits_v: 4, kv_clip: 0.95,
+            weights: WeightQuant::Rtn(quant::rtn::WeightQuantCfg::rtn(4)),
+            outliers: 0, smooth: false,
+        },
+        other => bail!("unknown scheme {other} \
+                        (fp16|quarot-int4|quarot-int6|quarot-int8|rtn-int4)"),
+    };
+    if let Some(bits) = a.get("act-bits") {
+        spec.act_bits = bits.parse()?;
+    }
+    if let Some(bits) = a.get("kv-bits") {
+        spec.kv_bits = bits.parse()?;
+    }
+    Ok(spec)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => serve(&args),
+        "generate" => generate(&args),
+        "ppl" => ppl(&args),
+        "zeroshot" => zeroshot(&args),
+        "outliers" => outliers(&args),
+        "verify" => verify(&args),
+        "info" => info(&args),
+        _ => {
+            println!(
+                "quarot — outlier-free 4-bit inference (paper reproduction)\n\
+                 usage: quarot <serve|generate|ppl|zeroshot|outliers|verify|info>\n\
+                 common flags: --model tiny-mha --scheme quarot-int4\n\
+                 see README.md for the full matrix"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn build_runner(args: &Args) -> Result<(Artifacts, Runner)> {
+    let model = args.str_or("model", "tiny-mha");
+    let art = Artifacts::load(&model)?;
+    let spec = spec_from_args(args)?;
+    let runner = art.runner(spec, None)?;
+    Ok((art, runner))
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "tiny-mha");
+    let spec = spec_from_args(args)?;
+    let pages = args.usize_or("pages", 4096);
+    let port = args.usize_or("port", 8747) as u16;
+    let handle = quarot::server::serve(
+        move || {
+            let art = Artifacts::load(&model)?;
+            let runner = art.runner(spec, None)?;
+            Ok(GenerationEngine::new(runner, pages, 7))
+        },
+        port,
+    )?;
+    println!("serving on 127.0.0.1:{} — newline-JSON protocol; \
+              {{\"cmd\":\"stats\"}} for metrics", handle.port);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let (_art, runner) = build_runner(args)?;
+    let prompt: Vec<u16> = args.str_or("prompt", "1,2,3")
+        .split(',')
+        .map(|t| t.trim().parse().context("bad prompt token"))
+        .collect::<Result<_>>()?;
+    let max_new = args.usize_or("max-new", 32);
+    let mut engine = GenerationEngine::new(runner, 1024, 7);
+    engine.submit(Request {
+        id: 0,
+        prompt,
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        stop_token: None,
+    });
+    let done = engine.run_to_completion()?;
+    for c in done {
+        println!("tokens: {:?}", c.tokens);
+        println!("ttft {:.1} ms, decode {:.1} ms, {:.1} tok/s",
+                 c.ttft_ms, c.decode_ms,
+                 c.tokens.len() as f64 / (c.decode_ms / 1e3).max(1e-9));
+    }
+    Ok(())
+}
+
+fn ppl(args: &Args) -> Result<()> {
+    let (art, runner) = build_runner(args)?;
+    let windows = args.usize_or("windows", bench_support::eval_windows());
+    let p = eval::perplexity(&runner, art.corpus.split("eval")?, windows)?;
+    println!("{} / {:?}: ppl {:.4} ({} windows)",
+             runner.cfg.name, runner.spec.variant, p, windows);
+    Ok(())
+}
+
+fn zeroshot(args: &Args) -> Result<()> {
+    let (art, runner) = build_runner(args)?;
+    let items = args.usize_or("items", bench_support::probe_items());
+    let (scores, avg) = eval::score_all(&runner, &art.probes, items)?;
+    let mut t = Table::new("zero-shot probes", &["task", "acc"]);
+    for s in &scores {
+        t.row(vec![s.name.clone(), format!("{:.3}", s.accuracy)]);
+    }
+    t.row(vec!["Avg.".into(), format!("{avg:.3}")]);
+    t.print();
+    Ok(())
+}
+
+fn outliers(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "tiny-mha");
+    let art = Artifacts::load(&model)?;
+    let windows = args.usize_or("windows", 4);
+    let mut t = Table::new(
+        "Fig.1 — channel max/median ratio of linear-layer inputs",
+        &["site", "layer", "baseline", "quarot"]);
+    let base = art.calib(false, windows)?;
+    let rot = art.calib(true, windows)?;
+    let sb = eval::outlier_stats(&base.amax);
+    let sr = eval::outlier_stats(&rot.amax);
+    let site_names = ["attn-in", "out-proj-in", "ffn-in", "down-proj-in"];
+    for (b, r) in sb.iter().zip(&sr) {
+        t.row(vec![
+            site_names[b.site].into(),
+            format!("{}", b.layer),
+            format!("{:.2}", b.ratio),
+            format!("{:.2}", r.ratio),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn verify(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "tiny-mha");
+    let art = Artifacts::load(&model)?;
+    let engine = art.engine_graphs(&[])?; // manifest only
+    let mismatch = transform::rotation_mismatch(&engine.manifest.model, &art.weights)?;
+    println!("rust-vs-python rotation relative mismatch: {mismatch:.3e}");
+    if mismatch > 1e-3 {
+        bail!("transform mismatch too large");
+    }
+    println!("OK — rust QuaRot transform reproduces the python artifacts");
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "tiny-mha");
+    let art = Artifacts::load(&model)?;
+    let engine = art.engine_graphs(&[])?;
+    let m = &engine.manifest;
+    println!("model {}: d={} L={} heads={}/{} dff={} vocab={} (train ppl {:.2})",
+             m.model.name, m.model.d_model, m.model.n_layers, m.model.n_heads,
+             m.model.n_kv_heads, m.model.d_ff, m.model.vocab, m.model.train_ppl);
+    println!("graphs:");
+    for g in &m.graphs {
+        println!("  {:24} {:2} inputs {:2} outputs  ({})",
+                 g.name, g.inputs.len(), g.outputs.len(), g.file);
+    }
+    Ok(())
+}

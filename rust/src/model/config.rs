@@ -1,0 +1,98 @@
+//! Model configuration, parsed from the artifact manifest's `model` object.
+
+use crate::util::json::Value;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub cache_seq: usize,
+    pub decode_batch: usize,
+    pub kv_group: usize,
+    pub rope_theta: f64,
+    pub train_ppl: f64,
+}
+
+impl ModelConfig {
+    pub fn from_json(v: &Value) -> Option<ModelConfig> {
+        let g = |k: &str| v.get(k)?.as_usize();
+        Some(ModelConfig {
+            name: v.get("name")?.as_str()?.to_string(),
+            vocab: g("vocab")?,
+            d_model: g("d_model")?,
+            n_layers: g("n_layers")?,
+            n_heads: g("n_heads")?,
+            n_kv_heads: g("n_kv_heads")?,
+            d_head: g("d_head")?,
+            d_ff: g("d_ff")?,
+            max_seq: g("max_seq")?,
+            cache_seq: g("cache_seq")?,
+            decode_batch: g("decode_batch")?,
+            kv_group: g("kv_group")?,
+            rope_theta: v.get("rope_theta")?.as_f64()?,
+            train_ppl: v.get("train_ppl").and_then(|x| x.as_f64()).unwrap_or(0.0),
+        })
+    }
+
+    pub fn d_attn(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+
+    pub fn d_kv(&self) -> usize {
+        self.n_kv_heads * self.d_head
+    }
+
+    /// Bytes of one token's K+V at the given bit-width (+ group scales),
+    /// the quantity behind the paper's Table 17.
+    pub fn kv_token_bytes(&self, bits: u32) -> usize {
+        let codes = 2 * self.n_layers * self.d_kv();
+        let groups = 2 * self.n_layers * (self.d_kv() / self.kv_group);
+        if bits == 16 {
+            codes * 2 // fp16 baseline, no side tensors
+        } else {
+            (codes * bits as usize).div_ceil(8) + groups * 8 // scale+zero f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn demo() -> ModelConfig {
+        let src = r#"{"name":"t","vocab":512,"d_model":256,"n_layers":4,
+            "n_heads":8,"n_kv_heads":2,"d_head":32,"d_ff":1024,"max_seq":128,
+            "cache_seq":256,"decode_batch":8,"kv_group":32,"rope_theta":10000.0,
+            "train_ppl":12.5}"#;
+        ModelConfig::from_json(&json::parse(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn parses() {
+        let c = demo();
+        assert_eq!(c.d_attn(), 256);
+        assert_eq!(c.d_kv(), 64);
+        assert_eq!(c.n_kv_heads, 2);
+        assert!((c.train_ppl - 12.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_byte_accounting() {
+        let c = demo();
+        // int4: codes = 2*4*64 = 512 codes → 256 bytes; groups = 2*4*2 = 16 → 128B
+        assert_eq!(c.kv_token_bytes(4), 256 + 128);
+        // fp16 baseline: 512 * 2
+        assert_eq!(c.kv_token_bytes(16), 1024);
+        // the ratio is what Table 17 reports
+        let r = c.kv_token_bytes(16) as f64 / c.kv_token_bytes(4) as f64;
+        assert!(r > 2.0 && r < 4.0);
+    }
+}

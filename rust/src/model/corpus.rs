@@ -1,0 +1,125 @@
+//! corpus.bin ("QCRP") + probes.bin ("QPRB") readers — the synthetic
+//! WikiText-2 / zero-shot stand-ins (python/compile/data.py).
+
+use std::collections::BTreeMap;
+use std::io::Read;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug)]
+pub struct Corpus {
+    pub vocab: usize,
+    pub splits: BTreeMap<String, Vec<u16>>,
+}
+
+impl Corpus {
+    pub fn load(path: &str) -> Result<Corpus> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path}"))?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"QCRP" {
+            bail!("bad corpus magic");
+        }
+        let mut hdr = [0u8; 12];
+        f.read_exact(&mut hdr)?;
+        let vocab = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+        let n = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+        let mut splits = BTreeMap::new();
+        for _ in 0..n {
+            let mut nl = [0u8; 2];
+            f.read_exact(&mut nl)?;
+            let mut name = vec![0u8; u16::from_le_bytes(nl) as usize];
+            f.read_exact(&mut name)?;
+            let mut cnt = [0u8; 4];
+            f.read_exact(&mut cnt)?;
+            let cnt = u32::from_le_bytes(cnt) as usize;
+            let mut raw = vec![0u8; cnt * 2];
+            f.read_exact(&mut raw)?;
+            let toks = raw.chunks_exact(2)
+                .map(|b| u16::from_le_bytes([b[0], b[1]]))
+                .collect();
+            splits.insert(String::from_utf8(name)?, toks);
+        }
+        Ok(Corpus { vocab, splits })
+    }
+
+    pub fn split(&self, name: &str) -> Result<&[u16]> {
+        self.splits.get(name).map(|v| v.as_slice())
+            .with_context(|| format!("missing split {name}"))
+    }
+}
+
+#[derive(Debug)]
+pub struct ProbeItem {
+    pub ctx: Vec<u16>,
+    /// empty → exact-next-token task, answer in `gold_token`.
+    pub choices: Vec<Vec<u16>>,
+    pub gold: usize,
+    pub gold_token: u16,
+}
+
+#[derive(Debug)]
+pub struct ProbeTask {
+    pub name: String,
+    pub items: Vec<ProbeItem>,
+}
+
+pub fn load_probes(path: &str) -> Result<Vec<ProbeTask>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path}"))?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"QPRB" {
+        bail!("bad probes magic");
+    }
+    let mut hdr = [0u8; 8];
+    f.read_exact(&mut hdr)?;
+    let n_tasks = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    let mut tasks = Vec::with_capacity(n_tasks);
+    for _ in 0..n_tasks {
+        let mut nl = [0u8; 2];
+        f.read_exact(&mut nl)?;
+        let mut name = vec![0u8; u16::from_le_bytes(nl) as usize];
+        f.read_exact(&mut name)?;
+        let mut cb = [0u8; 4];
+        f.read_exact(&mut cb)?;
+        let n_items = u32::from_le_bytes(cb) as usize;
+        let mut items = Vec::with_capacity(n_items);
+        for _ in 0..n_items {
+            let mut ih = [0u8; 3];
+            f.read_exact(&mut ih)?;
+            let ctx_len = u16::from_le_bytes([ih[0], ih[1]]) as usize;
+            let n_choices = ih[2] as usize;
+            let mut raw = vec![0u8; ctx_len * 2];
+            f.read_exact(&mut raw)?;
+            let ctx: Vec<u16> = raw.chunks_exact(2)
+                .map(|b| u16::from_le_bytes([b[0], b[1]])).collect();
+            if n_choices > 0 {
+                let mut g = [0u8; 1];
+                f.read_exact(&mut g)?;
+                let mut choices = Vec::with_capacity(n_choices);
+                for _ in 0..n_choices {
+                    let mut cl = [0u8; 2];
+                    f.read_exact(&mut cl)?;
+                    let mut raw = vec![0u8; u16::from_le_bytes(cl) as usize * 2];
+                    f.read_exact(&mut raw)?;
+                    choices.push(raw.chunks_exact(2)
+                        .map(|b| u16::from_le_bytes([b[0], b[1]])).collect());
+                }
+                items.push(ProbeItem { ctx, choices, gold: g[0] as usize, gold_token: 0 });
+            } else {
+                let mut gt = [0u8; 2];
+                f.read_exact(&mut gt)?;
+                items.push(ProbeItem {
+                    ctx,
+                    choices: Vec::new(),
+                    gold: 0,
+                    gold_token: u16::from_le_bytes(gt),
+                });
+            }
+        }
+        tasks.push(ProbeTask { name: String::from_utf8(name)?, items });
+    }
+    Ok(tasks)
+}

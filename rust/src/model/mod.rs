@@ -1,0 +1,10 @@
+//! Artifact containers + model metadata (shared formats with python/compile/io.py)
+//! and the rust-side QuaRot weight transform.
+
+pub mod config;
+pub mod corpus;
+pub mod transform;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use weights::{Dtype, Tensor, Weights};

@@ -1,0 +1,210 @@
+//! weights.bin ("QWTS") reader/writer — named tensor archive, little-endian.
+//! Mirror of python/compile/io.py::write_weights/read_weights.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I8,
+    I32,
+}
+
+impl Dtype {
+    fn code(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::I8 => 1,
+            Dtype::I32 => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Dtype> {
+        Ok(match c {
+            0 => Dtype::F32,
+            1 => Dtype::I8,
+            2 => Dtype::I32,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub raw: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: Vec<usize>, data: &[f32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        let mut raw = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: Dtype::F32, shape, raw }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, Dtype::F32);
+        self.raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect()
+    }
+
+    pub fn as_i8(&self) -> &[u8] {
+        assert_eq!(self.dtype, Dtype::I8);
+        &self.raw
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: &str) -> Result<Weights> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path}"))?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"QWTS" {
+            bail!("{path}: bad magic {magic:?}");
+        }
+        let version = read_u32(&mut f)?;
+        if version != 1 {
+            bail!("{path}: unsupported version {version}");
+        }
+        let n = read_u32(&mut f)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = read_u16(&mut f)? as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let mut hdr = [0u8; 2];
+            f.read_exact(&mut hdr)?;
+            let dtype = Dtype::from_code(hdr[0])?;
+            let ndim = hdr[1] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let nbytes = read_u64(&mut f)? as usize;
+            let expect = shape.iter().product::<usize>() * dtype.size();
+            if nbytes != expect {
+                bail!("{name}: payload {nbytes} != shape-implied {expect}");
+            }
+            let mut raw = vec![0u8; nbytes];
+            f.read_exact(&mut raw)?;
+            tensors.insert(name, Tensor { dtype, shape, raw });
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"QWTS")?;
+        f.write_all(&1u32.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            f.write_all(&(name.len() as u16).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&[t.dtype.code(), t.shape.len() as u8])?;
+            for &d in &t.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            f.write_all(&(t.raw.len() as u64).to_le_bytes())?;
+            f.write_all(&t.raw)?;
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("missing tensor {name}"))
+    }
+
+    /// All tensors under a prefix ("base."/"rot."/"rnd."), prefix stripped.
+    pub fn with_prefix(&self, prefix: &str) -> BTreeMap<String, &Tensor> {
+        self.tensors
+            .iter()
+            .filter_map(|(k, v)| k.strip_prefix(prefix).map(|s| (s.to_string(), v)))
+            .collect()
+    }
+}
+
+fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("quarot_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let mut w = Weights::default();
+        w.tensors.insert("base.a".into(),
+                         Tensor::from_f32(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        w.tensors.insert("rot.b".into(), Tensor {
+            dtype: Dtype::I8,
+            shape: vec![4],
+            raw: vec![1, 255, 0, 7],
+        });
+        w.save(path.to_str().unwrap()).unwrap();
+        let back = Weights::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(back.get("base.a").unwrap().as_f32(), vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(back.get("base.a").unwrap().shape, vec![2, 3]);
+        assert_eq!(back.get("rot.b").unwrap().as_i8(), &[1, 255, 0, 7]);
+        let pre = back.with_prefix("rot.");
+        assert_eq!(pre.len(), 1);
+        assert!(pre.contains_key("b"));
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("quarot_wtest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(Weights::load(path.to_str().unwrap()).is_err());
+    }
+}

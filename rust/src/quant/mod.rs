@@ -1,0 +1,59 @@
+//! Quantization toolchain (paper Stage 2 + every baseline of Table 1).
+//!
+//! * [`rtn`]     — round-to-nearest weight quantization, per-column or
+//!                 group-wise, symmetric/asymmetric, with the paper's
+//!                 linear clip-ratio search over squared error.
+//! * [`gptq`]    — GPTQ from scratch: Hessian-driven per-column rounding
+//!                 with error feedback (Frantar et al., the paper default).
+//! * [`kv`]      — group-wise asymmetric KV-cache codec, bit-exact with the
+//!                 python ref (signed code storage) + int4 nibble packing.
+//! * [`smooth`]  — SmoothQuant α-migration baseline.
+//! * [`outlier`] — QUIK-style outlier-feature selection baseline.
+
+pub mod gptq;
+pub mod kv;
+pub mod outlier;
+pub mod rtn;
+pub mod smooth;
+
+/// Largest representable integer for b-bit symmetric quantization (2^(b-1)-1).
+pub fn sym_levels(bits: u32) -> i32 {
+    (1 << (bits - 1)) - 1
+}
+
+/// Fake-quantize an activation row per-token-symmetric (mirror of the
+/// Pallas quant kernel; used by native benches and tests).
+pub fn fake_quant_token(x: &mut [f32], bits: u32, clip: f32) {
+    let levels = sym_levels(bits) as f32;
+    let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let s = (amax * clip).max(1e-8) / levels;
+    for v in x.iter_mut() {
+        *v = (*v / s).round().clamp(-levels, levels) * s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels() {
+        assert_eq!(sym_levels(4), 7);
+        assert_eq!(sym_levels(6), 31);
+        assert_eq!(sym_levels(8), 127);
+        assert_eq!(sym_levels(2), 1);
+    }
+
+    #[test]
+    fn fake_quant_token_bound() {
+        let mut rng = crate::util::prng::Rng::new(0);
+        let x: Vec<f32> = rng.normal_vec(64);
+        let mut q = x.clone();
+        fake_quant_token(&mut q, 4, 1.0);
+        let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let step = amax / 7.0;
+        for (a, b) in x.iter().zip(&q) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-6);
+        }
+    }
+}

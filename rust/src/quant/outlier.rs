@@ -1,0 +1,107 @@
+//! QUIK-style outlier-feature retention (Ashkboos et al. 2023) — the
+//! "#Outlier Features = 256" baseline of Table 1.
+//!
+//! From calibration per-channel activation maxima, the top-k channels are
+//! marked as outliers; the serving graphs keep those activation features in
+//! high precision (the `mask_*` inputs of `baseline_prefill`), and the
+//! corresponding weight *rows* are kept unquantized too.
+
+use crate::tensor::Mat;
+
+/// Indices of the k channels with the largest calibration |activation|.
+pub fn top_k_outliers(act_amax: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..act_amax.len()).collect();
+    idx.sort_by(|&a, &b| act_amax[b].partial_cmp(&act_amax[a]).unwrap());
+    let mut top: Vec<usize> = idx.into_iter().take(k).collect();
+    top.sort_unstable();
+    top
+}
+
+/// Build a {0,1} mask (1 = keep in high precision) from outlier indices.
+pub fn outlier_mask(d: usize, outliers: &[usize]) -> Vec<f32> {
+    let mut m = vec![0.0f32; d];
+    for &i in outliers {
+        m[i] = 1.0;
+    }
+    m
+}
+
+/// Fake-quantize a weight matrix per-column *except* the outlier input rows,
+/// which stay in full precision (QUIK keeps them in higher precision).
+pub fn fake_quant_weight_with_outliers(
+    w: &mut Mat,
+    outliers: &[usize],
+    cfg: &super::rtn::WeightQuantCfg,
+) {
+    let saved: Vec<Vec<f32>> = outliers.iter().map(|&r| w.row(r).to_vec()).collect();
+    // exclude outlier rows from the quantization range (QUIK semantics):
+    // zero them so column scales reflect only the quantized bulk...
+    for &r in outliers {
+        w.row_mut(r).fill(0.0);
+    }
+    super::rtn::fake_quant_weight(w, cfg);
+    // ...then restore them at full precision.
+    for (&r, vals) in outliers.iter().zip(&saved) {
+        w.row_mut(r).copy_from_slice(vals);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::WeightQuantCfg;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn top_k_finds_hot_channels() {
+        let mut amax = vec![1.0f32; 16];
+        amax[3] = 9.0;
+        amax[11] = 5.0;
+        assert_eq!(top_k_outliers(&amax, 2), vec![3, 11]);
+        let m = outlier_mask(16, &[3, 11]);
+        assert_eq!(m.iter().sum::<f32>(), 2.0);
+        assert_eq!(m[3], 1.0);
+    }
+
+    #[test]
+    fn outlier_rows_survive_quantization() {
+        let mut rng = Rng::new(0);
+        let mut w = Mat::randn(16, 8, &mut rng);
+        for c in 0..8 {
+            w[(5, c)] *= 40.0; // hot row would dominate column scales
+        }
+        let orig = w.clone();
+        fake_quant_weight_with_outliers(
+            &mut w, &[5], &WeightQuantCfg { clip_steps: 1, ..WeightQuantCfg::rtn(4) });
+        // outlier row exact
+        for c in 0..8 {
+            assert_eq!(w[(5, c)], orig[(5, c)]);
+        }
+        // the rest changed (quantized)
+        let mut diff = 0.0f32;
+        for r in 0..16 {
+            if r == 5 {
+                continue;
+            }
+            for c in 0..8 {
+                diff += (w[(r, c)] - orig[(r, c)]).abs();
+            }
+        }
+        assert!(diff > 0.0);
+    }
+
+    #[test]
+    fn retention_beats_plain_rtn_with_outliers() {
+        let mut rng = Rng::new(1);
+        let mut w = Mat::randn(32, 8, &mut rng);
+        for c in 0..8 {
+            w[(7, c)] *= 30.0;
+        }
+        let cfg = WeightQuantCfg { clip_steps: 1, ..WeightQuantCfg::rtn(4) };
+        let mut plain = w.clone();
+        super::super::rtn::fake_quant_weight(&mut plain, &cfg);
+        let mut kept = w.clone();
+        fake_quant_weight_with_outliers(&mut kept, &[7], &cfg);
+        assert!(kept.sub(&w).frob() < plain.sub(&w).frob());
+    }
+}

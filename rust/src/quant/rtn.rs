@@ -1,0 +1,216 @@
+//! Round-to-nearest weight quantization (paper Stage 2a, RTN variant).
+//!
+//! Weights are (in, out) matrices quantized **per column** (the paper's
+//! per-channel symmetric scheme) or in groups of `group` input rows
+//! (the paper's 64G/128G/256G group-wise scheme, Table 4).  The clip ratio
+//! per column is found by the paper's linear search over squared error.
+
+use crate::tensor::Mat;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WeightQuantCfg {
+    pub bits: u32,
+    /// 0 → whole-column groups (per-channel); else rows per group.
+    pub group: usize,
+    pub symmetric: bool,
+    /// linear clip search steps; 1 → fixed clip 1.0.
+    pub clip_steps: usize,
+    pub min_clip: f32,
+}
+
+impl WeightQuantCfg {
+    pub fn rtn(bits: u32) -> Self {
+        WeightQuantCfg { bits, group: 0, symmetric: true, clip_steps: 10, min_clip: 0.6 }
+    }
+
+    pub fn grouped(bits: u32, group: usize) -> Self {
+        WeightQuantCfg { group, ..Self::rtn(bits) }
+    }
+
+    pub fn asymmetric(bits: u32) -> Self {
+        WeightQuantCfg { symmetric: false, ..Self::rtn(bits) }
+    }
+}
+
+/// Quantize+dequantize one contiguous group of values with the best clip
+/// found by linear search (MSE objective, like the paper).
+fn fq_group(vals: &mut [f32], cfg: &WeightQuantCfg) {
+    if vals.is_empty() {
+        return;
+    }
+    let clips = (0..cfg.clip_steps.max(1)).map(|i| {
+        if cfg.clip_steps <= 1 {
+            1.0
+        } else {
+            1.0 - (1.0 - cfg.min_clip) * i as f32 / (cfg.clip_steps - 1) as f32
+        }
+    });
+    let orig = vals.to_vec();
+    let mut best: Option<(f64, Vec<f32>)> = None;
+    for clip in clips {
+        let mut cand = orig.clone();
+        fq_group_fixed(&mut cand, cfg, clip);
+        let err: f64 = cand.iter().zip(&orig)
+            .map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        if best.as_ref().map(|(e, _)| err < *e).unwrap_or(true) {
+            best = Some((err, cand));
+        }
+    }
+    vals.copy_from_slice(&best.unwrap().1);
+}
+
+fn fq_group_fixed(vals: &mut [f32], cfg: &WeightQuantCfg, clip: f32) {
+    if cfg.symmetric {
+        let levels = super::sym_levels(cfg.bits) as f32;
+        let amax = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let s = (amax * clip).max(1e-8) / levels;
+        for v in vals.iter_mut() {
+            *v = (*v / s).round().clamp(-levels, levels) * s;
+        }
+    } else {
+        let qmax = ((1u32 << cfg.bits) - 1) as f32;
+        let mx = vals.iter().fold(f32::MIN, |m, &v| m.max(v));
+        let mn = vals.iter().fold(f32::MAX, |m, &v| m.min(v));
+        let center = (mx + mn) * 0.5;
+        let half = (mx - mn) * 0.5 * clip;
+        let lo = center - half;
+        let s = (2.0 * half).max(1e-8) / qmax;
+        for v in vals.iter_mut() {
+            *v = ((*v - lo) / s).round().clamp(0.0, qmax) * s + lo;
+        }
+    }
+}
+
+/// Fake-quantize a weight matrix in place (per-column / group-wise).
+pub fn fake_quant_weight(w: &mut Mat, cfg: &WeightQuantCfg) {
+    let group = if cfg.group == 0 { w.rows } else { cfg.group };
+    assert_eq!(w.rows % group, 0, "rows {} not divisible by group {group}", w.rows);
+    for c in 0..w.cols {
+        let mut col = w.col(c);
+        for g in col.chunks_mut(group) {
+            fq_group(g, cfg);
+        }
+        w.set_col(c, &col);
+    }
+}
+
+/// Integer-emitting per-column symmetric quantization: (codes, scales).
+/// Codes in [-levels, levels]; used by the native int GEMM benches.
+pub fn quant_weight_int(w: &Mat, bits: u32) -> (Vec<i8>, Vec<f32>) {
+    let levels = super::sym_levels(bits) as f32;
+    let mut scales = vec![0.0f32; w.cols];
+    for c in 0..w.cols {
+        let amax = (0..w.rows).fold(0.0f32, |m, r| m.max(w[(r, c)].abs()));
+        scales[c] = amax.max(1e-8) / levels;
+    }
+    let mut codes = vec![0i8; w.rows * w.cols];
+    for r in 0..w.rows {
+        for c in 0..w.cols {
+            codes[r * w.cols + c] =
+                (w[(r, c)] / scales[c]).round().clamp(-levels, levels) as i8;
+        }
+    }
+    (codes, scales)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::Rng, prop};
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Rng::new(0);
+        let w = Mat::randn(32, 16, &mut rng);
+        let mut q = w.clone();
+        fake_quant_weight(&mut q, &WeightQuantCfg { clip_steps: 1, ..WeightQuantCfg::rtn(4) });
+        for c in 0..w.cols {
+            let amax = (0..w.rows).fold(0.0f32, |m, r| m.max(w[(r, c)].abs()));
+            let step = amax / 7.0;
+            for r in 0..w.rows {
+                assert!((w[(r, c)] - q[(r, c)]).abs() <= step / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn clip_search_never_worse() {
+        prop::check("clip-search", 20, |rng| {
+            let w = Mat::randn(16, 4, &mut rng.clone());
+            let mut fixed = w.clone();
+            fake_quant_weight(&mut fixed,
+                &WeightQuantCfg { clip_steps: 1, ..WeightQuantCfg::rtn(3) });
+            let mut searched = w.clone();
+            fake_quant_weight(&mut searched, &WeightQuantCfg::rtn(3));
+            let e_fixed = fixed.sub(&w).frob();
+            let e_search = searched.sub(&w).frob();
+            crate::prop_assert!(e_search <= e_fixed + 1e-6,
+                                "search {e_search} > fixed {e_fixed}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grouping_improves_outlier_columns() {
+        // one hot input row makes whole-column scales terrible; groups fix it
+        let mut rng = Rng::new(1);
+        let mut w = Mat::randn(64, 8, &mut rng);
+        for c in 0..8 {
+            w[(0, c)] *= 50.0;
+        }
+        let mut per_col = w.clone();
+        fake_quant_weight(&mut per_col,
+            &WeightQuantCfg { clip_steps: 1, ..WeightQuantCfg::rtn(4) });
+        let mut grouped = w.clone();
+        fake_quant_weight(&mut grouped,
+            &WeightQuantCfg { clip_steps: 1, ..WeightQuantCfg::grouped(4, 16) });
+        assert!(grouped.sub(&w).frob() < per_col.sub(&w).frob() * 0.6);
+    }
+
+    #[test]
+    fn asymmetric_handles_shifted_data() {
+        let mut rng = Rng::new(2);
+        let mut w = Mat::randn(32, 4, &mut rng);
+        for v in w.data.iter_mut() {
+            *v = *v * 0.1 + 3.0; // all-positive, far from zero
+        }
+        let mut sym = w.clone();
+        fake_quant_weight(&mut sym,
+            &WeightQuantCfg { clip_steps: 1, ..WeightQuantCfg::rtn(3) });
+        let mut asym = w.clone();
+        fake_quant_weight(&mut asym,
+            &WeightQuantCfg { clip_steps: 1, ..WeightQuantCfg::asymmetric(3) });
+        assert!(asym.sub(&w).frob() < sym.sub(&w).frob() * 0.5);
+    }
+
+    #[test]
+    fn int_codes_match_fake_quant() {
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(24, 6, &mut rng);
+        let (codes, scales) = quant_weight_int(&w, 4);
+        let mut fq = w.clone();
+        fake_quant_weight(&mut fq,
+            &WeightQuantCfg { clip_steps: 1, ..WeightQuantCfg::rtn(4) });
+        for r in 0..w.rows {
+            for c in 0..w.cols {
+                let deq = codes[r * w.cols + c] as f32 * scales[c];
+                assert!((deq - fq[(r, c)]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn bits_monotonicity() {
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(64, 8, &mut rng);
+        let mut errs = Vec::new();
+        for bits in [2u32, 3, 4, 6, 8] {
+            let mut q = w.clone();
+            fake_quant_weight(&mut q, &WeightQuantCfg::rtn(bits));
+            errs.push(q.sub(&w).frob());
+        }
+        for pair in errs.windows(2) {
+            assert!(pair[1] <= pair[0] + 1e-6, "more bits must not hurt: {errs:?}");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! SmoothQuant (Xiao et al. 2023) — the calibration-based baseline of
+//! Table 1.  Migrates quantization difficulty from activations to weights
+//! with per-channel scales s_j = amax_act_j^α / amax_w_j^(1−α); activations
+//! are divided by s (folded into the *preceding* weight / norm) and the
+//! weight rows are multiplied by s.
+
+use crate::tensor::Mat;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SmoothCfg {
+    pub alpha: f32,
+}
+
+impl Default for SmoothCfg {
+    fn default() -> Self {
+        SmoothCfg { alpha: 0.5 }
+    }
+}
+
+/// Compute migration scales from calibration per-channel activation maxima
+/// and the weight matrix (in × out): s_j over input channels j.
+pub fn smooth_scales(act_amax: &[f32], w: &Mat, cfg: &SmoothCfg) -> Vec<f32> {
+    assert_eq!(act_amax.len(), w.rows);
+    (0..w.rows)
+        .map(|j| {
+            let wmax = (0..w.cols).fold(0.0f32, |m, c| m.max(w[(j, c)].abs()));
+            let a = act_amax[j].max(1e-5);
+            let s = a.powf(cfg.alpha) / wmax.max(1e-5).powf(1.0 - cfg.alpha);
+            s.clamp(1e-3, 1e3)
+        })
+        .collect()
+}
+
+/// Apply the migration: scale weight rows by s (the activation side divides
+/// by s, which the caller folds into the producer of this activation).
+pub fn apply_to_weight(w: &mut Mat, scales: &[f32]) {
+    w.scale_rows(scales);
+}
+
+/// Fold 1/s into the producer's output columns (e.g. a norm gamma or the
+/// up-projection that feeds this activation).
+pub fn fold_into_producer(producer_cols: &mut [f32], scales: &[f32]) {
+    assert_eq!(producer_cols.len(), scales.len());
+    for (g, s) in producer_cols.iter_mut().zip(scales) {
+        *g /= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn migration_preserves_product() {
+        // (x / s) @ (diag(s) W) == x @ W
+        let mut rng = Rng::new(0);
+        let d = 16;
+        let mut w = Mat::randn(d, 8, &mut rng);
+        let x: Vec<f32> = rng.normal_vec(d);
+        let amax: Vec<f32> = x.iter().map(|v| v.abs() * 3.0).collect();
+        let y0: Vec<f32> = (0..8)
+            .map(|c| (0..d).map(|j| x[j] * w[(j, c)]).sum())
+            .collect();
+        let s = smooth_scales(&amax, &w, &SmoothCfg::default());
+        apply_to_weight(&mut w, &s);
+        let xs: Vec<f32> = x.iter().zip(&s).map(|(v, si)| v / si).collect();
+        let y1: Vec<f32> = (0..8)
+            .map(|c| (0..d).map(|j| xs[j] * w[(j, c)]).sum())
+            .collect();
+        for (a, b) in y0.iter().zip(&y1) {
+            assert!((a - b).abs() < 1e-3 * a.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn flattens_outlier_channels() {
+        let mut rng = Rng::new(1);
+        let d = 32;
+        let w = Mat::randn(d, 8, &mut rng);
+        let mut amax = vec![1.0f32; d];
+        amax[3] = 100.0; // hot activation channel
+        let s = smooth_scales(&amax, &w, &SmoothCfg::default());
+        // after division the hot channel's effective activation range shrinks
+        let effective: Vec<f32> = amax.iter().zip(&s).map(|(a, si)| a / si).collect();
+        let ratio = effective[3] / effective[0];
+        assert!(ratio < 100.0 / 5.0, "migration too weak: {ratio}");
+    }
+
+    #[test]
+    fn alpha_zero_is_weight_only() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(8, 4, &mut rng);
+        let amax = vec![2.0f32; 8];
+        let s = smooth_scales(&amax, &w, &SmoothCfg { alpha: 0.0 });
+        // α=0: s = 1 / wmax → equalizes weight rows regardless of acts
+        for (j, &si) in s.iter().enumerate() {
+            let wmax = (0..4).fold(0.0f32, |m, c| m.max(w[(j, c)].abs()));
+            assert!((si - 1.0 / wmax).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! The PJRT engine: compiles the HLO-text artifacts once at startup and
+//! executes them with host tensors.  Weights can be pinned as device
+//! buffers (`set_weights`) so the per-call upload on the serving hot path
+//! is only the small dynamic inputs (tokens, caches, scalars).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ElemType, GraphSpec, Manifest};
+
+/// A host-side tensor handed to / returned from the engine.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I8(Vec<i8>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+            HostTensor::I8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> ElemType {
+        match self {
+            HostTensor::F32(_) => ElemType::F32,
+            HostTensor::I32(_) => ElemType::I32,
+            HostTensor::I8(_) => ElemType::I8,
+        }
+    }
+
+    pub fn f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(v) => v,
+            _ => panic!("not f32"),
+        }
+    }
+
+    pub fn i8(&self) -> &[i8] {
+        match self {
+            HostTensor::I8(v) => v,
+            _ => panic!("not i8"),
+        }
+    }
+
+    pub fn i32(&self) -> &[i32] {
+        match self {
+            HostTensor::I32(v) => v,
+            _ => panic!("not i32"),
+        }
+    }
+}
+
+struct LoadedGraph {
+    spec: GraphSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Engine = PJRT client + compiled executables + pinned weight buffers.
+pub struct Engine {
+    client: xla::PjRtClient,
+    graphs: HashMap<String, LoadedGraph>,
+    pub manifest: Manifest,
+    /// graph name → (first weight arg index, device buffers)
+    pinned: HashMap<String, (usize, Vec<xla::PjRtBuffer>)>,
+}
+
+impl Engine {
+    /// Load every graph in `dir`'s manifest.  `only` restricts compilation
+    /// to the named graphs (compiling all ~12 takes a few seconds each).
+    pub fn load(dir: &str, only: Option<&[&str]>) -> Result<Engine> {
+        let manifest = Manifest::load(&format!("{dir}/manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("PJRT cpu client")?;
+        let mut graphs = HashMap::new();
+        for spec in &manifest.graphs {
+            if let Some(names) = only {
+                if !names.contains(&spec.name.as_str()) {
+                    continue;
+                }
+            }
+            let path = format!("{dir}/{}", spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)
+                .with_context(|| format!("compile {}", spec.name))?;
+            graphs.insert(spec.name.clone(), LoadedGraph { spec: spec.clone(), exe });
+        }
+        Ok(Engine { client, graphs, manifest, pinned: HashMap::new() })
+    }
+
+    pub fn has_graph(&self, name: &str) -> bool {
+        self.graphs.contains_key(name)
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&GraphSpec> {
+        Ok(&self.graphs.get(name).with_context(|| format!("graph {name}"))?.spec)
+    }
+
+    fn to_buffer(&self, t: &HostTensor, shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(match t {
+            HostTensor::F32(v) => self.client.buffer_from_host_buffer(v, shape, None)?,
+            HostTensor::I32(v) => self.client.buffer_from_host_buffer(v, shape, None)?,
+            HostTensor::I8(v) => self.client.buffer_from_host_buffer(v, shape, None)?,
+        })
+    }
+
+    fn check(&self, spec: &GraphSpec, idx: usize, t: &HostTensor) -> Result<()> {
+        let want = &spec.inputs[idx];
+        if t.dtype() != want.dtype || t.len() != want.len() {
+            bail!(
+                "graph {} input {} ({}): got {:?}×{}, want {:?}×{}",
+                spec.name, idx, want.name, t.dtype(), t.len(), want.dtype, want.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Pin trailing weight arguments as device buffers.  `weights` must
+    /// match the tail of the graph's input list exactly.
+    pub fn set_weights(&mut self, graph: &str, weights: &[HostTensor]) -> Result<()> {
+        let spec = self.spec(graph)?.clone();
+        let first = spec.inputs.len() - weights.len();
+        let mut bufs = Vec::with_capacity(weights.len());
+        for (i, w) in weights.iter().enumerate() {
+            self.check(&spec, first + i, w)?;
+            bufs.push(self.to_buffer(w, &spec.inputs[first + i].shape)?);
+        }
+        self.pinned.insert(graph.to_string(), (first, bufs));
+        Ok(())
+    }
+
+    pub fn unpin(&mut self, graph: &str) {
+        self.pinned.remove(graph);
+    }
+
+    /// Execute with dynamic inputs; pinned weights (if any) fill the tail.
+    pub fn run(&self, graph: &str, dynamic: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lg = self.graphs.get(graph).with_context(|| format!("graph {graph}"))?;
+        let spec = &lg.spec;
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(spec.inputs.len());
+        if let Some((first, pinned)) = self.pinned.get(graph) {
+            if dynamic.len() != *first {
+                bail!("graph {graph}: {} dynamic inputs given, {} expected",
+                      dynamic.len(), first);
+            }
+            for (i, t) in dynamic.iter().enumerate() {
+                self.check(spec, i, t)?;
+                bufs.push(self.to_buffer(t, &spec.inputs[i].shape)?);
+            }
+            // PjRtBuffer isn't Clone; re-borrow via a second vec of refs below.
+            let all: Vec<&xla::PjRtBuffer> =
+                bufs.iter().chain(pinned.iter()).collect();
+            return self.collect_outputs(spec, lg.exe.execute_b(&all)?);
+        }
+        if dynamic.len() != spec.inputs.len() {
+            bail!("graph {graph}: {} inputs given, {} expected",
+                  dynamic.len(), spec.inputs.len());
+        }
+        for (i, t) in dynamic.iter().enumerate() {
+            self.check(spec, i, t)?;
+            bufs.push(self.to_buffer(t, &spec.inputs[i].shape)?);
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.collect_outputs(spec, lg.exe.execute_b(&refs)?)
+    }
+
+    fn collect_outputs(&self, spec: &GraphSpec,
+                       results: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+        let mut lit = results[0][0].to_literal_sync()?;
+        let parts = lit.decompose_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!("graph {}: {} outputs, manifest says {}",
+                  spec.name, parts.len(), spec.outputs.len());
+        }
+        parts.iter().zip(&spec.outputs).map(|(l, os)| {
+            Ok(match os.dtype {
+                ElemType::F32 => HostTensor::F32(l.to_vec::<f32>()?),
+                ElemType::I32 => HostTensor::I32(l.to_vec::<i32>()?),
+                ElemType::I8 => HostTensor::I8(l.to_vec::<i8>()?),
+            })
+        }).collect()
+    }
+}

@@ -1,0 +1,164 @@
+//! manifest.json parser: the graph inventory written by python/compile/aot.py.
+//! Input/output order in the manifest is the execution ABI — the engine
+//! validates every call against it.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::json::{self, Value};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum ElemType {
+    F32,
+    I32,
+    I8,
+}
+
+impl ElemType {
+    fn parse(s: &str) -> Result<ElemType> {
+        Ok(match s {
+            "f32" => ElemType::F32,
+            "i32" => ElemType::I32,
+            "i8" => ElemType::I8,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            ElemType::F32 | ElemType::I32 => 4,
+            ElemType::I8 => 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: ElemType,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn from_json(v: &Value) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: v.get("name").and_then(|x| x.as_str())
+                .context("io spec missing name")?.to_string(),
+            dtype: ElemType::parse(
+                v.get("dtype").and_then(|x| x.as_str()).context("dtype")?)?,
+            shape: v.get("shape").and_then(|x| x.as_arr()).context("shape")?
+                .iter().map(|d| d.as_usize().context("dim")).collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl GraphSpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub model: ModelConfig,
+    pub weight_order: Vec<String>,
+    pub mask_order: Vec<String>,
+    pub graphs: Vec<GraphSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &str) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {path}"))?;
+        let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Manifest> {
+        let model = ModelConfig::from_json(v.get("model").context("model")?)
+            .context("model config")?;
+        let strings = |key: &str| -> Result<Vec<String>> {
+            v.get(key).and_then(|x| x.as_arr()).with_context(|| key.to_string())?
+                .iter()
+                .map(|s| Ok(s.as_str().context("string")?.to_string()))
+                .collect()
+        };
+        let graphs_obj = v.get("graphs").and_then(|x| x.as_obj()).context("graphs")?;
+        let mut graphs = Vec::new();
+        for (name, g) in graphs_obj {
+            let io = |key: &str| -> Result<Vec<IoSpec>> {
+                g.get(key).and_then(|x| x.as_arr()).with_context(|| key.to_string())?
+                    .iter().map(IoSpec::from_json).collect()
+            };
+            graphs.push(GraphSpec {
+                name: name.clone(),
+                file: g.get("file").and_then(|x| x.as_str()).context("file")?.into(),
+                inputs: io("inputs")?,
+                outputs: io("outputs")?,
+            });
+        }
+        Ok(Manifest {
+            model,
+            weight_order: strings("weight_order")?,
+            mask_order: strings("mask_order")?,
+            graphs,
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs.iter().find(|g| g.name == name)
+            .with_context(|| format!("graph {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DEMO: &str = r#"{
+      "model": {"name":"t","vocab":512,"d_model":256,"n_layers":4,"n_heads":8,
+                "n_kv_heads":8,"d_head":32,"d_ff":1024,"max_seq":128,
+                "cache_seq":256,"decode_batch":8,"kv_group":32,
+                "rope_theta":10000.0,"train_ppl":10.0},
+      "weight_order": ["embed","final_norm"],
+      "mask_order": ["mask_attn"],
+      "graphs": {
+        "quarot_prefill": {
+          "file": "quarot_prefill.hlo.txt",
+          "inputs": [{"name":"tokens","dtype":"i32","shape":[1,128]},
+                     {"name":"act_levels","dtype":"f32","shape":[1]}],
+          "outputs": [{"name":"logits","dtype":"f32","shape":[1,128,512]}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_demo() {
+        let m = Manifest::from_json(&json::parse(DEMO).unwrap()).unwrap();
+        assert_eq!(m.model.d_model, 256);
+        assert_eq!(m.weight_order, vec!["embed", "final_norm"]);
+        let g = m.graph("quarot_prefill").unwrap();
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[0].dtype, ElemType::I32);
+        assert_eq!(g.inputs[0].len(), 128);
+        assert_eq!(g.outputs[0].shape, vec![1, 128, 512]);
+        assert!(m.graph("nope").is_err());
+        assert_eq!(g.input_index("act_levels"), Some(1));
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/<model>/`) and exposes
+//! typed execution of the lowered graphs.  This is the only place the `xla`
+//! crate is touched; everything above works with plain slices.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, HostTensor};
+pub use manifest::{GraphSpec, IoSpec, Manifest};

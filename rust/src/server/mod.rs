@@ -1,0 +1,248 @@
+//! Threaded TCP front-end: newline-delimited JSON requests over a socket,
+//! served by the generation engine on a dedicated engine thread (the engine
+//! owns the PJRT executables; connections only exchange messages).
+//!
+//! Wire protocol (one JSON object per line):
+//!   → {"prompt": [1,2,3], "max_new_tokens": 16, "temperature": 0.8, "top_k": 4}
+//!   ← {"id": 7, "tokens": [..], "ttft_ms": 1.2, "decode_ms": 30.1,
+//!      "tokens_per_sec": 412.0}
+//! and {"cmd": "stats"} / {"cmd": "shutdown"} admin messages.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::{Completion, GenerationEngine, Request};
+use crate::coordinator::sampler::Sampling;
+use crate::util::json::{self, n, obj, Value};
+
+pub struct ServerHandle {
+    pub port: u16,
+    shutdown: Arc<Mutex<bool>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        *self.shutdown.lock().unwrap() = true;
+        // poke the accept loop
+        let _ = TcpStream::connect(("127.0.0.1", self.port));
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+enum EngineMsg {
+    Submit(Request, mpsc::Sender<Completion>),
+    Stats(mpsc::Sender<String>),
+}
+
+/// Start serving on `port` (0 → ephemeral).  Returns once the socket is
+/// bound; the engine loop runs on a background thread.
+///
+/// The engine is built *inside* the engine thread via `make_engine`
+/// because PJRT handles are not `Send`.
+pub fn serve<F>(make_engine: F, port: u16) -> Result<ServerHandle>
+where
+    F: FnOnce() -> Result<GenerationEngine> + Send + 'static,
+{
+    let listener = TcpListener::bind(("127.0.0.1", port)).context("bind")?;
+    let port = listener.local_addr()?.port();
+    let shutdown = Arc::new(Mutex::new(false));
+    let (tx, rx) = mpsc::channel::<EngineMsg>();
+
+    // engine thread: owns the engine, runs ticks, routes completions
+    let sd_engine = shutdown.clone();
+    std::thread::spawn(move || {
+        let mut engine = match make_engine() {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("engine construction failed: {e:#}");
+                return;
+            }
+        };
+        let mut waiters: std::collections::HashMap<u64, mpsc::Sender<Completion>> =
+            Default::default();
+        loop {
+            if *sd_engine.lock().unwrap() {
+                break;
+            }
+            // drain control messages
+            while let Ok(msg) = rx.try_recv() {
+                match msg {
+                    EngineMsg::Submit(req, reply) => {
+                        let id = engine.submit(req);
+                        waiters.insert(id, reply);
+                    }
+                    EngineMsg::Stats(reply) => {
+                        let s = &engine.stats;
+                        let _ = reply.send(json::write(&obj(vec![
+                            ("completed", n(s.completed as f64)),
+                            ("decode_steps", n(s.decode_steps as f64)),
+                            ("tokens_per_sec", n(s.tokens_per_sec())),
+                            ("peak_cache_bytes", n(s.peak_cache_bytes as f64)),
+                            ("peak_cache_fp16_bytes",
+                             n(s.peak_cache_fp16_bytes as f64)),
+                            ("pool_pages_in_use", n(engine.pool_in_use() as f64)),
+                        ])));
+                    }
+                }
+            }
+            if engine.pending() > 0 {
+                if let Err(e) = engine.tick() {
+                    eprintln!("engine tick failed: {e:#}");
+                }
+                for c in engine.take_completions() {
+                    if let Some(w) = waiters.remove(&c.id) {
+                        let _ = w.send(c);
+                    }
+                }
+            } else {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+    });
+
+    // accept loop thread
+    let sd_accept = shutdown.clone();
+    let join = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if *sd_accept.lock().unwrap() {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, tx);
+            });
+        }
+    });
+
+    Ok(ServerHandle { port, shutdown, join: Some(join) })
+}
+
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let v = match json::parse(trimmed) {
+            Ok(v) => v,
+            Err(e) => {
+                writeln!(out, "{}", json::write(&obj(vec![
+                    ("error", json::s(&format!("{e}"))),
+                ])))?;
+                continue;
+            }
+        };
+        if v.get("cmd").and_then(|c| c.as_str()) == Some("stats") {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(EngineMsg::Stats(rtx)).ok();
+            let stats = rrx.recv().unwrap_or_else(|_| "{}".into());
+            writeln!(out, "{stats}")?;
+            continue;
+        }
+        if v.get("cmd").and_then(|c| c.as_str()) == Some("shutdown") {
+            writeln!(out, "{}", json::write(&obj(vec![("ok", Value::Bool(true))])))?;
+            return Ok(());
+        }
+        let req = match parse_request(&v) {
+            Ok(r) => r,
+            Err(e) => {
+                writeln!(out, "{}", json::write(&obj(vec![
+                    ("error", json::s(&format!("{e}"))),
+                ])))?;
+                continue;
+            }
+        };
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(EngineMsg::Submit(req, rtx)).ok();
+        match rrx.recv() {
+            Ok(c) => {
+                let toks: Vec<Value> =
+                    c.tokens.iter().map(|&t| n(t as f64)).collect();
+                let tps = c.tokens.len() as f64 / (c.decode_ms / 1e3).max(1e-9);
+                writeln!(out, "{}", json::write(&obj(vec![
+                    ("id", n(c.id as f64)),
+                    ("tokens", Value::Arr(toks)),
+                    ("ttft_ms", n(c.ttft_ms)),
+                    ("decode_ms", n(c.decode_ms)),
+                    ("queued_ms", n(c.queued_ms)),
+                    ("tokens_per_sec", n(tps)),
+                ])))?;
+            }
+            Err(_) => {
+                writeln!(out, "{}", json::write(&obj(vec![
+                    ("error", json::s("engine dropped request")),
+                ])))?;
+            }
+        }
+    }
+}
+
+fn parse_request(v: &Value) -> Result<Request> {
+    let prompt: Vec<u16> = v.get("prompt").and_then(|p| p.as_arr())
+        .context("missing prompt")?
+        .iter()
+        .map(|t| t.as_usize().context("bad token").map(|x| x as u16))
+        .collect::<Result<_>>()?;
+    let max_new = v.get("max_new_tokens").and_then(|x| x.as_usize()).unwrap_or(16);
+    let temperature = v.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let top_k = v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(0);
+    let sampling = if temperature > 0.0 {
+        Sampling::TopK { temperature: temperature as f32, k: top_k }
+    } else {
+        Sampling::Greedy
+    };
+    Ok(Request {
+        id: 0,
+        prompt,
+        max_new_tokens: max_new,
+        sampling,
+        stop_token: v.get("stop_token").and_then(|x| x.as_usize()).map(|t| t as u16),
+    })
+}
+
+/// Blocking client for tests, examples and the CLI.
+pub struct Client {
+    stream: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(port: u16) -> Result<Client> {
+        let s = TcpStream::connect(("127.0.0.1", port))?;
+        Ok(Client { stream: BufReader::new(s) })
+    }
+
+    pub fn call(&mut self, msg: &Value) -> Result<Value> {
+        let mut w = self.stream.get_ref().try_clone()?;
+        writeln!(w, "{}", json::write(msg))?;
+        let mut line = String::new();
+        self.stream.read_line(&mut line)?;
+        json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    pub fn generate(&mut self, prompt: &[u16], max_new: usize) -> Result<Value> {
+        let toks: Vec<Value> = prompt.iter().map(|&t| n(t as f64)).collect();
+        self.call(&obj(vec![
+            ("prompt", Value::Arr(toks)),
+            ("max_new_tokens", n(max_new as f64)),
+        ]))
+    }
+
+    pub fn stats(&mut self) -> Result<Value> {
+        self.call(&obj(vec![("cmd", json::s("stats"))]))
+    }
+}

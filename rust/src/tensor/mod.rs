@@ -1,0 +1,212 @@
+//! Row-major f32 matrix for the offline quantization toolchain.
+//!
+//! This is deliberately *not* the serving hot path (that's [`crate::gemm`]
+//! and the PJRT executables) — it's the convenience container GPTQ,
+//! SmoothQuant, the rust-side QuaRot transform and the tests are written
+//! against.
+
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    pub fn set_col(&mut self, c: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for r in 0..self.rows {
+            self[(r, c)] = v[r];
+        }
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// Blocked matmul with k-inner loop kept contiguous for both operands.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let o_row = &mut out.data[i * n..(i + 1) * n];
+            for (p, &a) in a_row.iter().enumerate().take(k) {
+                let b_row = &other.data[p * n..(p + 1) * n];
+                if a != 0.0 {
+                    for (o, &b) in o_row.iter_mut().zip(b_row) {
+                        *o += a * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn frob(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// μ-incoherence (paper eq. 2): max|W| / (||W||_F / sqrt(mn)).
+    pub fn incoherence(&self) -> f64 {
+        let rms = self.frob() / (self.data.len() as f64).sqrt();
+        self.abs_max() as f64 / rms.max(1e-12)
+    }
+
+    /// Scale every row in place.
+    pub fn scale_rows(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.rows);
+        for r in 0..self.rows {
+            let sr = s[r];
+            for v in self.row_mut(r) {
+                *v *= sr;
+            }
+        }
+    }
+
+    /// Scale every column in place.
+    pub fn scale_cols(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.cols);
+        for r in 0..self.rows {
+            for (c, v) in self.row_mut(r).iter_mut().enumerate() {
+                *v *= s[c];
+            }
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Mat::randn(4, 6, &mut rng);
+        let got = a.matmul(&Mat::eye(6));
+        for (x, y) in got.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(5, 3, &mut rng);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn incoherence_of_spike() {
+        let mut m = Mat::zeros(8, 8);
+        m[(0, 0)] = 8.0;
+        // rms = 8/8 = 1, max = 8 → incoherence 8
+        assert!((m.incoherence() - 8.0).abs() < 1e-9);
+        // uniform matrix has incoherence 1
+        let u = Mat::from_vec(2, 2, vec![3.0; 4]);
+        assert!((u.incoherence() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_col_scaling() {
+        let mut m = Mat::from_vec(2, 2, vec![1.0; 4]);
+        m.scale_rows(&[2.0, 3.0]);
+        m.scale_cols(&[1.0, 10.0]);
+        assert_eq!(m.data, vec![2.0, 20.0, 3.0, 30.0]);
+    }
+}

@@ -1,0 +1,82 @@
+//! Tiny CLI argument parser: `--flag`, `--key value`, positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let has_value = it
+                    .peek()
+                    .map(|v| !v.starts_with("--"))
+                    .unwrap_or(false);
+                if has_value {
+                    out.flags.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed() {
+        let a = parse("serve --port 9000 --verbose --model tiny-mha extra");
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.usize_or("port", 0), 9000);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.str_or("model", ""), "tiny-mha");
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn flag_then_flag() {
+        let a = parse("--a --b v");
+        assert!(a.bool("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Zero-dependency substrates the rest of the crate builds on.
+//!
+//! The offline environment has no `serde`, `rand`, `clap`, `criterion` or
+//! `proptest`, so per the reproduction brief these are built from scratch:
+//! [`json`] (parser + writer), [`prng`] (splitmix/xoshiro + Gaussian),
+//! [`cli`] (flag parser), [`bench`] (timing harness used by `cargo bench`),
+//! [`prop`] (property-test runner with seed reporting).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;

@@ -1,0 +1,71 @@
+//! proptest-lite: run a property over many PRNG-generated cases and report
+//! the failing seed so a failure reproduces with `case(seed)`.
+//!
+//! No shrinking — cases are parameterized directly by a seed, which in
+//! practice localizes failures well enough for this crate's invariants.
+
+use super::prng::Rng;
+
+/// Run `prop(rng)` for `cases` seeds; panic with the failing seed on error.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for seed in 0..cases {
+        let mut rng = Rng::new(0x9A0C_u64.wrapping_mul(seed + 1));
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Approximate-equality helper for slices.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol {
+            return Err(format!("elem {i}: {x} vs {y} (atol {atol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("sum-commutes", 50, |rng| {
+            let a = rng.f32();
+            let b = rng.f32();
+            prop_assert!((a + b - (b + a)).abs() < 1e-9, "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "seed")]
+    fn failing_property_reports_seed() {
+        check("always-false", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0001], 1e-3).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

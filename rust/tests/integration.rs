@@ -1,0 +1,237 @@
+//! Integration tests over the full stack: PJRT runtime + artifacts +
+//! quantization toolchain + coordinator + server.
+//!
+//! These need `make artifacts` to have run; when artifacts are absent each
+//! test skips (prints a notice) so plain `cargo test` stays green in a
+//! fresh checkout.
+
+use quarot::bench_support::Artifacts;
+use quarot::coordinator::batcher::{GenerationEngine, Request};
+use quarot::coordinator::runner::{QuantSpec, Variant, WeightQuant};
+use quarot::coordinator::sampler::Sampling;
+use quarot::eval;
+use quarot::model::transform;
+use quarot::quant::gptq::GptqCfg;
+
+fn art() -> Option<Artifacts> {
+    match Artifacts::load("tiny-mha") {
+        Ok(a) => Some(a),
+        Err(_) => {
+            eprintln!("[skip] artifacts missing — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_and_weights_consistent() {
+    let Some(art) = art() else { return };
+    let engine = art.engine_graphs(&[]).unwrap();
+    let m = &engine.manifest;
+    assert_eq!(m.model.name, "tiny-mha");
+    assert_eq!(m.weight_order.len(), 12);
+    // every weight tensor exists under all three prefixes
+    for prefix in ["base.", "rot.", "rnd."] {
+        for name in &m.weight_order {
+            assert!(art.weights.get(&format!("{prefix}{name}")).is_ok(),
+                    "missing {prefix}{name}");
+        }
+    }
+    assert!(art.weights.get("meta.q_signs").is_ok());
+}
+
+#[test]
+fn rust_transform_matches_python() {
+    let Some(art) = art() else { return };
+    let engine = art.engine_graphs(&[]).unwrap();
+    let mismatch =
+        transform::rotation_mismatch(&engine.manifest.model, &art.weights).unwrap();
+    assert!(mismatch < 1e-3, "rotation mismatch {mismatch}");
+}
+
+#[test]
+fn computational_invariance_through_compiled_graphs() {
+    // the heart of the paper: rotated graph + rotated weights ==
+    // baseline graph + base weights, in full precision
+    let Some(art) = art() else { return };
+    let toks = art.corpus.split("eval").unwrap()[..64].to_vec();
+    let base = art.runner_prefill_only(QuantSpec::fp16_baseline(), None).unwrap();
+    let l0 = base.prefill(&toks).unwrap().logits;
+    drop(base);
+    let rot_spec = QuantSpec {
+        variant: Variant::Quarot, act_bits: 0, kv_bits: 16, kv_bits_v: 16,
+        weights: WeightQuant::None, ..QuantSpec::quarot(4)
+    };
+    let rot = art.runner_prefill_only(rot_spec, None).unwrap();
+    let l1 = rot.prefill(&toks).unwrap().logits;
+    let scale = l0.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let max_err = l0.iter().zip(&l1)
+        .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+    assert!(max_err < 5e-3 * scale, "invariance violated: {max_err} vs {scale}");
+}
+
+#[test]
+fn quantization_ordering_int8_beats_int4() {
+    let Some(art) = art() else { return };
+    let eval_toks = art.corpus.split("eval").unwrap();
+    let windows = 3;
+    let p_fp = {
+        let r = art.runner_prefill_only(QuantSpec::fp16_baseline(), None).unwrap();
+        eval::perplexity(&r, eval_toks, windows).unwrap()
+    };
+    let p8 = {
+        let r = art.runner_prefill_only(QuantSpec::quarot(8), None).unwrap();
+        eval::perplexity(&r, eval_toks, windows).unwrap()
+    };
+    let p4 = {
+        let r = art.runner_prefill_only(QuantSpec::quarot(4), None).unwrap();
+        eval::perplexity(&r, eval_toks, windows).unwrap()
+    };
+    assert!(p_fp <= p8 * 1.02, "fp {p_fp} vs int8 {p8}");
+    assert!(p8 < p4, "int8 {p8} !< int4 {p4}");
+    assert!(p4 < p_fp * 3.0, "int4 catastrophically bad: {p4} vs {p_fp}");
+}
+
+#[test]
+fn quarot_beats_naive_rtn_at_4bit() {
+    let Some(art) = art() else { return };
+    let eval_toks = art.corpus.split("eval").unwrap();
+    let windows = 3;
+    let naive = QuantSpec {
+        variant: Variant::Baseline,
+        ..QuantSpec::quarot(4)
+    };
+    let p_naive = {
+        let r = art.runner_prefill_only(naive, None).unwrap();
+        eval::perplexity(&r, eval_toks, windows).unwrap()
+    };
+    let p_quarot = {
+        let r = art.runner_prefill_only(QuantSpec::quarot(4), None).unwrap();
+        eval::perplexity(&r, eval_toks, windows).unwrap()
+    };
+    assert!(p_quarot < p_naive,
+            "QuaRot {p_quarot} must beat unrotated RTN {p_naive}");
+}
+
+#[test]
+fn gptq_no_worse_than_rtn() {
+    let Some(art) = art() else { return };
+    let eval_toks = art.corpus.split("eval").unwrap();
+    let windows = 3;
+    let calib = art.calib(true, 6).unwrap();
+    let p_rtn = {
+        let r = art.runner_prefill_only(QuantSpec::quarot(4), None).unwrap();
+        eval::perplexity(&r, eval_toks, windows).unwrap()
+    };
+    let p_gptq = {
+        let spec = QuantSpec {
+            weights: WeightQuant::Gptq(GptqCfg::new(4), calib),
+            ..QuantSpec::quarot(4)
+        };
+        let r = art.runner_prefill_only(spec, None).unwrap();
+        eval::perplexity(&r, eval_toks, windows).unwrap()
+    };
+    // GPTQ optimizes a layer-wise proxy loss; at this calibration budget it
+    // must land in RTN's neighbourhood (the paper's margins need the full
+    // 128×2048 calibration set) — the hard ordering is tested at the proxy
+    // level in quant::gptq::tests::beats_rtn_on_proxy_loss.
+    assert!(p_gptq <= p_rtn * 1.15, "gptq {p_gptq} vs rtn {p_rtn}");
+}
+
+#[test]
+fn generation_decode_consistency() {
+    // decode path must continue what prefill started: generating N tokens
+    // step-by-step equals prefilling prompt+k and decoding from there
+    let Some(art) = art() else { return };
+    let prompt = art.corpus.split("eval").unwrap()[100..110].to_vec();
+    let runner = art.runner(QuantSpec::quarot(8), None).unwrap();
+    let mut engine = GenerationEngine::new(runner, 512, 1);
+    engine.submit(Request {
+        id: 0, prompt: prompt.clone(), max_new_tokens: 6,
+        sampling: Sampling::Greedy, stop_token: None,
+    });
+    let c1 = engine.run_to_completion().unwrap();
+    assert_eq!(c1.len(), 1);
+    assert_eq!(c1[0].tokens.len(), 6);
+    assert_eq!(engine.pool_in_use(), 0, "pages leaked after completion");
+
+    // deterministic: same request twice → same tokens
+    engine.submit(Request {
+        id: 0, prompt, max_new_tokens: 6,
+        sampling: Sampling::Greedy, stop_token: None,
+    });
+    let c2 = engine.run_to_completion().unwrap();
+    assert_eq!(c1[0].tokens, c2[0].tokens);
+}
+
+#[test]
+fn batched_serving_matches_sequential() {
+    // continuous batching must not change greedy outputs vs one-at-a-time
+    let Some(art) = art() else { return };
+    let eval_toks = art.corpus.split("eval").unwrap();
+    let prompts: Vec<Vec<u16>> = (0..3)
+        .map(|i| eval_toks[i * 37..i * 37 + 8].to_vec())
+        .collect();
+    let run = |batched: bool| -> Vec<Vec<u16>> {
+        let runner = art.runner(QuantSpec::quarot(8), None).unwrap();
+        let mut engine = GenerationEngine::new(runner, 1024, 1);
+        let mut out = vec![Vec::new(); prompts.len()];
+        if batched {
+            let ids: Vec<u64> = prompts.iter().map(|p| {
+                engine.submit(Request {
+                    id: 0, prompt: p.clone(), max_new_tokens: 5,
+                    sampling: Sampling::Greedy, stop_token: None,
+                })
+            }).collect();
+            for c in engine.run_to_completion().unwrap() {
+                let idx = ids.iter().position(|&i| i == c.id).unwrap();
+                out[idx] = c.tokens;
+            }
+        } else {
+            for (i, p) in prompts.iter().enumerate() {
+                engine.submit(Request {
+                    id: 0, prompt: p.clone(), max_new_tokens: 5,
+                    sampling: Sampling::Greedy, stop_token: None,
+                });
+                out[i] = engine.run_to_completion().unwrap()[0].tokens.clone();
+            }
+        }
+        out
+    };
+    let seq = run(false);
+    let bat = run(true);
+    assert_eq!(seq, bat, "batched decode diverged from sequential");
+}
+
+#[test]
+fn server_roundtrip() {
+    if art().is_none() {
+        return;
+    }
+    let handle = quarot::server::serve(
+        move || {
+            let art = Artifacts::load("tiny-mha")?;
+            let runner = art.runner(QuantSpec::quarot(4), None)?;
+            Ok(GenerationEngine::new(runner, 512, 3))
+        },
+        0,
+    ).unwrap();
+    let mut client = quarot::server::Client::connect(handle.port).unwrap();
+    let resp = client.generate(&[5, 6, 7, 8], 4).unwrap();
+    assert!(resp.get("error").is_none(), "{resp:?}");
+    let toks = resp.get("tokens").unwrap().as_arr().unwrap();
+    assert_eq!(toks.len(), 4);
+    let stats = client.stats().unwrap();
+    assert!(stats.get("completed").unwrap().as_f64().unwrap() >= 1.0);
+    handle.shutdown();
+}
+
+#[test]
+fn zeroshot_probes_above_chance_fp16() {
+    let Some(art) = art() else { return };
+    let runner = art.runner_prefill_only(QuantSpec::fp16_baseline(), None).unwrap();
+    let (scores, avg) = eval::score_all(&runner, &art.probes, 12).unwrap();
+    assert_eq!(scores.len(), 6);
+    // trained model must beat chance on average (2-4 way MC → chance ≈ 0.33)
+    assert!(avg > 0.30, "avg probe accuracy {avg}");
+}
