@@ -1,18 +1,25 @@
 //! Paper Fig. 7 / Table 14 — the 4-bit linear layer vs the high-precision
 //! baseline, with and without the online Hadamard transform, across the
-//! LLaMA FFN layer shapes.  Staged on the native CPU GEMM substrate
-//! (DESIGN.md §1): the reproduction target is the *ratio* (paper: 3.2-4.3×
-//! on a 3090) and the ≤7 % Hadamard overhead, not absolute ms.
+//! LLaMA FFN layer shapes.  Staged on the native CPU kernels (DESIGN.md
+//! §1): the reproduction target is the *ratio* (paper: 3.2-4.3× on a
+//! 3090) and the ≤7 % Hadamard overhead, not absolute ms.
+//!
+//! Runs every shape through each compute backend (scalar oracle →
+//! cache-blocked → pool-threaded) on the *same* prepared matrices, and
+//! reports per backend the int4-vs-f32 speedup plus the backend's int4
+//! speedup over the `scalar` int4 baseline — the acceptance number for
+//! the backend subsystem (threaded ≥ 2× scalar on these shapes,
+//! bit-exact on the int paths).
 //!
 //! Shapes are scaled-down (seq 256; the paper's K×N kept for the two
 //! in-model sizes, plus the real LLaMA shapes at reduced seq to keep the
-//! 1-core runtime sane).
+//! low-core runtime sane).
 
 use anyhow::Result;
 
-use quarot::gemm;
-use quarot::hadamard;
+use quarot::backend::{self, BackendKind};
 use quarot::bench_support::record;
+use quarot::gemm;
 use quarot::util::bench::{bench_auto, Table};
 use quarot::util::prng::Rng;
 
@@ -25,49 +32,59 @@ fn main() -> Result<()> {
         (2560, 1024), // LLAMA2-7B W_down-like, 2^7·20 exercises the H20 path
     ];
     let mut t = Table::new(
-        "Fig 7 / Table 14 — linear layer: f32 vs int8 vs packed-int4 (ms)",
-        &["K x N", "f32", "int8", "int4", "int4+had", "speedup4",
-          "had ovh %"]);
+        "Fig 7 / Table 14 — linear layer per backend: f32 vs int8 vs packed-int4 (ms)",
+        &["backend", "K x N", "f32", "int8", "int4", "int4+had", "i4 vs f32",
+          "had ovh %", "i4 vs scalar"]);
     let mut rng = Rng::new(0);
     for &(k, n) in shapes {
+        // one prepared problem per shape — every backend times the same data
         let x: Vec<f32> = rng.normal_vec(t_tokens * k);
         let w: Vec<f32> = rng.normal_vec(k * n);
         let wf = gemm::WeightsF32::from_row_major(&w, k, n);
         let w8 = gemm::WeightsI8::quantize(&w, k, n, 8);
         let w4 = gemm::WeightsI4::quantize(&w, k, n);
         let mut y = vec![0.0f32; t_tokens * n];
-        let mut scratch: Vec<i8> = Vec::new();
-        let budget = 300.0;
-
-        let s_f32 = bench_auto(budget, || gemm::gemm_f32(&x, t_tokens, &wf, &mut y));
-        let s_i8 = bench_auto(budget, || {
-            gemm::gemm_i8(&x, t_tokens, &w8, 8, 0.9, &mut y, &mut scratch)
-        });
-        let s_i4 = bench_auto(budget, || {
-            gemm::gemm_i4(&x, t_tokens, &w4, 0.9, &mut y, &mut scratch)
-        });
-        // int4 + online Hadamard on the activation (the W_down path)
         let mut xh = x.clone();
-        let s_i4h = bench_auto(budget, || {
-            xh.copy_from_slice(&x);
-            for row in xh.chunks_exact_mut(k) {
-                hadamard::wht(row);
+        let budget = 200.0;
+        let mut scalar_i4_ms = f64::NAN;
+        for kind in [BackendKind::Scalar, BackendKind::Blocked,
+                     BackendKind::Threaded] {
+            let be = backend::make(kind);
+
+            let s_f32 = bench_auto(budget, || be.gemm_f32(&x, t_tokens, &wf, &mut y));
+            let s_i8 = bench_auto(budget, || {
+                be.gemm_i8(&x, t_tokens, &w8, 8, 0.9, &mut y)
+            });
+            let s_i4 = bench_auto(budget, || {
+                be.gemm_i4(&x, t_tokens, &w4, 0.9, &mut y)
+            });
+            // int4 + online Hadamard on the activation (the W_down path)
+            let s_i4h = bench_auto(budget, || {
+                xh.copy_from_slice(&x);
+                be.had_rows(&mut xh, k);
+                be.gemm_i4(&xh, t_tokens, &w4, 0.9, &mut y)
+            });
+            if kind == BackendKind::Scalar {
+                scalar_i4_ms = s_i4.median_ms();
             }
-            gemm::gemm_i4(&xh, t_tokens, &w4, 0.9, &mut y, &mut scratch)
-        });
-        let sp = s_f32.median_ms() / s_i4.median_ms();
-        let ovh = (s_i4h.median_ms() / s_i4.median_ms() - 1.0) * 100.0;
-        println!("  {k}x{n}: f32 {:.2}ms i4 {:.2}ms → {sp:.2}x (had +{ovh:.1}%)",
-                 s_f32.median_ms(), s_i4.median_ms());
-        t.row(vec![
-            format!("{k}x{n}"),
-            format!("{:.2}", s_f32.median_ms()),
-            format!("{:.2}", s_i8.median_ms()),
-            format!("{:.2}", s_i4.median_ms()),
-            format!("{:.2}", s_i4h.median_ms()),
-            format!("{sp:.2}x"),
-            format!("{ovh:.1}"),
-        ]);
+            let sp = s_f32.median_ms() / s_i4.median_ms();
+            let ovh = (s_i4h.median_ms() / s_i4.median_ms() - 1.0) * 100.0;
+            let vs_scalar = scalar_i4_ms / s_i4.median_ms();
+            println!("  [{}] {k}x{n}: f32 {:.2}ms i4 {:.2}ms → {sp:.2}x \
+                      (had +{ovh:.1}%, {vs_scalar:.2}x vs scalar)",
+                     be.name(), s_f32.median_ms(), s_i4.median_ms());
+            t.row(vec![
+                be.name().into(),
+                format!("{k}x{n}"),
+                format!("{:.2}", s_f32.median_ms()),
+                format!("{:.2}", s_i8.median_ms()),
+                format!("{:.2}", s_i4.median_ms()),
+                format!("{:.2}", s_i4h.median_ms()),
+                format!("{sp:.2}x"),
+                format!("{ovh:.1}"),
+                format!("{vs_scalar:.2}x"),
+            ]);
+        }
     }
     record("table14_linear_layer", &t.render())
 }

@@ -2,13 +2,20 @@
 //! FP16 across batch sizes.  Composed from measured native-GEMM times for
 //! every linear layer of one transformer block (the same methodology as
 //! the paper's single-block measurement), LLaMA-7B and 70B shapes, seq
-//! scaled to keep 1-core runtime sane.  Expected shape: speedup grows with
-//! batch and with model size (paper: 1.97→2.16× on 7B, 3.16→3.33× on 70B).
+//! scaled to keep low-core runtime sane.  Expected shape: speedup grows
+//! with batch and with model size (paper: 1.97→2.16× on 7B, 3.16→3.33×
+//! on 70B).
+//!
+//! The whole block is measured once per compute backend on the same
+//! prepared activations/weights; the last column reports each backend's
+//! int4 block time against the `scalar` oracle — the prefill-side view
+//! of the backend-subsystem speedup.
 
 use anyhow::Result;
 
-use quarot::gemm;
+use quarot::backend::{self, BackendKind};
 use quarot::bench_support::record;
+use quarot::gemm;
 use quarot::util::bench::{bench, Table};
 use quarot::util::prng::Rng;
 
@@ -29,7 +36,8 @@ fn main() -> Result<()> {
     let batches = [1usize, 4, 16];
     let mut t = Table::new(
         "Fig 4L / Table 16 — prefill block speedup (int4 vs f32, composed)",
-        &["block", "batch", "f32 ms", "int4 ms", "speedup"]);
+        &["backend", "block", "batch", "f32 ms", "int4 ms", "speedup",
+          "i4 vs scalar"]);
     let mut rng = Rng::new(2);
     for b in &blocks {
         // per-block linear layers: wq(d,d) wk/wv(d,dkv) wo(d,d)
@@ -47,24 +55,38 @@ fn main() -> Result<()> {
             .collect();
         for &batch in &batches {
             let tokens = seq * batch;
-            let mut f32_ms = 0.0f64;
-            let mut i4_ms = 0.0f64;
-            for (i, &(k, n)) in layers.iter().enumerate() {
-                let x = rng.normal_vec(tokens * k);
-                let mut y = vec![0.0f32; tokens * n];
-                let mut scratch = Vec::new();
-                let (wf, w4) = &prepared[i];
-                f32_ms += bench(1, 3, || gemm::gemm_f32(&x, tokens, wf, &mut y))
-                    .median_ms();
-                i4_ms += bench(1, 3, || {
-                    gemm::gemm_i4(&x, tokens, w4, 0.9, &mut y, &mut scratch)
-                }).median_ms();
+            // one activation set per (block, batch) — shared by backends
+            let xs: Vec<Vec<f32>> = layers.iter()
+                .map(|&(k, _)| rng.normal_vec(tokens * k))
+                .collect();
+            let mut scalar_i4_ms = f64::NAN;
+            for kind in [BackendKind::Scalar, BackendKind::Blocked,
+                         BackendKind::Threaded] {
+                let be = backend::make(kind);
+                let mut f32_ms = 0.0f64;
+                let mut i4_ms = 0.0f64;
+                for (i, &(_, n)) in layers.iter().enumerate() {
+                    let x = &xs[i];
+                    let mut y = vec![0.0f32; tokens * n];
+                    let (wf, w4) = &prepared[i];
+                    f32_ms += bench(1, 3, || be.gemm_f32(x, tokens, wf, &mut y))
+                        .median_ms();
+                    i4_ms += bench(1, 3, || {
+                        be.gemm_i4(x, tokens, w4, 0.9, &mut y)
+                    }).median_ms();
+                }
+                if kind == BackendKind::Scalar {
+                    scalar_i4_ms = i4_ms;
+                }
+                let sp = f32_ms / i4_ms;
+                let vs_scalar = scalar_i4_ms / i4_ms;
+                println!("  [{}] {} b={batch}: f32 {f32_ms:.1}ms i4 {i4_ms:.1}ms \
+                          → {sp:.2}x ({vs_scalar:.2}x vs scalar)",
+                         be.name(), b.name);
+                t.row(vec![be.name().into(), b.name.into(), format!("{batch}"),
+                           format!("{f32_ms:.1}"), format!("{i4_ms:.1}"),
+                           format!("{sp:.2}x"), format!("{vs_scalar:.2}x")]);
             }
-            let sp = f32_ms / i4_ms;
-            println!("  {} b={batch}: f32 {f32_ms:.1}ms i4 {i4_ms:.1}ms → {sp:.2}x",
-                     b.name);
-            t.row(vec![b.name.into(), format!("{batch}"), format!("{f32_ms:.1}"),
-                       format!("{i4_ms:.1}"), format!("{sp:.2}x")]);
         }
     }
     record("table16_prefill_speedup", &t.render())

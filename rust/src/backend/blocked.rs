@@ -1,0 +1,218 @@
+//! `Blocked` backend: cache-blocked, column-tiled GEMM kernels.
+//!
+//! The `ScalarRef` kernels iterate rows-outer / columns-inner, which
+//! streams the whole weight matrix from memory once **per activation
+//! row** — t× more DRAM traffic than necessary.  These kernels invert the
+//! loop nest into column tiles ([`COL_TILE`] weight columns held hot)
+//! with all activation rows inner, so the weight matrix streams exactly
+//! once and activations replay from cache.  Activation rows are quantized
+//! once up front instead of per GEMM row pass.
+//!
+//! Per-column accumulation replicates the `ScalarRef` lane structure
+//! statement-for-statement, so results are **bit-identical** to the
+//! scalar oracle on all three dtypes (integer accumulation is exactly
+//! associative; the f32 lane order is reproduced verbatim).  The
+//! backend property tests pin this down.
+//!
+//! The `*_cols` kernels take a raw output pointer and a `[c0, c1)` column
+//! range so the `Threaded` backend can fan disjoint column ranges of one
+//! output buffer across the worker pool.
+
+use crate::gemm::{nibble_lut, WeightsF32, WeightsI4, WeightsI8};
+
+use super::{kv_dequant_seq, kv_quant_seq, quantize_rows, wht_rows_seq, ComputeBackend};
+
+/// Weight columns kept hot per tile; 4 keeps tile state within L1
+/// alongside one activation row for every shape in the tables.
+pub(crate) const COL_TILE: usize = 4;
+
+/// One f32 column dot — bit-identical to the `gemm::gemm_f32` inner loop.
+#[inline(always)]
+fn dot_f32(xr: &[f32], wc: &[f32], k: usize) -> f32 {
+    let mut acc = 0.0f32;
+    let mut i = 0;
+    let kk = k & !3;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0, 0.0, 0.0);
+    while i < kk {
+        a0 += xr[i] * wc[i];
+        a1 += xr[i + 1] * wc[i + 1];
+        a2 += xr[i + 2] * wc[i + 2];
+        a3 += xr[i + 3] * wc[i + 3];
+        i += 4;
+    }
+    acc += a0 + a1 + a2 + a3;
+    while i < k {
+        acc += xr[i] * wc[i];
+        i += 1;
+    }
+    acc
+}
+
+/// One int8 column dot (i32 accumulation, exactly associative).
+#[inline(always)]
+fn dot_i8(xr: &[i8], wc: &[i8], k: usize) -> i32 {
+    let mut acc = 0i32;
+    let mut i = 0;
+    let kk = k & !3;
+    let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0, 0, 0);
+    while i < kk {
+        a0 += xr[i] as i32 * wc[i] as i32;
+        a1 += xr[i + 1] as i32 * wc[i + 1] as i32;
+        a2 += xr[i + 2] as i32 * wc[i + 2] as i32;
+        a3 += xr[i + 3] as i32 * wc[i + 3] as i32;
+        i += 4;
+    }
+    acc += a0 + a1 + a2 + a3;
+    while i < k {
+        acc += xr[i] as i32 * wc[i] as i32;
+        i += 1;
+    }
+    acc
+}
+
+/// f32 GEMM over columns `[c0, c1)`, all `t` rows.
+///
+/// # Safety
+/// `y` must be valid for `t * w.n` f32 writes; concurrent callers must
+/// use disjoint column ranges.
+pub(crate) unsafe fn f32_cols(x: &[f32], t: usize, w: &WeightsF32,
+                              c0: usize, c1: usize, y: *mut f32) {
+    let (k, n) = (w.k, w.n);
+    debug_assert!(c1 <= n);
+    debug_assert!(x.len() >= t * k);
+    let mut c = c0;
+    while c < c1 {
+        let tile_end = (c + COL_TILE).min(c1);
+        for r in 0..t {
+            let xr = &x[r * k..(r + 1) * k];
+            for cc in c..tile_end {
+                let wc = &w.cols[cc * k..(cc + 1) * k];
+                *y.add(r * n + cc) = dot_f32(xr, wc, k);
+            }
+        }
+        c = tile_end;
+    }
+}
+
+/// int8 GEMM over columns `[c0, c1)` from pre-quantized activation rows
+/// (`codes` is t×k, `row_scales` one scale per row).
+///
+/// # Safety
+/// As [`f32_cols`].
+pub(crate) unsafe fn i8_cols(codes: &[i8], row_scales: &[f32], t: usize,
+                             w: &WeightsI8, c0: usize, c1: usize, y: *mut f32) {
+    let (k, n) = (w.k, w.n);
+    debug_assert!(c1 <= n);
+    debug_assert!(codes.len() >= t * k);
+    let mut c = c0;
+    while c < c1 {
+        let tile_end = (c + COL_TILE).min(c1);
+        for r in 0..t {
+            let xr = &codes[r * k..(r + 1) * k];
+            let xs = row_scales[r];
+            for cc in c..tile_end {
+                let wc = &w.cols[cc * k..(cc + 1) * k];
+                let acc = dot_i8(xr, wc, k);
+                *y.add(r * n + cc) = acc as f32 * xs * w.scales[cc];
+            }
+        }
+        c = tile_end;
+    }
+}
+
+/// Packed-int4 GEMM over columns `[c0, c1)` from pre-quantized activation
+/// rows.  Mirrors the `gemm::gemm_i4` nibble-LUT inner loop per column.
+///
+/// # Safety
+/// As [`f32_cols`].
+pub(crate) unsafe fn i4_cols(codes: &[i8], row_scales: &[f32], t: usize,
+                             w: &WeightsI4, c0: usize, c1: usize, y: *mut f32) {
+    let (k, n) = (w.k, w.n);
+    let kp = k.div_ceil(2);
+    let lut = nibble_lut();
+    debug_assert!(c1 <= n);
+    debug_assert!(codes.len() >= t * k);
+    let mut c = c0;
+    while c < c1 {
+        let tile_end = (c + COL_TILE).min(c1);
+        for r in 0..t {
+            let xr = &codes[r * k..(r + 1) * k];
+            let xs = row_scales[r];
+            for cc in c..tile_end {
+                let wc = &w.cols[cc * kp..(cc + 1) * kp];
+                let pairs = k / 2;
+                let (mut a0, mut a1) = (0i32, 0i32);
+                for i in 0..pairs {
+                    let (lo, hi) = lut[wc[i] as usize];
+                    a0 += xr[2 * i] as i32 * lo as i32;
+                    a1 += xr[2 * i + 1] as i32 * hi as i32;
+                }
+                let mut acc = a0 + a1;
+                if k % 2 == 1 {
+                    let (lo, _) = lut[wc[kp - 1] as usize];
+                    acc += xr[k - 1] as i32 * lo as i32;
+                }
+                *y.add(r * n + cc) = acc as f32 * xs * w.scales[cc];
+            }
+        }
+        c = tile_end;
+    }
+}
+
+/// Cache-blocked single-thread backend.
+pub struct Blocked;
+
+impl ComputeBackend for Blocked {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn gemm_f32(&self, x: &[f32], t: usize, w: &WeightsF32, y: &mut [f32]) {
+        assert_eq!(x.len(), t * w.k);
+        assert_eq!(y.len(), t * w.n);
+        unsafe { f32_cols(x, t, w, 0, w.n, y.as_mut_ptr()) }
+    }
+
+    fn gemm_i8(&self, x: &[f32], t: usize, w: &WeightsI8, bits: u32, clip: f32,
+               y: &mut [f32]) {
+        assert_eq!(x.len(), t * w.k);
+        assert_eq!(y.len(), t * w.n);
+        let (codes, scales) = quantize_rows(x, w.k, bits, clip);
+        unsafe { i8_cols(&codes, &scales, t, w, 0, w.n, y.as_mut_ptr()) }
+    }
+
+    fn gemm_i4(&self, x: &[f32], t: usize, w: &WeightsI4, clip: f32, y: &mut [f32]) {
+        assert_eq!(x.len(), t * w.k);
+        assert_eq!(y.len(), t * w.n);
+        let (codes, scales) = quantize_rows(x, w.k, 4, clip);
+        unsafe { i4_cols(&codes, &scales, t, w, 0, w.n, y.as_mut_ptr()) }
+    }
+
+    fn had_rows(&self, x: &mut [f32], d: usize) {
+        wht_rows_seq(x, d);
+    }
+
+    fn quant_rows(&self, x: &[f32], d: usize, bits: u32, clip: f32,
+                  codes: &mut [i8], scales: &mut [f32]) {
+        for (r, row) in x.chunks_exact(d).enumerate() {
+            scales[r] = crate::gemm::quant_row(row, bits, clip,
+                                               &mut codes[r * d..(r + 1) * d]);
+        }
+    }
+
+    fn kv_quant_slab(&self, x: &[f32], d: usize, group: usize, bits: u32, clip: f32)
+                     -> (Vec<i8>, Vec<f32>, Vec<f32>) {
+        kv_quant_seq(x, d, group, bits, clip)
+    }
+
+    fn kv_dequant(&self, codes: &[i8], scales: &[f32], zeros: &[f32],
+                  group: usize, out: &mut [f32]) {
+        kv_dequant_seq(codes, scales, zeros, group, out);
+    }
+
+    fn par_for(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        for i in 0..n {
+            f(i);
+        }
+    }
+}

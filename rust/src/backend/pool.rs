@@ -1,0 +1,313 @@
+//! Home-grown persistent worker pool behind the [`super::Threaded`]
+//! backend — std-only (no rayon/crossbeam in this environment).
+//!
+//! Model: `lanes` execution lanes = the submitting thread plus
+//! `lanes - 1` long-lived workers parked on a condvar.  A job is a
+//! chunked parallel-for: workers race on an atomic chunk counter, so
+//! uneven chunks self-balance.  `run` blocks until every lane has checked
+//! in, which is what makes the lifetime erasure of the borrowed closure
+//! sound (the borrow strictly outlives every use).
+//!
+//! Re-entrant `run` calls (a task spawning parallel work) execute inline
+//! on the calling lane — nesting degrades gracefully instead of
+//! deadlocking on the submit lock.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+type Task = dyn Fn(usize) + Sync;
+
+#[derive(Clone, Copy)]
+struct Job {
+    /// Lifetime-erased borrow of the caller's closure; only dereferenced
+    /// between job publication and the final `remaining == 0` check-in,
+    /// during which `run` is blocked and the borrow is live.
+    task: &'static Task,
+    n_chunks: usize,
+}
+
+struct State {
+    job: Option<Job>,
+    /// Job sequence number — lets a late-waking worker distinguish "new
+    /// job" from "the job I already finished".
+    seq: u64,
+    /// Workers that have not yet checked in for the current job.
+    remaining: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work: Condvar,
+    done: Condvar,
+    next_chunk: AtomicUsize,
+}
+
+thread_local! {
+    static IN_PARALLEL: Cell<bool> = const { Cell::new(false) };
+}
+
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serializes job submission (one job in flight at a time).
+    submit: Mutex<()>,
+    lanes: usize,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Pool with `lanes` total execution lanes (≥ 1); spawns `lanes - 1`
+    /// worker threads — the submitting thread is always the first lane.
+    pub fn new(lanes: usize) -> WorkerPool {
+        let lanes = lanes.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                seq: 0,
+                remaining: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            next_chunk: AtomicUsize::new(0),
+        });
+        let handles = (1..lanes)
+            .map(|i| {
+                let sh = shared.clone();
+                thread::Builder::new()
+                    .name(format!("quarot-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, submit: Mutex::new(()), lanes, handles }
+    }
+
+    /// Total execution lanes (submitter + workers).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Run `f(i)` for every `i in 0..n_chunks`, distributing chunks over
+    /// all lanes; returns after the last chunk completes.  Chunks must be
+    /// independent (they run concurrently in unspecified order).
+    pub fn run(&self, n_chunks: usize, f: &Task) {
+        if n_chunks == 0 {
+            return;
+        }
+        // Inline paths: no workers, a single chunk, or a re-entrant call
+        // from inside a running task (avoids self-deadlock on `submit`).
+        if self.handles.is_empty()
+            || n_chunks == 1
+            || IN_PARALLEL.with(|p| p.get())
+        {
+            for i in 0..n_chunks {
+                f(i);
+            }
+            return;
+        }
+        // A chunk that panicked on a previous submitter poisons this
+        // mutex on unwind; the guarded section holds no invariant-bearing
+        // state (it only serializes submissions), so clear the poison
+        // instead of bricking the process-global pool.
+        let _guard = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        // SAFETY: workers dereference `task` only while `remaining > 0`,
+        // and `JoinGuard` blocks — even on unwind from a panicking chunk
+        // on this thread — until `remaining == 0`, so `f` strictly
+        // outlives every use.
+        let task: &'static Task = unsafe { std::mem::transmute::<&Task, &'static Task>(f) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            self.shared.next_chunk.store(0, Ordering::SeqCst);
+            st.job = Some(Job { task, n_chunks });
+            st.seq = st.seq.wrapping_add(1);
+            st.remaining = self.handles.len();
+            self.shared.work.notify_all();
+        }
+        let _join = JoinGuard(&self.shared);
+        // The submitting thread is a full lane.
+        IN_PARALLEL.with(|p| p.set(true));
+        loop {
+            let i = self.shared.next_chunk.fetch_add(1, Ordering::Relaxed);
+            if i >= n_chunks {
+                break;
+            }
+            f(i);
+        }
+        IN_PARALLEL.with(|p| p.set(false));
+        // `_join` drops here: waits for every worker to check in and
+        // clears the job.
+    }
+}
+
+/// Blocks on drop until every worker has checked in for the current job,
+/// then clears it — this is what keeps the lifetime erasure in [`WorkerPool::run`]
+/// sound even when a chunk panics on the submitting thread.
+struct JoinGuard<'a>(&'a Shared);
+
+impl Drop for JoinGuard<'_> {
+    fn drop(&mut self) {
+        IN_PARALLEL.with(|p| p.set(false));
+        let mut st = self.0.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.0.done.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IN_PARALLEL.with(|p| p.set(true));
+    let mut last_seq = 0u64;
+    loop {
+        let job;
+        {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(j) = st.job {
+                    if st.seq != last_seq {
+                        last_seq = st.seq;
+                        job = j;
+                        break;
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        }
+        loop {
+            let i = shared.next_chunk.fetch_add(1, Ordering::Relaxed);
+            if i >= job.n_chunks {
+                break;
+            }
+            // A panicking chunk on a worker would leave `remaining` stuck
+            // (deadlocking the submitter) or require unwind-across-job
+            // reasoning; neither is recoverable for a kernel — abort.
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                (job.task)(i)
+            }));
+            if ok.is_err() {
+                eprintln!("worker pool: kernel chunk {i} panicked — aborting");
+                std::process::abort();
+            }
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Lane count for the process: `QUAROT_THREADS` override, else the OS
+/// parallelism report (read once).
+pub fn parallelism() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("QUAROT_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Shared process-wide pool: every `Threaded` backend instance uses this,
+/// so the crate spawns at most one set of workers.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(parallelism()))
+}
+
+/// Raw mutable pointer wrapper for fan-out writes to *disjoint* regions of
+/// one buffer.  Callers must guarantee tasks never touch the same element.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub(crate) fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    pub(crate) fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_chunk_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for n in [1usize, 2, 3, 7, 64, 257] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn reusable_across_many_jobs() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicU64::new(0);
+        for round in 0..50u64 {
+            pool.run(16, &|i| {
+                total.fetch_add(round + i as u64, Ordering::Relaxed);
+            });
+        }
+        // Σ_round Σ_i (round + i) = 50·(0+..+15) + 16·(0+..+49)
+        assert_eq!(total.load(Ordering::Relaxed), 50 * 120 + 16 * 1225);
+    }
+
+    #[test]
+    fn nested_run_degrades_to_inline() {
+        let pool = WorkerPool::new(2);
+        let count = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            // re-entrant: must not deadlock
+            pool.run(4, &|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn single_lane_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let count = AtomicUsize::new(0);
+        pool.run(9, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 9);
+    }
+}

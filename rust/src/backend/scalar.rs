@@ -1,0 +1,67 @@
+//! `ScalarRef` backend: the original single-threaded kernels from
+//! [`crate::gemm`], [`crate::hadamard`] and [`crate::quant::kv`] behind
+//! the [`ComputeBackend`] trait.  This is the correctness oracle every
+//! other backend is property-tested against (bit-exact on the integer
+//! paths), and the baseline the bench tables report speedups over.
+
+use std::cell::RefCell;
+
+use super::{kv_dequant_seq, kv_quant_seq, wht_rows_seq, ComputeBackend};
+use crate::gemm::{self, WeightsF32, WeightsI4, WeightsI8};
+
+thread_local! {
+    // Reused activation-quant scratch, matching what the pre-backend
+    // call sites did with their long-lived `scratch` vectors — the
+    // oracle's bench timings must not pay a per-call allocation the old
+    // code didn't.
+    static SCRATCH: RefCell<Vec<i8>> = const { RefCell::new(Vec::new()) };
+}
+
+pub struct ScalarRef;
+
+impl ComputeBackend for ScalarRef {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn gemm_f32(&self, x: &[f32], t: usize, w: &WeightsF32, y: &mut [f32]) {
+        gemm::gemm_f32(x, t, w, y);
+    }
+
+    fn gemm_i8(&self, x: &[f32], t: usize, w: &WeightsI8, bits: u32, clip: f32,
+               y: &mut [f32]) {
+        SCRATCH.with(|s| gemm::gemm_i8(x, t, w, bits, clip, y, &mut s.borrow_mut()));
+    }
+
+    fn gemm_i4(&self, x: &[f32], t: usize, w: &WeightsI4, clip: f32, y: &mut [f32]) {
+        SCRATCH.with(|s| gemm::gemm_i4(x, t, w, clip, y, &mut s.borrow_mut()));
+    }
+
+    fn had_rows(&self, x: &mut [f32], d: usize) {
+        wht_rows_seq(x, d);
+    }
+
+    fn quant_rows(&self, x: &[f32], d: usize, bits: u32, clip: f32,
+                  codes: &mut [i8], scales: &mut [f32]) {
+        for (r, row) in x.chunks_exact(d).enumerate() {
+            scales[r] = gemm::quant_row(row, bits, clip,
+                                        &mut codes[r * d..(r + 1) * d]);
+        }
+    }
+
+    fn kv_quant_slab(&self, x: &[f32], d: usize, group: usize, bits: u32, clip: f32)
+                     -> (Vec<i8>, Vec<f32>, Vec<f32>) {
+        kv_quant_seq(x, d, group, bits, clip)
+    }
+
+    fn kv_dequant(&self, codes: &[i8], scales: &[f32], zeros: &[f32],
+                  group: usize, out: &mut [f32]) {
+        kv_dequant_seq(codes, scales, zeros, group, out);
+    }
+
+    fn par_for(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        for i in 0..n {
+            f(i);
+        }
+    }
+}

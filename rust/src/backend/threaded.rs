@@ -1,0 +1,201 @@
+//! `Threaded` backend: fans the blocked kernels across the persistent
+//! worker pool ([`super::pool`]).
+//!
+//! Partitioning follows the access patterns of the serving loop:
+//! * GEMMs split over **output columns** — weight columns are contiguous
+//!   (column-major), every lane streams its own disjoint panel, and the
+//!   scheme works for prefill (t ≫ 1) and decode (t = 1) alike;
+//! * row-wise ops (activation quant, online Hadamard, KV codec) split
+//!   over rows/groups;
+//! * the decode tick partitions over **batch slots** via [`par_for`]
+//!   (see `coordinator::batcher`).
+//!
+//! All fan-out writes go to disjoint regions through [`SendPtr`];
+//! numerical results are bit-identical to `ScalarRef` on the integer
+//! paths and to `Blocked` everywhere (same per-element kernels).
+//!
+//! [`par_for`]: ComputeBackend::par_for
+
+use crate::gemm::{quant_row, WeightsF32, WeightsI4, WeightsI8};
+use crate::hadamard;
+use crate::quant::kv;
+
+use super::pool::{self, SendPtr, WorkerPool};
+use super::{blocked, ComputeBackend};
+
+pub struct Threaded {
+    pool: &'static WorkerPool,
+}
+
+impl Threaded {
+    /// Backend over the shared process-wide pool (workers are spawned
+    /// once, lazily, on first use).
+    pub fn new() -> Threaded {
+        Threaded { pool: pool::global() }
+    }
+
+    /// Split `total` work items into (chunk_size, n_chunks): ~4 chunks
+    /// per lane for load balance, but never below `min_chunk` items.
+    fn chunks(total: usize, min_chunk: usize, lanes: usize) -> (usize, usize) {
+        if total == 0 {
+            return (1, 0);
+        }
+        let per = total.div_ceil(lanes * 4).max(min_chunk).max(1);
+        (per, total.div_ceil(per))
+    }
+}
+
+impl Default for Threaded {
+    fn default() -> Threaded {
+        Threaded::new()
+    }
+}
+
+impl ComputeBackend for Threaded {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn gemm_f32(&self, x: &[f32], t: usize, w: &WeightsF32, y: &mut [f32]) {
+        assert_eq!(x.len(), t * w.k);
+        assert_eq!(y.len(), t * w.n);
+        let n = w.n;
+        let (per, n_chunks) = Self::chunks(n, 8, self.pool.lanes());
+        let yp = SendPtr::new(y.as_mut_ptr());
+        self.pool.run(n_chunks, &|i| {
+            let c0 = i * per;
+            let c1 = ((i + 1) * per).min(n);
+            unsafe { blocked::f32_cols(x, t, w, c0, c1, yp.get()) }
+        });
+    }
+
+    fn gemm_i8(&self, x: &[f32], t: usize, w: &WeightsI8, bits: u32, clip: f32,
+               y: &mut [f32]) {
+        assert_eq!(x.len(), t * w.k);
+        assert_eq!(y.len(), t * w.n);
+        let (k, n) = (w.k, w.n);
+        let mut codes = vec![0i8; t * k];
+        let mut scales = vec![0.0f32; t];
+        self.quant_rows(x, k, bits, clip, &mut codes, &mut scales);
+        let (per, n_chunks) = Self::chunks(n, 8, self.pool.lanes());
+        let yp = SendPtr::new(y.as_mut_ptr());
+        let codes = &codes;
+        let scales = &scales;
+        self.pool.run(n_chunks, &|i| {
+            let c0 = i * per;
+            let c1 = ((i + 1) * per).min(n);
+            unsafe { blocked::i8_cols(codes, scales, t, w, c0, c1, yp.get()) }
+        });
+    }
+
+    fn gemm_i4(&self, x: &[f32], t: usize, w: &WeightsI4, clip: f32, y: &mut [f32]) {
+        assert_eq!(x.len(), t * w.k);
+        assert_eq!(y.len(), t * w.n);
+        let (k, n) = (w.k, w.n);
+        let mut codes = vec![0i8; t * k];
+        let mut scales = vec![0.0f32; t];
+        self.quant_rows(x, k, 4, clip, &mut codes, &mut scales);
+        let (per, n_chunks) = Self::chunks(n, 8, self.pool.lanes());
+        let yp = SendPtr::new(y.as_mut_ptr());
+        let codes = &codes;
+        let scales = &scales;
+        self.pool.run(n_chunks, &|i| {
+            let c0 = i * per;
+            let c1 = ((i + 1) * per).min(n);
+            unsafe { blocked::i4_cols(codes, scales, t, w, c0, c1, yp.get()) }
+        });
+    }
+
+    fn had_rows(&self, x: &mut [f32], d: usize) {
+        let rows = x.len() / d;
+        let (per, n_chunks) = Self::chunks(rows, 2, self.pool.lanes());
+        let xp = SendPtr::new(x.as_mut_ptr());
+        self.pool.run(n_chunks, &|i| {
+            let r0 = i * per;
+            let r1 = ((i + 1) * per).min(rows);
+            for r in r0..r1 {
+                // disjoint rows per chunk
+                let row = unsafe {
+                    std::slice::from_raw_parts_mut(xp.get().add(r * d), d)
+                };
+                hadamard::wht(row);
+            }
+        });
+    }
+
+    fn quant_rows(&self, x: &[f32], d: usize, bits: u32, clip: f32,
+                  codes: &mut [i8], scales: &mut [f32]) {
+        let rows = x.len() / d;
+        assert!(codes.len() >= rows * d);
+        assert!(scales.len() >= rows);
+        let (per, n_chunks) = Self::chunks(rows, 4, self.pool.lanes());
+        let cp = SendPtr::new(codes.as_mut_ptr());
+        let sp = SendPtr::new(scales.as_mut_ptr());
+        self.pool.run(n_chunks, &|i| {
+            let r0 = i * per;
+            let r1 = ((i + 1) * per).min(rows);
+            for r in r0..r1 {
+                let out = unsafe {
+                    std::slice::from_raw_parts_mut(cp.get().add(r * d), d)
+                };
+                let s = quant_row(&x[r * d..(r + 1) * d], bits, clip, out);
+                unsafe { *sp.get().add(r) = s };
+            }
+        });
+    }
+
+    fn kv_quant_slab(&self, x: &[f32], d: usize, group: usize, bits: u32, clip: f32)
+                     -> (Vec<i8>, Vec<f32>, Vec<f32>) {
+        assert_eq!(d % group, 0);
+        let rows = x.len() / d;
+        let gpr = d / group;
+        let mut codes = vec![0i8; rows * d];
+        let mut scales = vec![0.0f32; rows * gpr];
+        let mut zeros = vec![0.0f32; rows * gpr];
+        let (per, n_chunks) = Self::chunks(rows, 2, self.pool.lanes());
+        let cp = SendPtr::new(codes.as_mut_ptr());
+        let sp = SendPtr::new(scales.as_mut_ptr());
+        let zp = SendPtr::new(zeros.as_mut_ptr());
+        self.pool.run(n_chunks, &|i| {
+            let r0 = i * per;
+            let r1 = ((i + 1) * per).min(rows);
+            for r in r0..r1 {
+                let row = &x[r * d..(r + 1) * d];
+                for (gi, g) in row.chunks_exact(group).enumerate() {
+                    let (c, s, z) = kv::quant_group(g, bits, clip);
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(
+                            c.as_ptr(), cp.get().add(r * d + gi * group), group);
+                        *sp.get().add(r * gpr + gi) = s;
+                        *zp.get().add(r * gpr + gi) = z;
+                    }
+                }
+            }
+        });
+        (codes, scales, zeros)
+    }
+
+    fn kv_dequant(&self, codes: &[i8], scales: &[f32], zeros: &[f32],
+                  group: usize, out: &mut [f32]) {
+        let n_groups = out.len() / group;
+        assert!(codes.len() >= n_groups * group);
+        assert!(scales.len() >= n_groups && zeros.len() >= n_groups);
+        let (per, n_chunks) = Self::chunks(n_groups, 64, self.pool.lanes());
+        let op = SendPtr::new(out.as_mut_ptr());
+        self.pool.run(n_chunks, &|i| {
+            let g0 = i * per;
+            let g1 = ((i + 1) * per).min(n_groups);
+            for g in g0..g1 {
+                let o = unsafe {
+                    std::slice::from_raw_parts_mut(op.get().add(g * group), group)
+                };
+                kv::dequant_group(&codes[g * group..(g + 1) * group],
+                                  scales[g], zeros[g], o);
+            }
+        });
+    }
+
+    fn par_for(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.pool.run(n, f);
+    }
+}

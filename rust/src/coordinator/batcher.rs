@@ -11,6 +11,7 @@
 //! the numbers the serving benches and the e2e example report.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -18,6 +19,8 @@ use anyhow::Result;
 use super::kvcache::{PagePool, SeqCache};
 use super::runner::{DecodeStaging, Runner};
 use super::sampler::{sample, Sampling};
+use crate::backend::pool::SendPtr;
+use crate::backend::ComputeBackend;
 use crate::util::prng::Rng;
 
 #[derive(Clone, Debug)]
@@ -73,6 +76,9 @@ impl EngineStats {
 /// The generation engine: owns the runner, page pool and slot table.
 pub struct GenerationEngine {
     pub runner: Runner,
+    /// Native compute backend (shared with the runner): staging dequant
+    /// and the per-slot decode-tick fan-out route through this.
+    backend: Arc<dyn ComputeBackend>,
     pool: PagePool,
     slots: Vec<Option<Slot>>,
     queue: VecDeque<(Request, Instant)>,
@@ -93,6 +99,7 @@ impl GenerationEngine {
                                  tokens_per_page).geom();
         let fp = runner.spec.kv_bits == 16;
         GenerationEngine {
+            backend: runner.backend.clone(),
             staging: DecodeStaging::new(&cfg, fp),
             pool: PagePool::new(geom.page_bytes(), pool_pages),
             slots: (0..cfg.decode_batch).map(|_| None).collect(),
@@ -192,6 +199,7 @@ impl GenerationEngine {
         let d = cfg.d_kv();
         let ng = d / cfg.kv_group;
         let fp = self.runner.spec.kv_bits == 16;
+        let backend = self.backend.clone();
         let mut codes = vec![0i8; d];
         let mut scales = vec![0.0f32; ng];
         let mut zeros = vec![0.0f32; ng];
@@ -205,13 +213,8 @@ impl GenerationEngine {
                     if fp {
                         let dst = if which == 0 { &mut self.staging.k_f32 }
                                   else { &mut self.staging.v_f32 };
-                        for gi in 0..ng {
-                            for i in 0..cfg.kv_group {
-                                dst[co + gi * cfg.kv_group + i] =
-                                    codes[gi * cfg.kv_group + i] as f32 * scales[gi]
-                                        + zeros[gi];
-                            }
-                        }
+                        backend.kv_dequant(&codes, &scales, &zeros, cfg.kv_group,
+                                           &mut dst[co..co + d]);
                     } else {
                         let (dst_c, dst_s, dst_z) = if which == 0 {
                             (&mut self.staging.k_codes, &mut self.staging.k_scale,
@@ -229,12 +232,15 @@ impl GenerationEngine {
         }
     }
 
-    /// Append one token's K/V into the paged cache AND the staging view.
-    fn append_token(&mut self, slot: usize, k_new: &[f32], v_new: &[f32]) -> Result<()> {
+    /// Append one token's K/V into the authoritative store of one slot:
+    /// the dense staging view for the fp16 baseline, the packed pages
+    /// otherwise.  Paged slots get their staging write-through afterwards,
+    /// batched over all active slots, in [`Self::refresh_staging_for`].
+    fn append_to_cache(&mut self, slot: usize, k_new: &[f32], v_new: &[f32])
+                       -> Result<()> {
         let cfg = self.runner.cfg.clone();
         let (l_n, b, s) = (cfg.n_layers, cfg.decode_batch, cfg.cache_seq);
         let d = cfg.d_kv();
-        let ng = d / cfg.kv_group;
         let fp = self.runner.spec.kv_bits == 16;
         if fp {
             let sl = self.slots[slot].as_mut().unwrap();
@@ -250,54 +256,64 @@ impl GenerationEngine {
             sl.cache.bump();
             return Ok(());
         }
-        let cache_len;
-        {
-            let sl = self.slots[slot].as_mut().unwrap();
-            cache_len = sl.cache.len;
-            for l in 0..l_n {
-                let o = (l * b + slot) * d;
-                sl.cache.append_layer(&mut self.pool, l, &k_new[o..o + d],
-                                      &v_new[o..o + d], cfg.kv_group)?;
-            }
-            sl.cache.bump();
-        }
-        // staging write-through (read back the quantized token so the dense
-        // view is bit-identical to the authoritative pages)
-        let mut codes = vec![0i8; d];
-        let mut scales = vec![0.0f32; ng];
-        let mut zeros = vec![0.0f32; ng];
-        let sl = self.slots[slot].as_ref().unwrap();
+        let sl = self.slots[slot].as_mut().unwrap();
         for l in 0..l_n {
-            for want_v in [false, true] {
-                sl.cache.read_token(&self.pool, l, cache_len, want_v,
-                                    &mut codes, &mut scales, &mut zeros);
-                let co = ((l * b + slot) * s + cache_len) * d;
-                let go = ((l * b + slot) * s + cache_len) * ng;
-                if fp {
-                    let dst = if want_v { &mut self.staging.v_f32 }
-                              else { &mut self.staging.k_f32 };
-                    for gi in 0..ng {
-                        for i in 0..cfg.kv_group {
-                            dst[co + gi * cfg.kv_group + i] =
-                                codes[gi * cfg.kv_group + i] as f32 * scales[gi]
-                                    + zeros[gi];
-                        }
+            let o = (l * b + slot) * d;
+            sl.cache.append_layer(&mut self.pool, l, &k_new[o..o + d],
+                                  &v_new[o..o + d], cfg.kv_group)?;
+        }
+        sl.cache.bump();
+        Ok(())
+    }
+
+    /// Staging write-through for the just-appended token of every slot in
+    /// `active` (paged caches only): read back the quantized token so the
+    /// dense view is bit-identical to the authoritative pages.  This is
+    /// the decode tick's per-batch-slot fan-out — slots are independent
+    /// and write disjoint staging regions, so the backend may run them in
+    /// parallel ([`ComputeBackend::par_for`]).
+    fn refresh_staging_for(&mut self, active: &[usize]) {
+        let cfg = self.runner.cfg.clone();
+        let (l_n, b, s) = (cfg.n_layers, cfg.decode_batch, cfg.cache_seq);
+        let d = cfg.d_kv();
+        let ng = d / cfg.kv_group;
+        let backend = self.backend.clone();
+        let pool = &self.pool;
+        let slots = &self.slots;
+        let kc = SendPtr::new(self.staging.k_codes.as_mut_ptr());
+        let ks = SendPtr::new(self.staging.k_scale.as_mut_ptr());
+        let kz = SendPtr::new(self.staging.k_zero.as_mut_ptr());
+        let vc = SendPtr::new(self.staging.v_codes.as_mut_ptr());
+        let vs = SendPtr::new(self.staging.v_scale.as_mut_ptr());
+        let vz = SendPtr::new(self.staging.v_zero.as_mut_ptr());
+        backend.par_for(active.len(), &|ai| {
+            let slot = active[ai];
+            let sl = slots[slot].as_ref().unwrap();
+            let t = sl.cache.len - 1; // the token appended this tick
+            let mut codes = vec![0i8; d];
+            let mut scales = vec![0.0f32; ng];
+            let mut zeros = vec![0.0f32; ng];
+            for l in 0..l_n {
+                for want_v in [false, true] {
+                    sl.cache.read_token(pool, l, t, want_v,
+                                        &mut codes, &mut scales, &mut zeros);
+                    let co = ((l * b + slot) * s + t) * d;
+                    let go = ((l * b + slot) * s + t) * ng;
+                    let (dc, ds, dz) = if want_v { (vc, vs, vz) } else { (kc, ks, kz) };
+                    // SAFETY: each active slot owns disjoint staging
+                    // regions (indexed by `slot`), and par_for joins
+                    // before the buffers are read again.
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(codes.as_ptr(),
+                                                      dc.get().add(co), d);
+                        std::ptr::copy_nonoverlapping(scales.as_ptr(),
+                                                      ds.get().add(go), ng);
+                        std::ptr::copy_nonoverlapping(zeros.as_ptr(),
+                                                      dz.get().add(go), ng);
                     }
-                } else {
-                    let (dst_c, dst_s, dst_z) = if want_v {
-                        (&mut self.staging.v_codes, &mut self.staging.v_scale,
-                         &mut self.staging.v_zero)
-                    } else {
-                        (&mut self.staging.k_codes, &mut self.staging.k_scale,
-                         &mut self.staging.k_zero)
-                    };
-                    dst_c[co..co + d].copy_from_slice(&codes);
-                    dst_s[go..go + ng].copy_from_slice(&scales);
-                    dst_z[go..go + ng].copy_from_slice(&zeros);
                 }
             }
-        }
-        Ok(())
+        });
     }
 
     /// One engine tick: admit, batched decode, append, sample, retire.
@@ -326,8 +342,14 @@ impl GenerationEngine {
 
         let v = cfg.vocab;
         let mut produced = 0;
+        // Phase 1: sample + retire, in slot order (keeps the RNG stream
+        // and therefore generations identical to the sequential engine).
+        // Finished slots release their pages *before* any appends, so a
+        // tight pool can recycle pages within the tick, and a retiring
+        // slot's final K/V — which nothing would ever read — is never
+        // appended at all.
+        let mut survivors: Vec<usize> = Vec::with_capacity(active.len());
         for &i in &active {
-            self.append_token(i, &k_new, &v_new)?;
             let sl = self.slots[i].as_mut().unwrap();
             let next = sample(&logits[i * v..(i + 1) * v], sl.req.sampling,
                               &mut self.rng) as u16;
@@ -335,8 +357,10 @@ impl GenerationEngine {
             sl.next_token = next;
             produced += 1;
             let hit_stop = sl.req.stop_token == Some(next);
+            // `+ 2` = this tick's append (phase 2) plus the next tick's —
+            // the same bound the old post-append `len + 1` check enforced.
             let full = sl.generated.len() >= sl.req.max_new_tokens
-                || sl.cache.len + 1 >= cfg.cache_seq;
+                || sl.cache.len + 2 >= cfg.cache_seq;
             if hit_stop || full {
                 let mut slot = self.slots[i].take().unwrap();
                 let decode_ms = slot.started.elapsed().as_secs_f64() * 1e3;
@@ -350,7 +374,18 @@ impl GenerationEngine {
                     decode_ms,
                     queued_ms: slot.enqueued.elapsed().as_secs_f64() * 1e3,
                 });
+            } else {
+                survivors.push(i);
             }
+        }
+        // Phase 2: append into the authoritative caches (page allocation
+        // is shared state — sequential), then fan the staging
+        // write-through over batch slots on the compute backend.
+        for &i in &survivors {
+            self.append_to_cache(i, &k_new, &v_new)?;
+        }
+        if self.runner.spec.kv_bits != 16 && !survivors.is_empty() {
+            self.refresh_staging_for(&survivors);
         }
         let cache_bytes: usize = self.slots.iter().flatten().map(|s| s.cache.bytes()).sum();
         let fp16_bytes: usize = self.slots.iter().flatten()

@@ -16,10 +16,14 @@ use crate::model::ModelConfig;
 use crate::quant::kv;
 
 /// Fixed-size page pool with explicit alloc/free and usage accounting.
+/// Double frees are rejected (hard panic) via an O(1) allocation bitmap —
+/// a freed-twice page would otherwise be handed to two sequences and
+/// silently cross-contaminate their caches.
 pub struct PagePool {
     page_bytes: usize,
     pages: Vec<Box<[u8]>>,
     free: Vec<usize>,
+    allocated: Vec<bool>,
     pub high_water: usize,
 }
 
@@ -33,6 +37,7 @@ impl PagePool {
                 .map(|_| vec![0u8; page_bytes].into_boxed_slice())
                 .collect(),
             free: (0..n_pages).rev().collect(),
+            allocated: vec![false; n_pages],
             high_water: 0,
         }
     }
@@ -40,6 +45,7 @@ impl PagePool {
     pub fn alloc(&mut self) -> Result<PageId> {
         match self.free.pop() {
             Some(id) => {
+                self.allocated[id] = true;
                 self.high_water = self.high_water.max(self.in_use());
                 Ok(id)
             }
@@ -48,7 +54,9 @@ impl PagePool {
     }
 
     pub fn release(&mut self, id: PageId) {
-        debug_assert!(!self.free.contains(&id), "double free of page {id}");
+        assert!(self.allocated[id],
+                "double free of page {id} (or free of a never-allocated page)");
+        self.allocated[id] = false;
         self.free.push(id);
     }
 
@@ -289,6 +297,89 @@ mod tests {
         pool.release(e);
         assert_eq!(pool.in_use(), 0);
         assert_eq!(pool.high_water, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_rejected() {
+        let mut pool = PagePool::new(8, 2);
+        let a = pool.alloc().unwrap();
+        pool.release(a);
+        pool.release(a);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn free_of_never_allocated_page_rejected() {
+        let mut pool = PagePool::new(8, 4);
+        pool.release(3);
+    }
+
+    #[test]
+    fn high_water_tracks_peak_not_current() {
+        let mut pool = PagePool::new(16, 8);
+        let ids: Vec<_> = (0..5).map(|_| pool.alloc().unwrap()).collect();
+        assert_eq!(pool.high_water, 5);
+        for id in ids {
+            pool.release(id);
+        }
+        assert_eq!(pool.in_use(), 0);
+        assert_eq!(pool.high_water, 5, "high water must not recede");
+        let _ = pool.alloc().unwrap();
+        assert_eq!(pool.high_water, 5, "re-alloc below peak keeps peak");
+    }
+
+    /// SeqCache append → dequant round-trip at both serving KV widths.
+    #[test]
+    fn append_dequant_roundtrip_kv4_kv8() {
+        for bits in [4u32, 8] {
+            let cfg = cfg();
+            let geom = SeqCache::new(&cfg, bits, 1.0, 8).geom();
+            let mut pool = PagePool::new(geom.page_bytes(), 64);
+            let mut cache = SeqCache::new(&cfg, bits, 1.0, 8);
+            let mut rng = Rng::new(bits as u64);
+            let d = cfg.d_kv();
+            let mut toks = Vec::new();
+            for _ in 0..7 {
+                let k: Vec<f32> = rng.normal_vec(d);
+                let v: Vec<f32> = rng.normal_vec(d);
+                for l in 0..cfg.n_layers {
+                    cache.append_layer(&mut pool, l, &k, &v, cfg.kv_group).unwrap();
+                }
+                cache.bump();
+                toks.push((k, v));
+            }
+            let qmax = ((1u32 << bits) - 1) as f32;
+            let mut codes = vec![0i8; d];
+            let mut scales = vec![0.0f32; geom.groups];
+            let mut zeros = vec![0.0f32; geom.groups];
+            for (t, (k, v)) in toks.iter().enumerate() {
+                for (want_v, x) in [(false, k), (true, v)] {
+                    cache.read_token(&pool, 0, t, want_v,
+                                     &mut codes, &mut scales, &mut zeros);
+                    let mut back = vec![0.0f32; d];
+                    for (gi, chunk) in back.chunks_mut(cfg.kv_group).enumerate() {
+                        for (i, o) in chunk.iter_mut().enumerate() {
+                            *o = codes[gi * cfg.kv_group + i] as f32 * scales[gi]
+                                + zeros[gi];
+                        }
+                    }
+                    // per-group half-step bound at the group's own range
+                    for (gi, g) in x.chunks(cfg.kv_group).enumerate() {
+                        let mx = g.iter().fold(f32::MIN, |m, &v| m.max(v));
+                        let mn = g.iter().fold(f32::MAX, |m, &v| m.min(v));
+                        let step = (mx - mn) / qmax;
+                        for (i, (&a, &b)) in g.iter()
+                            .zip(&back[gi * cfg.kv_group..(gi + 1) * cfg.kv_group])
+                            .enumerate()
+                        {
+                            assert!((a - b).abs() <= step / 2.0 + 1e-4,
+                                    "kv{bits} tok {t} group {gi} elem {i}: {a} vs {b}");
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -3,8 +3,11 @@
 //! `prefill` / `decode` / `collect` calls the batcher and the eval harness
 //! share.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Context, Result};
 
+use crate::backend::{self, ComputeBackend};
 use crate::model::{ModelConfig, Weights};
 use crate::quant::{self, sym_levels};
 use crate::runtime::{Engine, HostTensor};
@@ -134,6 +137,11 @@ pub struct Runner {
     pub engine: Engine,
     pub cfg: ModelConfig,
     pub spec: QuantSpec,
+    /// Native compute backend for the serving hot paths (weight prep
+    /// fan-out here; staging dequant + slot fan-out in the batcher).
+    /// Selected via `backend::default_backend()` — `--backend` flag /
+    /// `QUAROT_BACKEND` env, defaulting to shape-aware auto.
+    pub backend: Arc<dyn ComputeBackend>,
     prefill_graph: String,
     decode_graph: String,
 }
@@ -160,7 +168,14 @@ impl Runner {
         if engine.has_graph(&decode_graph) {
             engine.set_weights(&decode_graph, &prepared)?;
         }
-        Ok(Runner { engine, cfg, spec, prefill_graph, decode_graph })
+        Ok(Runner {
+            engine,
+            cfg,
+            spec,
+            backend: backend::default_backend(),
+            prefill_graph,
+            decode_graph,
+        })
     }
 
     /// Prefill `tokens` (padded to max_seq internally).  Returns
@@ -369,12 +384,12 @@ pub fn prepare_weights(cfg: &ModelConfig, order: &[String], weights: &Weights,
     match &spec.weights {
         WeightQuant::None => {}
         WeightQuant::Rtn(qcfg) => {
-            for (name, layers) in mats.iter_mut() {
-                if name == "embed" || name == "lm_head" {
-                    continue;
-                }
-                for m in layers.iter_mut() {
-                    if spec.outliers > 0 {
+            if spec.outliers > 0 {
+                for (name, layers) in mats.iter_mut() {
+                    if name == "embed" || name == "lm_head" {
+                        continue;
+                    }
+                    for m in layers.iter_mut() {
                         // QUIK: keep calibrated outlier input rows exact
                         let site = site_of_weight(name);
                         let stats = stats.context("QUIK requires calib stats")?;
@@ -388,10 +403,25 @@ pub fn prepare_weights(cfg: &ModelConfig, order: &[String], weights: &Weights,
                         }
                         let outl = quant::outlier::top_k_outliers(&amax, spec.outliers);
                         quant::outlier::fake_quant_weight_with_outliers(m, &outl, qcfg);
-                    } else {
-                        quant::rtn::fake_quant_weight(m, qcfg);
                     }
                 }
+            } else {
+                // Plain RTN: the per-column clip search is independent per
+                // matrix — fan it over the compute backend (disjoint &mut
+                // access through SendPtr; par_for joins before we read).
+                let ptrs: Vec<crate::backend::pool::SendPtr<Mat>> = mats
+                    .iter_mut()
+                    .filter(|(name, _)| name.as_str() != "embed"
+                            && name.as_str() != "lm_head")
+                    .flat_map(|(_, layers)| layers.iter_mut())
+                    .map(|m| crate::backend::pool::SendPtr::new(m as *mut Mat))
+                    .collect();
+                let backend = backend::default_backend();
+                let qcfg = *qcfg;
+                backend.par_for(ptrs.len(), &|i| {
+                    let m = unsafe { &mut *ptrs[i].get() };
+                    quant::rtn::fake_quant_weight(m, &qcfg);
+                });
             }
         }
         WeightQuant::Gptq(gcfg, stats) => {

@@ -16,6 +16,12 @@
 //! All take activations row-major (T × K) and weights column-major panels
 //! (K × N packed as N-major), and fuse the dequant epilogue
 //! (row-scale × col-scale) like the paper's kernel.
+//!
+//! These free functions are the `ScalarRef` kernels of the pluggable
+//! [`crate::backend`] subsystem — the bit-exact oracle the `Blocked` and
+//! `Threaded` backends are property-tested against.  Serving and bench
+//! code should go through [`crate::backend::ComputeBackend`] rather than
+//! calling these directly.
 
 /// Column-major weight container for the GEMM kernels: `data[c][k]`.
 pub struct WeightsF32 {
@@ -56,18 +62,32 @@ impl WeightsF32 {
 
 impl WeightsI8 {
     /// Per-column symmetric quantization of a row-major (k × n) f32 weight.
+    ///
+    /// Codes use the **full signed range** `[-2^(b-1), 2^(b-1)-1]` (with
+    /// `levels = sym_levels(bits) = 2^(b-1)-1`): the scale maps ±amax to
+    /// ±(levels + 0.5), so the negative extreme rounds to -(levels+1)
+    /// (e.g. -8 at 4 bits) while the positive extreme clamps to +levels.
+    /// The old code clamped at -levels, wasting the bottom code — an
+    /// off-by-one at the negative end of the packed containers.
+    ///
+    /// Note this full-range convention applies to the *perf-path*
+    /// integer containers (`WeightsI8`/`WeightsI4`) only; the accuracy
+    /// pipeline's fake-quantizers (`quant::rtn`, and the python reference
+    /// kernel they mirror) deliberately keep the restricted ±levels grid
+    /// so their outputs stay bit-comparable with the compiled graphs.
     pub fn quantize(w: &[f32], k: usize, n: usize, bits: u32) -> Self {
         let levels = crate::quant::sym_levels(bits) as f32;
         let mut scales = vec![0.0f32; n];
         for c in 0..n {
             let amax = (0..k).fold(0.0f32, |m, r| m.max(w[r * n + c].abs()));
-            scales[c] = amax.max(1e-8) / levels;
+            scales[c] = amax.max(1e-8) / (levels + 0.5);
         }
         let mut cols = vec![0i8; k * n];
         for c in 0..n {
             for r in 0..k {
-                cols[c * k + r] =
-                    (w[r * n + c] / scales[c]).round().clamp(-levels, levels) as i8;
+                cols[c * k + r] = (w[r * n + c] / scales[c])
+                    .round()
+                    .clamp(-(levels + 1.0), levels) as i8;
             }
         }
         WeightsI8 { k, n, cols, scales }
@@ -181,7 +201,7 @@ pub fn gemm_i8(x: &[f32], t: usize, w: &WeightsI8, bits: u32, clip: f32,
 /// scalar core (EXPERIMENTS.md §Perf).
 static NIBBLE_LUT: std::sync::OnceLock<[(i8, i8); 256]> = std::sync::OnceLock::new();
 
-fn nibble_lut() -> &'static [(i8, i8); 256] {
+pub(crate) fn nibble_lut() -> &'static [(i8, i8); 256] {
     NIBBLE_LUT.get_or_init(|| {
         std::array::from_fn(|b| {
             let byte = b as u8;
@@ -281,6 +301,32 @@ mod tests {
         gemm_i8(&x, 2, &w8, 4, 0.9, &mut y8, &mut Vec::new());
         gemm_i4(&x, 2, &w4, 0.9, &mut y4, &mut Vec::new());
         prop::assert_close(&y4, &y8, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn symmetric_weight_quant_uses_full_signed_range() {
+        // regression: the negative extreme must reach -(2^(b-1)), not
+        // stop one code short at -(2^(b-1)-1).  amax = 7.5 makes the
+        // scale exactly 1.0, so ±amax/scale = ±7.5 exactly: round() goes
+        // away from zero, the negative end lands on -8, the positive end
+        // clamps to +7.
+        let w = vec![7.5f32, -7.5, 3.0, -1.0];
+        let q = WeightsI8::quantize(&w, 4, 1, 4);
+        let min = q.cols.iter().copied().min().unwrap();
+        let max = q.cols.iter().copied().max().unwrap();
+        assert_eq!(min, -8, "negative end must use the full signed range");
+        assert_eq!(max, 7);
+        // round-trip error stays within half a quantization step
+        for (&wi, &c) in w.iter().zip(&q.cols) {
+            let back = c as f32 * q.scales[0];
+            assert!((wi - back).abs() <= q.scales[0] * 0.5 + 1e-6,
+                    "{wi} vs {back}");
+        }
+        // int4 packed container carries the same full-range codes
+        let q4 = WeightsI4::quantize(&w, 4, 1);
+        let mut codes = vec![0i8; 4];
+        crate::quant::kv::unpack_nibbles(&q4.cols, 4, &mut codes);
+        assert_eq!(codes, q.cols);
     }
 
     #[test]

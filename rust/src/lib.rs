@@ -14,6 +14,10 @@
 //! * [`tensor`]    — row-major f32 matrices for the offline toolchain.
 //! * [`linalg`]    — Cholesky / triangular solves / QR (GPTQ + Table 8).
 //! * [`hadamard`]  — fast Walsh–Hadamard transforms incl. Kronecker H12/H20.
+//! * [`backend`]   — pluggable compute backends (`ComputeBackend` trait):
+//!                   scalar oracle, cache-blocked, and pool-threaded
+//!                   kernels for every hot op, with shape-aware auto
+//!                   selection (`--backend` / `QUAROT_BACKEND` override).
 //! * [`quant`]     — RTN / GPTQ / SmoothQuant / QUIK weight quantizers,
 //!                   group-wise asymmetric KV codec, int4 packing.
 //! * [`gemm`]      — native f32 / int8 / packed-int4 GEMM (Fig. 7 substrate).
@@ -29,6 +33,7 @@
 //! * [`bench_support`] — shared workload generators for `cargo bench`.
 
 pub mod attention;
+pub mod backend;
 pub mod bench_support;
 pub mod coordinator;
 pub mod eval;

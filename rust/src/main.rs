@@ -49,6 +49,15 @@ fn spec_from_args(a: &Args) -> Result<QuantSpec> {
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    // Compute-backend selection applies to every subcommand (serve /
+    // generate / ppl / ...).  Default is shape-aware auto; QUAROT_BACKEND
+    // is the env-var equivalent, QUAROT_THREADS caps the worker pool.
+    if let Some(b) = args.get("backend") {
+        let kind = quarot::backend::BackendKind::parse(b).with_context(|| {
+            format!("unknown backend '{b}' (scalar|blocked|threaded|auto)")
+        })?;
+        quarot::backend::set_default(kind);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "serve" => serve(&args),
@@ -63,6 +72,7 @@ fn main() -> Result<()> {
                 "quarot — outlier-free 4-bit inference (paper reproduction)\n\
                  usage: quarot <serve|generate|ppl|zeroshot|outliers|verify|info>\n\
                  common flags: --model tiny-mha --scheme quarot-int4\n\
+                               --backend scalar|blocked|threaded|auto (default auto)\n\
                  see README.md for the full matrix"
             );
             Ok(())

@@ -1,0 +1,222 @@
+//! Offline drop-in subset of the `anyhow` API.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides exactly the surface the workspace uses: [`Error`], [`Result`],
+//! the [`Context`] extension trait (on `Result` and `Option`), and the
+//! [`anyhow!`] / [`bail!`] macros.  Error values carry a plain context
+//! stack (no backtraces, no downcasting) — enough for CLI diagnostics and
+//! `?`-conversion from any `std::error::Error`.
+//!
+//! Mirrors anyhow's coherence trick: `Error` deliberately does **not**
+//! implement `std::error::Error`, which is what lets the blanket
+//! `From<E: std::error::Error>` impl and the `Context` impls coexist.
+
+use std::fmt;
+
+/// Dynamic error: a stack of context messages, innermost first.
+pub struct Error {
+    stack: Vec<String>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { stack: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.stack.push(context.to_string());
+        self
+    }
+
+    /// Context frames, outermost first (like anyhow's `chain()`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> + '_ {
+        self.stack.iter().rev().map(|s| s.as_str())
+    }
+
+    /// The outermost (most recently attached) message.
+    pub fn root_message(&self) -> &str {
+        self.stack.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.root_message())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.root_message())?;
+        let mut causes = self.stack.iter().rev().skip(1).peekable();
+        if causes.peek().is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut stack = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            stack.insert(0, s.to_string());
+            src = s.source();
+        }
+        Error { stack }
+    }
+}
+
+mod ext {
+    use super::*;
+
+    pub trait StdError {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            Error::from(self).context(context)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(ext::StdError::ext_context(e, context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(ext::StdError::ext_context(e, f())),
+        }
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening archive").unwrap_err();
+        assert_eq!(e.to_string(), "opening archive");
+        assert!(format!("{e:?}").contains("missing"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("field {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "field x");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn failing() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(failing().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn chained_context_stacks() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        assert_eq!(e.to_string(), "outer");
+        let frames: Vec<&str> = e.chain().collect();
+        assert_eq!(frames, vec!["outer", "mid", "inner"]);
+    }
+}
