@@ -1,17 +1,24 @@
-//! Quickstart: load the QuaRot-INT4 model, generate a few sequences, and
-//! compare against the FP16 baseline — the 60-second tour of the public API.
+//! Quickstart: load the QuaRot-INT4 model, stream a generation through
+//! the unified inference API, and compare against the FP16 baseline —
+//! the 60-second tour of the public API.
 //!
 //! Run: `cargo run --release --example quickstart` (after `make artifacts`).
 
 use anyhow::Result;
 
+use quarot::api::{GenerationEvent, GenerationParams, LocalSession, SessionConfig};
 use quarot::bench_support::Artifacts;
-use quarot::coordinator::batcher::{GenerationEngine, Request};
+use quarot::coordinator::batcher::GenerationEngine;
 use quarot::coordinator::runner::QuantSpec;
-use quarot::coordinator::sampler::Sampling;
 
 fn main() -> Result<()> {
-    let art = Artifacts::load("tiny-mha")?;
+    let art = match Artifacts::load("tiny-mha") {
+        Ok(a) => a,
+        Err(_) => {
+            eprintln!("[skip] artifacts missing — run `make artifacts`");
+            return Ok(());
+        }
+    };
 
     // A prompt from the held-out corpus (token ids — the synthetic language
     // has no detokenizer; see DESIGN.md §1).
@@ -24,24 +31,36 @@ fn main() -> Result<()> {
     ] {
         println!("== {label} ==");
         let runner = art.runner(spec, None)?;
-        let mut engine = GenerationEngine::new(runner, 512, 7);
-        engine.submit(Request {
-            id: 0,
-            prompt: prompt.clone(),
-            max_new_tokens: 24,
-            sampling: Sampling::Greedy,
-            stop_token: None,
-        });
-        for c in engine.run_to_completion()? {
-            println!("prompt  {:?}", prompt);
-            println!("output  {:?}", c.tokens);
-            println!("ttft {:.1} ms | {:.1} tok/s | peak cache {} B \
-                      (fp16-equiv {} B)",
-                     c.ttft_ms,
-                     c.tokens.len() as f64 / (c.decode_ms / 1e3).max(1e-9),
-                     engine.stats.peak_cache_bytes,
-                     engine.stats.peak_cache_fp16_bytes);
+        let session = LocalSession::new(GenerationEngine::new(runner, 512, 7),
+                                        SessionConfig::default());
+        let handle = session
+            .submit(GenerationParams::new(prompt.clone()).max_new(24))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        // consume the event stream: tokens arrive one by one
+        println!("prompt  {prompt:?}");
+        print!("output  ");
+        let mut done = None;
+        while let Some(ev) = handle.next_event()? {
+            match ev {
+                GenerationEvent::Token { token, .. } => print!("{token} "),
+                GenerationEvent::Finished { reason, stats } => {
+                    done = Some((reason, stats));
+                }
+                GenerationEvent::Failed { error } => {
+                    anyhow::bail!("generation failed: {error}");
+                }
+                _ => {}
+            }
         }
+        println!();
+        let (reason, stats) = done.expect("stream must terminate");
+        let engine_stats = session.stats();
+        println!("finish {reason} | ttft {:.1} ms | {:.1} tok/s | \
+                  peak cache {} B (fp16-equiv {} B)",
+                 stats.ttft_ms, stats.tokens_per_sec(),
+                 engine_stats.peak_cache_bytes,
+                 engine_stats.peak_cache_fp16_bytes);
         println!();
     }
     Ok(())

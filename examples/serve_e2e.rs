@@ -1,22 +1,28 @@
 //! End-to-end serving validation (the required full-system driver).
 //!
 //! Boots the complete stack — AOT-compiled QuaRot-INT4 graphs, paged
-//! quantized KV cache, continuous batcher, TCP server — submits a batch of
-//! concurrent generation requests through the network front-end, and
-//! reports per-request latency, aggregate throughput, KV-cache memory vs
-//! the FP16-equivalent, and the held-out perplexity of the served INT4
-//! model next to the f32 baseline.  Results are recorded in
-//! EXPERIMENTS.md §E2E.
+//! quantized KV cache, continuous batcher, TCP server speaking the v2
+//! event-frame protocol — and exercises it three ways:
+//!
+//! 1. a batch of concurrent clients streaming token events and reporting
+//!    per-request latency + aggregate throughput,
+//! 2. one client interleaving two requests on a single connection and
+//!    **cancelling** one mid-generation (pages must return to the pool,
+//!    every stream must end in exactly one terminal event),
+//! 3. held-out perplexity of the served INT4 model next to f32.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
 //!
 //! Run: `cargo run --release --example serve_e2e [-- --requests 12]`.
 
 use anyhow::Result;
 
+use quarot::api::{FinishReason, GenerationEvent, GenerationParams};
 use quarot::bench_support::{record, Artifacts};
 use quarot::coordinator::batcher::GenerationEngine;
 use quarot::coordinator::runner::QuantSpec;
 use quarot::eval;
-use quarot::server::{serve, Client};
+use quarot::server::{serve, Client, DEFAULT_QUEUE_BOUND};
 use quarot::util::bench::Table;
 use quarot::util::cli::Args;
 use quarot::util::prng::Rng;
@@ -27,6 +33,14 @@ fn main() -> Result<()> {
     let n_requests = args.usize_or("requests", 10);
     let max_new = args.usize_or("max-new", 24);
 
+    let art = match Artifacts::load(&model) {
+        Ok(a) => a,
+        Err(_) => {
+            eprintln!("[skip] artifacts missing — run `make artifacts`");
+            return Ok(());
+        }
+    };
+
     println!("[e2e] starting server with QuaRot-INT4 engine ({model})...");
     let m2 = model.clone();
     let handle = serve(
@@ -36,11 +50,11 @@ fn main() -> Result<()> {
             Ok(GenerationEngine::new(runner, 2048, 7))
         },
         0,
+        DEFAULT_QUEUE_BOUND,
     )?;
     let port = handle.port;
 
     // build prompts from held-out data
-    let art = Artifacts::load(&model)?;
     let eval_toks = art.corpus.split("eval")?;
     let mut rng = Rng::new(42);
     let prompts: Vec<Vec<u16>> = (0..n_requests)
@@ -51,23 +65,18 @@ fn main() -> Result<()> {
         })
         .collect();
 
-    // concurrent clients
-    println!("[e2e] submitting {n_requests} concurrent requests...");
+    // phase 1: concurrent streaming clients
+    println!("[e2e] submitting {n_requests} concurrent streaming requests...");
     let t0 = std::time::Instant::now();
     let mut joins = Vec::new();
     for p in prompts {
         joins.push(std::thread::spawn(move || -> Result<(f64, f64, usize)> {
-            let mut c = Client::connect(port)?;
-            let resp = c.generate(&p, max_new)?;
-            let err = resp.get("error").and_then(|e| e.as_str());
-            if let Some(e) = err {
-                anyhow::bail!("server error: {e}");
-            }
-            Ok((
-                resp.get("ttft_ms").and_then(|v| v.as_f64()).unwrap_or(-1.0),
-                resp.get("tokens_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0),
-                resp.get("tokens").and_then(|v| v.as_arr()).map(|a| a.len()).unwrap_or(0),
-            ))
+            let c = Client::connect(port)?;
+            let h = c.submit(&GenerationParams::new(p).max_new(max_new))
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let out = h.wait()?;
+            Ok((out.stats.ttft_ms, out.stats.tokens_per_sec(),
+                out.tokens.len()))
         }));
     }
     let mut ttfts = Vec::new();
@@ -80,6 +89,12 @@ fn main() -> Result<()> {
         total_tokens += n;
     }
     let wall = t0.elapsed().as_secs_f64();
+
+    // phase 2: interleaved token frames on ONE connection + mid-flight
+    // cancellation — the acceptance scenario for the event protocol
+    println!("[e2e] interleave + cancel on a single connection...");
+    let interleave = run_interleave_cancel(port, eval_toks)?;
+
     let mut stats_client = Client::connect(port)?;
     let stats = stats_client.stats()?;
     handle.shutdown();
@@ -92,6 +107,9 @@ fn main() -> Result<()> {
     let cache_fp16 = stats.get("peak_cache_fp16_bytes").and_then(|v| v.as_f64())
         .unwrap_or(0.0);
     let saving = cache_fp16 / cache_b.max(1.0);
+    let pool_after = stats.get("pool_pages_in_use").and_then(|v| v.as_f64())
+        .unwrap_or(-1.0);
+    assert_eq!(pool_after, 0.0, "KV pages leaked after all requests drained");
 
     // accuracy of the served model vs baseline
     println!("[e2e] measuring served-model perplexity vs f32 baseline...");
@@ -113,6 +131,8 @@ fn main() -> Result<()> {
     t.row(vec!["p95 TTFT (ms)".into(), format!("{p95:.1}")]);
     t.row(vec!["mean per-req decode tok/s".into(),
                format!("{:.1}", tps.iter().sum::<f64>() / tps.len() as f64)]);
+    t.row(vec!["interleave/cancel check".into(), interleave]);
+    t.row(vec!["pool pages after drain".into(), format!("{pool_after:.0}")]);
     t.row(vec!["peak KV cache (packed B)".into(), format!("{cache_b:.0}")]);
     t.row(vec!["peak KV cache (fp16-equiv B)".into(), format!("{cache_fp16:.0}")]);
     t.row(vec!["KV memory saving ×".into(), format!("{saving:.2}")]);
@@ -120,4 +140,49 @@ fn main() -> Result<()> {
     t.row(vec!["ppl f32 baseline".into(), format!("{ppl_fp:.3}")]);
     record("e2e_serving", &t.render())?;
     Ok(())
+}
+
+/// Two requests on one connection; request B is cancelled after its first
+/// few token frames.  Asserts both streams terminate in exactly one
+/// terminal event with the right reasons.
+fn run_interleave_cancel(port: u16, eval_toks: &[u16]) -> Result<String> {
+    let c = Client::connect(port)?;
+    let ha = c.submit(&GenerationParams::new(eval_toks[..8].to_vec()).max_new(48))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    // B gets a budget ~190 ticks long and is cancelled at its first token
+    // frame, so the cancel cannot lose the race to natural completion
+    let hb = c.submit(&GenerationParams::new(eval_toks[40..48].to_vec()).max_new(190))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // pull B until its first token streams, then cancel it mid-generation
+    let mut b_tokens = 0usize;
+    let mut b_terminals = 0usize;
+    let mut b_reason = None;
+    while let Some(ev) = hb.next_event()? {
+        match ev {
+            GenerationEvent::Token { .. } => {
+                b_tokens += 1;
+                if b_tokens == 1 {
+                    hb.cancel()?;
+                }
+            }
+            GenerationEvent::Finished { reason, .. } => {
+                b_terminals += 1;
+                b_reason = Some(reason);
+            }
+            GenerationEvent::Failed { .. } => b_terminals += 1,
+            _ => {}
+        }
+    }
+    // A must still run to completion, untouched by B's cancellation
+    let out_a = ha.wait()?;
+    assert_eq!(b_terminals, 1, "request B must see exactly one terminal event");
+    assert_eq!(b_reason, Some(FinishReason::Cancelled));
+    assert!(b_tokens < 190, "cancel must land mid-generation");
+    assert!(!out_a.tokens.is_empty());
+    assert!(matches!(out_a.reason,
+                     FinishReason::MaxTokens | FinishReason::CacheFull),
+            "A must run to its natural finish, got {}", out_a.reason);
+    Ok(format!("ok (A: {} tokens {}, B: cancelled after {} tokens)",
+               out_a.tokens.len(), out_a.reason, b_tokens))
 }

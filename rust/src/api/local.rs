@@ -1,0 +1,161 @@
+//! In-process [`InferenceService`]: a [`LocalSession`] wraps the
+//! continuous-batching [`GenerationEngine`] and drives it lazily — the
+//! consuming thread ticks the engine whenever a handle asks for an event
+//! (the PJRT executables are not `Send`, so there is no background
+//! thread; the TCP server puts the session on its own engine thread).
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::{EventSource, GenerationEvent, GenerationParams, InferenceService,
+            RequestHandle, RequestId, SubmitError};
+use crate::coordinator::batcher::{EngineStats, GenerationEngine};
+
+/// Session-level knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionConfig {
+    /// Bound on the waiting queue; submissions beyond it are rejected
+    /// with [`SubmitError::QueueFull`].
+    pub queue_bound: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> SessionConfig {
+        SessionConfig { queue_bound: 256 }
+    }
+}
+
+struct LocalCore {
+    engine: GenerationEngine,
+    /// Undelivered events in arrival order.  One shared queue serves both
+    /// consumption styles: handles remove the first event matching their
+    /// id; multiplexed consumers ([`LocalSession::poll_events`]) drain
+    /// from the front regardless of id.
+    events: VecDeque<(RequestId, GenerationEvent)>,
+}
+
+impl LocalCore {
+    fn drain_engine(&mut self) {
+        self.events.extend(self.engine.take_events());
+    }
+
+    /// One engine tick; a tick-level error fails every in-flight request
+    /// (each gets its `Failed` event) instead of wedging the session.
+    fn tick_once(&mut self) {
+        if let Err(e) = self.engine.tick() {
+            self.engine.fail_all(&format!("engine tick failed: {e:#}"));
+        }
+        self.drain_engine();
+    }
+}
+
+impl EventSource for LocalCore {
+    fn next_event_for(&mut self, id: RequestId)
+                      -> Result<Option<GenerationEvent>> {
+        loop {
+            self.drain_engine();
+            if let Some(pos) = self.events.iter().position(|(i, _)| *i == id) {
+                return Ok(self.events.remove(pos).map(|(_, ev)| ev));
+            }
+            if self.engine.pending() == 0 {
+                return Ok(None);
+            }
+            self.tick_once();
+        }
+    }
+
+    fn cancel_request(&mut self, id: RequestId) -> Result<bool> {
+        let hit = self.engine.cancel(id);
+        self.drain_engine();
+        Ok(hit)
+    }
+
+    fn release_request(&mut self, id: RequestId) {
+        self.engine.cancel(id);
+        self.drain_engine();
+        self.events.retain(|(i, _)| *i != id);
+    }
+}
+
+/// The in-process implementation of the unified inference API.
+pub struct LocalSession {
+    core: Rc<RefCell<LocalCore>>,
+}
+
+impl LocalSession {
+    pub fn new(mut engine: GenerationEngine, cfg: SessionConfig) -> LocalSession {
+        engine.set_queue_bound(cfg.queue_bound);
+        LocalSession {
+            core: Rc::new(RefCell::new(LocalCore {
+                engine,
+                events: VecDeque::new(),
+            })),
+        }
+    }
+
+    /// Submit and get a [`RequestHandle`] for pulling this request's
+    /// events.
+    pub fn submit(&self, params: GenerationParams)
+                  -> Result<RequestHandle, SubmitError> {
+        let id = self.submit_detached(params)?;
+        Ok(RequestHandle::new(id, self.core.clone()))
+    }
+
+    /// Submit without a handle — for multiplexed consumers (the TCP
+    /// server) that read every request's events via
+    /// [`Self::poll_events`].
+    pub fn submit_detached(&self, params: GenerationParams)
+                           -> Result<RequestId, SubmitError> {
+        params.validate()?;
+        let mut core = self.core.borrow_mut();
+        let id = core.engine.try_submit(params.into_request())?;
+        core.drain_engine();
+        Ok(id)
+    }
+
+    /// Advance the engine by at most one tick and drain *all* buffered
+    /// events in emission order (the multiplexed consumption mode — do
+    /// not mix with handle-based reads, which would race for the same
+    /// events).
+    pub fn poll_events(&self) -> Vec<(RequestId, GenerationEvent)> {
+        let mut core = self.core.borrow_mut();
+        core.drain_engine();
+        if core.events.is_empty() && core.engine.pending() > 0 {
+            core.tick_once();
+        }
+        core.events.drain(..).collect()
+    }
+
+    /// Cancel by id; pages return to the pool immediately and the
+    /// request's stream terminates with `Finished { Cancelled }`.
+    pub fn cancel(&self, id: RequestId) -> bool {
+        self.core.borrow_mut().cancel_request(id).unwrap_or(false)
+    }
+
+    /// Queued + active requests.
+    pub fn pending(&self) -> usize {
+        self.core.borrow().engine.pending()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.core.borrow().engine.stats.clone()
+    }
+
+    pub fn pool_in_use(&self) -> usize {
+        self.core.borrow().engine.pool_in_use()
+    }
+}
+
+impl InferenceService for LocalSession {
+    fn submit(&mut self, params: GenerationParams)
+              -> Result<RequestHandle, SubmitError> {
+        LocalSession::submit(self, params)
+    }
+
+    fn cancel(&mut self, id: RequestId) -> Result<bool> {
+        Ok(LocalSession::cancel(self, id))
+    }
+}

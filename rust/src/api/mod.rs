@@ -1,0 +1,389 @@
+//! The unified inference API — the single way to talk to the system,
+//! in-process or over the wire.
+//!
+//! Everything a caller does goes through the same small vocabulary:
+//!
+//! * [`GenerationParams`] — typed request parameters (prompt, budget,
+//!   sampling, stop token) replacing ad-hoc `Request` construction.
+//! * [`InferenceService`] — `submit -> RequestHandle`, implemented by
+//!   [`LocalSession`] (in-process, wraps the generation engine) and
+//!   [`Client`] (TCP, speaks the v2 event-frame protocol).
+//! * [`GenerationEvent`] — the per-request event stream: `Queued`,
+//!   `Started{ttft_ms}`, `Token{token, index}`, `Finished{reason}`,
+//!   `Failed{error}`.  Every submitted request terminates in **exactly
+//!   one** `Finished` or `Failed` event.
+//! * [`RequestHandle`] — pull events with [`RequestHandle::next_event`],
+//!   drain to a terminal with [`RequestHandle::wait`], or abort with
+//!   [`RequestHandle::cancel`] — cancellation frees the slot's KV pages
+//!   mid-flight.
+//! * [`SubmitError`] — typed admission control: the engine queue is
+//!   bounded and rejects with [`SubmitError::QueueFull`] instead of
+//!   growing without bound (the system's backpressure mechanism).
+//!
+//! The legacy `GenerationEngine::run_to_completion` survives as a thin
+//! compatibility shim that folds this event stream back into
+//! `Completion` records, so existing benches stay deterministic.
+
+use std::cell::{Cell, RefCell};
+use std::fmt;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+pub mod local;
+pub mod remote;
+pub mod wire;
+
+pub use local::{LocalSession, SessionConfig};
+pub use remote::Client;
+
+pub use crate::coordinator::sampler::Sampling;
+
+/// Engine-assigned request identifier (also the wire multiplexing key).
+pub type RequestId = u64;
+
+/// Typed generation request parameters.
+///
+/// Build with [`GenerationParams::new`] and the chainable setters:
+///
+/// ```ignore
+/// let p = GenerationParams::new(vec![1, 2, 3]).max_new(32).stop_at(0);
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenerationParams {
+    pub prompt: Vec<u16>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+    /// stop generation at this token (e.g. a synthetic EOS); None = run
+    /// to `max_new_tokens`.
+    pub stop_token: Option<u16>,
+}
+
+impl GenerationParams {
+    pub fn new(prompt: Vec<u16>) -> GenerationParams {
+        GenerationParams {
+            prompt,
+            max_new_tokens: 32,
+            sampling: Sampling::Greedy,
+            stop_token: None,
+        }
+    }
+
+    pub fn max_new(mut self, n: usize) -> GenerationParams {
+        self.max_new_tokens = n;
+        self
+    }
+
+    pub fn sampling(mut self, s: Sampling) -> GenerationParams {
+        self.sampling = s;
+        self
+    }
+
+    pub fn stop_at(mut self, token: u16) -> GenerationParams {
+        self.stop_token = Some(token);
+        self
+    }
+
+    /// Model-independent validation (the engine additionally checks the
+    /// prompt against its `max_seq`).
+    pub fn validate(&self) -> Result<(), SubmitError> {
+        if self.prompt.is_empty() {
+            return Err(SubmitError::InvalidParams("empty prompt".into()));
+        }
+        if self.max_new_tokens == 0 {
+            return Err(SubmitError::InvalidParams(
+                "max_new_tokens must be >= 1".into()));
+        }
+        if let Sampling::TopK { temperature, .. } = self.sampling {
+            if !temperature.is_finite() || temperature <= 0.0 {
+                return Err(SubmitError::InvalidParams(
+                    "temperature must be > 0 for top-k sampling".into()));
+            }
+        }
+        Ok(())
+    }
+
+    pub(crate) fn into_request(self) -> crate::coordinator::batcher::Request {
+        crate::coordinator::batcher::Request {
+            id: 0,
+            prompt: self.prompt,
+            max_new_tokens: self.max_new_tokens,
+            sampling: self.sampling,
+            stop_token: self.stop_token,
+        }
+    }
+}
+
+/// Why a request stopped producing tokens.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// the sampled token matched `stop_token`
+    Stop,
+    /// the `max_new_tokens` budget is spent
+    MaxTokens,
+    /// the slot's sequence cache reached its capacity
+    CacheFull,
+    /// the caller cancelled the request mid-flight
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Stop => "stop",
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::CacheFull => "cache_full",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FinishReason> {
+        Some(match s {
+            "stop" => FinishReason::Stop,
+            "max_tokens" => FinishReason::MaxTokens,
+            "cache_full" => FinishReason::CacheFull,
+            "cancelled" => FinishReason::Cancelled,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for FinishReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-request latency/shape metrics, delivered with the terminal
+/// `Finished` event (and folded into legacy `Completion` records).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RequestStats {
+    pub prompt_len: usize,
+    /// tokens generated (== number of `Token` events emitted)
+    pub generated: usize,
+    pub ttft_ms: f64,
+    pub decode_ms: f64,
+    pub queued_ms: f64,
+}
+
+impl RequestStats {
+    /// 0.0 when no decode time was spent (e.g. a request that finished
+    /// at admission) — not an absurd divide-by-epsilon figure.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.decode_ms <= 0.0 {
+            return 0.0;
+        }
+        self.generated as f64 / (self.decode_ms / 1e3)
+    }
+}
+
+/// One step of a request's lifecycle.  Streams are strictly ordered:
+/// `Queued` → `Started` → `Token`* → exactly one `Finished` / `Failed`
+/// (a request may fail straight from `Queued` if prefill errors).
+#[derive(Clone, Debug, PartialEq)]
+pub enum GenerationEvent {
+    Queued,
+    Started { ttft_ms: f64 },
+    Token { token: u16, index: usize },
+    Finished { reason: FinishReason, stats: RequestStats },
+    Failed { error: String },
+}
+
+impl GenerationEvent {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self,
+                 GenerationEvent::Finished { .. } | GenerationEvent::Failed { .. })
+    }
+}
+
+/// Typed admission failure — returned by `submit`, never by the stream.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SubmitError {
+    /// The bounded admission queue is at capacity; retry after in-flight
+    /// requests drain (this is the API's backpressure signal).
+    QueueFull { bound: usize },
+    InvalidParams(String),
+    /// The transport or engine is gone (connection closed, engine died).
+    Transport(String),
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { bound } => {
+                write!(f, "admission queue full (bound {bound})")
+            }
+            SubmitError::InvalidParams(m) => write!(f, "invalid params: {m}"),
+            SubmitError::Transport(m) => write!(f, "transport error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A service you can submit generation requests to — implemented by
+/// [`LocalSession`] (in-process) and [`Client`] (TCP event frames).
+pub trait InferenceService {
+    fn submit(&mut self, params: GenerationParams)
+              -> Result<RequestHandle, SubmitError>;
+    /// Cancel by id.  `Ok(true)` means the cancel was *accepted*: for a
+    /// local session, the request was live; for a remote client, the
+    /// cancel frame was sent (best-effort — the authoritative answer is
+    /// whether the stream's terminal event says `Cancelled`).  Prefer
+    /// [`RequestHandle::cancel`].
+    fn cancel(&mut self, id: RequestId) -> Result<bool>;
+}
+
+/// Where a handle pulls its events from (local engine pump or socket
+/// demultiplexer).  Single-threaded by design: the PJRT executables are
+/// not `Send`, so local sessions are driven by the consuming thread.
+pub(crate) trait EventSource {
+    /// Block until the next event for `id` is available; `Ok(None)` once
+    /// no further event can ever arrive for it.
+    fn next_event_for(&mut self, id: RequestId)
+                      -> Result<Option<GenerationEvent>>;
+    fn cancel_request(&mut self, id: RequestId) -> Result<bool>;
+    /// The handle for `id` is gone with the stream undrained: cancel the
+    /// request and discard its buffered/future events so they cannot
+    /// accumulate with nobody left to read them.
+    fn release_request(&mut self, id: RequestId);
+}
+
+/// Handle to one in-flight request: pull events, wait, or cancel.
+pub struct RequestHandle {
+    id: RequestId,
+    src: Rc<RefCell<dyn EventSource>>,
+    done: Cell<bool>,
+}
+
+impl RequestHandle {
+    pub(crate) fn new(id: RequestId, src: Rc<RefCell<dyn EventSource>>)
+                      -> RequestHandle {
+        RequestHandle { id, src, done: Cell::new(false) }
+    }
+
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Next event for this request, driving the underlying session as
+    /// needed.  `Ok(None)` after the terminal event has been delivered.
+    pub fn next_event(&self) -> Result<Option<GenerationEvent>> {
+        if self.done.get() {
+            return Ok(None);
+        }
+        let ev = self.src.borrow_mut().next_event_for(self.id)?;
+        match &ev {
+            Some(e) if e.is_terminal() => self.done.set(true),
+            None => self.done.set(true),
+            _ => {}
+        }
+        Ok(ev)
+    }
+
+    /// Cancel the request.  The confirmation is the stream's
+    /// `Finished { reason: Cancelled }` event; cancelling an
+    /// already-finished request is a no-op (`Ok(false)` locally; remote
+    /// cancels resolve best-effort on the server).
+    pub fn cancel(&self) -> Result<bool> {
+        if self.done.get() {
+            return Ok(false);
+        }
+        self.src.borrow_mut().cancel_request(self.id)
+    }
+
+    /// Drain the stream to its terminal event, collecting tokens.
+    /// `Failed` becomes an `Err`.
+    pub fn wait(&self) -> Result<GenerationOutcome> {
+        let mut tokens = Vec::new();
+        let mut ttft_ms = 0.0;
+        while let Some(ev) = self.next_event()? {
+            match ev {
+                GenerationEvent::Started { ttft_ms: t } => ttft_ms = t,
+                GenerationEvent::Token { token, .. } => tokens.push(token),
+                GenerationEvent::Finished { reason, mut stats } => {
+                    if stats.ttft_ms == 0.0 {
+                        stats.ttft_ms = ttft_ms;
+                    }
+                    return Ok(GenerationOutcome {
+                        id: self.id, tokens, reason, stats,
+                    });
+                }
+                GenerationEvent::Failed { error } => {
+                    bail!("request {} failed: {error}", self.id);
+                }
+                GenerationEvent::Queued => {}
+            }
+        }
+        bail!("request {} stream ended without a terminal event", self.id)
+    }
+}
+
+impl Drop for RequestHandle {
+    /// An abandoned handle must not leave the engine generating tokens
+    /// nobody will read: cancel the request and tell the source to drop
+    /// its events.  `try_borrow_mut` keeps this a no-op in the pathological
+    /// case of a drop while the source is borrowed.
+    fn drop(&mut self) {
+        if !self.done.get() {
+            if let Ok(mut src) = self.src.try_borrow_mut() {
+                src.release_request(self.id);
+            }
+        }
+    }
+}
+
+/// Everything a drained request produced.
+#[derive(Clone, Debug)]
+pub struct GenerationOutcome {
+    pub id: RequestId,
+    pub tokens: Vec<u16>,
+    pub reason: FinishReason,
+    pub stats: RequestStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_builder_and_validation() {
+        let p = GenerationParams::new(vec![1, 2, 3]).max_new(8).stop_at(7);
+        assert_eq!(p.max_new_tokens, 8);
+        assert_eq!(p.stop_token, Some(7));
+        assert!(p.validate().is_ok());
+
+        assert!(matches!(GenerationParams::new(vec![]).validate(),
+                         Err(SubmitError::InvalidParams(_))));
+        assert!(matches!(GenerationParams::new(vec![1]).max_new(0).validate(),
+                         Err(SubmitError::InvalidParams(_))));
+        let bad_temp = GenerationParams::new(vec![1])
+            .sampling(Sampling::TopK { temperature: 0.0, k: 4 });
+        assert!(bad_temp.validate().is_err());
+    }
+
+    #[test]
+    fn finish_reason_roundtrip() {
+        for r in [FinishReason::Stop, FinishReason::MaxTokens,
+                  FinishReason::CacheFull, FinishReason::Cancelled] {
+            assert_eq!(FinishReason::parse(r.as_str()), Some(r));
+        }
+        assert_eq!(FinishReason::parse("nope"), None);
+    }
+
+    #[test]
+    fn terminal_classification() {
+        assert!(GenerationEvent::Failed { error: "x".into() }.is_terminal());
+        assert!(GenerationEvent::Finished {
+            reason: FinishReason::Stop, stats: RequestStats::default(),
+        }.is_terminal());
+        assert!(!GenerationEvent::Queued.is_terminal());
+        assert!(!GenerationEvent::Token { token: 1, index: 0 }.is_terminal());
+    }
+
+    #[test]
+    fn submit_error_display() {
+        let e = SubmitError::QueueFull { bound: 4 };
+        assert!(e.to_string().contains("bound 4"));
+    }
+}

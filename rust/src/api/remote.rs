@@ -1,0 +1,234 @@
+//! TCP [`InferenceService`]: [`Client`] speaks the v2 newline-JSON
+//! event-frame protocol to the server in `quarot::server`.
+//!
+//! The client is single-threaded and pull-driven: frames are read off
+//! the socket when a [`RequestHandle`] asks for its next event, and
+//! frames belonging to *other* in-flight requests are buffered — so one
+//! connection can interleave any number of concurrent requests and
+//! cancel any of them mid-generation.
+
+use std::cell::{Cell, RefCell};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::wire::{self, ServerFrame};
+use super::{EventSource, GenerationEvent, GenerationOutcome, GenerationParams,
+            InferenceService, RequestHandle, RequestId, SubmitError};
+use crate::util::json::{self, n, obj, Value};
+
+struct RemoteCore {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    /// Event frames for requests nobody is currently reading.
+    buffered: VecDeque<(RequestId, GenerationEvent)>,
+    /// cid → server request id, learned from `queued` frames.
+    acks: HashMap<u64, RequestId>,
+    /// cid → admission rejection.
+    rejected: HashMap<u64, SubmitError>,
+    /// Ids whose handle was dropped undrained: frames are discarded.
+    released: HashSet<RequestId>,
+    stats: VecDeque<Value>,
+    saw_shutdown: bool,
+}
+
+impl RemoteCore {
+    fn send(&mut self, frame: &Value) -> Result<()> {
+        writeln!(self.writer, "{}", json::write(frame)).context("send frame")
+    }
+
+    /// Read and dispatch exactly one frame from the socket.
+    fn pump_one(&mut self) -> Result<()> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line).context("read frame")? == 0 {
+                bail!("connection closed by server");
+            }
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let v = json::parse(trimmed)
+                .map_err(|e| anyhow::anyhow!("bad frame: {e}"))?;
+            match wire::parse_server_frame(&v)? {
+                ServerFrame::Event { id, cid, event } => {
+                    if let (GenerationEvent::Queued, Some(cid)) = (&event, cid) {
+                        self.acks.insert(cid, id);
+                    }
+                    if event.is_terminal() {
+                        // a terminal frame is the last for this id; stop
+                        // discarding in case the id is ever reused
+                        if self.released.remove(&id) {
+                            return Ok(());
+                        }
+                    } else if self.released.contains(&id) {
+                        return Ok(());
+                    }
+                    self.buffered.push_back((id, event));
+                }
+                ServerFrame::Rejected { cid, error } => {
+                    self.rejected.insert(cid, error);
+                }
+                ServerFrame::Stats(v) => self.stats.push_back(v),
+                ServerFrame::Error { id, error } => {
+                    // Id-tagged advisory errors are never injected into a
+                    // request's stream — they could arrive after the real
+                    // terminal frame and fake a second terminal.  The
+                    // stream's own `failed` frame is the only Failed
+                    // source.  Id-less errors are protocol-fatal.
+                    if id.is_none() {
+                        bail!("server error: {error}");
+                    }
+                }
+                ServerFrame::Shutdown => self.saw_shutdown = true,
+            }
+            return Ok(());
+        }
+    }
+}
+
+impl EventSource for RemoteCore {
+    fn next_event_for(&mut self, id: RequestId)
+                      -> Result<Option<GenerationEvent>> {
+        loop {
+            if let Some(pos) = self.buffered.iter().position(|(i, _)| *i == id) {
+                return Ok(self.buffered.remove(pos).map(|(_, ev)| ev));
+            }
+            self.pump_one()?;
+        }
+    }
+
+    fn cancel_request(&mut self, id: RequestId) -> Result<bool> {
+        self.send(&wire::encode_cancel(id))?;
+        // Confirmation arrives as the stream's Finished{Cancelled} frame.
+        Ok(true)
+    }
+
+    fn release_request(&mut self, id: RequestId) {
+        // If the terminal frame already arrived, the stream is complete —
+        // just discard its buffered frames; a cancel or a `released`
+        // entry (whose cleanup keys off a *future* terminal frame that
+        // will never come) would leak.
+        let had_terminal = self.buffered.iter()
+            .any(|(i, ev)| *i == id && ev.is_terminal());
+        self.buffered.retain(|(i, _)| *i != id);
+        if !had_terminal {
+            // best-effort: the server stops generating, and frames still
+            // in flight for this id are discarded instead of accumulating
+            let _ = self.send(&wire::encode_cancel(id));
+            self.released.insert(id);
+        }
+    }
+}
+
+/// Blocking event-frame client for tests, examples and the CLI.
+pub struct Client {
+    core: Rc<RefCell<RemoteCore>>,
+    next_cid: Cell<u64>,
+}
+
+impl Client {
+    pub fn connect(port: u16) -> Result<Client> {
+        let stream = TcpStream::connect(("127.0.0.1", port))?;
+        let writer = stream.try_clone()?;
+        Ok(Client {
+            core: Rc::new(RefCell::new(RemoteCore {
+                reader: BufReader::new(stream),
+                writer,
+                buffered: VecDeque::new(),
+                acks: HashMap::new(),
+                rejected: HashMap::new(),
+                released: HashSet::new(),
+                stats: VecDeque::new(),
+                saw_shutdown: false,
+            })),
+            next_cid: Cell::new(1),
+        })
+    }
+
+    /// Submit and block until the server's `queued` ack (or typed
+    /// rejection) for this request arrives; event frames for other
+    /// requests seen meanwhile are buffered, not lost.
+    pub fn submit(&self, params: &GenerationParams)
+                  -> Result<RequestHandle, SubmitError> {
+        params.validate()?;
+        let cid = self.next_cid.get();
+        self.next_cid.set(cid + 1);
+        let mut core = self.core.borrow_mut();
+        core.send(&wire::encode_submit(cid, params))
+            .map_err(|e| SubmitError::Transport(format!("{e:#}")))?;
+        loop {
+            if let Some(id) = core.acks.remove(&cid) {
+                drop(core);
+                return Ok(RequestHandle::new(id, self.core.clone()));
+            }
+            if let Some(err) = core.rejected.remove(&cid) {
+                return Err(err);
+            }
+            core.pump_one()
+                .map_err(|e| SubmitError::Transport(format!("{e:#}")))?;
+        }
+    }
+
+    /// v1-style convenience: submit, drain to the terminal event, and
+    /// shape the outcome like the old one-shot response object.
+    pub fn generate(&mut self, prompt: &[u16], max_new: usize) -> Result<Value> {
+        let handle = self.submit(&GenerationParams::new(prompt.to_vec())
+                                     .max_new(max_new))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let out = handle.wait()?;
+        Ok(outcome_to_value(&out))
+    }
+
+    /// Engine counters (`{"v":2,"event":"stats", ...}` frame payload).
+    pub fn stats(&mut self) -> Result<Value> {
+        let mut core = self.core.borrow_mut();
+        core.send(&wire::encode_cmd("stats"))?;
+        while core.stats.is_empty() {
+            core.pump_one()?;
+        }
+        Ok(core.stats.pop_front().unwrap())
+    }
+
+    /// Ask the server to shut down (engine + accept loops exit); resolves
+    /// on the ack frame or the connection closing.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        let mut core = self.core.borrow_mut();
+        core.send(&wire::encode_cmd("shutdown"))?;
+        while !core.saw_shutdown {
+            if core.pump_one().is_err() {
+                break; // connection closed — shutdown took effect
+            }
+        }
+        Ok(())
+    }
+}
+
+impl InferenceService for Client {
+    fn submit(&mut self, params: GenerationParams)
+              -> Result<RequestHandle, SubmitError> {
+        Client::submit(self, &params)
+    }
+
+    fn cancel(&mut self, id: RequestId) -> Result<bool> {
+        self.core.borrow_mut().cancel_request(id)
+    }
+}
+
+/// Shape a drained outcome like the legacy v1 one-shot response.
+pub fn outcome_to_value(out: &GenerationOutcome) -> Value {
+    let toks: Vec<Value> = out.tokens.iter().map(|&t| n(t as f64)).collect();
+    obj(vec![
+        ("id", n(out.id as f64)),
+        ("tokens", Value::Arr(toks)),
+        ("finish_reason", json::s(out.reason.as_str())),
+        ("ttft_ms", n(out.stats.ttft_ms)),
+        ("decode_ms", n(out.stats.decode_ms)),
+        ("queued_ms", n(out.stats.queued_ms)),
+        ("tokens_per_sec", n(out.stats.tokens_per_sec())),
+    ])
+}

@@ -1,0 +1,411 @@
+//! Versioned newline-JSON *event-frame* wire protocol (v2).
+//!
+//! One JSON object per line, multiplexed by request id.  Server→client
+//! frames carry `"v":2` and an `"event"` discriminator:
+//!
+//! ```text
+//! {"v":2,"event":"queued","id":7,"cid":3}
+//! {"v":2,"event":"started","id":7,"ttft_ms":1.2}
+//! {"v":2,"event":"token","id":7,"token":123,"index":0}
+//! {"v":2,"event":"finished","id":7,"reason":"stop","prompt_len":8,
+//!  "generated":24,"ttft_ms":1.2,"decode_ms":30.1,"queued_ms":31.9,
+//!  "tokens_per_sec":797.3}
+//! {"v":2,"event":"failed","id":7,"error":"..."}
+//! {"v":2,"event":"rejected","cid":3,"reason":"queue_full","bound":64}
+//! {"v":2,"event":"stats", ...engine counters...}
+//! {"v":2,"event":"error","error":"...","id":7}      // id optional
+//! {"v":2,"event":"shutdown","ok":true}
+//! ```
+//!
+//! Client→server frames carry a `"cmd"` discriminator:
+//!
+//! ```text
+//! {"v":2,"cmd":"submit","cid":3,"prompt":[1,2,3],"max_new_tokens":16,
+//!  "temperature":0.8,"top_k":4,"stop_token":9}
+//! {"v":2,"cmd":"cancel","id":7}
+//! {"v":2,"cmd":"stats"}
+//! {"v":2,"cmd":"shutdown"}
+//! ```
+//!
+//! `cid` is a client-chosen correlation id echoed on the `queued` /
+//! `rejected` frame so pipelined submits can be matched to server ids.
+//! A line with a `"prompt"` but no `"cmd"` is the legacy v1 one-shot
+//! protocol and is still answered with a single completion object.
+
+use anyhow::{bail, Context, Result};
+
+use super::{FinishReason, GenerationEvent, GenerationParams, RequestId,
+            RequestStats, SubmitError, Sampling};
+use crate::util::json::{self, n, obj, Value};
+
+pub const PROTOCOL_VERSION: u32 = 2;
+
+fn tag(mut pairs: Vec<(&str, Value)>, event: &str) -> Value {
+    pairs.insert(0, ("v", n(PROTOCOL_VERSION as f64)));
+    pairs.insert(1, ("event", json::s(event)));
+    obj(pairs)
+}
+
+/// Encode one generation event as a server→client frame.  `cid` is
+/// attached to `queued` frames only (submit correlation).
+pub fn encode_event(id: RequestId, ev: &GenerationEvent, cid: Option<u64>)
+                    -> Value {
+    let idv = ("id", n(id as f64));
+    match ev {
+        GenerationEvent::Queued => {
+            let mut pairs = vec![idv];
+            if let Some(c) = cid {
+                pairs.push(("cid", n(c as f64)));
+            }
+            tag(pairs, "queued")
+        }
+        GenerationEvent::Started { ttft_ms } => {
+            tag(vec![idv, ("ttft_ms", n(*ttft_ms))], "started")
+        }
+        GenerationEvent::Token { token, index } => {
+            tag(vec![idv, ("token", n(*token as f64)),
+                     ("index", n(*index as f64))], "token")
+        }
+        GenerationEvent::Finished { reason, stats } => tag(vec![
+            idv,
+            ("reason", json::s(reason.as_str())),
+            ("prompt_len", n(stats.prompt_len as f64)),
+            ("generated", n(stats.generated as f64)),
+            ("ttft_ms", n(stats.ttft_ms)),
+            ("decode_ms", n(stats.decode_ms)),
+            ("queued_ms", n(stats.queued_ms)),
+            ("tokens_per_sec", n(stats.tokens_per_sec())),
+        ], "finished"),
+        GenerationEvent::Failed { error } => {
+            tag(vec![idv, ("error", json::s(error))], "failed")
+        }
+    }
+}
+
+pub fn encode_rejected(cid: u64, err: &SubmitError) -> Value {
+    let mut pairs = vec![("cid", n(cid as f64))];
+    match err {
+        SubmitError::QueueFull { bound } => {
+            pairs.push(("reason", json::s("queue_full")));
+            pairs.push(("bound", n(*bound as f64)));
+        }
+        SubmitError::InvalidParams(m) => {
+            pairs.push(("reason", json::s("invalid_params")));
+            pairs.push(("error", json::s(m)));
+        }
+        SubmitError::Transport(m) => {
+            pairs.push(("reason", json::s("transport")));
+            pairs.push(("error", json::s(m)));
+        }
+    }
+    tag(pairs, "rejected")
+}
+
+pub fn encode_stats(fields: Vec<(&str, Value)>) -> Value {
+    tag(fields, "stats")
+}
+
+pub fn encode_error(id: Option<RequestId>, error: &str) -> Value {
+    let mut pairs = Vec::new();
+    if let Some(id) = id {
+        pairs.push(("id", n(id as f64)));
+    }
+    pairs.push(("error", json::s(error)));
+    tag(pairs, "error")
+}
+
+pub fn encode_shutdown_ack() -> Value {
+    tag(vec![("ok", Value::Bool(true))], "shutdown")
+}
+
+/// Encode a submit command.  Sampling maps to `temperature` / `top_k`
+/// (absent ⇒ greedy, matching the v1 convention).
+pub fn encode_submit(cid: u64, p: &GenerationParams) -> Value {
+    let toks: Vec<Value> = p.prompt.iter().map(|&t| n(t as f64)).collect();
+    let mut pairs = vec![
+        ("v", n(PROTOCOL_VERSION as f64)),
+        ("cmd", json::s("submit")),
+        ("cid", n(cid as f64)),
+        ("prompt", Value::Arr(toks)),
+        ("max_new_tokens", n(p.max_new_tokens as f64)),
+    ];
+    if let Sampling::TopK { temperature, k } = p.sampling {
+        pairs.push(("temperature", n(temperature as f64)));
+        pairs.push(("top_k", n(k as f64)));
+    }
+    if let Some(st) = p.stop_token {
+        pairs.push(("stop_token", n(st as f64)));
+    }
+    obj(pairs)
+}
+
+pub fn encode_cancel(id: RequestId) -> Value {
+    obj(vec![
+        ("v", n(PROTOCOL_VERSION as f64)),
+        ("cmd", json::s("cancel")),
+        ("id", n(id as f64)),
+    ])
+}
+
+pub fn encode_cmd(cmd: &str) -> Value {
+    obj(vec![("v", n(PROTOCOL_VERSION as f64)), ("cmd", json::s(cmd))])
+}
+
+/// Generation parameters from a submit (v2) or legacy (v1) frame.
+pub fn decode_params(v: &Value) -> Result<GenerationParams> {
+    let prompt: Vec<u16> = v.get("prompt").and_then(|p| p.as_arr())
+        .context("missing prompt")?
+        .iter()
+        .map(|t| t.as_usize().context("bad prompt token").map(|x| x as u16))
+        .collect::<Result<_>>()?;
+    let max_new = v.get("max_new_tokens").and_then(|x| x.as_usize()).unwrap_or(16);
+    let temperature = v.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let top_k = v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(0);
+    let sampling = if temperature > 0.0 {
+        Sampling::TopK { temperature: temperature as f32, k: top_k }
+    } else {
+        Sampling::Greedy
+    };
+    let mut p = GenerationParams::new(prompt).max_new(max_new).sampling(sampling);
+    p.stop_token = v.get("stop_token").and_then(|x| x.as_usize()).map(|t| t as u16);
+    Ok(p)
+}
+
+/// A parsed client→server line.
+#[derive(Clone, Debug)]
+pub enum ClientFrame {
+    Submit { cid: u64, params: GenerationParams },
+    Cancel { id: RequestId },
+    Stats,
+    Shutdown,
+    /// v1 compatibility: bare `{"prompt": ...}` one-shot generation.
+    LegacyGenerate { params: GenerationParams },
+}
+
+pub fn parse_client_frame(v: &Value) -> Result<ClientFrame> {
+    match v.get("cmd").and_then(|c| c.as_str()) {
+        Some("submit") => Ok(ClientFrame::Submit {
+            cid: v.get("cid").and_then(|c| c.as_usize()).unwrap_or(0) as u64,
+            params: decode_params(v)?,
+        }),
+        Some("cancel") => Ok(ClientFrame::Cancel {
+            id: v.get("id").and_then(|i| i.as_usize())
+                .context("cancel frame needs an id")? as u64,
+        }),
+        Some("stats") => Ok(ClientFrame::Stats),
+        Some("shutdown") => Ok(ClientFrame::Shutdown),
+        Some(other) => bail!("unknown cmd '{other}'"),
+        None => {
+            if v.get("prompt").is_some() {
+                Ok(ClientFrame::LegacyGenerate { params: decode_params(v)? })
+            } else {
+                bail!("not a protocol frame (no cmd, no prompt)")
+            }
+        }
+    }
+}
+
+/// A parsed server→client line.
+#[derive(Clone, Debug)]
+pub enum ServerFrame {
+    Event { id: RequestId, cid: Option<u64>, event: GenerationEvent },
+    Rejected { cid: u64, error: SubmitError },
+    Stats(Value),
+    Error { id: Option<RequestId>, error: String },
+    Shutdown,
+}
+
+pub fn parse_server_frame(v: &Value) -> Result<ServerFrame> {
+    let kind = v.get("event").and_then(|e| e.as_str())
+        .context("frame missing event")?;
+    let id = || -> Result<RequestId> {
+        Ok(v.get("id").and_then(|i| i.as_usize())
+            .context("frame missing id")? as u64)
+    };
+    let f = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let us = |k: &str| v.get(k).and_then(|x| x.as_usize()).unwrap_or(0);
+    Ok(match kind {
+        "queued" => ServerFrame::Event {
+            id: id()?,
+            cid: v.get("cid").and_then(|c| c.as_usize()).map(|c| c as u64),
+            event: GenerationEvent::Queued,
+        },
+        "started" => ServerFrame::Event {
+            id: id()?, cid: None,
+            event: GenerationEvent::Started { ttft_ms: f("ttft_ms") },
+        },
+        "token" => ServerFrame::Event {
+            id: id()?, cid: None,
+            event: GenerationEvent::Token {
+                token: us("token") as u16,
+                index: us("index"),
+            },
+        },
+        "finished" => {
+            let rs = v.get("reason").and_then(|r| r.as_str())
+                .context("finished frame missing reason")?;
+            let reason = FinishReason::parse(rs)
+                .with_context(|| format!("unknown finish reason '{rs}'"))?;
+            ServerFrame::Event {
+                id: id()?, cid: None,
+                event: GenerationEvent::Finished {
+                    reason,
+                    stats: RequestStats {
+                        prompt_len: us("prompt_len"),
+                        generated: us("generated"),
+                        ttft_ms: f("ttft_ms"),
+                        decode_ms: f("decode_ms"),
+                        queued_ms: f("queued_ms"),
+                    },
+                },
+            }
+        }
+        "failed" => ServerFrame::Event {
+            id: id()?, cid: None,
+            event: GenerationEvent::Failed {
+                error: v.get("error").and_then(|e| e.as_str())
+                    .unwrap_or("unknown").to_string(),
+            },
+        },
+        "rejected" => {
+            let cid = v.get("cid").and_then(|c| c.as_usize()).unwrap_or(0) as u64;
+            let msg = v.get("error").and_then(|e| e.as_str())
+                .unwrap_or("").to_string();
+            let error = match v.get("reason").and_then(|r| r.as_str()) {
+                Some("queue_full") => SubmitError::QueueFull { bound: us("bound") },
+                Some("invalid_params") => SubmitError::InvalidParams(msg),
+                _ => SubmitError::Transport(msg),
+            };
+            ServerFrame::Rejected { cid, error }
+        }
+        "stats" => ServerFrame::Stats(v.clone()),
+        "error" => ServerFrame::Error {
+            id: v.get("id").and_then(|i| i.as_usize()).map(|i| i as u64),
+            error: v.get("error").and_then(|e| e.as_str())
+                .unwrap_or("unknown").to_string(),
+        },
+        "shutdown" => ServerFrame::Shutdown,
+        other => bail!("unknown event kind '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reparse(v: &Value) -> Value {
+        json::parse(&json::write(v)).unwrap()
+    }
+
+    #[test]
+    fn event_frames_roundtrip() {
+        let stats = RequestStats {
+            prompt_len: 8, generated: 24,
+            ttft_ms: 1.5, decode_ms: 30.0, queued_ms: 31.5,
+        };
+        let evs = [
+            GenerationEvent::Queued,
+            GenerationEvent::Started { ttft_ms: 1.5 },
+            GenerationEvent::Token { token: 123, index: 4 },
+            GenerationEvent::Finished { reason: FinishReason::Stop, stats },
+            GenerationEvent::Failed { error: "boom".into() },
+        ];
+        for ev in &evs {
+            let frame = reparse(&encode_event(7, ev, None));
+            match parse_server_frame(&frame).unwrap() {
+                ServerFrame::Event { id, event, .. } => {
+                    assert_eq!(id, 7);
+                    assert_eq!(&event, ev);
+                }
+                other => panic!("wrong frame {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn queued_carries_cid() {
+        let frame = reparse(&encode_event(9, &GenerationEvent::Queued, Some(3)));
+        match parse_server_frame(&frame).unwrap() {
+            ServerFrame::Event { id, cid, event } => {
+                assert_eq!((id, cid), (9, Some(3)));
+                assert_eq!(event, GenerationEvent::Queued);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejected_roundtrip() {
+        let frame = reparse(&encode_rejected(
+            5, &SubmitError::QueueFull { bound: 64 }));
+        match parse_server_frame(&frame).unwrap() {
+            ServerFrame::Rejected { cid, error } => {
+                assert_eq!(cid, 5);
+                assert_eq!(error, SubmitError::QueueFull { bound: 64 });
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        let frame = reparse(&encode_rejected(
+            6, &SubmitError::InvalidParams("empty prompt".into())));
+        match parse_server_frame(&frame).unwrap() {
+            ServerFrame::Rejected { error, .. } => {
+                assert_eq!(error,
+                           SubmitError::InvalidParams("empty prompt".into()));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_command_roundtrip() {
+        let p = GenerationParams::new(vec![1, 2, 3])
+            .max_new(16)
+            .sampling(Sampling::TopK { temperature: 0.8, k: 4 })
+            .stop_at(9);
+        let frame = reparse(&encode_submit(3, &p));
+        match parse_client_frame(&frame).unwrap() {
+            ClientFrame::Submit { cid, params } => {
+                assert_eq!(cid, 3);
+                assert_eq!(params.prompt, vec![1, 2, 3]);
+                assert_eq!(params.max_new_tokens, 16);
+                assert_eq!(params.stop_token, Some(9));
+                match params.sampling {
+                    Sampling::TopK { temperature, k } => {
+                        assert!((temperature - 0.8).abs() < 1e-6);
+                        assert_eq!(k, 4);
+                    }
+                    s => panic!("wrong sampling {s:?}"),
+                }
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admin_and_cancel_frames() {
+        match parse_client_frame(&reparse(&encode_cancel(11))).unwrap() {
+            ClientFrame::Cancel { id } => assert_eq!(id, 11),
+            other => panic!("wrong frame {other:?}"),
+        }
+        assert!(matches!(parse_client_frame(&reparse(&encode_cmd("stats"))),
+                         Ok(ClientFrame::Stats)));
+        assert!(matches!(parse_client_frame(&reparse(&encode_cmd("shutdown"))),
+                         Ok(ClientFrame::Shutdown)));
+        assert!(matches!(parse_server_frame(&reparse(&encode_shutdown_ack())),
+                         Ok(ServerFrame::Shutdown)));
+    }
+
+    #[test]
+    fn legacy_v1_line_is_recognised() {
+        let v = json::parse(r#"{"prompt":[5,6],"max_new_tokens":4}"#).unwrap();
+        match parse_client_frame(&v).unwrap() {
+            ClientFrame::LegacyGenerate { params } => {
+                assert_eq!(params.prompt, vec![5, 6]);
+                assert_eq!(params.max_new_tokens, 4);
+                assert_eq!(params.sampling, Sampling::Greedy);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        assert!(parse_client_frame(&json::parse(r#"{"x":1}"#).unwrap()).is_err());
+    }
+}

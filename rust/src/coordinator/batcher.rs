@@ -1,16 +1,23 @@
 //! Continuous-batching generation engine.
 //!
 //! vLLM-style loop specialised to the AOT decode graph's fixed batch width:
-//! requests queue FIFO; free slots take the next request (prefill on the
-//! B=1 graph, K/V quantized into the paged cache = the paper's `Init`),
-//! then every engine tick runs ONE batched decode step over all active
-//! slots (`Decode`), appends the new K/V (`Append`) and samples the next
-//! token.  Finished/failed slots release their pages immediately.
+//! requests queue FIFO behind a bounded admission gate; free slots take the
+//! next request (prefill on the B=1 graph, K/V quantized into the paged
+//! cache = the paper's `Init`), then every engine tick runs ONE batched
+//! decode step over all active slots (`Decode`), appends the new K/V
+//! (`Append`) and samples the next token.  Finished/failed/cancelled slots
+//! release their pages immediately.
 //!
-//! Metrics per request: time-to-first-token, per-token latency, totals —
-//! the numbers the serving benches and the e2e example report.
+//! The engine is *event-oriented*: every lifecycle step is emitted as a
+//! [`GenerationEvent`] tagged with the request id (`Queued` on submit,
+//! `Started`/first `Token` at admit, one `Token` per decode tick, exactly
+//! one terminal `Finished`/`Failed`).  Consumers drain them with
+//! [`GenerationEngine::take_events`]; the `quarot::api` layer is the
+//! intended front door.  [`GenerationEngine::run_to_completion`] survives
+//! as a thin compatibility shim that folds the event stream back into
+//! [`Completion`] records, keeping the benches deterministic.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -19,6 +26,7 @@ use anyhow::Result;
 use super::kvcache::{PagePool, SeqCache};
 use super::runner::{DecodeStaging, Runner};
 use super::sampler::{sample, Sampling};
+use crate::api::{FinishReason, GenerationEvent, RequestStats, SubmitError};
 use crate::backend::pool::SendPtr;
 use crate::backend::ComputeBackend;
 use crate::util::prng::Rng;
@@ -53,9 +61,23 @@ struct Slot {
     ttft_ms: f64,
 }
 
+impl Slot {
+    fn stats(&self) -> RequestStats {
+        RequestStats {
+            prompt_len: self.req.prompt.len(),
+            generated: self.generated.len(),
+            ttft_ms: self.ttft_ms,
+            decode_ms: self.started.elapsed().as_secs_f64() * 1e3,
+            queued_ms: self.enqueued.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     pub completed: usize,
+    pub cancelled: usize,
+    pub failed: usize,
     pub decode_steps: usize,
     pub decode_tokens: usize,
     pub total_decode_ms: f64,
@@ -82,11 +104,15 @@ pub struct GenerationEngine {
     pool: PagePool,
     slots: Vec<Option<Slot>>,
     queue: VecDeque<(Request, Instant)>,
+    /// Admission bound on the waiting queue (not counting active slots);
+    /// `try_submit` rejects with `SubmitError::QueueFull` beyond it.
+    queue_bound: usize,
     staging: DecodeStaging,
     rng: Rng,
     pub stats: EngineStats,
     tokens_per_page: usize,
-    completions: Vec<Completion>,
+    /// Undelivered lifecycle events, in emission order.
+    events: VecDeque<(u64, GenerationEvent)>,
     next_id: u64,
 }
 
@@ -104,90 +130,279 @@ impl GenerationEngine {
             pool: PagePool::new(geom.page_bytes(), pool_pages),
             slots: (0..cfg.decode_batch).map(|_| None).collect(),
             queue: VecDeque::new(),
+            queue_bound: usize::MAX,
             rng: Rng::new(seed),
             stats: EngineStats::default(),
             tokens_per_page,
-            completions: Vec::new(),
+            events: VecDeque::new(),
             next_id: 1,
             runner,
         }
     }
 
-    pub fn submit(&mut self, mut req: Request) -> u64 {
+    /// Cap the waiting queue; submissions beyond it are rejected with
+    /// [`SubmitError::QueueFull`] (the serving layer's backpressure).
+    pub fn set_queue_bound(&mut self, bound: usize) {
+        self.queue_bound = bound.max(1);
+    }
+
+    pub fn queue_bound(&self) -> usize {
+        self.queue_bound
+    }
+
+    /// Admission-controlled submit: checks the *engine-side* limits — the
+    /// model's `max_seq` and the queue bound — assigns an id, and emits
+    /// the `Queued` event.  Model-independent shape checks (empty prompt,
+    /// zero budget, sampling) live in `GenerationParams::validate`, which
+    /// the `api` layer runs before reaching here; a raw engine caller
+    /// skipping them gets a `Failed` event at admission (empty prompt)
+    /// or a single token (`max_new_tokens == 0` is treated as 1), never
+    /// undefined behaviour.
+    pub fn try_submit(&mut self, mut req: Request) -> Result<u64, SubmitError> {
+        if req.prompt.len() > self.runner.cfg.max_seq {
+            return Err(SubmitError::InvalidParams(format!(
+                "prompt length {} exceeds max_seq {}",
+                req.prompt.len(), self.runner.cfg.max_seq)));
+        }
+        if self.queue.len() >= self.queue_bound {
+            return Err(SubmitError::QueueFull { bound: self.queue_bound });
+        }
         if req.id == 0 {
             req.id = self.next_id;
             self.next_id += 1;
         }
         let id = req.id;
+        self.events.push_back((id, GenerationEvent::Queued));
         self.queue.push_back((req, Instant::now()));
-        id
+        Ok(id)
+    }
+
+    /// Legacy unchecked submit (benches, compatibility shims).  Panics on
+    /// rejection — use [`Self::try_submit`] for typed admission control.
+    pub fn submit(&mut self, req: Request) -> u64 {
+        self.try_submit(req).expect("submit rejected; use try_submit")
+    }
+
+    /// Cancel a request by id, queued or mid-flight.  An active slot's
+    /// cache pages return to the pool immediately; the request's stream
+    /// terminates with `Finished { reason: Cancelled }`.  Returns false
+    /// if the id is unknown or already terminal.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.queue.iter().position(|(r, _)| r.id == id) {
+            let (req, enq) = self.queue.remove(pos).unwrap();
+            self.emit_finish(id, FinishReason::Cancelled, RequestStats {
+                prompt_len: req.prompt.len(),
+                generated: 0,
+                ttft_ms: 0.0,
+                decode_ms: 0.0,
+                queued_ms: enq.elapsed().as_secs_f64() * 1e3,
+            });
+            return true;
+        }
+        for i in 0..self.slots.len() {
+            let hit = self.slots[i].as_ref().is_some_and(|s| s.req.id == id);
+            if hit {
+                let mut slot = self.slots[i].take().unwrap();
+                let stats = slot.stats();
+                slot.cache.free(&mut self.pool);
+                self.emit_finish(id, FinishReason::Cancelled, stats);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Terminate every queued and active request with `Failed` (used when
+    /// a tick-level error poisons the whole batch, e.g. the decode graph
+    /// dying).  All cache pages return to the pool.
+    pub fn fail_all(&mut self, error: &str) {
+        while let Some((req, _)) = self.queue.pop_front() {
+            self.stats.failed += 1;
+            self.events.push_back((req.id, GenerationEvent::Failed {
+                error: error.to_string(),
+            }));
+        }
+        for i in 0..self.slots.len() {
+            if let Some(mut slot) = self.slots[i].take() {
+                slot.cache.free(&mut self.pool);
+                self.stats.failed += 1;
+                self.events.push_back((slot.req.id, GenerationEvent::Failed {
+                    error: error.to_string(),
+                }));
+            }
+        }
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len() + self.slots.iter().filter(|s| s.is_some()).count()
     }
 
-    pub fn take_completions(&mut self) -> Vec<Completion> {
-        std::mem::take(&mut self.completions)
+    /// Drain the undelivered lifecycle events, in emission order.
+    pub fn take_events(&mut self) -> Vec<(u64, GenerationEvent)> {
+        self.events.drain(..).collect()
+    }
+
+    pub fn has_events(&self) -> bool {
+        !self.events.is_empty()
     }
 
     fn cache_bits(&self) -> u32 {
         if self.runner.spec.kv_bits == 16 { 8 } else { self.runner.spec.kv_bits }
     }
 
+    fn emit_finish(&mut self, id: u64, reason: FinishReason, stats: RequestStats) {
+        match reason {
+            FinishReason::Cancelled => self.stats.cancelled += 1,
+            _ => self.stats.completed += 1,
+        }
+        self.events.push_back((id, GenerationEvent::Finished { reason, stats }));
+    }
+
     /// Admit queued requests into free slots (prefill + cache init).
+    ///
+    /// A request can terminate *at admission* — sampled first token hits
+    /// the stop token, `max_new_tokens == 1`, or prefill fails — in
+    /// which case the slot stays free (no pages were ever taken) and the
+    /// next queued request is pulled immediately.
     fn admit(&mut self) -> Result<()> {
-        for slot_idx in 0..self.slots.len() {
+        'slots: for slot_idx in 0..self.slots.len() {
             if self.slots[slot_idx].is_some() {
                 continue;
             }
-            let Some((req, enq)) = self.queue.pop_front() else {
-                break;
-            };
-            let t0 = Instant::now();
-            let pre = self.runner.prefill(&req.prompt)?;
-            self.stats.total_prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
-
-            let cfg = self.runner.cfg.clone();
-            let fp = self.runner.spec.kv_bits == 16;
-            let mut cache = SeqCache::new(&cfg, self.cache_bits(),
-                                          self.runner.spec.kv_clip,
-                                          self.tokens_per_page);
-            if fp {
-                // fp16-baseline: authoritative values live in the f32 staging
-                let (l_n, b, s, d) = (cfg.n_layers, cfg.decode_batch,
-                                      cfg.cache_seq, cfg.d_kv());
-                for l in 0..l_n {
-                    for t in 0..pre.len {
-                        let src = (l * pre.len + t) * d;
-                        let dst = ((l * b + slot_idx) * s + t) * d;
-                        self.staging.k_f32[dst..dst + d]
-                            .copy_from_slice(&pre.ks[src..src + d]);
-                        self.staging.v_f32[dst..dst + d]
-                            .copy_from_slice(&pre.vs[src..src + d]);
+            loop {
+                let Some((req, enq)) = self.queue.pop_front() else {
+                    break 'slots;
+                };
+                let cfg = self.runner.cfg.clone();
+                let fp = self.runner.spec.kv_bits == 16;
+                if !fp {
+                    // Page-admission check: a request that can NEVER fit
+                    // (needs more pages than the whole pool) fails fast —
+                    // it must not stall the FIFO behind it until every
+                    // in-flight request drains.  One that merely can't fit
+                    // *right now* is held (FIFO order preserved) until
+                    // running slots release pages.
+                    let need = 2 * cfg.n_layers
+                        * req.prompt.len().div_ceil(self.tokens_per_page);
+                    if need > self.pool.capacity() {
+                        self.stats.failed += 1;
+                        self.events.push_back((req.id, GenerationEvent::Failed {
+                            error: format!(
+                                "prompt needs {need} KV pages but the pool \
+                                 only holds {}", self.pool.capacity()),
+                        }));
+                        continue;
+                    }
+                    if need > self.pool.available() {
+                        self.queue.push_front((req, enq));
+                        break 'slots;
                     }
                 }
-                cache.set_len(pre.len);
-            } else {
-                cache.init_from_prefill(&mut self.pool, &pre.ks, &pre.vs, pre.len,
-                                        cfg.kv_group)?;
-                // also write the dense staging region for this slot
-                self.load_slot_staging(slot_idx, &cache);
-            }
+                // A prompt the staging/cache geometry cannot hold at all
+                // fails fast (real configs have cache_seq >= max_seq, so
+                // this only guards pathological configurations).
+                if req.prompt.len() > cfg.cache_seq {
+                    self.stats.failed += 1;
+                    self.events.push_back((req.id, GenerationEvent::Failed {
+                        error: format!("prompt ({} tokens) exceeds cache_seq {}",
+                                       req.prompt.len(), cfg.cache_seq),
+                    }));
+                    continue;
+                }
+                let t0 = Instant::now();
+                let pre = match self.runner.prefill(&req.prompt) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        self.stats.failed += 1;
+                        self.events.push_back((req.id, GenerationEvent::Failed {
+                            error: format!("prefill failed: {e:#}"),
+                        }));
+                        continue;
+                    }
+                };
+                self.stats.total_prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
 
-            let v = cfg.vocab;
-            let last = &pre.logits[(pre.len - 1) * v..pre.len * v];
-            let first_tok = sample(last, req.sampling, &mut self.rng) as u16;
-            let ttft = enq.elapsed().as_secs_f64() * 1e3;
-            self.slots[slot_idx] = Some(Slot {
-                generated: vec![first_tok],
-                next_token: first_tok,
-                enqueued: enq,
-                started: Instant::now(),
-                ttft_ms: ttft,
-                req,
-                cache,
-            });
+                // Sample the first token from the prefill logits *before*
+                // building any cache state: a request that ends here (stop
+                // token, one-token budget) never touches the page pool or
+                // the staging buffers at all.
+                let v = cfg.vocab;
+                let last = &pre.logits[(pre.len - 1) * v..pre.len * v];
+                let first_tok = sample(last, req.sampling, &mut self.rng) as u16;
+                let ttft = enq.elapsed().as_secs_f64() * 1e3;
+                self.events.push_back((req.id, GenerationEvent::Started {
+                    ttft_ms: ttft,
+                }));
+                self.events.push_back((req.id, GenerationEvent::Token {
+                    token: first_tok, index: 0,
+                }));
+                let hit_stop = req.stop_token == Some(first_tok);
+                let budget_done = req.max_new_tokens <= 1;
+                if hit_stop || budget_done {
+                    let reason = if hit_stop {
+                        FinishReason::Stop
+                    } else {
+                        FinishReason::MaxTokens
+                    };
+                    self.emit_finish(req.id, reason, RequestStats {
+                        prompt_len: req.prompt.len(),
+                        generated: 1,
+                        ttft_ms: ttft,
+                        decode_ms: 0.0,
+                        queued_ms: enq.elapsed().as_secs_f64() * 1e3,
+                    });
+                    continue; // slot is still free — pull the next request
+                }
+                // Near-capacity prompts (len + 2 >= cache_seq) still admit:
+                // the decode tick retires them after sampling, *before* any
+                // append, so one decode step is always safe — matching the
+                // pre-event engine's behavior exactly.
+
+                let mut cache = SeqCache::new(&cfg, self.cache_bits(),
+                                              self.runner.spec.kv_clip,
+                                              self.tokens_per_page);
+                if fp {
+                    // fp16-baseline: authoritative values live in the f32
+                    // staging
+                    let (l_n, b, s, d) = (cfg.n_layers, cfg.decode_batch,
+                                          cfg.cache_seq, cfg.d_kv());
+                    for l in 0..l_n {
+                        for t in 0..pre.len {
+                            let src = (l * pre.len + t) * d;
+                            let dst = ((l * b + slot_idx) * s + t) * d;
+                            self.staging.k_f32[dst..dst + d]
+                                .copy_from_slice(&pre.ks[src..src + d]);
+                            self.staging.v_f32[dst..dst + d]
+                                .copy_from_slice(&pre.vs[src..src + d]);
+                        }
+                    }
+                    cache.set_len(pre.len);
+                } else {
+                    if let Err(e) = cache.init_from_prefill(
+                        &mut self.pool, &pre.ks, &pre.vs, pre.len, cfg.kv_group)
+                    {
+                        cache.free(&mut self.pool);
+                        self.stats.failed += 1;
+                        self.events.push_back((req.id, GenerationEvent::Failed {
+                            error: format!("cache init failed: {e:#}"),
+                        }));
+                        continue;
+                    }
+                    // also write the dense staging region for this slot
+                    self.load_slot_staging(slot_idx, &cache);
+                }
+
+                self.slots[slot_idx] = Some(Slot {
+                    generated: vec![first_tok],
+                    next_token: first_tok,
+                    enqueued: enq,
+                    started: Instant::now(),
+                    ttft_ms: ttft,
+                    req,
+                    cache,
+                });
+                break;
+            }
         }
         Ok(())
     }
@@ -317,7 +532,8 @@ impl GenerationEngine {
     }
 
     /// One engine tick: admit, batched decode, append, sample, retire.
-    /// Returns number of tokens produced this tick.
+    /// Returns number of tokens produced this tick (events are queued for
+    /// [`Self::take_events`]).
     pub fn tick(&mut self) -> Result<usize> {
         self.admit()?;
         let cfg = self.runner.cfg.clone();
@@ -356,36 +572,55 @@ impl GenerationEngine {
             sl.generated.push(next);
             sl.next_token = next;
             produced += 1;
+            let id = sl.req.id;
+            let index = sl.generated.len() - 1;
+            self.events.push_back((id, GenerationEvent::Token {
+                token: next, index,
+            }));
+            let sl = self.slots[i].as_ref().unwrap();
             let hit_stop = sl.req.stop_token == Some(next);
             // `+ 2` = this tick's append (phase 2) plus the next tick's —
             // the same bound the old post-append `len + 1` check enforced.
-            let full = sl.generated.len() >= sl.req.max_new_tokens
-                || sl.cache.len + 2 >= cfg.cache_seq;
-            if hit_stop || full {
+            let budget_done = sl.generated.len() >= sl.req.max_new_tokens;
+            let cache_full = sl.cache.len + 2 >= cfg.cache_seq;
+            if hit_stop || budget_done || cache_full {
                 let mut slot = self.slots[i].take().unwrap();
-                let decode_ms = slot.started.elapsed().as_secs_f64() * 1e3;
+                let stats = slot.stats();
                 slot.cache.free(&mut self.pool);
-                self.stats.completed += 1;
-                self.completions.push(Completion {
-                    id: slot.req.id,
-                    prompt_len: slot.req.prompt.len(),
-                    tokens: slot.generated,
-                    ttft_ms: slot.ttft_ms,
-                    decode_ms,
-                    queued_ms: slot.enqueued.elapsed().as_secs_f64() * 1e3,
-                });
+                let reason = if hit_stop {
+                    FinishReason::Stop
+                } else if budget_done {
+                    FinishReason::MaxTokens
+                } else {
+                    FinishReason::CacheFull
+                };
+                self.emit_finish(id, reason, stats);
             } else {
                 survivors.push(i);
             }
         }
         // Phase 2: append into the authoritative caches (page allocation
         // is shared state — sequential), then fan the staging
-        // write-through over batch slots on the compute backend.
+        // write-through over batch slots on the compute backend.  An
+        // append failure (pool exhausted mid-decode) retires only the
+        // offending slot with `Failed` — concurrent requests keep
+        // running; freed pages may even unblock them next tick.
+        let mut appended: Vec<usize> = Vec::with_capacity(survivors.len());
         for &i in &survivors {
-            self.append_to_cache(i, &k_new, &v_new)?;
+            match self.append_to_cache(i, &k_new, &v_new) {
+                Ok(()) => appended.push(i),
+                Err(e) => {
+                    let mut slot = self.slots[i].take().unwrap();
+                    slot.cache.free(&mut self.pool);
+                    self.stats.failed += 1;
+                    self.events.push_back((slot.req.id, GenerationEvent::Failed {
+                        error: format!("KV append failed: {e:#}"),
+                    }));
+                }
+            }
         }
-        if self.runner.spec.kv_bits != 16 && !survivors.is_empty() {
-            self.refresh_staging_for(&survivors);
+        if self.runner.spec.kv_bits != 16 && !appended.is_empty() {
+            self.refresh_staging_for(&appended);
         }
         let cache_bytes: usize = self.slots.iter().flatten().map(|s| s.cache.bytes()).sum();
         let fp16_bytes: usize = self.slots.iter().flatten()
@@ -396,12 +631,43 @@ impl GenerationEngine {
         Ok(produced)
     }
 
-    /// Drive until every submitted request completes.
+    /// Compatibility shim over the event loop: drive until every
+    /// submitted request terminates, folding the event stream back into
+    /// [`Completion`] records (in retirement order).  Cancelled requests
+    /// yield their partial completions; failed ones are dropped.  The
+    /// tick sequence is identical to event-API consumption, so outputs
+    /// stay byte-identical at a fixed seed.
     pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
-        while self.pending() > 0 {
+        let mut partial: HashMap<u64, Vec<u16>> = HashMap::new();
+        let mut done = Vec::new();
+        loop {
+            for (id, ev) in self.take_events() {
+                match ev {
+                    GenerationEvent::Token { token, .. } => {
+                        partial.entry(id).or_default().push(token);
+                    }
+                    GenerationEvent::Finished { stats, .. } => {
+                        done.push(Completion {
+                            id,
+                            prompt_len: stats.prompt_len,
+                            tokens: partial.remove(&id).unwrap_or_default(),
+                            ttft_ms: stats.ttft_ms,
+                            decode_ms: stats.decode_ms,
+                            queued_ms: stats.queued_ms,
+                        });
+                    }
+                    GenerationEvent::Failed { .. } => {
+                        partial.remove(&id);
+                    }
+                    GenerationEvent::Queued | GenerationEvent::Started { .. } => {}
+                }
+            }
+            if self.pending() == 0 && !self.has_events() {
+                break;
+            }
             self.tick()?;
         }
-        Ok(self.take_completions())
+        Ok(done)
     }
 
     pub fn pool_in_use(&self) -> usize {

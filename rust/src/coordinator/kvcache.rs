@@ -64,6 +64,17 @@ impl PagePool {
         self.pages.len() - self.free.len()
     }
 
+    /// Pages currently allocatable (admission control consults this
+    /// before prefilling a request whose cache init would exhaust us).
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Total pages the pool was built with (allocated + free).
+    pub fn capacity(&self) -> usize {
+        self.pages.len()
+    }
+
     pub fn page(&self, id: PageId) -> &[u8] {
         &self.pages[id]
     }

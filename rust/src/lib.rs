@@ -28,10 +28,18 @@
 //! * [`runtime`]   — PJRT engine: manifest-driven executable registry.
 //! * [`coordinator`] — the serving layer: continuous batcher, paged
 //!                   quantized KV-cache manager, sampler, metrics.
-//! * [`server`]    — threaded TCP front-end with a line-JSON protocol.
+//! * [`api`]       — the unified inference API: typed `GenerationParams`,
+//!                   the `InferenceService` trait, per-request
+//!                   `GenerationEvent` streams with cancellation and
+//!                   bounded admission, a `LocalSession` over the engine,
+//!                   the TCP `Client`, and the v2 event-frame wire codec.
+//! * [`server`]    — threaded TCP front-end speaking the v2 event-frame
+//!                   protocol (one JSON frame per event, multiplexed by
+//!                   request id; v1 one-shot lines still answered).
 //! * [`eval`]      — perplexity, zero-shot probes, outlier statistics.
 //! * [`bench_support`] — shared workload generators for `cargo bench`.
 
+pub mod api;
 pub mod attention;
 pub mod backend;
 pub mod bench_support;

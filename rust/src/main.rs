@@ -2,20 +2,23 @@
 //! experiment toolchain.
 //!
 //! Subcommands:
-//!   serve      start the TCP serving front-end (QuaRot-INT4 by default)
-//!   generate   one-shot generation from a token prompt
+//!   serve      start the TCP serving front-end (QuaRot-INT4 by default;
+//!              v2 event-frame protocol, --queue-bound for admission)
+//!   generate   generation from a token prompt (--stream prints tokens
+//!              incrementally as they are produced)
 //!   ppl        perplexity of a quantization spec on the eval split
 //!   zeroshot   probe-task accuracies
 //!   outliers   Fig.1 activation outlier statistics (base vs rotated)
 //!   verify     cross-language check: rust QuaRot transform == python's
 //!   info       print the model manifest summary
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use quarot::api::{GenerationEvent, GenerationParams, LocalSession,
+                  Sampling, SessionConfig};
 use quarot::bench_support::{self, Artifacts};
-use quarot::coordinator::batcher::{GenerationEngine, Request};
+use quarot::coordinator::batcher::GenerationEngine;
 use quarot::coordinator::runner::{QuantSpec, Runner, Variant, WeightQuant};
-use quarot::coordinator::sampler::Sampling;
 use quarot::eval;
 use quarot::model::transform;
 use quarot::quant;
@@ -73,6 +76,9 @@ fn main() -> Result<()> {
                  usage: quarot <serve|generate|ppl|zeroshot|outliers|verify|info>\n\
                  common flags: --model tiny-mha --scheme quarot-int4\n\
                                --backend scalar|blocked|threaded|auto (default auto)\n\
+                 generate:     --stream (incremental tokens) --temperature --top-k\n\
+                               --stop-token\n\
+                 serve:        --queue-bound N (admission backpressure)\n\
                  see README.md for the full matrix"
             );
             Ok(())
@@ -93,6 +99,8 @@ fn serve(args: &Args) -> Result<()> {
     let spec = spec_from_args(args)?;
     let pages = args.usize_or("pages", 4096);
     let port = args.usize_or("port", 8747) as u16;
+    let queue_bound = args.usize_or("queue-bound",
+                                    quarot::server::DEFAULT_QUEUE_BOUND);
     let handle = quarot::server::serve(
         move || {
             let art = Artifacts::load(&model)?;
@@ -100,12 +108,18 @@ fn serve(args: &Args) -> Result<()> {
             Ok(GenerationEngine::new(runner, pages, 7))
         },
         port,
+        queue_bound,
     )?;
-    println!("serving on 127.0.0.1:{} — newline-JSON protocol; \
-              {{\"cmd\":\"stats\"}} for metrics", handle.port);
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
-    }
+    println!("serving on 127.0.0.1:{} — v2 event-frame protocol \
+              (one JSON frame per event; {{\"cmd\":\"submit\"}} / \
+              {{\"cmd\":\"cancel\"}} / {{\"cmd\":\"stats\"}} / \
+              {{\"cmd\":\"shutdown\"}}); admission bound {}",
+             handle.port, queue_bound);
+    // blocks until a wire shutdown stops the engine and accept loops,
+    // then exits cleanly instead of lingering as a serving-nothing zombie
+    handle.wait();
+    println!("server shut down");
+    Ok(())
 }
 
 fn generate(args: &Args) -> Result<()> {
@@ -114,22 +128,57 @@ fn generate(args: &Args) -> Result<()> {
         .split(',')
         .map(|t| t.trim().parse().context("bad prompt token"))
         .collect::<Result<_>>()?;
-    let max_new = args.usize_or("max-new", 32);
-    let mut engine = GenerationEngine::new(runner, 1024, 7);
-    engine.submit(Request {
-        id: 0,
-        prompt,
-        max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
-        stop_token: None,
-    });
-    let done = engine.run_to_completion()?;
-    for c in done {
-        println!("tokens: {:?}", c.tokens);
-        println!("ttft {:.1} ms, decode {:.1} ms, {:.1} tok/s",
-                 c.ttft_ms, c.decode_ms,
-                 c.tokens.len() as f64 / (c.decode_ms / 1e3).max(1e-9));
+    let temperature = args.f64_or("temperature", 0.0);
+    let sampling = if temperature > 0.0 {
+        Sampling::TopK {
+            temperature: temperature as f32,
+            k: args.usize_or("top-k", 0),
+        }
+    } else {
+        Sampling::Greedy
+    };
+    let mut params = GenerationParams::new(prompt)
+        .max_new(args.usize_or("max-new", 32))
+        .sampling(sampling);
+    if let Some(st) = args.get("stop-token") {
+        params = params.stop_at(st.parse().context("bad stop token")?);
     }
+    let session = LocalSession::new(GenerationEngine::new(runner, 1024, 7),
+                                    SessionConfig::default());
+    let handle = session.submit(params).map_err(|e| anyhow!("{e}"))?;
+
+    if args.bool("stream") {
+        // print tokens incrementally as the engine produces them
+        use std::io::Write as _;
+        while let Some(ev) = handle.next_event()? {
+            match ev {
+                GenerationEvent::Started { ttft_ms } => {
+                    eprintln!("[ttft {ttft_ms:.1} ms]");
+                }
+                GenerationEvent::Token { token, .. } => {
+                    print!("{token} ");
+                    std::io::stdout().flush()?;
+                }
+                GenerationEvent::Finished { reason, stats } => {
+                    println!();
+                    println!("[done: {reason} — {} tokens, {:.1} tok/s]",
+                             stats.generated, stats.tokens_per_sec());
+                }
+                GenerationEvent::Failed { error } => {
+                    println!();
+                    bail!("generation failed: {error}");
+                }
+                GenerationEvent::Queued => {}
+            }
+        }
+        return Ok(());
+    }
+
+    let out = handle.wait()?;
+    println!("tokens: {:?}", out.tokens);
+    println!("finish: {} | ttft {:.1} ms, decode {:.1} ms, {:.1} tok/s",
+             out.reason, out.stats.ttft_ms, out.stats.decode_ms,
+             out.stats.tokens_per_sec());
     Ok(())
 }
 

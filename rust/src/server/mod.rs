@@ -1,107 +1,188 @@
-//! Threaded TCP front-end: newline-delimited JSON requests over a socket,
-//! served by the generation engine on a dedicated engine thread (the engine
-//! owns the PJRT executables; connections only exchange messages).
+//! Threaded TCP front-end speaking the v2 newline-JSON **event-frame**
+//! protocol (see `quarot::api::wire` for the frame schema), built on top
+//! of the unified inference API: the engine thread owns a
+//! [`LocalSession`] and multiplexes its event stream to connections by
+//! request id.  Connections submit, receive `queued` / `started` /
+//! `token` / `finished` / `failed` frames as they are produced, and may
+//! `{"cmd":"cancel","id":..}` a request mid-generation — its KV pages
+//! return to the pool immediately.
 //!
-//! Wire protocol (one JSON object per line):
-//!   → {"prompt": [1,2,3], "max_new_tokens": 16, "temperature": 0.8, "top_k": 4}
-//!   ← {"id": 7, "tokens": [..], "ttft_ms": 1.2, "decode_ms": 30.1,
-//!      "tokens_per_sec": 412.0}
-//! and {"cmd": "stats"} / {"cmd": "shutdown"} admin messages.
+//! Backpressure: the session's admission queue is bounded; submits
+//! beyond the bound get a typed `rejected` frame instead of queueing
+//! without bound.  Legacy v1 one-shot lines (`{"prompt": ...}` with no
+//! `"cmd"`) are still answered with a single completion object.
+//!
+//! `{"cmd":"shutdown"}` stops the whole server: it sets the shared
+//! shutdown flag (engine thread and accept loop both exit) rather than
+//! just closing the issuing connection, and [`ServerHandle::shutdown`]
+//! joins *both* threads.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::batcher::{Completion, GenerationEngine, Request};
-use crate::coordinator::sampler::Sampling;
-use crate::util::json::{self, n, obj, Value};
+use crate::api::wire::{self, ClientFrame};
+use crate::api::{GenerationEvent, GenerationParams, LocalSession, RequestId,
+                 SessionConfig, SubmitError};
+use crate::coordinator::batcher::GenerationEngine;
+use crate::util::json::{self, n, Value};
+
+pub use crate::api::remote::Client;
+
+/// Default admission-queue bound for served engines.
+pub const DEFAULT_QUEUE_BOUND: usize = 64;
 
 pub struct ServerHandle {
     pub port: u16,
-    shutdown: Arc<Mutex<bool>>,
-    join: Option<std::thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    engine: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
+    /// Block until the server shuts down (e.g. a wire `{"cmd":"shutdown"}`),
+    /// joining the accept and engine threads.
+    pub fn wait(mut self) {
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.engine.take() {
+            let _ = j.join();
+        }
+    }
+
     pub fn shutdown(mut self) {
-        *self.shutdown.lock().unwrap() = true;
-        // poke the accept loop
+        self.shutdown.store(true, Ordering::SeqCst);
+        // poke the accept loop out of `incoming()`
         let _ = TcpStream::connect(("127.0.0.1", self.port));
-        if let Some(j) = self.join.take() {
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.engine.take() {
             let _ = j.join();
         }
     }
 }
 
+/// Typed event routed from the engine thread to a connection's writer.
+type RoutedEvent = (RequestId, GenerationEvent, Option<u64>);
+
 enum EngineMsg {
-    Submit(Request, mpsc::Sender<Completion>),
-    Stats(mpsc::Sender<String>),
+    Submit {
+        params: GenerationParams,
+        /// client correlation id, echoed on the `queued` frame
+        cid: u64,
+        events: mpsc::Sender<RoutedEvent>,
+        reply: mpsc::Sender<Result<RequestId, SubmitError>>,
+    },
+    Cancel {
+        id: RequestId,
+        reply: mpsc::Sender<bool>,
+    },
+    Stats {
+        reply: mpsc::Sender<String>,
+    },
 }
 
-/// Start serving on `port` (0 → ephemeral).  Returns once the socket is
-/// bound; the engine loop runs on a background thread.
+/// Start serving on `port` (0 → ephemeral) with the given admission
+/// bound.  Returns once the socket is bound; the engine loop runs on a
+/// background thread.
 ///
 /// The engine is built *inside* the engine thread via `make_engine`
 /// because PJRT handles are not `Send`.
-pub fn serve<F>(make_engine: F, port: u16) -> Result<ServerHandle>
+pub fn serve<F>(make_engine: F, port: u16, queue_bound: usize) -> Result<ServerHandle>
 where
     F: FnOnce() -> Result<GenerationEngine> + Send + 'static,
 {
     let listener = TcpListener::bind(("127.0.0.1", port)).context("bind")?;
     let port = listener.local_addr()?.port();
-    let shutdown = Arc::new(Mutex::new(false));
+    let shutdown = Arc::new(AtomicBool::new(false));
     let (tx, rx) = mpsc::channel::<EngineMsg>();
 
-    // engine thread: owns the engine, runs ticks, routes completions
+    // engine thread: owns the session, runs ticks, routes events by id
     let sd_engine = shutdown.clone();
-    std::thread::spawn(move || {
-        let mut engine = match make_engine() {
-            Ok(e) => e,
+    let engine_join = std::thread::spawn(move || {
+        let session = match make_engine() {
+            Ok(e) => LocalSession::new(e, SessionConfig { queue_bound }),
             Err(e) => {
                 eprintln!("engine construction failed: {e:#}");
+                // drain control messages with typed failures until told
+                // to stop, so connections get errors instead of hangs
+                while !sd_engine.load(Ordering::SeqCst) {
+                    match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+                        Ok(EngineMsg::Submit { reply, .. }) => {
+                            let _ = reply.send(Err(SubmitError::Transport(
+                                "engine unavailable".into())));
+                        }
+                        Ok(EngineMsg::Cancel { reply, .. }) => {
+                            let _ = reply.send(false);
+                        }
+                        Ok(EngineMsg::Stats { reply }) => {
+                            let _ = reply.send("{}".into());
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
                 return;
             }
         };
-        let mut waiters: std::collections::HashMap<u64, mpsc::Sender<Completion>> =
-            Default::default();
+        // request id → (connection event sender, cid to echo on Queued)
+        let mut routes: HashMap<RequestId,
+                                (mpsc::Sender<RoutedEvent>, Option<u64>)> =
+            HashMap::new();
         loop {
-            if *sd_engine.lock().unwrap() {
+            if sd_engine.load(Ordering::SeqCst) {
+                // cancel everything in flight so every stream still gets
+                // its single terminal event before the senders drop
+                let live: Vec<RequestId> = routes.keys().copied().collect();
+                for id in live {
+                    session.cancel(id);
+                }
+                route_all(&session, &mut routes);
                 break;
             }
             // drain control messages
             while let Ok(msg) = rx.try_recv() {
                 match msg {
-                    EngineMsg::Submit(req, reply) => {
-                        let id = engine.submit(req);
-                        waiters.insert(id, reply);
+                    EngineMsg::Submit { params, cid, events, reply } => {
+                        match session.submit_detached(params) {
+                            Ok(id) => {
+                                routes.insert(id, (events, Some(cid)));
+                                let _ = reply.send(Ok(id));
+                            }
+                            Err(e) => {
+                                let _ = reply.send(Err(e));
+                            }
+                        }
                     }
-                    EngineMsg::Stats(reply) => {
-                        let s = &engine.stats;
-                        let _ = reply.send(json::write(&obj(vec![
+                    EngineMsg::Cancel { id, reply } => {
+                        let _ = reply.send(session.cancel(id));
+                    }
+                    EngineMsg::Stats { reply } => {
+                        let s = session.stats();
+                        let _ = reply.send(json::write(&wire::encode_stats(vec![
                             ("completed", n(s.completed as f64)),
+                            ("cancelled", n(s.cancelled as f64)),
+                            ("failed", n(s.failed as f64)),
                             ("decode_steps", n(s.decode_steps as f64)),
                             ("tokens_per_sec", n(s.tokens_per_sec())),
                             ("peak_cache_bytes", n(s.peak_cache_bytes as f64)),
                             ("peak_cache_fp16_bytes",
                              n(s.peak_cache_fp16_bytes as f64)),
-                            ("pool_pages_in_use", n(engine.pool_in_use() as f64)),
+                            ("pool_pages_in_use",
+                             n(session.pool_in_use() as f64)),
+                            ("queue_bound", n(queue_bound as f64)),
                         ])));
                     }
                 }
             }
-            if engine.pending() > 0 {
-                if let Err(e) = engine.tick() {
-                    eprintln!("engine tick failed: {e:#}");
-                }
-                for c in engine.take_completions() {
-                    if let Some(w) = waiters.remove(&c.id) {
-                        let _ = w.send(c);
-                    }
-                }
-            } else {
+            let routed = route_all(&session, &mut routes);
+            if !routed && session.pending() == 0 {
                 std::thread::sleep(std::time::Duration::from_millis(1));
             }
         }
@@ -109,30 +190,91 @@ where
 
     // accept loop thread
     let sd_accept = shutdown.clone();
-    let join = std::thread::spawn(move || {
+    let accept_join = std::thread::spawn(move || {
         for stream in listener.incoming() {
-            if *sd_accept.lock().unwrap() {
+            if sd_accept.load(Ordering::SeqCst) {
                 break;
             }
             let Ok(stream) = stream else { continue };
             let tx = tx.clone();
+            let sd = sd_accept.clone();
             std::thread::spawn(move || {
-                let _ = handle_conn(stream, tx);
+                let _ = handle_conn(stream, tx, sd);
             });
         }
     });
 
-    Ok(ServerHandle { port, shutdown, join: Some(join) })
+    Ok(ServerHandle {
+        port,
+        shutdown,
+        accept: Some(accept_join),
+        engine: Some(engine_join),
+    })
 }
 
-fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
+/// Advance the session and fan its events out to the owning connections.
+/// Terminal events drop the route.  Returns whether anything moved.
+fn route_all(session: &LocalSession,
+             routes: &mut HashMap<RequestId,
+                                  (mpsc::Sender<RoutedEvent>, Option<u64>)>)
+             -> bool {
+    let events = session.poll_events();
+    let moved = !events.is_empty();
+    for (id, ev) in events {
+        let terminal = ev.is_terminal();
+        if let Some((sender, cid)) = routes.get_mut(&id) {
+            let cid = if matches!(ev, GenerationEvent::Queued) {
+                cid.take()
+            } else {
+                None
+            };
+            let _ = sender.send((id, ev, cid));
+        }
+        if terminal {
+            routes.remove(&id);
+        }
+    }
+    moved
+}
+
+fn write_frame(out: &Mutex<TcpStream>, v: &Value) -> std::io::Result<()> {
+    let mut w = out.lock().unwrap();
+    writeln!(w, "{}", json::write(v))
+}
+
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>,
+               shutdown: Arc<AtomicBool>) -> Result<()> {
+    let local_addr = stream.local_addr()?;
+    let out = Arc::new(Mutex::new(stream.try_clone()?));
+    let mut reader = BufReader::new(stream);
+
+    // one writer per connection: encodes routed events as v2 frames.
+    // It also prunes the shared live-set on terminal frames, so the
+    // disconnect cleanup below only cancels requests still in flight
+    // instead of round-tripping a no-op Cancel per request ever served.
+    let (etx, erx) = mpsc::channel::<RoutedEvent>();
+    let live: Arc<Mutex<std::collections::HashSet<RequestId>>> =
+        Arc::new(Mutex::new(Default::default()));
+    let out_w = out.clone();
+    let live_w = live.clone();
+    let writer = std::thread::spawn(move || {
+        for (id, ev, cid) in erx {
+            if ev.is_terminal() {
+                live_w.lock().unwrap().remove(&id);
+            }
+            if write_frame(&out_w, &wire::encode_event(id, &ev, cid)).is_err() {
+                break; // client went away; events drain into the void
+            }
+        }
+    });
+    // the loop runs inside a closure so every exit path (including io
+    // errors) still reaches the disconnect cleanup below
+    let mut conn_loop = || -> Result<()> {
     let mut line = String::new();
     loop {
         line.clear();
         if reader.read_line(&mut line)? == 0 {
-            return Ok(());
+            break Ok(());
         }
         let trimmed = line.trim();
         if trimmed.is_empty() {
@@ -141,108 +283,133 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>) -> Result<()> {
         let v = match json::parse(trimmed) {
             Ok(v) => v,
             Err(e) => {
-                writeln!(out, "{}", json::write(&obj(vec![
-                    ("error", json::s(&format!("{e}"))),
-                ])))?;
+                write_frame(&out, &wire::encode_error(None, &format!("{e}")))?;
                 continue;
             }
         };
-        if v.get("cmd").and_then(|c| c.as_str()) == Some("stats") {
-            let (rtx, rrx) = mpsc::channel();
-            tx.send(EngineMsg::Stats(rtx)).ok();
-            let stats = rrx.recv().unwrap_or_else(|_| "{}".into());
-            writeln!(out, "{stats}")?;
-            continue;
-        }
-        if v.get("cmd").and_then(|c| c.as_str()) == Some("shutdown") {
-            writeln!(out, "{}", json::write(&obj(vec![("ok", Value::Bool(true))])))?;
-            return Ok(());
-        }
-        let req = match parse_request(&v) {
-            Ok(r) => r,
+        let frame = match wire::parse_client_frame(&v) {
+            Ok(f) => f,
             Err(e) => {
-                writeln!(out, "{}", json::write(&obj(vec![
-                    ("error", json::s(&format!("{e}"))),
-                ])))?;
+                // A malformed *submit* still gets the typed, cid-tagged
+                // rejection the protocol defines — an id-less error frame
+                // is protocol-fatal client-side and would poison every
+                // healthy stream multiplexed on this connection.
+                if v.get("cmd").and_then(|c| c.as_str()) == Some("submit") {
+                    let cid = v.get("cid").and_then(|c| c.as_usize())
+                        .unwrap_or(0) as u64;
+                    write_frame(&out, &wire::encode_rejected(
+                        cid,
+                        &SubmitError::InvalidParams(format!("{e:#}"))))?;
+                } else {
+                    write_frame(&out,
+                                &wire::encode_error(None, &format!("{e:#}")))?;
+                }
                 continue;
             }
         };
-        let (rtx, rrx) = mpsc::channel();
-        tx.send(EngineMsg::Submit(req, rtx)).ok();
-        match rrx.recv() {
-            Ok(c) => {
-                let toks: Vec<Value> =
-                    c.tokens.iter().map(|&t| n(t as f64)).collect();
-                let tps = c.tokens.len() as f64 / (c.decode_ms / 1e3).max(1e-9);
-                writeln!(out, "{}", json::write(&obj(vec![
-                    ("id", n(c.id as f64)),
-                    ("tokens", Value::Arr(toks)),
-                    ("ttft_ms", n(c.ttft_ms)),
-                    ("decode_ms", n(c.decode_ms)),
-                    ("queued_ms", n(c.queued_ms)),
-                    ("tokens_per_sec", n(tps)),
-                ])))?;
+        match frame {
+            ClientFrame::Submit { cid, params } => {
+                match submit_to_engine(&tx, params, cid, etx.clone()) {
+                    Ok(id) => {
+                        live.lock().unwrap().insert(id);
+                    }
+                    Err(e) => {
+                        write_frame(&out, &wire::encode_rejected(cid, &e))?;
+                    }
+                }
             }
-            Err(_) => {
-                writeln!(out, "{}", json::write(&obj(vec![
-                    ("error", json::s("engine dropped request")),
-                ])))?;
+            ClientFrame::Cancel { id } => {
+                // best-effort and idempotent: a live request confirms via
+                // its Finished{cancelled} frame; a miss (unknown id, or a
+                // race with natural completion) is deliberately silent —
+                // an id-tagged error frame here could overtake the real
+                // terminal frame sitting in the writer channel and fake a
+                // second terminal on the client.
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(EngineMsg::Cancel { id, reply: rtx }).is_ok() {
+                    let _ = rrx.recv();
+                }
+            }
+            ClientFrame::Stats => {
+                let (rtx, rrx) = mpsc::channel();
+                let _ = tx.send(EngineMsg::Stats { reply: rtx });
+                let stats = rrx.recv().unwrap_or_else(|_| "{}".into());
+                let mut w = out.lock().unwrap();
+                writeln!(w, "{stats}")?;
+            }
+            ClientFrame::Shutdown => {
+                // the satellite fix: stop the *whole server*, not just
+                // this connection — flag first, then poke the accept loop
+                shutdown.store(true, Ordering::SeqCst);
+                let _ = TcpStream::connect(local_addr);
+                write_frame(&out, &wire::encode_shutdown_ack())?;
+                break Ok(());
+            }
+            ClientFrame::LegacyGenerate { params } => {
+                // v1 one-shot: private event channel, folded into the
+                // old single-object response
+                let (ltx, lrx) = mpsc::channel::<RoutedEvent>();
+                match submit_to_engine(&tx, params, 0, ltx) {
+                    Ok(_) => {
+                        let resp = fold_legacy(&lrx);
+                        let mut w = out.lock().unwrap();
+                        writeln!(w, "{}", json::write(&resp))?;
+                    }
+                    Err(e) => {
+                        let mut w = out.lock().unwrap();
+                        writeln!(w, "{}", json::write(&json::obj(vec![
+                            ("error", json::s(&format!("{e}"))),
+                        ])))?;
+                    }
+                }
             }
         }
     }
-}
-
-fn parse_request(v: &Value) -> Result<Request> {
-    let prompt: Vec<u16> = v.get("prompt").and_then(|p| p.as_arr())
-        .context("missing prompt")?
-        .iter()
-        .map(|t| t.as_usize().context("bad token").map(|x| x as u16))
-        .collect::<Result<_>>()?;
-    let max_new = v.get("max_new_tokens").and_then(|x| x.as_usize()).unwrap_or(16);
-    let temperature = v.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0);
-    let top_k = v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(0);
-    let sampling = if temperature > 0.0 {
-        Sampling::TopK { temperature: temperature as f32, k: top_k }
-    } else {
-        Sampling::Greedy
     };
-    Ok(Request {
-        id: 0,
-        prompt,
-        max_new_tokens: max_new,
-        sampling,
-        stop_token: v.get("stop_token").and_then(|x| x.as_usize()).map(|t| t as u16),
-    })
+    let result = conn_loop();
+    // a dropped connection must not leak slots: cancel whatever is still
+    // in flight (terminal requests were already pruned by the writer)
+    let still_live: Vec<RequestId> = live.lock().unwrap().iter().copied().collect();
+    for id in still_live {
+        let (rtx, rrx) = mpsc::channel();
+        if tx.send(EngineMsg::Cancel { id, reply: rtx }).is_ok() {
+            let _ = rrx.recv();
+        }
+    }
+    drop(etx);
+    let _ = writer.join();
+    result
 }
 
-/// Blocking client for tests, examples and the CLI.
-pub struct Client {
-    stream: BufReader<TcpStream>,
+fn submit_to_engine(tx: &mpsc::Sender<EngineMsg>, params: GenerationParams,
+                    cid: u64, events: mpsc::Sender<RoutedEvent>)
+                    -> Result<RequestId, SubmitError> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(EngineMsg::Submit { params, cid, events, reply: rtx })
+        .map_err(|_| SubmitError::Transport("engine gone".into()))?;
+    match rrx.recv() {
+        Ok(r) => r,
+        Err(_) => Err(SubmitError::Transport("engine dropped request".into())),
+    }
 }
 
-impl Client {
-    pub fn connect(port: u16) -> Result<Client> {
-        let s = TcpStream::connect(("127.0.0.1", port))?;
-        Ok(Client { stream: BufReader::new(s) })
+/// Fold a private event stream into the legacy v1 one-shot response —
+/// the same shaping `Client::generate` uses ([`outcome_to_value`]), so
+/// the v1 contract lives in exactly one place.
+fn fold_legacy(rx: &mpsc::Receiver<RoutedEvent>) -> Value {
+    let mut tokens: Vec<u16> = Vec::new();
+    for (id, ev, _) in rx {
+        match ev {
+            GenerationEvent::Token { token, .. } => tokens.push(token),
+            GenerationEvent::Finished { reason, stats } => {
+                return crate::api::remote::outcome_to_value(
+                    &crate::api::GenerationOutcome { id, tokens, reason, stats });
+            }
+            GenerationEvent::Failed { error } => {
+                return json::obj(vec![("error", json::s(&error))]);
+            }
+            _ => {}
+        }
     }
-
-    pub fn call(&mut self, msg: &Value) -> Result<Value> {
-        let mut w = self.stream.get_ref().try_clone()?;
-        writeln!(w, "{}", json::write(msg))?;
-        let mut line = String::new();
-        self.stream.read_line(&mut line)?;
-        json::parse(line.trim()).map_err(|e| anyhow::anyhow!("{e}"))
-    }
-
-    pub fn generate(&mut self, prompt: &[u16], max_new: usize) -> Result<Value> {
-        let toks: Vec<Value> = prompt.iter().map(|&t| n(t as f64)).collect();
-        self.call(&obj(vec![
-            ("prompt", Value::Arr(toks)),
-            ("max_new_tokens", n(max_new as f64)),
-        ]))
-    }
-
-    pub fn stats(&mut self) -> Result<Value> {
-        self.call(&obj(vec![("cmd", json::s("stats"))]))
-    }
+    json::obj(vec![("error", json::s("engine dropped request"))])
 }

@@ -1,0 +1,326 @@
+//! Tests for the unified streaming inference API: event ordering,
+//! cancellation returning pages to the pool, bounded-admission
+//! rejection, byte-identical output between the event path and the
+//! legacy `run_to_completion` shim, and the v2 TCP event-frame protocol
+//! (interleaving, cancel, raw v1 compatibility).
+//!
+//! Like `integration.rs`, every test needs `make artifacts` and skips
+//! with a notice when they are absent.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use quarot::api::{FinishReason, GenerationEvent, GenerationParams,
+                  LocalSession, SessionConfig, SubmitError};
+use quarot::bench_support::Artifacts;
+use quarot::coordinator::batcher::{GenerationEngine, Request};
+use quarot::coordinator::runner::QuantSpec;
+use quarot::coordinator::sampler::Sampling;
+use quarot::server::{serve, Client};
+use quarot::util::json;
+
+fn art() -> Option<Artifacts> {
+    match Artifacts::load("tiny-mha") {
+        Ok(a) => Some(a),
+        Err(_) => {
+            eprintln!("[skip] artifacts missing — run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn session(art: &Artifacts, pages: usize, seed: u64, queue_bound: usize)
+           -> LocalSession {
+    let runner = art.runner(QuantSpec::quarot(4), None).unwrap();
+    LocalSession::new(GenerationEngine::new(runner, pages, seed),
+                      SessionConfig { queue_bound })
+}
+
+#[test]
+fn event_stream_is_ordered_with_one_terminal() {
+    let Some(art) = art() else { return };
+    let prompt = art.corpus.split("eval").unwrap()[..8].to_vec();
+    let s = session(&art, 512, 7, 16);
+    let h = s.submit(GenerationParams::new(prompt).max_new(6)).unwrap();
+
+    let mut events = Vec::new();
+    while let Some(ev) = h.next_event().unwrap() {
+        events.push(ev);
+    }
+    // exact shape: Queued, Started, Token ×6 (contiguous indices), Finished
+    assert!(matches!(events[0], GenerationEvent::Queued), "{events:?}");
+    assert!(matches!(events[1], GenerationEvent::Started { .. }), "{events:?}");
+    let tokens: Vec<(u16, usize)> = events.iter().filter_map(|e| match e {
+        GenerationEvent::Token { token, index } => Some((*token, *index)),
+        _ => None,
+    }).collect();
+    assert_eq!(tokens.len(), 6);
+    for (i, &(_, idx)) in tokens.iter().enumerate() {
+        assert_eq!(idx, i, "token indices must be contiguous from 0");
+    }
+    let terminals: Vec<&GenerationEvent> =
+        events.iter().filter(|e| e.is_terminal()).collect();
+    assert_eq!(terminals.len(), 1, "exactly one terminal event");
+    match terminals[0] {
+        GenerationEvent::Finished { reason, stats } => {
+            assert_eq!(*reason, FinishReason::MaxTokens);
+            assert_eq!(stats.generated, 6);
+            assert_eq!(stats.prompt_len, 8);
+        }
+        other => panic!("wrong terminal {other:?}"),
+    }
+    assert!(events.last().unwrap().is_terminal(),
+            "terminal must come last: {events:?}");
+    // a drained handle stays drained
+    assert!(h.next_event().unwrap().is_none());
+}
+
+#[test]
+fn cancellation_frees_pool_pages() {
+    let Some(art) = art() else { return };
+    let prompt = art.corpus.split("eval").unwrap()[..8].to_vec();
+    let s = session(&art, 512, 7, 16);
+    assert_eq!(s.pool_in_use(), 0);
+
+    let h = s.submit(GenerationParams::new(prompt).max_new(64)).unwrap();
+    // stream a few tokens so the request is mid-flight with pages held
+    let mut seen_tokens = 0;
+    while seen_tokens < 3 {
+        match h.next_event().unwrap().expect("stream ended early") {
+            GenerationEvent::Token { .. } => seen_tokens += 1,
+            e => assert!(!e.is_terminal(), "finished before cancel: {e:?}"),
+        }
+    }
+    assert!(s.pool_in_use() > 0, "mid-flight request must hold pages");
+    assert!(h.cancel().unwrap());
+    assert_eq!(s.pool_in_use(), 0,
+               "cancel must return every page to the pool");
+
+    // the stream still terminates in exactly one Finished{Cancelled}
+    let mut terminals = 0;
+    while let Some(ev) = h.next_event().unwrap() {
+        if let GenerationEvent::Finished { reason, .. } = &ev {
+            assert_eq!(*reason, FinishReason::Cancelled);
+            terminals += 1;
+        } else {
+            assert!(!ev.is_terminal());
+        }
+    }
+    assert_eq!(terminals, 1);
+    // cancelling again is a no-op
+    assert!(!h.cancel().unwrap());
+}
+
+#[test]
+fn queue_full_rejection_at_the_bound() {
+    let Some(art) = art() else { return };
+    let prompt = art.corpus.split("eval").unwrap()[..4].to_vec();
+    let s = session(&art, 512, 7, 2);
+
+    let h1 = s.submit(GenerationParams::new(prompt.clone()).max_new(3)).unwrap();
+    let h2 = s.submit(GenerationParams::new(prompt.clone()).max_new(3)).unwrap();
+    // third submit exceeds the bound of 2 waiting requests
+    match s.submit(GenerationParams::new(prompt.clone()).max_new(3)) {
+        Err(SubmitError::QueueFull { bound }) => assert_eq!(bound, 2),
+        Err(e) => panic!("expected QueueFull, got {e:?}"),
+        Ok(_) => panic!("expected QueueFull, got an accepted request"),
+    }
+    // draining the queue frees admission capacity again
+    h1.wait().unwrap();
+    h2.wait().unwrap();
+    let h3 = s.submit(GenerationParams::new(prompt).max_new(3)).unwrap();
+    assert_eq!(h3.wait().unwrap().tokens.len(), 3);
+}
+
+#[test]
+fn invalid_params_are_typed_rejections() {
+    let Some(art) = art() else { return };
+    let s = session(&art, 512, 7, 16);
+    assert!(matches!(s.submit(GenerationParams::new(vec![])),
+                     Err(SubmitError::InvalidParams(_))));
+    assert!(matches!(s.submit(GenerationParams::new(vec![1]).max_new(0)),
+                     Err(SubmitError::InvalidParams(_))));
+    let too_long = vec![1u16; 100_000];
+    assert!(matches!(s.submit(GenerationParams::new(too_long)),
+                     Err(SubmitError::InvalidParams(_))));
+}
+
+#[test]
+fn event_path_matches_legacy_shim_byte_identical() {
+    let Some(art) = art() else { return };
+    let prompt = art.corpus.split("eval").unwrap()[20..30].to_vec();
+    let sampling = Sampling::TopK { temperature: 0.8, k: 8 };
+
+    // legacy path: run_to_completion shim at a fixed seed
+    let runner = art.runner(QuantSpec::quarot(4), None).unwrap();
+    let mut engine = GenerationEngine::new(runner, 512, 11);
+    engine.submit(Request {
+        id: 0, prompt: prompt.clone(), max_new_tokens: 8,
+        sampling, stop_token: None,
+    });
+    let legacy = engine.run_to_completion().unwrap();
+    assert_eq!(legacy.len(), 1);
+    assert_eq!(legacy[0].tokens.len(), 8);
+
+    // event path: same seed, same request, fresh engine
+    let runner = art.runner(QuantSpec::quarot(4), None).unwrap();
+    let s = LocalSession::new(GenerationEngine::new(runner, 512, 11),
+                              SessionConfig::default());
+    let h = s.submit(GenerationParams::new(prompt).max_new(8)
+                         .sampling(sampling)).unwrap();
+    let streamed = h.wait().unwrap();
+
+    assert_eq!(legacy[0].tokens, streamed.tokens,
+               "event path must be byte-identical to the shim");
+}
+
+#[test]
+fn stop_token_on_first_prefill_token_retires_immediately() {
+    let Some(art) = art() else { return };
+    let prompt = art.corpus.split("eval").unwrap()[..8].to_vec();
+    // learn what the first greedy token is
+    let s = session(&art, 512, 7, 16);
+    let probe = s.submit(GenerationParams::new(prompt.clone()).max_new(2))
+        .unwrap().wait().unwrap();
+    let first = probe.tokens[0];
+
+    // resubmit with that token as the stop token: the request must
+    // finish at admission with reason Stop, never occupying a slot
+    let s = session(&art, 512, 7, 16);
+    let h = s.submit(GenerationParams::new(prompt).max_new(32).stop_at(first))
+        .unwrap();
+    let out = h.wait().unwrap();
+    assert_eq!(out.tokens, vec![first]);
+    assert_eq!(out.reason, FinishReason::Stop);
+    assert_eq!(s.pool_in_use(), 0, "admission-time stop must free pages");
+    let stats = s.stats();
+    assert_eq!(stats.decode_steps, 0,
+               "a first-token stop must not run decode ticks");
+}
+
+#[test]
+fn tcp_interleaved_requests_and_cancel() {
+    if art().is_none() {
+        return;
+    }
+    let handle = serve(
+        move || {
+            let art = Artifacts::load("tiny-mha")?;
+            let runner = art.runner(QuantSpec::quarot(4), None)?;
+            Ok(GenerationEngine::new(runner, 512, 3))
+        },
+        0,
+        16,
+    ).unwrap();
+
+    let client = Client::connect(handle.port).unwrap();
+    let ha = client.submit(&GenerationParams::new(vec![5, 6, 7, 8]).max_new(12))
+        .unwrap();
+    // B gets a budget ~200 ticks long and is cancelled at its first token
+    // frame, so the cancel cannot lose the race to natural completion
+    let hb = client.submit(&GenerationParams::new(vec![9, 10, 11, 12]).max_new(200))
+        .unwrap();
+    assert_ne!(ha.id(), hb.id());
+
+    // pull B's frames; cancel it as soon as it streams
+    let mut b_tokens = 0;
+    let mut b_reason = None;
+    let mut b_terminals = 0;
+    while let Some(ev) = hb.next_event().unwrap() {
+        match ev {
+            GenerationEvent::Token { .. } => {
+                b_tokens += 1;
+                if b_tokens == 1 {
+                    hb.cancel().unwrap();
+                }
+            }
+            GenerationEvent::Finished { reason, .. } => {
+                b_terminals += 1;
+                b_reason = Some(reason);
+            }
+            GenerationEvent::Failed { .. } => b_terminals += 1,
+            _ => {}
+        }
+    }
+    assert_eq!(b_terminals, 1, "exactly one terminal event for B");
+    assert_eq!(b_reason, Some(FinishReason::Cancelled));
+    assert!(b_tokens < 200, "cancel must land mid-generation");
+
+    // A is untouched: full budget, single natural terminal
+    let out_a = ha.wait().unwrap();
+    assert_eq!(out_a.tokens.len(), 12);
+    assert_eq!(out_a.reason, FinishReason::MaxTokens);
+
+    // cancelled pages are back in the pool (server-side accounting)
+    let mut c2 = Client::connect(handle.port).unwrap();
+    let stats = c2.stats().unwrap();
+    assert_eq!(stats.get("pool_pages_in_use").unwrap().as_f64().unwrap(), 0.0);
+    assert!(stats.get("cancelled").unwrap().as_f64().unwrap() >= 1.0);
+    handle.shutdown();
+}
+
+#[test]
+fn raw_v1_one_shot_line_still_answered() {
+    if art().is_none() {
+        return;
+    }
+    let handle = serve(
+        move || {
+            let art = Artifacts::load("tiny-mha")?;
+            let runner = art.runner(QuantSpec::quarot(4), None)?;
+            Ok(GenerationEngine::new(runner, 512, 3))
+        },
+        0,
+        16,
+    ).unwrap();
+
+    // speak v1 by hand: one bare JSON line in, one completion object out
+    let stream = TcpStream::connect(("127.0.0.1", handle.port)).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    writeln!(w, r#"{{"prompt":[5,6,7,8],"max_new_tokens":4}}"#).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = json::parse(line.trim()).unwrap();
+    assert!(resp.get("error").is_none(), "{resp:?}");
+    assert_eq!(resp.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+    assert!(resp.get("tokens_per_sec").is_some());
+    handle.shutdown();
+}
+
+#[test]
+fn wire_shutdown_cmd_stops_the_whole_server() {
+    if art().is_none() {
+        return;
+    }
+    let handle = serve(
+        move || {
+            let art = Artifacts::load("tiny-mha")?;
+            let runner = art.runner(QuantSpec::quarot(4), None)?;
+            Ok(GenerationEngine::new(runner, 512, 3))
+        },
+        0,
+        16,
+    ).unwrap();
+    let port = handle.port;
+    let mut c = Client::connect(port).unwrap();
+    c.shutdown_server().unwrap();
+    // both loops must exit: join returns (would hang forever before the
+    // fix, when shutdown only closed the issuing connection)
+    handle.shutdown();
+    // and new connections are no longer served
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let refused = match TcpStream::connect(("127.0.0.1", port)) {
+        Err(_) => true,
+        Ok(s) => {
+            // listener may linger in TIME_WAIT; a served connection would
+            // answer a stats line, a dead one hangs up
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let mut w = s;
+            let _ = writeln!(w, r#"{{"v":2,"cmd":"stats"}}"#);
+            let mut line = String::new();
+            matches!(r.read_line(&mut line), Ok(0) | Err(_))
+        }
+    };
+    assert!(refused, "server still answering after wire shutdown");
+}

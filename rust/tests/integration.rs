@@ -5,10 +5,10 @@
 //! test skips (prints a notice) so plain `cargo test` stays green in a
 //! fresh checkout.
 
+use quarot::api::{FinishReason, GenerationParams, LocalSession, SessionConfig};
 use quarot::bench_support::Artifacts;
-use quarot::coordinator::batcher::{GenerationEngine, Request};
+use quarot::coordinator::batcher::GenerationEngine;
 use quarot::coordinator::runner::{QuantSpec, Variant, WeightQuant};
-use quarot::coordinator::sampler::Sampling;
 use quarot::eval;
 use quarot::model::transform;
 use quarot::quant::gptq::GptqCfg;
@@ -145,23 +145,19 @@ fn generation_decode_consistency() {
     let Some(art) = art() else { return };
     let prompt = art.corpus.split("eval").unwrap()[100..110].to_vec();
     let runner = art.runner(QuantSpec::quarot(8), None).unwrap();
-    let mut engine = GenerationEngine::new(runner, 512, 1);
-    engine.submit(Request {
-        id: 0, prompt: prompt.clone(), max_new_tokens: 6,
-        sampling: Sampling::Greedy, stop_token: None,
-    });
-    let c1 = engine.run_to_completion().unwrap();
-    assert_eq!(c1.len(), 1);
-    assert_eq!(c1[0].tokens.len(), 6);
-    assert_eq!(engine.pool_in_use(), 0, "pages leaked after completion");
+    let session = LocalSession::new(GenerationEngine::new(runner, 512, 1),
+                                    SessionConfig::default());
+    let h1 = session.submit(GenerationParams::new(prompt.clone()).max_new(6))
+        .unwrap();
+    let o1 = h1.wait().unwrap();
+    assert_eq!(o1.tokens.len(), 6);
+    assert_eq!(o1.reason, FinishReason::MaxTokens);
+    assert_eq!(session.pool_in_use(), 0, "pages leaked after completion");
 
     // deterministic: same request twice → same tokens
-    engine.submit(Request {
-        id: 0, prompt, max_new_tokens: 6,
-        sampling: Sampling::Greedy, stop_token: None,
-    });
-    let c2 = engine.run_to_completion().unwrap();
-    assert_eq!(c1[0].tokens, c2[0].tokens);
+    let h2 = session.submit(GenerationParams::new(prompt).max_new(6)).unwrap();
+    let o2 = h2.wait().unwrap();
+    assert_eq!(o1.tokens, o2.tokens);
 }
 
 #[test]
@@ -174,26 +170,23 @@ fn batched_serving_matches_sequential() {
         .collect();
     let run = |batched: bool| -> Vec<Vec<u16>> {
         let runner = art.runner(QuantSpec::quarot(8), None).unwrap();
-        let mut engine = GenerationEngine::new(runner, 1024, 1);
+        let session = LocalSession::new(GenerationEngine::new(runner, 1024, 1),
+                                        SessionConfig::default());
         let mut out = vec![Vec::new(); prompts.len()];
         if batched {
-            let ids: Vec<u64> = prompts.iter().map(|p| {
-                engine.submit(Request {
-                    id: 0, prompt: p.clone(), max_new_tokens: 5,
-                    sampling: Sampling::Greedy, stop_token: None,
-                })
+            let handles: Vec<_> = prompts.iter().map(|p| {
+                session.submit(GenerationParams::new(p.clone()).max_new(5))
+                    .unwrap()
             }).collect();
-            for c in engine.run_to_completion().unwrap() {
-                let idx = ids.iter().position(|&i| i == c.id).unwrap();
-                out[idx] = c.tokens;
+            for (i, h) in handles.iter().enumerate() {
+                out[i] = h.wait().unwrap().tokens;
             }
         } else {
             for (i, p) in prompts.iter().enumerate() {
-                engine.submit(Request {
-                    id: 0, prompt: p.clone(), max_new_tokens: 5,
-                    sampling: Sampling::Greedy, stop_token: None,
-                });
-                out[i] = engine.run_to_completion().unwrap()[0].tokens.clone();
+                let h = session
+                    .submit(GenerationParams::new(p.clone()).max_new(5))
+                    .unwrap();
+                out[i] = h.wait().unwrap().tokens;
             }
         }
         out
@@ -215,14 +208,25 @@ fn server_roundtrip() {
             Ok(GenerationEngine::new(runner, 512, 3))
         },
         0,
+        quarot::server::DEFAULT_QUEUE_BOUND,
     ).unwrap();
-    let mut client = quarot::server::Client::connect(handle.port).unwrap();
-    let resp = client.generate(&[5, 6, 7, 8], 4).unwrap();
+    // event-frame path
+    let client = quarot::server::Client::connect(handle.port).unwrap();
+    let h = client.submit(&GenerationParams::new(vec![5, 6, 7, 8]).max_new(4))
+        .unwrap();
+    let out = h.wait().unwrap();
+    assert_eq!(out.tokens.len(), 4);
+    assert_eq!(out.reason, FinishReason::MaxTokens);
+    // one-shot convenience wrapper on a fresh connection (raw v1 wire
+    // compatibility is covered in rust/tests/api_stream.rs)
+    let mut legacy = quarot::server::Client::connect(handle.port).unwrap();
+    let resp = legacy.generate(&[5, 6, 7, 8], 4).unwrap();
     assert!(resp.get("error").is_none(), "{resp:?}");
     let toks = resp.get("tokens").unwrap().as_arr().unwrap();
     assert_eq!(toks.len(), 4);
-    let stats = client.stats().unwrap();
-    assert!(stats.get("completed").unwrap().as_f64().unwrap() >= 1.0);
+    let stats = legacy.stats().unwrap();
+    assert!(stats.get("completed").unwrap().as_f64().unwrap() >= 2.0);
+    assert_eq!(stats.get("pool_pages_in_use").unwrap().as_f64().unwrap(), 0.0);
     handle.shutdown();
 }
 
