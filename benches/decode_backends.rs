@@ -1,0 +1,153 @@
+//! Per-backend batched decode + NLL benches — the serving decode path's
+//! kernel-authority table, alongside table14 (GEMM) and table16 (prefill).
+//!
+//! Sweeps every `ComputeBackend` (scalar oracle → cache-tiled blocked →
+//! pool-threaded → auto) over one batched decode tick: ragged GQA
+//! sequences (including an empty cache) against f32, packed-int4 and int8
+//! KV streams, plus the batched `nll_rows` reduction the eval harness
+//! uses.  Every backend's outputs are verified bit-exact against the
+//! scalar oracle before timing.
+//!
+//! `--check` runs verification only (one rep per op, no timing) and fails
+//! the process on any divergence — the CI dispatch-regression gate.
+
+use anyhow::{bail, Result};
+
+use quarot::attention::{CacheF32, CacheQuant, DecodeF32Seq, DecodeQuantSeq};
+use quarot::backend::{self, BackendKind};
+use quarot::bench_support::record;
+use quarot::util::bench::{bench_auto, Table};
+use quarot::util::prng::Rng;
+
+fn main() -> Result<()> {
+    let check = std::env::args().any(|a| a == "--check");
+    // LLAMA-like GQA decode geometry (scaled down in --check mode)
+    let (hk, rep, dh) = (8usize, 4usize, 64usize);
+    let nh = hk * rep;
+    let group = 64usize.min(dh);
+    let lens: Vec<usize> = if check {
+        vec![48, 0, 33, 16]
+    } else {
+        vec![768, 512, 256, 64]
+    };
+    let mut rng = Rng::new(5);
+    let mut caches = Vec::new();
+    let mut qs: Vec<Vec<f32>> = Vec::new();
+    for &len in &lens {
+        let mut kf = CacheF32::new(hk, dh, len);
+        let mut vf = CacheF32::new(hk, dh, len);
+        let mut kq4 = CacheQuant::new(hk, dh, group, 4);
+        let mut vq4 = CacheQuant::new(hk, dh, group, 4);
+        let mut kq8 = CacheQuant::new(hk, dh, group, 8);
+        let mut vq8 = CacheQuant::new(hk, dh, group, 8);
+        for _ in 0..len {
+            let kt = rng.normal_vec(hk * dh);
+            let vt = rng.normal_vec(hk * dh);
+            kf.append(&kt);
+            vf.append(&vt);
+            kq4.append(&kt, 0.95);
+            vq4.append(&vt, 0.95);
+            kq8.append(&kt, 0.95);
+            vq8.append(&vt, 0.95);
+        }
+        caches.push((kf, vf, kq4, vq4, kq8, vq8));
+        qs.push(rng.normal_vec(nh * dh));
+    }
+    let seqs_f: Vec<DecodeF32Seq> = caches.iter().zip(&qs)
+        .map(|((kf, vf, ..), q)| DecodeF32Seq { q, k: kf.view(), v: vf.view() })
+        .collect();
+    let seqs_q4: Vec<DecodeQuantSeq> = caches.iter().zip(&qs)
+        .map(|((_, _, kq, vq, _, _), q)| DecodeQuantSeq {
+            q, k: kq.view(), v: vq.view(),
+        })
+        .collect();
+    let seqs_q8: Vec<DecodeQuantSeq> = caches.iter().zip(&qs)
+        .map(|((.., kq, vq), q)| DecodeQuantSeq {
+            q, k: kq.view(), v: vq.view(),
+        })
+        .collect();
+    // eval-harness NLL workload (one perplexity window's worth of rows)
+    let (vocab, rows) = if check { (512usize, 32usize) } else { (4096, 256) };
+    let logits = rng.normal_vec(rows * vocab);
+    let targets: Vec<u16> = (0..rows).map(|_| rng.below(vocab) as u16).collect();
+
+    // scalar oracle reference outputs
+    let n_out = lens.len() * nh * dh;
+    let scalar = backend::make(BackendKind::Scalar);
+    let mut ref_f = vec![0.0f32; n_out];
+    let mut ref_q4 = vec![0.0f32; n_out];
+    let mut ref_q8 = vec![0.0f32; n_out];
+    let mut ref_nll = vec![0.0f64; rows];
+    scalar.decode_f32_batch(&seqs_f, nh, &mut ref_f);
+    scalar.decode_quant_batch(&seqs_q4, nh, &mut ref_q4);
+    scalar.decode_quant_batch(&seqs_q8, nh, &mut ref_q8);
+    scalar.nll_rows(&logits, vocab, &targets, &mut ref_nll);
+    if ref_f.iter().any(|v| !v.is_finite()) {
+        bail!("scalar oracle produced non-finite decode output");
+    }
+
+    let mut t = Table::new(
+        "Decode ops per backend — batched ragged-GQA decode + NLL (ms/tick)",
+        &["backend", "f32", "int4", "int8", "nll", "i4 vs scalar"]);
+    let mut scalar_i4_ms = f64::NAN;
+    for kind in BackendKind::all() {
+        let be = backend::make(kind);
+        // bit-exactness gate first — a dispatch regression fails here
+        // before any timing noise can hide it
+        let mut out = vec![f32::NAN; n_out];
+        be.decode_f32_batch(&seqs_f, nh, &mut out);
+        if out != ref_f {
+            bail!("{}: batched f32 decode diverged from the scalar oracle",
+                  be.name());
+        }
+        out.fill(f32::NAN);
+        be.decode_quant_batch(&seqs_q4, nh, &mut out);
+        if out != ref_q4 {
+            bail!("{}: batched int4 decode diverged from the scalar oracle",
+                  be.name());
+        }
+        out.fill(f32::NAN);
+        be.decode_quant_batch(&seqs_q8, nh, &mut out);
+        if out != ref_q8 {
+            bail!("{}: batched int8 decode diverged from the scalar oracle",
+                  be.name());
+        }
+        let mut nll = vec![f64::NAN; rows];
+        be.nll_rows(&logits, vocab, &targets, &mut nll);
+        if nll != ref_nll {
+            bail!("{}: batched NLL diverged from the scalar oracle", be.name());
+        }
+        if check {
+            println!("[check] {}: decode f32/int4/int8 + nll bit-exact vs \
+                      scalar", be.name());
+            continue;
+        }
+        let budget = 150.0;
+        let s_f32 = bench_auto(budget, || be.decode_f32_batch(&seqs_f, nh, &mut out));
+        let s_i4 = bench_auto(budget, || be.decode_quant_batch(&seqs_q4, nh, &mut out));
+        let s_i8 = bench_auto(budget, || be.decode_quant_batch(&seqs_q8, nh, &mut out));
+        let s_nll = bench_auto(budget, || be.nll_rows(&logits, vocab, &targets, &mut nll));
+        if kind == BackendKind::Scalar {
+            scalar_i4_ms = s_i4.median_ms();
+        }
+        let vs_scalar = scalar_i4_ms / s_i4.median_ms();
+        println!("  [{}] f32 {:.3}ms i4 {:.3}ms i8 {:.3}ms nll {:.3}ms \
+                  ({vs_scalar:.2}x vs scalar)",
+                 be.name(), s_f32.median_ms(), s_i4.median_ms(),
+                 s_i8.median_ms(), s_nll.median_ms());
+        t.row(vec![
+            be.name().into(),
+            format!("{:.3}", s_f32.median_ms()),
+            format!("{:.3}", s_i4.median_ms()),
+            format!("{:.3}", s_i8.median_ms()),
+            format!("{:.3}", s_nll.median_ms()),
+            format!("{vs_scalar:.2}x"),
+        ]);
+    }
+    if check {
+        println!("[check] all backends dispatch batched decode + NLL and \
+                  match the oracle");
+        return Ok(());
+    }
+    record("decode_backends", &t.render())
+}

@@ -2,10 +2,16 @@
 //! INT4-packed cache, across the LLAMA-2 head geometries and batch sizes.
 //! Expected shape: int4 loses at batch 1 (quant overhead) and wins once
 //! the cache IO dominates (paper: crossover ≈ batch 8-16, up to 1.72×).
+//!
+//! Runs the real batched decode ops behind `ComputeBackend` (batch = the
+//! number of sequences per tick), through the process-default backend —
+//! `QUAROT_BACKEND=scalar|blocked|threaded|auto` selects the kernels, and
+//! `cargo bench decode_backends` prints the per-backend comparison.
 
 use anyhow::Result;
 
-use quarot::attention::{decode_f32, decode_quant, CacheF32, CacheQuant};
+use quarot::attention::{CacheF32, CacheQuant, DecodeF32Seq, DecodeQuantSeq};
+use quarot::backend;
 use quarot::bench_support::record;
 use quarot::util::bench::{bench_auto, Table};
 use quarot::util::prng::Rng;
@@ -14,13 +20,15 @@ fn main() -> Result<()> {
     let ctx = 2047usize;
     let geoms: &[(usize, usize)] = &[(32, 128), (40, 128), (64, 128)];
     let batches = [1usize, 4, 16];
+    let be = backend::default_backend();
     let mut t = Table::new(
-        "Table 15 — decode w/ 2047-token cache: fp32 vs packed-int4 (ms/token)",
+        &format!("Table 15 — decode w/ 2047-token cache: fp32 vs packed-int4 \
+                  (ms/token, backend={})", be.name()),
         &["heads x dh", "batch", "fp32", "int4", "ratio"]);
     let mut rng = Rng::new(1);
     for &(h, dh) in geoms {
-        // one sequence's caches, reused across the batch (IO volume is what
-        // matters; contents are irrelevant to timing)
+        // one sequence's caches, shared by every batch slot (IO volume is
+        // what matters; contents are irrelevant to timing)
         let mut kf = CacheF32::new(h, dh, ctx);
         let mut vf = CacheF32::new(h, dh, ctx);
         let mut kq = CacheQuant::new(h, dh, 128.min(dh), 4);
@@ -34,19 +42,19 @@ fn main() -> Result<()> {
             vq.append(&vt, 0.95);
         }
         let q: Vec<f32> = rng.normal_vec(h * dh);
-        let mut out = vec![0.0f32; h * dh];
-        let (mut sc, mut kb, mut s8) = (Vec::new(), Vec::new(), Vec::new());
         for &b in &batches {
+            let seqs_f: Vec<DecodeF32Seq> = (0..b)
+                .map(|_| DecodeF32Seq { q: &q, k: kf.view(), v: vf.view() })
+                .collect();
+            let seqs_q: Vec<DecodeQuantSeq> = (0..b)
+                .map(|_| DecodeQuantSeq { q: &q, k: kq.view(), v: vq.view() })
+                .collect();
+            let mut out = vec![0.0f32; b * h * dh];
             let fp = bench_auto(200.0, || {
-                for _ in 0..b {
-                    decode_f32(&q, h, &kf, &vf, &mut out, &mut sc);
-                }
+                be.decode_f32_batch(&seqs_f, h, &mut out);
             });
             let i4 = bench_auto(200.0, || {
-                for _ in 0..b {
-                    decode_quant(&q, h, &kq, &vq, &mut out, &mut sc,
-                                 &mut kb, &mut s8);
-                }
+                be.decode_quant_batch(&seqs_q, h, &mut out);
             });
             let ratio = fp.median_ms() / i4.median_ms();
             println!("  {h}x{dh} b={b}: fp {:.2}ms i4 {:.2}ms ratio {ratio:.2}",

@@ -6,6 +6,21 @@
 //! graphs.  The quantized variant streams nibble-packed codes + per-group
 //! scales and fuses dequantization into the score/value loops — the IO
 //! reduction that makes the 4-bit cache win at large batch/long context.
+//!
+//! Since the backend routing PR this module is the **scalar oracle** of
+//! the batched decode ops on [`crate::backend::ComputeBackend`]:
+//! [`decode_seq_f32_ref`] / [`decode_seq_quant_ref`] hold the reference
+//! loops `ScalarRef` dispatches to, while the borrowed-view types
+//! ([`KvF32View`], [`KvQuantView`], [`DecodeF32Seq`], [`DecodeQuantSeq`])
+//! let the same kernels run over owned caches ([`CacheF32`]/[`CacheQuant`])
+//! *and* the batcher's dense staging slabs without copies.  The public
+//! [`decode_f32`] / [`decode_quant`] entry points dispatch through the
+//! process-default backend — the scalar loops are never called directly
+//! by serving or bench code.
+//!
+//! Empty caches (`len == 0`) are well-defined everywhere: the attention
+//! output is all zeros (there is nothing to attend to), never the
+//! `0/0 = NaN` the pre-fix loops produced.
 
 use crate::quant::kv;
 
@@ -36,6 +51,16 @@ impl CacheF32 {
     pub fn bytes(&self) -> usize {
         // report fp16-equivalent (the paper's baseline is fp16)
         self.data.len() * 2
+    }
+
+    /// Borrowed view of this cache for the batched backend decode ops.
+    pub fn view(&self) -> KvF32View<'_> {
+        KvF32View {
+            n_kv_heads: self.n_kv_heads,
+            d_head: self.d_head,
+            len: self.len,
+            data: &self.data,
+        }
     }
 }
 
@@ -86,6 +111,29 @@ impl CacheQuant {
         self.codes.len() + (self.scales.len() + self.zeros.len()) * 4
     }
 
+    /// Borrowed view of this cache for the batched backend decode ops.
+    pub fn view(&self) -> KvQuantView<'_> {
+        let codes = if self.bits == 4 {
+            KvCodes::Packed4(&self.codes)
+        } else {
+            // SAFETY: i8 and u8 have identical size/alignment; the 8-bit
+            // cache stores signed codes bit-cast into its u8 stream.
+            KvCodes::I8(unsafe {
+                std::slice::from_raw_parts(self.codes.as_ptr() as *const i8,
+                                           self.codes.len())
+            })
+        };
+        KvQuantView {
+            n_kv_heads: self.n_kv_heads,
+            d_head: self.d_head,
+            group: self.group,
+            len: self.len,
+            codes,
+            scales: &self.scales,
+            zeros: &self.zeros,
+        }
+    }
+
     /// Dequantize token s, head h into `out` (d_head values).
     pub fn dequant_head(&self, s: usize, h: usize, out: &mut [f32], scratch: &mut [i8]) {
         let d = self.n_kv_heads * self.d_head;
@@ -116,48 +164,158 @@ impl CacheQuant {
     }
 }
 
+// ---------------------------------------------------------------------------
+// borrowed KV views + batch descriptors (the ComputeBackend decode surface)
+
+/// Borrowed token-major f32 KV stream: `data[(t * n_kv_heads + h) * d_head ..]`.
+#[derive(Clone, Copy)]
+pub struct KvF32View<'a> {
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub len: usize,
+    pub data: &'a [f32],
+}
+
+/// Code storage of a quantized KV stream.
+#[derive(Clone, Copy)]
+pub enum KvCodes<'a> {
+    /// One sign-extended code per element (8-bit caches and the batcher's
+    /// dense staging slabs, which keep 4-bit codes unpacked too).
+    I8(&'a [i8]),
+    /// Two 4-bit codes per byte, lo nibble first (packed int4 caches).
+    Packed4(&'a [u8]),
+}
+
+/// Sign-extend one packed byte's two 4-bit codes (lo nibble first) — the
+/// single definition of the nibble decode every kernel (oracle and
+/// blocked/threaded tiles) shares, so the bit-exactness contract cannot
+/// drift between copies.
+#[inline(always)]
+pub(crate) fn unpack_nibble_pair(byte: u8) -> (f32, f32) {
+    ((((byte & 0x0F) << 4) as i8 >> 4) as f32,
+     ((byte & 0xF0) as i8 >> 4) as f32)
+}
+
+/// Borrowed token-major quantized KV stream (group-wise asymmetric codec):
+/// codes laid out like [`KvF32View::data`], one (scale, zero) pair per
+/// `group` consecutive elements of each token row.
+#[derive(Clone, Copy)]
+pub struct KvQuantView<'a> {
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub group: usize,
+    pub len: usize,
+    pub codes: KvCodes<'a>,
+    pub scales: &'a [f32],
+    pub zeros: &'a [f32],
+}
+
+/// One sequence of a batched f32 decode step: query `q` (n_heads × d_head)
+/// against its K/V streams.
+pub struct DecodeF32Seq<'a> {
+    pub q: &'a [f32],
+    pub k: KvF32View<'a>,
+    pub v: KvF32View<'a>,
+}
+
+/// One sequence of a batched quantized decode step.
+pub struct DecodeQuantSeq<'a> {
+    pub q: &'a [f32],
+    pub k: KvQuantView<'a>,
+    pub v: KvQuantView<'a>,
+}
+
+/// Reusable scratch for the decode kernels — score rows, per-group Σq,
+/// zero-point accumulators, per-head reduction state.  Backends keep one
+/// per call (or per worker task) so the inner loops never allocate.
+#[derive(Default)]
+pub struct DecodeScratch {
+    pub scores: Vec<f32>,
+    pub qsum: Vec<f32>,
+    pub zacc: Vec<f32>,
+    pub mxs: Vec<f32>,
+    pub denoms: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------------
+// public entry points — dispatch through the process-default backend
+
 /// One decode step over an f32 cache: q (H × dh) → out (H × dh).
-/// GQA: `rep` q-heads share each kv-head.
+/// GQA: `rep` q-heads share each kv-head.  Dispatches through the
+/// process-default [`crate::backend::ComputeBackend`]; the scalar loops
+/// live in [`decode_seq_f32_ref`] (the `ScalarRef` oracle).
 pub fn decode_f32(q: &[f32], n_heads: usize, k: &CacheF32, v: &CacheF32,
-                  out: &mut [f32], scores: &mut Vec<f32>) {
+                  out: &mut [f32]) {
+    let seqs = [DecodeF32Seq { q, k: k.view(), v: v.view() }];
+    crate::backend::default_backend().decode_f32_batch(&seqs, n_heads, out);
+}
+
+/// One decode step over a quantized cache (fused dequant + online softmax),
+/// dispatched through the process-default backend like [`decode_f32`].
+pub fn decode_quant(q: &[f32], n_heads: usize, k: &CacheQuant, v: &CacheQuant,
+                    out: &mut [f32]) {
+    let seqs = [DecodeQuantSeq { q, k: k.view(), v: v.view() }];
+    crate::backend::default_backend().decode_quant_batch(&seqs, n_heads, out);
+}
+
+// ---------------------------------------------------------------------------
+// scalar oracle kernels (ScalarRef's decode implementation)
+
+/// Scalar oracle: one q-head of one sequence against an f32 stream.
+/// `oh` is the head's d_head output slice; `scores` is reused scratch.
+pub(crate) fn decode_head_f32(qh: &[f32], kvh: usize, k: &KvF32View,
+                              v: &KvF32View, oh: &mut [f32],
+                              scores: &mut Vec<f32>) {
     let (hk, dh) = (k.n_kv_heads, k.d_head);
-    let rep = n_heads / hk;
     let s = k.len;
     let sm = 1.0 / (dh as f32).sqrt();
     scores.resize(s, 0.0);
-    for h in 0..n_heads {
-        let kvh = h / rep;
-        let qh = &q[h * dh..(h + 1) * dh];
-        let mut mx = f32::MIN;
-        for t in 0..s {
-            let kt = &k.data[(t * hk + kvh) * dh..][..dh];
-            let mut dot = 0.0f32;
-            for i in 0..dh {
-                dot += qh[i] * kt[i];
-            }
-            let sc = dot * sm;
-            scores[t] = sc;
-            mx = mx.max(sc);
+    let mut mx = f32::MIN;
+    for t in 0..s {
+        let kt = &k.data[(t * hk + kvh) * dh..][..dh];
+        let mut dot = 0.0f32;
+        for i in 0..dh {
+            dot += qh[i] * kt[i];
         }
-        let mut denom = 0.0f32;
-        let oh = &mut out[h * dh..(h + 1) * dh];
-        oh.fill(0.0);
-        for t in 0..s {
-            let p = (scores[t] - mx).exp();
-            denom += p;
-            let vt = &v.data[(t * hk + kvh) * dh..][..dh];
-            for i in 0..dh {
-                oh[i] += p * vt[i];
-            }
+        let sc = dot * sm;
+        scores[t] = sc;
+        mx = mx.max(sc);
+    }
+    let mut denom = 0.0f32;
+    oh.fill(0.0);
+    for t in 0..s {
+        let p = (scores[t] - mx).exp();
+        denom += p;
+        let vt = &v.data[(t * hk + kvh) * dh..][..dh];
+        for i in 0..dh {
+            oh[i] += p * vt[i];
         }
-        let inv = 1.0 / denom;
-        for o in oh {
-            *o *= inv;
-        }
+    }
+    let inv = 1.0 / denom;
+    for o in oh {
+        *o *= inv;
     }
 }
 
-/// One decode step over a quantized cache (fused dequant + online softmax).
+/// Scalar oracle: one full f32 decode step for one sequence (all heads).
+/// An empty cache yields an all-zero output (nothing to attend to).
+pub fn decode_seq_f32_ref(seq: &DecodeF32Seq, n_heads: usize, out: &mut [f32],
+                          scratch: &mut DecodeScratch) {
+    let (hk, dh) = (seq.k.n_kv_heads, seq.k.d_head);
+    if seq.k.len == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let rep = n_heads / hk;
+    for h in 0..n_heads {
+        let kvh = h / rep;
+        decode_head_f32(&seq.q[h * dh..(h + 1) * dh], kvh, &seq.k, &seq.v,
+                        &mut out[h * dh..(h + 1) * dh], &mut scratch.scores);
+    }
+}
+
+/// Scalar oracle: one q-head of one sequence against quantized streams
+/// (fused dequant + online softmax).
 ///
 /// Perf notes (EXPERIMENTS.md §Perf): the naive version dequantized each
 /// (token, head) into a buffer and then ran the dot — two passes and a
@@ -167,92 +325,109 @@ pub fn decode_f32(q: &[f32], n_heads: usize, k: &CacheF32, v: &CacheF32,
 ///   Σₜ pₜ·deq(cₜ) = Σₜ (pₜ·scaleₜ)·cₜ + (Σₜ pₜ·zeroₜ) (value pass)
 /// so the inner loops touch each packed byte once and use integer-from-
 /// nibble directly, with Σq precomputed per (head, group).
-pub fn decode_quant(q: &[f32], n_heads: usize, k: &CacheQuant, v: &CacheQuant,
-                    out: &mut [f32], scores: &mut Vec<f32>,
-                    kbuf: &mut Vec<f32>, scratch: &mut Vec<i8>) {
+pub(crate) fn decode_head_quant(qh: &[f32], kvh: usize, k: &KvQuantView,
+                                v: &KvQuantView, oh: &mut [f32],
+                                scratch: &mut DecodeScratch) {
     let (hk, dh) = (k.n_kv_heads, k.d_head);
-    let rep = n_heads / hk;
     let s = k.len;
     let sm = 1.0 / (dh as f32).sqrt();
     let d = hk * dh;
     let groups_per_tok = d / k.group;
     let gh = dh / k.group; // groups per head
-    scores.resize(s, 0.0);
-    kbuf.resize(dh, 0.0);
-    scratch.resize(dh, 0);
-    for h in 0..n_heads {
-        let kvh = h / rep;
-        let qh = &q[h * dh..(h + 1) * dh];
-        // per-group Σq for the zero-point correction
-        let qsum: Vec<f32> = qh.chunks_exact(k.group)
-            .map(|g| g.iter().sum()).collect();
-        let mut mx = f32::MIN;
-        for t in 0..s {
-            let base = t * d + kvh * dh;
-            let gbase = t * groups_per_tok + kvh * gh;
-            let mut sc = 0.0f32;
-            for gi in 0..gh {
-                let scale = k.scales[gbase + gi];
-                let zero = k.zeros[gbase + gi];
-                let mut dot = 0.0f32;
-                let goff = gi * k.group;
-                if k.bits == 4 {
+    scratch.scores.resize(s, 0.0);
+    let scores = &mut scratch.scores;
+    // per-group Σq for the zero-point correction
+    scratch.qsum.clear();
+    scratch.qsum.extend(qh.chunks_exact(k.group).map(|g| g.iter().sum::<f32>()));
+    let qsum = &scratch.qsum;
+    let mut mx = f32::MIN;
+    for t in 0..s {
+        let base = t * d + kvh * dh;
+        let gbase = t * groups_per_tok + kvh * gh;
+        let mut sc = 0.0f32;
+        for gi in 0..gh {
+            let scale = k.scales[gbase + gi];
+            let zero = k.zeros[gbase + gi];
+            let mut dot = 0.0f32;
+            let goff = gi * k.group;
+            match k.codes {
+                KvCodes::Packed4(codes) => {
                     // packed stream: group starts nibble-aligned (group even)
                     let cb = (base + goff) / 2;
-                    for (j, &byte) in k.codes[cb..cb + k.group / 2].iter()
+                    for (j, &byte) in codes[cb..cb + k.group / 2].iter()
                         .enumerate() {
-                        let lo = (((byte & 0x0F) << 4) as i8 >> 4) as f32;
-                        let hi = ((byte & 0xF0) as i8 >> 4) as f32;
+                        let (lo, hi) = unpack_nibble_pair(byte);
                         dot += qh[goff + 2 * j] * lo + qh[goff + 2 * j + 1] * hi;
                     }
-                } else {
+                }
+                KvCodes::I8(codes) => {
                     let cb = base + goff;
-                    for (j, &c) in k.codes[cb..cb + k.group].iter().enumerate() {
-                        dot += qh[goff + j] * (c as i8) as f32;
+                    for (j, &c) in codes[cb..cb + k.group].iter().enumerate() {
+                        dot += qh[goff + j] * c as f32;
                     }
                 }
-                sc += scale * dot + zero * qsum[gi];
             }
-            let sc = sc * sm;
-            scores[t] = sc;
-            mx = mx.max(sc);
+            sc += scale * dot + zero * qsum[gi];
         }
-        let mut denom = 0.0f32;
-        let oh = &mut out[h * dh..(h + 1) * dh];
-        oh.fill(0.0);
-        let mut zacc = vec![0.0f32; gh]; // Σₜ pₜ·zeroₜ per group
-        for t in 0..s {
-            let p = (scores[t] - mx).exp();
-            denom += p;
-            let base = t * d + kvh * dh;
-            let gbase = t * groups_per_tok + kvh * gh;
-            for gi in 0..gh {
-                let ps = p * v.scales[gbase + gi];
-                zacc[gi] += p * v.zeros[gbase + gi];
-                let goff = gi * v.group;
-                if v.bits == 4 {
+        let sc = sc * sm;
+        scores[t] = sc;
+        mx = mx.max(sc);
+    }
+    let mut denom = 0.0f32;
+    oh.fill(0.0);
+    scratch.zacc.clear();
+    scratch.zacc.resize(gh, 0.0); // Σₜ pₜ·zeroₜ per group
+    let zacc = &mut scratch.zacc;
+    for t in 0..s {
+        let p = (scores[t] - mx).exp();
+        denom += p;
+        let base = t * d + kvh * dh;
+        let gbase = t * groups_per_tok + kvh * gh;
+        for gi in 0..gh {
+            let ps = p * v.scales[gbase + gi];
+            zacc[gi] += p * v.zeros[gbase + gi];
+            let goff = gi * v.group;
+            match v.codes {
+                KvCodes::Packed4(codes) => {
                     let cb = (base + goff) / 2;
-                    for (j, &byte) in v.codes[cb..cb + v.group / 2].iter()
+                    for (j, &byte) in codes[cb..cb + v.group / 2].iter()
                         .enumerate() {
-                        let lo = (((byte & 0x0F) << 4) as i8 >> 4) as f32;
-                        let hi = ((byte & 0xF0) as i8 >> 4) as f32;
+                        let (lo, hi) = unpack_nibble_pair(byte);
                         oh[goff + 2 * j] += ps * lo;
                         oh[goff + 2 * j + 1] += ps * hi;
                     }
-                } else {
+                }
+                KvCodes::I8(codes) => {
                     let cb = base + goff;
-                    for (j, &c) in v.codes[cb..cb + v.group].iter().enumerate() {
-                        oh[goff + j] += ps * (c as i8) as f32;
+                    for (j, &c) in codes[cb..cb + v.group].iter().enumerate() {
+                        oh[goff + j] += ps * c as f32;
                     }
                 }
             }
         }
-        let inv = 1.0 / denom;
-        for gi in 0..gh {
-            for o in &mut oh[gi * v.group..(gi + 1) * v.group] {
-                *o = (*o + zacc[gi]) * inv;
-            }
+    }
+    let inv = 1.0 / denom;
+    for gi in 0..gh {
+        for o in &mut oh[gi * v.group..(gi + 1) * v.group] {
+            *o = (*o + zacc[gi]) * inv;
         }
+    }
+}
+
+/// Scalar oracle: one full quantized decode step for one sequence.
+/// An empty cache yields an all-zero output (nothing to attend to).
+pub fn decode_seq_quant_ref(seq: &DecodeQuantSeq, n_heads: usize,
+                            out: &mut [f32], scratch: &mut DecodeScratch) {
+    let (hk, dh) = (seq.k.n_kv_heads, seq.k.d_head);
+    if seq.k.len == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let rep = n_heads / hk;
+    for h in 0..n_heads {
+        let kvh = h / rep;
+        decode_head_quant(&seq.q[h * dh..(h + 1) * dh], kvh, &seq.k, &seq.v,
+                          &mut out[h * dh..(h + 1) * dh], scratch);
     }
 }
 
@@ -301,9 +476,8 @@ mod tests {
         let q = rng.normal_vec(nh * dh);
         let mut o0 = vec![0.0; nh * dh];
         let mut o1 = vec![0.0; nh * dh];
-        decode_f32(&q, nh, &kf, &vf, &mut o0, &mut Vec::new());
-        decode_quant(&q, nh, &kq, &vq, &mut o1, &mut Vec::new(),
-                     &mut Vec::new(), &mut Vec::new());
+        decode_f32(&q, nh, &kf, &vf, &mut o0);
+        decode_quant(&q, nh, &kq, &vq, &mut o1);
         prop::assert_close(&o1, &o0, 0.06).unwrap();
     }
 
@@ -315,9 +489,8 @@ mod tests {
         let q = rng.normal_vec(nh * dh);
         let mut o0 = vec![0.0; nh * dh];
         let mut o1 = vec![0.0; nh * dh];
-        decode_f32(&q, nh, &kf, &vf, &mut o0, &mut Vec::new());
-        decode_quant(&q, nh, &kq, &vq, &mut o1, &mut Vec::new(),
-                     &mut Vec::new(), &mut Vec::new());
+        decode_f32(&q, nh, &kf, &vf, &mut o0);
+        decode_quant(&q, nh, &kq, &vq, &mut o1);
         let scale = o0.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         prop::assert_close(&o1, &o0, 0.35 * scale.max(0.1)).unwrap();
     }
@@ -330,7 +503,7 @@ mod tests {
         let mut rng = Rng::new(11);
         let q = rng.normal_vec(nh * dh);
         let mut out = vec![0.0; nh * dh];
-        decode_f32(&q, nh, &kf, &vf, &mut out, &mut Vec::new());
+        decode_f32(&q, nh, &kf, &vf, &mut out);
         for i in 0..dh {
             let col: Vec<f32> = (0..s).map(|t| vf.data[t * dh + i]).collect();
             let (mn, mx) = col.iter().fold((f32::MAX, f32::MIN),
@@ -356,6 +529,24 @@ mod tests {
     }
 
     #[test]
+    fn empty_cache_decode_is_zero() {
+        // regression: s == 0 used to leave denom == 0 → inv = inf → NaN
+        let (hk, dh, nh) = (2usize, 16usize, 4usize);
+        let kf = CacheF32::new(hk, dh, 0);
+        let vf = CacheF32::new(hk, dh, 0);
+        let kq = CacheQuant::new(hk, dh, dh, 4);
+        let vq = CacheQuant::new(hk, dh, dh, 4);
+        let mut rng = Rng::new(7);
+        let q = rng.normal_vec(nh * dh);
+        let mut out = vec![f32::NAN; nh * dh];
+        decode_f32(&q, nh, &kf, &vf, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0), "f32 empty-cache decode: {out:?}");
+        out.fill(f32::NAN);
+        decode_quant(&q, nh, &kq, &vq, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0), "quant empty-cache decode: {out:?}");
+    }
+
+    #[test]
     fn gqa_heads_share_kv() {
         let (hk, dh, s, nh) = (1usize, 8usize, 4usize, 4usize);
         let (kf, vf, _, _) = fill_caches(s, hk, dh, 8, 5);
@@ -367,7 +558,7 @@ mod tests {
             q.extend_from_slice(&qh);
         }
         let mut out = vec![0.0; nh * dh];
-        decode_f32(&q, nh, &kf, &vf, &mut out, &mut Vec::new());
+        decode_f32(&q, nh, &kf, &vf, &mut out);
         for h in 1..nh {
             prop::assert_close(&out[h * dh..(h + 1) * dh], &out[..dh], 1e-5).unwrap();
         }

@@ -18,9 +18,13 @@
 //! range so the `Threaded` backend can fan disjoint column ranges of one
 //! output buffer across the worker pool.
 
+use crate::attention::{unpack_nibble_pair, DecodeF32Seq, DecodeQuantSeq,
+                       DecodeScratch, KvCodes, KvF32View, KvQuantView};
 use crate::gemm::{nibble_lut, WeightsF32, WeightsI4, WeightsI8};
 
-use super::{kv_dequant_seq, kv_quant_seq, quantize_rows, wht_rows_seq, ComputeBackend};
+use super::{f32_batch_geom, kv_dequant_seq, kv_quant_seq, nll_rows_seq,
+            quant_batch_geom, quantize_rows, wht_rows_seq, ComputeBackend,
+            DECODE_SCRATCH};
 
 /// Weight columns kept hot per tile; 4 keeps tile state within L1
 /// alongside one activation row for every shape in the tables.
@@ -159,6 +163,223 @@ pub(crate) unsafe fn i4_cols(codes: &[i8], row_scales: &[f32], t: usize,
     }
 }
 
+/// Tokens per decode tile: one K (or V) block of `DECODE_TOK_BLOCK × dh`
+/// f32 stays L1-resident while every q-head of the kv-group replays it.
+pub(crate) const DECODE_TOK_BLOCK: usize = 32;
+
+/// One kv-head group of one sequence over f32 streams: the `rep` q-heads
+/// sharing kv-head `kvh`, walked token-blocked so each K/V tile streams
+/// from memory once and replays from cache for every head (the scalar
+/// oracle re-streams the whole cache per q-head).  `out` is the group's
+/// contiguous `rep × dh` output region; `scratch` is reused across calls.
+///
+/// Per head, every float reduction (dot lanes, running max, softmax denom,
+/// value accumulation) runs in exactly the oracle's order, so results are
+/// **bit-identical** to [`crate::attention::decode_seq_f32_ref`].
+pub(crate) fn decode_kvh_f32(q: &[f32], kvh: usize, rep: usize,
+                             k: &KvF32View, v: &KvF32View, out: &mut [f32],
+                             scratch: &mut DecodeScratch) {
+    let (hk, dh) = (k.n_kv_heads, k.d_head);
+    let s = k.len;
+    if s == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let sm = 1.0 / (dh as f32).sqrt();
+    let q0 = kvh * rep * dh; // first q-head of this group
+    scratch.scores.clear();
+    scratch.scores.resize(rep * s, 0.0);
+    scratch.mxs.clear();
+    scratch.mxs.resize(rep, f32::MIN);
+    scratch.denoms.clear();
+    scratch.denoms.resize(rep, 0.0);
+    let scores = &mut scratch.scores;
+    let mxs = &mut scratch.mxs;
+    let denoms = &mut scratch.denoms;
+    // score pass: stream K once, heads replay the hot tile
+    let mut tb = 0;
+    while tb < s {
+        let te = (tb + DECODE_TOK_BLOCK).min(s);
+        for r in 0..rep {
+            let qh = &q[q0 + r * dh..][..dh];
+            let mut mx = mxs[r];
+            for t in tb..te {
+                let kt = &k.data[(t * hk + kvh) * dh..][..dh];
+                let mut dot = 0.0f32;
+                for i in 0..dh {
+                    dot += qh[i] * kt[i];
+                }
+                let sc = dot * sm;
+                scores[r * s + t] = sc;
+                mx = mx.max(sc);
+            }
+            mxs[r] = mx;
+        }
+        tb = te;
+    }
+    // value pass: stream V once, same per-head reduction order
+    out.fill(0.0);
+    let mut tb = 0;
+    while tb < s {
+        let te = (tb + DECODE_TOK_BLOCK).min(s);
+        for r in 0..rep {
+            let oh = &mut out[r * dh..(r + 1) * dh];
+            let mut denom = denoms[r];
+            for t in tb..te {
+                let p = (scores[r * s + t] - mxs[r]).exp();
+                denom += p;
+                let vt = &v.data[(t * hk + kvh) * dh..][..dh];
+                for i in 0..dh {
+                    oh[i] += p * vt[i];
+                }
+            }
+            denoms[r] = denom;
+        }
+        tb = te;
+    }
+    for r in 0..rep {
+        let inv = 1.0 / denoms[r];
+        for o in &mut out[r * dh..(r + 1) * dh] {
+            *o *= inv;
+        }
+    }
+}
+
+/// Quantized twin of [`decode_kvh_f32`]: walks the packed (or unpacked)
+/// code stream token-blocked with the affine dequant folded into the
+/// reductions exactly like the oracle, per-head scratch reused across
+/// tiles.  Bit-identical to [`crate::attention::decode_seq_quant_ref`].
+pub(crate) fn decode_kvh_quant(q: &[f32], kvh: usize, rep: usize,
+                               k: &KvQuantView, v: &KvQuantView,
+                               out: &mut [f32], scratch: &mut DecodeScratch) {
+    let (hk, dh) = (k.n_kv_heads, k.d_head);
+    let s = k.len;
+    if s == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let sm = 1.0 / (dh as f32).sqrt();
+    let d = hk * dh;
+    let groups_per_tok = d / k.group;
+    let gh = dh / k.group; // groups per head
+    let q0 = kvh * rep * dh;
+    scratch.scores.clear();
+    scratch.scores.resize(rep * s, 0.0);
+    scratch.mxs.clear();
+    scratch.mxs.resize(rep, f32::MIN);
+    scratch.denoms.clear();
+    scratch.denoms.resize(rep, 0.0);
+    // per-(head, group) Σq for the zero-point correction
+    scratch.qsum.clear();
+    for r in 0..rep {
+        let qh = &q[q0 + r * dh..][..dh];
+        scratch.qsum.extend(qh.chunks_exact(k.group)
+            .map(|g| g.iter().sum::<f32>()));
+    }
+    // Σₜ pₜ·zeroₜ per (head, group)
+    scratch.zacc.clear();
+    scratch.zacc.resize(rep * gh, 0.0);
+    let scores = &mut scratch.scores;
+    let mxs = &mut scratch.mxs;
+    let denoms = &mut scratch.denoms;
+    let qsum = &scratch.qsum;
+    let zacc = &mut scratch.zacc;
+    // score pass
+    let mut tb = 0;
+    while tb < s {
+        let te = (tb + DECODE_TOK_BLOCK).min(s);
+        for r in 0..rep {
+            let qh = &q[q0 + r * dh..][..dh];
+            let mut mx = mxs[r];
+            for t in tb..te {
+                let base = t * d + kvh * dh;
+                let gbase = t * groups_per_tok + kvh * gh;
+                let mut sc = 0.0f32;
+                for gi in 0..gh {
+                    let scale = k.scales[gbase + gi];
+                    let zero = k.zeros[gbase + gi];
+                    let mut dot = 0.0f32;
+                    let goff = gi * k.group;
+                    match k.codes {
+                        KvCodes::Packed4(codes) => {
+                            let cb = (base + goff) / 2;
+                            for (j, &byte) in codes[cb..cb + k.group / 2]
+                                .iter().enumerate() {
+                                let (lo, hi) = unpack_nibble_pair(byte);
+                                dot += qh[goff + 2 * j] * lo
+                                    + qh[goff + 2 * j + 1] * hi;
+                            }
+                        }
+                        KvCodes::I8(codes) => {
+                            let cb = base + goff;
+                            for (j, &c) in codes[cb..cb + k.group].iter()
+                                .enumerate() {
+                                dot += qh[goff + j] * c as f32;
+                            }
+                        }
+                    }
+                    sc += scale * dot + zero * qsum[r * gh + gi];
+                }
+                let sc = sc * sm;
+                scores[r * s + t] = sc;
+                mx = mx.max(sc);
+            }
+            mxs[r] = mx;
+        }
+        tb = te;
+    }
+    // value pass
+    out.fill(0.0);
+    let mut tb = 0;
+    while tb < s {
+        let te = (tb + DECODE_TOK_BLOCK).min(s);
+        for r in 0..rep {
+            let oh = &mut out[r * dh..(r + 1) * dh];
+            let mut denom = denoms[r];
+            for t in tb..te {
+                let p = (scores[r * s + t] - mxs[r]).exp();
+                denom += p;
+                let base = t * d + kvh * dh;
+                let gbase = t * groups_per_tok + kvh * gh;
+                for gi in 0..gh {
+                    let ps = p * v.scales[gbase + gi];
+                    zacc[r * gh + gi] += p * v.zeros[gbase + gi];
+                    let goff = gi * v.group;
+                    match v.codes {
+                        KvCodes::Packed4(codes) => {
+                            let cb = (base + goff) / 2;
+                            for (j, &byte) in codes[cb..cb + v.group / 2]
+                                .iter().enumerate() {
+                                let (lo, hi) = unpack_nibble_pair(byte);
+                                oh[goff + 2 * j] += ps * lo;
+                                oh[goff + 2 * j + 1] += ps * hi;
+                            }
+                        }
+                        KvCodes::I8(codes) => {
+                            let cb = base + goff;
+                            for (j, &c) in codes[cb..cb + v.group].iter()
+                                .enumerate() {
+                                oh[goff + j] += ps * c as f32;
+                            }
+                        }
+                    }
+                }
+            }
+            denoms[r] = denom;
+        }
+        tb = te;
+    }
+    for r in 0..rep {
+        let inv = 1.0 / denoms[r];
+        let oh = &mut out[r * dh..(r + 1) * dh];
+        for gi in 0..gh {
+            for o in &mut oh[gi * v.group..(gi + 1) * v.group] {
+                *o = (*o + zacc[r * gh + gi]) * inv;
+            }
+        }
+    }
+}
+
 /// Cache-blocked single-thread backend.
 pub struct Blocked;
 
@@ -208,6 +429,49 @@ impl ComputeBackend for Blocked {
     fn kv_dequant(&self, codes: &[i8], scales: &[f32], zeros: &[f32],
                   group: usize, out: &mut [f32]) {
         kv_dequant_seq(codes, scales, zeros, group, out);
+    }
+
+    fn decode_f32_batch(&self, seqs: &[DecodeF32Seq<'_>], n_heads: usize,
+                        out: &mut [f32]) {
+        let Some(geom) = f32_batch_geom(seqs, n_heads, out.len()) else {
+            return;
+        };
+        let (dh, rep) = (geom.dh, geom.rep);
+        let stride = n_heads * dh;
+        DECODE_SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            for (seq, o) in seqs.iter().zip(out.chunks_exact_mut(stride)) {
+                for kvh in 0..geom.hk {
+                    decode_kvh_f32(seq.q, kvh, rep, &seq.k, &seq.v,
+                                   &mut o[kvh * rep * dh..(kvh + 1) * rep * dh],
+                                   scratch);
+                }
+            }
+        });
+    }
+
+    fn decode_quant_batch(&self, seqs: &[DecodeQuantSeq<'_>], n_heads: usize,
+                          out: &mut [f32]) {
+        let Some(geom) = quant_batch_geom(seqs, n_heads, out.len()) else {
+            return;
+        };
+        let (dh, rep) = (geom.dh, geom.rep);
+        let stride = n_heads * dh;
+        DECODE_SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            for (seq, o) in seqs.iter().zip(out.chunks_exact_mut(stride)) {
+                for kvh in 0..geom.hk {
+                    decode_kvh_quant(seq.q, kvh, rep, &seq.k, &seq.v,
+                                     &mut o[kvh * rep * dh..(kvh + 1) * rep * dh],
+                                     scratch);
+                }
+            }
+        });
+    }
+
+    fn nll_rows(&self, logits: &[f32], vocab: usize, targets: &[u16],
+                out: &mut [f64]) {
+        nll_rows_seq(logits, vocab, targets, out);
     }
 
     fn par_for(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {

@@ -31,9 +31,20 @@ pub use blocked::Blocked;
 pub use scalar::ScalarRef;
 pub use threaded::Threaded;
 
+use std::cell::RefCell;
 use std::sync::{Arc, Mutex};
 
+use crate::attention::{DecodeF32Seq, DecodeQuantSeq, DecodeScratch, KvCodes};
 use crate::gemm::{WeightsF32, WeightsI4, WeightsI8};
+
+thread_local! {
+    // Reused decode scratch, one instance per thread — the single-thread
+    // backends reuse it across calls and every `Threaded` pool lane gets
+    // its own, so the decode tick never pays a per-call (or per-task)
+    // allocation on the serving hot path.
+    pub(crate) static DECODE_SCRATCH: RefCell<DecodeScratch> =
+        RefCell::new(DecodeScratch::default());
+}
 
 /// The kernel surface every backend provides.  All GEMMs take activations
 /// row-major `(t × k)` and the column-major weight containers from
@@ -70,6 +81,26 @@ pub trait ComputeBackend: Send + Sync {
     /// Dequantize grouped KV codes into `out` (staging refresh path).
     fn kv_dequant(&self, codes: &[i8], scales: &[f32], zeros: &[f32],
                   group: usize, out: &mut [f32]);
+
+    /// Batched decode attention over f32 KV streams: one step for every
+    /// sequence in `seqs` (ragged lengths allowed; an empty cache yields a
+    /// zero output).  `out` is `seqs.len() × n_heads × d_head`, sequence-
+    /// major.  All sequences must share the kv geometry.
+    fn decode_f32_batch(&self, seqs: &[DecodeF32Seq<'_>], n_heads: usize,
+                        out: &mut [f32]);
+
+    /// As [`decode_f32_batch`](Self::decode_f32_batch) over group-wise
+    /// quantized KV streams (packed int4 or unpacked i8 codes), fusing the
+    /// affine dequant into the score/value reductions like the oracle.
+    fn decode_quant_batch(&self, seqs: &[DecodeQuantSeq<'_>], n_heads: usize,
+                          out: &mut [f32]);
+
+    /// Batched log-softmax / NLL reduction: `out[r]` receives the negative
+    /// log-probability of `targets[r]` under row `r` of `logits`
+    /// (`targets.len()` rows of `vocab` logits).  The eval harness'
+    /// perplexity windows and continuation scores run through this.
+    fn nll_rows(&self, logits: &[f32], vocab: usize, targets: &[u16],
+                out: &mut [f64]);
 
     /// Run `f(i)` for `i in 0..n`, possibly in parallel (used by the
     /// decode tick to partition staging refresh over batch slots).
@@ -109,6 +140,108 @@ pub(crate) fn kv_dequant_seq(codes: &[i8], scales: &[f32], zeros: &[f32],
         crate::quant::kv::dequant_group(&codes[g * group..(g + 1) * group],
                                         scales[g], zeros[g], o);
     }
+}
+
+/// log-softmax of one index over one logits row, f64 accumulation — the
+/// scalar oracle behind [`ComputeBackend::nll_rows`] (and the single-row
+/// `sampler::log_softmax_at` helper).
+pub(crate) fn log_softmax_row(logits: &[f32], idx: usize) -> f64 {
+    let mx = logits.iter().fold(f32::MIN, |m, &v| m.max(v)) as f64;
+    let lse: f64 =
+        logits.iter().map(|&v| ((v as f64) - mx).exp()).sum::<f64>().ln() + mx;
+    logits[idx] as f64 - lse
+}
+
+pub(crate) fn nll_rows_seq(logits: &[f32], vocab: usize, targets: &[u16],
+                           out: &mut [f64]) {
+    assert!(vocab > 0 && logits.len() >= targets.len() * vocab,
+            "nll_rows: {} logits for {} rows of {vocab}",
+            logits.len(), targets.len());
+    assert!(out.len() >= targets.len());
+    for (r, (&tgt, o)) in targets.iter().zip(out.iter_mut()).enumerate() {
+        let row = &logits[r * vocab..(r + 1) * vocab];
+        *o = -log_softmax_row(row, tgt as usize);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batched-decode geometry checks (shared by all backends)
+
+/// Uniform geometry of one decode batch.
+#[derive(Clone, Copy)]
+pub(crate) struct DecodeGeom {
+    pub hk: usize,
+    pub dh: usize,
+    pub rep: usize,
+    /// total score work (MACs) across the batch, for auto dispatch
+    pub macs: usize,
+}
+
+pub(crate) fn f32_batch_geom(seqs: &[DecodeF32Seq], n_heads: usize,
+                             out_len: usize) -> Option<DecodeGeom> {
+    if seqs.is_empty() {
+        assert_eq!(out_len, 0, "decode batch: out for an empty batch");
+        return None;
+    }
+    let first = seqs.first()?;
+    let (hk, dh) = (first.k.n_kv_heads, first.k.d_head);
+    assert!(hk > 0 && dh > 0 && n_heads % hk == 0,
+            "decode batch: {n_heads} q-heads not a multiple of {hk} kv-heads");
+    assert_eq!(out_len, seqs.len() * n_heads * dh, "decode batch: out length");
+    let mut macs = 0usize;
+    for seq in seqs {
+        for kv in [&seq.k, &seq.v] {
+            assert!(kv.n_kv_heads == hk && kv.d_head == dh,
+                    "decode batch: mixed kv geometry");
+            assert!(kv.data.len() >= kv.len * hk * dh,
+                    "decode batch: kv stream shorter than its length");
+        }
+        assert_eq!(seq.k.len, seq.v.len, "decode batch: k/v length mismatch");
+        assert_eq!(seq.q.len(), n_heads * dh, "decode batch: q length");
+        macs += 2 * seq.k.len * n_heads * dh;
+    }
+    Some(DecodeGeom { hk, dh, rep: n_heads / hk, macs })
+}
+
+pub(crate) fn quant_batch_geom(seqs: &[DecodeQuantSeq], n_heads: usize,
+                               out_len: usize) -> Option<DecodeGeom> {
+    if seqs.is_empty() {
+        assert_eq!(out_len, 0, "decode batch: out for an empty batch");
+        return None;
+    }
+    let first = seqs.first()?;
+    let (hk, dh, group) = (first.k.n_kv_heads, first.k.d_head, first.k.group);
+    assert!(hk > 0 && dh > 0 && n_heads % hk == 0,
+            "decode batch: {n_heads} q-heads not a multiple of {hk} kv-heads");
+    assert!(group > 0 && dh % group == 0,
+            "decode batch: group {group} must divide d_head {dh}");
+    assert_eq!(out_len, seqs.len() * n_heads * dh, "decode batch: out length");
+    let d = hk * dh;
+    let gpt = d / group;
+    let mut macs = 0usize;
+    for seq in seqs {
+        for kv in [&seq.k, &seq.v] {
+            assert!(kv.n_kv_heads == hk && kv.d_head == dh && kv.group == group,
+                    "decode batch: mixed kv geometry");
+            let codes_len = match kv.codes {
+                KvCodes::I8(c) => c.len(),
+                KvCodes::Packed4(c) => {
+                    assert!(group % 2 == 0,
+                            "decode batch: packed int4 needs an even group");
+                    c.len() * 2
+                }
+            };
+            assert!(codes_len >= kv.len * d,
+                    "decode batch: code stream shorter than its length");
+            assert!(kv.scales.len() >= kv.len * gpt
+                        && kv.zeros.len() >= kv.len * gpt,
+                    "decode batch: scales/zeros shorter than the stream");
+        }
+        assert_eq!(seq.k.len, seq.v.len, "decode batch: k/v length mismatch");
+        assert_eq!(seq.q.len(), n_heads * dh, "decode batch: q length");
+        macs += 2 * seq.k.len * n_heads * dh;
+    }
+    Some(DecodeGeom { hk, dh, rep: n_heads / hk, macs })
 }
 
 // ---------------------------------------------------------------------------
@@ -192,6 +325,27 @@ impl ComputeBackend for Auto {
     fn kv_dequant(&self, codes: &[i8], scales: &[f32], zeros: &[f32],
                   group: usize, out: &mut [f32]) {
         self.for_rowwise(out.len()).kv_dequant(codes, scales, zeros, group, out);
+    }
+
+    fn decode_f32_batch(&self, seqs: &[DecodeF32Seq<'_>], n_heads: usize,
+                        out: &mut [f32]) {
+        let Some(geom) = f32_batch_geom(seqs, n_heads, out.len()) else {
+            return;
+        };
+        self.for_gemm(geom.macs).decode_f32_batch(seqs, n_heads, out);
+    }
+
+    fn decode_quant_batch(&self, seqs: &[DecodeQuantSeq<'_>], n_heads: usize,
+                          out: &mut [f32]) {
+        let Some(geom) = quant_batch_geom(seqs, n_heads, out.len()) else {
+            return;
+        };
+        self.for_gemm(geom.macs).decode_quant_batch(seqs, n_heads, out);
+    }
+
+    fn nll_rows(&self, logits: &[f32], vocab: usize, targets: &[u16],
+                out: &mut [f64]) {
+        self.for_rowwise(logits.len()).nll_rows(logits, vocab, targets, out);
     }
 
     fn par_for(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
@@ -375,6 +529,135 @@ mod tests {
             assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
                     "{} par_for coverage", be.name());
         }
+    }
+
+    /// Tentpole contract: batched decode on Blocked/Threaded/Auto is
+    /// bit-exact with the ScalarRef oracle across GQA shapes, 4/8-bit
+    /// caches and ragged per-sequence lengths (including empty caches).
+    #[test]
+    fn batched_decode_matches_scalar_on_ragged_gqa() {
+        use crate::attention::{CacheF32, CacheQuant, DecodeF32Seq,
+                               DecodeQuantSeq};
+        prop::check("decode-batch-vs-scalar", 10, |rng| {
+            let hk = 1 + rng.below(3); // 1..=3 kv heads
+            let rep = 1 << rng.below(3); // 1/2/4 q-heads per kv head
+            let nh = hk * rep;
+            let dh = 8 << rng.below(2); // 8 or 16
+            let group = if rng.below(2) == 0 { dh } else { dh / 2 };
+            let bits = if rng.below(2) == 0 { 4 } else { 8 };
+            let nseq = 1 + rng.below(4);
+            let mut caches = Vec::new();
+            let mut qs: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..nseq {
+                let len = rng.below(9); // ragged 0..=8, empty allowed
+                let mut kf = CacheF32::new(hk, dh, len);
+                let mut vf = CacheF32::new(hk, dh, len);
+                let mut kq = CacheQuant::new(hk, dh, group, bits);
+                let mut vq = CacheQuant::new(hk, dh, group, bits);
+                for _ in 0..len {
+                    let kt = rng.normal_vec(hk * dh);
+                    let vt = rng.normal_vec(hk * dh);
+                    kf.append(&kt);
+                    vf.append(&vt);
+                    kq.append(&kt, 0.95);
+                    vq.append(&vt, 0.95);
+                }
+                caches.push((kf, vf, kq, vq));
+                qs.push(rng.normal_vec(nh * dh));
+            }
+            let seqs_f: Vec<DecodeF32Seq> = caches.iter().zip(&qs)
+                .map(|((kf, vf, _, _), q)| DecodeF32Seq {
+                    q, k: kf.view(), v: vf.view(),
+                })
+                .collect();
+            let seqs_q: Vec<DecodeQuantSeq> = caches.iter().zip(&qs)
+                .map(|((_, _, kq, vq), q)| DecodeQuantSeq {
+                    q, k: kq.view(), v: vq.view(),
+                })
+                .collect();
+
+            let oracle = ScalarRef;
+            let mut of_ref = vec![0.0f32; nseq * nh * dh];
+            let mut oq_ref = vec![0.0f32; nseq * nh * dh];
+            oracle.decode_f32_batch(&seqs_f, nh, &mut of_ref);
+            oracle.decode_quant_batch(&seqs_q, nh, &mut oq_ref);
+            crate::prop_assert!(of_ref.iter().all(|v| v.is_finite()),
+                                "oracle f32 produced non-finite values");
+            crate::prop_assert!(oq_ref.iter().all(|v| v.is_finite()),
+                                "oracle quant produced non-finite values");
+
+            for be in alt_backends() {
+                // NaN-seeded so any unwritten element fails the comparison
+                let mut of = vec![f32::NAN; nseq * nh * dh];
+                let mut oq = vec![f32::NAN; nseq * nh * dh];
+                be.decode_f32_batch(&seqs_f, nh, &mut of);
+                be.decode_quant_batch(&seqs_q, nh, &mut oq);
+                crate::prop_assert!(of == of_ref,
+                    "{} f32 decode not bit-exact at hk={hk} rep={rep} dh={dh}",
+                    be.name());
+                crate::prop_assert!(oq == oq_ref,
+                    "{} quant decode not bit-exact at hk={hk} rep={rep} \
+                     dh={dh} group={group} bits={bits}", be.name());
+            }
+            Ok(())
+        });
+    }
+
+    /// Regression: an empty cache used to produce `0/0 = NaN` outputs —
+    /// every backend must yield a well-defined all-zero output instead.
+    #[test]
+    fn empty_cache_decode_is_zero_on_every_backend() {
+        use crate::attention::{CacheF32, CacheQuant, DecodeF32Seq,
+                               DecodeQuantSeq};
+        use crate::util::prng::Rng;
+        let (hk, dh, nh) = (2usize, 16usize, 4usize);
+        let mut rng = Rng::new(3);
+        let q = rng.normal_vec(nh * dh);
+        let (kf, vf) = (CacheF32::new(hk, dh, 0), CacheF32::new(hk, dh, 0));
+        let (kq, vq) = (CacheQuant::new(hk, dh, dh, 4),
+                        CacheQuant::new(hk, dh, dh, 4));
+        for kind in BackendKind::all() {
+            let be = make(kind);
+            let mut out = vec![f32::NAN; nh * dh];
+            be.decode_f32_batch(&[DecodeF32Seq {
+                q: &q, k: kf.view(), v: vf.view(),
+            }], nh, &mut out);
+            assert!(out.iter().all(|&v| v == 0.0),
+                    "{} f32 empty-cache decode", be.name());
+            out.fill(f32::NAN);
+            be.decode_quant_batch(&[DecodeQuantSeq {
+                q: &q, k: kq.view(), v: vq.view(),
+            }], nh, &mut out);
+            assert!(out.iter().all(|&v| v == 0.0),
+                    "{} quant empty-cache decode", be.name());
+        }
+    }
+
+    /// The batched NLL reduction must agree exactly with the single-row
+    /// helper on every backend.
+    #[test]
+    fn nll_rows_matches_single_row_on_every_backend() {
+        prop::check("nll-rows-vs-scalar", 8, |rng| {
+            let vocab = 1 + rng.below(40);
+            let rows = 1 + rng.below(12);
+            let logits = rng.normal_vec(rows * vocab);
+            let targets: Vec<u16> =
+                (0..rows).map(|_| rng.below(vocab) as u16).collect();
+            let mut want = vec![0.0f64; rows];
+            ScalarRef.nll_rows(&logits, vocab, &targets, &mut want);
+            for (r, &t) in targets.iter().enumerate() {
+                let lp = crate::coordinator::sampler::log_softmax_at(
+                    &logits[r * vocab..(r + 1) * vocab], t as usize);
+                crate::prop_assert!(want[r] == -lp,
+                                    "row {r}: batched vs single-row NLL");
+            }
+            for be in alt_backends() {
+                let mut got = vec![f64::NAN; rows];
+                be.nll_rows(&logits, vocab, &targets, &mut got);
+                crate::prop_assert!(got == want, "{} nll_rows", be.name());
+            }
+            Ok(())
+        });
     }
 
     #[test]

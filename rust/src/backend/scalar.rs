@@ -6,7 +6,10 @@
 
 use std::cell::RefCell;
 
-use super::{kv_dequant_seq, kv_quant_seq, wht_rows_seq, ComputeBackend};
+use super::{f32_batch_geom, kv_dequant_seq, kv_quant_seq, nll_rows_seq,
+            quant_batch_geom, wht_rows_seq, ComputeBackend, DECODE_SCRATCH};
+use crate::attention::{decode_seq_f32_ref, decode_seq_quant_ref, DecodeF32Seq,
+                       DecodeQuantSeq};
 use crate::gemm::{self, WeightsF32, WeightsI4, WeightsI8};
 
 thread_local! {
@@ -57,6 +60,39 @@ impl ComputeBackend for ScalarRef {
     fn kv_dequant(&self, codes: &[i8], scales: &[f32], zeros: &[f32],
                   group: usize, out: &mut [f32]) {
         kv_dequant_seq(codes, scales, zeros, group, out);
+    }
+
+    fn decode_f32_batch(&self, seqs: &[DecodeF32Seq<'_>], n_heads: usize,
+                        out: &mut [f32]) {
+        let Some(geom) = f32_batch_geom(seqs, n_heads, out.len()) else {
+            return;
+        };
+        let stride = n_heads * geom.dh;
+        DECODE_SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            for (seq, o) in seqs.iter().zip(out.chunks_exact_mut(stride)) {
+                decode_seq_f32_ref(seq, n_heads, o, scratch);
+            }
+        });
+    }
+
+    fn decode_quant_batch(&self, seqs: &[DecodeQuantSeq<'_>], n_heads: usize,
+                          out: &mut [f32]) {
+        let Some(geom) = quant_batch_geom(seqs, n_heads, out.len()) else {
+            return;
+        };
+        let stride = n_heads * geom.dh;
+        DECODE_SCRATCH.with(|s| {
+            let scratch = &mut *s.borrow_mut();
+            for (seq, o) in seqs.iter().zip(out.chunks_exact_mut(stride)) {
+                decode_seq_quant_ref(seq, n_heads, o, scratch);
+            }
+        });
+    }
+
+    fn nll_rows(&self, logits: &[f32], vocab: usize, targets: &[u16],
+                out: &mut [f64]) {
+        nll_rows_seq(logits, vocab, targets, out);
     }
 
     fn par_for(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {

@@ -16,12 +16,14 @@
 //!
 //! [`par_for`]: ComputeBackend::par_for
 
+use crate::attention::{DecodeF32Seq, DecodeQuantSeq};
 use crate::gemm::{quant_row, WeightsF32, WeightsI4, WeightsI8};
 use crate::hadamard;
 use crate::quant::kv;
 
 use super::pool::{self, SendPtr, WorkerPool};
-use super::{blocked, ComputeBackend};
+use super::{blocked, f32_batch_geom, log_softmax_row, quant_batch_geom,
+            ComputeBackend, DECODE_SCRATCH};
 
 pub struct Threaded {
     pool: &'static WorkerPool,
@@ -191,6 +193,76 @@ impl ComputeBackend for Threaded {
                 };
                 kv::dequant_group(&codes[g * group..(g + 1) * group],
                                   scales[g], zeros[g], o);
+            }
+        });
+    }
+
+    fn decode_f32_batch(&self, seqs: &[DecodeF32Seq<'_>], n_heads: usize,
+                        out: &mut [f32]) {
+        let Some(geom) = f32_batch_geom(seqs, n_heads, out.len()) else {
+            return;
+        };
+        let (hk, dh, rep) = (geom.hk, geom.dh, geom.rep);
+        let stride = n_heads * dh;
+        let op = SendPtr::new(out.as_mut_ptr());
+        // one task per (sequence, kv-head group): the group's rep q-heads
+        // share one contiguous, disjoint output region
+        self.pool.run(seqs.len() * hk, &|ti| {
+            let (i, kvh) = (ti / hk, ti % hk);
+            let seq = &seqs[i];
+            // SAFETY: task ti owns exactly out[i*stride + kvh*rep*dh ..][..rep*dh];
+            // regions are pairwise disjoint and the pool joins before `out`
+            // is read again.
+            let o = unsafe {
+                std::slice::from_raw_parts_mut(
+                    op.get().add(i * stride + kvh * rep * dh), rep * dh)
+            };
+            DECODE_SCRATCH.with(|s| {
+                blocked::decode_kvh_f32(seq.q, kvh, rep, &seq.k, &seq.v, o,
+                                        &mut s.borrow_mut());
+            });
+        });
+    }
+
+    fn decode_quant_batch(&self, seqs: &[DecodeQuantSeq<'_>], n_heads: usize,
+                          out: &mut [f32]) {
+        let Some(geom) = quant_batch_geom(seqs, n_heads, out.len()) else {
+            return;
+        };
+        let (hk, dh, rep) = (geom.hk, geom.dh, geom.rep);
+        let stride = n_heads * dh;
+        let op = SendPtr::new(out.as_mut_ptr());
+        self.pool.run(seqs.len() * hk, &|ti| {
+            let (i, kvh) = (ti / hk, ti % hk);
+            let seq = &seqs[i];
+            // SAFETY: as in decode_f32_batch — disjoint per-task regions.
+            let o = unsafe {
+                std::slice::from_raw_parts_mut(
+                    op.get().add(i * stride + kvh * rep * dh), rep * dh)
+            };
+            DECODE_SCRATCH.with(|s| {
+                blocked::decode_kvh_quant(seq.q, kvh, rep, &seq.k, &seq.v, o,
+                                          &mut s.borrow_mut());
+            });
+        });
+    }
+
+    fn nll_rows(&self, logits: &[f32], vocab: usize, targets: &[u16],
+                out: &mut [f64]) {
+        let rows = targets.len();
+        assert!(vocab > 0 && logits.len() >= rows * vocab);
+        assert!(out.len() >= rows);
+        let (per, n_chunks) = Self::chunks(rows, 4, self.pool.lanes());
+        let op = SendPtr::new(out.as_mut_ptr());
+        self.pool.run(n_chunks, &|i| {
+            let r0 = i * per;
+            let r1 = ((i + 1) * per).min(rows);
+            for r in r0..r1 {
+                let row = &logits[r * vocab..(r + 1) * vocab];
+                // SAFETY: disjoint rows per chunk.
+                unsafe {
+                    *op.get().add(r) = -log_softmax_row(row, targets[r] as usize);
+                }
             }
         });
     }

@@ -27,8 +27,11 @@ use super::kvcache::{PagePool, SeqCache};
 use super::runner::{DecodeStaging, Runner};
 use super::sampler::{sample, Sampling};
 use crate::api::{FinishReason, GenerationEvent, RequestStats, SubmitError};
+use crate::attention::{DecodeF32Seq, DecodeQuantSeq, KvCodes, KvF32View,
+                       KvQuantView};
 use crate::backend::pool::SendPtr;
 use crate::backend::ComputeBackend;
+use crate::model::ModelConfig;
 use crate::util::prng::Rng;
 
 #[derive(Clone, Debug)]
@@ -408,40 +411,47 @@ impl GenerationEngine {
     }
 
     /// Refresh the whole dense staging view of one slot from its pages.
+    /// The token gather is page-granular, but the fp-baseline dequant runs
+    /// as ONE backend `kv_dequant` per (layer, K/V) over the slot's whole
+    /// contiguous staging region instead of a per-token call.
     fn load_slot_staging(&mut self, slot: usize, cache: &SeqCache) {
         let cfg = self.runner.cfg.clone();
         let (l_n, b, s) = (cfg.n_layers, cfg.decode_batch, cfg.cache_seq);
         let d = cfg.d_kv();
         let ng = d / cfg.kv_group;
+        let n = cache.len;
         let fp = self.runner.spec.kv_bits == 16;
         let backend = self.backend.clone();
-        let mut codes = vec![0i8; d];
-        let mut scales = vec![0.0f32; ng];
-        let mut zeros = vec![0.0f32; ng];
+        let mut codes = vec![0i8; n * d];
+        let mut scales = vec![0.0f32; n * ng];
+        let mut zeros = vec![0.0f32; n * ng];
         for l in 0..l_n {
-            for t in 0..cache.len {
-                for (want_v, which) in [(false, 0), (true, 1)] {
+            for (want_v, which) in [(false, 0), (true, 1)] {
+                for t in 0..n {
                     cache.read_token(&self.pool, l, t, want_v,
-                                     &mut codes, &mut scales, &mut zeros);
-                    let co = ((l * b + slot) * s + t) * d;
-                    let go = ((l * b + slot) * s + t) * ng;
-                    if fp {
-                        let dst = if which == 0 { &mut self.staging.k_f32 }
-                                  else { &mut self.staging.v_f32 };
-                        backend.kv_dequant(&codes, &scales, &zeros, cfg.kv_group,
-                                           &mut dst[co..co + d]);
+                                     &mut codes[t * d..(t + 1) * d],
+                                     &mut scales[t * ng..(t + 1) * ng],
+                                     &mut zeros[t * ng..(t + 1) * ng]);
+                }
+                // tokens 0..n of one (layer, slot) are contiguous in staging
+                let co = (l * b + slot) * s * d;
+                let go = (l * b + slot) * s * ng;
+                if fp {
+                    let dst = if which == 0 { &mut self.staging.k_f32 }
+                              else { &mut self.staging.v_f32 };
+                    backend.kv_dequant(&codes, &scales, &zeros, cfg.kv_group,
+                                       &mut dst[co..co + n * d]);
+                } else {
+                    let (dst_c, dst_s, dst_z) = if which == 0 {
+                        (&mut self.staging.k_codes, &mut self.staging.k_scale,
+                         &mut self.staging.k_zero)
                     } else {
-                        let (dst_c, dst_s, dst_z) = if which == 0 {
-                            (&mut self.staging.k_codes, &mut self.staging.k_scale,
-                             &mut self.staging.k_zero)
-                        } else {
-                            (&mut self.staging.v_codes, &mut self.staging.v_scale,
-                             &mut self.staging.v_zero)
-                        };
-                        dst_c[co..co + d].copy_from_slice(&codes);
-                        dst_s[go..go + ng].copy_from_slice(&scales);
-                        dst_z[go..go + ng].copy_from_slice(&zeros);
-                    }
+                        (&mut self.staging.v_codes, &mut self.staging.v_scale,
+                         &mut self.staging.v_zero)
+                    };
+                    dst_c[co..co + n * d].copy_from_slice(&codes);
+                    dst_s[go..go + n * ng].copy_from_slice(&scales);
+                    dst_z[go..go + n * ng].copy_from_slice(&zeros);
                 }
             }
         }
@@ -672,5 +682,240 @@ impl GenerationEngine {
 
     pub fn pool_in_use(&self) -> usize {
         self.pool.in_use()
+    }
+
+    /// `(slot index, current cache length)` of every active slot — the
+    /// batch shape [`staged_decode_attention`] consumes.
+    pub fn active_slots(&self) -> Vec<(usize, usize)> {
+        self.slots.iter().enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|sl| (i, sl.cache.len)))
+            .collect()
+    }
+
+    /// Native batched paged-decode attention over all active slots for one
+    /// layer (see [`staged_decode_attention`]).  `qs`/`out` are
+    /// `active × n_heads × d_head`, in [`Self::active_slots`] order.
+    ///
+    /// NOT on the serving path yet: [`Self::tick`] runs attention inside
+    /// the AOT decode graph (which fuses it with the projections, and is
+    /// the only place per-layer queries exist today).  This entry is the
+    /// bench/test surface and staging-consistency gate; hoisting it into
+    /// the tick is the ROADMAP follow-up.
+    pub fn decode_attention_native(&self, layer: usize, qs: &[f32],
+                                   out: &mut [f32]) {
+        let slots = self.active_slots();
+        staged_decode_attention(self.backend.as_ref(), &self.runner.cfg,
+                                self.runner.spec.kv_bits == 16, &self.staging,
+                                layer, &slots, qs, out);
+    }
+}
+
+/// Native batched paged-decode attention — the rust twin of the decode
+/// graph's `Decode` stage (Appendix A.10) over the engine's dense staging
+/// slabs, dispatched through the [`ComputeBackend`].
+///
+/// The serving tick hands the same staging buffers to the AOT decode graph
+/// (which fuses this stage with the projections around it); this entry
+/// point gives the native backends authority over the identical attention
+/// computation, borrowing the per-slot K/V streams straight out of the
+/// staging slabs (zero copies — the batcher keeps 4-bit codes unpacked
+/// there, which the [`KvCodes::I8`] view consumes directly).
+///
+/// `slots` is `(slot index, current length)` per sequence (ragged lengths
+/// fine, empty caches produce zero output); `qs` and `out` are
+/// `slots.len() × n_heads × d_head`.
+#[allow(clippy::too_many_arguments)]
+pub fn staged_decode_attention(backend: &dyn ComputeBackend, cfg: &ModelConfig,
+                               fp: bool, staging: &DecodeStaging, layer: usize,
+                               slots: &[(usize, usize)], qs: &[f32],
+                               out: &mut [f32]) {
+    let (b, s) = (cfg.decode_batch, cfg.cache_seq);
+    let (hk, dh, h) = (cfg.n_kv_heads, cfg.d_head, cfg.n_heads);
+    let d = cfg.d_kv();
+    let ng = d / cfg.kv_group;
+    assert!(layer < cfg.n_layers, "layer {layer} out of range");
+    assert_eq!(qs.len(), slots.len() * h * dh, "qs shape");
+    for &(slot, len) in slots {
+        assert!(slot < b && len <= s, "slot ({slot}, {len}) out of range");
+    }
+    fn f32_view(data: &[f32], base: usize, len: usize, d: usize, hk: usize,
+                dh: usize) -> KvF32View<'_> {
+        KvF32View {
+            n_kv_heads: hk,
+            d_head: dh,
+            len,
+            data: &data[base * d..(base + len) * d],
+        }
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn quant_view<'a>(codes: &'a [i8], scales: &'a [f32], zeros: &'a [f32],
+                      base: usize, len: usize, d: usize, ng: usize, hk: usize,
+                      dh: usize, group: usize) -> KvQuantView<'a> {
+        KvQuantView {
+            n_kv_heads: hk,
+            d_head: dh,
+            group,
+            len,
+            codes: KvCodes::I8(&codes[base * d..(base + len) * d]),
+            scales: &scales[base * ng..(base + len) * ng],
+            zeros: &zeros[base * ng..(base + len) * ng],
+        }
+    }
+    if fp {
+        let seqs: Vec<DecodeF32Seq> = slots.iter().enumerate()
+            .map(|(i, &(slot, len))| {
+                let base = (layer * b + slot) * s;
+                DecodeF32Seq {
+                    q: &qs[i * h * dh..(i + 1) * h * dh],
+                    k: f32_view(&staging.k_f32, base, len, d, hk, dh),
+                    v: f32_view(&staging.v_f32, base, len, d, hk, dh),
+                }
+            })
+            .collect();
+        backend.decode_f32_batch(&seqs, h, out);
+    } else {
+        let seqs: Vec<DecodeQuantSeq> = slots.iter().enumerate()
+            .map(|(i, &(slot, len))| {
+                let base = (layer * b + slot) * s;
+                DecodeQuantSeq {
+                    q: &qs[i * h * dh..(i + 1) * h * dh],
+                    k: quant_view(&staging.k_codes, &staging.k_scale,
+                                  &staging.k_zero, base, len, d, ng, hk, dh,
+                                  cfg.kv_group),
+                    v: quant_view(&staging.v_codes, &staging.v_scale,
+                                  &staging.v_zero, base, len, d, ng, hk, dh,
+                                  cfg.kv_group),
+                }
+            })
+            .collect();
+        backend.decode_quant_batch(&seqs, h, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{CacheF32, CacheQuant};
+    use crate::backend::{self, BackendKind, ScalarRef};
+
+    fn test_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "staged-test".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 64,
+            max_seq: 16,
+            cache_seq: 12,
+            decode_batch: 3,
+            kv_group: 8,
+            rope_theta: 1e4,
+            train_ppl: 0.0,
+        }
+    }
+
+    /// The staged (paged) views must decode bit-identically to the same
+    /// tokens decoded through owned caches, on every backend — this is the
+    /// decode tick's native-attention consistency gate.
+    #[test]
+    fn staged_decode_matches_cache_decode_all_backends() {
+        let cfg = test_cfg();
+        let (d, dh, h) = (cfg.d_kv(), cfg.d_head, cfg.n_heads);
+        let ng = d / cfg.kv_group;
+        let (b, s) = (cfg.decode_batch, cfg.cache_seq);
+        let lens = [5usize, 0, 3]; // ragged, including an empty slot
+        let layer = 1usize;
+        let mut rng = Rng::new(42);
+
+        // quantized path: append through CacheQuant (8-bit stores raw i8
+        // codes — the same unpacked layout staging keeps), then copy the
+        // codec output into the staging slabs
+        let mut staging = DecodeStaging::new(&cfg, false);
+        let mut caches: Vec<(CacheQuant, CacheQuant)> = Vec::new();
+        for (slot, &len) in lens.iter().enumerate() {
+            let mut kq = CacheQuant::new(cfg.n_kv_heads, dh, cfg.kv_group, 8);
+            let mut vq = CacheQuant::new(cfg.n_kv_heads, dh, cfg.kv_group, 8);
+            for _ in 0..len {
+                kq.append(&rng.normal_vec(d), 0.95);
+                vq.append(&rng.normal_vec(d), 0.95);
+            }
+            for l in 0..cfg.n_layers {
+                let co = (l * b + slot) * s * d;
+                let go = (l * b + slot) * s * ng;
+                for (cache, dst_c, dst_s, dst_z) in [
+                    (&kq, &mut staging.k_codes, &mut staging.k_scale,
+                     &mut staging.k_zero),
+                    (&vq, &mut staging.v_codes, &mut staging.v_scale,
+                     &mut staging.v_zero),
+                ] {
+                    for (i, &c) in cache.codes.iter().enumerate() {
+                        dst_c[co + i] = c as i8;
+                    }
+                    dst_s[go..go + len * ng].copy_from_slice(&cache.scales);
+                    dst_z[go..go + len * ng].copy_from_slice(&cache.zeros);
+                }
+            }
+            caches.push((kq, vq));
+        }
+        let active: Vec<(usize, usize)> =
+            lens.iter().enumerate().map(|(i, &l)| (i, l)).collect();
+        let qs = rng.normal_vec(lens.len() * h * dh);
+
+        // oracle: decode each slot through its owned cache views
+        let oracle = ScalarRef;
+        let mut want = vec![0.0f32; lens.len() * h * dh];
+        let seqs: Vec<DecodeQuantSeq> = caches.iter().enumerate()
+            .map(|(i, (kq, vq))| DecodeQuantSeq {
+                q: &qs[i * h * dh..(i + 1) * h * dh],
+                k: kq.view(),
+                v: vq.view(),
+            })
+            .collect();
+        oracle.decode_quant_batch(&seqs, h, &mut want);
+
+        for kind in BackendKind::all() {
+            let be = backend::make(kind);
+            let mut got = vec![f32::NAN; lens.len() * h * dh];
+            staged_decode_attention(be.as_ref(), &cfg, false, &staging, layer,
+                                    &active, &qs, &mut got);
+            assert!(got == want, "staged quant decode diverged on {}", be.name());
+        }
+
+        // fp path: staging carries raw f32 streams
+        let mut staging = DecodeStaging::new(&cfg, true);
+        let mut fcaches: Vec<(CacheF32, CacheF32)> = Vec::new();
+        for (slot, &len) in lens.iter().enumerate() {
+            let mut kf = CacheF32::new(cfg.n_kv_heads, dh, len);
+            let mut vf = CacheF32::new(cfg.n_kv_heads, dh, len);
+            for _ in 0..len {
+                kf.append(&rng.normal_vec(d));
+                vf.append(&rng.normal_vec(d));
+            }
+            for l in 0..cfg.n_layers {
+                let co = (l * b + slot) * s * d;
+                staging.k_f32[co..co + len * d].copy_from_slice(&kf.data);
+                staging.v_f32[co..co + len * d].copy_from_slice(&vf.data);
+            }
+            fcaches.push((kf, vf));
+        }
+        let mut want = vec![0.0f32; lens.len() * h * dh];
+        let seqs: Vec<DecodeF32Seq> = fcaches.iter().enumerate()
+            .map(|(i, (kf, vf))| DecodeF32Seq {
+                q: &qs[i * h * dh..(i + 1) * h * dh],
+                k: kf.view(),
+                v: vf.view(),
+            })
+            .collect();
+        oracle.decode_f32_batch(&seqs, h, &mut want);
+        for kind in BackendKind::all() {
+            let be = backend::make(kind);
+            let mut got = vec![f32::NAN; lens.len() * h * dh];
+            staged_decode_attention(be.as_ref(), &cfg, true, &staging, layer,
+                                    &active, &qs, &mut got);
+            assert!(got == want, "staged f32 decode diverged on {}", be.name());
+        }
     }
 }

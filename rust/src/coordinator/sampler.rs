@@ -38,11 +38,10 @@ pub fn argmax(xs: &[f32]) -> usize {
     best
 }
 
-/// log-softmax value of one index (used by the eval harness).
+/// log-softmax value of one index — the single-row convenience form of
+/// [`crate::backend::ComputeBackend::nll_rows`] (same scalar oracle).
 pub fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
-    let mx = logits.iter().fold(f32::MIN, |m, &v| m.max(v)) as f64;
-    let lse: f64 = logits.iter().map(|&v| ((v as f64) - mx).exp()).sum::<f64>().ln() + mx;
-    logits[idx] as f64 - lse
+    crate::backend::log_softmax_row(logits, idx)
 }
 
 #[cfg(test)]

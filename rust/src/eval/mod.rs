@@ -1,12 +1,37 @@
 //! Evaluation harness: perplexity (the WikiText-2 stand-in), the six
 //! zero-shot probe tasks (Table 2 stand-in) and activation outlier
 //! statistics (Fig. 1).
+//!
+//! The NLL inner loops dispatch through the runner's
+//! [`crate::backend::ComputeBackend`]: each perplexity window (and each
+//! continuation score) is one batched `nll_rows` reduction instead of a
+//! per-token scalar `log_softmax_at` loop, so `Blocked`/`Threaded` (and
+//! future SIMD/GPU backends) own this hot path too.
+//!
+//! Degenerate inputs are hardened: token streams shorter than one window
+//! return a typed `Err` (no underflow panics), empty contexts score from
+//! the first predictable position, and zero-item tasks report accuracy
+//! 0.0 instead of `0/0 = NaN`.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::runner::Runner;
-use crate::coordinator::sampler::log_softmax_at;
-use crate::model::corpus::{ProbeTask};
+use crate::model::corpus::ProbeTask;
+
+/// How many windows of `window` tokens (each needing one next-token
+/// target) a stream of `n_tokens` supports, capped at `max_windows`.
+/// Too-short streams are a typed `Err`, never an underflow panic.
+pub(crate) fn plan_windows(n_tokens: usize, window: usize, max_windows: usize)
+                           -> Result<usize> {
+    if n_tokens < window + 1 {
+        bail!("perplexity needs at least {} tokens (one window of {window} \
+               plus a next-token target); got {n_tokens}", window + 1);
+    }
+    if max_windows == 0 {
+        bail!("perplexity needs max_windows >= 1");
+    }
+    Ok(((n_tokens - 1) / window).min(max_windows))
+}
 
 /// Perplexity of `tokens` under the runner's model, measured in windows of
 /// `max_seq` exactly like python/compile/train.evaluate_ppl.
@@ -14,35 +39,44 @@ use crate::model::corpus::{ProbeTask};
 pub fn perplexity(runner: &Runner, tokens: &[u16], max_windows: usize) -> Result<f64> {
     let s = runner.cfg.max_seq;
     let v = runner.cfg.vocab;
-    let n = ((tokens.len() - 1) / s).min(max_windows);
-    assert!(n > 0, "not enough eval tokens");
+    let n = plan_windows(tokens.len(), s, max_windows)?;
     let mut nll = 0.0f64;
     let mut count = 0usize;
+    let mut row_nll = vec![0.0f64; s];
     for w in 0..n {
         let window = &tokens[w * s..w * s + s + 1];
         let pre = runner.prefill(&window[..s])?;
-        for t in 0..s {
-            let logits = &pre.logits[t * v..(t + 1) * v];
-            nll -= log_softmax_at(logits, window[t + 1] as usize);
-            count += 1;
+        // one batched NLL reduction per window: logits row t scores target
+        // window[t + 1]
+        runner.backend.nll_rows(&pre.logits, v, &window[1..], &mut row_nll);
+        for &r in &row_nll {
+            nll += r;
         }
+        count += s;
     }
     Ok((nll / count as f64).exp())
 }
 
-/// Score of one continuation: total logprob of `cont` given `ctx`.
+/// Score of one continuation: total logprob of `cont` given `ctx`, as one
+/// batched NLL reduction over the continuation's (consecutive) logit rows.
+/// With an empty context the first continuation token has no predicting
+/// position, so scoring starts at the first predictable one.
 fn continuation_logprob(runner: &Runner, ctx: &[u16], cont: &[u16]) -> Result<f64> {
     let v = runner.cfg.vocab;
+    let skip = usize::from(ctx.is_empty());
+    if cont.len() <= skip {
+        return Ok(0.0);
+    }
     let mut seq = ctx.to_vec();
     seq.extend_from_slice(cont);
     let pre = runner.prefill(&seq)?;
-    let mut lp = 0.0f64;
-    for (i, &tok) in cont.iter().enumerate() {
-        let pos = ctx.len() + i - 1; // logits at pos predict token pos+1
-        let logits = &pre.logits[pos * v..(pos + 1) * v];
-        lp += log_softmax_at(logits, tok as usize);
-    }
-    Ok(lp)
+    // logits at position p predict token p + 1
+    let p0 = ctx.len() + skip - 1;
+    let targets = &cont[skip..];
+    let mut row_nll = vec![0.0f64; targets.len()];
+    runner.backend.nll_rows(&pre.logits[p0 * v..(p0 + targets.len()) * v], v,
+                            targets, &mut row_nll);
+    Ok(-row_nll.iter().sum::<f64>())
 }
 
 #[derive(Clone, Debug)]
@@ -50,6 +84,18 @@ pub struct TaskScore {
     pub name: String,
     pub accuracy: f64,
     pub items: usize,
+}
+
+impl TaskScore {
+    /// Accuracy from raw counts; zero-item tasks score 0.0, not `0/0 = NaN`.
+    pub fn from_counts(name: String, correct: usize, items: usize) -> TaskScore {
+        let accuracy = if items == 0 {
+            0.0
+        } else {
+            correct as f64 / items as f64
+        };
+        TaskScore { name, accuracy, items }
+    }
 }
 
 /// Accuracy on one probe task (multiple-choice ranking, or exact next-token
@@ -61,6 +107,9 @@ pub fn score_task(runner: &Runner, task: &ProbeTask, max_items: usize)
     let items = task.items.len().min(max_items);
     for item in task.items.iter().take(items) {
         if item.choices.is_empty() {
+            if item.ctx.is_empty() {
+                continue; // no predicting position — scored incorrect
+            }
             let pre = runner.prefill(&item.ctx)?;
             let pos = item.ctx.len() - 1;
             let logits = &pre.logits[pos * v..(pos + 1) * v];
@@ -69,6 +118,15 @@ pub fn score_task(runner: &Runner, task: &ProbeTask, max_items: usize)
                 correct += 1;
             }
         } else {
+            // A choice with no scoreable tokens — empty, or single-token
+            // under an empty context (whose first token has no predicting
+            // position) — would score an empty product (logprob 0 =
+            // certainty) and win any ranking; such items are unscoreable,
+            // counted incorrect.
+            let min_len = usize::from(item.ctx.is_empty()) + 1;
+            if item.choices.iter().any(|c| c.len() < min_len) {
+                continue;
+            }
             let mut best = (f64::MIN, 0usize);
             for (ci, cont) in item.choices.iter().enumerate() {
                 let lp = continuation_logprob(runner, &item.ctx, cont)?;
@@ -81,11 +139,15 @@ pub fn score_task(runner: &Runner, task: &ProbeTask, max_items: usize)
             }
         }
     }
-    Ok(TaskScore {
-        name: task.name.clone(),
-        accuracy: correct as f64 / items as f64,
-        items,
-    })
+    Ok(TaskScore::from_counts(task.name.clone(), correct, items))
+}
+
+/// Mean accuracy over task scores; an empty list averages to 0.0 (not NaN).
+pub fn average_accuracy(scores: &[TaskScore]) -> f64 {
+    if scores.is_empty() {
+        return 0.0;
+    }
+    scores.iter().map(|s| s.accuracy).sum::<f64>() / scores.len() as f64
 }
 
 /// Run all probe tasks; returns scores plus the average (the paper's Avg).
@@ -94,7 +156,7 @@ pub fn score_all(runner: &Runner, tasks: &[ProbeTask], max_items: usize)
     let scores: Vec<TaskScore> = tasks.iter()
         .map(|t| score_task(runner, t, max_items))
         .collect::<Result<_>>()?;
-    let avg = scores.iter().map(|s| s.accuracy).sum::<f64>() / scores.len() as f64;
+    let avg = average_accuracy(&scores);
     Ok((scores, avg))
 }
 
@@ -127,4 +189,49 @@ pub fn outlier_stats(amax: &[Vec<Vec<f32>>]) -> Vec<OutlierStats> {
         }
     }
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Regression (pre-fix code panicked): an empty stream underflowed
+    // `tokens.len() - 1` and a short one tripped a bare `assert!(n > 0)`.
+    #[test]
+    fn short_streams_are_typed_errors() {
+        assert!(plan_windows(0, 16, 4).is_err());
+        assert!(plan_windows(16, 16, 4).is_err()); // no next-token target
+        assert!(plan_windows(17, 16, 0).is_err()); // zero window budget
+        assert_eq!(plan_windows(17, 16, 4).unwrap(), 1);
+        assert_eq!(plan_windows(100, 16, 4).unwrap(), 4);
+        assert_eq!(plan_windows(100, 16, 8).unwrap(), 6);
+    }
+
+    // Regression: zero-item tasks divided 0/0 into a NaN accuracy.
+    #[test]
+    fn zero_item_task_scores_zero_not_nan() {
+        let s = TaskScore::from_counts("empty".into(), 0, 0);
+        assert_eq!(s.accuracy, 0.0);
+        assert!(!s.accuracy.is_nan());
+        let s = TaskScore::from_counts("half".into(), 2, 4);
+        assert_eq!(s.accuracy, 0.5);
+    }
+
+    // Regression: an empty task list averaged to NaN and poisoned the
+    // paper-style Avg column.
+    #[test]
+    fn empty_task_list_averages_zero() {
+        assert_eq!(average_accuracy(&[]), 0.0);
+        let scores = [TaskScore::from_counts("a".into(), 1, 2),
+                      TaskScore::from_counts("b".into(), 3, 4)];
+        assert!((average_accuracy(&scores) - 0.625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outlier_stats_shape() {
+        let amax = vec![vec![vec![1.0f32, 10.0, 2.0]; 2]; 1];
+        let st = outlier_stats(&amax);
+        assert_eq!(st.len(), 2);
+        assert!((st[0].ratio - 5.0).abs() < 1e-6);
+    }
 }

@@ -22,7 +22,8 @@
 //!                   group-wise asymmetric KV codec, int4 packing.
 //! * [`gemm`]      — native f32 / int8 / packed-int4 GEMM (Fig. 7 substrate).
 //! * [`attention`] — native decode attention over f32 and quantized caches
-//!                   (Table 15 substrate).
+//!                   (Table 15 substrate); scalar oracle + borrowed KV
+//!                   views for the backend's batched decode ops.
 //! * [`model`]     — artifact containers: configs, weights.bin, corpus.bin,
 //!                   probes.bin, and the rust-side QuaRot transform.
 //! * [`runtime`]   — PJRT engine: manifest-driven executable registry.
@@ -36,7 +37,8 @@
 //! * [`server`]    — threaded TCP front-end speaking the v2 event-frame
 //!                   protocol (one JSON frame per event, multiplexed by
 //!                   request id; v1 one-shot lines still answered).
-//! * [`eval`]      — perplexity, zero-shot probes, outlier statistics.
+//! * [`eval`]      — perplexity, zero-shot probes, outlier statistics
+//!                   (NLL reductions batched through the backend).
 //! * [`bench_support`] — shared workload generators for `cargo bench`.
 
 pub mod api;

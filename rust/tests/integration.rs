@@ -231,6 +231,59 @@ fn server_roundtrip() {
 }
 
 #[test]
+fn eval_edge_cases_are_errors_not_panics() {
+    use quarot::model::corpus::{ProbeItem, ProbeTask};
+    let Some(art) = art() else { return };
+    let r = art.runner_prefill_only(QuantSpec::fp16_baseline(), None).unwrap();
+
+    // regression: empty/short streams used to underflow `tokens.len() - 1`
+    // or trip a bare `assert!(n > 0)` — they must be typed errors now
+    assert!(eval::perplexity(&r, &[], 3).is_err());
+    let short = vec![1u16; r.cfg.max_seq]; // no next-token target
+    assert!(eval::perplexity(&r, &short, 3).is_err());
+    let ok_len = vec![1u16; r.cfg.max_seq + 1];
+    assert!(eval::perplexity(&r, &ok_len, 0).is_err()); // zero window budget
+
+    // regression: zero-item tasks divided 0/0 into NaN accuracy
+    let empty = ProbeTask { name: "empty".into(), items: vec![] };
+    let s = eval::score_task(&r, &empty, 10).unwrap();
+    assert_eq!(s.accuracy, 0.0);
+    let s = eval::score_task(&r, &art.probes[0], 0).unwrap();
+    assert!(s.accuracy == 0.0 && s.items == 0, "max_items=0 gave {s:?}");
+    let (scores, avg) = eval::score_all(&r, &[], 5).unwrap();
+    assert!(scores.is_empty() && avg == 0.0, "empty task list avg {avg}");
+
+    // regression: an empty context wrapped `ctx.len() + i - 1` — scoring
+    // must start from the first predictable position; an empty-ctx item
+    // with a single-token choice is unscoreable (counted incorrect, never
+    // a free win for the one-token distractor)
+    let task = ProbeTask {
+        name: "empty-ctx".into(),
+        items: vec![ProbeItem {
+            ctx: vec![],
+            choices: vec![vec![1, 2], vec![3]],
+            gold: 0,
+            gold_token: 0,
+        }],
+    };
+    let s = eval::score_task(&r, &task, 10).unwrap();
+    assert!(s.items == 1 && s.accuracy == 0.0, "{s:?}");
+
+    // multi-token choices under an empty context are still rankable
+    let task = ProbeTask {
+        name: "empty-ctx-multi".into(),
+        items: vec![ProbeItem {
+            ctx: vec![],
+            choices: vec![vec![1, 2], vec![3, 4]],
+            gold: 0,
+            gold_token: 0,
+        }],
+    };
+    let s = eval::score_task(&r, &task, 10).unwrap();
+    assert!(s.items == 1 && !s.accuracy.is_nan());
+}
+
+#[test]
 fn zeroshot_probes_above_chance_fp16() {
     let Some(art) = art() else { return };
     let runner = art.runner_prefill_only(QuantSpec::fp16_baseline(), None).unwrap();
