@@ -1,0 +1,175 @@
+//! Sharded serving-cluster bench: per-shard-count throughput/TTFT table
+//! over synthetic mixed Interactive/Batch traffic.
+//!
+//! Full mode sweeps shard counts over the same workload and records
+//! per-class mean/p95 TTFT plus aggregate decode throughput —
+//! the serving-side scaling twin of the paper's Sec. 5.2 speedups.
+//!
+//! `--check` is the CI one-rep acceptance smoke (no timing table): on
+//! 2 shards, a mixed-priority workload must complete both classes (no
+//! starvation) with Interactive arrivals admitted ahead of the *queued*
+//! Batch backlog (fair-share TTFT ordering).  The other acceptance
+//! property — a 1-shard cluster producing event streams identical to a
+//! `LocalSession` — lives in `rust/tests/api_stream.rs`
+//! (`one_shard_cluster_matches_local_session`), which CI runs via
+//! `cargo test`.
+//!
+//! Like the examples, it self-skips with exit 0 when AOT artifacts are
+//! absent, so CI stays green on runners without `make artifacts`.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use quarot::api::{GenerationParams, Priority, RequestHandle};
+use quarot::bench_support::{drain_class, record, Artifacts};
+use quarot::cluster::{ClusterConfig, ClusterService, EngineFactory,
+                      LatencySummary};
+use quarot::coordinator::batcher::GenerationEngine;
+use quarot::coordinator::runner::QuantSpec;
+use quarot::util::bench::Table;
+
+const MODEL: &str = "tiny-mha";
+const SEED: u64 = 9;
+const PAGES: usize = 2048;
+
+fn factory() -> EngineFactory {
+    Arc::new(|| {
+        let art = Artifacts::load(MODEL)?;
+        let runner = art.runner(QuantSpec::quarot(4), None)?;
+        Ok(GenerationEngine::new(runner, PAGES, SEED))
+    })
+}
+
+fn prompts(art: &Artifacts, n: usize, len: usize) -> Result<Vec<Vec<u16>>> {
+    let eval = art.corpus.split("eval")?;
+    if eval.len() < len {
+        bail!("eval split too short ({} tokens) for {len}-token prompts",
+              eval.len());
+    }
+    let span = eval.len().saturating_sub(len).max(1);
+    Ok((0..n).map(|i| {
+        let off = (i * 17) % span;
+        eval[off..off + len].to_vec()
+    }).collect())
+}
+
+struct RunResult {
+    interactive: LatencySummary,
+    interactive_tokens: usize,
+    batch: LatencySummary,
+    batch_tokens: usize,
+    /// mean TTFT of the slowest `n_interactive` batch requests — the
+    /// queued tail the fair-share scheduler makes interactive jump ahead of
+    batch_tail_ttft_ms: f64,
+    wall_s: f64,
+    tokens_per_sec: f64,
+}
+
+/// Mixed workload: a Batch backlog larger than the cluster's slot
+/// capacity, then Interactive arrivals that must jump the queued tail.
+fn run_workload(art: &Artifacts, shards: usize, n_batch: usize,
+                n_interactive: usize, batch_max_new: usize,
+                max_new: usize) -> Result<RunResult> {
+    let cluster = ClusterService::new(factory(),
+                                      ClusterConfig { shards, queue_bound: 256 });
+    let bp = prompts(art, n_batch, 8)?;
+    let ip = prompts(art, n_interactive, 8)?;
+    let t0 = std::time::Instant::now();
+    let batch: Vec<RequestHandle> = bp.iter()
+        .map(|p| cluster.submit(GenerationParams::new(p.clone())
+                                    .max_new(batch_max_new)
+                                    .priority(Priority::Batch))
+            .map_err(|e| anyhow::anyhow!("{e}")))
+        .collect::<Result<_>>()?;
+    let interactive: Vec<RequestHandle> = ip.iter()
+        .map(|p| cluster.submit(GenerationParams::new(p.clone()).max_new(max_new))
+            .map_err(|e| anyhow::anyhow!("{e}")))
+        .collect::<Result<_>>()?;
+
+    let mut i_out = drain_class(&interactive)?;
+    let mut b_out = drain_class(&batch)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let i_sum = LatencySummary::of(&mut i_out.ttfts);
+    let b_sum = LatencySummary::of(&mut b_out.ttfts); // sorts ascending
+    let tail: &[f64] = &b_out.ttfts[b_out.ttfts.len()
+                                        .saturating_sub(n_interactive)..];
+    let tail_mean = tail.iter().sum::<f64>() / tail.len().max(1) as f64;
+    let tokens = i_out.tokens + b_out.tokens;
+    Ok(RunResult {
+        interactive: i_sum,
+        interactive_tokens: i_out.tokens,
+        batch: b_sum,
+        batch_tokens: b_out.tokens,
+        batch_tail_ttft_ms: tail_mean,
+        wall_s: wall,
+        tokens_per_sec: tokens as f64 / wall,
+    })
+}
+
+/// Acceptance check 2: fair-share on 2 shards — no class starves, and
+/// interactive arrivals beat the queued batch tail.
+fn fairness_check(art: &Artifacts) -> Result<()> {
+    // backlog sized well past slot capacity so a queued batch tail exists
+    let b = art.runner(QuantSpec::quarot(4), None)?.cfg.decode_batch;
+    let n_batch = 2 * 2 * b + 4;
+    let n_interactive = 4;
+    let r = run_workload(art, 2, n_batch, n_interactive, 24, 6)?;
+    if r.interactive_tokens != n_interactive * 6 {
+        bail!("interactive class incomplete: {} tokens", r.interactive_tokens);
+    }
+    if r.batch_tokens != n_batch * 24 {
+        bail!("batch class starved: {} of {} tokens",
+              r.batch_tokens, n_batch * 24);
+    }
+    if r.interactive.mean_ms > r.batch_tail_ttft_ms {
+        bail!("interactive TTFT ({:.1} ms) did not beat the queued batch \
+               tail ({:.1} ms) — fair-share admission is not working",
+              r.interactive.mean_ms, r.batch_tail_ttft_ms);
+    }
+    println!("[check] 2-shard mixed workload: both classes complete; \
+              interactive ttft {:.1} ms vs queued-batch tail {:.1} ms",
+             r.interactive.mean_ms, r.batch_tail_ttft_ms);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let check = std::env::args().any(|a| a == "--check");
+    let art = match Artifacts::load(MODEL) {
+        Ok(a) => a,
+        Err(_) => {
+            eprintln!("[skip] artifacts missing — run `make artifacts`");
+            return Ok(());
+        }
+    };
+
+    if check {
+        fairness_check(&art)?;
+        println!("[check] serving cluster acceptance OK");
+        return Ok(());
+    }
+
+    let b = art.runner(QuantSpec::quarot(4), None)?.cfg.decode_batch;
+    let mut t = Table::new(
+        "Serving cluster — mixed Interactive/Batch traffic per shard count",
+        &["shards", "tok/s", "wall s", "int ttft ms", "int p95",
+          "batch ttft ms", "batch p95"]);
+    for shards in [1usize, 2, 4] {
+        let n_batch = 2 * shards * b + 4;
+        let r = run_workload(&art, shards, n_batch, 6, 32, 8)?;
+        println!("  [{shards} shard(s)] {:.1} tok/s, interactive ttft \
+                  {:.1}/{:.1} ms, batch ttft {:.1}/{:.1} ms",
+                 r.tokens_per_sec, r.interactive.mean_ms,
+                 r.interactive.p95_ms, r.batch.mean_ms, r.batch.p95_ms);
+        t.row(vec![
+            format!("{shards}"),
+            format!("{:.1}", r.tokens_per_sec),
+            format!("{:.2}", r.wall_s),
+            format!("{:.1}", r.interactive.mean_ms),
+            format!("{:.1}", r.interactive.p95_ms),
+            format!("{:.1}", r.batch.mean_ms),
+            format!("{:.1}", r.batch.p95_ms),
+        ]);
+    }
+    record("serving_cluster", &t.render())
+}

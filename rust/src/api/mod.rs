@@ -42,6 +42,60 @@ pub use crate::coordinator::sampler::Sampling;
 /// Engine-assigned request identifier (also the wire multiplexing key).
 pub type RequestId = u64;
 
+/// Scheduling class of a request.  The admission queue is fair-share
+/// across classes (weighted deficit round-robin, see
+/// `coordinator::batcher::FairQueue`): `Interactive` traffic is admitted
+/// ahead of a `Batch` backlog without ever starving it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// latency-sensitive traffic (default); admission weight 4
+    #[default]
+    Interactive,
+    /// throughput traffic (offline eval, bulk scoring); admission weight 1
+    Batch,
+}
+
+impl Priority {
+    pub const COUNT: usize = 2;
+
+    /// Stable class index (also the fair-queue class slot).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+
+    /// Admission weight in the weighted-deficit scheduler.
+    pub const fn weight(self) -> i64 {
+        match self {
+            Priority::Interactive => 4,
+            Priority::Batch => 1,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        Some(match s {
+            "interactive" => Priority::Interactive,
+            "batch" => Priority::Batch,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for Priority {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Typed generation request parameters.
 ///
 /// Build with [`GenerationParams::new`] and the chainable setters:
@@ -57,6 +111,13 @@ pub struct GenerationParams {
     /// stop generation at this token (e.g. a synthetic EOS); None = run
     /// to `max_new_tokens`.
     pub stop_token: Option<u16>,
+    /// scheduling class for fair-share admission.
+    pub priority: Priority,
+    /// server-side deadline in milliseconds from submission.  An expired
+    /// request is retired — queued or mid-stream — with
+    /// [`FinishReason::DeadlineExceeded`], its KV pages returning to the
+    /// pool immediately (like cancellation).
+    pub deadline_ms: Option<u64>,
 }
 
 impl GenerationParams {
@@ -66,6 +127,8 @@ impl GenerationParams {
             max_new_tokens: 32,
             sampling: Sampling::Greedy,
             stop_token: None,
+            priority: Priority::Interactive,
+            deadline_ms: None,
         }
     }
 
@@ -81,6 +144,16 @@ impl GenerationParams {
 
     pub fn stop_at(mut self, token: u16) -> GenerationParams {
         self.stop_token = Some(token);
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> GenerationParams {
+        self.priority = p;
+        self
+    }
+
+    pub fn deadline(mut self, ms: u64) -> GenerationParams {
+        self.deadline_ms = Some(ms);
         self
     }
 
@@ -110,6 +183,8 @@ impl GenerationParams {
             max_new_tokens: self.max_new_tokens,
             sampling: self.sampling,
             stop_token: self.stop_token,
+            priority: self.priority,
+            deadline_ms: self.deadline_ms,
         }
     }
 }
@@ -125,6 +200,9 @@ pub enum FinishReason {
     CacheFull,
     /// the caller cancelled the request mid-flight
     Cancelled,
+    /// the request's server-side deadline lapsed (queued or mid-stream);
+    /// its KV pages were freed like a cancellation
+    DeadlineExceeded,
 }
 
 impl FinishReason {
@@ -134,6 +212,7 @@ impl FinishReason {
             FinishReason::MaxTokens => "max_tokens",
             FinishReason::CacheFull => "cache_full",
             FinishReason::Cancelled => "cancelled",
+            FinishReason::DeadlineExceeded => "deadline_exceeded",
         }
     }
 
@@ -143,6 +222,7 @@ impl FinishReason {
             "max_tokens" => FinishReason::MaxTokens,
             "cache_full" => FinishReason::CacheFull,
             "cancelled" => FinishReason::Cancelled,
+            "deadline_exceeded" => FinishReason::DeadlineExceeded,
             _ => return None,
         })
     }
@@ -348,10 +428,17 @@ mod tests {
 
     #[test]
     fn params_builder_and_validation() {
-        let p = GenerationParams::new(vec![1, 2, 3]).max_new(8).stop_at(7);
+        let p = GenerationParams::new(vec![1, 2, 3]).max_new(8).stop_at(7)
+            .priority(Priority::Batch).deadline(250);
         assert_eq!(p.max_new_tokens, 8);
         assert_eq!(p.stop_token, Some(7));
+        assert_eq!(p.priority, Priority::Batch);
+        assert_eq!(p.deadline_ms, Some(250));
         assert!(p.validate().is_ok());
+        // defaults: interactive, no deadline
+        let d = GenerationParams::new(vec![1]);
+        assert_eq!(d.priority, Priority::Interactive);
+        assert_eq!(d.deadline_ms, None);
 
         assert!(matches!(GenerationParams::new(vec![]).validate(),
                          Err(SubmitError::InvalidParams(_))));
@@ -365,10 +452,24 @@ mod tests {
     #[test]
     fn finish_reason_roundtrip() {
         for r in [FinishReason::Stop, FinishReason::MaxTokens,
-                  FinishReason::CacheFull, FinishReason::Cancelled] {
+                  FinishReason::CacheFull, FinishReason::Cancelled,
+                  FinishReason::DeadlineExceeded] {
             assert_eq!(FinishReason::parse(r.as_str()), Some(r));
         }
         assert_eq!(FinishReason::parse("nope"), None);
+    }
+
+    #[test]
+    fn priority_roundtrip_and_weights() {
+        for p in [Priority::Interactive, Priority::Batch] {
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        // the scheduler's invariants: interactive outweighs batch, and
+        // neither class has weight 0 (which would starve it outright)
+        assert!(Priority::Interactive.weight() > Priority::Batch.weight());
+        assert!(Priority::Batch.weight() > 0);
+        assert_ne!(Priority::Interactive.index(), Priority::Batch.index());
     }
 
     #[test]

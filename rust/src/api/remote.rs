@@ -32,6 +32,7 @@ struct RemoteCore {
     /// Ids whose handle was dropped undrained: frames are discarded.
     released: HashSet<RequestId>,
     stats: VecDeque<Value>,
+    metrics: VecDeque<Value>,
     saw_shutdown: bool,
 }
 
@@ -74,6 +75,7 @@ impl RemoteCore {
                     self.rejected.insert(cid, error);
                 }
                 ServerFrame::Stats(v) => self.stats.push_back(v),
+                ServerFrame::Metrics(v) => self.metrics.push_back(v),
                 ServerFrame::Error { id, error } => {
                     // Id-tagged advisory errors are never injected into a
                     // request's stream — they could arrive after the real
@@ -144,6 +146,7 @@ impl Client {
                 rejected: HashMap::new(),
                 released: HashSet::new(),
                 stats: VecDeque::new(),
+                metrics: VecDeque::new(),
                 saw_shutdown: false,
             })),
             next_cid: Cell::new(1),
@@ -184,7 +187,9 @@ impl Client {
         Ok(outcome_to_value(&out))
     }
 
-    /// Engine counters (`{"v":2,"event":"stats", ...}` frame payload).
+    /// Engine counters (`{"v":2,"event":"stats", ...}` frame payload) —
+    /// flat cluster-wide aggregates including live queue depth and
+    /// active-slot count.
     pub fn stats(&mut self) -> Result<Value> {
         let mut core = self.core.borrow_mut();
         core.send(&wire::encode_cmd("stats"))?;
@@ -192,6 +197,17 @@ impl Client {
             core.pump_one()?;
         }
         Ok(core.stats.pop_front().unwrap())
+    }
+
+    /// Full cluster metrics (`{"v":2,"event":"metrics", ...}`) with the
+    /// per-shard breakdown under `"per_shard"`.
+    pub fn metrics(&mut self) -> Result<Value> {
+        let mut core = self.core.borrow_mut();
+        core.send(&wire::encode_cmd("metrics"))?;
+        while core.metrics.is_empty() {
+            core.pump_one()?;
+        }
+        Ok(core.metrics.pop_front().unwrap())
     }
 
     /// Ask the server to shut down (engine + accept loops exit); resolves

@@ -21,11 +21,20 @@
 //!
 //! ```text
 //! {"v":2,"cmd":"submit","cid":3,"prompt":[1,2,3],"max_new_tokens":16,
-//!  "temperature":0.8,"top_k":4,"stop_token":9}
+//!  "temperature":0.8,"top_k":4,"stop_token":9,
+//!  "priority":"batch","deadline_ms":500}
 //! {"v":2,"cmd":"cancel","id":7}
 //! {"v":2,"cmd":"stats"}
+//! {"v":2,"cmd":"metrics"}
 //! {"v":2,"cmd":"shutdown"}
 //! ```
+//!
+//! `priority` (absent ⇒ `"interactive"`) selects the fair-share admission
+//! class; `deadline_ms` (absent ⇒ none) is a server-side deadline from
+//! submission — an expired request finishes with reason
+//! `"deadline_exceeded"`.  `stats` answers flat cluster aggregates
+//! (including live `queue_depth` / `active_slots`); `metrics` adds the
+//! full per-shard breakdown (`{"v":2,"event":"metrics","per_shard":[..]}`).
 //!
 //! `cid` is a client-chosen correlation id echoed on the `queued` /
 //! `rejected` frame so pipelined submits can be matched to server ids.
@@ -34,8 +43,8 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::{FinishReason, GenerationEvent, GenerationParams, RequestId,
-            RequestStats, SubmitError, Sampling};
+use super::{FinishReason, GenerationEvent, GenerationParams, Priority,
+            RequestId, RequestStats, SubmitError, Sampling};
 use crate::util::json::{self, n, obj, Value};
 
 pub const PROTOCOL_VERSION: u32 = 2;
@@ -105,6 +114,11 @@ pub fn encode_stats(fields: Vec<(&str, Value)>) -> Value {
     tag(fields, "stats")
 }
 
+/// Full per-shard metrics reply (`{"cmd":"metrics"}` answer).
+pub fn encode_metrics(fields: Vec<(&str, Value)>) -> Value {
+    tag(fields, "metrics")
+}
+
 pub fn encode_error(id: Option<RequestId>, error: &str) -> Value {
     let mut pairs = Vec::new();
     if let Some(id) = id {
@@ -135,6 +149,12 @@ pub fn encode_submit(cid: u64, p: &GenerationParams) -> Value {
     }
     if let Some(st) = p.stop_token {
         pairs.push(("stop_token", n(st as f64)));
+    }
+    if p.priority != Priority::Interactive {
+        pairs.push(("priority", json::s(p.priority.as_str())));
+    }
+    if let Some(d) = p.deadline_ms {
+        pairs.push(("deadline_ms", n(d as f64)));
     }
     obj(pairs)
 }
@@ -168,6 +188,20 @@ pub fn decode_params(v: &Value) -> Result<GenerationParams> {
     };
     let mut p = GenerationParams::new(prompt).max_new(max_new).sampling(sampling);
     p.stop_token = v.get("stop_token").and_then(|x| x.as_usize()).map(|t| t as u16);
+    if let Some(pv) = v.get("priority") {
+        let pr = pv.as_str().context("priority must be a string")?;
+        p.priority = Priority::parse(pr)
+            .with_context(|| format!("unknown priority '{pr}' \
+                                      (interactive|batch)"))?;
+    }
+    if let Some(dv) = v.get("deadline_ms") {
+        let d = dv.as_f64().context("deadline_ms must be a number")?;
+        // `as usize` would silently saturate -1 to 0 = instant expiry
+        if !(d >= 0.0) {
+            bail!("deadline_ms must be non-negative, got {d}");
+        }
+        p.deadline_ms = Some(d as u64);
+    }
     Ok(p)
 }
 
@@ -177,6 +211,8 @@ pub enum ClientFrame {
     Submit { cid: u64, params: GenerationParams },
     Cancel { id: RequestId },
     Stats,
+    /// Full per-shard cluster metrics.
+    Metrics,
     Shutdown,
     /// v1 compatibility: bare `{"prompt": ...}` one-shot generation.
     LegacyGenerate { params: GenerationParams },
@@ -193,6 +229,7 @@ pub fn parse_client_frame(v: &Value) -> Result<ClientFrame> {
                 .context("cancel frame needs an id")? as u64,
         }),
         Some("stats") => Ok(ClientFrame::Stats),
+        Some("metrics") => Ok(ClientFrame::Metrics),
         Some("shutdown") => Ok(ClientFrame::Shutdown),
         Some(other) => bail!("unknown cmd '{other}'"),
         None => {
@@ -211,6 +248,8 @@ pub enum ServerFrame {
     Event { id: RequestId, cid: Option<u64>, event: GenerationEvent },
     Rejected { cid: u64, error: SubmitError },
     Stats(Value),
+    /// Per-shard cluster metrics payload.
+    Metrics(Value),
     Error { id: Option<RequestId>, error: String },
     Shutdown,
 }
@@ -279,6 +318,7 @@ pub fn parse_server_frame(v: &Value) -> Result<ServerFrame> {
             ServerFrame::Rejected { cid, error }
         }
         "stats" => ServerFrame::Stats(v.clone()),
+        "metrics" => ServerFrame::Metrics(v.clone()),
         "error" => ServerFrame::Error {
             id: v.get("id").and_then(|i| i.as_usize()).map(|i| i as u64),
             error: v.get("error").and_then(|e| e.as_str())
@@ -389,10 +429,68 @@ mod tests {
         }
         assert!(matches!(parse_client_frame(&reparse(&encode_cmd("stats"))),
                          Ok(ClientFrame::Stats)));
+        assert!(matches!(parse_client_frame(&reparse(&encode_cmd("metrics"))),
+                         Ok(ClientFrame::Metrics)));
         assert!(matches!(parse_client_frame(&reparse(&encode_cmd("shutdown"))),
                          Ok(ClientFrame::Shutdown)));
         assert!(matches!(parse_server_frame(&reparse(&encode_shutdown_ack())),
                          Ok(ServerFrame::Shutdown)));
+        let mf = reparse(&encode_metrics(vec![("shards", n(2.0))]));
+        match parse_server_frame(&mf).unwrap() {
+            ServerFrame::Metrics(v) => {
+                assert_eq!(v.get("shards").unwrap().as_usize(), Some(2));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn priority_and_deadline_roundtrip() {
+        let p = GenerationParams::new(vec![1, 2])
+            .priority(Priority::Batch)
+            .deadline(750);
+        match parse_client_frame(&reparse(&encode_submit(1, &p))).unwrap() {
+            ClientFrame::Submit { params, .. } => {
+                assert_eq!(params.priority, Priority::Batch);
+                assert_eq!(params.deadline_ms, Some(750));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // absent fields fall back to interactive / no deadline — the v1
+        // and pre-scheduler v2 submit shapes stay valid
+        let bare = json::parse(r#"{"cmd":"submit","prompt":[3]}"#).unwrap();
+        match parse_client_frame(&bare).unwrap() {
+            ClientFrame::Submit { params, .. } => {
+                assert_eq!(params.priority, Priority::Interactive);
+                assert_eq!(params.deadline_ms, None);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // unknown class is a parse error, not a silent default
+        let bad = json::parse(
+            r#"{"cmd":"submit","prompt":[3],"priority":"urgent"}"#).unwrap();
+        assert!(parse_client_frame(&bad).is_err());
+        // so are wrong-typed fields — a stringified deadline must not
+        // silently become "no deadline"
+        let bad = json::parse(
+            r#"{"cmd":"submit","prompt":[3],"priority":1}"#).unwrap();
+        assert!(parse_client_frame(&bad).is_err());
+        let bad = json::parse(
+            r#"{"cmd":"submit","prompt":[3],"deadline_ms":"500"}"#).unwrap();
+        assert!(parse_client_frame(&bad).is_err());
+        // a negative deadline must not saturate to 0 (= instant expiry)
+        let bad = json::parse(
+            r#"{"cmd":"submit","prompt":[3],"deadline_ms":-1}"#).unwrap();
+        assert!(parse_client_frame(&bad).is_err());
+        // the deadline-exceeded terminal crosses the wire intact
+        let ev = GenerationEvent::Finished {
+            reason: FinishReason::DeadlineExceeded,
+            stats: RequestStats::default(),
+        };
+        match parse_server_frame(&reparse(&encode_event(4, &ev, None))).unwrap() {
+            ServerFrame::Event { event, .. } => assert_eq!(event, ev),
+            other => panic!("wrong frame {other:?}"),
+        }
     }
 
     #[test]

@@ -310,4 +310,86 @@ mod tests {
         });
         assert_eq!(count.load(Ordering::Relaxed), 9);
     }
+
+    /// A panicking task on an inline lane (single-lane pool: every chunk
+    /// runs on the submitter) must unwind to the caller and leave the
+    /// pool fully usable.  Worker-lane panics abort the process by design
+    /// (see `worker_loop`), so this is the *recoverable* panic surface.
+    #[test]
+    fn inline_task_panic_leaves_pool_reusable() {
+        let pool = WorkerPool::new(1);
+        let before = AtomicUsize::new(0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, &|i| {
+                if i == 2 {
+                    panic!("task boom");
+                }
+                before.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // the pool is not poisoned: subsequent jobs run every chunk
+        let count = AtomicUsize::new(0);
+        pool.run(7, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 7);
+    }
+
+    /// On a multi-lane pool a single-chunk job also runs inline on the
+    /// submitting lane; its panic must not wedge the workers or poison
+    /// the submit lock for later multi-chunk jobs.
+    #[test]
+    fn submitter_panic_on_multi_lane_pool_recovers() {
+        let pool = WorkerPool::new(4);
+        for round in 0..3 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.run(1, &|_| panic!("submitter boom {round}"));
+            }));
+            assert!(r.is_err());
+            let hits: Vec<AtomicUsize> =
+                (0..32).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(32, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1,
+                           "round {round} chunk {i}");
+            }
+        }
+    }
+
+    /// The cluster spins up (and tears down) one pool per shard, so
+    /// repeated shutdown/re-create cycles must neither leak workers nor
+    /// lose work: every cycle's pool distributes all chunks and `drop`
+    /// joins its threads before the next cycle starts.
+    #[test]
+    fn repeated_shutdown_recreate_cycles() {
+        for cycle in 0..12u64 {
+            let pool = WorkerPool::new(3);
+            let total = AtomicU64::new(0);
+            pool.run(8, &|i| {
+                total.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), 36, "cycle {cycle}");
+            // second job on the same pool (worker reuse inside a cycle)
+            let n = AtomicUsize::new(0);
+            pool.run(5, &|_| {
+                n.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(n.load(Ordering::Relaxed), 5, "cycle {cycle}");
+            drop(pool); // joins both workers
+        }
+        // pools dropped without ever running a job must also shut down
+        for _ in 0..8 {
+            let _idle = WorkerPool::new(4);
+        }
+        // and a fresh pool after all the churn still works
+        let pool = WorkerPool::new(3);
+        let count = AtomicUsize::new(0);
+        pool.run(16, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 16);
+    }
 }

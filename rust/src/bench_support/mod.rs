@@ -4,6 +4,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::api::{GenerationEvent, RequestHandle};
 use crate::coordinator::runner::{CalibStats, QuantSpec, Runner};
 use crate::model::corpus::{load_probes, Corpus, ProbeTask};
 use crate::model::Weights;
@@ -82,6 +83,57 @@ impl Artifacts {
         Runner::collect_stats(&engine, &self.weights, rotated,
                               self.corpus.split("calib")?, windows)
     }
+}
+
+/// Timing-free signature of one generation event — what the 1-shard
+/// cluster ≡ `LocalSession` parity checks compare (tick scheduling
+/// differs by design, so `ttft`/`decode` timings are excluded; tokens,
+/// indices, finish reason and counts must match exactly).
+pub fn event_signature(ev: &GenerationEvent) -> String {
+    match ev {
+        GenerationEvent::Queued => "queued".into(),
+        GenerationEvent::Started { .. } => "started".into(),
+        GenerationEvent::Token { token, index } => format!("tok {token}@{index}"),
+        GenerationEvent::Finished { reason, stats } => format!(
+            "fin {reason} gen={} plen={}", stats.generated, stats.prompt_len),
+        GenerationEvent::Failed { error } => format!("fail {error}"),
+    }
+}
+
+/// Drain every handle to its terminal event, collecting each request's
+/// [`event_signature`] stream (shared by `benches/serving_cluster.rs`
+/// `--check` and the `api_stream` parity test).
+pub fn drain_event_signatures(handles: &[RequestHandle])
+                              -> Result<Vec<Vec<String>>> {
+    handles.iter().map(|h| {
+        let mut evs = Vec::new();
+        while let Some(ev) = h.next_event()? {
+            evs.push(event_signature(&ev));
+        }
+        Ok(evs)
+    }).collect()
+}
+
+/// Drained outcomes of one scheduling class: raw TTFT samples (unsorted)
+/// plus total generated tokens.  Feed the samples to
+/// [`crate::cluster::LatencySummary::of`] for mean/p95.
+pub struct DrainedClass {
+    pub ttfts: Vec<f64>,
+    pub tokens: usize,
+}
+
+/// Block until every handle reaches its terminal event, collecting the
+/// class's TTFT samples and token count (shared by
+/// `benches/serving_cluster.rs` and `quarot cluster-bench`).
+pub fn drain_class(handles: &[RequestHandle]) -> Result<DrainedClass> {
+    let mut ttfts = Vec::with_capacity(handles.len());
+    let mut tokens = 0usize;
+    for h in handles {
+        let out = h.wait()?;
+        ttfts.push(out.stats.ttft_ms);
+        tokens += out.tokens.len();
+    }
+    Ok(DrainedClass { ttfts, tokens })
 }
 
 /// Write a rendered table into bench_out/<name>.txt (and echo to stdout).

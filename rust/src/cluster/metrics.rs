@@ -1,0 +1,375 @@
+//! Runtime metrics registry for the sharded serving cluster.
+//!
+//! Two shapes, both cheap snapshots (no background aggregation thread):
+//!
+//! * [`ShardMetrics`] — one engine shard's live gauges (queue depth,
+//!   active slots, KV-page occupancy) and lifetime counters (retire
+//!   reasons, decode throughput, average TTFT).  Built by the shard's
+//!   tick thread straight off its `GenerationEngine`.
+//! * [`ClusterMetrics`] — every shard's snapshot plus cluster-wide
+//!   aggregates.  This is what the v2 wire `stats` frame (summary) and
+//!   the `{"cmd":"metrics"}` reply (full, per-shard) serialize, and what
+//!   `quarot cluster-bench` renders as a table.
+
+use crate::coordinator::batcher::GenerationEngine;
+use crate::coordinator::kvcache::PoolStats;
+use crate::util::bench::Table;
+use crate::util::json::{n, obj, Value};
+
+/// Mean / p95 over a batch of latency samples — the one reduction the
+/// bench harnesses and `cluster-bench` share (nearest-rank p95 on the
+/// sorted samples).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    pub mean_ms: f64,
+    pub p95_ms: f64,
+}
+
+impl LatencySummary {
+    /// Sorts `samples` ascending in place; empty input yields zeros.
+    pub fn of(samples: &mut [f64]) -> LatencySummary {
+        if samples.is_empty() {
+            return LatencySummary::default();
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // nearest-rank: the ceil(0.95·n)-th smallest sample (1-based)
+        let rank = (samples.len() * 95).div_ceil(100);
+        LatencySummary {
+            mean_ms: samples.iter().sum::<f64>() / samples.len() as f64,
+            p95_ms: samples[rank - 1],
+        }
+    }
+}
+
+/// Point-in-time snapshot of one engine shard.
+#[derive(Clone, Debug, Default)]
+pub struct ShardMetrics {
+    pub shard: usize,
+    /// false for a shard whose engine failed to construct or whose tick
+    /// thread has exited
+    pub alive: bool,
+    pub queue_depth: usize,
+    pub active_slots: usize,
+    pub queue_bound: usize,
+    pub pool: PoolStats,
+    pub completed: usize,
+    pub cancelled: usize,
+    pub failed: usize,
+    pub deadline_exceeded: usize,
+    pub decode_steps: usize,
+    pub decode_tokens: usize,
+    pub tokens_per_sec: f64,
+    pub ttft_sum_ms: f64,
+    pub ttft_count: usize,
+    pub peak_cache_bytes: usize,
+    pub peak_cache_fp16_bytes: usize,
+}
+
+impl ShardMetrics {
+    pub fn from_engine(shard: usize, engine: &GenerationEngine) -> ShardMetrics {
+        let st = &engine.stats;
+        ShardMetrics {
+            shard,
+            alive: true,
+            queue_depth: engine.queue_depth(),
+            active_slots: engine.active_slot_count(),
+            queue_bound: engine.queue_bound(),
+            pool: engine.pool_stats(),
+            completed: st.completed,
+            cancelled: st.cancelled,
+            failed: st.failed,
+            deadline_exceeded: st.deadline_exceeded,
+            decode_steps: st.decode_steps,
+            decode_tokens: st.decode_tokens,
+            tokens_per_sec: st.tokens_per_sec(),
+            ttft_sum_ms: st.ttft_sum_ms,
+            ttft_count: st.ttft_count,
+            peak_cache_bytes: st.peak_cache_bytes,
+            peak_cache_fp16_bytes: st.peak_cache_fp16_bytes,
+        }
+    }
+
+    /// Placeholder row for a shard that cannot answer (engine failed to
+    /// build, thread gone).
+    pub fn dead(shard: usize) -> ShardMetrics {
+        ShardMetrics { shard, ..Default::default() }
+    }
+
+    pub fn avg_ttft_ms(&self) -> f64 {
+        if self.ttft_count == 0 {
+            return 0.0;
+        }
+        self.ttft_sum_ms / self.ttft_count as f64
+    }
+
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("shard", n(self.shard as f64)),
+            ("alive", Value::Bool(self.alive)),
+            ("queue_depth", n(self.queue_depth as f64)),
+            ("active_slots", n(self.active_slots as f64)),
+            ("queue_bound", n(self.queue_bound as f64)),
+            ("pages_total", n(self.pool.pages_total as f64)),
+            ("pages_in_use", n(self.pool.in_use as f64)),
+            ("pages_high_water", n(self.pool.high_water as f64)),
+            ("completed", n(self.completed as f64)),
+            ("cancelled", n(self.cancelled as f64)),
+            ("failed", n(self.failed as f64)),
+            ("deadline_exceeded", n(self.deadline_exceeded as f64)),
+            ("decode_steps", n(self.decode_steps as f64)),
+            ("decode_tokens", n(self.decode_tokens as f64)),
+            ("tokens_per_sec", n(self.tokens_per_sec)),
+            ("avg_ttft_ms", n(self.avg_ttft_ms())),
+            ("peak_cache_bytes", n(self.peak_cache_bytes as f64)),
+            ("peak_cache_fp16_bytes", n(self.peak_cache_fp16_bytes as f64)),
+        ])
+    }
+}
+
+/// All shards plus cluster-wide aggregates.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterMetrics {
+    /// per-shard admission bound (the cluster-level bound is this times
+    /// the number of live shards)
+    pub queue_bound: usize,
+    pub shards: Vec<ShardMetrics>,
+}
+
+impl ClusterMetrics {
+    fn sum(&self, f: impl Fn(&ShardMetrics) -> usize) -> usize {
+        self.shards.iter().map(f).sum()
+    }
+
+    pub fn live_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.alive).count()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.sum(|s| s.queue_depth)
+    }
+
+    pub fn active_slots(&self) -> usize {
+        self.sum(|s| s.active_slots)
+    }
+
+    pub fn completed(&self) -> usize {
+        self.sum(|s| s.completed)
+    }
+
+    pub fn cancelled(&self) -> usize {
+        self.sum(|s| s.cancelled)
+    }
+
+    pub fn failed(&self) -> usize {
+        self.sum(|s| s.failed)
+    }
+
+    pub fn deadline_exceeded(&self) -> usize {
+        self.sum(|s| s.deadline_exceeded)
+    }
+
+    pub fn pool_pages_in_use(&self) -> usize {
+        self.sum(|s| s.pool.in_use)
+    }
+
+    pub fn pool_pages_total(&self) -> usize {
+        self.sum(|s| s.pool.pages_total)
+    }
+
+    /// Sum of per-shard high-water marks.  Each shard sizes its own pool,
+    /// so this is the total page provisioning the observed load required —
+    /// an *upper bound* on any concurrent cluster-wide peak (the shards
+    /// need not have peaked at the same time; per-shard values are in
+    /// `per_shard`).  `peak_cache_bytes` aggregates the same way.
+    pub fn kv_high_water(&self) -> usize {
+        self.sum(|s| s.pool.high_water)
+    }
+
+    /// Aggregate decode throughput: shards decode in parallel, so rates
+    /// add.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.shards.iter().map(|s| s.tokens_per_sec).sum()
+    }
+
+    /// TTFT averaged over every request that started, across shards.
+    pub fn avg_ttft_ms(&self) -> f64 {
+        let count: usize = self.sum(|s| s.ttft_count);
+        if count == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self.shards.iter().map(|s| s.ttft_sum_ms).sum();
+        sum / count as f64
+    }
+
+    /// Flat cluster-wide aggregates — the v2 `stats` frame payload.  The
+    /// pre-cluster keys (`completed`, `pool_pages_in_use`, `queue_bound`,
+    /// ...) keep their meaning; `queue_depth` / `active_slots` / `shards`
+    /// / `deadline_exceeded` / `kv_high_water` / `avg_ttft_ms` are the
+    /// live-load additions.
+    pub fn summary_pairs(&self) -> Vec<(&'static str, Value)> {
+        vec![
+            ("shards", n(self.shards.len() as f64)),
+            ("live_shards", n(self.live_shards() as f64)),
+            ("queue_bound", n(self.queue_bound as f64)),
+            ("queue_depth", n(self.queue_depth() as f64)),
+            ("active_slots", n(self.active_slots() as f64)),
+            ("completed", n(self.completed() as f64)),
+            ("cancelled", n(self.cancelled() as f64)),
+            ("failed", n(self.failed() as f64)),
+            ("deadline_exceeded", n(self.deadline_exceeded() as f64)),
+            ("decode_steps", n(self.sum(|s| s.decode_steps) as f64)),
+            ("tokens_per_sec", n(self.tokens_per_sec())),
+            ("avg_ttft_ms", n(self.avg_ttft_ms())),
+            ("peak_cache_bytes", n(self.sum(|s| s.peak_cache_bytes) as f64)),
+            ("peak_cache_fp16_bytes",
+             n(self.sum(|s| s.peak_cache_fp16_bytes) as f64)),
+            ("pool_pages_in_use", n(self.pool_pages_in_use() as f64)),
+            ("pool_pages_total", n(self.pool_pages_total() as f64)),
+            ("kv_high_water", n(self.kv_high_water() as f64)),
+        ]
+    }
+
+    /// Summary plus the per-shard breakdown — the `{"cmd":"metrics"}`
+    /// reply payload.
+    pub fn full_pairs(&self) -> Vec<(&'static str, Value)> {
+        let mut pairs = self.summary_pairs();
+        pairs.push(("per_shard",
+                    Value::Arr(self.shards.iter()
+                               .map(|s| s.to_value())
+                               .collect())));
+        pairs
+    }
+
+    /// Human-readable per-shard table (the `cluster-bench` readout).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "Cluster shards — live load and lifetime counters",
+            &["shard", "alive", "queue", "active", "pages", "hi-water",
+              "done", "ddl", "cxl", "fail", "tok/s", "ttft ms"]);
+        for s in &self.shards {
+            t.row(vec![
+                format!("{}", s.shard),
+                if s.alive { "yes".into() } else { "NO".into() },
+                format!("{}", s.queue_depth),
+                format!("{}", s.active_slots),
+                format!("{}/{}", s.pool.in_use, s.pool.pages_total),
+                format!("{}", s.pool.high_water),
+                format!("{}", s.completed),
+                format!("{}", s.deadline_exceeded),
+                format!("{}", s.cancelled),
+                format!("{}", s.failed),
+                format!("{:.1}", s.tokens_per_sec),
+                format!("{:.2}", s.avg_ttft_ms()),
+            ]);
+        }
+        t.row(vec![
+            "Σ".into(),
+            format!("{}/{}", self.live_shards(), self.shards.len()),
+            format!("{}", self.queue_depth()),
+            format!("{}", self.active_slots()),
+            format!("{}/{}", self.pool_pages_in_use(), self.pool_pages_total()),
+            format!("{}", self.kv_high_water()),
+            format!("{}", self.completed()),
+            format!("{}", self.deadline_exceeded()),
+            format!("{}", self.cancelled()),
+            format!("{}", self.failed()),
+            format!("{:.1}", self.tokens_per_sec()),
+            format!("{:.2}", self.avg_ttft_ms()),
+        ]);
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(i: usize, q: usize, a: usize, done: usize) -> ShardMetrics {
+        ShardMetrics {
+            shard: i,
+            alive: true,
+            queue_depth: q,
+            active_slots: a,
+            queue_bound: 8,
+            pool: PoolStats { pages_total: 100, in_use: 10 * i, high_water: 20 },
+            completed: done,
+            tokens_per_sec: 50.0,
+            ttft_sum_ms: 30.0 * done as f64,
+            ttft_count: done,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn aggregates_sum_across_shards() {
+        let m = ClusterMetrics {
+            queue_bound: 8,
+            shards: vec![shard(0, 1, 2, 4), shard(1, 3, 1, 6),
+                         ShardMetrics::dead(2)],
+        };
+        assert_eq!(m.live_shards(), 2);
+        assert_eq!(m.queue_depth(), 4);
+        assert_eq!(m.active_slots(), 3);
+        assert_eq!(m.completed(), 10);
+        assert_eq!(m.pool_pages_in_use(), 10);
+        assert_eq!(m.pool_pages_total(), 200);
+        assert!((m.tokens_per_sec() - 100.0).abs() < 1e-9);
+        assert!((m.avg_ttft_ms() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_keeps_pre_cluster_stats_keys() {
+        // the wire `stats` frame consumers (serve_e2e, older clients) read
+        // these keys — renaming them is a protocol break
+        let m = ClusterMetrics { queue_bound: 8, shards: vec![shard(0, 0, 0, 1)] };
+        let v = obj(m.summary_pairs());
+        for key in ["completed", "cancelled", "failed", "tokens_per_sec",
+                    "peak_cache_bytes", "peak_cache_fp16_bytes",
+                    "pool_pages_in_use", "queue_bound",
+                    // live-load additions
+                    "queue_depth", "active_slots", "shards",
+                    "deadline_exceeded"] {
+            assert!(v.get(key).is_some(), "summary missing key {key}");
+        }
+    }
+
+    #[test]
+    fn full_pairs_carry_per_shard_rows() {
+        let m = ClusterMetrics {
+            queue_bound: 4,
+            shards: vec![shard(0, 0, 1, 2), shard(1, 1, 0, 3)],
+        };
+        let v = obj(m.full_pairs());
+        let rows = v.get("per_shard").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("shard").unwrap().as_usize(), Some(1));
+        assert_eq!(rows[1].get("completed").unwrap().as_usize(), Some(3));
+        // the render path must not panic and must mention every shard
+        let rendered = m.render();
+        assert!(rendered.contains("Σ"));
+    }
+
+    #[test]
+    fn latency_summary_sorts_and_reduces() {
+        let mut samples = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        let s = LatencySummary::of(&mut samples);
+        assert_eq!(samples, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((s.mean_ms - 3.0).abs() < 1e-12);
+        // nearest-rank p95 of 5 samples = ceil(4.75) = 5th = the max —
+        // small batches must not understate their tail
+        assert_eq!(s.p95_ms, 5.0);
+        let mut twenty: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        assert_eq!(LatencySummary::of(&mut twenty).p95_ms, 19.0);
+        let empty = LatencySummary::of(&mut []);
+        assert_eq!((empty.mean_ms, empty.p95_ms), (0.0, 0.0));
+    }
+
+    #[test]
+    fn empty_cluster_metrics_are_all_zero() {
+        let m = ClusterMetrics::default();
+        assert_eq!(m.queue_depth(), 0);
+        assert_eq!(m.tokens_per_sec(), 0.0);
+        assert_eq!(m.avg_ttft_ms(), 0.0);
+        assert_eq!(m.live_shards(), 0);
+    }
+}

@@ -1,0 +1,595 @@
+//! Sharded serving cluster: N engine shards behind one
+//! [`InferenceService`] front.
+//!
+//! Each shard is a dedicated tick thread that *owns* a
+//! [`GenerationEngine`] (PJRT executables are not `Send`, so engines are
+//! built by the factory **inside** their thread and never move).  The
+//! shard drains its control channel, runs the continuous-batching tick
+//! whenever work is pending, streams every [`GenerationEvent`] into one
+//! shared cluster channel, and publishes live load gauges (queue depth,
+//! active slots, KV-page occupancy) after every message and tick.
+//!
+//! [`ClusterService`] is the single front door:
+//!
+//! * **router** — a submit goes to the least-loaded *live* shard (queue
+//!   depth, then active slots, then KV-page pressure).  A shard at its
+//!   admission bound answers `QueueFull` and the router tries the next;
+//!   only when **every** live shard is at bound does the caller see the
+//!   cluster-level [`SubmitError::QueueFull`] — the cluster's
+//!   backpressure signal.
+//! * **scheduler** — per-shard admission is fair-share across
+//!   [`crate::api::Priority`] classes and the engine tick retires
+//!   deadline-expired requests with `FinishReason::DeadlineExceeded`
+//!   (both live in `coordinator::batcher`; the cluster just carries the
+//!   request fields through).
+//! * **metrics** — [`ClusterService::metrics`] snapshots every shard into
+//!   a [`metrics::ClusterMetrics`] (wire `stats` / `metrics` frames, the
+//!   `cluster-bench` table).
+//!
+//! A 1-shard cluster is behaviorally identical to
+//! [`crate::api::LocalSession`] for the same seeded requests (asserted in
+//! `rust/tests/api_stream.rs` and `benches/serving_cluster.rs --check`);
+//! the difference is purely that ticks run on the shard thread instead of
+//! the consuming thread.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::api::{EventSource, GenerationEvent, GenerationParams,
+                 InferenceService, RequestHandle, RequestId, SubmitError};
+use crate::coordinator::batcher::{GenerationEngine, Request};
+
+pub mod metrics;
+
+pub use metrics::{ClusterMetrics, LatencySummary, ShardMetrics};
+
+/// Builds one engine per shard, called inside each shard's thread.
+pub type EngineFactory = Arc<dyn Fn() -> Result<GenerationEngine> + Send + Sync>;
+
+/// Cluster-level knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    /// Number of engine shards (≥ 1; each owns its own KV page pool,
+    /// worker-pool lanes and admission queue).
+    pub shards: usize,
+    /// Per-shard admission-queue bound.  The cluster rejects with
+    /// `QueueFull` only once every live shard is at this bound.
+    pub queue_bound: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> ClusterConfig {
+        ClusterConfig { shards: 1, queue_bound: 256 }
+    }
+}
+
+/// Live load gauges one shard publishes for the router (lock-free reads
+/// from the submitting thread).
+#[derive(Default)]
+struct ShardGauges {
+    queue_depth: AtomicUsize,
+    active_slots: AtomicUsize,
+    pages_in_use: AtomicUsize,
+    pages_total: AtomicUsize,
+    alive: AtomicBool,
+}
+
+enum ShardMsg {
+    Submit {
+        req: Request,
+        reply: mpsc::Sender<Result<RequestId, SubmitError>>,
+    },
+    Cancel {
+        id: RequestId,
+        reply: mpsc::Sender<bool>,
+    },
+    Metrics {
+        reply: mpsc::Sender<ShardMetrics>,
+    },
+}
+
+struct Shard {
+    ctl: mpsc::Sender<ShardMsg>,
+    gauges: Arc<ShardGauges>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+fn publish_gauges(engine: &GenerationEngine, g: &ShardGauges) {
+    let ps = engine.pool_stats();
+    g.queue_depth.store(engine.queue_depth(), Ordering::SeqCst);
+    g.active_slots.store(engine.active_slot_count(), Ordering::SeqCst);
+    g.pages_in_use.store(ps.in_use, Ordering::SeqCst);
+    g.pages_total.store(ps.pages_total, Ordering::SeqCst);
+}
+
+fn flush_events(engine: &mut GenerationEngine,
+                tx: &mpsc::Sender<(RequestId, GenerationEvent)>) {
+    for ev in engine.take_events() {
+        // a send error means the ClusterService is gone; events drain
+        // into the void, which is fine — nobody is left to read them
+        let _ = tx.send(ev);
+    }
+}
+
+fn handle_msg(shard_idx: usize, engine: &mut GenerationEngine, msg: ShardMsg,
+              gauges: &ShardGauges) {
+    match msg {
+        ShardMsg::Submit { req, reply } => {
+            let r = engine.try_submit(req);
+            // publish BEFORE replying so the router's next placement
+            // decision always sees this submit reflected in the gauges
+            publish_gauges(engine, gauges);
+            let _ = reply.send(r);
+        }
+        ShardMsg::Cancel { id, reply } => {
+            let hit = engine.cancel(id);
+            publish_gauges(engine, gauges);
+            let _ = reply.send(hit);
+        }
+        ShardMsg::Metrics { reply } => {
+            let _ = reply.send(ShardMetrics::from_engine(shard_idx, engine));
+        }
+    }
+}
+
+/// Clears the shard's `alive` gauge on every exit path — including a
+/// panic unwinding the shard thread (an engine-internal assert, a slice
+/// OOB in a kernel) — so `next_event_for`'s dead-shard detection fires
+/// instead of consumers waiting forever.
+struct AliveGuard(Arc<ShardGauges>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.alive.store(false, Ordering::SeqCst);
+    }
+}
+
+fn shard_loop(shard_idx: usize, factory: EngineFactory, queue_bound: usize,
+              ctl: mpsc::Receiver<ShardMsg>,
+              events: mpsc::Sender<(RequestId, GenerationEvent)>,
+              gauges: Arc<ShardGauges>, shutdown: Arc<AtomicBool>) {
+    let _alive = AliveGuard(gauges.clone());
+    let mut engine = match factory() {
+        Ok(mut e) => {
+            e.set_queue_bound(queue_bound);
+            e
+        }
+        Err(e) => {
+            eprintln!("cluster shard {shard_idx}: engine construction \
+                       failed: {e:#}");
+            gauges.alive.store(false, Ordering::SeqCst);
+            // answer control traffic with typed failures until shutdown,
+            // so a degraded cluster errors instead of hanging
+            while !shutdown.load(Ordering::SeqCst) {
+                match ctl.recv_timeout(Duration::from_millis(20)) {
+                    Ok(ShardMsg::Submit { reply, .. }) => {
+                        let _ = reply.send(Err(SubmitError::Transport(
+                            format!("shard {shard_idx} unavailable"))));
+                    }
+                    Ok(ShardMsg::Cancel { reply, .. }) => {
+                        let _ = reply.send(false);
+                    }
+                    Ok(ShardMsg::Metrics { reply }) => {
+                        let _ = reply.send(ShardMetrics::dead(shard_idx));
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            return;
+        }
+    };
+    publish_gauges(&engine, &gauges);
+    let mut running = true;
+    while running {
+        if shutdown.load(Ordering::SeqCst) {
+            // terminate every in-flight request so each stream still gets
+            // its single terminal event before the channel drops
+            engine.fail_all("cluster shutting down");
+            flush_events(&mut engine, &events);
+            break;
+        }
+        // drain the control channel without blocking; flush after every
+        // message so a cancel's terminal event reaches consumers before
+        // the next (possibly long) decode tick, not after it — the
+        // server's shutdown drain depends on that promptness
+        let mut handled = false;
+        loop {
+            match ctl.try_recv() {
+                Ok(msg) => {
+                    handled = true;
+                    handle_msg(shard_idx, &mut engine, msg, &gauges);
+                    flush_events(&mut engine, &events);
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    running = false;
+                    break;
+                }
+            }
+        }
+        let ticked = engine.pending() > 0;
+        if ticked {
+            if let Err(e) = engine.tick() {
+                engine.fail_all(&format!("engine tick failed: {e:#}"));
+            }
+        }
+        flush_events(&mut engine, &events);
+        publish_gauges(&engine, &gauges);
+        if running && !ticked && !handled {
+            // idle: park on the control channel instead of spinning
+            match ctl.recv_timeout(Duration::from_millis(1)) {
+                Ok(msg) => {
+                    handle_msg(shard_idx, &mut engine, msg, &gauges);
+                    flush_events(&mut engine, &events);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => running = false,
+            }
+        }
+    }
+    // `_alive` drops here, clearing the gauge on normal exit too
+}
+
+struct ClusterCore {
+    shards: Vec<Shard>,
+    events_rx: mpsc::Receiver<(RequestId, GenerationEvent)>,
+    /// Events received but not yet delivered to their handle/consumer.
+    buffered: VecDeque<(RequestId, GenerationEvent)>,
+    /// request id → owning shard; removed once the terminal event arrives.
+    owner: HashMap<RequestId, usize>,
+    /// Ids whose handle was dropped undrained: frames are discarded until
+    /// the terminal event clears the entry.
+    released: HashSet<RequestId>,
+    next_id: u64,
+    queue_bound: usize,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl ClusterCore {
+    fn load_score(g: &ShardGauges) -> u64 {
+        let total = g.pages_total.load(Ordering::SeqCst).max(1);
+        let page_pressure = g.pages_in_use.load(Ordering::SeqCst) * 1000 / total;
+        (g.queue_depth.load(Ordering::SeqCst) as u64) * 1_000_000
+            + (g.active_slots.load(Ordering::SeqCst) as u64) * 1_000
+            + page_pressure as u64
+    }
+
+    fn submit_detached(&mut self, params: GenerationParams)
+                       -> Result<RequestId, SubmitError> {
+        params.validate()?;
+        let mut req = params.into_request();
+        req.id = self.next_id;
+        self.next_id += 1;
+        // place on the least-loaded live shard; fall through the ranking
+        // on per-shard QueueFull / transport failure
+        let mut order: Vec<usize> = (0..self.shards.len())
+            .filter(|&i| self.shards[i].gauges.alive.load(Ordering::SeqCst))
+            .collect();
+        order.sort_by_key(|&i| Self::load_score(&self.shards[i].gauges));
+        if order.is_empty() {
+            return Err(SubmitError::Transport("no live shards".into()));
+        }
+        let mut full = 0usize;
+        let mut last_err = SubmitError::Transport("no shard accepted".into());
+        // Every shard in the ranking gets an *authoritative* probe before
+        // the cluster-level QueueFull verdict: gauges can be a whole
+        // decode tick stale (a shard republishes only after its tick, but
+        // admit() may have drained its queue at the tick's start), so a
+        // gauge-based skip here would reject submits that a live shard
+        // would in fact accept.  The common case costs one probe — the
+        // serial walk only happens when better-ranked shards reject.
+        let mut req = Some(req);
+        for (rank, &si) in order.iter().enumerate() {
+            // the last candidate takes the request by move; earlier
+            // probes clone (a rejected probe needs the request back)
+            let payload = if rank + 1 == order.len() {
+                req.take().unwrap()
+            } else {
+                req.as_ref().unwrap().clone()
+            };
+            let (rtx, rrx) = mpsc::channel();
+            if self.shards[si].ctl
+                .send(ShardMsg::Submit { req: payload, reply: rtx })
+                .is_err()
+            {
+                last_err = SubmitError::Transport(format!("shard {si} gone"));
+                continue;
+            }
+            match rrx.recv() {
+                Ok(Ok(id)) => {
+                    self.owner.insert(id, si);
+                    return Ok(id);
+                }
+                Ok(Err(SubmitError::QueueFull { .. })) => {
+                    full += 1;
+                    continue;
+                }
+                // parameter rejections are shard-independent — surface
+                // them immediately instead of retrying everywhere
+                Ok(Err(e @ SubmitError::InvalidParams(_))) => return Err(e),
+                Ok(Err(e)) => {
+                    last_err = e;
+                    continue;
+                }
+                Err(_) => {
+                    last_err = SubmitError::Transport(
+                        format!("shard {si} dropped the request"));
+                    continue;
+                }
+            }
+        }
+        if full == order.len() {
+            // every live shard is at its bound: the cluster-level
+            // backpressure signal (bound = aggregate admission capacity)
+            Err(SubmitError::QueueFull { bound: self.queue_bound * order.len() })
+        } else {
+            Err(last_err)
+        }
+    }
+
+    /// Buffer-or-discard decision for an arriving event; also clears the
+    /// owner/released bookkeeping on terminals.
+    fn accept_event(&mut self, id: RequestId, ev: &GenerationEvent) -> bool {
+        if ev.is_terminal() {
+            self.owner.remove(&id);
+            if self.released.remove(&id) {
+                return false;
+            }
+        } else if self.released.contains(&id) {
+            return false;
+        }
+        true
+    }
+
+    /// Synthesize a `Failed` terminal for every request owned by a shard
+    /// whose tick thread died without emitting one (a panic unwound it —
+    /// `AliveGuard` cleared the gauge).  The id is marked released so a
+    /// real terminal still in flight cannot deliver a second terminal.
+    /// Shared by both consumption paths: `next_event_for` (handles) and
+    /// `poll_events` (the TCP server's multiplexed drain).
+    fn reap_dead_shards(&mut self) {
+        let dead: Vec<(RequestId, usize)> = self.owner.iter()
+            .filter(|&(_, &si)| {
+                !self.shards[si].gauges.alive.load(Ordering::SeqCst)
+            })
+            .map(|(&id, &si)| (id, si))
+            .collect();
+        for (id, si) in dead {
+            self.owner.remove(&id);
+            self.released.insert(id);
+            self.buffered.push_back((id, GenerationEvent::Failed {
+                error: format!("shard {si} died mid-request"),
+            }));
+        }
+    }
+
+    fn poll_events(&mut self) -> Vec<(RequestId, GenerationEvent)> {
+        while let Ok((id, ev)) = self.events_rx.try_recv() {
+            if self.accept_event(id, &ev) {
+                self.buffered.push_back((id, ev));
+            }
+        }
+        self.reap_dead_shards();
+        self.buffered.drain(..).collect()
+    }
+
+    fn pending(&self) -> usize {
+        self.shards.iter()
+            .map(|s| {
+                s.gauges.queue_depth.load(Ordering::SeqCst)
+                    + s.gauges.active_slots.load(Ordering::SeqCst)
+            })
+            .sum()
+    }
+
+    fn metrics(&self) -> ClusterMetrics {
+        // fan the requests out to every shard first, then collect — the
+        // wait overlaps across shards (one worst-case tick, not N)
+        let pending: Vec<Option<mpsc::Receiver<ShardMetrics>>> = self.shards
+            .iter()
+            .map(|s| {
+                let (rtx, rrx) = mpsc::channel();
+                s.ctl.send(ShardMsg::Metrics { reply: rtx }).ok().map(|_| rrx)
+            })
+            .collect();
+        let shards = pending.into_iter().enumerate()
+            .map(|(i, rrx)| match rrx {
+                // a dead shard thread drops its `rtx`, turning the recv
+                // into an Err instead of a hang
+                Some(rrx) => rrx.recv().unwrap_or_else(|_| ShardMetrics::dead(i)),
+                None => ShardMetrics::dead(i),
+            })
+            .collect();
+        ClusterMetrics { queue_bound: self.queue_bound, shards }
+    }
+}
+
+impl EventSource for ClusterCore {
+    fn next_event_for(&mut self, id: RequestId)
+                      -> Result<Option<GenerationEvent>> {
+        loop {
+            if let Some(pos) = self.buffered.iter().position(|(i, _)| *i == id) {
+                return Ok(self.buffered.remove(pos).map(|(_, ev)| ev));
+            }
+            // terminal already delivered (owner cleared) or unknown id
+            let Some(&si) = self.owner.get(&id) else {
+                return Ok(None);
+            };
+            // drain everything already in flight before concluding the
+            // owner is dead: a shard that exited cleanly sends its real
+            // terminals before clearing `alive`, and those must win
+            let mut drained = false;
+            while let Ok((i, ev)) = self.events_rx.try_recv() {
+                if self.accept_event(i, &ev) {
+                    self.buffered.push_back((i, ev));
+                }
+                drained = true;
+            }
+            if drained {
+                continue;
+            }
+            // checked every iteration, not just on timeout: a busy
+            // sibling shard streaming events within every 50 ms window
+            // must not mask a crashed owner indefinitely.  The reap
+            // buffers a synthetic Failed the loop's next pass delivers
+            // (and marks the id released so a late real terminal cannot
+            // deliver a second one).
+            if !self.shards[si].gauges.alive.load(Ordering::SeqCst) {
+                self.reap_dead_shards();
+                continue;
+            }
+            match self.events_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok((i, ev)) => {
+                    if self.accept_event(i, &ev) {
+                        self.buffered.push_back((i, ev));
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(None),
+            }
+        }
+    }
+
+    fn cancel_request(&mut self, id: RequestId) -> Result<bool> {
+        let Some(&si) = self.owner.get(&id) else {
+            return Ok(false);
+        };
+        let (rtx, rrx) = mpsc::channel();
+        if self.shards[si].ctl.send(ShardMsg::Cancel { id, reply: rtx }).is_err() {
+            return Ok(false);
+        }
+        Ok(rrx.recv().unwrap_or(false))
+    }
+
+    fn release_request(&mut self, id: RequestId) {
+        let had_terminal = self.buffered.iter()
+            .any(|(i, ev)| *i == id && ev.is_terminal());
+        self.buffered.retain(|(i, _)| *i != id);
+        if had_terminal {
+            self.owner.remove(&id);
+        } else if self.owner.contains_key(&id) {
+            let _ = self.cancel_request(id);
+            self.released.insert(id);
+        }
+    }
+}
+
+impl Drop for ClusterCore {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for s in &mut self.shards {
+            if let Some(j) = s.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Multi-shard [`InferenceService`]: one submit/cancel/event surface over
+/// N engine shards.  See the module docs for the router / scheduler /
+/// metrics split.
+pub struct ClusterService {
+    core: Rc<RefCell<ClusterCore>>,
+}
+
+impl ClusterService {
+    /// Spawn `cfg.shards` shard threads, each building its engine via
+    /// `factory`.  Returns immediately — engine construction proceeds on
+    /// the shard threads, and early submits simply wait on their reply.
+    pub fn new(factory: EngineFactory, cfg: ClusterConfig) -> ClusterService {
+        let n = cfg.shards.max(1);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (etx, erx) = mpsc::channel();
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            let (ctx, crx) = mpsc::channel();
+            let gauges = Arc::new(ShardGauges {
+                // optimistic until the factory verdict: a submit that
+                // races construction waits on the shard's reply rather
+                // than failing spuriously
+                alive: AtomicBool::new(true),
+                ..Default::default()
+            });
+            let (f, g, e, sd) = (factory.clone(), gauges.clone(), etx.clone(),
+                                 shutdown.clone());
+            let qb = cfg.queue_bound;
+            let join = std::thread::Builder::new()
+                .name(format!("quarot-shard-{i}"))
+                .spawn(move || shard_loop(i, f, qb, crx, e, g, sd))
+                .expect("spawn shard thread");
+            shards.push(Shard { ctl: ctx, gauges, join: Some(join) });
+        }
+        ClusterService {
+            core: Rc::new(RefCell::new(ClusterCore {
+                shards,
+                events_rx: erx,
+                buffered: VecDeque::new(),
+                owner: HashMap::new(),
+                released: HashSet::new(),
+                next_id: 1,
+                queue_bound: cfg.queue_bound,
+                shutdown,
+            })),
+        }
+    }
+
+    /// Submit and get a [`RequestHandle`] for this request's events.
+    pub fn submit(&self, params: GenerationParams)
+                  -> Result<RequestHandle, SubmitError> {
+        let id = self.core.borrow_mut().submit_detached(params)?;
+        Ok(RequestHandle::new(id, self.core.clone()))
+    }
+
+    /// Submit without a handle — for multiplexed consumers (the TCP
+    /// server) that read every request's events via [`Self::poll_events`].
+    pub fn submit_detached(&self, params: GenerationParams)
+                           -> Result<RequestId, SubmitError> {
+        self.core.borrow_mut().submit_detached(params)
+    }
+
+    /// Drain all buffered events in arrival order (multiplexed mode — do
+    /// not mix with handle-based reads, which would race for the same
+    /// events).
+    pub fn poll_events(&self) -> Vec<(RequestId, GenerationEvent)> {
+        self.core.borrow_mut().poll_events()
+    }
+
+    /// Cancel by id, routed to the owning shard; pages return to that
+    /// shard's pool and the stream terminates with `Finished{Cancelled}`.
+    pub fn cancel(&self, id: RequestId) -> bool {
+        self.core.borrow_mut().cancel_request(id).unwrap_or(false)
+    }
+
+    /// Queued + active requests across all shards (gauge-based; exact
+    /// between ticks).
+    pub fn pending(&self) -> usize {
+        self.core.borrow().pending()
+    }
+
+    pub fn shards(&self) -> usize {
+        self.core.borrow().shards.len()
+    }
+
+    /// Snapshot every shard's live load and lifetime counters.
+    pub fn metrics(&self) -> ClusterMetrics {
+        self.core.borrow().metrics()
+    }
+}
+
+impl InferenceService for ClusterService {
+    fn submit(&mut self, params: GenerationParams)
+              -> Result<RequestHandle, SubmitError> {
+        ClusterService::submit(self, params)
+    }
+
+    fn cancel(&mut self, id: RequestId) -> Result<bool> {
+        Ok(ClusterService::cancel(self, id))
+    }
+}

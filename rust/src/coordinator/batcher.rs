@@ -23,10 +23,11 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::kvcache::{PagePool, SeqCache};
+use super::kvcache::{PagePool, PoolStats, SeqCache};
 use super::runner::{DecodeStaging, Runner};
 use super::sampler::{sample, Sampling};
-use crate::api::{FinishReason, GenerationEvent, RequestStats, SubmitError};
+use crate::api::{FinishReason, GenerationEvent, Priority, RequestStats,
+                 SubmitError};
 use crate::attention::{DecodeF32Seq, DecodeQuantSeq, KvCodes, KvF32View,
                        KvQuantView};
 use crate::backend::pool::SendPtr;
@@ -42,6 +43,123 @@ pub struct Request {
     pub sampling: Sampling,
     /// stop generation at this token (e.g. a synthetic EOS); None = run to max
     pub stop_token: Option<u16>,
+    /// admission class — the fair-share queue schedules across classes
+    pub priority: Priority,
+    /// deadline in ms from enqueue; expired requests (queued or active)
+    /// retire with `FinishReason::DeadlineExceeded`
+    pub deadline_ms: Option<u64>,
+}
+
+fn deadline_expired(req: &Request, enqueued: Instant) -> bool {
+    req.deadline_ms
+        .is_some_and(|d| enqueued.elapsed().as_secs_f64() * 1e3 >= d as f64)
+}
+
+/// Priority-class admission queue: one FIFO lane per [`Priority`] class,
+/// scheduled by weighted deficit round-robin.  With both lanes backlogged
+/// and weights 4:1, pops interleave I,I,B,I,I — Interactive dominates but
+/// Batch is never starved (and an empty competitor hands its share over
+/// entirely).  Within a lane, FIFO order is preserved.
+pub(crate) struct FairQueue {
+    classes: [VecDeque<(Request, Instant)>; Priority::COUNT],
+    credit: [i64; Priority::COUNT],
+}
+
+const CLASS_WEIGHTS: [i64; Priority::COUNT] =
+    [Priority::Interactive.weight(), Priority::Batch.weight()];
+
+impl FairQueue {
+    fn new() -> FairQueue {
+        FairQueue {
+            classes: std::array::from_fn(|_| VecDeque::new()),
+            credit: [0; Priority::COUNT],
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.classes.iter().map(|c| c.len()).sum()
+    }
+
+    fn push_back(&mut self, req: Request, enqueued: Instant) {
+        self.classes[req.priority.index()].push_back((req, enqueued));
+    }
+
+    /// The class the next [`Self::pop`] will serve, plus the credit state
+    /// that pop would leave behind.  Pure — repeated calls are stable, so
+    /// admission can [`Self::peek`] the scheduled request (e.g. for the
+    /// page-admission hold) without charging its class a quantum.
+    fn scheduled(&self) -> Option<(usize, [i64; Priority::COUNT])> {
+        let nonempty: Vec<usize> = (0..Priority::COUNT)
+            .filter(|&c| !self.classes[c].is_empty())
+            .collect();
+        match nonempty.len() {
+            0 => None,
+            // a lone class takes the whole link; reset credits so a long
+            // solo run does not bank unfair priority for later
+            1 => Some((nonempty[0], [0; Priority::COUNT])),
+            _ => {
+                let total: i64 = nonempty.iter().map(|&c| CLASS_WEIGHTS[c]).sum();
+                let mut credit = self.credit;
+                for &c in &nonempty {
+                    credit[c] += CLASS_WEIGHTS[c];
+                }
+                // max credit; ties go to the lower class index (Interactive)
+                let &c = nonempty.iter()
+                    .max_by_key(|&&c| (credit[c], std::cmp::Reverse(c)))
+                    .unwrap();
+                credit[c] -= total;
+                Some((c, credit))
+            }
+        }
+    }
+
+    /// The request the next pop will return, scheduler state untouched.
+    fn peek(&self) -> Option<&(Request, Instant)> {
+        let (c, _) = self.scheduled()?;
+        self.classes[c].front()
+    }
+
+    /// Next request under weighted deficit round-robin.
+    fn pop(&mut self) -> Option<(Request, Instant)> {
+        let (c, credit) = self.scheduled()?;
+        self.credit = credit;
+        self.classes[c].pop_front()
+    }
+
+    fn remove_by_id(&mut self, id: u64) -> Option<(Request, Instant)> {
+        for class in self.classes.iter_mut() {
+            if let Some(pos) = class.iter().position(|(r, _)| r.id == id) {
+                return class.remove(pos);
+            }
+        }
+        None
+    }
+
+    /// Class-order drain (engine teardown — scheduling no longer matters).
+    fn pop_any(&mut self) -> Option<(Request, Instant)> {
+        self.classes.iter_mut().find_map(|c| c.pop_front())
+    }
+
+    fn has_deadlines(&self) -> bool {
+        self.classes.iter().flatten().any(|(r, _)| r.deadline_ms.is_some())
+    }
+
+    /// Remove every queued request whose deadline has lapsed.
+    fn take_expired(&mut self) -> Vec<(Request, Instant)> {
+        let mut out = Vec::new();
+        for class in self.classes.iter_mut() {
+            let mut keep = VecDeque::with_capacity(class.len());
+            for (req, enq) in class.drain(..) {
+                if deadline_expired(&req, enq) {
+                    out.push((req, enq));
+                } else {
+                    keep.push_back((req, enq));
+                }
+            }
+            *class = keep;
+        }
+        out
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -81,12 +199,19 @@ pub struct EngineStats {
     pub completed: usize,
     pub cancelled: usize,
     pub failed: usize,
+    /// requests retired because their server-side deadline lapsed
+    pub deadline_exceeded: usize,
     pub decode_steps: usize,
     pub decode_tokens: usize,
     pub total_decode_ms: f64,
     pub total_prefill_ms: f64,
     pub peak_cache_bytes: usize,
     pub peak_cache_fp16_bytes: usize,
+    /// sum/count of per-request TTFT (time from enqueue to first token);
+    /// the averaging lives in `cluster::ShardMetrics::avg_ttft_ms`, which
+    /// needs the raw sum/count to weight the cluster-wide mean correctly
+    pub ttft_sum_ms: f64,
+    pub ttft_count: usize,
 }
 
 impl EngineStats {
@@ -106,7 +231,9 @@ pub struct GenerationEngine {
     backend: Arc<dyn ComputeBackend>,
     pool: PagePool,
     slots: Vec<Option<Slot>>,
-    queue: VecDeque<(Request, Instant)>,
+    /// Fair-share admission queue (weighted deficit across priority
+    /// classes — see [`FairQueue`]).
+    queue: FairQueue,
     /// Admission bound on the waiting queue (not counting active slots);
     /// `try_submit` rejects with `SubmitError::QueueFull` beyond it.
     queue_bound: usize,
@@ -132,7 +259,7 @@ impl GenerationEngine {
             staging: DecodeStaging::new(&cfg, fp),
             pool: PagePool::new(geom.page_bytes(), pool_pages),
             slots: (0..cfg.decode_batch).map(|_| None).collect(),
-            queue: VecDeque::new(),
+            queue: FairQueue::new(),
             queue_bound: usize::MAX,
             rng: Rng::new(seed),
             stats: EngineStats::default(),
@@ -173,10 +300,14 @@ impl GenerationEngine {
         if req.id == 0 {
             req.id = self.next_id;
             self.next_id += 1;
+        } else {
+            // caller-assigned ids (the cluster router) must not collide
+            // with engine-assigned ones later
+            self.next_id = self.next_id.max(req.id + 1);
         }
         let id = req.id;
         self.events.push_back((id, GenerationEvent::Queued));
-        self.queue.push_back((req, Instant::now()));
+        self.queue.push_back(req, Instant::now());
         Ok(id)
     }
 
@@ -191,8 +322,7 @@ impl GenerationEngine {
     /// terminates with `Finished { reason: Cancelled }`.  Returns false
     /// if the id is unknown or already terminal.
     pub fn cancel(&mut self, id: u64) -> bool {
-        if let Some(pos) = self.queue.iter().position(|(r, _)| r.id == id) {
-            let (req, enq) = self.queue.remove(pos).unwrap();
+        if let Some((req, enq)) = self.queue.remove_by_id(id) {
             self.emit_finish(id, FinishReason::Cancelled, RequestStats {
                 prompt_len: req.prompt.len(),
                 generated: 0,
@@ -219,7 +349,7 @@ impl GenerationEngine {
     /// a tick-level error poisons the whole batch, e.g. the decode graph
     /// dying).  All cache pages return to the pool.
     pub fn fail_all(&mut self, error: &str) {
-        while let Some((req, _)) = self.queue.pop_front() {
+        while let Some((req, _)) = self.queue.pop_any() {
             self.stats.failed += 1;
             self.events.push_back((req.id, GenerationEvent::Failed {
                 error: error.to_string(),
@@ -237,7 +367,22 @@ impl GenerationEngine {
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.slots.iter().filter(|s| s.is_some()).count()
+        self.queue.len() + self.active_slot_count()
+    }
+
+    /// Requests waiting for admission (the router's primary load signal).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Slots currently generating.
+    pub fn active_slot_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Page-pool occupancy snapshot (routing + metrics).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 
     /// Drain the undelivered lifecycle events, in emission order.
@@ -256,9 +401,40 @@ impl GenerationEngine {
     fn emit_finish(&mut self, id: u64, reason: FinishReason, stats: RequestStats) {
         match reason {
             FinishReason::Cancelled => self.stats.cancelled += 1,
+            FinishReason::DeadlineExceeded => self.stats.deadline_exceeded += 1,
             _ => self.stats.completed += 1,
         }
         self.events.push_back((id, GenerationEvent::Finished { reason, stats }));
+    }
+
+    /// Retire every request whose deadline has lapsed: queued ones are
+    /// removed before they ever prefill; active slots release their KV
+    /// pages immediately (same path as cancellation).  Runs at the top of
+    /// every tick, so enforcement is mid-stream at tick granularity.
+    fn expire_deadlines(&mut self) {
+        if self.queue.has_deadlines() {
+            for (req, enq) in self.queue.take_expired() {
+                self.emit_finish(req.id, FinishReason::DeadlineExceeded,
+                                 RequestStats {
+                                     prompt_len: req.prompt.len(),
+                                     generated: 0,
+                                     ttft_ms: 0.0,
+                                     decode_ms: 0.0,
+                                     queued_ms: enq.elapsed().as_secs_f64() * 1e3,
+                                 });
+            }
+        }
+        for i in 0..self.slots.len() {
+            let expired = self.slots[i].as_ref()
+                .is_some_and(|s| deadline_expired(&s.req, s.enqueued));
+            if expired {
+                let mut slot = self.slots[i].take().unwrap();
+                let stats = slot.stats();
+                slot.cache.free(&mut self.pool);
+                self.emit_finish(slot.req.id, FinishReason::DeadlineExceeded,
+                                 stats);
+            }
+        }
     }
 
     /// Admit queued requests into free slots (prefill + cache init).
@@ -273,21 +449,24 @@ impl GenerationEngine {
                 continue;
             }
             loop {
-                let Some((req, enq)) = self.queue.pop_front() else {
-                    break 'slots;
-                };
                 let cfg = self.runner.cfg.clone();
                 let fp = self.runner.spec.kv_bits == 16;
                 if !fp {
-                    // Page-admission check: a request that can NEVER fit
-                    // (needs more pages than the whole pool) fails fast —
-                    // it must not stall the FIFO behind it until every
-                    // in-flight request drains.  One that merely can't fit
-                    // *right now* is held (FIFO order preserved) until
-                    // running slots release pages.
+                    // Page-admission check on the *scheduled-next* request,
+                    // before it is popped: one that can NEVER fit (needs
+                    // more pages than the whole pool) fails fast — it must
+                    // not stall the queue behind it until every in-flight
+                    // request drains.  One that merely can't fit *right
+                    // now* holds admission with the scheduler state
+                    // untouched, so it keeps head-of-line priority and the
+                    // other class cannot leapfrog it to the freed pages.
+                    let Some((head, _)) = self.queue.peek() else {
+                        break 'slots;
+                    };
                     let need = 2 * cfg.n_layers
-                        * req.prompt.len().div_ceil(self.tokens_per_page);
+                        * head.prompt.len().div_ceil(self.tokens_per_page);
                     if need > self.pool.capacity() {
+                        let (req, _enq) = self.queue.pop().unwrap();
                         self.stats.failed += 1;
                         self.events.push_back((req.id, GenerationEvent::Failed {
                             error: format!(
@@ -297,10 +476,12 @@ impl GenerationEngine {
                         continue;
                     }
                     if need > self.pool.available() {
-                        self.queue.push_front((req, enq));
                         break 'slots;
                     }
                 }
+                let Some((req, enq)) = self.queue.pop() else {
+                    break 'slots;
+                };
                 // A prompt the staging/cache geometry cannot hold at all
                 // fails fast (real configs have cache_seq >= max_seq, so
                 // this only guards pathological configurations).
@@ -333,6 +514,8 @@ impl GenerationEngine {
                 let last = &pre.logits[(pre.len - 1) * v..pre.len * v];
                 let first_tok = sample(last, req.sampling, &mut self.rng) as u16;
                 let ttft = enq.elapsed().as_secs_f64() * 1e3;
+                self.stats.ttft_sum_ms += ttft;
+                self.stats.ttft_count += 1;
                 self.events.push_back((req.id, GenerationEvent::Started {
                     ttft_ms: ttft,
                 }));
@@ -541,10 +724,11 @@ impl GenerationEngine {
         });
     }
 
-    /// One engine tick: admit, batched decode, append, sample, retire.
-    /// Returns number of tokens produced this tick (events are queued for
-    /// [`Self::take_events`]).
+    /// One engine tick: expire deadlines, admit, batched decode, append,
+    /// sample, retire.  Returns number of tokens produced this tick
+    /// (events are queued for [`Self::take_events`]).
     pub fn tick(&mut self) -> Result<usize> {
+        self.expire_deadlines();
         self.admit()?;
         let cfg = self.runner.cfg.clone();
         let b = cfg.decode_batch;
@@ -797,6 +981,124 @@ mod tests {
     use super::*;
     use crate::attention::{CacheF32, CacheQuant};
     use crate::backend::{self, BackendKind, ScalarRef};
+
+    fn req(id: u64, priority: Priority, deadline_ms: Option<u64>) -> Request {
+        Request {
+            id,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+            sampling: Sampling::Greedy,
+            stop_token: None,
+            priority,
+            deadline_ms,
+        }
+    }
+
+    #[test]
+    fn fair_queue_weighted_interleave() {
+        // both classes backlogged: weights 4:1 give the cycle I,I,B,I,I
+        let mut q = FairQueue::new();
+        for i in 0..8 {
+            q.push_back(req(100 + i, Priority::Interactive, None), Instant::now());
+        }
+        for i in 0..2 {
+            q.push_back(req(200 + i, Priority::Batch, None), Instant::now());
+        }
+        assert_eq!(q.len(), 10);
+        let order: Vec<Priority> =
+            std::iter::from_fn(|| q.pop()).map(|(r, _)| r.priority).collect();
+        assert_eq!(order.len(), 10);
+        assert_eq!(order[0], Priority::Interactive,
+                   "interactive must go first from a cold start");
+        let batch_pos: Vec<usize> = order.iter().enumerate()
+            .filter(|(_, p)| **p == Priority::Batch)
+            .map(|(i, _)| i)
+            .collect();
+        // the 4:1 deficit cycle serves batch on pops 3 and 8 (0-indexed 2, 7)
+        assert_eq!(batch_pos, vec![2, 7],
+                   "batch must be interleaved, not starved: {order:?}");
+    }
+
+    #[test]
+    fn fair_queue_single_class_is_fifo() {
+        let mut q = FairQueue::new();
+        for i in 0..5 {
+            q.push_back(req(i, Priority::Batch, None), Instant::now());
+        }
+        let ids: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|(r, _)| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn fair_queue_peek_is_pure_and_matches_pop() {
+        // the page-admission hold peeks (possibly many times across many
+        // ticks) before pages free up — peeking must never advance the
+        // deficit scheduler or change which request pops next
+        let mut q = FairQueue::new();
+        for i in 0..4 {
+            q.push_back(req(100 + i, Priority::Interactive, None), Instant::now());
+            q.push_back(req(200 + i, Priority::Batch, None), Instant::now());
+        }
+        let mut popped = Vec::new();
+        while let Some(head_id) = q.peek().map(|(r, _)| r.id) {
+            for _ in 0..3 {
+                assert_eq!(q.peek().unwrap().0.id, head_id,
+                           "repeated peeks must be stable");
+            }
+            let (r, _) = q.pop().unwrap();
+            assert_eq!(r.id, head_id, "pop must return the peeked request");
+            popped.push(r.priority);
+        }
+        // the full 4:1 cycle is preserved despite all the interleaved peeks
+        let batch_pos: Vec<usize> = popped.iter().enumerate()
+            .filter(|(_, p)| **p == Priority::Batch)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(batch_pos, vec![2, 7], "{popped:?}");
+    }
+
+    #[test]
+    fn fair_queue_remove_and_expiry() {
+        let mut q = FairQueue::new();
+        let now = Instant::now();
+        q.push_back(req(1, Priority::Interactive, None), now);
+        q.push_back(req(2, Priority::Batch, Some(0)), now); // expired on arrival
+        q.push_back(req(3, Priority::Batch, Some(60_000)), now);
+        assert!(q.has_deadlines());
+        let expired = q.take_expired();
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].0.id, 2);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.remove_by_id(3).unwrap().0.id, 3);
+        assert!(q.remove_by_id(3).is_none());
+        assert!(!q.has_deadlines());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn fair_queue_no_class_starves_under_sustained_load() {
+        // keep both lanes topped up for many pops: each class must get
+        // within one quantum of its weight share
+        let mut q = FairQueue::new();
+        let mut next = 0u64;
+        let mut served = [0usize; 2];
+        for _ in 0..500 {
+            while q.classes[0].len() < 2 {
+                q.push_back(req(next, Priority::Interactive, None), Instant::now());
+                next += 1;
+            }
+            while q.classes[1].len() < 2 {
+                q.push_back(req(next, Priority::Batch, None), Instant::now());
+                next += 1;
+            }
+            let (r, _) = q.pop().unwrap();
+            served[r.priority.index()] += 1;
+        }
+        // weights 4:1 → 400/100 exactly, but allow one quantum of drift
+        assert!((served[0] as i64 - 400).abs() <= 5, "served {served:?}");
+        assert!(served[1] >= 95, "batch starved: {served:?}");
+    }
 
     fn test_cfg() -> ModelConfig {
         ModelConfig {

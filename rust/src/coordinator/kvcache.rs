@@ -29,6 +29,29 @@ pub struct PagePool {
 
 pub type PageId = usize;
 
+/// Cheap point-in-time snapshot of a pool's occupancy — the one shape the
+/// router and the metrics registry consume, so neither pokes pool fields
+/// ad hoc.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// total pages the pool was built with
+    pub pages_total: usize,
+    /// pages currently allocated to sequences
+    pub in_use: usize,
+    /// peak concurrent allocation since construction (never recedes)
+    pub high_water: usize,
+}
+
+impl PoolStats {
+    /// Occupancy in [0, 1] — the router's KV-pressure signal.
+    pub fn pressure(&self) -> f64 {
+        if self.pages_total == 0 {
+            return 0.0;
+        }
+        self.in_use as f64 / self.pages_total as f64
+    }
+}
+
 impl PagePool {
     pub fn new(page_bytes: usize, n_pages: usize) -> PagePool {
         PagePool {
@@ -89,6 +112,14 @@ impl PagePool {
 
     pub fn bytes_in_use(&self) -> usize {
         self.in_use() * self.page_bytes
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            pages_total: self.pages.len(),
+            in_use: self.in_use(),
+            high_water: self.high_water,
+        }
     }
 }
 
@@ -308,6 +339,23 @@ mod tests {
         pool.release(e);
         assert_eq!(pool.in_use(), 0);
         assert_eq!(pool.high_water, 4);
+    }
+
+    #[test]
+    fn stats_snapshot_tracks_pool_fields() {
+        let mut pool = PagePool::new(32, 6);
+        assert_eq!(pool.stats(), PoolStats {
+            pages_total: 6, in_use: 0, high_water: 0,
+        });
+        let a = pool.alloc().unwrap();
+        let _b = pool.alloc().unwrap();
+        let s = pool.stats();
+        assert_eq!((s.pages_total, s.in_use, s.high_water), (6, 2, 2));
+        assert!((s.pressure() - 2.0 / 6.0).abs() < 1e-12);
+        pool.release(a);
+        let s = pool.stats();
+        assert_eq!((s.in_use, s.high_water), (1, 2), "high water must persist");
+        assert_eq!(PoolStats::default().pressure(), 0.0, "empty pool = no pressure");
     }
 
     #[test]

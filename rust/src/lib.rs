@@ -34,9 +34,15 @@
 //!                   `GenerationEvent` streams with cancellation and
 //!                   bounded admission, a `LocalSession` over the engine,
 //!                   the TCP `Client`, and the v2 event-frame wire codec.
+//! * [`cluster`]   — sharded serving: N engine shards (one tick thread
+//!                   each) behind one `InferenceService` front, with a
+//!                   load-aware router (queue depth / active slots /
+//!                   KV-page pressure), fair-share priority + deadline
+//!                   scheduling, and a runtime metrics registry.
 //! * [`server`]    — threaded TCP front-end speaking the v2 event-frame
 //!                   protocol (one JSON frame per event, multiplexed by
-//!                   request id; v1 one-shot lines still answered).
+//!                   request id; v1 one-shot lines still answered),
+//!                   serving a `ClusterService` (`--shards N`).
 //! * [`eval`]      — perplexity, zero-shot probes, outlier statistics
 //!                   (NLL reductions batched through the backend).
 //! * [`bench_support`] — shared workload generators for `cargo bench`.
@@ -45,6 +51,7 @@ pub mod api;
 pub mod attention;
 pub mod backend;
 pub mod bench_support;
+pub mod cluster;
 pub mod coordinator;
 pub mod eval;
 pub mod gemm;

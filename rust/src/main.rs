@@ -2,21 +2,29 @@
 //! experiment toolchain.
 //!
 //! Subcommands:
-//!   serve      start the TCP serving front-end (QuaRot-INT4 by default;
-//!              v2 event-frame protocol, --queue-bound for admission)
-//!   generate   generation from a token prompt (--stream prints tokens
-//!              incrementally as they are produced)
+//!   serve         start the TCP serving front-end (QuaRot-INT4 by
+//!                 default; v2 event-frame protocol, --queue-bound for
+//!                 per-shard admission, --shards N engine shards)
+//!   generate      generation from a token prompt (--stream prints tokens
+//!                 incrementally; --priority / --deadline-ms scheduling)
+//!   cluster-bench drive a sharded cluster with synthetic mixed
+//!                 Interactive/Batch traffic and print the per-shard
+//!                 metrics table
 //!   ppl        perplexity of a quantization spec on the eval split
 //!   zeroshot   probe-task accuracies
 //!   outliers   Fig.1 activation outlier statistics (base vs rotated)
 //!   verify     cross-language check: rust QuaRot transform == python's
 //!   info       print the model manifest summary
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, Context, Result};
 
-use quarot::api::{GenerationEvent, GenerationParams, LocalSession,
+use quarot::api::{GenerationEvent, GenerationParams, LocalSession, Priority,
                   Sampling, SessionConfig};
 use quarot::bench_support::{self, Artifacts};
+use quarot::cluster::{ClusterConfig, ClusterService, EngineFactory,
+                      LatencySummary};
 use quarot::coordinator::batcher::GenerationEngine;
 use quarot::coordinator::runner::{QuantSpec, Runner, Variant, WeightQuant};
 use quarot::eval;
@@ -65,6 +73,7 @@ fn main() -> Result<()> {
     match cmd {
         "serve" => serve(&args),
         "generate" => generate(&args),
+        "cluster-bench" => cluster_bench(&args),
         "ppl" => ppl(&args),
         "zeroshot" => zeroshot(&args),
         "outliers" => outliers(&args),
@@ -73,12 +82,17 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "quarot — outlier-free 4-bit inference (paper reproduction)\n\
-                 usage: quarot <serve|generate|ppl|zeroshot|outliers|verify|info>\n\
+                 usage: quarot <serve|generate|cluster-bench|ppl|zeroshot|\
+                 outliers|verify|info>\n\
                  common flags: --model tiny-mha --scheme quarot-int4\n\
                                --backend scalar|blocked|threaded|auto (default auto)\n\
                  generate:     --stream (incremental tokens) --temperature --top-k\n\
-                               --stop-token\n\
-                 serve:        --queue-bound N (admission backpressure)\n\
+                               --stop-token --priority interactive|batch\n\
+                               --deadline-ms N (server-side deadline)\n\
+                 serve:        --queue-bound N (per-shard admission)\n\
+                               --shards N (engine shards behind one front)\n\
+                 cluster-bench: --shards N --interactive N --batch N\n\
+                               --max-new N --batch-max-new N\n\
                  see README.md for the full matrix"
             );
             Ok(())
@@ -99,22 +113,25 @@ fn serve(args: &Args) -> Result<()> {
     let spec = spec_from_args(args)?;
     let pages = args.usize_or("pages", 4096);
     let port = args.usize_or("port", 8747) as u16;
+    let shards = args.usize_or("shards", 1);
     let queue_bound = args.usize_or("queue-bound",
                                     quarot::server::DEFAULT_QUEUE_BOUND);
-    let handle = quarot::server::serve(
+    let handle = quarot::server::serve_sharded(
         move || {
             let art = Artifacts::load(&model)?;
-            let runner = art.runner(spec, None)?;
+            let runner = art.runner(spec.clone(), None)?;
             Ok(GenerationEngine::new(runner, pages, 7))
         },
         port,
         queue_bound,
+        shards,
     )?;
     println!("serving on 127.0.0.1:{} — v2 event-frame protocol \
               (one JSON frame per event; {{\"cmd\":\"submit\"}} / \
               {{\"cmd\":\"cancel\"}} / {{\"cmd\":\"stats\"}} / \
-              {{\"cmd\":\"shutdown\"}}); admission bound {}",
-             handle.port, queue_bound);
+              {{\"cmd\":\"metrics\"}} / {{\"cmd\":\"shutdown\"}}); \
+              {} shard(s), per-shard admission bound {}",
+             handle.port, shards, queue_bound);
     // blocks until a wire shutdown stops the engine and accept loops,
     // then exits cleanly instead of lingering as a serving-nothing zombie
     handle.wait();
@@ -142,6 +159,14 @@ fn generate(args: &Args) -> Result<()> {
         .sampling(sampling);
     if let Some(st) = args.get("stop-token") {
         params = params.stop_at(st.parse().context("bad stop token")?);
+    }
+    if let Some(p) = args.get("priority") {
+        params = params.priority(Priority::parse(p).with_context(|| {
+            format!("unknown priority '{p}' (interactive|batch)")
+        })?);
+    }
+    if let Some(d) = args.get("deadline-ms") {
+        params = params.deadline(d.parse().context("bad deadline")?);
     }
     let session = LocalSession::new(GenerationEngine::new(runner, 1024, 7),
                                     SessionConfig::default());
@@ -179,6 +204,73 @@ fn generate(args: &Args) -> Result<()> {
     println!("finish: {} | ttft {:.1} ms, decode {:.1} ms, {:.1} tok/s",
              out.reason, out.stats.ttft_ms, out.stats.decode_ms,
              out.stats.tokens_per_sec());
+    Ok(())
+}
+
+/// Drive a local sharded cluster with synthetic mixed-priority traffic
+/// and print per-class latency plus the per-shard metrics table — the
+/// interactive cousin of `benches/serving_cluster.rs`.
+fn cluster_bench(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "tiny-mha");
+    let spec = spec_from_args(args)?;
+    let shards = args.usize_or("shards", 2);
+    let pages = args.usize_or("pages", 2048);
+    let n_interactive = args.usize_or("interactive", 8);
+    let n_batch = args.usize_or("batch", 8);
+    let max_new = args.usize_or("max-new", 16);
+    let batch_max_new = args.usize_or("batch-max-new", 48);
+
+    let art = Artifacts::load(&model)?;
+    let eval_toks = art.corpus.split("eval")?.to_vec();
+    if eval_toks.len() < 8 {
+        bail!("eval split too short ({} tokens) for prompts", eval_toks.len());
+    }
+    let m = model.clone();
+    let factory: EngineFactory = Arc::new(move || {
+        let art = Artifacts::load(&m)?;
+        let runner = art.runner(spec.clone(), None)?;
+        Ok(GenerationEngine::new(runner, pages, 7))
+    });
+    let cluster = ClusterService::new(
+        factory,
+        ClusterConfig { shards, queue_bound: quarot::server::DEFAULT_QUEUE_BOUND });
+
+    let span = eval_toks.len().saturating_sub(8).max(1);
+    let prompt = |i: usize| {
+        let off = (i * 13) % span;
+        eval_toks[off..off + 8].to_vec()
+    };
+    let t0 = std::time::Instant::now();
+    // batch backlog first, then the interactive arrivals it must not delay
+    let batch: Vec<_> = (0..n_batch)
+        .map(|i| cluster.submit(GenerationParams::new(prompt(i))
+                                    .max_new(batch_max_new)
+                                    .priority(Priority::Batch))
+            .map_err(|e| anyhow!("{e}")))
+        .collect::<Result<_>>()?;
+    let interactive: Vec<_> = (0..n_interactive)
+        .map(|i| cluster.submit(GenerationParams::new(prompt(n_batch + i))
+                                    .max_new(max_new))
+            .map_err(|e| anyhow!("{e}")))
+        .collect::<Result<_>>()?;
+
+    let mut tokens = 0usize;
+    let mut report = |label: &str, handles: &[quarot::api::RequestHandle]|
+                     -> Result<()> {
+        let mut class = bench_support::drain_class(handles)?;
+        let lat = LatencySummary::of(&mut class.ttfts);
+        println!("  {label:11} {} reqs, {} tokens, \
+                  ttft mean {:.1} ms / p95 {:.1} ms",
+                 handles.len(), class.tokens, lat.mean_ms, lat.p95_ms);
+        tokens += class.tokens;
+        Ok(())
+    };
+    report("interactive", &interactive)?;
+    report("batch", &batch)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("  aggregate   {:.1} tok/s over {wall:.2} s wall",
+             tokens as f64 / wall);
+    println!("{}", cluster.metrics().render());
     Ok(())
 }
 

@@ -1,19 +1,25 @@
 //! Threaded TCP front-end speaking the v2 newline-JSON **event-frame**
 //! protocol (see `quarot::api::wire` for the frame schema), built on top
-//! of the unified inference API: the engine thread owns a
-//! [`LocalSession`] and multiplexes its event stream to connections by
-//! request id.  Connections submit, receive `queued` / `started` /
-//! `token` / `finished` / `failed` frames as they are produced, and may
+//! of the unified inference API: the cluster thread owns a
+//! [`ClusterService`] (`--shards N` engine shards, each with its own tick
+//! thread) and multiplexes its event stream to connections by request id.
+//! Connections submit, receive `queued` / `started` / `token` /
+//! `finished` / `failed` frames as they are produced, and may
 //! `{"cmd":"cancel","id":..}` a request mid-generation — its KV pages
-//! return to the pool immediately.
+//! return to the owning shard's pool immediately.
 //!
-//! Backpressure: the session's admission queue is bounded; submits
-//! beyond the bound get a typed `rejected` frame instead of queueing
-//! without bound.  Legacy v1 one-shot lines (`{"prompt": ...}` with no
-//! `"cmd"`) are still answered with a single completion object.
+//! Backpressure: every shard's admission queue is bounded; a submit is
+//! routed to the least-loaded shard and gets a typed `rejected` frame
+//! only when **all** shards are at their bound.  Legacy v1 one-shot lines
+//! (`{"prompt": ...}` with no `"cmd"`) are still answered with a single
+//! completion object.
+//!
+//! `{"cmd":"stats"}` answers flat cluster aggregates (live queue depth,
+//! active slots, retire counters); `{"cmd":"metrics"}` adds the full
+//! per-shard breakdown.
 //!
 //! `{"cmd":"shutdown"}` stops the whole server: it sets the shared
-//! shutdown flag (engine thread and accept loop both exit) rather than
+//! shutdown flag (cluster thread and accept loop both exit) rather than
 //! just closing the issuing connection, and [`ServerHandle::shutdown`]
 //! joins *both* threads.
 
@@ -22,14 +28,15 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::api::wire::{self, ClientFrame};
-use crate::api::{GenerationEvent, GenerationParams, LocalSession, RequestId,
-                 SessionConfig, SubmitError};
+use crate::api::{GenerationEvent, GenerationParams, RequestId, SubmitError};
+use crate::cluster::{ClusterConfig, ClusterService, EngineFactory};
 use crate::coordinator::batcher::GenerationEngine;
-use crate::util::json::{self, n, Value};
+use crate::util::json::{self, Value};
 
 pub use crate::api::remote::Client;
 
@@ -86,51 +93,45 @@ enum EngineMsg {
     Stats {
         reply: mpsc::Sender<String>,
     },
+    Metrics {
+        reply: mpsc::Sender<String>,
+    },
 }
 
-/// Start serving on `port` (0 → ephemeral) with the given admission
-/// bound.  Returns once the socket is bound; the engine loop runs on a
-/// background thread.
-///
-/// The engine is built *inside* the engine thread via `make_engine`
-/// because PJRT handles are not `Send`.
+/// Start serving a single-shard cluster on `port` (0 → ephemeral) with
+/// the given admission bound.  See [`serve_sharded`].
 pub fn serve<F>(make_engine: F, port: u16, queue_bound: usize) -> Result<ServerHandle>
 where
-    F: FnOnce() -> Result<GenerationEngine> + Send + 'static,
+    F: Fn() -> Result<GenerationEngine> + Send + Sync + 'static,
+{
+    serve_sharded(make_engine, port, queue_bound, 1)
+}
+
+/// Start serving on `port` (0 → ephemeral) over `shards` engine shards,
+/// each with admission bound `queue_bound`.  Returns once the socket is
+/// bound; the cluster loop runs on a background thread.
+///
+/// `make_engine` is called once *inside each shard's thread* (PJRT
+/// handles are not `Send`), so it must be `Fn`, not `FnOnce`.
+pub fn serve_sharded<F>(make_engine: F, port: u16, queue_bound: usize,
+                        shards: usize) -> Result<ServerHandle>
+where
+    F: Fn() -> Result<GenerationEngine> + Send + Sync + 'static,
 {
     let listener = TcpListener::bind(("127.0.0.1", port)).context("bind")?;
     let port = listener.local_addr()?.port();
     let shutdown = Arc::new(AtomicBool::new(false));
     let (tx, rx) = mpsc::channel::<EngineMsg>();
 
-    // engine thread: owns the session, runs ticks, routes events by id
+    // cluster thread: owns the ClusterService (which spawns one tick
+    // thread per shard), routes events by request id.  A shard whose
+    // engine fails to construct degrades to typed submit errors inside
+    // the cluster, so there is no separate failure branch here.
     let sd_engine = shutdown.clone();
+    let factory: EngineFactory = Arc::new(make_engine);
     let engine_join = std::thread::spawn(move || {
-        let session = match make_engine() {
-            Ok(e) => LocalSession::new(e, SessionConfig { queue_bound }),
-            Err(e) => {
-                eprintln!("engine construction failed: {e:#}");
-                // drain control messages with typed failures until told
-                // to stop, so connections get errors instead of hangs
-                while !sd_engine.load(Ordering::SeqCst) {
-                    match rx.recv_timeout(std::time::Duration::from_millis(50)) {
-                        Ok(EngineMsg::Submit { reply, .. }) => {
-                            let _ = reply.send(Err(SubmitError::Transport(
-                                "engine unavailable".into())));
-                        }
-                        Ok(EngineMsg::Cancel { reply, .. }) => {
-                            let _ = reply.send(false);
-                        }
-                        Ok(EngineMsg::Stats { reply }) => {
-                            let _ = reply.send("{}".into());
-                        }
-                        Err(mpsc::RecvTimeoutError::Timeout) => {}
-                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                    }
-                }
-                return;
-            }
-        };
+        let cluster = ClusterService::new(
+            factory, ClusterConfig { shards, queue_bound });
         // request id → (connection event sender, cid to echo on Queued)
         let mut routes: HashMap<RequestId,
                                 (mpsc::Sender<RoutedEvent>, Option<u64>)> =
@@ -141,16 +142,28 @@ where
                 // its single terminal event before the senders drop
                 let live: Vec<RequestId> = routes.keys().copied().collect();
                 for id in live {
-                    session.cancel(id);
+                    cluster.cancel(id);
                 }
-                route_all(&session, &mut routes);
-                break;
+                // The terminal events arrive from the shard threads
+                // asynchronously, but promptly: each cancel's reply means
+                // the shard already emitted (and, per its message loop,
+                // immediately flushed) the Finished{cancelled} event, and
+                // poll_events synthesizes terminals for dead shards.  The
+                // deadline is a safety net against a wedged shard thread,
+                // not the expected path.
+                let deadline = Instant::now() + Duration::from_secs(2);
+                while !routes.is_empty() && Instant::now() < deadline {
+                    if !route_all(&cluster, &mut routes) {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                break; // dropping the cluster joins the shard threads
             }
             // drain control messages
             while let Ok(msg) = rx.try_recv() {
                 match msg {
                     EngineMsg::Submit { params, cid, events, reply } => {
-                        match session.submit_detached(params) {
+                        match cluster.submit_detached(params) {
                             Ok(id) => {
                                 routes.insert(id, (events, Some(cid)));
                                 let _ = reply.send(Ok(id));
@@ -161,29 +174,28 @@ where
                         }
                     }
                     EngineMsg::Cancel { id, reply } => {
-                        let _ = reply.send(session.cancel(id));
+                        let _ = reply.send(cluster.cancel(id));
                     }
                     EngineMsg::Stats { reply } => {
-                        let s = session.stats();
-                        let _ = reply.send(json::write(&wire::encode_stats(vec![
-                            ("completed", n(s.completed as f64)),
-                            ("cancelled", n(s.cancelled as f64)),
-                            ("failed", n(s.failed as f64)),
-                            ("decode_steps", n(s.decode_steps as f64)),
-                            ("tokens_per_sec", n(s.tokens_per_sec())),
-                            ("peak_cache_bytes", n(s.peak_cache_bytes as f64)),
-                            ("peak_cache_fp16_bytes",
-                             n(s.peak_cache_fp16_bytes as f64)),
-                            ("pool_pages_in_use",
-                             n(session.pool_in_use() as f64)),
-                            ("queue_bound", n(queue_bound as f64)),
-                        ])));
+                        let m = cluster.metrics();
+                        let _ = reply.send(json::write(
+                            &wire::encode_stats(m.summary_pairs())));
+                    }
+                    EngineMsg::Metrics { reply } => {
+                        let m = cluster.metrics();
+                        let _ = reply.send(json::write(
+                            &wire::encode_metrics(m.full_pairs())));
                     }
                 }
             }
-            let routed = route_all(&session, &mut routes);
-            if !routed && session.pending() == 0 {
-                std::thread::sleep(std::time::Duration::from_millis(1));
+            // Unlike the pre-cluster server (where poll_events itself ran
+            // the engine tick), decode work happens on the shard threads
+            // and poll_events is a pure channel drain — so sleep whenever
+            // nothing moved, even mid-generation, instead of spinning a
+            // core while shards do the real work.
+            let routed = route_all(&cluster, &mut routes);
+            if !routed {
+                std::thread::sleep(Duration::from_millis(1));
             }
         }
     });
@@ -212,13 +224,13 @@ where
     })
 }
 
-/// Advance the session and fan its events out to the owning connections.
+/// Advance the cluster and fan its events out to the owning connections.
 /// Terminal events drop the route.  Returns whether anything moved.
-fn route_all(session: &LocalSession,
+fn route_all(cluster: &ClusterService,
              routes: &mut HashMap<RequestId,
                                   (mpsc::Sender<RoutedEvent>, Option<u64>)>)
              -> bool {
-    let events = session.poll_events();
+    let events = cluster.poll_events();
     let moved = !events.is_empty();
     for (id, ev) in events {
         let terminal = ev.is_terminal();
@@ -336,6 +348,13 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>,
                 let stats = rrx.recv().unwrap_or_else(|_| "{}".into());
                 let mut w = out.lock().unwrap();
                 writeln!(w, "{stats}")?;
+            }
+            ClientFrame::Metrics => {
+                let (rtx, rrx) = mpsc::channel();
+                let _ = tx.send(EngineMsg::Metrics { reply: rtx });
+                let metrics = rrx.recv().unwrap_or_else(|_| "{}".into());
+                let mut w = out.lock().unwrap();
+                writeln!(w, "{metrics}")?;
             }
             ClientFrame::Shutdown => {
                 // the satellite fix: stop the *whole server*, not just

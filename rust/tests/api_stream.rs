@@ -1,22 +1,26 @@
 //! Tests for the unified streaming inference API: event ordering,
 //! cancellation returning pages to the pool, bounded-admission
 //! rejection, byte-identical output between the event path and the
-//! legacy `run_to_completion` shim, and the v2 TCP event-frame protocol
-//! (interleaving, cancel, raw v1 compatibility).
+//! legacy `run_to_completion` shim, the scheduler semantics (deadline
+//! expiry, fair-share priority admission, cluster-level QueueFull,
+//! 1-shard cluster ≡ LocalSession), and the v2 TCP event-frame protocol
+//! (interleaving, cancel, live stats, raw v1 compatibility).
 //!
 //! Like `integration.rs`, every test needs `make artifacts` and skips
 //! with a notice when they are absent.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::Arc;
 
-use quarot::api::{FinishReason, GenerationEvent, GenerationParams,
-                  LocalSession, SessionConfig, SubmitError};
-use quarot::bench_support::Artifacts;
+use quarot::api::{FinishReason, GenerationEvent, GenerationParams, Priority,
+                  LocalSession, RequestHandle, SessionConfig, SubmitError};
+use quarot::bench_support::{drain_event_signatures, Artifacts};
+use quarot::cluster::{ClusterConfig, ClusterService, EngineFactory};
 use quarot::coordinator::batcher::{GenerationEngine, Request};
 use quarot::coordinator::runner::QuantSpec;
 use quarot::coordinator::sampler::Sampling;
-use quarot::server::{serve, Client};
+use quarot::server::{serve, serve_sharded, Client};
 use quarot::util::json;
 
 fn art() -> Option<Artifacts> {
@@ -157,6 +161,7 @@ fn event_path_matches_legacy_shim_byte_identical() {
     engine.submit(Request {
         id: 0, prompt: prompt.clone(), max_new_tokens: 8,
         sampling, stop_token: None,
+        priority: Priority::Interactive, deadline_ms: None,
     });
     let legacy = engine.run_to_completion().unwrap();
     assert_eq!(legacy.len(), 1);
@@ -196,6 +201,187 @@ fn stop_token_on_first_prefill_token_retires_immediately() {
     let stats = s.stats();
     assert_eq!(stats.decode_steps, 0,
                "a first-token stop must not run decode ticks");
+}
+
+#[test]
+fn deadline_exceeded_mid_stream_frees_pages() {
+    let Some(art) = art() else { return };
+    let prompt = art.corpus.split("eval").unwrap()[..8].to_vec();
+    let s = session(&art, 512, 7, 16);
+    // generous budget, tight deadline: the tick must retire it mid-stream
+    let h = s.submit(GenerationParams::new(prompt).max_new(400).deadline(40))
+        .unwrap();
+    let mut tokens = 0usize;
+    let mut reason = None;
+    let mut terminals = 0usize;
+    while let Some(ev) = h.next_event().unwrap() {
+        match ev {
+            GenerationEvent::Token { .. } => {
+                tokens += 1;
+                if tokens == 2 {
+                    // let the deadline lapse while the request is active
+                    std::thread::sleep(std::time::Duration::from_millis(60));
+                }
+            }
+            GenerationEvent::Finished { reason: r, .. } => {
+                terminals += 1;
+                reason = Some(r);
+            }
+            GenerationEvent::Failed { .. } => terminals += 1,
+            _ => {}
+        }
+    }
+    assert_eq!(terminals, 1, "exactly one terminal event");
+    assert_eq!(reason, Some(FinishReason::DeadlineExceeded));
+    assert!(tokens < 400, "deadline must land mid-generation");
+    assert_eq!(s.pool_in_use(), 0,
+               "deadline retirement must return every KV page to the pool");
+}
+
+#[test]
+fn deadline_expired_in_queue_never_admits() {
+    let Some(art) = art() else { return };
+    let prompt = art.corpus.split("eval").unwrap()[..8].to_vec();
+    let s = session(&art, 512, 7, 16);
+    // deadline 0 = expired on arrival: retired from the queue at the next
+    // tick, before prefill ever runs
+    let h = s.submit(GenerationParams::new(prompt).max_new(8).deadline(0))
+        .unwrap();
+    let out = h.wait().unwrap();
+    assert_eq!(out.reason, FinishReason::DeadlineExceeded);
+    assert!(out.tokens.is_empty(), "expired-in-queue must produce no tokens");
+    assert_eq!(out.stats.generated, 0);
+    assert_eq!(s.pool_in_use(), 0);
+    let stats = s.stats();
+    assert_eq!(stats.decode_steps, 0, "no decode tick for an expired request");
+    assert_eq!(stats.deadline_exceeded, 1);
+}
+
+#[test]
+fn interactive_admitted_ahead_of_queued_batch_backlog() {
+    let Some(art) = art() else { return };
+    let prompt = art.corpus.split("eval").unwrap()[..6].to_vec();
+    let s = session(&art, 1024, 7, 64);
+    // a Batch backlog queued before any tick runs...
+    let mut batch_ids = Vec::new();
+    for _ in 0..6 {
+        batch_ids.push(s.submit_detached(
+            GenerationParams::new(prompt.clone()).max_new(24)
+                .priority(Priority::Batch)).unwrap());
+    }
+    // ...then one Interactive arrival, submitted last
+    let inter_id = s.submit_detached(
+        GenerationParams::new(prompt.clone()).max_new(4)).unwrap();
+
+    // multiplexed consumption: drive ticks and record global event order
+    let mut first_started = None;
+    let mut terminals = 0usize;
+    while terminals < 7 {
+        for (id, ev) in s.poll_events() {
+            match ev {
+                GenerationEvent::Started { .. } => {
+                    first_started.get_or_insert(id);
+                }
+                e if e.is_terminal() => terminals += 1,
+                _ => {}
+            }
+        }
+    }
+    // the weighted-deficit scheduler admits the interactive request in
+    // the very first admission wave, ahead of the whole batch backlog
+    assert_eq!(first_started, Some(inter_id),
+               "interactive must start before any queued batch request");
+}
+
+/// Acceptance: a 1-shard cluster is behaviorally identical to a
+/// LocalSession — same per-request event streams for the same seeded
+/// greedy requests (timing fields excluded; tick scheduling differs by
+/// design, which greedy decoding is invariant to).
+#[test]
+fn one_shard_cluster_matches_local_session() {
+    let Some(art) = art() else { return };
+    let eval = art.corpus.split("eval").unwrap();
+    let prompts: Vec<Vec<u16>> = (0..3)
+        .map(|i| eval[i * 31..i * 31 + 8].to_vec())
+        .collect();
+
+    let s = session(&art, 512, 9, 16);
+    let hs: Vec<RequestHandle> = prompts.iter()
+        .map(|p| s.submit(GenerationParams::new(p.clone()).max_new(6)).unwrap())
+        .collect();
+    let local = drain_event_signatures(&hs).unwrap();
+
+    let factory: EngineFactory = Arc::new(|| {
+        let art = Artifacts::load("tiny-mha")?;
+        let runner = art.runner(QuantSpec::quarot(4), None)?;
+        Ok(GenerationEngine::new(runner, 512, 9))
+    });
+    let c = ClusterService::new(factory,
+                                ClusterConfig { shards: 1, queue_bound: 16 });
+    let hc: Vec<RequestHandle> = prompts.iter()
+        .map(|p| c.submit(GenerationParams::new(p.clone()).max_new(6)).unwrap())
+        .collect();
+    let clustered = drain_event_signatures(&hc).unwrap();
+
+    assert_eq!(local, clustered,
+               "1-shard cluster must mirror LocalSession event streams");
+}
+
+#[test]
+fn cluster_queue_full_only_when_every_shard_is_bound() {
+    let Some(art) = art() else { return };
+    // slot capacity per shard = the model's decode batch width
+    let b = art.runner(QuantSpec::quarot(4), None).unwrap().cfg.decode_batch;
+    let factory: EngineFactory = Arc::new(|| {
+        let art = Artifacts::load("tiny-mha")?;
+        let runner = art.runner(QuantSpec::quarot(4), None)?;
+        Ok(GenerationEngine::new(runner, 2048, 7))
+    });
+    let cluster = ClusterService::new(factory,
+                                      ClusterConfig { shards: 2, queue_bound: 1 });
+    let prompt = art.corpus.split("eval").unwrap()[..4].to_vec();
+    // long-running: occupies its slot for the whole test
+    let long = || GenerationParams::new(prompt.clone()).max_new(100_000);
+
+    // fill every slot on both shards, waiting for each admission so the
+    // queues stay empty during the fill (placement stays deterministic)
+    let mut handles: Vec<RequestHandle> = Vec::new();
+    for _ in 0..2 * b {
+        let h = cluster.submit(long()).unwrap();
+        let t0 = std::time::Instant::now();
+        while cluster.metrics().queue_depth() > 0 {
+            assert!(t0.elapsed().as_secs() < 30, "admission stalled");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        handles.push(h);
+    }
+    // one queued request per shard reaches each bound of 1
+    for _ in 0..2 {
+        handles.push(cluster.submit(long()).unwrap());
+    }
+    // now every shard is saturated: the cluster-level backpressure signal
+    match cluster.submit(long()) {
+        Err(SubmitError::QueueFull { bound }) => {
+            assert_eq!(bound, 2, "cluster bound = per-shard bound × shards");
+        }
+        Err(e) => panic!("expected cluster QueueFull, got {e:?}"),
+        Ok(h) => panic!("expected cluster QueueFull, got accepted id {}", h.id()),
+    }
+
+    // cancelling everything drains both pools and reopens admission
+    for h in &handles {
+        h.cancel().unwrap();
+    }
+    for h in &handles {
+        while h.next_event().unwrap().is_some() {}
+    }
+    let m = cluster.metrics();
+    assert_eq!(m.pool_pages_in_use(), 0, "cancel must drain every shard pool");
+    assert!(m.cancelled() >= 1, "cancellations must be counted: {m:?}");
+    let h = cluster.submit(GenerationParams::new(prompt.clone()).max_new(2))
+        .unwrap();
+    assert_eq!(h.wait().unwrap().tokens.len(), 2,
+               "admission must reopen after the backlog drains");
 }
 
 #[test]
@@ -285,6 +471,66 @@ fn raw_v1_one_shot_line_still_answered() {
     assert!(resp.get("error").is_none(), "{resp:?}");
     assert_eq!(resp.get("tokens").unwrap().as_arr().unwrap().len(), 4);
     assert!(resp.get("tokens_per_sec").is_some());
+    // regression: the v1 one-shot reply must stay a bare completion
+    // object — no v2 frame envelope, no cluster fields
+    assert!(resp.get("v").is_none(), "v1 reply grew a version tag: {resp:?}");
+    assert!(resp.get("event").is_none(),
+            "v1 reply grew an event discriminator: {resp:?}");
+    assert!(resp.get("finish_reason").is_some());
+    handle.shutdown();
+}
+
+#[test]
+fn stats_frame_reports_live_load_and_metrics_break_out_shards() {
+    if art().is_none() {
+        return;
+    }
+    let handle = serve_sharded(
+        || {
+            let art = Artifacts::load("tiny-mha")?;
+            let runner = art.runner(QuantSpec::quarot(4), None)?;
+            Ok(GenerationEngine::new(runner, 512, 3))
+        },
+        0,
+        16,
+        2,
+    ).unwrap();
+
+    let client = Client::connect(handle.port).unwrap();
+    // park a backlog of long-running requests so the gauges have
+    // something to show while the stats round-trip happens
+    let handles: Vec<_> = (0..6)
+        .map(|_| client.submit(&GenerationParams::new(vec![5, 6, 7, 8])
+                                   .max_new(100_000)).unwrap())
+        .collect();
+
+    let mut c2 = Client::connect(handle.port).unwrap();
+    let stats = c2.stats().unwrap();
+    for key in ["queue_depth", "active_slots", "shards", "deadline_exceeded",
+                "completed", "pool_pages_in_use", "queue_bound"] {
+        assert!(stats.get(key).is_some(), "stats frame missing {key}: {stats:?}");
+    }
+    assert_eq!(stats.get("shards").unwrap().as_usize(), Some(2));
+    let live = stats.get("queue_depth").unwrap().as_usize().unwrap()
+        + stats.get("active_slots").unwrap().as_usize().unwrap();
+    assert!(live >= 1, "an in-flight request must show up in the live load");
+
+    // the metrics command adds the per-shard breakdown
+    let metrics = c2.metrics().unwrap();
+    let per_shard = metrics.get("per_shard").and_then(|p| p.as_arr()).unwrap();
+    assert_eq!(per_shard.len(), 2);
+    for (i, row) in per_shard.iter().enumerate() {
+        assert_eq!(row.get("shard").unwrap().as_usize(), Some(i));
+        assert!(row.get("pages_in_use").is_some());
+        assert!(row.get("queue_depth").is_some());
+    }
+
+    for h in &handles {
+        h.cancel().unwrap();
+    }
+    for h in &handles {
+        while h.next_event().unwrap().is_some() {}
+    }
     handle.shutdown();
 }
 
