@@ -1,0 +1,145 @@
+//! Shared-prefix-cache bench: TTFT and prefill-tokens-saved under
+//! 0 / 50 / 100 % shared-prefix traffic.
+//!
+//! Full mode drives the same request mix against a prefix-cache-enabled
+//! engine and a cold (cache-off) twin at the same seed and tabulates
+//! hit rate, prefill tokens served from cache, and per-class TTFT —
+//! the serving-side complement of the paper's Table 17 memory story
+//! (KV-4 pages are ~4× cheaper to keep resident, which is what makes
+//! pinning shared prefixes worthwhile).
+//!
+//! `--check` is the CI acceptance smoke: token streams with the cache
+//! on must be **bit-exact** vs the cold path at every traffic mix, a
+//! drained session must hold exactly the trie's pinned pages, and a
+//! prefix flush must return the pool to zero (no refcount leaks).
+//!
+//! Like the examples, it self-skips with exit 0 when AOT artifacts are
+//! absent, so CI stays green on runners without `make artifacts`.
+
+use anyhow::{anyhow, bail, Result};
+
+use quarot::api::{GenerationParams, LocalSession, SessionConfig};
+use quarot::bench_support::{record, Artifacts};
+use quarot::cluster::LatencySummary;
+use quarot::coordinator::batcher::{GenerationEngine, TOKENS_PER_PAGE};
+use quarot::coordinator::prefix::PrefixStats;
+use quarot::coordinator::runner::QuantSpec;
+use quarot::util::bench::Table;
+
+const MODEL: &str = "tiny-mha";
+const SEED: u64 = 21;
+const PAGES: usize = 4096;
+const N_REQS: usize = 12;
+const MAX_NEW: usize = 8;
+
+/// Prompt set with `shared_pct` % of each prompt common to every
+/// request (the "system prompt"), unique tails after it.
+fn prompts(art: &Artifacts, shared_pct: usize) -> Result<Vec<Vec<u16>>> {
+    let eval = art.corpus.split("eval")?;
+    let plen = 3 * TOKENS_PER_PAGE;
+    if eval.len() < plen * 8 {
+        bail!("eval split too short ({} tokens) for {plen}-token prompts",
+              eval.len());
+    }
+    let shared = plen * shared_pct / 100;
+    Ok((0..N_REQS)
+        .map(|i| {
+            let mut p = eval[..shared].to_vec();
+            let off = plen * 2 + (i * 31) % (plen * 4);
+            p.extend_from_slice(&eval[off..off + plen - shared]);
+            p
+        })
+        .collect())
+}
+
+struct Run {
+    ttft: LatencySummary,
+    stats: PrefixStats,
+    streams: Vec<Vec<u16>>,
+}
+
+/// Drive the mix sequentially (per-request TTFT stays attributable) and
+/// run the leak smoke before returning.
+fn run(art: &Artifacts, shared_pct: usize, prefix_pages: usize) -> Result<Run> {
+    let runner = art.runner(QuantSpec::quarot(4), None)?;
+    let mut engine = GenerationEngine::new(runner, PAGES, SEED);
+    engine.set_prefix_cache_pages(prefix_pages);
+    let session = LocalSession::new(engine, SessionConfig::default());
+    let mut ttfts = Vec::new();
+    let mut streams = Vec::new();
+    for p in prompts(art, shared_pct)? {
+        let out = session
+            .submit(GenerationParams::new(p).max_new(MAX_NEW))
+            .map_err(|e| anyhow!("{e}"))?
+            .wait()?;
+        ttfts.push(out.stats.ttft_ms);
+        streams.push(out.tokens);
+    }
+    let stats = session.prefix_stats();
+    if session.pool_in_use() != stats.pages_pinned {
+        bail!("leak: {} pages in use after drain vs {} pinned by the trie",
+              session.pool_in_use(), stats.pages_pinned);
+    }
+    session.clear_prefix_cache();
+    if session.pool_in_use() != 0 {
+        bail!("leak: {} pages still allocated after the prefix flush",
+              session.pool_in_use());
+    }
+    Ok(Run { ttft: LatencySummary::of(&mut ttfts), stats, streams })
+}
+
+/// Acceptance: cache-on ≡ cache-off token streams at every mix, plus
+/// the leak smoke inside [`run`].
+fn check(art: &Artifacts) -> Result<()> {
+    for pct in [0usize, 50, 100] {
+        let cold = run(art, pct, 0)?;
+        let hot = run(art, pct, PAGES / 2)?;
+        if cold.streams != hot.streams {
+            bail!("{pct}% shared traffic: prefix-cache token streams \
+                   diverged from the cold path");
+        }
+        println!("[check] {pct:3}% shared: {N_REQS} reqs bit-exact, \
+                  hit rate {:.0}%, {} prefill tokens saved",
+                 hot.stats.hit_rate() * 100.0, hot.stats.hit_tokens);
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let check_mode = std::env::args().any(|a| a == "--check");
+    let art = match Artifacts::load(MODEL) {
+        Ok(a) => a,
+        Err(_) => {
+            eprintln!("[skip] artifacts missing — run `make artifacts`");
+            return Ok(());
+        }
+    };
+
+    if check_mode {
+        check(&art)?;
+        println!("[check] prefix cache acceptance OK");
+        return Ok(());
+    }
+
+    let mut t = Table::new(
+        "Shared-prefix cache — hit rate, prefill work saved, TTFT by mix",
+        &["shared %", "hit %", "toks saved", "ttft ms", "ttft p95",
+          "cold ttft ms"]);
+    for pct in [0usize, 50, 100] {
+        let cold = run(&art, pct, 0)?;
+        let hot = run(&art, pct, PAGES / 2)?;
+        println!("  [{pct:3}% shared] hit {:.0}%, {} prefill tokens saved, \
+                  ttft {:.2} ms (cold {:.2} ms)",
+                 hot.stats.hit_rate() * 100.0, hot.stats.hit_tokens,
+                 hot.ttft.mean_ms, cold.ttft.mean_ms);
+        t.row(vec![
+            format!("{pct}"),
+            format!("{:.0}", hot.stats.hit_rate() * 100.0),
+            format!("{}", hot.stats.hit_tokens),
+            format!("{:.2}", hot.ttft.mean_ms),
+            format!("{:.2}", hot.ttft.p95_ms),
+            format!("{:.2}", cold.ttft.mean_ms),
+        ]);
+    }
+    record("prefix_cache", &t.render())
+}

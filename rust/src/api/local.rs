@@ -13,6 +13,7 @@ use anyhow::Result;
 use super::{EventSource, GenerationEvent, GenerationParams, InferenceService,
             RequestHandle, RequestId, SubmitError};
 use crate::coordinator::batcher::{EngineStats, GenerationEngine};
+use crate::coordinator::prefix::PrefixStats;
 
 /// Session-level knobs.
 #[derive(Clone, Copy, Debug)]
@@ -146,6 +147,17 @@ impl LocalSession {
 
     pub fn pool_in_use(&self) -> usize {
         self.core.borrow().engine.pool_in_use()
+    }
+
+    /// Shared prefix-cache counters and pinned-page gauge.
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.core.borrow().engine.prefix_stats()
+    }
+
+    /// Flush the prefix cache, releasing the pages it pins (pages still
+    /// grafted by live sequences survive until those sequences finish).
+    pub fn clear_prefix_cache(&self) {
+        self.core.borrow_mut().engine.clear_prefix_cache();
     }
 }
 

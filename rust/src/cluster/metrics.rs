@@ -13,6 +13,7 @@
 
 use crate::coordinator::batcher::GenerationEngine;
 use crate::coordinator::kvcache::PoolStats;
+use crate::coordinator::prefix::PrefixStats;
 use crate::util::bench::Table;
 use crate::util::json::{n, obj, Value};
 
@@ -52,6 +53,8 @@ pub struct ShardMetrics {
     pub active_slots: usize,
     pub queue_bound: usize,
     pub pool: PoolStats,
+    /// shared prefix-cache counters (hit rate, pinned pages, evictions)
+    pub prefix: PrefixStats,
     pub completed: usize,
     pub cancelled: usize,
     pub failed: usize,
@@ -75,6 +78,7 @@ impl ShardMetrics {
             active_slots: engine.active_slot_count(),
             queue_bound: engine.queue_bound(),
             pool: engine.pool_stats(),
+            prefix: engine.prefix_stats(),
             completed: st.completed,
             cancelled: st.cancelled,
             failed: st.failed,
@@ -112,6 +116,12 @@ impl ShardMetrics {
             ("pages_total", n(self.pool.pages_total as f64)),
             ("pages_in_use", n(self.pool.in_use as f64)),
             ("pages_high_water", n(self.pool.high_water as f64)),
+            ("prefix_lookups", n(self.prefix.lookups as f64)),
+            ("prefix_hits", n(self.prefix.hits as f64)),
+            ("prefix_hit_rate", n(self.prefix.hit_rate())),
+            ("prefix_hit_tokens", n(self.prefix.hit_tokens as f64)),
+            ("prefix_pages_pinned", n(self.prefix.pages_pinned as f64)),
+            ("prefix_evicted_pages", n(self.prefix.evicted_pages as f64)),
             ("completed", n(self.completed as f64)),
             ("cancelled", n(self.cancelled as f64)),
             ("failed", n(self.failed as f64)),
@@ -191,6 +201,35 @@ impl ClusterMetrics {
         self.shards.iter().map(|s| s.tokens_per_sec).sum()
     }
 
+    pub fn prefix_lookups(&self) -> usize {
+        self.sum(|s| s.prefix.lookups)
+    }
+
+    pub fn prefix_hits(&self) -> usize {
+        self.sum(|s| s.prefix.hits)
+    }
+
+    /// Cluster-wide prefix-cache hit rate (hits over lookups, across
+    /// shards — per-shard rates are in `per_shard`).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let lookups = self.prefix_lookups();
+        if lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits() as f64 / lookups as f64
+    }
+
+    /// Prompt tokens served from shared prefix caches instead of being
+    /// prefilled — the cluster's prefill-work-saved counter.
+    pub fn prefix_tokens_saved(&self) -> usize {
+        self.sum(|s| s.prefix.hit_tokens)
+    }
+
+    /// Pool pages currently pinned by the shards' prefix tries.
+    pub fn prefix_pages_pinned(&self) -> usize {
+        self.sum(|s| s.prefix.pages_pinned)
+    }
+
     /// TTFT averaged over every request that started, across shards.
     pub fn avg_ttft_ms(&self) -> f64 {
         let count: usize = self.sum(|s| s.ttft_count);
@@ -226,6 +265,11 @@ impl ClusterMetrics {
             ("pool_pages_in_use", n(self.pool_pages_in_use() as f64)),
             ("pool_pages_total", n(self.pool_pages_total() as f64)),
             ("kv_high_water", n(self.kv_high_water() as f64)),
+            ("prefix_lookups", n(self.prefix_lookups() as f64)),
+            ("prefix_hits", n(self.prefix_hits() as f64)),
+            ("prefix_hit_rate", n(self.prefix_hit_rate())),
+            ("prefix_tokens_saved", n(self.prefix_tokens_saved() as f64)),
+            ("prefix_pages_pinned", n(self.prefix_pages_pinned() as f64)),
         ]
     }
 
@@ -245,7 +289,8 @@ impl ClusterMetrics {
         let mut t = Table::new(
             "Cluster shards — live load and lifetime counters",
             &["shard", "alive", "queue", "active", "pages", "hi-water",
-              "done", "ddl", "cxl", "fail", "tok/s", "ttft ms"]);
+              "pfx hit%", "pfx pages", "done", "ddl", "cxl", "fail",
+              "tok/s", "ttft ms"]);
         for s in &self.shards {
             t.row(vec![
                 format!("{}", s.shard),
@@ -254,6 +299,8 @@ impl ClusterMetrics {
                 format!("{}", s.active_slots),
                 format!("{}/{}", s.pool.in_use, s.pool.pages_total),
                 format!("{}", s.pool.high_water),
+                format!("{:.0}", s.prefix.hit_rate() * 100.0),
+                format!("{}", s.prefix.pages_pinned),
                 format!("{}", s.completed),
                 format!("{}", s.deadline_exceeded),
                 format!("{}", s.cancelled),
@@ -269,6 +316,8 @@ impl ClusterMetrics {
             format!("{}", self.active_slots()),
             format!("{}/{}", self.pool_pages_in_use(), self.pool_pages_total()),
             format!("{}", self.kv_high_water()),
+            format!("{:.0}", self.prefix_hit_rate() * 100.0),
+            format!("{}", self.prefix_pages_pinned()),
             format!("{}", self.completed()),
             format!("{}", self.deadline_exceeded()),
             format!("{}", self.cancelled()),
@@ -292,6 +341,10 @@ mod tests {
             active_slots: a,
             queue_bound: 8,
             pool: PoolStats { pages_total: 100, in_use: 10 * i, high_water: 20 },
+            prefix: PrefixStats {
+                lookups: 4, hits: 2, misses: 2, hit_tokens: 32, hit_pages: 8,
+                inserted_pages: 8, evicted_pages: 0, pages_pinned: 8,
+            },
             completed: done,
             tokens_per_sec: 50.0,
             ttft_sum_ms: 30.0 * done as f64,
@@ -315,6 +368,11 @@ mod tests {
         assert_eq!(m.pool_pages_total(), 200);
         assert!((m.tokens_per_sec() - 100.0).abs() < 1e-9);
         assert!((m.avg_ttft_ms() - 30.0).abs() < 1e-9);
+        assert_eq!(m.prefix_lookups(), 8);
+        assert_eq!(m.prefix_hits(), 4);
+        assert!((m.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(m.prefix_tokens_saved(), 64);
+        assert_eq!(m.prefix_pages_pinned(), 16);
     }
 
     #[test]
@@ -328,7 +386,10 @@ mod tests {
                     "pool_pages_in_use", "queue_bound",
                     // live-load additions
                     "queue_depth", "active_slots", "shards",
-                    "deadline_exceeded"] {
+                    "deadline_exceeded",
+                    // prefix-cache additions
+                    "prefix_lookups", "prefix_hits", "prefix_hit_rate",
+                    "prefix_tokens_saved", "prefix_pages_pinned"] {
             assert!(v.get(key).is_some(), "summary missing key {key}");
         }
     }
@@ -344,6 +405,9 @@ mod tests {
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[1].get("shard").unwrap().as_usize(), Some(1));
         assert_eq!(rows[1].get("completed").unwrap().as_usize(), Some(3));
+        assert_eq!(rows[1].get("prefix_hits").unwrap().as_usize(), Some(2));
+        assert_eq!(rows[1].get("prefix_pages_pinned").unwrap().as_usize(),
+                   Some(8));
         // the render path must not panic and must mention every shard
         let rendered = m.render();
         assert!(rendered.contains("Σ"));

@@ -11,10 +11,16 @@
 //!
 //! [`ClusterService`] is the single front door:
 //!
-//! * **router** — a submit goes to the least-loaded *live* shard (queue
-//!   depth, then active slots, then KV-page pressure).  A shard at its
-//!   admission bound answers `QueueFull` and the router tries the next;
-//!   only when **every** live shard is at bound does the caller see the
+//! * **router** — placement is *prefix-affine, then load-ranked*: the
+//!   shard that most recently served the longest page-aligned prefix of
+//!   this prompt ranks first (its shared prefix cache most likely still
+//!   holds those pages — see `coordinator::prefix`), and the existing
+//!   load ranking (queue depth, then active slots, then KV-page
+//!   pressure) orders the rest and breaks ties.  The affinity map is
+//!   advisory (chain hashes of token runs): a stale entry costs one
+//!   cache miss, never correctness.  A shard at its admission bound
+//!   answers `QueueFull` and the router tries the next; only when
+//!   **every** live shard is at bound does the caller see the
 //!   cluster-level [`SubmitError::QueueFull`] — the cluster's
 //!   backpressure signal.
 //! * **scheduler** — per-shard admission is fair-share across
@@ -43,7 +49,7 @@ use anyhow::Result;
 
 use crate::api::{EventSource, GenerationEvent, GenerationParams,
                  InferenceService, RequestHandle, RequestId, SubmitError};
-use crate::coordinator::batcher::{GenerationEngine, Request};
+use crate::coordinator::batcher::{GenerationEngine, Request, TOKENS_PER_PAGE};
 
 pub mod metrics;
 
@@ -92,6 +98,82 @@ enum ShardMsg {
     Metrics {
         reply: mpsc::Sender<ShardMetrics>,
     },
+    /// Flush the shard's prefix cache, releasing its pinned pages.
+    ClearPrefix {
+        reply: mpsc::Sender<()>,
+    },
+}
+
+/// Router-side memory of which shard last served each prompt-prefix
+/// run-chain (page-granular FNV-1a chain hashes).  Purely advisory: a
+/// stale or colliding entry only costs a prefix-cache miss on the
+/// chosen shard, never correctness — the shard-side trie compares exact
+/// tokens before grafting anything.
+struct PrefixAffinity {
+    /// chain hash → (shard, stamp of the last placement)
+    map: HashMap<u64, (usize, u64)>,
+    clock: u64,
+    cap: usize,
+}
+
+/// Cap on hashed runs per prompt — prefixes deeper than this share the
+/// placement decision of their 32-page ancestor.
+const AFFINITY_MAX_RUNS: usize = 32;
+
+impl PrefixAffinity {
+    fn new(cap: usize) -> PrefixAffinity {
+        PrefixAffinity { map: HashMap::new(), clock: 0, cap }
+    }
+
+    /// FNV-1a chain hashes of the prompt's successive
+    /// [`TOKENS_PER_PAGE`]-token runs: `hashes[k]` covers runs `0..=k`,
+    /// matching the page granularity of the shard-side prefix trie.
+    fn chain_hashes(prompt: &[u16]) -> Vec<u64> {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        prompt.chunks_exact(TOKENS_PER_PAGE)
+            .take(AFFINITY_MAX_RUNS)
+            .map(|run| {
+                for &t in run {
+                    h ^= t as u64;
+                    h = h.wrapping_mul(0x0000_0100_0000_01b3);
+                }
+                h
+            })
+            .collect()
+    }
+
+    /// Deepest recorded run-chain per shard for this prompt.
+    fn match_depths(&self, hashes: &[u64], n_shards: usize) -> Vec<usize> {
+        let mut depths = vec![0usize; n_shards];
+        for (k, h) in hashes.iter().enumerate() {
+            if let Some(&(shard, _)) = self.map.get(h) {
+                if shard < n_shards {
+                    depths[shard] = depths[shard].max(k + 1);
+                }
+            }
+        }
+        depths
+    }
+
+    /// Remember that `shard` now holds this prompt's prefix chain
+    /// (latest placement wins).
+    fn record(&mut self, hashes: &[u64], shard: usize) {
+        if hashes.is_empty() {
+            return;
+        }
+        self.clock += 1;
+        for &h in hashes {
+            self.map.insert(h, (shard, self.clock));
+        }
+        if self.map.len() > self.cap {
+            // drop the stalest half in one sweep (rare, O(n log n))
+            let mut stamps: Vec<u64> =
+                self.map.values().map(|&(_, s)| s).collect();
+            stamps.sort_unstable();
+            let cut = stamps[stamps.len() / 2];
+            self.map.retain(|_, &mut (_, s)| s >= cut);
+        }
+    }
 }
 
 struct Shard {
@@ -135,6 +217,11 @@ fn handle_msg(shard_idx: usize, engine: &mut GenerationEngine, msg: ShardMsg,
         ShardMsg::Metrics { reply } => {
             let _ = reply.send(ShardMetrics::from_engine(shard_idx, engine));
         }
+        ShardMsg::ClearPrefix { reply } => {
+            engine.clear_prefix_cache();
+            publish_gauges(engine, gauges);
+            let _ = reply.send(());
+        }
     }
 }
 
@@ -177,6 +264,9 @@ fn shard_loop(shard_idx: usize, factory: EngineFactory, queue_bound: usize,
                     }
                     Ok(ShardMsg::Metrics { reply }) => {
                         let _ = reply.send(ShardMetrics::dead(shard_idx));
+                    }
+                    Ok(ShardMsg::ClearPrefix { reply }) => {
+                        let _ = reply.send(());
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -247,6 +337,8 @@ struct ClusterCore {
     /// Ids whose handle was dropped undrained: frames are discarded until
     /// the terminal event clears the entry.
     released: HashSet<RequestId>,
+    /// Prompt-prefix → shard placement memory (the affinity ranking).
+    affinity: PrefixAffinity,
     next_id: u64,
     queue_bound: usize,
     shutdown: Arc<AtomicBool>,
@@ -267,12 +359,17 @@ impl ClusterCore {
         let mut req = params.into_request();
         req.id = self.next_id;
         self.next_id += 1;
-        // place on the least-loaded live shard; fall through the ranking
-        // on per-shard QueueFull / transport failure
+        // place by prefix affinity first — the shard that most recently
+        // served the longest prefix of this prompt still has it cached —
+        // then by load; fall through the ranking on per-shard QueueFull
+        // / transport failure
+        let hashes = PrefixAffinity::chain_hashes(&req.prompt);
+        let depths = self.affinity.match_depths(&hashes, self.shards.len());
         let mut order: Vec<usize> = (0..self.shards.len())
             .filter(|&i| self.shards[i].gauges.alive.load(Ordering::SeqCst))
             .collect();
-        order.sort_by_key(|&i| Self::load_score(&self.shards[i].gauges));
+        order.sort_by_key(|&i| (std::cmp::Reverse(depths[i]),
+                                Self::load_score(&self.shards[i].gauges)));
         if order.is_empty() {
             return Err(SubmitError::Transport("no live shards".into()));
         }
@@ -304,6 +401,7 @@ impl ClusterCore {
             }
             match rrx.recv() {
                 Ok(Ok(id)) => {
+                    self.affinity.record(&hashes, si);
                     self.owner.insert(id, si);
                     return Ok(id);
                 }
@@ -533,6 +631,7 @@ impl ClusterService {
                 buffered: VecDeque::new(),
                 owner: HashMap::new(),
                 released: HashSet::new(),
+                affinity: PrefixAffinity::new(4096),
                 next_id: 1,
                 queue_bound: cfg.queue_bound,
                 shutdown,
@@ -581,6 +680,24 @@ impl ClusterService {
     pub fn metrics(&self) -> ClusterMetrics {
         self.core.borrow().metrics()
     }
+
+    /// Flush every shard's prefix cache, releasing the pages it pins
+    /// (pages still grafted by live sequences survive until those
+    /// sequences finish) — the admin flush behind leak checks and
+    /// cache reconfiguration.
+    pub fn clear_prefix_caches(&self) {
+        let core = self.core.borrow();
+        let pending: Vec<Option<mpsc::Receiver<()>>> = core.shards.iter()
+            .map(|s| {
+                let (rtx, rrx) = mpsc::channel();
+                s.ctl.send(ShardMsg::ClearPrefix { reply: rtx }).ok()
+                    .map(|_| rrx)
+            })
+            .collect();
+        for rrx in pending.into_iter().flatten() {
+            let _ = rrx.recv();
+        }
+    }
 }
 
 impl InferenceService for ClusterService {
@@ -591,5 +708,53 @@ impl InferenceService for ClusterService {
 
     fn cancel(&mut self, id: RequestId) -> Result<bool> {
         Ok(ClusterService::cancel(self, id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prompt(n: usize, seed: u16) -> Vec<u16> {
+        (0..n as u16).map(|i| i.wrapping_mul(7).wrapping_add(seed)).collect()
+    }
+
+    #[test]
+    fn affinity_ranks_the_recording_shard_by_longest_prefix() {
+        let mut aff = PrefixAffinity::new(1024);
+        let p = prompt(3 * TOKENS_PER_PAGE, 1);
+        let h = PrefixAffinity::chain_hashes(&p);
+        assert_eq!(h.len(), 3);
+        aff.record(&h, 2);
+        // full-prompt resubmit: shard 2 matches all 3 runs
+        assert_eq!(aff.match_depths(&h, 4), vec![0, 0, 3, 0]);
+        // a prompt diverging in run 1 still matches depth 1 on shard 2
+        let mut q = p.clone();
+        q[TOKENS_PER_PAGE] ^= 1;
+        let hq = PrefixAffinity::chain_hashes(&q);
+        assert_eq!(hq[0], h[0], "shared first run must hash alike");
+        assert_ne!(hq[1], h[1], "divergent chain must hash apart");
+        assert_eq!(aff.match_depths(&hq, 4), vec![0, 0, 1, 0]);
+        // a later placement of the same chain takes the ownership over
+        aff.record(&h, 0);
+        assert_eq!(aff.match_depths(&h, 4)[0], 3);
+        // sub-page prompts produce no runs, hence no affinity signal
+        assert!(PrefixAffinity::chain_hashes(&p[..TOKENS_PER_PAGE - 1])
+                    .is_empty());
+        assert_eq!(aff.match_depths(&[], 4), vec![0; 4]);
+    }
+
+    #[test]
+    fn affinity_map_trims_to_capacity_keeping_fresh_entries() {
+        let mut aff = PrefixAffinity::new(8);
+        for i in 0..64u16 {
+            let h = PrefixAffinity::chain_hashes(&prompt(TOKENS_PER_PAGE, i));
+            assert_eq!(h.len(), 1);
+            aff.record(&h, (i % 4) as usize);
+        }
+        assert!(aff.map.len() <= 8, "map grew past its cap: {}", aff.map.len());
+        let h = PrefixAffinity::chain_hashes(&prompt(TOKENS_PER_PAGE, 63));
+        assert_eq!(aff.match_depths(&h, 4)[63 % 4], 1,
+                   "the most recent entry must survive trimming");
     }
 }

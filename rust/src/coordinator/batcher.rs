@@ -8,6 +8,14 @@
 //! (`Append`) and samples the next token.  Finished/failed/cancelled slots
 //! release their pages immediately.
 //!
+//! Admission consults the shared prefix cache (`coordinator::prefix`)
+//! first: a page-aligned cached prompt prefix is grafted into the new
+//! sequence's cache (refcounted, read-only — CoW at page granularity)
+//! and only the uncached suffix runs a forward pass, through the decode
+//! graph so suffix tokens attend over the grafted prefix at their true
+//! positions.  Cold prefills donate their prompt's full pages back to
+//! the trie.
+//!
 //! The engine is *event-oriented*: every lifecycle step is emitted as a
 //! [`GenerationEvent`] tagged with the request id (`Queued` on submit,
 //! `Started`/first `Token` at admit, one `Token` per decode tick, exactly
@@ -21,9 +29,10 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use super::kvcache::{PagePool, PoolStats, SeqCache};
+use super::kvcache::{PageGroup, PagePool, PoolStats, SeqCache};
+use super::prefix::{PrefixCache, PrefixStats};
 use super::runner::{DecodeStaging, Runner};
 use super::sampler::{sample, Sampling};
 use crate::api::{FinishReason, GenerationEvent, Priority, RequestStats,
@@ -34,6 +43,10 @@ use crate::backend::pool::SendPtr;
 use crate::backend::ComputeBackend;
 use crate::model::ModelConfig;
 use crate::util::prng::Rng;
+
+/// Tokens per KV page — the unit of paging, of prefix sharing, and of
+/// the cluster router's prefix-affinity hashing.
+pub const TOKENS_PER_PAGE: usize = 16;
 
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -203,6 +216,9 @@ pub struct EngineStats {
     pub deadline_exceeded: usize,
     pub decode_steps: usize,
     pub decode_tokens: usize,
+    /// prompt tokens prefilled through the decode graph on the
+    /// prefix-cache hit path (the uncached suffixes)
+    pub suffix_prefill_tokens: usize,
     pub total_decode_ms: f64,
     pub total_prefill_ms: f64,
     pub peak_cache_bytes: usize,
@@ -230,6 +246,11 @@ pub struct GenerationEngine {
     /// and the per-slot decode-tick fan-out route through this.
     backend: Arc<dyn ComputeBackend>,
     pool: PagePool,
+    /// Shared prompt-prefix cache over the page pool: a trie of retained
+    /// full pages, consulted at admission (budget 0 = disabled; always
+    /// disabled on the fp16 baseline, whose authoritative K/V live in
+    /// dense staging rather than pages).
+    prefix: PrefixCache,
     slots: Vec<Option<Slot>>,
     /// Fair-share admission queue (weighted deficit across priority
     /// classes — see [`FairQueue`]).
@@ -249,7 +270,7 @@ pub struct GenerationEngine {
 impl GenerationEngine {
     pub fn new(runner: Runner, pool_pages: usize, seed: u64) -> GenerationEngine {
         let cfg = runner.cfg.clone();
-        let tokens_per_page = 16usize;
+        let tokens_per_page = TOKENS_PER_PAGE;
         let kv_bits = if runner.spec.kv_bits == 16 { 8 } else { runner.spec.kv_bits };
         let geom = SeqCache::new(&cfg, kv_bits, runner.spec.kv_clip,
                                  tokens_per_page).geom();
@@ -258,6 +279,11 @@ impl GenerationEngine {
             backend: runner.backend.clone(),
             staging: DecodeStaging::new(&cfg, fp),
             pool: PagePool::new(geom.page_bytes(), pool_pages),
+            // default on at half the pool — enough to absorb common
+            // system prompts without starving live sequences; resize or
+            // disable via `set_prefix_cache_pages` (`--prefix-cache`)
+            prefix: PrefixCache::new(tokens_per_page, cfg.n_layers,
+                                     if fp { 0 } else { pool_pages / 2 }),
             slots: (0..cfg.decode_batch).map(|_| None).collect(),
             queue: FairQueue::new(),
             queue_bound: usize::MAX,
@@ -385,6 +411,34 @@ impl GenerationEngine {
         self.pool.stats()
     }
 
+    /// Prefix-cache counters and pinned-page gauge.
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.prefix.stats()
+    }
+
+    /// Drop every prefix-cache entry, releasing the trie's page
+    /// references (pages still grafted by live sequences stay allocated
+    /// until those sequences finish).
+    pub fn clear_prefix_cache(&mut self) {
+        self.prefix.clear(&mut self.pool);
+    }
+
+    /// Reconfigure the prefix-cache page budget (0 disables).  Existing
+    /// entries are flushed and counters restart.  The fp16 baseline
+    /// keeps its authoritative K/V in dense staging, not pages, so the
+    /// cache stays disabled there regardless of the budget.
+    pub fn set_prefix_cache_pages(&mut self, pages: usize) {
+        self.prefix.clear(&mut self.pool);
+        let budget = if self.runner.spec.kv_bits == 16 { 0 } else { pages };
+        self.prefix = PrefixCache::new(self.tokens_per_page,
+                                       self.runner.cfg.n_layers, budget);
+    }
+
+    /// Page granularity of the KV store (tokens per page).
+    pub fn tokens_per_page(&self) -> usize {
+        self.tokens_per_page
+    }
+
     /// Drain the undelivered lifecycle events, in emission order.
     pub fn take_events(&mut self) -> Vec<(u64, GenerationEvent)> {
         self.events.drain(..).collect()
@@ -437,12 +491,16 @@ impl GenerationEngine {
         }
     }
 
-    /// Admit queued requests into free slots (prefill + cache init).
+    /// Admit queued requests into free slots, consulting the shared
+    /// prefix cache first: a page-aligned cached prefix is grafted
+    /// (read-only, refcounted) and only the uncached suffix runs a
+    /// forward pass; a miss takes the cold full-prefill path.
     ///
     /// A request can terminate *at admission* — sampled first token hits
     /// the stop token, `max_new_tokens == 1`, or prefill fails — in
-    /// which case the slot stays free (no pages were ever taken) and the
-    /// next queued request is pulled immediately.
+    /// which case the slot stays free (the cold path never touched the
+    /// page pool; the hit path frees everything it grafted) and the next
+    /// queued request is pulled immediately.
     fn admit(&mut self) -> Result<()> {
         'slots: for slot_idx in 0..self.slots.len() {
             if self.slots[slot_idx].is_some() {
@@ -451,37 +509,59 @@ impl GenerationEngine {
             loop {
                 let cfg = self.runner.cfg.clone();
                 let fp = self.runner.spec.kv_bits == 16;
+                let mut shared: Vec<PageGroup> = Vec::new();
                 if !fp {
-                    // Page-admission check on the *scheduled-next* request,
-                    // before it is popped: one that can NEVER fit (needs
-                    // more pages than the whole pool) fails fast — it must
-                    // not stall the queue behind it until every in-flight
-                    // request drains.  One that merely can't fit *right
-                    // now* holds admission with the scheduler state
-                    // untouched, so it keeps head-of-line priority and the
-                    // other class cannot leapfrog it to the freed pages.
+                    // Prefix consult + page-admission check on the
+                    // *scheduled-next* request, before it is popped: one
+                    // that can NEVER fit (needs more pages than the
+                    // whole pool) fails fast — it must not stall the
+                    // queue behind it until every in-flight request
+                    // drains.  One that merely can't fit *right now*
+                    // first reclaims idle prefix-cache pages, then holds
+                    // admission with the scheduler state untouched, so
+                    // it keeps head-of-line priority and the other class
+                    // cannot leapfrog it to the freed pages.
                     let Some((head, _)) = self.queue.peek() else {
                         break 'slots;
                     };
-                    let need = 2 * cfg.n_layers
-                        * head.prompt.len().div_ceil(self.tokens_per_page);
-                    if need > self.pool.capacity() {
+                    let (plen, head_max_new) =
+                        (head.prompt.len(), head.max_new_tokens);
+                    // longest cached prefix, page-granular; at least one
+                    // suffix token stays uncached — its forward pass
+                    // produces the first-token logits
+                    let max_groups =
+                        plen.saturating_sub(1) / self.tokens_per_page;
+                    shared = self.prefix.lookup(&head.prompt, max_groups);
+                    let full_need = admission_pages(
+                        plen, head_max_new, cfg.n_layers,
+                        self.tokens_per_page, 0);
+                    let need = admission_pages(
+                        plen, head_max_new, cfg.n_layers,
+                        self.tokens_per_page, shared.len());
+                    if full_need > self.pool.capacity() {
                         let (req, _enq) = self.queue.pop().unwrap();
+                        self.prefix.record_use(0);
                         self.stats.failed += 1;
                         self.events.push_back((req.id, GenerationEvent::Failed {
                             error: format!(
-                                "prompt needs {need} KV pages but the pool \
+                                "prompt needs {full_need} KV pages but the pool \
                                  only holds {}", self.pool.capacity()),
                         }));
                         continue;
                     }
                     if need > self.pool.available() {
-                        break 'slots;
+                        self.prefix.evict_for(&mut self.pool, need);
+                        if need > self.pool.available() {
+                            break 'slots;
+                        }
                     }
                 }
                 let Some((req, enq)) = self.queue.pop() else {
                     break 'slots;
                 };
+                if !fp {
+                    self.prefix.record_use(shared.len());
+                }
                 // A prompt the staging/cache geometry cannot hold at all
                 // fails fast (real configs have cache_seq >= max_seq, so
                 // this only guards pathological configurations).
@@ -493,6 +573,72 @@ impl GenerationEngine {
                     }));
                     continue;
                 }
+
+                if !shared.is_empty() {
+                    // ---- prefix-hit path: graft shared pages, prefill
+                    // only the uncached suffix (through the decode
+                    // graph), sample the first token off the final
+                    // suffix step's logits ----
+                    let t0 = Instant::now();
+                    let built = self.graft_and_extend(slot_idx, &req, &shared);
+                    self.stats.total_prefill_ms +=
+                        t0.elapsed().as_secs_f64() * 1e3;
+                    let (mut cache, first_logits) = match built {
+                        Ok(x) => x,
+                        Err(e) => {
+                            self.stats.failed += 1;
+                            self.events.push_back((req.id,
+                                                   GenerationEvent::Failed {
+                                error: format!("suffix prefill failed: {e:#}"),
+                            }));
+                            continue;
+                        }
+                    };
+                    let first_tok = sample(&first_logits, req.sampling,
+                                           &mut self.rng) as u16;
+                    let ttft = enq.elapsed().as_secs_f64() * 1e3;
+                    self.stats.ttft_sum_ms += ttft;
+                    self.stats.ttft_count += 1;
+                    self.events.push_back((req.id, GenerationEvent::Started {
+                        ttft_ms: ttft,
+                    }));
+                    self.events.push_back((req.id, GenerationEvent::Token {
+                        token: first_tok, index: 0,
+                    }));
+                    let hit_stop = req.stop_token == Some(first_tok);
+                    if hit_stop || req.max_new_tokens <= 1 {
+                        // admission-terminal: unlike the cold path the
+                        // cache already exists — free it (grafted refs
+                        // included) and pull the next request
+                        cache.free(&mut self.pool);
+                        let reason = if hit_stop {
+                            FinishReason::Stop
+                        } else {
+                            FinishReason::MaxTokens
+                        };
+                        self.emit_finish(req.id, reason, RequestStats {
+                            prompt_len: req.prompt.len(),
+                            generated: 1,
+                            ttft_ms: ttft,
+                            decode_ms: 0.0,
+                            queued_ms: enq.elapsed().as_secs_f64() * 1e3,
+                        });
+                        continue;
+                    }
+                    self.donate_prompt_pages(&req.prompt, &cache);
+                    self.slots[slot_idx] = Some(Slot {
+                        generated: vec![first_tok],
+                        next_token: first_tok,
+                        enqueued: enq,
+                        started: Instant::now(),
+                        ttft_ms: ttft,
+                        req,
+                        cache,
+                    });
+                    break;
+                }
+
+                // ---- cold path: full prefill ----
                 let t0 = Instant::now();
                 let pre = match self.runner.prefill(&req.prompt) {
                     Ok(p) => p,
@@ -576,6 +722,10 @@ impl GenerationEngine {
                     }
                     // also write the dense staging region for this slot
                     self.load_slot_staging(slot_idx, &cache);
+                    // cold prefills seed the shared prefix cache: donate
+                    // the prompt's full pages (retained by the trie, so
+                    // they outlive this request)
+                    self.donate_prompt_pages(&req.prompt, &cache);
                 }
 
                 self.slots[slot_idx] = Some(Slot {
@@ -591,6 +741,118 @@ impl GenerationEngine {
             }
         }
         Ok(())
+    }
+
+    /// Hit-path admission: graft the shared prefix pages (retained,
+    /// read-only), then run the uncached suffix through the *decode*
+    /// graph one token at a time — suffix tokens must attend over the
+    /// grafted prefix at their true positions, which the fixed-shape
+    /// prefill graph cannot express.  Each step appends that token's
+    /// K/V into the cache and stages it; the final step's logits are
+    /// the first-token sampling distribution (the cold path reads the
+    /// same distribution off the prefill graph's last prompt position).
+    /// On error the partially built cache — grafted refs included — is
+    /// freed before returning.
+    fn graft_and_extend(&mut self, slot_idx: usize, req: &Request,
+                        shared: &[PageGroup]) -> Result<(SeqCache, Vec<f32>)> {
+        let cfg = self.runner.cfg.clone();
+        let (b, v, d) = (cfg.decode_batch, cfg.vocab, cfg.d_kv());
+        let mut cache = SeqCache::new(&cfg, self.cache_bits(),
+                                      self.runner.spec.kv_clip,
+                                      self.tokens_per_page);
+        cache.graft_prefix(&mut self.pool, shared);
+        debug_assert!(cache.len < req.prompt.len(),
+                      "at least one suffix token must stay uncached");
+        self.load_slot_staging(slot_idx, &cache);
+        let mut first_logits = vec![0.0f32; v];
+        while cache.len < req.prompt.len() {
+            // a batched decode step where only this slot's lane is
+            // meaningful: the other lanes read zero-length caches and
+            // their outputs are discarded, so no live slot is touched
+            let mut tokens = vec![0i32; b];
+            let mut lens = vec![0i32; b];
+            tokens[slot_idx] = req.prompt[cache.len] as i32;
+            lens[slot_idx] = cache.len as i32;
+            let step = self.runner.decode(&tokens, &lens, &self.staging);
+            let (logits, k_new, v_new) = match step {
+                Ok(x) => x,
+                Err(e) => {
+                    cache.free(&mut self.pool);
+                    return Err(e);
+                }
+            };
+            // all-or-nothing across the layer loop (admission already
+            // sized the pool for the whole suffix, so this only trips
+            // if that estimate is ever broken)
+            if self.pool.available() < cache.pages_needed_for_append() {
+                cache.free(&mut self.pool);
+                bail!("KV page pool exhausted during suffix prefill");
+            }
+            for l in 0..cfg.n_layers {
+                let o = (l * b + slot_idx) * d;
+                if let Err(e) = cache.append_layer(&mut self.pool, l,
+                                                   &k_new[o..o + d],
+                                                   &v_new[o..o + d],
+                                                   cfg.kv_group) {
+                    cache.free(&mut self.pool);
+                    return Err(e);
+                }
+            }
+            cache.bump();
+            self.stage_token(slot_idx, &cache, cache.len - 1);
+            self.stats.suffix_prefill_tokens += 1;
+            first_logits.copy_from_slice(
+                &logits[slot_idx * v..(slot_idx + 1) * v]);
+        }
+        Ok((cache, first_logits))
+    }
+
+    /// Write one token of `cache` into slot `slot`'s dense staging
+    /// region (all layers, K and V) — the sequential single-token twin
+    /// of [`Self::refresh_staging_for`], used while a cache is still
+    /// being built at admission (the slot is not installed yet).
+    fn stage_token(&mut self, slot: usize, cache: &SeqCache, t: usize) {
+        let cfg = self.runner.cfg.clone();
+        let (l_n, b, s) = (cfg.n_layers, cfg.decode_batch, cfg.cache_seq);
+        let d = cfg.d_kv();
+        let ng = d / cfg.kv_group;
+        let mut codes = vec![0i8; d];
+        let mut scales = vec![0.0f32; ng];
+        let mut zeros = vec![0.0f32; ng];
+        for l in 0..l_n {
+            for want_v in [false, true] {
+                cache.read_token(&self.pool, l, t, want_v,
+                                 &mut codes, &mut scales, &mut zeros);
+                let co = ((l * b + slot) * s + t) * d;
+                let go = ((l * b + slot) * s + t) * ng;
+                let (dc, ds, dz) = if want_v {
+                    (&mut self.staging.v_codes, &mut self.staging.v_scale,
+                     &mut self.staging.v_zero)
+                } else {
+                    (&mut self.staging.k_codes, &mut self.staging.k_scale,
+                     &mut self.staging.k_zero)
+                };
+                dc[co..co + d].copy_from_slice(&codes);
+                ds[go..go + ng].copy_from_slice(&scales);
+                dz[go..go + ng].copy_from_slice(&zeros);
+            }
+        }
+    }
+
+    /// Donate a freshly admitted cache's full prompt pages to the
+    /// prefix trie (no-op when the cache is disabled or the prompt is
+    /// shorter than one page).  The trie retains the pages, so they
+    /// outlive this request; generated tokens are never donated — only
+    /// prompt content recurs across requests.
+    fn donate_prompt_pages(&mut self, prompt: &[u16], cache: &SeqCache) {
+        let tpp = self.tokens_per_page;
+        let full = prompt.len() / tpp;
+        if full == 0 || !self.prefix.enabled() {
+            return;
+        }
+        let groups: Vec<PageGroup> =
+            (0..full).map(|i| cache.page_group(i)).collect();
+        self.prefix.insert(&mut self.pool, &prompt[..full * tpp], &groups);
     }
 
     /// Refresh the whole dense staging view of one slot from its pages.
@@ -665,6 +927,22 @@ impl GenerationEngine {
             return Ok(());
         }
         let sl = self.slots[slot].as_mut().unwrap();
+        // all-or-nothing across the per-layer loop: reserve the whole
+        // token's pages up front so an exhausted pool cannot leave some
+        // layers one token longer than others (with shared refcounted
+        // pages that skew would be silent cross-request corruption)
+        let need = sl.cache.pages_needed_for_append();
+        if self.pool.available() < need {
+            // reclaim idle prefix-cache pages before failing a live
+            // request — the trie's pins (up to half the pool by default)
+            // are the one revocable page source, and admission already
+            // does the same for queued requests
+            self.prefix.evict_for(&mut self.pool, need);
+        }
+        if self.pool.available() < need {
+            bail!("KV page pool exhausted (append needs {need} pages, \
+                   {} free)", self.pool.available());
+        }
         for l in 0..l_n {
             let o = (l * b + slot) * d;
             sl.cache.append_layer(&mut self.pool, l, &k_new[o..o + d],
@@ -894,6 +1172,21 @@ impl GenerationEngine {
     }
 }
 
+/// Pool pages the admission gate must see available before taking a
+/// request: every K/V stream page for the prompt *plus one decode-append
+/// token of headroom* — a prompt that exactly fills its pages must wait
+/// for pages rather than admit and then die on its first append with a
+/// spurious `KV append failed` — minus the pages covered by the grafted
+/// shared prefix (those are already allocated).  Requests that finish at
+/// admission (`max_new_tokens <= 1`) never append, so they need no
+/// headroom.
+fn admission_pages(prompt_len: usize, max_new_tokens: usize, n_layers: usize,
+                   tokens_per_page: usize, shared_groups: usize) -> usize {
+    let toks = prompt_len + usize::from(max_new_tokens > 1);
+    2 * n_layers
+        * toks.div_ceil(tokens_per_page).saturating_sub(shared_groups)
+}
+
 /// Native batched paged-decode attention — the rust twin of the decode
 /// graph's `Decode` stage (Appendix A.10) over the engine's dense staging
 /// slabs, dispatched through the [`ComputeBackend`].
@@ -1098,6 +1391,25 @@ mod tests {
         // weights 4:1 → 400/100 exactly, but allow one quantum of drift
         assert!((served[0] as i64 - 400).abs() <= 5, "served {served:?}");
         assert!(served[1] >= 95, "batch starved: {served:?}");
+    }
+
+    /// The admission page estimate must reserve first-decode-append
+    /// headroom — at an exact page boundary the old `ceil(prompt/tpp)`
+    /// sizing admitted, then the first append needed `2·L` fresh pages
+    /// and the request died with a spurious `KV append failed`.
+    #[test]
+    fn admission_pages_reserves_decode_headroom() {
+        // L = 2, tpp = 4; mid-page prompt: 6 + 1 tokens → 2 pages/stream
+        assert_eq!(admission_pages(6, 8, 2, 4, 0), 2 * 2 * 2);
+        // exact page boundary: 8 tokens must reserve a 3rd page/stream
+        assert_eq!(admission_pages(8, 8, 2, 4, 0), 2 * 2 * 3);
+        // one-token budgets finish at admission — no headroom, so the
+        // old exact-fit sizing is preserved for them
+        assert_eq!(admission_pages(8, 1, 2, 4, 0), 2 * 2 * 2);
+        // grafted shared-prefix pages are already allocated
+        assert_eq!(admission_pages(8, 8, 2, 4, 2), 2 * 2 * 1);
+        // an over-shared estimate saturates at zero
+        assert_eq!(admission_pages(3, 1, 2, 4, 5), 0);
     }
 
     fn test_cfg() -> ModelConfig {

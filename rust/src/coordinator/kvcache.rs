@@ -16,14 +16,19 @@ use crate::model::ModelConfig;
 use crate::quant::kv;
 
 /// Fixed-size page pool with explicit alloc/free and usage accounting.
-/// Double frees are rejected (hard panic) via an O(1) allocation bitmap —
-/// a freed-twice page would otherwise be handed to two sequences and
-/// silently cross-contaminate their caches.
+/// Pages are *refcounted*: `alloc` hands out a page at refcount 1 (the
+/// old exclusive-ownership bitmap, so pre-sharing call sites behave
+/// unchanged), [`PagePool::retain`] adds a reference when the prefix
+/// cache or a grafted sequence shares the page, and [`PagePool::release`]
+/// returns it to the free list only when the last reference drops.
+/// Releasing a free page is rejected with a hard panic — a freed-twice
+/// page would otherwise be handed to two sequences and silently
+/// cross-contaminate their caches.
 pub struct PagePool {
     page_bytes: usize,
     pages: Vec<Box<[u8]>>,
     free: Vec<usize>,
-    allocated: Vec<bool>,
+    refcount: Vec<u32>,
     pub high_water: usize,
 }
 
@@ -60,7 +65,7 @@ impl PagePool {
                 .map(|_| vec![0u8; page_bytes].into_boxed_slice())
                 .collect(),
             free: (0..n_pages).rev().collect(),
-            allocated: vec![false; n_pages],
+            refcount: vec![0; n_pages],
             high_water: 0,
         }
     }
@@ -68,7 +73,7 @@ impl PagePool {
     pub fn alloc(&mut self) -> Result<PageId> {
         match self.free.pop() {
             Some(id) => {
-                self.allocated[id] = true;
+                self.refcount[id] = 1;
                 self.high_water = self.high_water.max(self.in_use());
                 Ok(id)
             }
@@ -76,11 +81,29 @@ impl PagePool {
         }
     }
 
+    /// Take an extra reference on a live page (prefix-cache entries and
+    /// grafted shared prefixes).  Retaining a free page panics: sharing
+    /// is only defined for pages some owner is keeping alive.
+    pub fn retain(&mut self, id: PageId) {
+        assert!(self.refcount[id] > 0,
+                "retain of free page {id} (only live pages can be shared)");
+        self.refcount[id] += 1;
+    }
+
+    /// Drop one reference; the page returns to the free list when the
+    /// last owner releases it.
     pub fn release(&mut self, id: PageId) {
-        assert!(self.allocated[id],
+        assert!(self.refcount[id] > 0,
                 "double free of page {id} (or free of a never-allocated page)");
-        self.allocated[id] = false;
-        self.free.push(id);
+        self.refcount[id] -= 1;
+        if self.refcount[id] == 0 {
+            self.free.push(id);
+        }
+    }
+
+    /// Current reference count of a page (0 = free).
+    pub fn refcount(&self, id: PageId) -> u32 {
+        self.refcount[id]
     }
 
     pub fn in_use(&self) -> usize {
@@ -128,6 +151,23 @@ impl PagePool {
 struct PackedStream {
     pages: Vec<PageId>,
     len_tokens: usize,
+}
+
+impl PackedStream {
+    /// Whether appending one token requires a fresh pool page.
+    fn needs_page(&self, tokens_per_page: usize) -> bool {
+        self.len_tokens % tokens_per_page == 0
+            && self.len_tokens / tokens_per_page >= self.pages.len()
+    }
+}
+
+/// Per-layer page ids covering one *full* page worth of tokens
+/// (`tokens_per_page`) of already-quantized K and V — the prefix cache's
+/// unit of sharing.  `k[l]` / `v[l]` are the layer-`l` pages.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PageGroup {
+    pub k: Vec<PageId>,
+    pub v: Vec<PageId>,
 }
 
 /// Geometry of a packed token within a stream page.
@@ -188,10 +228,14 @@ impl SeqCache {
     fn write_token(geom: &StreamGeom, pool: &mut PagePool, stream: &mut PackedStream,
                    values: &[f32], group: usize, clip: f32) -> Result<()> {
         let tok = stream.len_tokens;
-        if tok % geom.tokens_per_page == 0 && tok / geom.tokens_per_page >= stream.pages.len() {
+        if stream.needs_page(geom.tokens_per_page) {
             stream.pages.push(pool.alloc()?);
         }
         let page = stream.pages[tok / geom.tokens_per_page];
+        // CoW invariant: grafted shared pages are always full, so writes
+        // only ever land on the (exclusively owned) tail page
+        debug_assert_eq!(pool.refcount(page), 1,
+                         "write into a shared KV page {page}");
         let off = (tok % geom.tokens_per_page) * geom.token_bytes();
         let (codes, scales, zeros) = kv::quant_slab(values, values.len(), group,
                                                     geom.bits, clip);
@@ -219,18 +263,55 @@ impl SeqCache {
 
     /// Append one token's K and V (each `(n_kv_heads * d_head)` f32, laid
     /// out head-major) for layer `l`.
+    ///
+    /// All-or-nothing: both streams' pages are reserved up front, so a
+    /// pool exhausted between the K and V writes can never leave the
+    /// stream lengths skewed (with shared refcounted pages that skew
+    /// would read as silent cross-request corruption, not a crash).
     pub fn append_layer(&mut self, pool: &mut PagePool, l: usize,
                         k_tok: &[f32], v_tok: &[f32], group: usize) -> Result<()> {
+        let tpp = self.geom.tokens_per_page;
+        let need = usize::from(self.k[l].needs_page(tpp))
+            + usize::from(self.v[l].needs_page(tpp));
+        if pool.available() < need {
+            bail!("KV page pool exhausted (append needs {need} pages, {} free \
+                   of {})", pool.available(), pool.capacity());
+        }
         Self::write_token(&self.geom, pool, &mut self.k[l], k_tok, group, self.clip)?;
         Self::write_token(&self.geom, pool, &mut self.v[l], v_tok, group, self.clip)?;
         Ok(())
     }
 
+    /// Pool pages the next one-token append across *all* layers
+    /// ([`Self::append_layer`] for `l` in `0..n_layers`) will allocate —
+    /// 0 mid-page, `2 * n_layers` at a page boundary.  The engine checks
+    /// this against [`PagePool::available`] before its per-layer append
+    /// loop so the whole-token append is all-or-nothing too.
+    pub fn pages_needed_for_append(&self) -> usize {
+        let tpp = self.geom.tokens_per_page;
+        self.k.iter().chain(self.v.iter())
+            .filter(|s| s.needs_page(tpp))
+            .count()
+    }
+
     /// Bulk-load from a prefill's returned K/V (layout (L, S, d_kv) flat).
+    ///
+    /// Atomic like [`Self::append_layer`]: every page the load needs is
+    /// reserved before anything is written, so a mid-loop pool
+    /// exhaustion cannot leave some layers longer than others.
     pub fn init_from_prefill(&mut self, pool: &mut PagePool, ks: &[f32], vs: &[f32],
                              seq: usize, group: usize) -> Result<()> {
         let d = self.geom.d_kv;
         assert_eq!(ks.len(), self.n_layers * seq * d);
+        debug_assert_eq!(self.len, 0, "init into a non-empty cache");
+        let tpp = self.geom.tokens_per_page;
+        let need: usize = self.k.iter().chain(self.v.iter())
+            .map(|s| (s.len_tokens + seq).div_ceil(tpp) - s.pages.len())
+            .sum();
+        if pool.available() < need {
+            bail!("KV page pool exhausted (cache init needs {need} pages, \
+                   {} free of {})", pool.available(), pool.capacity());
+        }
         for l in 0..self.n_layers {
             for s in 0..seq {
                 let o = (l * seq + s) * d;
@@ -242,6 +323,45 @@ impl SeqCache {
         }
         self.len = seq;
         Ok(())
+    }
+
+    /// Graft a shared, already-quantized prefix into an empty cache: each
+    /// [`PageGroup`] covers one *full* page (`tokens_per_page` tokens) of
+    /// every layer's K and V, and is retained rather than copied.  The
+    /// grafted pages are read-only by construction — they are full, and
+    /// [`SeqCache`] only ever writes at the append position, so the first
+    /// token past the shared prefix lands on a fresh exclusively-owned
+    /// page (copy-on-write at page granularity, with no copying).
+    pub fn graft_prefix(&mut self, pool: &mut PagePool, groups: &[PageGroup]) {
+        assert_eq!(self.len, 0, "graft into a non-empty cache");
+        for g in groups {
+            assert_eq!(g.k.len(), self.n_layers, "page group layer count");
+            assert_eq!(g.v.len(), self.n_layers, "page group layer count");
+            for l in 0..self.n_layers {
+                pool.retain(g.k[l]);
+                pool.retain(g.v[l]);
+                self.k[l].pages.push(g.k[l]);
+                self.v[l].pages.push(g.v[l]);
+            }
+        }
+        let toks = groups.len() * self.geom.tokens_per_page;
+        for s in self.k.iter_mut().chain(self.v.iter_mut()) {
+            s.len_tokens = toks;
+        }
+        self.len = toks;
+    }
+
+    /// The page ids covering tokens `[idx·tpp, (idx+1)·tpp)` of every
+    /// layer — must be a full page (the donation path hands these to the
+    /// prefix cache, which retains them).
+    pub fn page_group(&self, idx: usize) -> PageGroup {
+        let tpp = self.geom.tokens_per_page;
+        assert!((idx + 1) * tpp <= self.k[0].len_tokens,
+                "page {idx} is not full ({} tokens cached)", self.k[0].len_tokens);
+        PageGroup {
+            k: self.k.iter().map(|s| s.pages[idx]).collect(),
+            v: self.v.iter().map(|s| s.pages[idx]).collect(),
+        }
     }
 
     pub fn bump(&mut self) {
@@ -281,6 +401,13 @@ impl SeqCache {
             *z = f32::from_le_bytes(buf[p..p + 4].try_into().unwrap());
             p += 4;
         }
+    }
+
+    /// Token length of one packed stream.  Every one of the `2·n_layers`
+    /// streams holds the same count unless an append was torn —
+    /// consistency assertions (tests, debug checks) compare these.
+    pub fn stream_len(&self, l: usize, want_v: bool) -> usize {
+        if want_v { self.v[l].len_tokens } else { self.k[l].len_tokens }
     }
 
     /// Release all pages back to the pool.
@@ -525,6 +652,166 @@ mod tests {
         // group=16 → scale overhead is heavier than the paper's 128;
         // still a substantial saving
         assert!(saving > 1.5, "saving {saving}");
+    }
+
+    #[test]
+    fn retain_release_refcount_semantics() {
+        let mut pool = PagePool::new(8, 2);
+        let a = pool.alloc().unwrap();
+        assert_eq!(pool.refcount(a), 1);
+        pool.retain(a);
+        pool.retain(a);
+        assert_eq!(pool.refcount(a), 3);
+        assert_eq!(pool.in_use(), 1, "retain must not change occupancy");
+        pool.release(a);
+        pool.release(a);
+        assert_eq!(pool.in_use(), 1,
+                   "page stays allocated until the last release");
+        pool.release(a);
+        assert_eq!((pool.refcount(a), pool.in_use()), (0, 0));
+        // and the page is allocatable again afterwards
+        let _b = pool.alloc().unwrap();
+        let _c = pool.alloc().unwrap();
+        assert_eq!(pool.in_use(), 2);
+        assert!(pool.alloc().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of free page")]
+    fn retain_of_free_page_rejected() {
+        let mut pool = PagePool::new(8, 2);
+        pool.retain(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn release_past_last_reference_rejected() {
+        let mut pool = PagePool::new(8, 2);
+        let a = pool.alloc().unwrap();
+        pool.retain(a);
+        pool.release(a);
+        pool.release(a);
+        pool.release(a); // one release too many
+    }
+
+    /// A cache grafted from a donor's shared full pages plus its own
+    /// appended suffix must be byte-identical (codes, scales, zeros) to
+    /// a cold cache built purely by appends, and freeing every owner
+    /// must drain the pool (no refcount leaks).
+    #[test]
+    fn grafted_prefix_is_byte_identical_to_cold_build() {
+        let cfg = cfg();
+        let tpp = 4usize;
+        let geom = SeqCache::new(&cfg, 4, 0.95, tpp).geom();
+        let mut pool = PagePool::new(geom.page_bytes(), 256);
+        let d = cfg.d_kv();
+        let mut rng = Rng::new(7);
+        let toks: Vec<(Vec<f32>, Vec<f32>)> = (0..11)
+            .map(|_| (rng.normal_vec(d), rng.normal_vec(d)))
+            .collect();
+
+        let build = |pool: &mut PagePool, from: usize,
+                     base: Option<&[PageGroup]>| -> SeqCache {
+            let mut c = SeqCache::new(&cfg, 4, 0.95, tpp);
+            if let Some(groups) = base {
+                c.graft_prefix(pool, groups);
+            }
+            for (k, v) in &toks[from..] {
+                for l in 0..cfg.n_layers {
+                    c.append_layer(pool, l, k, v, cfg.kv_group).unwrap();
+                }
+                c.bump();
+            }
+            c
+        };
+        let donor = build(&mut pool, 0, None);
+        // "donate" the two full pages (8 of the 11 tokens) like the trie:
+        // retain every page in the donated groups
+        let groups: Vec<PageGroup> = (0..2).map(|i| donor.page_group(i)).collect();
+        for g in &groups {
+            for &p in g.k.iter().chain(g.v.iter()) {
+                pool.retain(p);
+            }
+        }
+        let cold = build(&mut pool, 0, None);
+        let hot = build(&mut pool, 2 * tpp, Some(&groups));
+        assert_eq!(hot.len, cold.len);
+
+        let mut want = (vec![0i8; d], vec![0.0f32; geom.groups],
+                        vec![0.0f32; geom.groups]);
+        let mut got = want.clone();
+        for l in 0..cfg.n_layers {
+            for t in 0..toks.len() {
+                for want_v in [false, true] {
+                    cold.read_token(&pool, l, t, want_v,
+                                    &mut want.0, &mut want.1, &mut want.2);
+                    hot.read_token(&pool, l, t, want_v,
+                                   &mut got.0, &mut got.1, &mut got.2);
+                    assert!(got == want, "layer {l} tok {t} v={want_v} diverged");
+                }
+            }
+        }
+        for mut c in [donor, cold, hot] {
+            c.free(&mut pool);
+        }
+        assert!(pool.in_use() > 0,
+                "donated refs must keep the shared pages alive");
+        for g in &groups {
+            for &p in g.k.iter().chain(g.v.iter()) {
+                pool.release(p);
+            }
+        }
+        assert_eq!(pool.in_use(), 0, "refcount leak after the last owner");
+    }
+
+    /// Exhausting the pool mid-append fails atomically: nothing is
+    /// allocated by the failing call and every stream keeps a
+    /// consistent K/V length (the skew this regression guards against
+    /// would read as silent corruption once pages are shared).
+    #[test]
+    fn append_exhaustion_is_atomic() {
+        let cfg = cfg(); // n_layers = 2
+        let tpp = 2usize;
+        let geom = SeqCache::new(&cfg, 4, 1.0, tpp).geom();
+        // room for exactly one layer's K+V pages: layer 0 appends fine,
+        // layer 1 must fail without touching anything
+        let mut pool = PagePool::new(geom.page_bytes(), 2);
+        let mut cache = SeqCache::new(&cfg, 4, 1.0, tpp);
+        let d = cfg.d_kv();
+        let (k, v) = (vec![0.5f32; d], vec![-0.5f32; d]);
+        assert_eq!(cache.pages_needed_for_append(), 2 * cfg.n_layers);
+        assert!(cache.append_layer(&mut pool, 0, &k, &v, cfg.kv_group).is_ok());
+        assert_eq!(pool.in_use(), 2);
+        let err = cache.append_layer(&mut pool, 1, &k, &v, cfg.kv_group);
+        assert!(err.is_err(), "layer 1 must exhaust the pool");
+        assert_eq!(pool.in_use(), 2, "failed append must not leak pages");
+        for l in 0..cfg.n_layers {
+            assert_eq!(cache.stream_len(l, false), cache.stream_len(l, true),
+                       "K/V stream lengths skewed at layer {l}");
+        }
+        assert_eq!((cache.stream_len(0, false), cache.stream_len(1, false)),
+                   (1, 0));
+    }
+
+    #[test]
+    fn init_from_prefill_exhaustion_allocates_nothing() {
+        let cfg = cfg();
+        let tpp = 4usize;
+        let geom = SeqCache::new(&cfg, 4, 1.0, tpp).geom();
+        // needs 2·L·ceil(6/4) = 8 pages; give it 3
+        let mut pool = PagePool::new(geom.page_bytes(), 3);
+        let mut cache = SeqCache::new(&cfg, 4, 1.0, tpp);
+        let (seq, d) = (6usize, cfg.d_kv());
+        let ks = vec![0.1f32; cfg.n_layers * seq * d];
+        let vs = vec![0.2f32; cfg.n_layers * seq * d];
+        assert!(cache.init_from_prefill(&mut pool, &ks, &vs, seq,
+                                        cfg.kv_group).is_err());
+        assert_eq!(pool.in_use(), 0, "failed init must allocate nothing");
+        for l in 0..cfg.n_layers {
+            assert_eq!(cache.stream_len(l, false), 0);
+            assert_eq!(cache.stream_len(l, true), 0);
+        }
+        assert_eq!(cache.len, 0);
     }
 
     #[test]

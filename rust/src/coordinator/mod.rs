@@ -2,8 +2,12 @@
 //! AOT-compiled prefill/decode graphs with a paged, *quantized* KV cache —
 //! the paper's inference system re-staged as a vLLM-style runtime.
 //!
-//! * [`kvcache`]  — page-pool allocator + per-sequence packed caches
-//!                  (the 3.9× memory story of Fig. 4/Table 17 lives here).
+//! * [`kvcache`]  — refcounted page-pool allocator + per-sequence packed
+//!                  caches (the 3.9× memory story of Fig. 4/Table 17
+//!                  lives here; refcounts make pages shareable).
+//! * [`prefix`]   — shared rotated-KV prefix cache: a page-granular trie
+//!                  over prompt token runs with LRU eviction, grafted
+//!                  into new sequences at admission (CoW by page).
 //! * [`runner`]   — typed façade over the engine: prefill / decode steps
 //!                  with the weight set of a [`runner::QuantSpec`].
 //! * [`sampler`]  — greedy / temperature / top-k token sampling.
@@ -12,5 +16,6 @@
 
 pub mod batcher;
 pub mod kvcache;
+pub mod prefix;
 pub mod runner;
 pub mod sampler;

@@ -1,0 +1,475 @@
+//! Shared rotated-KV prefix cache: a page-granular trie over prompt
+//! token runs.
+//!
+//! QuaRot's KV-4 quantization (Table 6: near-lossless; Table 17: ~3.9×
+//! smaller) makes cached prompt prefixes ~4× cheaper to keep resident
+//! than fp16 — exactly the regime where a shared prefix cache pays for
+//! itself under multi-user traffic with common system prompts.  This
+//! module is that cache:
+//!
+//! * **Entries are whole pages.**  A trie node stands for one
+//!   `tokens_per_page`-token run of a prompt and pins that run's
+//!   already-quantized, rotated K and V pages for every layer (a
+//!   [`PageGroup`]).  Page granularity keeps sharing safe: full pages
+//!   are never written again ([`super::kvcache::SeqCache`] only writes
+//!   at its append position), so a grafted prefix is read-only by
+//!   construction and the first divergent token lands on a fresh
+//!   exclusively-owned page — copy-on-write at page granularity, with
+//!   no copying.
+//! * **Refcounts, not ownership.**  Insertion retains pages
+//!   ([`PagePool::retain`]); eviction and [`PrefixCache::clear`]
+//!   release them.  An entry evicted while a live sequence still grafts
+//!   its pages keeps those pages allocated until the last sequence
+//!   frees them — the trie only ever drops *its own* reference.
+//! * **LRU eviction.**  Under the page budget, or under pool pressure
+//!   via [`PrefixCache::evict_for`], the least-recently-used *leaves*
+//!   go first (keeping the trie prefix-closed: an interior node's pages
+//!   are an ancestor of some live chain).  Nodes touched by the
+//!   operation currently in flight (same clock stamp) are protected, so
+//!   an admission can never evict the chain it is about to graft.
+
+use std::collections::HashMap;
+
+use super::kvcache::{PageGroup, PagePool};
+
+/// Counters and live gauges of one prefix cache — per-shard on the wire
+/// `metrics` frame, aggregated on the `stats` frame.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PrefixStats {
+    /// admissions that consulted the trie
+    pub lookups: usize,
+    /// admissions that grafted at least one shared page group
+    pub hits: usize,
+    /// admissions that found no (page-aligned) cached prefix
+    pub misses: usize,
+    /// prompt tokens served from the cache instead of prefill
+    pub hit_tokens: usize,
+    /// pool pages grafted from the cache (`2·n_layers` per group)
+    pub hit_pages: usize,
+    /// pool pages the trie retained over its lifetime
+    pub inserted_pages: usize,
+    /// pool pages released by LRU eviction or a cache clear
+    pub evicted_pages: usize,
+    /// live gauge: pool pages the trie currently pins
+    pub pages_pinned: usize,
+}
+
+impl PrefixStats {
+    /// Fraction of admissions that grafted a shared prefix.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups as f64
+    }
+}
+
+struct Node {
+    /// the `tokens_per_page`-token run this node extends its parent by
+    run: Box<[u16]>,
+    parent: Option<usize>,
+    children: HashMap<Box<[u16]>, usize>,
+    pages: PageGroup,
+    /// clock stamp of the last lookup/insert that touched this node
+    last_used: u64,
+}
+
+/// The trie.  Keys are exact token runs (no hashing — a collision would
+/// graft the wrong K/V); payloads are retained page groups.
+pub struct PrefixCache {
+    tokens_per_page: usize,
+    n_layers: usize,
+    /// Max pool pages the trie may pin; 0 disables the cache entirely.
+    max_pages: usize,
+    roots: HashMap<Box<[u16]>, usize>,
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<usize>,
+    clock: u64,
+    stats: PrefixStats,
+}
+
+impl PrefixCache {
+    pub fn new(tokens_per_page: usize, n_layers: usize, max_pages: usize)
+               -> PrefixCache {
+        assert!(tokens_per_page > 0 && n_layers > 0);
+        PrefixCache {
+            tokens_per_page,
+            n_layers,
+            max_pages,
+            roots: HashMap::new(),
+            nodes: Vec::new(),
+            free_slots: Vec::new(),
+            clock: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.max_pages > 0
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    pub fn pages_pinned(&self) -> usize {
+        self.stats.pages_pinned
+    }
+
+    /// Pool pages one group pins (K + V page per layer).
+    fn group_pages(&self) -> usize {
+        2 * self.n_layers
+    }
+
+    fn child(&self, cur: Option<usize>, run: &[u16]) -> Option<usize> {
+        let table = match cur {
+            None => &self.roots,
+            Some(p) => &self.nodes[p].as_ref().unwrap().children,
+        };
+        table.get(run).copied()
+    }
+
+    /// Longest chain of cached full-page groups matching `prompt`,
+    /// capped at `max_groups` (the caller leaves at least one suffix
+    /// token uncached — the first-token logits have to come from a live
+    /// forward pass).  Bumps the LRU stamps along the match; hit/miss
+    /// counters are recorded by [`Self::record_use`] at the actual
+    /// admission, so a request re-peeked for many ticks while holding
+    /// for pages does not inflate the hit rate.
+    pub fn lookup(&mut self, prompt: &[u16], max_groups: usize) -> Vec<PageGroup> {
+        if self.max_pages == 0 {
+            return Vec::new();
+        }
+        self.clock += 1;
+        let mut out = Vec::new();
+        let mut cur = None;
+        for run in prompt.chunks_exact(self.tokens_per_page).take(max_groups) {
+            let Some(id) = self.child(cur, run) else { break };
+            let node = self.nodes[id].as_mut().unwrap();
+            node.last_used = self.clock;
+            out.push(node.pages.clone());
+            cur = Some(id);
+        }
+        out
+    }
+
+    /// Record one admission's outcome — how many groups it actually
+    /// grafted (0 = miss).
+    pub fn record_use(&mut self, grafted_groups: usize) {
+        if self.max_pages == 0 {
+            return;
+        }
+        self.stats.lookups += 1;
+        if grafted_groups == 0 {
+            self.stats.misses += 1;
+        } else {
+            self.stats.hits += 1;
+            self.stats.hit_tokens += grafted_groups * self.tokens_per_page;
+            self.stats.hit_pages += grafted_groups * self.group_pages();
+        }
+    }
+
+    /// Donate the full-page groups of a freshly built cache
+    /// (`groups[i]` covers `prompt[i·tpp..(i+1)·tpp]`), walking and
+    /// extending the trie.  Existing nodes win over re-donation — the
+    /// codes are identical by construction (same tokens, same
+    /// deterministic quantizer), so keeping the first donor's pages
+    /// maximizes sharing.  New nodes retain their pages; the page
+    /// budget is enforced by evicting LRU leaves first and truncating
+    /// the donation when nothing evictable remains.
+    pub fn insert(&mut self, pool: &mut PagePool, prompt: &[u16],
+                  groups: &[PageGroup]) {
+        if self.max_pages == 0 || groups.is_empty() {
+            return;
+        }
+        assert!(groups.len() * self.tokens_per_page <= prompt.len(),
+                "donated groups exceed the prompt");
+        self.clock += 1;
+        let gp = self.group_pages();
+        let mut cur: Option<usize> = None;
+        for (i, g) in groups.iter().enumerate() {
+            let run = &prompt[i * self.tokens_per_page
+                              ..(i + 1) * self.tokens_per_page];
+            if let Some(id) = self.child(cur, run) {
+                self.nodes[id].as_mut().unwrap().last_used = self.clock;
+                cur = Some(id);
+                continue;
+            }
+            while self.stats.pages_pinned + gp > self.max_pages {
+                let Some(leaf) = self.lru_leaf() else { break };
+                self.evict_node(pool, leaf);
+            }
+            if self.stats.pages_pinned + gp > self.max_pages {
+                break; // budget held by entries hotter than this donation
+            }
+            for l in 0..self.n_layers {
+                pool.retain(g.k[l]);
+                pool.retain(g.v[l]);
+            }
+            let node = Node {
+                run: run.into(),
+                parent: cur,
+                children: HashMap::new(),
+                pages: g.clone(),
+                last_used: self.clock,
+            };
+            let id = match self.free_slots.pop() {
+                Some(slot) => {
+                    self.nodes[slot] = Some(node);
+                    slot
+                }
+                None => {
+                    self.nodes.push(Some(node));
+                    self.nodes.len() - 1
+                }
+            };
+            match cur {
+                None => {
+                    self.roots.insert(run.into(), id);
+                }
+                Some(p) => {
+                    self.nodes[p].as_mut().unwrap()
+                        .children.insert(run.into(), id);
+                }
+            }
+            self.stats.pages_pinned += gp;
+            self.stats.inserted_pages += gp;
+            cur = Some(id);
+        }
+    }
+
+    /// Least-recently-used evictable leaf: childless, and not touched by
+    /// the operation currently in flight (`last_used < clock`, so an
+    /// admission cannot evict the chain it just matched).
+    fn lru_leaf(&self) -> Option<usize> {
+        self.nodes.iter().enumerate()
+            .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+            .filter(|(_, n)| n.children.is_empty() && n.last_used < self.clock)
+            .min_by_key(|&(_, n)| n.last_used)
+            .map(|(i, _)| i)
+    }
+
+    fn evict_node(&mut self, pool: &mut PagePool, id: usize) {
+        let node = self.nodes[id].take().unwrap();
+        debug_assert!(node.children.is_empty(), "evicting an interior node");
+        for l in 0..self.n_layers {
+            pool.release(node.pages.k[l]);
+            pool.release(node.pages.v[l]);
+        }
+        match node.parent {
+            None => {
+                self.roots.remove(&node.run);
+            }
+            Some(p) => {
+                self.nodes[p].as_mut().unwrap().children.remove(&node.run);
+            }
+        }
+        self.free_slots.push(id);
+        let gp = self.group_pages();
+        self.stats.pages_pinned -= gp;
+        self.stats.evicted_pages += gp;
+    }
+
+    /// Evict LRU leaves until the pool has `target` available pages, or
+    /// nothing evictable remains.  A page still grafted by a live
+    /// sequence survives its trie eviction (the trie only drops its own
+    /// reference), so under pressure this converges on releasing
+    /// exactly the pages nobody is actively decoding over.
+    pub fn evict_for(&mut self, pool: &mut PagePool, target: usize) {
+        while pool.available() < target {
+            let Some(leaf) = self.lru_leaf() else { return };
+            self.evict_node(pool, leaf);
+        }
+    }
+
+    /// Release every cached page (counted into `evicted_pages`) — the
+    /// admin flush and the engine-reconfiguration path.
+    pub fn clear(&mut self, pool: &mut PagePool) {
+        loop {
+            let Some(leaf) = self.nodes.iter().enumerate()
+                .find(|(_, n)| n.as_ref().is_some_and(|n| n.children.is_empty()))
+                .map(|(i, _)| i)
+            else { break };
+            self.evict_node(pool, leaf);
+        }
+        debug_assert_eq!(self.stats.pages_pinned, 0, "pinned pages leaked");
+        self.roots.clear();
+        self.nodes.clear();
+        self.free_slots.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const L: usize = 2;
+    const TPP: usize = 4;
+
+    /// A "sequence-owned" group: freshly allocated pages (refcount 1).
+    fn group(pool: &mut PagePool) -> PageGroup {
+        PageGroup {
+            k: (0..L).map(|_| pool.alloc().unwrap()).collect(),
+            v: (0..L).map(|_| pool.alloc().unwrap()).collect(),
+        }
+    }
+
+    fn release_group(pool: &mut PagePool, g: &PageGroup) {
+        for &p in g.k.iter().chain(g.v.iter()) {
+            pool.release(p);
+        }
+    }
+
+    fn prompt(n: usize, seed: u16) -> Vec<u16> {
+        (0..n as u16).map(|i| i * 3 + seed).collect()
+    }
+
+    #[test]
+    fn insert_lookup_roundtrip_and_partial_match() {
+        let mut pool = PagePool::new(8, 64);
+        let mut trie = PrefixCache::new(TPP, L, usize::MAX);
+        let pa = prompt(12, 0); // 3 groups
+        let ga: Vec<PageGroup> = (0..3).map(|_| group(&mut pool)).collect();
+        trie.insert(&mut pool, &pa, &ga);
+        assert_eq!(trie.pages_pinned(), 3 * 2 * L);
+
+        assert_eq!(trie.lookup(&pa, 3), ga);
+        assert_eq!(trie.lookup(&pa, 2), ga[..2], "cap must truncate the chain");
+        // diverging at the second run matches only the first group
+        let mut pb = pa.clone();
+        pb[TPP] ^= 1;
+        assert_eq!(trie.lookup(&pb, 3), ga[..1]);
+        // a different first run misses outright
+        assert!(trie.lookup(&prompt(12, 9), 3).is_empty());
+        // short prompts never produce a full run
+        assert!(trie.lookup(&pa[..TPP - 1], 3).is_empty());
+
+        trie.record_use(3);
+        trie.record_use(0);
+        let s = trie.stats();
+        assert_eq!((s.lookups, s.hits, s.misses), (2, 1, 1));
+        assert_eq!(s.hit_tokens, 3 * TPP);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+
+        // drain: sequences release, then the trie
+        for g in &ga {
+            release_group(&mut pool, g);
+        }
+        assert_eq!(pool.in_use(), 3 * 2 * L, "trie must keep pages alive");
+        trie.clear(&mut pool);
+        assert_eq!(pool.in_use(), 0, "refcount leak");
+        assert_eq!(trie.stats().evicted_pages, 3 * 2 * L);
+    }
+
+    #[test]
+    fn redonation_keeps_first_donor_and_pins_nothing_new() {
+        let mut pool = PagePool::new(8, 64);
+        let mut trie = PrefixCache::new(TPP, L, usize::MAX);
+        let p = prompt(8, 0);
+        let first: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+        trie.insert(&mut pool, &p, &first);
+        let pinned = trie.pages_pinned();
+        let second: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+        trie.insert(&mut pool, &p, &second);
+        assert_eq!(trie.pages_pinned(), pinned, "re-donation must not pin");
+        assert_eq!(trie.lookup(&p, 2), first, "first donor must win");
+        for g in first.iter().chain(&second) {
+            release_group(&mut pool, g);
+        }
+        trie.clear(&mut pool);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn budget_evicts_lru_leaves_first() {
+        let mut pool = PagePool::new(8, 64);
+        // budget: exactly two groups
+        let mut trie = PrefixCache::new(TPP, L, 2 * 2 * L);
+        let pa = prompt(8, 0); // 2 groups: A1 → A2
+        let ga: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+        trie.insert(&mut pool, &pa, &ga);
+        for g in &ga {
+            release_group(&mut pool, g); // trie is now the sole owner
+        }
+        let _ = trie.lookup(&pa, 2); // make A recently used
+
+        let pb = prompt(4, 9); // 1 group
+        let gb = vec![group(&mut pool)];
+        trie.insert(&mut pool, &pb, &gb);
+        release_group(&mut pool, &gb[0]);
+
+        // the LRU *leaf* (A2) was evicted; A1 (interior → now leaf) stays
+        assert_eq!(trie.pages_pinned(), 2 * 2 * L);
+        assert_eq!(trie.stats().evicted_pages, 2 * L);
+        assert_eq!(trie.lookup(&pa, 2).len(), 1, "A1 must survive");
+        assert_eq!(trie.lookup(&pb, 1).len(), 1, "B must be cached");
+        // A2's pages went back to the pool (trie was sole owner)
+        assert_eq!(pool.in_use(), 2 * 2 * L);
+        trie.clear(&mut pool);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn evict_for_frees_pool_pages_but_protects_the_matched_chain() {
+        // pool sized so the trie's two chains fill it completely
+        let mut pool = PagePool::new(8, 4 * 2 * L);
+        let mut trie = PrefixCache::new(TPP, L, usize::MAX);
+        let (pa, pb) = (prompt(8, 0), prompt(8, 9));
+        for p in [&pa, &pb] {
+            let gs: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+            trie.insert(&mut pool, p, &gs);
+            for g in &gs {
+                release_group(&mut pool, g);
+            }
+        }
+        assert_eq!(pool.available(), 0);
+
+        // an admission that just matched A must evict from B, not A
+        let matched = trie.lookup(&pa, 2);
+        assert_eq!(matched.len(), 2);
+        trie.evict_for(&mut pool, 2 * L);
+        assert!(pool.available() >= 2 * L);
+        assert_eq!(trie.lookup(&pa, 2).len(), 2,
+                   "the just-matched chain must be protected");
+        assert!(trie.lookup(&pb, 2).len() < 2, "B must have shrunk");
+        trie.clear(&mut pool);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn eviction_spares_pages_still_grafted_by_sequences() {
+        let mut pool = PagePool::new(8, 2 * L);
+        let mut trie = PrefixCache::new(TPP, L, usize::MAX);
+        let p = prompt(4, 0);
+        let g = vec![group(&mut pool)];
+        trie.insert(&mut pool, &p, &g);
+        let _ = trie.lookup(&prompt(4, 5), 1); // advance the clock
+        // the "sequence" keeps its graft; evicting everything must not
+        // free the pages out from under it
+        trie.evict_for(&mut pool, 1);
+        assert_eq!(trie.pages_pinned(), 0, "entry evicted");
+        assert_eq!(pool.available(), 0,
+                   "grafted pages must survive their trie eviction");
+        release_group(&mut pool, &g[0]);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let mut pool = PagePool::new(8, 16);
+        let mut trie = PrefixCache::new(TPP, L, 0);
+        let p = prompt(8, 0);
+        let gs: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+        let before = pool.in_use();
+        trie.insert(&mut pool, &p, &gs);
+        assert!(trie.lookup(&p, 2).is_empty());
+        trie.record_use(0);
+        assert_eq!(trie.stats(), PrefixStats::default());
+        assert_eq!(pool.in_use(), before, "disabled cache must not retain");
+        assert!(!trie.enabled());
+        for g in &gs {
+            release_group(&mut pool, g);
+        }
+        assert_eq!(pool.in_use(), 0);
+    }
+}

@@ -28,7 +28,9 @@
 //!                   probes.bin, and the rust-side QuaRot transform.
 //! * [`runtime`]   — PJRT engine: manifest-driven executable registry.
 //! * [`coordinator`] — the serving layer: continuous batcher, paged
-//!                   quantized KV-cache manager, sampler, metrics.
+//!                   quantized KV-cache manager with refcounted pages,
+//!                   the shared prompt-prefix trie (grafted at
+//!                   admission, CoW by page), sampler, metrics.
 //! * [`api`]       — the unified inference API: typed `GenerationParams`,
 //!                   the `InferenceService` trait, per-request
 //!                   `GenerationEvent` streams with cancellation and
@@ -36,8 +38,9 @@
 //!                   the TCP `Client`, and the v2 event-frame wire codec.
 //! * [`cluster`]   — sharded serving: N engine shards (one tick thread
 //!                   each) behind one `InferenceService` front, with a
-//!                   load-aware router (queue depth / active slots /
-//!                   KV-page pressure), fair-share priority + deadline
+//!                   prefix-affine load-aware router (longest cached
+//!                   prefix, then queue depth / active slots / KV-page
+//!                   pressure), fair-share priority + deadline
 //!                   scheduling, and a runtime metrics registry.
 //! * [`server`]    — threaded TCP front-end speaking the v2 event-frame
 //!                   protocol (one JSON frame per event, multiplexed by

@@ -4,7 +4,8 @@
 //! Subcommands:
 //!   serve         start the TCP serving front-end (QuaRot-INT4 by
 //!                 default; v2 event-frame protocol, --queue-bound for
-//!                 per-shard admission, --shards N engine shards)
+//!                 per-shard admission, --shards N engine shards,
+//!                 --prefix-cache N shared-prefix page budget)
 //!   generate      generation from a token prompt (--stream prints tokens
 //!                 incrementally; --priority / --deadline-ms scheduling)
 //!   cluster-bench drive a sharded cluster with synthetic mixed
@@ -91,8 +92,11 @@ fn main() -> Result<()> {
                                --deadline-ms N (server-side deadline)\n\
                  serve:        --queue-bound N (per-shard admission)\n\
                                --shards N (engine shards behind one front)\n\
+                               --prefix-cache N (shared-prefix page budget\n\
+                               per shard; 0 disables, default pages/2)\n\
                  cluster-bench: --shards N --interactive N --batch N\n\
                                --max-new N --batch-max-new N\n\
+                               --prefix-cache N (0 disables)\n\
                  see README.md for the full matrix"
             );
             Ok(())
@@ -116,11 +120,17 @@ fn serve(args: &Args) -> Result<()> {
     let shards = args.usize_or("shards", 1);
     let queue_bound = args.usize_or("queue-bound",
                                     quarot::server::DEFAULT_QUEUE_BOUND);
+    // shared-prefix page budget per shard: 0 disables, default half the
+    // pool (the engine's own default, restated here so the flag is
+    // self-documenting)
+    let prefix_pages = args.usize_or("prefix-cache", pages / 2);
     let handle = quarot::server::serve_sharded(
         move || {
             let art = Artifacts::load(&model)?;
             let runner = art.runner(spec.clone(), None)?;
-            Ok(GenerationEngine::new(runner, pages, 7))
+            let mut engine = GenerationEngine::new(runner, pages, 7);
+            engine.set_prefix_cache_pages(prefix_pages);
+            Ok(engine)
         },
         port,
         queue_bound,
@@ -225,11 +235,14 @@ fn cluster_bench(args: &Args) -> Result<()> {
     if eval_toks.len() < 8 {
         bail!("eval split too short ({} tokens) for prompts", eval_toks.len());
     }
+    let prefix_pages = args.usize_or("prefix-cache", pages / 2);
     let m = model.clone();
     let factory: EngineFactory = Arc::new(move || {
         let art = Artifacts::load(&m)?;
         let runner = art.runner(spec.clone(), None)?;
-        Ok(GenerationEngine::new(runner, pages, 7))
+        let mut engine = GenerationEngine::new(runner, pages, 7);
+        engine.set_prefix_cache_pages(prefix_pages);
+        Ok(engine)
     });
     let cluster = ClusterService::new(
         factory,

@@ -15,8 +15,9 @@
 //! completion object.
 //!
 //! `{"cmd":"stats"}` answers flat cluster aggregates (live queue depth,
-//! active slots, retire counters); `{"cmd":"metrics"}` adds the full
-//! per-shard breakdown.
+//! active slots, retire counters, prefix-cache hit rate / tokens saved /
+//! pinned pages); `{"cmd":"metrics"}` adds the full per-shard breakdown
+//! (including each shard's prefix-cache gauges).
 //!
 //! `{"cmd":"shutdown"}` stops the whole server: it sets the shared
 //! shutdown flag (cluster thread and accept loop both exit) rather than

@@ -3,7 +3,9 @@
 //! rejection, byte-identical output between the event path and the
 //! legacy `run_to_completion` shim, the scheduler semantics (deadline
 //! expiry, fair-share priority admission, cluster-level QueueFull,
-//! 1-shard cluster ≡ LocalSession), and the v2 TCP event-frame protocol
+//! 1-shard cluster ≡ LocalSession), the shared prefix cache (hit-path
+//! bit-exactness, page-boundary admission headroom, drained-cluster
+//! refcount-leak checks), and the v2 TCP event-frame protocol
 //! (interleaving, cancel, live stats, raw v1 compatibility).
 //!
 //! Like `integration.rs`, every test needs `make artifacts` and skips
@@ -17,7 +19,7 @@ use quarot::api::{FinishReason, GenerationEvent, GenerationParams, Priority,
                   LocalSession, RequestHandle, SessionConfig, SubmitError};
 use quarot::bench_support::{drain_event_signatures, Artifacts};
 use quarot::cluster::{ClusterConfig, ClusterService, EngineFactory};
-use quarot::coordinator::batcher::{GenerationEngine, Request};
+use quarot::coordinator::batcher::{GenerationEngine, Request, TOKENS_PER_PAGE};
 use quarot::coordinator::runner::QuantSpec;
 use quarot::coordinator::sampler::Sampling;
 use quarot::server::{serve, serve_sharded, Client};
@@ -384,6 +386,142 @@ fn cluster_queue_full_only_when_every_shard_is_bound() {
                "admission must reopen after the backlog drains");
 }
 
+/// Session with an explicit prefix-cache page budget (0 disables).
+fn session_with_prefix(art: &Artifacts, pages: usize, seed: u64,
+                       prefix_pages: usize) -> LocalSession {
+    let runner = art.runner(QuantSpec::quarot(4), None).unwrap();
+    let mut engine = GenerationEngine::new(runner, pages, seed);
+    engine.set_prefix_cache_pages(prefix_pages);
+    LocalSession::new(engine, SessionConfig::default())
+}
+
+/// Acceptance: generations through the prefix cache — full hit, partial
+/// hit with CoW divergence, and miss — are byte-identical to cold-path
+/// generations at the same seed, and the only pages held after the
+/// sessions drain are the trie's own (released by a flush: no refcount
+/// leaks).
+#[test]
+fn prefix_cache_hit_path_is_byte_identical_and_leak_free() {
+    let Some(art) = art() else { return };
+    let eval = art.corpus.split("eval").unwrap();
+    let tpp = TOKENS_PER_PAGE;
+    if eval.len() < 16 * tpp {
+        eprintln!("[skip] eval split too short for prefix-cache prompts");
+        return;
+    }
+    // P0: donor.  P1: shares P0's first two pages, diverges after (CoW).
+    // P2 = P0 (full-prefix hit).  P3: disjoint (miss).
+    let p0: Vec<u16> = eval[..2 * tpp + 8].to_vec();
+    let mut p1 = eval[..2 * tpp].to_vec();
+    p1.extend_from_slice(&eval[7 * tpp..7 * tpp + 8]);
+    let p2 = p0.clone();
+    let p3: Vec<u16> = eval[10 * tpp..12 * tpp + 8].to_vec();
+    let prompts = [p0, p1, p2, p3];
+
+    let run = |prefix_pages: usize| -> (Vec<Vec<u16>>, LocalSession) {
+        let s = session_with_prefix(&art, 2048, 17, prefix_pages);
+        let tokens = prompts.iter()
+            .map(|p| {
+                s.submit(GenerationParams::new(p.clone()).max_new(6))
+                    .unwrap().wait().unwrap().tokens
+            })
+            .collect();
+        (tokens, s)
+    };
+    let (cold, _cold_s) = run(0);
+    let (hot, hot_s) = run(1024);
+    assert_eq!(cold, hot,
+               "prefix-cache generations must be byte-identical to cold");
+
+    let ps = hot_s.prefix_stats();
+    assert_eq!(ps.lookups, 4);
+    assert_eq!(ps.hits, 2, "P1 (partial) and P2 (full) must hit: {ps:?}");
+    assert_eq!(ps.hit_tokens, 2 * 2 * tpp,
+               "both hits graft two full pages");
+    // drained session: only the trie's donated pages remain pinned...
+    assert_eq!(hot_s.pool_in_use(), ps.pages_pinned,
+               "drained session must hold exactly the trie's pages");
+    assert!(ps.pages_pinned > 0, "cold prefills must donate");
+    // ...and a flush returns every last page (no refcount leaks)
+    hot_s.clear_prefix_cache();
+    assert_eq!(hot_s.pool_in_use(), 0, "prefix flush must drain the pool");
+}
+
+/// Satellite regression: a prompt that exactly fills its pages must not
+/// admit into a pool with zero decode headroom and then die on its
+/// first append with a spurious `KV append failed` — the admission
+/// estimate reserves one decode token, so the request fails fast with a
+/// typed page-admission error (or waits, when the pool is merely busy).
+#[test]
+fn admission_reserves_decode_headroom_at_page_boundary() {
+    let Some(art) = art() else { return };
+    let eval = art.corpus.split("eval").unwrap();
+    let tpp = TOKENS_PER_PAGE;
+    let l = art.runner(QuantSpec::quarot(4), None).unwrap().cfg.n_layers;
+    let prompt: Vec<u16> = eval[..2 * tpp].to_vec(); // exactly 2 pages
+
+    // pool = exactly the prompt's pages → can never also hold the first
+    // decode append: typed fail-fast, before any prefill or decode
+    let s = session_with_prefix(&art, 2 * l * 2, 3, 0);
+    let h = s.submit(GenerationParams::new(prompt.clone()).max_new(4)).unwrap();
+    let err = h.wait().unwrap_err().to_string();
+    assert!(err.contains("KV pages"),
+            "expected the typed page-admission failure, got: {err}");
+    assert!(!err.contains("KV append failed"),
+            "spurious first-append failure is the old bug: {err}");
+    assert_eq!(s.stats().decode_steps, 0, "must fail before any decode");
+    assert_eq!(s.pool_in_use(), 0);
+
+    // one more page row of headroom: the same request completes
+    let s = session_with_prefix(&art, 2 * l * 3, 3, 0);
+    let h = s.submit(GenerationParams::new(prompt).max_new(4)).unwrap();
+    assert_eq!(h.wait().unwrap().tokens.len(), 4);
+    assert_eq!(s.pool_in_use(), 0);
+}
+
+/// Acceptance: a fully-drained cluster holds only its prefix tries'
+/// pages, affinity routing funnels shared-prefix traffic into cache
+/// hits, and flushing the tries returns every shard's pool to zero.
+#[test]
+fn drained_cluster_pools_drain_to_zero_after_prefix_clear() {
+    let Some(art) = art() else { return };
+    let eval = art.corpus.split("eval").unwrap();
+    let tpp = TOKENS_PER_PAGE;
+    if eval.len() < 16 * tpp {
+        eprintln!("[skip] eval split too short for prefix-cache prompts");
+        return;
+    }
+    let factory: EngineFactory = Arc::new(|| {
+        let art = Artifacts::load("tiny-mha")?;
+        let runner = art.runner(QuantSpec::quarot(4), None)?;
+        Ok(GenerationEngine::new(runner, 2048, 5))
+    });
+    let cluster = ClusterService::new(factory,
+                                      ClusterConfig { shards: 2, queue_bound: 64 });
+    // shared-prefix traffic: one common 2-page system prompt, unique tails
+    let base: Vec<u16> = eval[..2 * tpp].to_vec();
+    let handles: Vec<RequestHandle> = (0..6)
+        .map(|i| {
+            let mut p = base.clone();
+            p.extend_from_slice(&eval[4 * tpp + i * 8..4 * tpp + i * 8 + 8]);
+            cluster.submit(GenerationParams::new(p).max_new(4)).unwrap()
+        })
+        .collect();
+    for h in &handles {
+        h.wait().unwrap();
+    }
+    let m = cluster.metrics();
+    assert_eq!(m.pool_pages_in_use(), m.prefix_pages_pinned(),
+               "drained cluster must hold only prefix-cache pages");
+    assert!(m.prefix_pages_pinned() > 0, "cold prefills must donate");
+    assert!(m.prefix_hits() >= 1,
+            "affinity-routed shared-prefix traffic must hit the cache");
+    cluster.clear_prefix_caches();
+    let m = cluster.metrics();
+    assert_eq!(m.pool_pages_in_use(), 0,
+               "flushed cluster must return every shard's pool to zero");
+}
+
 #[test]
 fn tcp_interleaved_requests_and_cancel() {
     if art().is_none() {
@@ -507,7 +645,9 @@ fn stats_frame_reports_live_load_and_metrics_break_out_shards() {
     let mut c2 = Client::connect(handle.port).unwrap();
     let stats = c2.stats().unwrap();
     for key in ["queue_depth", "active_slots", "shards", "deadline_exceeded",
-                "completed", "pool_pages_in_use", "queue_bound"] {
+                "completed", "pool_pages_in_use", "queue_bound",
+                "prefix_lookups", "prefix_hit_rate", "prefix_tokens_saved",
+                "prefix_pages_pinned"] {
         assert!(stats.get(key).is_some(), "stats frame missing {key}: {stats:?}");
     }
     assert_eq!(stats.get("shards").unwrap().as_usize(), Some(2));
@@ -523,6 +663,8 @@ fn stats_frame_reports_live_load_and_metrics_break_out_shards() {
         assert_eq!(row.get("shard").unwrap().as_usize(), Some(i));
         assert!(row.get("pages_in_use").is_some());
         assert!(row.get("queue_depth").is_some());
+        assert!(row.get("prefix_hit_rate").is_some());
+        assert!(row.get("prefix_pages_pinned").is_some());
     }
 
     for h in &handles {
