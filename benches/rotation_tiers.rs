@@ -1,0 +1,188 @@
+//! Rotation-scheme × precision-tier matrix: every selectable
+//! [`RotationKind`] crossed with the KV4 / KV8 quality tiers.
+//!
+//! Full mode tabulates eval perplexity and decode throughput for each
+//! (scheme, tier) cell — the serving-facing restatement of the paper's
+//! Table 8 (rotation ablation) and Table 6 (KV-bit grid): rotations
+//! decide how well activations quantize, tiers decide how wide the KV
+//! cache is per request, and the two compose.
+//!
+//! `--check` is the CI acceptance smoke:
+//!   * every scheme × tier cell builds a runner end-to-end and yields a
+//!     finite perplexity (a broken rotation shows up as NaN/inf);
+//!   * a mixed KV4/KV8 workload on one engine retires every request and
+//!     the per-tier counters partition the totals exactly
+//!     (`kv4_completed + kv8_completed == completed`, same for
+//!     `decode_tokens`) with both tiers represented.
+//!
+//! Like the other benches it self-skips with exit 0 when AOT artifacts
+//! are absent, so CI stays green on runners without `make artifacts`.
+
+use anyhow::{anyhow, bail, Result};
+
+use quarot::api::{GenerationParams, LocalSession, QualityTier,
+                  SessionConfig};
+use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::coordinator::batcher::GenerationEngine;
+use quarot::coordinator::runner::{QuantSpec, Runner};
+use quarot::eval;
+use quarot::rotation::RotationKind;
+use quarot::util::bench::Table;
+
+const MODEL: &str = "tiny-mha";
+const SEED: u64 = 33;
+const PAGES: usize = 2048;
+const N_REQS: usize = 8;
+const PROMPT_LEN: usize = 24;
+const MAX_NEW: usize = 8;
+
+/// Runner for `kind` with the KV cache at `kv_bits`, collecting
+/// calibration stats when the scheme needs them (scaled-hadamard folds
+/// per-channel scales into the weights, which requires activation amax).
+fn runner_for(art: &Artifacts, kind: RotationKind, kv_bits: u32)
+    -> Result<Runner>
+{
+    let mut spec = QuantSpec::quarot(4);
+    spec.kv_bits = kv_bits;
+    spec.kv_bits_v = kv_bits;
+    kind.apply_to_spec(&mut spec)?;
+    let stats = if spec.smooth {
+        Some(art.calib(spec.variant.is_rotated(), 4)?)
+    } else {
+        None
+    };
+    art.runner(spec, stats.as_ref())
+}
+
+fn prompts(art: &Artifacts) -> Result<Vec<Vec<u16>>> {
+    let eval_toks = art.corpus.split("eval")?;
+    if eval_toks.len() < PROMPT_LEN * 8 {
+        bail!("eval split too short ({} tokens)", eval_toks.len());
+    }
+    Ok((0..N_REQS)
+        .map(|i| {
+            let off = (i * 37) % (eval_toks.len() - PROMPT_LEN);
+            eval_toks[off..off + PROMPT_LEN].to_vec()
+        })
+        .collect())
+}
+
+/// Decode throughput for one cell: drive a small single-tier workload
+/// through an engine and read the aggregate tokens/sec.
+fn decode_tps(art: &Artifacts, runner: Runner, tier: QualityTier)
+    -> Result<f64>
+{
+    let engine = GenerationEngine::new(runner, PAGES, SEED);
+    let session = LocalSession::new(engine, SessionConfig::default());
+    let handles = prompts(art)?
+        .into_iter()
+        .map(|p| {
+            session
+                .submit(GenerationParams::new(p).max_new(MAX_NEW).tier(tier))
+                .map_err(|e| anyhow!("{e}"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    for h in &handles {
+        h.wait()?;
+    }
+    Ok(session.stats().tokens_per_sec())
+}
+
+/// Acceptance: every cell finite, plus exact per-tier counter
+/// partitions under a mixed KV4/KV8 workload on a single engine.
+fn check(art: &Artifacts) -> Result<()> {
+    let windows = eval_windows();
+    let eval_toks = art.corpus.split("eval")?;
+    for kind in RotationKind::ALL {
+        for kv_bits in [4u32, 8] {
+            let runner = runner_for(art, kind, kv_bits)?;
+            let p = eval::perplexity(&runner, eval_toks, windows)?;
+            if !p.is_finite() {
+                bail!("{kind} kv{kv_bits}: non-finite perplexity {p}");
+            }
+            println!("[check] {kind} kv{kv_bits}: ppl {p:.4} (finite)");
+        }
+    }
+
+    let runner = runner_for(art, RotationKind::default(), 4)?;
+    let engine = GenerationEngine::new(runner, PAGES, SEED);
+    let session = LocalSession::new(engine, SessionConfig::default());
+    let tiers = [QualityTier::Kv4, QualityTier::Kv8];
+    let handles = prompts(art)?
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| {
+            session
+                .submit(GenerationParams::new(p)
+                    .max_new(MAX_NEW)
+                    .tier(tiers[i % 2]))
+                .map_err(|e| anyhow!("{e}"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    for h in &handles {
+        h.wait()?;
+    }
+    let s = session.stats();
+    if s.completed != N_REQS {
+        bail!("mixed-tier workload: {} of {N_REQS} completed", s.completed);
+    }
+    if s.kv4_completed + s.kv8_completed != s.completed {
+        bail!("tier completion counters do not partition completed: \
+               {} + {} != {}",
+              s.kv4_completed, s.kv8_completed, s.completed);
+    }
+    if s.kv4_completed == 0 || s.kv8_completed == 0 {
+        bail!("mixed workload lost a tier: kv4={} kv8={}",
+              s.kv4_completed, s.kv8_completed);
+    }
+    if s.kv4_decode_tokens + s.kv8_decode_tokens != s.decode_tokens {
+        bail!("tier token counters do not partition decode_tokens: \
+               {} + {} != {}",
+              s.kv4_decode_tokens, s.kv8_decode_tokens, s.decode_tokens);
+    }
+    if s.kv4_decode_tokens == 0 || s.kv8_decode_tokens == 0 {
+        bail!("mixed workload decoded no tokens in a tier: kv4={} kv8={}",
+              s.kv4_decode_tokens, s.kv8_decode_tokens);
+    }
+    println!("[check] mixed tiers: {} done (kv4 {} / kv8 {}), \
+              {} decode tokens (kv4 {} / kv8 {})",
+             s.completed, s.kv4_completed, s.kv8_completed,
+             s.decode_tokens, s.kv4_decode_tokens, s.kv8_decode_tokens);
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let check_mode = std::env::args().any(|a| a == "--check");
+    let art = match Artifacts::load(MODEL) {
+        Ok(a) => a,
+        Err(_) => {
+            eprintln!("[skip] artifacts missing — run `make artifacts`");
+            return Ok(());
+        }
+    };
+
+    if check_mode {
+        check(&art)?;
+        println!("[check] rotation/tier matrix acceptance OK");
+        return Ok(());
+    }
+
+    let windows = eval_windows();
+    let eval_toks = art.corpus.split("eval")?;
+    let mut t = Table::new(
+        "Rotation scheme × KV precision tier (W4A4, tiny-mha)",
+        &["rotation", "tier", "ppl", "decode tok/s"]);
+    for kind in RotationKind::ALL {
+        for (tier, kv_bits) in [(QualityTier::Kv4, 4u32),
+                                (QualityTier::Kv8, 8)] {
+            let runner = runner_for(&art, kind, kv_bits)?;
+            let p = eval::perplexity(&runner, eval_toks, windows)?;
+            let tps = decode_tps(&art, runner, tier)?;
+            println!("  [{kind}] {}: ppl {p:.4}, {tps:.1} tok/s",
+                     tier.as_str());
+            t.row(vec![kind.to_string(), tier.as_str().into(),
+                       format!("{p:.4}"), format!("{tps:.1}")]);
+        }
+    }
+    record("rotation_tiers", &t.render())
+}

@@ -96,6 +96,76 @@ impl fmt::Display for Priority {
     }
 }
 
+/// Per-request KV-cache precision tier — the quality/cost knob QuaRot's
+/// near-lossless-at-4-bit result makes safe to expose per request.
+///
+/// `Kv4` stores the sequence's K/V at 4 bits (the paper's fast serving
+/// point), `Kv8` at 8 bits (lossless-grade RTN).  The tier only selects
+/// the *cache* width of the sequence; weights and activations stay on the
+/// engine's compiled `QuantSpec`, and the fp16-baseline engine ignores
+/// tiers entirely (its K/V never hit the paged cache).  Left unset, the
+/// tier defaults from [`Priority`]: latency-sensitive `Interactive`
+/// traffic takes the fast `Kv4` path, offline `Batch` work gets `Kv8`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum QualityTier {
+    /// 4-bit KV cache — near-lossless, fastest, smallest (default for
+    /// `Interactive`)
+    #[default]
+    Kv4,
+    /// 8-bit KV cache — lossless-grade (default for `Batch`)
+    Kv8,
+}
+
+impl QualityTier {
+    pub const COUNT: usize = 2;
+
+    /// Stable tier index (metrics slots).
+    pub fn index(self) -> usize {
+        match self {
+            QualityTier::Kv4 => 0,
+            QualityTier::Kv8 => 1,
+        }
+    }
+
+    /// KV-cache width this tier pins for the sequence.
+    pub fn kv_bits(self) -> u32 {
+        match self {
+            QualityTier::Kv4 => 4,
+            QualityTier::Kv8 => 8,
+        }
+    }
+
+    /// Default tier of a priority class when the request leaves the
+    /// tier unset.
+    pub fn from_priority(p: Priority) -> QualityTier {
+        match p {
+            Priority::Interactive => QualityTier::Kv4,
+            Priority::Batch => QualityTier::Kv8,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QualityTier::Kv4 => "kv4",
+            QualityTier::Kv8 => "kv8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QualityTier> {
+        Some(match s {
+            "kv4" => QualityTier::Kv4,
+            "kv8" => QualityTier::Kv8,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for QualityTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Typed generation request parameters.
 ///
 /// Build with [`GenerationParams::new`] and the chainable setters:
@@ -118,6 +188,9 @@ pub struct GenerationParams {
     /// [`FinishReason::DeadlineExceeded`], its KV pages returning to the
     /// pool immediately (like cancellation).
     pub deadline_ms: Option<u64>,
+    /// KV-cache precision tier; `None` defaults from the priority class
+    /// at admission ([`QualityTier::from_priority`]).
+    pub tier: Option<QualityTier>,
 }
 
 impl GenerationParams {
@@ -129,6 +202,7 @@ impl GenerationParams {
             stop_token: None,
             priority: Priority::Interactive,
             deadline_ms: None,
+            tier: None,
         }
     }
 
@@ -157,6 +231,17 @@ impl GenerationParams {
         self
     }
 
+    pub fn tier(mut self, t: QualityTier) -> GenerationParams {
+        self.tier = Some(t);
+        self
+    }
+
+    /// The tier this request runs at: the explicit setting, else the
+    /// priority class's default.
+    pub fn resolved_tier(&self) -> QualityTier {
+        self.tier.unwrap_or_else(|| QualityTier::from_priority(self.priority))
+    }
+
     /// Model-independent validation (the engine additionally checks the
     /// prompt against its `max_seq`).
     pub fn validate(&self) -> Result<(), SubmitError> {
@@ -177,6 +262,7 @@ impl GenerationParams {
     }
 
     pub(crate) fn into_request(self) -> crate::coordinator::batcher::Request {
+        let tier = self.resolved_tier();
         crate::coordinator::batcher::Request {
             id: 0,
             prompt: self.prompt,
@@ -185,6 +271,7 @@ impl GenerationParams {
             stop_token: self.stop_token,
             priority: self.priority,
             deadline_ms: self.deadline_ms,
+            tier,
         }
     }
 }
@@ -470,6 +557,30 @@ mod tests {
         assert!(Priority::Interactive.weight() > Priority::Batch.weight());
         assert!(Priority::Batch.weight() > 0);
         assert_ne!(Priority::Interactive.index(), Priority::Batch.index());
+    }
+
+    #[test]
+    fn tier_roundtrip_defaults_and_resolution() {
+        for t in [QualityTier::Kv4, QualityTier::Kv8] {
+            assert_eq!(QualityTier::parse(t.as_str()), Some(t));
+        }
+        assert_eq!(QualityTier::parse("kv16"), None);
+        assert_eq!(QualityTier::Kv4.kv_bits(), 4);
+        assert_eq!(QualityTier::Kv8.kv_bits(), 8);
+        assert_ne!(QualityTier::Kv4.index(), QualityTier::Kv8.index());
+        // unset tier defaults from the priority class: interactive
+        // traffic takes the fast 4-bit path, batch the lossless-grade one
+        let p = GenerationParams::new(vec![1]);
+        assert_eq!(p.resolved_tier(), QualityTier::Kv4);
+        let p = GenerationParams::new(vec![1]).priority(Priority::Batch);
+        assert_eq!(p.resolved_tier(), QualityTier::Kv8);
+        // explicit tier wins over the priority default
+        let p = GenerationParams::new(vec![1]).priority(Priority::Batch)
+            .tier(QualityTier::Kv4);
+        assert_eq!(p.resolved_tier(), QualityTier::Kv4);
+        assert_eq!(p.clone().into_request().tier, QualityTier::Kv4);
+        let p = GenerationParams::new(vec![1]);
+        assert_eq!(p.into_request().tier, QualityTier::Kv4);
     }
 
     #[test]

@@ -32,7 +32,9 @@
 //! `priority` (absent ⇒ `"interactive"`) selects the fair-share admission
 //! class; `deadline_ms` (absent ⇒ none) is a server-side deadline from
 //! submission — an expired request finishes with reason
-//! `"deadline_exceeded"`.  `stats` answers flat cluster aggregates
+//! `"deadline_exceeded"`.  `tier` (`"kv4"`|`"kv8"`, absent ⇒ derived from
+//! the priority class at admission) pins the request's KV-cache precision
+//! tier.  `stats` answers flat cluster aggregates
 //! (including live `queue_depth` / `active_slots`); `metrics` adds the
 //! full per-shard breakdown (`{"v":2,"event":"metrics","per_shard":[..]}`).
 //!
@@ -44,7 +46,7 @@
 use anyhow::{bail, Context, Result};
 
 use super::{FinishReason, GenerationEvent, GenerationParams, Priority,
-            RequestId, RequestStats, SubmitError, Sampling};
+            QualityTier, RequestId, RequestStats, SubmitError, Sampling};
 use crate::util::json::{self, n, obj, Value};
 
 pub const PROTOCOL_VERSION: u32 = 2;
@@ -156,6 +158,11 @@ pub fn encode_submit(cid: u64, p: &GenerationParams) -> Value {
     if let Some(d) = p.deadline_ms {
         pairs.push(("deadline_ms", n(d as f64)));
     }
+    // only an explicit tier crosses the wire — an absent field keeps the
+    // server-side priority-derived default (mirrors priority/deadline)
+    if let Some(t) = p.tier {
+        pairs.push(("tier", json::s(t.as_str())));
+    }
     obj(pairs)
 }
 
@@ -201,6 +208,11 @@ pub fn decode_params(v: &Value) -> Result<GenerationParams> {
             bail!("deadline_ms must be non-negative, got {d}");
         }
         p.deadline_ms = Some(d as u64);
+    }
+    if let Some(tv) = v.get("tier") {
+        let ts = tv.as_str().context("tier must be a string")?;
+        p.tier = Some(QualityTier::parse(ts)
+            .with_context(|| format!("unknown tier '{ts}' (kv4|kv8)"))?);
     }
     Ok(p)
 }
@@ -491,6 +503,39 @@ mod tests {
             ServerFrame::Event { event, .. } => assert_eq!(event, ev),
             other => panic!("wrong frame {other:?}"),
         }
+    }
+
+    #[test]
+    fn tier_field_roundtrip_and_typed_errors() {
+        // explicit tier crosses the wire
+        let p = GenerationParams::new(vec![1]).tier(QualityTier::Kv8);
+        match parse_client_frame(&reparse(&encode_submit(1, &p))).unwrap() {
+            ClientFrame::Submit { params, .. } => {
+                assert_eq!(params.tier, Some(QualityTier::Kv8));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // an unset tier is NOT encoded and decodes back as unset, so the
+        // server resolves it from priority at admission — pre-tier v2
+        // clients keep their exact behavior
+        let p = GenerationParams::new(vec![1]).priority(Priority::Batch);
+        let frame = reparse(&encode_submit(2, &p));
+        assert!(frame.get("tier").is_none(), "unset tier must not encode");
+        match parse_client_frame(&frame).unwrap() {
+            ClientFrame::Submit { params, .. } => {
+                assert_eq!(params.tier, None);
+                assert_eq!(params.resolved_tier(), QualityTier::Kv8);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // unknown value and wrong type are typed parse errors
+        let bad = json::parse(
+            r#"{"cmd":"submit","prompt":[3],"tier":"kv16"}"#).unwrap();
+        let err = parse_client_frame(&bad).unwrap_err().to_string();
+        assert!(err.contains("kv4|kv8"), "{err}");
+        let bad = json::parse(
+            r#"{"cmd":"submit","prompt":[3],"tier":4}"#).unwrap();
+        assert!(parse_client_frame(&bad).is_err());
     }
 
     #[test]

@@ -61,6 +61,12 @@ pub struct ShardMetrics {
     pub deadline_exceeded: usize,
     pub decode_steps: usize,
     pub decode_tokens: usize,
+    /// per-tier splits of `completed` / `decode_tokens` (mixed KV4/KV8
+    /// workload observability)
+    pub kv4_completed: usize,
+    pub kv8_completed: usize,
+    pub kv4_decode_tokens: usize,
+    pub kv8_decode_tokens: usize,
     pub tokens_per_sec: f64,
     pub ttft_sum_ms: f64,
     pub ttft_count: usize,
@@ -85,6 +91,10 @@ impl ShardMetrics {
             deadline_exceeded: st.deadline_exceeded,
             decode_steps: st.decode_steps,
             decode_tokens: st.decode_tokens,
+            kv4_completed: st.kv4_completed,
+            kv8_completed: st.kv8_completed,
+            kv4_decode_tokens: st.kv4_decode_tokens,
+            kv8_decode_tokens: st.kv8_decode_tokens,
             tokens_per_sec: st.tokens_per_sec(),
             ttft_sum_ms: st.ttft_sum_ms,
             ttft_count: st.ttft_count,
@@ -128,6 +138,10 @@ impl ShardMetrics {
             ("deadline_exceeded", n(self.deadline_exceeded as f64)),
             ("decode_steps", n(self.decode_steps as f64)),
             ("decode_tokens", n(self.decode_tokens as f64)),
+            ("kv4_completed", n(self.kv4_completed as f64)),
+            ("kv8_completed", n(self.kv8_completed as f64)),
+            ("kv4_decode_tokens", n(self.kv4_decode_tokens as f64)),
+            ("kv8_decode_tokens", n(self.kv8_decode_tokens as f64)),
             ("tokens_per_sec", n(self.tokens_per_sec)),
             ("avg_ttft_ms", n(self.avg_ttft_ms())),
             ("peak_cache_bytes", n(self.peak_cache_bytes as f64)),
@@ -230,6 +244,22 @@ impl ClusterMetrics {
         self.sum(|s| s.prefix.pages_pinned)
     }
 
+    pub fn kv4_completed(&self) -> usize {
+        self.sum(|s| s.kv4_completed)
+    }
+
+    pub fn kv8_completed(&self) -> usize {
+        self.sum(|s| s.kv8_completed)
+    }
+
+    pub fn kv4_decode_tokens(&self) -> usize {
+        self.sum(|s| s.kv4_decode_tokens)
+    }
+
+    pub fn kv8_decode_tokens(&self) -> usize {
+        self.sum(|s| s.kv8_decode_tokens)
+    }
+
     /// TTFT averaged over every request that started, across shards.
     pub fn avg_ttft_ms(&self) -> f64 {
         let count: usize = self.sum(|s| s.ttft_count);
@@ -270,6 +300,12 @@ impl ClusterMetrics {
             ("prefix_hit_rate", n(self.prefix_hit_rate())),
             ("prefix_tokens_saved", n(self.prefix_tokens_saved() as f64)),
             ("prefix_pages_pinned", n(self.prefix_pages_pinned() as f64)),
+            // precision-tier additions — appended after every
+            // pre-existing key so v1 `stats` consumers are unaffected
+            ("kv4_completed", n(self.kv4_completed() as f64)),
+            ("kv8_completed", n(self.kv8_completed() as f64)),
+            ("kv4_decode_tokens", n(self.kv4_decode_tokens() as f64)),
+            ("kv8_decode_tokens", n(self.kv8_decode_tokens() as f64)),
         ]
     }
 
@@ -346,6 +382,10 @@ mod tests {
                 inserted_pages: 8, evicted_pages: 0, pages_pinned: 8,
             },
             completed: done,
+            kv4_completed: done / 2,
+            kv8_completed: done - done / 2,
+            kv4_decode_tokens: 10 * done,
+            kv8_decode_tokens: 5 * done,
             tokens_per_sec: 50.0,
             ttft_sum_ms: 30.0 * done as f64,
             ttft_count: done,
@@ -373,6 +413,10 @@ mod tests {
         assert!((m.prefix_hit_rate() - 0.5).abs() < 1e-12);
         assert_eq!(m.prefix_tokens_saved(), 64);
         assert_eq!(m.prefix_pages_pinned(), 16);
+        assert_eq!(m.kv4_completed() + m.kv8_completed(), m.completed(),
+                   "tier splits must partition completed");
+        assert_eq!(m.kv4_decode_tokens(), 100);
+        assert_eq!(m.kv8_decode_tokens(), 50);
     }
 
     #[test]
@@ -389,9 +433,18 @@ mod tests {
                     "deadline_exceeded",
                     // prefix-cache additions
                     "prefix_lookups", "prefix_hits", "prefix_hit_rate",
-                    "prefix_tokens_saved", "prefix_pages_pinned"] {
+                    "prefix_tokens_saved", "prefix_pages_pinned",
+                    // precision-tier additions
+                    "kv4_completed", "kv8_completed",
+                    "kv4_decode_tokens", "kv8_decode_tokens"] {
             assert!(v.get(key).is_some(), "summary missing key {key}");
         }
+        // new keys append strictly after every pre-existing key: a v1
+        // consumer indexing by position keeps working
+        let pairs = m.summary_pairs();
+        let idx = |k: &str| pairs.iter().position(|(p, _)| *p == k).unwrap();
+        assert!(idx("kv4_completed") > idx("prefix_pages_pinned"),
+                "tier keys must append after the v1 tail key");
     }
 
     #[test]

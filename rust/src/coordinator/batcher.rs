@@ -35,8 +35,8 @@ use super::kvcache::{PageGroup, PagePool, PoolStats, SeqCache};
 use super::prefix::{PrefixCache, PrefixStats};
 use super::runner::{DecodeStaging, Runner};
 use super::sampler::{sample, Sampling};
-use crate::api::{FinishReason, GenerationEvent, Priority, RequestStats,
-                 SubmitError};
+use crate::api::{FinishReason, GenerationEvent, Priority, QualityTier,
+                 RequestStats, SubmitError};
 use crate::attention::{DecodeF32Seq, DecodeQuantSeq, KvCodes, KvF32View,
                        KvQuantView};
 use crate::backend::pool::SendPtr;
@@ -61,6 +61,11 @@ pub struct Request {
     /// deadline in ms from enqueue; expired requests (queued or active)
     /// retire with `FinishReason::DeadlineExceeded`
     pub deadline_ms: Option<u64>,
+    /// KV-cache precision tier of this sequence (already resolved — the
+    /// priority-default fallback happens in `GenerationParams`).  Pins
+    /// the per-sequence cache width and tags its prefix-trie entries;
+    /// ignored by the fp16 baseline, whose K/V never hit the paged cache.
+    pub tier: QualityTier,
 }
 
 fn deadline_expired(req: &Request, enqueued: Instant) -> bool {
@@ -216,6 +221,16 @@ pub struct EngineStats {
     pub deadline_exceeded: usize,
     pub decode_steps: usize,
     pub decode_tokens: usize,
+    /// per-tier splits — the mixed KV4/KV8 workload observability the
+    /// tier subsystem promises.  Both splits are exact partitions:
+    /// `kv4_completed + kv8_completed == completed` and
+    /// `kv4_decode_tokens + kv8_decode_tokens == decode_tokens`
+    /// (cancelled / expired requests count in neither split, matching
+    /// their exclusion from `completed`).
+    pub kv4_completed: usize,
+    pub kv8_completed: usize,
+    pub kv4_decode_tokens: usize,
+    pub kv8_decode_tokens: usize,
     /// prompt tokens prefilled through the decode graph on the
     /// prefix-cache hit path (the uncached suffixes)
     pub suffix_prefill_tokens: usize,
@@ -271,10 +286,13 @@ impl GenerationEngine {
     pub fn new(runner: Runner, pool_pages: usize, seed: u64) -> GenerationEngine {
         let cfg = runner.cfg.clone();
         let tokens_per_page = TOKENS_PER_PAGE;
-        let kv_bits = if runner.spec.kv_bits == 16 { 8 } else { runner.spec.kv_bits };
-        let geom = SeqCache::new(&cfg, kv_bits, runner.spec.kv_clip,
+        // Pool pages are sized for the *widest* tier (KV8): a KV4
+        // sequence's tighter page layout fits in the same page with
+        // slack, so one pool serves a mixed KV4/KV8 workload.  Page
+        // *counts* (admission, trie budgets) are width-independent.
+        let geom = SeqCache::new(&cfg, 8, runner.spec.kv_clip,
                                  tokens_per_page).geom();
-        let fp = runner.spec.kv_bits == 16;
+        let fp = runner.spec.kv_is_fp();
         GenerationEngine {
             backend: runner.backend.clone(),
             staging: DecodeStaging::new(&cfg, fp),
@@ -349,7 +367,7 @@ impl GenerationEngine {
     /// if the id is unknown or already terminal.
     pub fn cancel(&mut self, id: u64) -> bool {
         if let Some((req, enq)) = self.queue.remove_by_id(id) {
-            self.emit_finish(id, FinishReason::Cancelled, RequestStats {
+            self.emit_finish(id, req.tier, FinishReason::Cancelled, RequestStats {
                 prompt_len: req.prompt.len(),
                 generated: 0,
                 ttft_ms: 0.0,
@@ -364,7 +382,8 @@ impl GenerationEngine {
                 let mut slot = self.slots[i].take().unwrap();
                 let stats = slot.stats();
                 slot.cache.free(&mut self.pool);
-                self.emit_finish(id, FinishReason::Cancelled, stats);
+                self.emit_finish(id, slot.req.tier, FinishReason::Cancelled,
+                                 stats);
                 return true;
             }
         }
@@ -429,7 +448,7 @@ impl GenerationEngine {
     /// cache stays disabled there regardless of the budget.
     pub fn set_prefix_cache_pages(&mut self, pages: usize) {
         self.prefix.clear(&mut self.pool);
-        let budget = if self.runner.spec.kv_bits == 16 { 0 } else { pages };
+        let budget = if self.runner.spec.kv_is_fp() { 0 } else { pages };
         self.prefix = PrefixCache::new(self.tokens_per_page,
                                        self.runner.cfg.n_layers, budget);
     }
@@ -448,15 +467,25 @@ impl GenerationEngine {
         !self.events.is_empty()
     }
 
-    fn cache_bits(&self) -> u32 {
-        if self.runner.spec.kv_bits == 16 { 8 } else { self.runner.spec.kv_bits }
+    /// Cache width for one sequence: its tier's bits, except on the
+    /// fp16 baseline where the paged cache is a staging mirror and
+    /// always uses the 8-bit codec.
+    fn cache_bits_for(&self, tier: QualityTier) -> u32 {
+        if self.runner.spec.kv_is_fp() { 8 } else { tier.kv_bits() }
     }
 
-    fn emit_finish(&mut self, id: u64, reason: FinishReason, stats: RequestStats) {
+    fn emit_finish(&mut self, id: u64, tier: QualityTier,
+                   reason: FinishReason, stats: RequestStats) {
         match reason {
             FinishReason::Cancelled => self.stats.cancelled += 1,
             FinishReason::DeadlineExceeded => self.stats.deadline_exceeded += 1,
-            _ => self.stats.completed += 1,
+            _ => {
+                self.stats.completed += 1;
+                match tier {
+                    QualityTier::Kv4 => self.stats.kv4_completed += 1,
+                    QualityTier::Kv8 => self.stats.kv8_completed += 1,
+                }
+            }
         }
         self.events.push_back((id, GenerationEvent::Finished { reason, stats }));
     }
@@ -468,7 +497,8 @@ impl GenerationEngine {
     fn expire_deadlines(&mut self) {
         if self.queue.has_deadlines() {
             for (req, enq) in self.queue.take_expired() {
-                self.emit_finish(req.id, FinishReason::DeadlineExceeded,
+                self.emit_finish(req.id, req.tier,
+                                 FinishReason::DeadlineExceeded,
                                  RequestStats {
                                      prompt_len: req.prompt.len(),
                                      generated: 0,
@@ -485,8 +515,8 @@ impl GenerationEngine {
                 let mut slot = self.slots[i].take().unwrap();
                 let stats = slot.stats();
                 slot.cache.free(&mut self.pool);
-                self.emit_finish(slot.req.id, FinishReason::DeadlineExceeded,
-                                 stats);
+                self.emit_finish(slot.req.id, slot.req.tier,
+                                 FinishReason::DeadlineExceeded, stats);
             }
         }
     }
@@ -508,7 +538,7 @@ impl GenerationEngine {
             }
             loop {
                 let cfg = self.runner.cfg.clone();
-                let fp = self.runner.spec.kv_bits == 16;
+                let fp = self.runner.spec.kv_is_fp();
                 let mut shared: Vec<PageGroup> = Vec::new();
                 if !fp {
                     // Prefix consult + page-admission check on the
@@ -531,7 +561,8 @@ impl GenerationEngine {
                     // produces the first-token logits
                     let max_groups =
                         plen.saturating_sub(1) / self.tokens_per_page;
-                    shared = self.prefix.lookup(&head.prompt, max_groups);
+                    shared = self.prefix.lookup(head.tier, &head.prompt,
+                                                max_groups);
                     let full_need = admission_pages(
                         plen, head_max_new, cfg.n_layers,
                         self.tokens_per_page, 0);
@@ -616,7 +647,7 @@ impl GenerationEngine {
                         } else {
                             FinishReason::MaxTokens
                         };
-                        self.emit_finish(req.id, reason, RequestStats {
+                        self.emit_finish(req.id, req.tier, reason, RequestStats {
                             prompt_len: req.prompt.len(),
                             generated: 1,
                             ttft_ms: ttft,
@@ -625,7 +656,7 @@ impl GenerationEngine {
                         });
                         continue;
                     }
-                    self.donate_prompt_pages(&req.prompt, &cache);
+                    self.donate_prompt_pages(&req.prompt, &cache, req.tier);
                     self.slots[slot_idx] = Some(Slot {
                         generated: vec![first_tok],
                         next_token: first_tok,
@@ -676,7 +707,7 @@ impl GenerationEngine {
                     } else {
                         FinishReason::MaxTokens
                     };
-                    self.emit_finish(req.id, reason, RequestStats {
+                    self.emit_finish(req.id, req.tier, reason, RequestStats {
                         prompt_len: req.prompt.len(),
                         generated: 1,
                         ttft_ms: ttft,
@@ -690,7 +721,8 @@ impl GenerationEngine {
                 // append, so one decode step is always safe — matching the
                 // pre-event engine's behavior exactly.
 
-                let mut cache = SeqCache::new(&cfg, self.cache_bits(),
+                let mut cache = SeqCache::new(&cfg,
+                                              self.cache_bits_for(req.tier),
                                               self.runner.spec.kv_clip,
                                               self.tokens_per_page);
                 if fp {
@@ -725,7 +757,7 @@ impl GenerationEngine {
                     // cold prefills seed the shared prefix cache: donate
                     // the prompt's full pages (retained by the trie, so
                     // they outlive this request)
-                    self.donate_prompt_pages(&req.prompt, &cache);
+                    self.donate_prompt_pages(&req.prompt, &cache, req.tier);
                 }
 
                 self.slots[slot_idx] = Some(Slot {
@@ -757,7 +789,7 @@ impl GenerationEngine {
                         shared: &[PageGroup]) -> Result<(SeqCache, Vec<f32>)> {
         let cfg = self.runner.cfg.clone();
         let (b, v, d) = (cfg.decode_batch, cfg.vocab, cfg.d_kv());
-        let mut cache = SeqCache::new(&cfg, self.cache_bits(),
+        let mut cache = SeqCache::new(&cfg, self.cache_bits_for(req.tier),
                                       self.runner.spec.kv_clip,
                                       self.tokens_per_page);
         cache.graft_prefix(&mut self.pool, shared);
@@ -843,8 +875,12 @@ impl GenerationEngine {
     /// prefix trie (no-op when the cache is disabled or the prompt is
     /// shorter than one page).  The trie retains the pages, so they
     /// outlive this request; generated tokens are never donated — only
-    /// prompt content recurs across requests.
-    fn donate_prompt_pages(&mut self, prompt: &[u16], cache: &SeqCache) {
+    /// prompt content recurs across requests.  Donations carry the
+    /// donor's precision tier: pages hold tier-width codes, so a graft
+    /// across tiers would silently misdecode (the trie keys by tier to
+    /// make that impossible).
+    fn donate_prompt_pages(&mut self, prompt: &[u16], cache: &SeqCache,
+                           tier: QualityTier) {
         let tpp = self.tokens_per_page;
         let full = prompt.len() / tpp;
         if full == 0 || !self.prefix.enabled() {
@@ -852,7 +888,8 @@ impl GenerationEngine {
         }
         let groups: Vec<PageGroup> =
             (0..full).map(|i| cache.page_group(i)).collect();
-        self.prefix.insert(&mut self.pool, &prompt[..full * tpp], &groups);
+        self.prefix.insert(&mut self.pool, tier, &prompt[..full * tpp],
+                           &groups);
     }
 
     /// Refresh the whole dense staging view of one slot from its pages.
@@ -865,7 +902,7 @@ impl GenerationEngine {
         let d = cfg.d_kv();
         let ng = d / cfg.kv_group;
         let n = cache.len;
-        let fp = self.runner.spec.kv_bits == 16;
+        let fp = self.runner.spec.kv_is_fp();
         let backend = self.backend.clone();
         let mut codes = vec![0i8; n * d];
         let mut scales = vec![0.0f32; n * ng];
@@ -911,7 +948,7 @@ impl GenerationEngine {
         let cfg = self.runner.cfg.clone();
         let (l_n, b, s) = (cfg.n_layers, cfg.decode_batch, cfg.cache_seq);
         let d = cfg.d_kv();
-        let fp = self.runner.spec.kv_bits == 16;
+        let fp = self.runner.spec.kv_is_fp();
         if fp {
             let sl = self.slots[slot].as_mut().unwrap();
             let t = sl.cache.len;
@@ -1026,6 +1063,12 @@ impl GenerationEngine {
         let step_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.stats.decode_steps += 1;
         self.stats.decode_tokens += active.len();
+        for &i in &active {
+            match self.slots[i].as_ref().unwrap().req.tier {
+                QualityTier::Kv4 => self.stats.kv4_decode_tokens += 1,
+                QualityTier::Kv8 => self.stats.kv8_decode_tokens += 1,
+            }
+        }
         self.stats.total_decode_ms += step_ms;
 
         let v = cfg.vocab;
@@ -1066,7 +1109,7 @@ impl GenerationEngine {
                 } else {
                     FinishReason::CacheFull
                 };
-                self.emit_finish(id, reason, stats);
+                self.emit_finish(id, slot.req.tier, reason, stats);
             } else {
                 survivors.push(i);
             }
@@ -1091,7 +1134,7 @@ impl GenerationEngine {
                 }
             }
         }
-        if self.runner.spec.kv_bits != 16 && !appended.is_empty() {
+        if !self.runner.spec.kv_is_fp() && !appended.is_empty() {
             self.refresh_staging_for(&appended);
         }
         let cache_bytes: usize = self.slots.iter().flatten().map(|s| s.cache.bytes()).sum();
@@ -1167,7 +1210,7 @@ impl GenerationEngine {
                                    out: &mut [f32]) {
         let slots = self.active_slots();
         staged_decode_attention(self.backend.as_ref(), &self.runner.cfg,
-                                self.runner.spec.kv_bits == 16, &self.staging,
+                                self.runner.spec.kv_is_fp(), &self.staging,
                                 layer, &slots, qs, out);
     }
 }
@@ -1284,6 +1327,7 @@ mod tests {
             stop_token: None,
             priority,
             deadline_ms,
+            tier: QualityTier::from_priority(priority),
         }
     }
 

@@ -13,9 +13,13 @@
 //! * [`sampler`]  — greedy / temperature / top-k token sampling.
 //! * [`batcher`]  — request queue, slot assignment, the decode loop, and
 //!                  per-request latency/throughput metrics.
+//! * [`selfspec`] — self-speculative decoding: KV4 drafts, one causal
+//!                  prefill verifies — 8-bit-exact output, fewer
+//!                  prefills (`generate --self-spec`).
 
 pub mod batcher;
 pub mod kvcache;
 pub mod prefix;
 pub mod runner;
 pub mod sampler;
+pub mod selfspec;

@@ -27,8 +27,16 @@
 //!   are an ancestor of some live chain).  Nodes touched by the
 //!   operation currently in flight (same clock stamp) are protected, so
 //!   an admission can never evict the chain it is about to graft.
+//! * **Tier isolation.**  Roots are keyed by the donor's
+//!   [`QualityTier`]: pages hold tier-width codes (4-bit vs 8-bit), so
+//!   a KV4 prefix grafted into a KV8 sequence would silently misdecode.
+//!   Keying by tier makes a cross-tier graft structurally impossible —
+//!   the same prompt may be cached once per tier, each chain pinning
+//!   its own pages.
 
 use std::collections::HashMap;
+
+use crate::api::QualityTier;
 
 use super::kvcache::{PageGroup, PagePool};
 
@@ -67,6 +75,8 @@ impl PrefixStats {
 struct Node {
     /// the `tokens_per_page`-token run this node extends its parent by
     run: Box<[u16]>,
+    /// precision tier of the cached pages (needed to unlink roots)
+    tier: QualityTier,
     parent: Option<usize>,
     children: HashMap<Box<[u16]>, usize>,
     pages: PageGroup,
@@ -75,13 +85,14 @@ struct Node {
 }
 
 /// The trie.  Keys are exact token runs (no hashing — a collision would
-/// graft the wrong K/V); payloads are retained page groups.
+/// graft the wrong K/V); payloads are retained page groups.  Roots are
+/// additionally keyed by precision tier — see the module doc.
 pub struct PrefixCache {
     tokens_per_page: usize,
     n_layers: usize,
     /// Max pool pages the trie may pin; 0 disables the cache entirely.
     max_pages: usize,
-    roots: HashMap<Box<[u16]>, usize>,
+    roots: HashMap<QualityTier, HashMap<Box<[u16]>, usize>>,
     nodes: Vec<Option<Node>>,
     free_slots: Vec<usize>,
     clock: u64,
@@ -121,9 +132,13 @@ impl PrefixCache {
         2 * self.n_layers
     }
 
-    fn child(&self, cur: Option<usize>, run: &[u16]) -> Option<usize> {
+    fn child(&self, tier: QualityTier, cur: Option<usize>, run: &[u16])
+             -> Option<usize> {
         let table = match cur {
-            None => &self.roots,
+            None => match self.roots.get(&tier) {
+                Some(t) => t,
+                None => return None,
+            },
             Some(p) => &self.nodes[p].as_ref().unwrap().children,
         };
         table.get(run).copied()
@@ -136,7 +151,10 @@ impl PrefixCache {
     /// counters are recorded by [`Self::record_use`] at the actual
     /// admission, so a request re-peeked for many ticks while holding
     /// for pages does not inflate the hit rate.
-    pub fn lookup(&mut self, prompt: &[u16], max_groups: usize) -> Vec<PageGroup> {
+    /// Only chains donated at the same `tier` match — the pages hold
+    /// tier-width codes.
+    pub fn lookup(&mut self, tier: QualityTier, prompt: &[u16],
+                  max_groups: usize) -> Vec<PageGroup> {
         if self.max_pages == 0 {
             return Vec::new();
         }
@@ -144,7 +162,7 @@ impl PrefixCache {
         let mut out = Vec::new();
         let mut cur = None;
         for run in prompt.chunks_exact(self.tokens_per_page).take(max_groups) {
-            let Some(id) = self.child(cur, run) else { break };
+            let Some(id) = self.child(tier, cur, run) else { break };
             let node = self.nodes[id].as_mut().unwrap();
             node.last_used = self.clock;
             out.push(node.pages.clone());
@@ -177,8 +195,8 @@ impl PrefixCache {
     /// maximizes sharing.  New nodes retain their pages; the page
     /// budget is enforced by evicting LRU leaves first and truncating
     /// the donation when nothing evictable remains.
-    pub fn insert(&mut self, pool: &mut PagePool, prompt: &[u16],
-                  groups: &[PageGroup]) {
+    pub fn insert(&mut self, pool: &mut PagePool, tier: QualityTier,
+                  prompt: &[u16], groups: &[PageGroup]) {
         if self.max_pages == 0 || groups.is_empty() {
             return;
         }
@@ -190,7 +208,7 @@ impl PrefixCache {
         for (i, g) in groups.iter().enumerate() {
             let run = &prompt[i * self.tokens_per_page
                               ..(i + 1) * self.tokens_per_page];
-            if let Some(id) = self.child(cur, run) {
+            if let Some(id) = self.child(tier, cur, run) {
                 self.nodes[id].as_mut().unwrap().last_used = self.clock;
                 cur = Some(id);
                 continue;
@@ -208,6 +226,7 @@ impl PrefixCache {
             }
             let node = Node {
                 run: run.into(),
+                tier,
                 parent: cur,
                 children: HashMap::new(),
                 pages: g.clone(),
@@ -225,7 +244,8 @@ impl PrefixCache {
             };
             match cur {
                 None => {
-                    self.roots.insert(run.into(), id);
+                    self.roots.entry(tier).or_default()
+                        .insert(run.into(), id);
                 }
                 Some(p) => {
                     self.nodes[p].as_mut().unwrap()
@@ -258,7 +278,9 @@ impl PrefixCache {
         }
         match node.parent {
             None => {
-                self.roots.remove(&node.run);
+                if let Some(t) = self.roots.get_mut(&node.tier) {
+                    t.remove(&node.run);
+                }
             }
             Some(p) => {
                 self.nodes[p].as_mut().unwrap().children.remove(&node.run);
@@ -305,6 +327,8 @@ mod tests {
 
     const L: usize = 2;
     const TPP: usize = 4;
+    /// Most tests exercise one tier; tier isolation has its own test.
+    const T: QualityTier = QualityTier::Kv4;
 
     /// A "sequence-owned" group: freshly allocated pages (refcount 1).
     fn group(pool: &mut PagePool) -> PageGroup {
@@ -330,19 +354,19 @@ mod tests {
         let mut trie = PrefixCache::new(TPP, L, usize::MAX);
         let pa = prompt(12, 0); // 3 groups
         let ga: Vec<PageGroup> = (0..3).map(|_| group(&mut pool)).collect();
-        trie.insert(&mut pool, &pa, &ga);
+        trie.insert(&mut pool, T, &pa, &ga);
         assert_eq!(trie.pages_pinned(), 3 * 2 * L);
 
-        assert_eq!(trie.lookup(&pa, 3), ga);
-        assert_eq!(trie.lookup(&pa, 2), ga[..2], "cap must truncate the chain");
+        assert_eq!(trie.lookup(T, &pa, 3), ga);
+        assert_eq!(trie.lookup(T, &pa, 2), ga[..2], "cap must truncate the chain");
         // diverging at the second run matches only the first group
         let mut pb = pa.clone();
         pb[TPP] ^= 1;
-        assert_eq!(trie.lookup(&pb, 3), ga[..1]);
+        assert_eq!(trie.lookup(T, &pb, 3), ga[..1]);
         // a different first run misses outright
-        assert!(trie.lookup(&prompt(12, 9), 3).is_empty());
+        assert!(trie.lookup(T, &prompt(12, 9), 3).is_empty());
         // short prompts never produce a full run
-        assert!(trie.lookup(&pa[..TPP - 1], 3).is_empty());
+        assert!(trie.lookup(T, &pa[..TPP - 1], 3).is_empty());
 
         trie.record_use(3);
         trie.record_use(0);
@@ -367,12 +391,12 @@ mod tests {
         let mut trie = PrefixCache::new(TPP, L, usize::MAX);
         let p = prompt(8, 0);
         let first: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
-        trie.insert(&mut pool, &p, &first);
+        trie.insert(&mut pool, T, &p, &first);
         let pinned = trie.pages_pinned();
         let second: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
-        trie.insert(&mut pool, &p, &second);
+        trie.insert(&mut pool, T, &p, &second);
         assert_eq!(trie.pages_pinned(), pinned, "re-donation must not pin");
-        assert_eq!(trie.lookup(&p, 2), first, "first donor must win");
+        assert_eq!(trie.lookup(T, &p, 2), first, "first donor must win");
         for g in first.iter().chain(&second) {
             release_group(&mut pool, g);
         }
@@ -387,22 +411,22 @@ mod tests {
         let mut trie = PrefixCache::new(TPP, L, 2 * 2 * L);
         let pa = prompt(8, 0); // 2 groups: A1 → A2
         let ga: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
-        trie.insert(&mut pool, &pa, &ga);
+        trie.insert(&mut pool, T, &pa, &ga);
         for g in &ga {
             release_group(&mut pool, g); // trie is now the sole owner
         }
-        let _ = trie.lookup(&pa, 2); // make A recently used
+        let _ = trie.lookup(T, &pa, 2); // make A recently used
 
         let pb = prompt(4, 9); // 1 group
         let gb = vec![group(&mut pool)];
-        trie.insert(&mut pool, &pb, &gb);
+        trie.insert(&mut pool, T, &pb, &gb);
         release_group(&mut pool, &gb[0]);
 
         // the LRU *leaf* (A2) was evicted; A1 (interior → now leaf) stays
         assert_eq!(trie.pages_pinned(), 2 * 2 * L);
         assert_eq!(trie.stats().evicted_pages, 2 * L);
-        assert_eq!(trie.lookup(&pa, 2).len(), 1, "A1 must survive");
-        assert_eq!(trie.lookup(&pb, 1).len(), 1, "B must be cached");
+        assert_eq!(trie.lookup(T, &pa, 2).len(), 1, "A1 must survive");
+        assert_eq!(trie.lookup(T, &pb, 1).len(), 1, "B must be cached");
         // A2's pages went back to the pool (trie was sole owner)
         assert_eq!(pool.in_use(), 2 * 2 * L);
         trie.clear(&mut pool);
@@ -417,7 +441,7 @@ mod tests {
         let (pa, pb) = (prompt(8, 0), prompt(8, 9));
         for p in [&pa, &pb] {
             let gs: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
-            trie.insert(&mut pool, p, &gs);
+            trie.insert(&mut pool, T, p, &gs);
             for g in &gs {
                 release_group(&mut pool, g);
             }
@@ -425,13 +449,13 @@ mod tests {
         assert_eq!(pool.available(), 0);
 
         // an admission that just matched A must evict from B, not A
-        let matched = trie.lookup(&pa, 2);
+        let matched = trie.lookup(T, &pa, 2);
         assert_eq!(matched.len(), 2);
         trie.evict_for(&mut pool, 2 * L);
         assert!(pool.available() >= 2 * L);
-        assert_eq!(trie.lookup(&pa, 2).len(), 2,
+        assert_eq!(trie.lookup(T, &pa, 2).len(), 2,
                    "the just-matched chain must be protected");
-        assert!(trie.lookup(&pb, 2).len() < 2, "B must have shrunk");
+        assert!(trie.lookup(T, &pb, 2).len() < 2, "B must have shrunk");
         trie.clear(&mut pool);
         assert_eq!(pool.in_use(), 0);
     }
@@ -442,8 +466,8 @@ mod tests {
         let mut trie = PrefixCache::new(TPP, L, usize::MAX);
         let p = prompt(4, 0);
         let g = vec![group(&mut pool)];
-        trie.insert(&mut pool, &p, &g);
-        let _ = trie.lookup(&prompt(4, 5), 1); // advance the clock
+        trie.insert(&mut pool, T, &p, &g);
+        let _ = trie.lookup(T, &prompt(4, 5), 1); // advance the clock
         // the "sequence" keeps its graft; evicting everything must not
         // free the pages out from under it
         trie.evict_for(&mut pool, 1);
@@ -455,14 +479,46 @@ mod tests {
     }
 
     #[test]
+    fn tiers_never_share_pages() {
+        // The tier-mismatch regression gate: a chain donated at KV4
+        // must be invisible to KV8 lookups (its pages hold 4-bit
+        // codes), and each tier caches the same prompt independently.
+        let mut pool = PagePool::new(8, 64);
+        let mut trie = PrefixCache::new(TPP, L, usize::MAX);
+        let p = prompt(8, 0);
+        let g4: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+        trie.insert(&mut pool, QualityTier::Kv4, &p, &g4);
+
+        assert!(trie.lookup(QualityTier::Kv8, &p, 2).is_empty(),
+                "KV4 pages must never graft into a KV8 sequence");
+        assert_eq!(trie.lookup(QualityTier::Kv4, &p, 2), g4);
+
+        // the other tier donates the same prompt: both chains coexist,
+        // each pinning its own pages
+        let g8: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+        trie.insert(&mut pool, QualityTier::Kv8, &p, &g8);
+        assert_eq!(trie.pages_pinned(), 2 * 2 * 2 * L,
+                   "per-tier chains must not share pins");
+        assert_eq!(trie.lookup(QualityTier::Kv8, &p, 2), g8);
+        assert_eq!(trie.lookup(QualityTier::Kv4, &p, 2), g4,
+                   "the KV8 donation must not displace the KV4 chain");
+
+        for g in g4.iter().chain(&g8) {
+            release_group(&mut pool, g);
+        }
+        trie.clear(&mut pool);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
     fn disabled_cache_is_inert() {
         let mut pool = PagePool::new(8, 16);
         let mut trie = PrefixCache::new(TPP, L, 0);
         let p = prompt(8, 0);
         let gs: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
         let before = pool.in_use();
-        trie.insert(&mut pool, &p, &gs);
-        assert!(trie.lookup(&p, 2).is_empty());
+        trie.insert(&mut pool, T, &p, &gs);
+        assert!(trie.lookup(T, &p, 2).is_empty());
         trie.record_use(0);
         assert_eq!(trie.stats(), PrefixStats::default());
         assert_eq!(pool.in_use(), before, "disabled cache must not retain");

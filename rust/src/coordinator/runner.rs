@@ -78,7 +78,9 @@ pub struct QuantSpec {
     pub weights: WeightQuant,
     /// QUIK-style outlier retention count per site (baseline graph only).
     pub outliers: usize,
-    /// SmoothQuant α-migration before quantization (baseline graph only).
+    /// SmoothQuant α-migration before quantization: the baseline graph's
+    /// SmoothQuant mode, and the `scaled-hadamard` rotation's
+    /// scale-then-rotate fold on rotated weights.
     pub smooth: bool,
 }
 
@@ -103,6 +105,14 @@ impl QuantSpec {
 
     pub fn act_levels(&self) -> f32 {
         if self.act_bits == 0 { 0.0 } else { sym_levels(self.act_bits) as f32 }
+    }
+
+    /// True when the KV cache stays in floating point (the fp16
+    /// baseline): no paged quantized cache — the dense f32 staging is
+    /// the authoritative store.  Single source of truth for every
+    /// "is this the fp path" branch in the serving stack.
+    pub fn kv_is_fp(&self) -> bool {
+        self.kv_bits >= 16
     }
 
     fn qmax(bits: u32) -> f32 {
@@ -220,7 +230,7 @@ impl Runner {
     /// Returns (logits (B, V), k_new, v_new (L, B, d_kv)).
     pub fn decode(&self, tokens: &[i32], cur_lens: &[i32], staging: &DecodeStaging)
                   -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        let dynamic: Vec<HostTensor> = if self.spec.kv_bits == 16 {
+        let dynamic: Vec<HostTensor> = if self.spec.kv_is_fp() {
             vec![
                 HostTensor::I32(tokens.to_vec()),
                 HostTensor::I32(cur_lens.to_vec()),

@@ -1,0 +1,315 @@
+//! Self-speculative decoding: the model drafts against its own cheap
+//! KV4 cache and verifies against the full-precision prefill path.
+//!
+//! QuaRot's near-lossless KV4 result (Table 6) means the 4-bit-cache
+//! model is an unusually good *draft model for itself*: it shares every
+//! weight with the target, so drafts agree with the target almost
+//! always and the speculation machinery needs no second network.  One
+//! round is:
+//!
+//! 1. **Draft** `k` tokens greedily through the decode graph over a
+//!    4-bit [`SeqCache`] (the KV4 tier's exact serving configuration).
+//! 2. **Verify** with ONE prefill over `accepted ++ drafts`.  The
+//!    prefill graph is causal, so its logits at position `p` depend
+//!    only on tokens `0..=p` — every draft position gets the logits an
+//!    iterated-prefill decode would have produced, in a single pass.
+//! 3. **Accept** the longest prefix of drafts that matches the
+//!    verifier's greedy choice; take the verifier's token at the first
+//!    mismatch (or the bonus token after a full accept).  The output is
+//!    therefore *token-for-token identical* to plain greedy decoding
+//!    through [`prefill_greedy`] — the KV4 cache only ever decides how
+//!    many verifier tokens each prefill yields, never which tokens.
+//! 4. **Rebuild** the draft cache from the verify prefill's exact K/V,
+//!    so draft-cache quantization error can never compound across
+//!    rounds.
+//!
+//! The decoder is deliberately single-sequence (lane 0 of a
+//! [`DecodeStaging`]): it is the `generate --self-spec` CLI mode and
+//! the bit-exactness test substrate, not a batch scheduler.  Fusing
+//! speculation into the continuous batcher is a ROADMAP follow-up.
+
+use anyhow::{bail, Result};
+
+use crate::api::QualityTier;
+use crate::model::ModelConfig;
+
+use super::batcher::TOKENS_PER_PAGE;
+use super::kvcache::{PagePool, SeqCache};
+use super::runner::{DecodeStaging, Prefilled, Runner};
+
+/// Default speculative window (tokens drafted per verify prefill).
+pub const DEFAULT_DRAFT: usize = 4;
+
+/// Lifetime counters of one generation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SelfSpecStats {
+    /// tokens proposed by the KV4 draft pass
+    pub drafted: usize,
+    /// drafted tokens the verifier accepted
+    pub accepted: usize,
+    /// draft→verify rounds run (excludes the seed prefill)
+    pub rounds: usize,
+    /// verify prefills run (seed included)
+    pub verify_prefills: usize,
+}
+
+impl SelfSpecStats {
+    /// Fraction of drafted tokens the verifier kept — the paper-style
+    /// acceptance rate; high values mean KV4 ≈ the verifier (Table 6).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.drafted as f64
+    }
+}
+
+pub struct SelfSpecOutput {
+    pub tokens: Vec<u16>,
+    pub stats: SelfSpecStats,
+}
+
+/// Greedy self-speculative decoder over one [`Runner`].
+pub struct SelfSpecDecoder<'a> {
+    runner: &'a Runner,
+    draft_k: usize,
+}
+
+impl<'a> SelfSpecDecoder<'a> {
+    /// `draft_k` tokens are drafted per verify prefill.  Fails on the
+    /// fp16 baseline (its decode graph has no quantized-cache inputs to
+    /// draft over — and with fp K/V there is nothing to speculate away).
+    pub fn new(runner: &'a Runner, draft_k: usize)
+               -> Result<SelfSpecDecoder<'a>> {
+        if runner.spec.kv_is_fp() {
+            bail!("--self-spec needs a quantized-KV scheme (the fp16 \
+                   baseline has no KV4 draft path)");
+        }
+        if draft_k == 0 {
+            bail!("draft window must be >= 1");
+        }
+        Ok(SelfSpecDecoder { runner, draft_k })
+    }
+
+    /// Generate up to `max_new` tokens greedily.  Output is
+    /// token-for-token identical to [`prefill_greedy`] on the same
+    /// runner; both stop early if the sequence reaches `max_seq`.
+    pub fn generate(&self, prompt: &[u16], max_new: usize)
+                    -> Result<SelfSpecOutput> {
+        let cfg = self.runner.cfg.clone();
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if max_new == 0 {
+            bail!("max_new must be >= 1");
+        }
+        if prompt.len() > cfg.max_seq {
+            bail!("prompt length {} exceeds max_seq {}", prompt.len(),
+                  cfg.max_seq);
+        }
+        let mut stats = SelfSpecStats::default();
+        let v = cfg.vocab;
+        let tpp = TOKENS_PER_PAGE;
+        // one sequence's worth of 4-bit pages, fully provisioned
+        let draft_bits = QualityTier::Kv4.kv_bits();
+        let geom = SeqCache::new(&cfg, draft_bits, self.runner.spec.kv_clip,
+                                 tpp).geom();
+        let mut pool = PagePool::new(
+            geom.page_bytes(),
+            2 * cfg.n_layers * cfg.cache_seq.div_ceil(tpp));
+        let mut staging = DecodeStaging::new(&cfg, false);
+
+        // Seed: one verify prefill over the prompt yields the first
+        // token and the draft cache's initial contents.
+        let pre = self.runner.prefill(prompt)?;
+        stats.verify_prefills += 1;
+        let mut seq = prompt.to_vec();
+        seq.push(argmax(&pre.logits[(pre.len - 1) * v..pre.len * v]));
+        let mut cache = self.rebuild_cache(&cfg, &mut pool, &mut staging,
+                                           &pre, seq.len() - 1)?;
+
+        while seq.len() - prompt.len() < max_new {
+            if seq.len() > cfg.max_seq {
+                break; // same stopping rule as prefill_greedy
+            }
+            // Draft window: the verify prefill must fit max_seq, the
+            // drafted positions must fit the cache/staging geometry.
+            let m = self.draft_k
+                .min(max_new - (seq.len() - prompt.len()))
+                .min(cfg.max_seq.saturating_sub(seq.len()))
+                .min((cfg.cache_seq + 1).saturating_sub(seq.len()));
+            if m == 0 {
+                // no draft room left (sequence at max_seq): finish with
+                // plain verifier steps so truncation matches
+                // prefill_greedy exactly
+                let pre = self.runner.prefill(&seq)?;
+                stats.verify_prefills += 1;
+                stats.rounds += 1;
+                seq.push(argmax(&pre.logits[(pre.len - 1) * v
+                                            ..pre.len * v]));
+                continue;
+            }
+
+            // ---- draft m tokens at KV4 through the decode graph ----
+            let b = cfg.decode_batch;
+            let d = cfg.d_kv();
+            let mut drafts: Vec<u16> = Vec::with_capacity(m);
+            for _ in 0..m {
+                let cur = *drafts.last().unwrap_or(seq.last().unwrap());
+                let mut tokens = vec![0i32; b];
+                let mut lens = vec![0i32; b];
+                tokens[0] = cur as i32;
+                lens[0] = cache.len as i32;
+                let (logits, k_new, v_new) =
+                    self.runner.decode(&tokens, &lens, &staging)?;
+                for l in 0..cfg.n_layers {
+                    let o = (l * b) * d; // lane 0
+                    cache.append_layer(&mut pool, l, &k_new[o..o + d],
+                                       &v_new[o..o + d], cfg.kv_group)?;
+                }
+                cache.bump();
+                stage_token(&mut staging, &pool, &cfg, &cache,
+                            cache.len - 1);
+                drafts.push(argmax(&logits[..v]));
+            }
+            stats.drafted += m;
+
+            // ---- verify: one causal prefill over seq ++ drafts ----
+            let n0 = seq.len();
+            let mut ver_seq = seq.clone();
+            ver_seq.extend_from_slice(&drafts);
+            let pre = self.runner.prefill(&ver_seq)?;
+            stats.verify_prefills += 1;
+            stats.rounds += 1;
+            let target_at = |p: usize| argmax(&pre.logits[p * v..(p + 1) * v]);
+            let mut acc = 0;
+            while acc < m && target_at(n0 + acc - 1) == drafts[acc] {
+                acc += 1;
+            }
+            stats.accepted += acc;
+            // accepted drafts, then the verifier's next token (the
+            // correction on mismatch, the bonus on a full accept)
+            seq.extend_from_slice(&drafts[..acc]);
+            seq.push(target_at(n0 + acc - 1));
+            let over = (seq.len() - prompt.len()).saturating_sub(max_new);
+            seq.truncate(seq.len() - over);
+            if seq.len() - prompt.len() >= max_new {
+                break;
+            }
+
+            // ---- rebuild the draft cache from the verifier's K/V ----
+            cache.free(&mut pool);
+            cache = self.rebuild_cache(&cfg, &mut pool, &mut staging, &pre,
+                                       seq.len() - 1)?;
+        }
+        let tokens = seq[prompt.len()..].to_vec();
+        Ok(SelfSpecOutput { tokens, stats })
+    }
+
+    /// Fresh 4-bit cache holding the first `n` tokens of a verify
+    /// prefill's K/V (the last accepted token stays out — it is the
+    /// next decode input), with the staging view loaded to match.
+    fn rebuild_cache(&self, cfg: &ModelConfig, pool: &mut PagePool,
+                     staging: &mut DecodeStaging, pre: &Prefilled,
+                     n: usize) -> Result<SeqCache> {
+        let d = cfg.d_kv();
+        let mut cache = SeqCache::new(cfg, QualityTier::Kv4.kv_bits(),
+                                      self.runner.spec.kv_clip,
+                                      TOKENS_PER_PAGE);
+        // repack (L, pre.len, d) → (L, n, d)
+        let mut ks = Vec::with_capacity(cfg.n_layers * n * d);
+        let mut vs = Vec::with_capacity(cfg.n_layers * n * d);
+        for l in 0..cfg.n_layers {
+            let o = l * pre.len * d;
+            ks.extend_from_slice(&pre.ks[o..o + n * d]);
+            vs.extend_from_slice(&pre.vs[o..o + n * d]);
+        }
+        cache.init_from_prefill(pool, &ks, &vs, n, cfg.kv_group)?;
+        for t in 0..n {
+            stage_token(staging, pool, cfg, &cache, t);
+        }
+        Ok(cache)
+    }
+}
+
+/// Write one cached token into lane 0 of the dense staging view — the
+/// single-sequence twin of the batcher's staging write-through.
+fn stage_token(staging: &mut DecodeStaging, pool: &PagePool,
+               cfg: &ModelConfig, cache: &SeqCache, t: usize) {
+    let (l_n, b, s) = (cfg.n_layers, cfg.decode_batch, cfg.cache_seq);
+    let d = cfg.d_kv();
+    let ng = d / cfg.kv_group;
+    let mut codes = vec![0i8; d];
+    let mut scales = vec![0.0f32; ng];
+    let mut zeros = vec![0.0f32; ng];
+    for l in 0..l_n {
+        for want_v in [false, true] {
+            cache.read_token(pool, l, t, want_v,
+                             &mut codes, &mut scales, &mut zeros);
+            let co = (l * b * s + t) * d; // lane 0
+            let go = (l * b * s + t) * ng;
+            let (dc, ds, dz) = if want_v {
+                (&mut staging.v_codes, &mut staging.v_scale,
+                 &mut staging.v_zero)
+            } else {
+                (&mut staging.k_codes, &mut staging.k_scale,
+                 &mut staging.k_zero)
+            };
+            dc[co..co + d].copy_from_slice(&codes);
+            ds[go..go + ng].copy_from_slice(&scales);
+            dz[go..go + ng].copy_from_slice(&zeros);
+        }
+    }
+}
+
+/// Plain greedy decoding by iterated prefill — the reference the
+/// self-speculative path must match token-for-token, and the ppl-grade
+/// "pure verifier" baseline for its speedup claims.
+pub fn prefill_greedy(runner: &Runner, prompt: &[u16], max_new: usize)
+                      -> Result<Vec<u16>> {
+    if prompt.is_empty() {
+        bail!("empty prompt");
+    }
+    let v = runner.cfg.vocab;
+    let mut seq = prompt.to_vec();
+    while seq.len() - prompt.len() < max_new && seq.len() <= runner.cfg.max_seq {
+        let pre = runner.prefill(&seq)?;
+        seq.push(argmax(&pre.logits[(pre.len - 1) * v..pre.len * v]));
+    }
+    Ok(seq[prompt.len()..].to_vec())
+}
+
+/// First-maximum argmax — both the draft and verify sides of the accept
+/// rule use this exact reduction, so ties cannot break the equality.
+fn argmax(logits: &[f32]) -> u16 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_is_first_maximum() {
+        assert_eq!(argmax(&[0.0, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[3.0, 3.0, 3.0]), 0, "ties break low");
+        assert_eq!(argmax(&[-2.0, -1.0]), 1);
+    }
+
+    #[test]
+    fn stats_acceptance_rate() {
+        let mut s = SelfSpecStats::default();
+        assert_eq!(s.acceptance_rate(), 0.0, "no drafts → rate 0");
+        s.drafted = 8;
+        s.accepted = 6;
+        assert!((s.acceptance_rate() - 0.75).abs() < 1e-12);
+    }
+}

@@ -26,6 +26,10 @@
 //!                   views for the backend's batched decode ops.
 //! * [`model`]     — artifact containers: configs, weights.bin, corpus.bin,
 //!                   probes.bin, and the rust-side QuaRot transform.
+//! * [`rotation`]  — pluggable rotation schemes (`RotationScheme` trait):
+//!                   randomized Hadamard, random orthogonal (Table 8),
+//!                   channel-scaled Hadamard — `--rotation` selects one
+//!                   end-to-end (spec → weight prep → verify).
 //! * [`runtime`]   — PJRT engine: manifest-driven executable registry.
 //! * [`coordinator`] — the serving layer: continuous batcher, paged
 //!                   quantized KV-cache manager with refcounted pages,
@@ -62,6 +66,7 @@ pub mod hadamard;
 pub mod linalg;
 pub mod model;
 pub mod quant;
+pub mod rotation;
 pub mod runtime;
 pub mod server;
 pub mod tensor;

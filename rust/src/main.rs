@@ -7,7 +7,9 @@
 //!                 per-shard admission, --shards N engine shards,
 //!                 --prefix-cache N shared-prefix page budget)
 //!   generate      generation from a token prompt (--stream prints tokens
-//!                 incrementally; --priority / --deadline-ms scheduling)
+//!                 incrementally; --priority / --deadline-ms / --tier
+//!                 scheduling; --self-spec for KV4-draft speculative
+//!                 greedy decode)
 //!   cluster-bench drive a sharded cluster with synthetic mixed
 //!                 Interactive/Batch traffic and print the per-shard
 //!                 metrics table
@@ -15,6 +17,7 @@
 //!   zeroshot   probe-task accuracies
 //!   outliers   Fig.1 activation outlier statistics (base vs rotated)
 //!   verify     cross-language check: rust QuaRot transform == python's
+//!              (--rotation selects the scheme to reconstruct)
 //!   info       print the model manifest summary
 
 use std::sync::Arc;
@@ -28,9 +31,10 @@ use quarot::cluster::{ClusterConfig, ClusterService, EngineFactory,
                       LatencySummary};
 use quarot::coordinator::batcher::GenerationEngine;
 use quarot::coordinator::runner::{QuantSpec, Runner, Variant, WeightQuant};
+use quarot::coordinator::selfspec::{self, SelfSpecDecoder};
 use quarot::eval;
-use quarot::model::transform;
 use quarot::quant;
+use quarot::rotation::{self, RotationKind};
 use quarot::util::bench::Table;
 use quarot::util::cli::Args;
 
@@ -51,12 +55,33 @@ fn spec_from_args(a: &Args) -> Result<QuantSpec> {
                         (fp16|quarot-int4|quarot-int6|quarot-int8|rtn-int4)"),
     };
     if let Some(bits) = a.get("act-bits") {
-        spec.act_bits = bits.parse()?;
+        spec.act_bits = parse_bits("act-bits", bits)?;
     }
     if let Some(bits) = a.get("kv-bits") {
-        spec.kv_bits = bits.parse()?;
+        // one knob, both streams: a K/V width split is expressible in
+        // QuantSpec but not worth a second flag
+        spec.kv_bits = parse_bits("kv-bits", bits)?;
+        spec.kv_bits_v = spec.kv_bits;
+    }
+    if let Some(r) = a.get("rotation") {
+        let kind = RotationKind::parse(r)?;
+        kind.apply_to_spec(&mut spec)?;
     }
     Ok(spec)
+}
+
+/// Bit widths the kernels and KV codec actually implement; anything
+/// else would quantize to garbage or crash deep in a graph, so reject
+/// it at the flag with the valid set spelled out.
+const VALID_BITS: [u32; 5] = [3, 4, 6, 8, 16];
+
+fn parse_bits(flag: &str, s: &str) -> Result<u32> {
+    let bits: u32 = s.parse()
+        .with_context(|| format!("--{flag} '{s}' is not an integer"))?;
+    if !VALID_BITS.contains(&bits) {
+        bail!("--{flag} {bits} unsupported (valid widths: 3|4|6|8|16)");
+    }
+    Ok(bits)
 }
 
 fn main() -> Result<()> {
@@ -86,10 +111,15 @@ fn main() -> Result<()> {
                  usage: quarot <serve|generate|cluster-bench|ppl|zeroshot|\
                  outliers|verify|info>\n\
                  common flags: --model tiny-mha --scheme quarot-int4\n\
+                               --rotation hadamard|random|scaled-hadamard\n\
+                               --act-bits / --kv-bits 3|4|6|8|16\n\
                                --backend scalar|blocked|threaded|auto (default auto)\n\
                  generate:     --stream (incremental tokens) --temperature --top-k\n\
                                --stop-token --priority interactive|batch\n\
                                --deadline-ms N (server-side deadline)\n\
+                               --tier kv4|kv8 (KV-cache precision tier)\n\
+                               --self-spec [--draft N] (KV4 drafts,\n\
+                               verified greedy decode)\n\
                  serve:        --queue-bound N (per-shard admission)\n\
                                --shards N (engine shards behind one front)\n\
                                --prefix-cache N (shared-prefix page budget\n\
@@ -104,11 +134,23 @@ fn main() -> Result<()> {
     }
 }
 
+/// Build a runner for `spec`, collecting calibration stats when the
+/// spec needs them (the scaled-hadamard rotation folds per-channel
+/// scales into the weights, which requires activation amax).
+fn runner_for_spec(art: &Artifacts, spec: &QuantSpec) -> Result<Runner> {
+    let stats = if spec.smooth {
+        Some(art.calib(spec.variant.is_rotated(), 4)?)
+    } else {
+        None
+    };
+    art.runner(spec.clone(), stats.as_ref())
+}
+
 fn build_runner(args: &Args) -> Result<(Artifacts, Runner)> {
     let model = args.str_or("model", "tiny-mha");
     let art = Artifacts::load(&model)?;
     let spec = spec_from_args(args)?;
-    let runner = art.runner(spec, None)?;
+    let runner = runner_for_spec(&art, &spec)?;
     Ok((art, runner))
 }
 
@@ -127,7 +169,7 @@ fn serve(args: &Args) -> Result<()> {
     let handle = quarot::server::serve_sharded(
         move || {
             let art = Artifacts::load(&model)?;
-            let runner = art.runner(spec.clone(), None)?;
+            let runner = runner_for_spec(&art, &spec)?;
             let mut engine = GenerationEngine::new(runner, pages, 7);
             engine.set_prefix_cache_pages(prefix_pages);
             Ok(engine)
@@ -156,6 +198,26 @@ fn generate(args: &Args) -> Result<()> {
         .map(|t| t.trim().parse().context("bad prompt token"))
         .collect::<Result<_>>()?;
     let temperature = args.f64_or("temperature", 0.0);
+    if args.bool("self-spec") {
+        // self-speculative mode: KV4 drafts, one causal prefill
+        // verifies — greedy by construction (the accept rule compares
+        // argmaxes, not samples)
+        if temperature > 0.0 {
+            bail!("--self-spec is greedy-only (drop --temperature)");
+        }
+        let draft = args.usize_or("draft", selfspec::DEFAULT_DRAFT);
+        let dec = SelfSpecDecoder::new(&runner, draft)?;
+        let t0 = std::time::Instant::now();
+        let out = dec.generate(&prompt, args.usize_or("max-new", 32))?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!("tokens: {:?}", out.tokens);
+        let s = out.stats;
+        println!("self-spec: {} tokens in {ms:.1} ms — {} rounds, \
+                  {} verify prefills, {}/{} drafts accepted ({:.0}%)",
+                 out.tokens.len(), s.rounds, s.verify_prefills,
+                 s.accepted, s.drafted, s.acceptance_rate() * 100.0);
+        return Ok(());
+    }
     let sampling = if temperature > 0.0 {
         Sampling::TopK {
             temperature: temperature as f32,
@@ -177,6 +239,10 @@ fn generate(args: &Args) -> Result<()> {
     }
     if let Some(d) = args.get("deadline-ms") {
         params = params.deadline(d.parse().context("bad deadline")?);
+    }
+    if let Some(t) = args.get("tier") {
+        params = params.tier(quarot::api::QualityTier::parse(t)
+            .with_context(|| format!("unknown tier '{t}' (kv4|kv8)"))?);
     }
     let session = LocalSession::new(GenerationEngine::new(runner, 1024, 7),
                                     SessionConfig::default());
@@ -239,7 +305,7 @@ fn cluster_bench(args: &Args) -> Result<()> {
     let m = model.clone();
     let factory: EngineFactory = Arc::new(move || {
         let art = Artifacts::load(&m)?;
-        let runner = art.runner(spec.clone(), None)?;
+        let runner = runner_for_spec(&art, &spec)?;
         let mut engine = GenerationEngine::new(runner, pages, 7);
         engine.set_prefix_cache_pages(prefix_pages);
         Ok(engine)
@@ -337,8 +403,19 @@ fn verify(args: &Args) -> Result<()> {
     let model = args.str_or("model", "tiny-mha");
     let art = Artifacts::load(&model)?;
     let engine = art.engine_graphs(&[])?; // manifest only
-    let mismatch = transform::rotation_mismatch(&engine.manifest.model, &art.weights)?;
-    println!("rust-vs-python rotation relative mismatch: {mismatch:.3e}");
+    // precedence: --rotation flag > manifest `rotation` field > hadamard
+    let kind = match args.get("rotation") {
+        Some(r) => RotationKind::parse(r)?,
+        None => match engine.manifest.rotation.as_deref() {
+            Some(r) => RotationKind::parse(r)
+                .context("manifest `rotation` field")?,
+            None => RotationKind::default(),
+        },
+    };
+    let mismatch =
+        rotation::verify_mismatch(kind, &engine.manifest.model, &art.weights)?;
+    println!("rust-vs-python rotation relative mismatch ({kind}): \
+              {mismatch:.3e}");
     if mismatch > 1e-3 {
         bail!("transform mismatch too large");
     }

@@ -176,11 +176,11 @@ pub fn rotation_mismatch(cfg: &ModelConfig, w: &Weights) -> Result<f64> {
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::util::prng::Rng;
 
-    fn demo_cfg() -> ModelConfig {
+    pub(crate) fn demo_cfg() -> ModelConfig {
         ModelConfig {
             name: "t".into(), vocab: 32, d_model: 16, n_layers: 2, n_heads: 4,
             n_kv_heads: 2, d_head: 4, d_ff: 24, max_seq: 8, cache_seq: 16,
@@ -188,7 +188,8 @@ mod tests {
         }
     }
 
-    fn demo_weights(cfg: &ModelConfig, rng: &mut Rng) -> BTreeMap<String, Tensor> {
+    pub(crate) fn demo_weights(cfg: &ModelConfig, rng: &mut Rng)
+                               -> BTreeMap<String, Tensor> {
         let (d, da, dkv, dff, l, v) =
             (cfg.d_model, cfg.d_attn(), cfg.d_kv(), cfg.d_ff, cfg.n_layers, cfg.vocab);
         let t = |shape: Vec<usize>, rng: &mut Rng| {

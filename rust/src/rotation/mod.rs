@@ -1,0 +1,346 @@
+//! Pluggable rotation schemes — the "which orthogonal Q" axis of QuaRot.
+//!
+//! The paper's incoherence processing is one point in a family: Table 8
+//! ablates randomized Hadamard against random orthogonal matrices, and
+//! follow-ups (SpinQuant, DFRot, SmoothRot — see PAPERS.md) treat the
+//! rotation itself as a tunable.  This module makes the choice explicit:
+//! a [`RotationScheme`] bundles the offline residual-rotation construction
+//! (the Q fused into weights by `model::transform::rotate`) with the two
+//! knobs the serving stack threads through weight prep — whether
+//! per-channel SmoothQuant scales are folded around Q
+//! ([`RotationScheme::channel_scaled`]) and which online per-head
+//! transform runs inside the kernels.
+//!
+//! Three implementations, selected by `--rotation` on the CLI (and the
+//! optional `rotation` manifest field):
+//!
+//! * [`RandomizedHadamard`] — `Q = H·diag(s)`, the paper's default.
+//!   Artifacts: the `rot.*` weight set; Q is reconstructible from
+//!   `meta.q_signs`, so `verify` can check `rotation_mismatch`.
+//! * [`RandomOrthogonal`] — QR-orthogonalized Gaussian Q (Table 8's
+//!   weaker ablation).  Artifacts: the `rnd.*` weight set, which ships
+//!   *without* its Q (python keeps only the Hadamard sign vector), so
+//!   offline verification is not available for this scheme.
+//! * [`ChannelScaledHadamard`] — SmoothRot-style scale-then-rotate: the
+//!   same Hadamard Q, with SmoothQuant α-migration scales folded into
+//!   the norm/producer weights around it at prep time.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::runner::{QuantSpec, Variant};
+use crate::hadamard;
+use crate::linalg;
+use crate::model::transform;
+use crate::model::{ModelConfig, Tensor, Weights};
+use crate::tensor::Mat;
+use crate::util::prng::Rng;
+
+/// Which orthogonal rotation family is fused into the weights.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RotationKind {
+    #[default]
+    Hadamard,
+    Random,
+    ScaledHadamard,
+}
+
+impl RotationKind {
+    pub const ALL: [RotationKind; 3] =
+        [RotationKind::Hadamard, RotationKind::Random,
+         RotationKind::ScaledHadamard];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RotationKind::Hadamard => "hadamard",
+            RotationKind::Random => "random",
+            RotationKind::ScaledHadamard => "scaled-hadamard",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<RotationKind> {
+        Ok(match s {
+            "hadamard" => RotationKind::Hadamard,
+            "random" => RotationKind::Random,
+            "scaled-hadamard" => RotationKind::ScaledHadamard,
+            other => bail!("unknown rotation '{other}' \
+                            (hadamard|random|scaled-hadamard)"),
+        })
+    }
+
+    /// Retarget a quantization spec at this rotation's artifact set:
+    /// `random` switches to the `rnd.*` weights (`Variant::QuarotRandom`),
+    /// `scaled-hadamard` keeps the `rot.*` weights but turns on the
+    /// SmoothQuant fold (which then requires calibration stats at
+    /// runner construction).  Rotations only exist for rotated variants —
+    /// the fp16/RTN baseline has no Q to choose.
+    pub fn apply_to_spec(&self, spec: &mut QuantSpec) -> Result<()> {
+        if !spec.variant.is_rotated() {
+            bail!("--rotation requires a rotated scheme (quarot-int4/6/8), \
+                   not the baseline");
+        }
+        match self {
+            RotationKind::Hadamard => {}
+            RotationKind::Random => {
+                if spec.variant == Variant::QuarotH16 {
+                    bail!("--rotation random has no fp16-head artifact set \
+                           (rnd.* ships int-head graphs only)");
+                }
+                spec.variant = Variant::QuarotRandom;
+            }
+            RotationKind::ScaledHadamard => spec.smooth = true,
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for RotationKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A rotation scheme: how the residual rotation Q is constructed offline
+/// and which per-head/channel treatment rides along at weight prep.
+pub trait RotationScheme: Sync {
+    fn kind(&self) -> RotationKind;
+
+    /// Construct the residual rotation Q (d × d, orthogonal).  The same
+    /// (d, seed) must always reproduce the same Q — `rotation_mismatch`
+    /// style verification depends on deterministic reconstruction.
+    fn build_q(&self, d: usize, seed: u64) -> Mat;
+
+    /// Scale-then-rotate: fold SmoothQuant per-channel scales around Q
+    /// during weight prep (requires calibration activation maxima).
+    fn channel_scaled(&self) -> bool {
+        false
+    }
+
+    /// The online per-head transform the kernels apply to V/O streams
+    /// (paper Stage 1c).  Every current scheme keeps the Hadamard here —
+    /// it is the only transform with an O(d log d) online form.
+    fn online_headdim(&self, x: &mut [f32], d_head: usize) {
+        hadamard::had_headdim(x, d_head);
+    }
+
+    /// Rotate a base checkpoint with this scheme's Q — the full Stage-1
+    /// fusion of `model::transform::rotate`.
+    fn rotate(&self, cfg: &ModelConfig, base: &BTreeMap<String, &Tensor>,
+              seed: u64) -> Result<BTreeMap<String, Tensor>> {
+        transform::rotate(cfg, base, &self.build_q(cfg.d_model, seed))
+    }
+}
+
+/// `Q = H·diag(s)` — the paper's randomized Hadamard (default).
+pub struct RandomizedHadamard;
+
+impl RotationScheme for RandomizedHadamard {
+    fn kind(&self) -> RotationKind {
+        RotationKind::Hadamard
+    }
+
+    fn build_q(&self, d: usize, seed: u64) -> Mat {
+        hadamard::randomized_hadamard(d, seed)
+    }
+}
+
+/// QR-orthogonalized Gaussian Q — Table 8's random-orthogonal ablation.
+pub struct RandomOrthogonal;
+
+impl RotationScheme for RandomOrthogonal {
+    fn kind(&self) -> RotationKind {
+        RotationKind::Random
+    }
+
+    fn build_q(&self, d: usize, seed: u64) -> Mat {
+        linalg::random_orthogonal(d, &mut Rng::new(seed))
+    }
+}
+
+/// SmoothRot-style scale-then-rotate: Hadamard Q plus SmoothQuant
+/// per-channel scales folded around it at weight prep.
+pub struct ChannelScaledHadamard;
+
+impl RotationScheme for ChannelScaledHadamard {
+    fn kind(&self) -> RotationKind {
+        RotationKind::ScaledHadamard
+    }
+
+    fn build_q(&self, d: usize, seed: u64) -> Mat {
+        hadamard::randomized_hadamard(d, seed)
+    }
+
+    fn channel_scaled(&self) -> bool {
+        true
+    }
+}
+
+/// The scheme singleton for a kind.
+pub fn scheme(kind: RotationKind) -> &'static dyn RotationScheme {
+    match kind {
+        RotationKind::Hadamard => &RandomizedHadamard,
+        RotationKind::Random => &RandomOrthogonal,
+        RotationKind::ScaledHadamard => &ChannelScaledHadamard,
+    }
+}
+
+/// Relative Frobenius distance between two rotated weight maps — the
+/// reduction `rotation_mismatch` uses, exposed for any pair of maps.
+pub fn map_mismatch(ours: &BTreeMap<String, Tensor>,
+                    theirs: &BTreeMap<String, Tensor>) -> Result<f64> {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (k, t) in ours {
+        let Some(want) = theirs.get(k) else {
+            bail!("mismatch: peer map missing {k}");
+        };
+        let (got, want) = (t.as_f32(), want.as_f32());
+        for (a, b) in got.iter().zip(&want) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+    }
+    Ok((num / den.max(1e-12)).sqrt())
+}
+
+/// Verify shipped artifacts against this scheme's reconstruction:
+/// re-rotate `base.*` with the scheme's Q and compare to the stored
+/// rotated set.  Hadamard-family schemes reconstruct Q from
+/// `meta.q_signs` (both use the same `rot.*` set — channel scales are a
+/// runtime fold, not baked into the artifacts); the random-orthogonal
+/// set ships without its Q, so verification is declared impossible
+/// rather than silently skipped.
+pub fn verify_mismatch(kind: RotationKind, cfg: &ModelConfig, w: &Weights)
+                       -> Result<f64> {
+    match kind {
+        RotationKind::Hadamard | RotationKind::ScaledHadamard => {
+            transform::rotation_mismatch(cfg, w)
+        }
+        RotationKind::Random => bail!(
+            "rnd.* artifacts ship without their Q (only the Hadamard sign \
+             vector meta.q_signs is stored) — offline verification is only \
+             available for hadamard/scaled-hadamard"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transform::tests::{demo_cfg, demo_weights};
+
+    fn max_abs_qqt_minus_i(q: &Mat) -> f32 {
+        let d = q.rows;
+        let p = q.matmul(&q.t());
+        let mut worst = 0.0f32;
+        for i in 0..d {
+            for j in 0..d {
+                let want = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((p[(i, j)] - want).abs());
+            }
+        }
+        worst
+    }
+
+    #[test]
+    fn kind_roundtrip_and_parse_error() {
+        for kind in RotationKind::ALL {
+            assert_eq!(RotationKind::parse(kind.as_str()).unwrap(), kind);
+            assert_eq!(scheme(kind).kind(), kind);
+        }
+        let err = RotationKind::parse("spin").unwrap_err().to_string();
+        assert!(err.contains("hadamard|random|scaled-hadamard"), "{err}");
+        assert_eq!(RotationKind::default(), RotationKind::Hadamard);
+    }
+
+    /// ISSUE property: every scheme's Q satisfies ‖QQᵀ − I‖∞ < 1e-4,
+    /// including on a Kronecker (non-pow-2) dimension.
+    #[test]
+    fn every_scheme_q_is_orthogonal() {
+        for kind in RotationKind::ALL {
+            for d in [8usize, 16, 24] {
+                let q = scheme(kind).build_q(d, 11);
+                assert_eq!((q.rows, q.cols), (d, d));
+                let worst = max_abs_qqt_minus_i(&q);
+                assert!(worst < 1e-4,
+                        "{kind} d={d}: ‖QQᵀ−I‖∞ = {worst}");
+            }
+        }
+    }
+
+    #[test]
+    fn build_q_is_deterministic_and_seed_sensitive() {
+        for kind in RotationKind::ALL {
+            let s = scheme(kind);
+            let (a, b) = (s.build_q(16, 5), s.build_q(16, 5));
+            assert_eq!(a.data, b.data, "{kind}: same seed must reproduce Q");
+            let c = s.build_q(16, 6);
+            assert!(a.data != c.data, "{kind}: seed must matter");
+        }
+    }
+
+    /// ISSUE property: re-rotating a base checkpoint with the scheme's
+    /// deterministically rebuilt Q matches the first rotation at fp-noise
+    /// level, and a drifted Q is actually detected — the contract the
+    /// `verify` command's `rotation_mismatch` check stands on.
+    #[test]
+    fn reconstruction_mismatch_is_fp_noise_for_every_scheme() {
+        let cfg = demo_cfg();
+        let mut rng = Rng::new(0);
+        let base = demo_weights(&cfg, &mut rng);
+        let base_ref: BTreeMap<String, &Tensor> =
+            base.iter().map(|(k, v)| (k.clone(), v)).collect();
+        for kind in RotationKind::ALL {
+            let s = scheme(kind);
+            let rot = s.rotate(&cfg, &base_ref, 7).unwrap();
+            let again = transform::rotate(&cfg, &base_ref,
+                                          &s.build_q(cfg.d_model, 7)).unwrap();
+            let mm = map_mismatch(&rot, &again).unwrap();
+            assert!(mm < 1e-6, "{kind}: reconstruction mismatch {mm}");
+            let drifted = transform::rotate(&cfg, &base_ref,
+                                            &s.build_q(cfg.d_model, 8)).unwrap();
+            let mm = map_mismatch(&rot, &drifted).unwrap();
+            assert!(mm > 1e-2, "{kind}: drifted Q must be detected, got {mm}");
+        }
+    }
+
+    #[test]
+    fn online_headdim_matches_dense_hadamard() {
+        let dh = 8usize;
+        let h = hadamard::hadamard_matrix(dh);
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(2 * dh);
+        for kind in RotationKind::ALL {
+            let mut got = x.clone();
+            scheme(kind).online_headdim(&mut got, dh);
+            for (head, got_head) in x.chunks_exact(dh)
+                .zip(got.chunks_exact(dh))
+            {
+                for j in 0..dh {
+                    let want: f32 =
+                        (0..dh).map(|i| head[i] * h[(i, j)]).sum();
+                    assert!((want - got_head[j]).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spec_mapping_and_verify_gates() {
+        let mut spec = QuantSpec::quarot(4);
+        RotationKind::Hadamard.apply_to_spec(&mut spec).unwrap();
+        assert_eq!(spec.variant, Variant::Quarot);
+        assert!(!spec.smooth);
+        RotationKind::Random.apply_to_spec(&mut spec).unwrap();
+        assert_eq!(spec.variant, Variant::QuarotRandom);
+        let mut spec = QuantSpec::quarot(4);
+        RotationKind::ScaledHadamard.apply_to_spec(&mut spec).unwrap();
+        assert_eq!(spec.variant, Variant::Quarot);
+        assert!(spec.smooth, "scaled-hadamard folds SmoothQuant scales");
+        let mut fp = QuantSpec::fp16_baseline();
+        for kind in RotationKind::ALL {
+            assert!(kind.apply_to_spec(&mut fp).is_err(),
+                    "{kind}: baseline has no rotation");
+        }
+    }
+}

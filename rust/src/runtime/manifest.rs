@@ -80,6 +80,12 @@ pub struct Manifest {
     pub weight_order: Vec<String>,
     pub mask_order: Vec<String>,
     pub graphs: Vec<GraphSpec>,
+    /// Rotation scheme the exporter baked into the weights, when the
+    /// manifest records one ("hadamard" | "random" | "scaled-hadamard").
+    /// Optional for backward compatibility with pre-rotation manifests;
+    /// consumers (`quarot verify`) treat it as the default that a
+    /// `--rotation` flag overrides.
+    pub rotation: Option<String>,
 }
 
 impl Manifest {
@@ -118,6 +124,8 @@ impl Manifest {
             weight_order: strings("weight_order")?,
             mask_order: strings("mask_order")?,
             graphs,
+            rotation: v.get("rotation").and_then(|x| x.as_str())
+                .map(|s| s.to_string()),
         })
     }
 
@@ -160,5 +168,16 @@ mod tests {
         assert_eq!(g.outputs[0].shape, vec![1, 128, 512]);
         assert!(m.graph("nope").is_err());
         assert_eq!(g.input_index("act_levels"), Some(1));
+        // pre-rotation manifests omit the field entirely
+        assert_eq!(m.rotation, None);
+    }
+
+    #[test]
+    fn rotation_field_is_optional_and_parsed() {
+        let with = DEMO.replacen(
+            "\"weight_order\"",
+            "\"rotation\": \"scaled-hadamard\", \"weight_order\"", 1);
+        let m = Manifest::from_json(&json::parse(&with).unwrap()).unwrap();
+        assert_eq!(m.rotation.as_deref(), Some("scaled-hadamard"));
     }
 }

@@ -16,7 +16,8 @@ use std::net::TcpStream;
 use std::sync::Arc;
 
 use quarot::api::{FinishReason, GenerationEvent, GenerationParams, Priority,
-                  LocalSession, RequestHandle, SessionConfig, SubmitError};
+                  LocalSession, QualityTier, RequestHandle, SessionConfig,
+                  SubmitError};
 use quarot::bench_support::{drain_event_signatures, Artifacts};
 use quarot::cluster::{ClusterConfig, ClusterService, EngineFactory};
 use quarot::coordinator::batcher::{GenerationEngine, Request, TOKENS_PER_PAGE};
@@ -164,6 +165,7 @@ fn event_path_matches_legacy_shim_byte_identical() {
         id: 0, prompt: prompt.clone(), max_new_tokens: 8,
         sampling, stop_token: None,
         priority: Priority::Interactive, deadline_ms: None,
+        tier: QualityTier::Kv4,
     });
     let legacy = engine.run_to_completion().unwrap();
     assert_eq!(legacy.len(), 1);

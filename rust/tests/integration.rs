@@ -9,6 +9,7 @@ use quarot::api::{FinishReason, GenerationParams, LocalSession, SessionConfig};
 use quarot::bench_support::Artifacts;
 use quarot::coordinator::batcher::GenerationEngine;
 use quarot::coordinator::runner::{QuantSpec, Variant, WeightQuant};
+use quarot::coordinator::selfspec::{self, SelfSpecDecoder};
 use quarot::eval;
 use quarot::model::transform;
 use quarot::quant::gptq::GptqCfg;
@@ -291,4 +292,29 @@ fn zeroshot_probes_above_chance_fp16() {
     assert_eq!(scores.len(), 6);
     // trained model must beat chance on average (2-4 way MC → chance ≈ 0.33)
     assert!(avg > 0.30, "avg probe accuracy {avg}");
+}
+
+#[test]
+fn self_spec_decode_is_bit_exact_vs_pure_verifier() {
+    // self-speculation must be an optimization, never an approximation:
+    // for every draft length the accepted stream equals plain iterated
+    // greedy prefill at the verifier's own spec, token for token (the
+    // KV4 draft cache only proposes; the causal verify prefill decides)
+    let Some(art) = art() else { return };
+    let prompt = art.corpus.split("eval").unwrap()[40..52].to_vec();
+    let runner = art.runner(QuantSpec::quarot(8), None).unwrap();
+    let max_new = 10;
+    let reference =
+        selfspec::prefill_greedy(&runner, &prompt, max_new).unwrap();
+    assert_eq!(reference.len(), max_new);
+    for draft_k in [1usize, 3, 4, 7] {
+        let dec = SelfSpecDecoder::new(&runner, draft_k).unwrap();
+        let out = dec.generate(&prompt, max_new).unwrap();
+        assert_eq!(out.tokens, reference,
+                   "draft_k={draft_k} diverged from the pure verifier");
+        assert!(out.stats.accepted <= out.stats.drafted,
+                "accepted {} > drafted {}",
+                out.stats.accepted, out.stats.drafted);
+        assert!(out.stats.verify_prefills >= 1);
+    }
 }
