@@ -1,0 +1,242 @@
+//! Multi-turn chat bench: per-turn TTFT and prefill-tokens-saved for
+//! session-resident conversations vs cold concatenated-history replay.
+//!
+//! Full mode drives a round-robin trace of chat sessions (turn 1 of
+//! every session, then turn 2, ...) against a session-enabled engine
+//! and replays the identical conversations as cold full-history
+//! resubmissions on a twin engine at the same seed.  The donated-chain
+//! graft keeps chat prefill work per turn roughly constant while the
+//! replay prefill grows with the history, which is the serving-side
+//! payoff of KV-4 pages being cheap enough to keep resident between
+//! turns (the paper's Table 17 memory story).
+//!
+//! `--check` is the CI acceptance smoke: chat token streams must be
+//! **bit-exact** vs the cold replay at every turn, the donation gauge
+//! must equal the page-rounded history on every turn ≥ 2, the session
+//! gauges must partition the trace exactly, and a budget shrink plus
+//! trie flush must return the pool to zero (no pin/refcount leaks).
+//!
+//! Like the examples, it self-skips with exit 0 when AOT artifacts are
+//! absent, so CI stays green on runners without `make artifacts`.
+
+use anyhow::{anyhow, bail, Result};
+
+use quarot::api::{GenerationParams, LocalSession, SessionConfig};
+use quarot::bench_support::{record, Artifacts};
+use quarot::coordinator::batcher::{GenerationEngine, TOKENS_PER_PAGE};
+use quarot::coordinator::runner::QuantSpec;
+use quarot::util::bench::Table;
+
+const MODEL: &str = "tiny-mha";
+const SEED: u64 = 19;
+const PAGES: usize = 4096;
+const N_SESSIONS: usize = 3;
+const N_TURNS: usize = 3;
+const MAX_NEW: usize = 8;
+
+/// Per-session turn texts: disjoint first-turn pages (no cross-session
+/// trie sharing muddies the donation accounting), short follow-ups.
+fn trace(art: &Artifacts) -> Result<Vec<Vec<Vec<u16>>>> {
+    let eval = art.corpus.split("eval")?;
+    let tpp = TOKENS_PER_PAGE;
+    if eval.len() < 16 * tpp {
+        bail!("eval split too short ({} tokens) for the chat trace",
+              eval.len());
+    }
+    Ok((0..N_SESSIONS)
+        .map(|i| {
+            (0..N_TURNS)
+                .map(|k| {
+                    if k == 0 {
+                        eval[i * 2 * tpp..i * 2 * tpp + tpp].to_vec()
+                    } else {
+                        let off = 8 * tpp + (i * N_TURNS + k) * 8;
+                        eval[off..off + 8].to_vec()
+                    }
+                })
+                .collect()
+        })
+        .collect())
+}
+
+/// Tokens a session's turn-k admission grafts from the donated chain:
+/// the previous turn's effective prompt plus its generated tokens bar
+/// the final sampled one, rounded down to whole pages (0 on turn 1).
+fn expected_saved(turn_lens: &[usize]) -> usize {
+    let tpp = TOKENS_PER_PAGE;
+    let mut hist = 0usize; // history length entering the turn
+    let mut prev_prompt = 0usize; // previous turn's effective prompt
+    let mut saved = 0usize;
+    for (k, &t) in turn_lens.iter().enumerate() {
+        let prompt = hist + t;
+        if k > 0 {
+            saved += (prev_prompt + MAX_NEW - 1) / tpp * tpp;
+        }
+        prev_prompt = prompt;
+        hist = prompt + MAX_NEW;
+    }
+    saved
+}
+
+struct Run {
+    /// ttft_by_turn[k] = TTFTs of every session's turn k
+    ttft_by_turn: Vec<Vec<f64>>,
+    /// streams[i][k] = session i's turn-k generated tokens
+    streams: Vec<Vec<Vec<u16>>>,
+}
+
+/// Chat path: one engine, `N_SESSIONS` live sessions driven round-robin
+/// (all turn-1 requests, then all turn-2, ...), history server-side.
+fn run_chat(art: &Artifacts, sessions: &LocalSession) -> Result<Run> {
+    let trace = trace(art)?;
+    let mut sids: Vec<Option<u64>> = vec![None; N_SESSIONS];
+    let mut ttft_by_turn = vec![Vec::new(); N_TURNS];
+    let mut streams = vec![Vec::new(); N_SESSIONS];
+    for k in 0..N_TURNS {
+        for i in 0..N_SESSIONS {
+            let p = GenerationParams::new(trace[i][k].clone()).max_new(MAX_NEW);
+            let p = match sids[i] {
+                None => p.new_session(),
+                Some(id) => p.resume_session(id),
+            };
+            let out = sessions.submit(p).map_err(|e| anyhow!("{e}"))?.wait()?;
+            sids[i] = Some(out.stats.session
+                .ok_or_else(|| anyhow!("chat turn lost its session id"))?);
+            ttft_by_turn[k].push(out.stats.ttft_ms);
+            streams[i].push(out.tokens);
+        }
+    }
+    Ok(Run { ttft_by_turn, streams })
+}
+
+/// Replay path: a cold twin (prefix cache off) resubmits each turn as
+/// the full concatenated history — what every turn would cost without
+/// the session subsystem.
+fn run_replay(art: &Artifacts) -> Result<Run> {
+    let runner = art.runner(QuantSpec::quarot(4), None)?;
+    let mut engine = GenerationEngine::new(runner, PAGES, SEED);
+    engine.set_prefix_cache_pages(0);
+    let s = LocalSession::new(engine, SessionConfig::default());
+    let trace = trace(art)?;
+    let mut hists: Vec<Vec<u16>> = vec![Vec::new(); N_SESSIONS];
+    let mut ttft_by_turn = vec![Vec::new(); N_TURNS];
+    let mut streams = vec![Vec::new(); N_SESSIONS];
+    for k in 0..N_TURNS {
+        for i in 0..N_SESSIONS {
+            hists[i].extend_from_slice(&trace[i][k]);
+            let out = s
+                .submit(GenerationParams::new(hists[i].clone()).max_new(MAX_NEW))
+                .map_err(|e| anyhow!("{e}"))?
+                .wait()?;
+            hists[i].extend_from_slice(&out.tokens);
+            ttft_by_turn[k].push(out.stats.ttft_ms);
+            streams[i].push(out.tokens);
+        }
+    }
+    Ok(Run { ttft_by_turn, streams })
+}
+
+fn chat_session(art: &Artifacts) -> Result<LocalSession> {
+    let runner = art.runner(QuantSpec::quarot(4), None)?;
+    Ok(LocalSession::new(GenerationEngine::new(runner, PAGES, SEED),
+                         SessionConfig::default()))
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+/// Acceptance: bit-exact chat vs replay, exact donation savings on
+/// turns ≥ 2, exact gauge partitions, and the eviction + flush leak
+/// smoke.
+fn check(art: &Artifacts) -> Result<()> {
+    let s = chat_session(art)?;
+    let chat = run_chat(art, &s)?;
+    let replay = run_replay(art)?;
+    if chat.streams != replay.streams {
+        bail!("chat token streams diverged from cold full-history replay");
+    }
+
+    let trace = trace(art)?;
+    let expect: usize = trace.iter()
+        .map(|turns| {
+            let lens: Vec<usize> = turns.iter().map(|t| t.len()).collect();
+            expected_saved(&lens)
+        })
+        .sum();
+    if expect == 0 {
+        bail!("trace must accrue donation savings on turns >= 2");
+    }
+    let st = s.stats();
+    if st.session_prefill_tokens_saved != expect {
+        bail!("donation gauge {} != page-rounded history {expect}",
+              st.session_prefill_tokens_saved);
+    }
+    if st.session_turns != N_SESSIONS * N_TURNS {
+        bail!("session_turns {} != trace turns {}", st.session_turns,
+              N_SESSIONS * N_TURNS);
+    }
+    if s.sessions_live() != N_SESSIONS {
+        bail!("sessions_live {} != {N_SESSIONS}", s.sessions_live());
+    }
+
+    // leak smoke: budget shrink evicts + unpins, flush returns the pool
+    s.set_session_budget(1);
+    if s.sessions_live() != 1 {
+        bail!("budget shrink must evict down to 1 live session");
+    }
+    s.set_session_budget(0);
+    if s.sessions_live() != 0 {
+        bail!("budget 0 must evict every session");
+    }
+    s.clear_prefix_cache();
+    if s.pool_in_use() != 0 {
+        bail!("leak: {} pages still allocated after eviction + flush",
+              s.pool_in_use());
+    }
+    println!("[check] {N_SESSIONS}×{N_TURNS} chat trace bit-exact, \
+              {expect} prefill tokens saved, pools drained");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let check_mode = std::env::args().any(|a| a == "--check");
+    let art = match Artifacts::load(MODEL) {
+        Ok(a) => a,
+        Err(_) => {
+            eprintln!("[skip] artifacts missing — run `make artifacts`");
+            return Ok(());
+        }
+    };
+
+    if check_mode {
+        check(&art)?;
+        println!("[check] session chat acceptance OK");
+        return Ok(());
+    }
+
+    let s = chat_session(&art)?;
+    let chat = run_chat(&art, &s)?;
+    let replay = run_replay(&art)?;
+    let st = s.stats();
+
+    let mut t = Table::new(
+        "Multi-turn chat — per-turn TTFT, chat (donated KV) vs cold replay",
+        &["turn", "chat ttft ms", "replay ttft ms", "speedup"]);
+    for k in 0..N_TURNS {
+        let c = mean(&chat.ttft_by_turn[k]);
+        let r = mean(&replay.ttft_by_turn[k]);
+        println!("  [turn {}] chat ttft {c:.2} ms vs replay {r:.2} ms",
+                 k + 1);
+        t.row(vec![
+            format!("{}", k + 1),
+            format!("{c:.2}"),
+            format!("{r:.2}"),
+            format!("{:.2}x", if c > 0.0 { r / c } else { 0.0 }),
+        ]);
+    }
+    println!("  {} sessions × {} turns: {} prefill tokens saved by \
+              generated-token donation",
+             N_SESSIONS, N_TURNS, st.session_prefill_tokens_saved);
+    record("session_chat", &t.render())
+}

@@ -251,9 +251,13 @@ def build_config(cfg: ModelConfig, root: str, corpus: dict[str, np.ndarray],
     signs = random_signs(cfg.d_model, seed=17)
     q_had = hadamard_matrix(cfg.d_model) * signs[None, :]
     rot = quarot.rotate_params(cfg, np_params, q_matrix=q_had)
-    rnd = quarot.rotate_params(
-        cfg, np_params, q_matrix=random_orthogonal(cfg.d_model, seed=23))
-    tensors = {"meta.q_signs": signs.astype(np.float32)}
+    # the random-orthogonal Q ships whole (d x d) — unlike the Hadamard
+    # rotation it is not reconstructible from a seed on the rust side, so
+    # `quarot verify --rotation random` reads it back from the artifact
+    q_rnd = random_orthogonal(cfg.d_model, seed=23)
+    rnd = quarot.rotate_params(cfg, np_params, q_matrix=q_rnd)
+    tensors = {"meta.q_signs": signs.astype(np.float32),
+               "meta.rnd_q": q_rnd.astype(np.float32)}
     for pre, ps in (("base", np_params), ("rot", rot), ("rnd", rnd)):
         for k, v in ps.items():
             tensors[f"{pre}.{k}"] = np.asarray(v, np.float32)

@@ -159,6 +159,17 @@ impl LocalSession {
     pub fn clear_prefix_cache(&self) {
         self.core.borrow_mut().engine.clear_prefix_cache();
     }
+
+    /// Cap the number of live chat sessions (0 disables the session
+    /// subsystem); evicted sessions release their pinned trie chains.
+    pub fn set_session_budget(&self, max_sessions: usize) {
+        self.core.borrow_mut().engine.set_session_budget(max_sessions);
+    }
+
+    /// Live conversations (the `sessions_live` gauge).
+    pub fn sessions_live(&self) -> usize {
+        self.core.borrow().engine.sessions_live()
+    }
 }
 
 impl InferenceService for LocalSession {

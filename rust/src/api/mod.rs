@@ -38,6 +38,7 @@ pub use local::{LocalSession, SessionConfig};
 pub use remote::Client;
 
 pub use crate::coordinator::sampler::Sampling;
+pub use crate::session::SessionSpec;
 
 /// Engine-assigned request identifier (also the wire multiplexing key).
 pub type RequestId = u64;
@@ -191,6 +192,12 @@ pub struct GenerationParams {
     /// KV-cache precision tier; `None` defaults from the priority class
     /// at admission ([`QualityTier::from_priority`]).
     pub tier: Option<QualityTier>,
+    /// Multi-turn chat: `Some(New)` starts a conversation,
+    /// `Some(Resume(id))` makes the server prepend the session's stored
+    /// history to `prompt` and replay it from donated prefix-cache pages
+    /// — `prompt` is just the *new user text*.  `None` (the default) is
+    /// a plain one-shot request.
+    pub session: Option<SessionSpec>,
 }
 
 impl GenerationParams {
@@ -203,6 +210,7 @@ impl GenerationParams {
             priority: Priority::Interactive,
             deadline_ms: None,
             tier: None,
+            session: None,
         }
     }
 
@@ -233,6 +241,21 @@ impl GenerationParams {
 
     pub fn tier(mut self, t: QualityTier) -> GenerationParams {
         self.tier = Some(t);
+        self
+    }
+
+    /// Start a new conversation (the server assigns the session id,
+    /// delivered in the terminal event's [`RequestStats::session`]).
+    pub fn new_session(mut self) -> GenerationParams {
+        self.session = Some(SessionSpec::New);
+        self
+    }
+
+    /// Continue conversation `id`: the server prepends the stored
+    /// history and replays it from cache, so `prompt` is only the new
+    /// user text.
+    pub fn resume_session(mut self, id: u64) -> GenerationParams {
+        self.session = Some(SessionSpec::Resume(id));
         self
     }
 
@@ -272,6 +295,7 @@ impl GenerationParams {
             priority: self.priority,
             deadline_ms: self.deadline_ms,
             tier,
+            session: self.session,
         }
     }
 }
@@ -331,6 +355,10 @@ pub struct RequestStats {
     pub ttft_ms: f64,
     pub decode_ms: f64,
     pub queued_ms: f64,
+    /// the session this turn belongs to (chat requests only) — a `New`
+    /// submit learns its server-assigned id here, and the cluster router
+    /// learns session → shard ownership from the same field
+    pub session: Option<u64>,
 }
 
 impl RequestStats {

@@ -33,6 +33,8 @@ struct RemoteCore {
     released: HashSet<RequestId>,
     stats: VecDeque<Value>,
     metrics: VecDeque<Value>,
+    /// Pending `flush-prefix` acknowledgements.
+    flush_acks: usize,
     saw_shutdown: bool,
 }
 
@@ -76,6 +78,7 @@ impl RemoteCore {
                 }
                 ServerFrame::Stats(v) => self.stats.push_back(v),
                 ServerFrame::Metrics(v) => self.metrics.push_back(v),
+                ServerFrame::FlushPrefixAck => self.flush_acks += 1,
                 ServerFrame::Error { id, error } => {
                     // Id-tagged advisory errors are never injected into a
                     // request's stream — they could arrive after the real
@@ -147,22 +150,20 @@ impl Client {
                 released: HashSet::new(),
                 stats: VecDeque::new(),
                 metrics: VecDeque::new(),
+                flush_acks: 0,
                 saw_shutdown: false,
             })),
             next_cid: Cell::new(1),
         })
     }
 
-    /// Submit and block until the server's `queued` ack (or typed
-    /// rejection) for this request arrives; event frames for other
+    /// Send a submit-shaped frame and block until the server's `queued`
+    /// ack (or typed rejection) for it arrives; event frames for other
     /// requests seen meanwhile are buffered, not lost.
-    pub fn submit(&self, params: &GenerationParams)
-                  -> Result<RequestHandle, SubmitError> {
-        params.validate()?;
-        let cid = self.next_cid.get();
-        self.next_cid.set(cid + 1);
+    fn submit_frame(&self, frame: Value, cid: u64)
+                    -> Result<RequestHandle, SubmitError> {
         let mut core = self.core.borrow_mut();
-        core.send(&wire::encode_submit(cid, params))
+        core.send(&frame)
             .map_err(|e| SubmitError::Transport(format!("{e:#}")))?;
         loop {
             if let Some(id) = core.acks.remove(&cid) {
@@ -175,6 +176,40 @@ impl Client {
             core.pump_one()
                 .map_err(|e| SubmitError::Transport(format!("{e:#}")))?;
         }
+    }
+
+    /// Submit and block until the server acks (or rejects) the request.
+    pub fn submit(&self, params: &GenerationParams)
+                  -> Result<RequestHandle, SubmitError> {
+        params.validate()?;
+        let cid = self.next_cid.get();
+        self.next_cid.set(cid + 1);
+        self.submit_frame(wire::encode_submit(cid, params), cid)
+    }
+
+    /// Multi-turn chat: submit `params.prompt` as the *new user text* of
+    /// a conversation.  `session: None` opens a new session (read the
+    /// assigned id off the outcome's `stats.session`); `Some(id)` resumes
+    /// one — the server prepends the stored history and replays it from
+    /// donated prefix-cache pages, so only the new text is prefilled.
+    pub fn chat(&self, session: Option<u64>, params: &GenerationParams)
+                -> Result<RequestHandle, SubmitError> {
+        params.validate()?;
+        let cid = self.next_cid.get();
+        self.next_cid.set(cid + 1);
+        self.submit_frame(wire::encode_chat(cid, session, params), cid)
+    }
+
+    /// Drop every shard's prefix-cache entries (ops / test hygiene);
+    /// blocks until the server acks.
+    pub fn flush_prefix(&mut self) -> Result<()> {
+        let mut core = self.core.borrow_mut();
+        core.send(&wire::encode_cmd("flush-prefix"))?;
+        while core.flush_acks == 0 {
+            core.pump_one()?;
+        }
+        core.flush_acks -= 1;
+        Ok(())
     }
 
     /// v1-style convenience: submit, drain to the terminal event, and

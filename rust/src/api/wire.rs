@@ -23,9 +23,12 @@
 //! {"v":2,"cmd":"submit","cid":3,"prompt":[1,2,3],"max_new_tokens":16,
 //!  "temperature":0.8,"top_k":4,"stop_token":9,
 //!  "priority":"batch","deadline_ms":500}
+//! {"v":2,"cmd":"chat","cid":3,"prompt":[4,5],"max_new_tokens":16,
+//!  "session":12}                                    // session absent = new
 //! {"v":2,"cmd":"cancel","id":7}
 //! {"v":2,"cmd":"stats"}
 //! {"v":2,"cmd":"metrics"}
+//! {"v":2,"cmd":"flush-prefix"}
 //! {"v":2,"cmd":"shutdown"}
 //! ```
 //!
@@ -34,7 +37,14 @@
 //! submission — an expired request finishes with reason
 //! `"deadline_exceeded"`.  `tier` (`"kv4"`|`"kv8"`, absent ⇒ derived from
 //! the priority class at admission) pins the request's KV-cache precision
-//! tier.  `stats` answers flat cluster aggregates
+//! tier.  `chat` is a `submit` whose `prompt` is only the *new user
+//! text*: the server prepends the session's stored conversation history
+//! and replays it from donated prefix-cache pages; with no `"session"`
+//! field a new session is opened and its id comes back on the terminal
+//! `finished` frame's `"session"` key.  `flush-prefix` drops every
+//! shard's prefix-cache entries and is acked with
+//! `{"v":2,"event":"flush-prefix","ok":true}` (ops / test hygiene).
+//! `stats` answers flat cluster aggregates
 //! (including live `queue_depth` / `active_slots`); `metrics` adds the
 //! full per-shard breakdown (`{"v":2,"event":"metrics","per_shard":[..]}`).
 //!
@@ -42,11 +52,19 @@
 //! `rejected` frame so pipelined submits can be matched to server ids.
 //! A line with a `"prompt"` but no `"cmd"` is the legacy v1 one-shot
 //! protocol and is still answered with a single completion object.
+//!
+//! Version notes: frames are append-only — every protocol revision adds
+//! keys strictly after the pre-existing ones (`kv4_*`/`kv8_*` stats keys
+//! in the tier revision; the `chat`/`flush-prefix` cmds, the session
+//! gauges, and the optional `finished.session` key in the session
+//! revision), so a v2 client older than the server parses every frame it
+//! knew about unchanged.
 
 use anyhow::{bail, Context, Result};
 
 use super::{FinishReason, GenerationEvent, GenerationParams, Priority,
-            QualityTier, RequestId, RequestStats, SubmitError, Sampling};
+            QualityTier, RequestId, RequestStats, SessionSpec, SubmitError,
+            Sampling};
 use crate::util::json::{self, n, obj, Value};
 
 pub const PROTOCOL_VERSION: u32 = 2;
@@ -77,16 +95,24 @@ pub fn encode_event(id: RequestId, ev: &GenerationEvent, cid: Option<u64>)
             tag(vec![idv, ("token", n(*token as f64)),
                      ("index", n(*index as f64))], "token")
         }
-        GenerationEvent::Finished { reason, stats } => tag(vec![
-            idv,
-            ("reason", json::s(reason.as_str())),
-            ("prompt_len", n(stats.prompt_len as f64)),
-            ("generated", n(stats.generated as f64)),
-            ("ttft_ms", n(stats.ttft_ms)),
-            ("decode_ms", n(stats.decode_ms)),
-            ("queued_ms", n(stats.queued_ms)),
-            ("tokens_per_sec", n(stats.tokens_per_sec())),
-        ], "finished"),
+        GenerationEvent::Finished { reason, stats } => {
+            let mut pairs = vec![
+                idv,
+                ("reason", json::s(reason.as_str())),
+                ("prompt_len", n(stats.prompt_len as f64)),
+                ("generated", n(stats.generated as f64)),
+                ("ttft_ms", n(stats.ttft_ms)),
+                ("decode_ms", n(stats.decode_ms)),
+                ("queued_ms", n(stats.queued_ms)),
+                ("tokens_per_sec", n(stats.tokens_per_sec())),
+            ];
+            // appended after every pre-session key, and only for chat
+            // turns — one-shot finished frames stay byte-identical
+            if let Some(sid) = stats.session {
+                pairs.push(("session", n(sid as f64)));
+            }
+            tag(pairs, "finished")
+        }
         GenerationEvent::Failed { error } => {
             tag(vec![idv, ("error", json::s(error))], "failed")
         }
@@ -134,13 +160,17 @@ pub fn encode_shutdown_ack() -> Value {
     tag(vec![("ok", Value::Bool(true))], "shutdown")
 }
 
-/// Encode a submit command.  Sampling maps to `temperature` / `top_k`
-/// (absent ⇒ greedy, matching the v1 convention).
-pub fn encode_submit(cid: u64, p: &GenerationParams) -> Value {
+/// `{"cmd":"flush-prefix"}` acknowledgement.
+pub fn encode_flush_prefix_ack() -> Value {
+    tag(vec![("ok", Value::Bool(true))], "flush-prefix")
+}
+
+fn submit_pairs<'a>(cmd: &'a str, cid: u64, p: &GenerationParams)
+                    -> Vec<(&'a str, Value)> {
     let toks: Vec<Value> = p.prompt.iter().map(|&t| n(t as f64)).collect();
     let mut pairs = vec![
         ("v", n(PROTOCOL_VERSION as f64)),
-        ("cmd", json::s("submit")),
+        ("cmd", json::s(cmd)),
         ("cid", n(cid as f64)),
         ("prompt", Value::Arr(toks)),
         ("max_new_tokens", n(p.max_new_tokens as f64)),
@@ -162,6 +192,24 @@ pub fn encode_submit(cid: u64, p: &GenerationParams) -> Value {
     // server-side priority-derived default (mirrors priority/deadline)
     if let Some(t) = p.tier {
         pairs.push(("tier", json::s(t.as_str())));
+    }
+    pairs
+}
+
+/// Encode a submit command.  Sampling maps to `temperature` / `top_k`
+/// (absent ⇒ greedy, matching the v1 convention).
+pub fn encode_submit(cid: u64, p: &GenerationParams) -> Value {
+    obj(submit_pairs("submit", cid, p))
+}
+
+/// Encode a chat command: a submit whose `prompt` is only the new user
+/// text.  `session: None` opens a new conversation; `Some(id)` resumes
+/// one (the server replays the stored history from cache).
+pub fn encode_chat(cid: u64, session: Option<u64>, p: &GenerationParams)
+                   -> Value {
+    let mut pairs = submit_pairs("chat", cid, p);
+    if let Some(id) = session {
+        pairs.push(("session", n(id as f64)));
     }
     obj(pairs)
 }
@@ -225,6 +273,8 @@ pub enum ClientFrame {
     Stats,
     /// Full per-shard cluster metrics.
     Metrics,
+    /// Drop every shard's prefix-cache entries (`{"cmd":"flush-prefix"}`).
+    FlushPrefix,
     Shutdown,
     /// v1 compatibility: bare `{"prompt": ...}` one-shot generation.
     LegacyGenerate { params: GenerationParams },
@@ -236,12 +286,27 @@ pub fn parse_client_frame(v: &Value) -> Result<ClientFrame> {
             cid: v.get("cid").and_then(|c| c.as_usize()).unwrap_or(0) as u64,
             params: decode_params(v)?,
         }),
+        // a chat frame IS a submit carrying a session spec — the server
+        // needs no chat-specific routing, the engine resolves the rest
+        Some("chat") => {
+            let mut params = decode_params(v)?;
+            params.session = Some(match v.get("session") {
+                Some(sv) => SessionSpec::Resume(
+                    sv.as_usize().context("session must be a number")? as u64),
+                None => SessionSpec::New,
+            });
+            Ok(ClientFrame::Submit {
+                cid: v.get("cid").and_then(|c| c.as_usize()).unwrap_or(0) as u64,
+                params,
+            })
+        }
         Some("cancel") => Ok(ClientFrame::Cancel {
             id: v.get("id").and_then(|i| i.as_usize())
                 .context("cancel frame needs an id")? as u64,
         }),
         Some("stats") => Ok(ClientFrame::Stats),
         Some("metrics") => Ok(ClientFrame::Metrics),
+        Some("flush-prefix") => Ok(ClientFrame::FlushPrefix),
         Some("shutdown") => Ok(ClientFrame::Shutdown),
         Some(other) => bail!("unknown cmd '{other}'"),
         None => {
@@ -262,6 +327,8 @@ pub enum ServerFrame {
     Stats(Value),
     /// Per-shard cluster metrics payload.
     Metrics(Value),
+    /// `flush-prefix` acknowledgement.
+    FlushPrefixAck,
     Error { id: Option<RequestId>, error: String },
     Shutdown,
 }
@@ -307,6 +374,8 @@ pub fn parse_server_frame(v: &Value) -> Result<ServerFrame> {
                         ttft_ms: f("ttft_ms"),
                         decode_ms: f("decode_ms"),
                         queued_ms: f("queued_ms"),
+                        session: v.get("session").and_then(|x| x.as_usize())
+                            .map(|s| s as u64),
                     },
                 },
             }
@@ -331,6 +400,7 @@ pub fn parse_server_frame(v: &Value) -> Result<ServerFrame> {
         }
         "stats" => ServerFrame::Stats(v.clone()),
         "metrics" => ServerFrame::Metrics(v.clone()),
+        "flush-prefix" => ServerFrame::FlushPrefixAck,
         "error" => ServerFrame::Error {
             id: v.get("id").and_then(|i| i.as_usize()).map(|i| i as u64),
             error: v.get("error").and_then(|e| e.as_str())
@@ -354,6 +424,7 @@ mod tests {
         let stats = RequestStats {
             prompt_len: 8, generated: 24,
             ttft_ms: 1.5, decode_ms: 30.0, queued_ms: 31.5,
+            session: None,
         };
         let evs = [
             GenerationEvent::Queued,
@@ -536,6 +607,79 @@ mod tests {
         let bad = json::parse(
             r#"{"cmd":"submit","prompt":[3],"tier":4}"#).unwrap();
         assert!(parse_client_frame(&bad).is_err());
+    }
+
+    #[test]
+    fn chat_and_flush_prefix_frames_roundtrip() {
+        // new conversation: no session field on the wire
+        let p = GenerationParams::new(vec![4, 5]).max_new(8);
+        let frame = reparse(&encode_chat(2, None, &p));
+        assert!(frame.get("session").is_none());
+        match parse_client_frame(&frame).unwrap() {
+            ClientFrame::Submit { cid, params } => {
+                assert_eq!(cid, 2);
+                assert_eq!(params.session, Some(SessionSpec::New));
+                assert_eq!(params.prompt, vec![4, 5]);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // resume: the session id rides a dedicated key
+        let frame = reparse(&encode_chat(3, Some(12), &p));
+        match parse_client_frame(&frame).unwrap() {
+            ClientFrame::Submit { params, .. } => {
+                assert_eq!(params.session, Some(SessionSpec::Resume(12)));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // a wrong-typed session is a parse error, not a silent new session
+        let bad = json::parse(
+            r#"{"cmd":"chat","prompt":[3],"session":"twelve"}"#).unwrap();
+        assert!(parse_client_frame(&bad).is_err());
+        // plain submits never carry a session spec
+        let frame = reparse(&encode_submit(4, &p));
+        match parse_client_frame(&frame).unwrap() {
+            ClientFrame::Submit { params, .. } => {
+                assert_eq!(params.session, None);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // flush-prefix cmd + ack
+        assert!(matches!(
+            parse_client_frame(&reparse(&encode_cmd("flush-prefix"))),
+            Ok(ClientFrame::FlushPrefix)));
+        assert!(matches!(
+            parse_server_frame(&reparse(&encode_flush_prefix_ack())),
+            Ok(ServerFrame::FlushPrefixAck)));
+    }
+
+    #[test]
+    fn finished_session_key_appends_after_existing_keys() {
+        // a chat turn's terminal frame carries the session id, appended
+        // strictly after every pre-session key; one-shot frames omit it
+        let stats = RequestStats {
+            prompt_len: 4, generated: 2,
+            ttft_ms: 1.0, decode_ms: 2.0, queued_ms: 3.0,
+            session: Some(12),
+        };
+        let ev = GenerationEvent::Finished {
+            reason: FinishReason::Stop, stats: stats.clone(),
+        };
+        let line = json::write(&encode_event(7, &ev, None));
+        let tps = line.find("tokens_per_sec").expect("pre-session key");
+        let sess = line.find("\"session\"").expect("session key");
+        assert!(sess > tps, "session must append after tokens_per_sec: {line}");
+        match parse_server_frame(&json::parse(&line).unwrap()).unwrap() {
+            ServerFrame::Event { event: GenerationEvent::Finished {
+                stats: got, .. }, .. } => assert_eq!(got.session, Some(12)),
+            other => panic!("wrong frame {other:?}"),
+        }
+        // None → key absent → decodes back as None
+        let ev = GenerationEvent::Finished {
+            reason: FinishReason::Stop,
+            stats: RequestStats { session: None, ..stats },
+        };
+        let line = json::write(&encode_event(7, &ev, None));
+        assert!(!line.contains("session"), "{line}");
     }
 
     #[test]

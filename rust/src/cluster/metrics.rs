@@ -72,6 +72,13 @@ pub struct ShardMetrics {
     pub ttft_count: usize,
     pub peak_cache_bytes: usize,
     pub peak_cache_fp16_bytes: usize,
+    /// live chat sessions registered on this shard (gauge)
+    pub sessions_live: usize,
+    /// chat turns retired with their history remembered (counter)
+    pub session_turns: usize,
+    /// prompt tokens resume turns skipped prefilling because the
+    /// session's donated chain was grafted from the prefix trie
+    pub session_prefill_tokens_saved: usize,
 }
 
 impl ShardMetrics {
@@ -100,6 +107,9 @@ impl ShardMetrics {
             ttft_count: st.ttft_count,
             peak_cache_bytes: st.peak_cache_bytes,
             peak_cache_fp16_bytes: st.peak_cache_fp16_bytes,
+            sessions_live: engine.sessions_live(),
+            session_turns: st.session_turns,
+            session_prefill_tokens_saved: st.session_prefill_tokens_saved,
         }
     }
 
@@ -146,6 +156,11 @@ impl ShardMetrics {
             ("avg_ttft_ms", n(self.avg_ttft_ms())),
             ("peak_cache_bytes", n(self.peak_cache_bytes as f64)),
             ("peak_cache_fp16_bytes", n(self.peak_cache_fp16_bytes as f64)),
+            // session additions — appended after every pre-existing key
+            ("sessions_live", n(self.sessions_live as f64)),
+            ("session_turns", n(self.session_turns as f64)),
+            ("session_prefill_tokens_saved",
+             n(self.session_prefill_tokens_saved as f64)),
         ])
     }
 }
@@ -260,6 +275,22 @@ impl ClusterMetrics {
         self.sum(|s| s.kv8_decode_tokens)
     }
 
+    /// Live chat sessions across all shards.
+    pub fn sessions_live(&self) -> usize {
+        self.sum(|s| s.sessions_live)
+    }
+
+    /// Chat turns served (with history remembered) across all shards.
+    pub fn session_turns(&self) -> usize {
+        self.sum(|s| s.session_turns)
+    }
+
+    /// Prompt tokens resume turns never prefilled because the session's
+    /// donated generated-token chain was grafted from the prefix trie.
+    pub fn session_prefill_tokens_saved(&self) -> usize {
+        self.sum(|s| s.session_prefill_tokens_saved)
+    }
+
     /// TTFT averaged over every request that started, across shards.
     pub fn avg_ttft_ms(&self) -> f64 {
         let count: usize = self.sum(|s| s.ttft_count);
@@ -306,6 +337,12 @@ impl ClusterMetrics {
             ("kv8_completed", n(self.kv8_completed() as f64)),
             ("kv4_decode_tokens", n(self.kv4_decode_tokens() as f64)),
             ("kv8_decode_tokens", n(self.kv8_decode_tokens() as f64)),
+            // session additions — appended after the tier tail key so
+            // positional consumers of older frames keep working
+            ("sessions_live", n(self.sessions_live() as f64)),
+            ("session_turns", n(self.session_turns() as f64)),
+            ("session_prefill_tokens_saved",
+             n(self.session_prefill_tokens_saved() as f64)),
         ]
     }
 
@@ -325,7 +362,7 @@ impl ClusterMetrics {
         let mut t = Table::new(
             "Cluster shards — live load and lifetime counters",
             &["shard", "alive", "queue", "active", "pages", "hi-water",
-              "pfx hit%", "pfx pages", "done", "ddl", "cxl", "fail",
+              "pfx hit%", "pfx pages", "sess", "done", "ddl", "cxl", "fail",
               "tok/s", "ttft ms"]);
         for s in &self.shards {
             t.row(vec![
@@ -337,6 +374,7 @@ impl ClusterMetrics {
                 format!("{}", s.pool.high_water),
                 format!("{:.0}", s.prefix.hit_rate() * 100.0),
                 format!("{}", s.prefix.pages_pinned),
+                format!("{}", s.sessions_live),
                 format!("{}", s.completed),
                 format!("{}", s.deadline_exceeded),
                 format!("{}", s.cancelled),
@@ -354,6 +392,7 @@ impl ClusterMetrics {
             format!("{}", self.kv_high_water()),
             format!("{:.0}", self.prefix_hit_rate() * 100.0),
             format!("{}", self.prefix_pages_pinned()),
+            format!("{}", self.sessions_live()),
             format!("{}", self.completed()),
             format!("{}", self.deadline_exceeded()),
             format!("{}", self.cancelled()),
@@ -386,6 +425,9 @@ mod tests {
             kv8_completed: done - done / 2,
             kv4_decode_tokens: 10 * done,
             kv8_decode_tokens: 5 * done,
+            sessions_live: 1,
+            session_turns: done,
+            session_prefill_tokens_saved: 16 * done,
             tokens_per_sec: 50.0,
             ttft_sum_ms: 30.0 * done as f64,
             ttft_count: done,
@@ -417,6 +459,9 @@ mod tests {
                    "tier splits must partition completed");
         assert_eq!(m.kv4_decode_tokens(), 100);
         assert_eq!(m.kv8_decode_tokens(), 50);
+        assert_eq!(m.sessions_live(), 2);
+        assert_eq!(m.session_turns(), 10);
+        assert_eq!(m.session_prefill_tokens_saved(), 160);
     }
 
     #[test]
@@ -436,7 +481,10 @@ mod tests {
                     "prefix_tokens_saved", "prefix_pages_pinned",
                     // precision-tier additions
                     "kv4_completed", "kv8_completed",
-                    "kv4_decode_tokens", "kv8_decode_tokens"] {
+                    "kv4_decode_tokens", "kv8_decode_tokens",
+                    // session additions
+                    "sessions_live", "session_turns",
+                    "session_prefill_tokens_saved"] {
             assert!(v.get(key).is_some(), "summary missing key {key}");
         }
         // new keys append strictly after every pre-existing key: a v1
@@ -445,6 +493,13 @@ mod tests {
         let idx = |k: &str| pairs.iter().position(|(p, _)| *p == k).unwrap();
         assert!(idx("kv4_completed") > idx("prefix_pages_pinned"),
                 "tier keys must append after the v1 tail key");
+        assert!(idx("sessions_live") > idx("kv8_decode_tokens"),
+                "session keys must append after the tier tail key");
+        // same contract on the per-shard rows
+        let row = m.shards[0].to_value();
+        assert_eq!(row.get("sessions_live").unwrap().as_usize(), Some(1));
+        assert_eq!(row.get("session_prefill_tokens_saved").unwrap().as_usize(),
+                   Some(16));
     }
 
     #[test]

@@ -11,16 +11,21 @@
 //!
 //! [`ClusterService`] is the single front door:
 //!
-//! * **router** — placement is *prefix-affine, then load-ranked*: the
-//!   shard that most recently served the longest page-aligned prefix of
-//!   this prompt ranks first (its shared prefix cache most likely still
-//!   holds those pages — see `coordinator::prefix`), and the existing
-//!   load ranking (queue depth, then active slots, then KV-page
-//!   pressure) orders the rest and breaks ties.  The affinity map is
-//!   advisory (chain hashes of token runs): a stale entry costs one
-//!   cache miss, never correctness.  A shard at its admission bound
-//!   answers `QueueFull` and the router tries the next; only when
-//!   **every** live shard is at bound does the caller see the
+//! * **router** — placement is *session-affine, then prefix-affine,
+//!   then load-ranked*: a chat turn resuming a session routes to the
+//!   shard that owns that session's [`crate::session::SessionStore`]
+//!   entry (only it holds the conversation history and the donated
+//!   generated-token pages), ahead of the prefix-affinity ranking; for
+//!   sessionless requests, the shard that most recently served the
+//!   longest page-aligned prefix of this prompt ranks first (its shared
+//!   prefix cache most likely still holds those pages — see
+//!   `coordinator::prefix`), and the existing load ranking (queue
+//!   depth, then active slots, then KV-page pressure) orders the rest
+//!   and breaks ties.  Both affinity maps are advisory: a stale entry
+//!   costs one cache miss (or, for sessions, one cold re-registration
+//!   on the landing shard), never correctness.  A shard at its
+//!   admission bound answers `QueueFull` and the router tries the next;
+//!   only when **every** live shard is at bound does the caller see the
 //!   cluster-level [`SubmitError::QueueFull`] — the cluster's
 //!   backpressure signal.
 //! * **scheduler** — per-shard admission is fair-share across
@@ -50,6 +55,7 @@ use anyhow::Result;
 use crate::api::{EventSource, GenerationEvent, GenerationParams,
                  InferenceService, RequestHandle, RequestId, SubmitError};
 use crate::coordinator::batcher::{GenerationEngine, Request, TOKENS_PER_PAGE};
+use crate::session::SessionSpec;
 
 pub mod metrics;
 
@@ -182,6 +188,20 @@ struct Shard {
     join: Option<std::thread::JoinHandle<()>>,
 }
 
+/// Bound on remembered session → shard ownership entries.
+const SESSION_OWNERS_CAP: usize = 8192;
+
+/// Session affinity outranks prefix affinity and load: move the owning
+/// shard to the head of the probe order (it is already in `order` iff
+/// alive — a dead owner simply isn't promoted, and the turn falls
+/// through to the normal ranking).
+fn promote_owner(order: &mut Vec<usize>, owner: usize) {
+    if let Some(pos) = order.iter().position(|&i| i == owner) {
+        let s = order.remove(pos);
+        order.insert(0, s);
+    }
+}
+
 fn publish_gauges(engine: &GenerationEngine, g: &ShardGauges) {
     let ps = engine.pool_stats();
     g.queue_depth.store(engine.queue_depth(), Ordering::SeqCst);
@@ -237,14 +257,19 @@ impl Drop for AliveGuard {
     }
 }
 
-fn shard_loop(shard_idx: usize, factory: EngineFactory, queue_bound: usize,
-              ctl: mpsc::Receiver<ShardMsg>,
+fn shard_loop(shard_idx: usize, n_shards: usize, factory: EngineFactory,
+              queue_bound: usize, ctl: mpsc::Receiver<ShardMsg>,
               events: mpsc::Sender<(RequestId, GenerationEvent)>,
               gauges: Arc<ShardGauges>, shutdown: Arc<AtomicBool>) {
     let _alive = AliveGuard(gauges.clone());
     let mut engine = match factory() {
         Ok(mut e) => {
             e.set_queue_bound(queue_bound);
+            // disjoint residue classes: shard i assigns session ids
+            // i+1, i+1+n, i+1+2n, … so a session id is cluster-unique
+            // and a stale owner entry can never alias another shard's
+            // session
+            e.set_session_id_space(shard_idx as u64 + 1, n_shards as u64);
             e
         }
         Err(e) => {
@@ -339,6 +364,12 @@ struct ClusterCore {
     released: HashSet<RequestId>,
     /// Prompt-prefix → shard placement memory (the affinity ranking).
     affinity: PrefixAffinity,
+    /// session id → owning shard, learned from the `session` field of
+    /// terminal `Finished` stats (the only place clients learn the id
+    /// from, so it is always recorded before any resume can reference
+    /// it).  Advisory like the prefix map: a stale entry sends the turn
+    /// to a shard that re-registers the session cold.
+    session_owners: HashMap<u64, usize>,
     next_id: u64,
     queue_bound: usize,
     shutdown: Arc<AtomicBool>,
@@ -356,13 +387,17 @@ impl ClusterCore {
     fn submit_detached(&mut self, params: GenerationParams)
                        -> Result<RequestId, SubmitError> {
         params.validate()?;
+        let resumed = match params.session {
+            Some(SessionSpec::Resume(sid)) => Some(sid),
+            _ => None,
+        };
         let mut req = params.into_request();
         req.id = self.next_id;
         self.next_id += 1;
-        // place by prefix affinity first — the shard that most recently
-        // served the longest prefix of this prompt still has it cached —
-        // then by load; fall through the ranking on per-shard QueueFull
-        // / transport failure
+        // place by session affinity first — only the owning shard holds
+        // the conversation history and its donated pages — then prefix
+        // affinity, then load; fall through the ranking on per-shard
+        // QueueFull / transport failure
         let hashes = PrefixAffinity::chain_hashes(&req.prompt);
         let depths = self.affinity.match_depths(&hashes, self.shards.len());
         let mut order: Vec<usize> = (0..self.shards.len())
@@ -370,6 +405,11 @@ impl ClusterCore {
             .collect();
         order.sort_by_key(|&i| (std::cmp::Reverse(depths[i]),
                                 Self::load_score(&self.shards[i].gauges)));
+        if let Some(owner) = resumed
+            .and_then(|sid| self.session_owners.get(&sid).copied())
+        {
+            promote_owner(&mut order, owner);
+        }
         if order.is_empty() {
             return Err(SubmitError::Transport("no live shards".into()));
         }
@@ -402,6 +442,13 @@ impl ClusterCore {
             match rrx.recv() {
                 Ok(Ok(id)) => {
                     self.affinity.record(&hashes, si);
+                    if let Some(sid) = resumed {
+                        // recorded at accept, not just at Finished: turn
+                        // k+2 may be submitted before turn k+1 retires,
+                        // and a fallback placement (owner dead/full)
+                        // must move the ownership with the session
+                        self.record_session_owner(sid, si);
+                    }
                     self.owner.insert(id, si);
                     return Ok(id);
                 }
@@ -432,9 +479,33 @@ impl ClusterCore {
         }
     }
 
+    /// Remember which shard owns a session (latest placement wins),
+    /// bounded so a long-lived router cannot grow without limit — on
+    /// overflow the map is dropped wholesale, costing at most one cold
+    /// re-registration per live session.
+    fn record_session_owner(&mut self, sid: u64, shard: usize) {
+        if self.session_owners.len() >= SESSION_OWNERS_CAP
+            && !self.session_owners.contains_key(&sid)
+        {
+            self.session_owners.clear();
+        }
+        self.session_owners.insert(sid, shard);
+    }
+
     /// Buffer-or-discard decision for an arriving event; also clears the
     /// owner/released bookkeeping on terminals.
     fn accept_event(&mut self, id: RequestId, ev: &GenerationEvent) -> bool {
+        if let GenerationEvent::Finished { stats, .. } = ev {
+            if let Some(sid) = stats.session {
+                // the terminal frame is where a `New` chat turn's
+                // assigned session id first surfaces — record ownership
+                // before the request→shard entry is cleared below, so
+                // the client's next Resume(sid) routes home
+                if let Some(&si) = self.owner.get(&id) {
+                    self.record_session_owner(sid, si);
+                }
+            }
+        }
         if ev.is_terminal() {
             self.owner.remove(&id);
             if self.released.remove(&id) {
@@ -620,7 +691,7 @@ impl ClusterService {
             let qb = cfg.queue_bound;
             let join = std::thread::Builder::new()
                 .name(format!("quarot-shard-{i}"))
-                .spawn(move || shard_loop(i, f, qb, crx, e, g, sd))
+                .spawn(move || shard_loop(i, n, f, qb, crx, e, g, sd))
                 .expect("spawn shard thread");
             shards.push(Shard { ctl: ctx, gauges, join: Some(join) });
         }
@@ -632,6 +703,7 @@ impl ClusterService {
                 owner: HashMap::new(),
                 released: HashSet::new(),
                 affinity: PrefixAffinity::new(4096),
+                session_owners: HashMap::new(),
                 next_id: 1,
                 queue_bound: cfg.queue_bound,
                 shutdown,
@@ -742,6 +814,22 @@ mod tests {
         assert!(PrefixAffinity::chain_hashes(&p[..TOKENS_PER_PAGE - 1])
                     .is_empty());
         assert_eq!(aff.match_depths(&[], 4), vec![0; 4]);
+    }
+
+    #[test]
+    fn session_owner_promotion_outranks_the_existing_order() {
+        // owner mid-ranking moves to the head; the rest keep their
+        // prefix/load order
+        let mut order = vec![2, 0, 3, 1];
+        promote_owner(&mut order, 3);
+        assert_eq!(order, vec![3, 2, 0, 1]);
+        // already first: stable
+        promote_owner(&mut order, 3);
+        assert_eq!(order, vec![3, 2, 0, 1]);
+        // a dead owner was filtered out of `order` upstream — promotion
+        // is a no-op and the turn falls through to the normal ranking
+        promote_owner(&mut order, 7);
+        assert_eq!(order, vec![3, 2, 0, 1]);
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //! and only the uncached suffix runs a forward pass, through the decode
 //! graph so suffix tokens attend over the grafted prefix at their true
 //! positions.  Cold prefills donate their prompt's full pages back to
-//! the trie.
+//! the trie; sessioned requests ([`crate::session`]) additionally donate
+//! their *generated* pages at retirement and pin the resulting chain, so
+//! the next turn of the conversation grafts prompt and replies both and
+//! prefills only the new user text.
 //!
 //! The engine is *event-oriented*: every lifecycle step is emitted as a
 //! [`GenerationEvent`] tagged with the request id (`Queued` on submit,
@@ -42,6 +45,7 @@ use crate::attention::{DecodeF32Seq, DecodeQuantSeq, KvCodes, KvF32View,
 use crate::backend::pool::SendPtr;
 use crate::backend::ComputeBackend;
 use crate::model::ModelConfig;
+use crate::session::{SessionSpec, SessionStore, DEFAULT_SESSION_BUDGET};
 use crate::util::prng::Rng;
 
 /// Tokens per KV page — the unit of paging, of prefix sharing, and of
@@ -66,6 +70,20 @@ pub struct Request {
     /// the per-sequence cache width and tags its prefix-trie entries;
     /// ignored by the fp16 baseline, whose K/V never hit the paged cache.
     pub tier: QualityTier,
+    /// Multi-turn chat: `New` starts a conversation, `Resume(id)` makes
+    /// the engine prepend the session's stored history to `prompt` at
+    /// submit and replay it from donated prefix-cache pages.  `try_submit`
+    /// normalizes this to `Resume(assigned id)`; `None` = plain one-shot.
+    pub session: Option<SessionSpec>,
+}
+
+/// The resolved session id of a request (post-`try_submit` every
+/// sessioned request carries `Resume(id)`).
+fn session_id(req: &Request) -> Option<u64> {
+    match req.session {
+        Some(SessionSpec::Resume(id)) => Some(id),
+        _ => None,
+    }
 }
 
 fn deadline_expired(req: &Request, enqueued: Instant) -> bool {
@@ -208,6 +226,7 @@ impl Slot {
             ttft_ms: self.ttft_ms,
             decode_ms: self.started.elapsed().as_secs_f64() * 1e3,
             queued_ms: self.enqueued.elapsed().as_secs_f64() * 1e3,
+            session: session_id(&self.req),
         }
     }
 }
@@ -243,6 +262,15 @@ pub struct EngineStats {
     /// needs the raw sum/count to weight the cluster-wide mean correctly
     pub ttft_sum_ms: f64,
     pub ttft_count: usize,
+    /// conversation turns retired into a session's history (natural
+    /// retirements of sessioned requests only — cancelled / expired /
+    /// failed turns are not remembered and count in neither gauge)
+    pub session_turns: usize,
+    /// prompt tokens a resumed turn did NOT prefill because they were
+    /// grafted from pages an earlier turn of the same session donated —
+    /// the headline win of generated-token donation (on turn k this is
+    /// ≈ the full turn-1..k-1 history length)
+    pub session_prefill_tokens_saved: usize,
 }
 
 impl EngineStats {
@@ -273,6 +301,9 @@ pub struct GenerationEngine {
     /// Admission bound on the waiting queue (not counting active slots);
     /// `try_submit` rejects with `SubmitError::QueueFull` beyond it.
     queue_bound: usize,
+    /// Multi-turn conversation registry (`crate::session`): histories,
+    /// LRU/TTL eviction, and which trie chain each session pins.
+    sessions: SessionStore,
     staging: DecodeStaging,
     rng: Rng,
     pub stats: EngineStats,
@@ -305,6 +336,7 @@ impl GenerationEngine {
             slots: (0..cfg.decode_batch).map(|_| None).collect(),
             queue: FairQueue::new(),
             queue_bound: usize::MAX,
+            sessions: SessionStore::new(DEFAULT_SESSION_BUDGET),
             rng: Rng::new(seed),
             stats: EngineStats::default(),
             tokens_per_page,
@@ -341,6 +373,37 @@ impl GenerationEngine {
         if self.queue.len() >= self.queue_bound {
             return Err(SubmitError::QueueFull { bound: self.queue_bound });
         }
+        // Session resolution — after the queue-bound check so a rejected
+        // submit never creates a phantom session.  A resume prepends the
+        // stored history (served from donated prefix-cache pages at
+        // admission) and inherits the session's tier, keeping every turn's
+        // chain graftable in the tier-keyed trie.
+        if let Some(spec) = req.session {
+            match self.sessions.resolve(spec, req.tier) {
+                Some(res) => {
+                    for e in res.evicted {
+                        if let Some(chain) = e.pinned {
+                            self.prefix.unpin_chain(e.tier, &chain);
+                        }
+                    }
+                    req.tier = res.tier;
+                    if !res.history.is_empty() {
+                        let mut full = res.history;
+                        full.extend_from_slice(&req.prompt);
+                        req.prompt = full;
+                    }
+                    req.session = Some(SessionSpec::Resume(res.id));
+                }
+                // budget 0: sessions disabled — serve as a plain one-shot
+                None => req.session = None,
+            }
+            if req.prompt.len() > self.runner.cfg.max_seq {
+                return Err(SubmitError::InvalidParams(format!(
+                    "conversation history + prompt ({} tokens) exceeds \
+                     max_seq {} — start a new session",
+                    req.prompt.len(), self.runner.cfg.max_seq)));
+            }
+        }
         if req.id == 0 {
             req.id = self.next_id;
             self.next_id += 1;
@@ -373,6 +436,7 @@ impl GenerationEngine {
                 ttft_ms: 0.0,
                 decode_ms: 0.0,
                 queued_ms: enq.elapsed().as_secs_f64() * 1e3,
+                session: session_id(&req),
             });
             return true;
         }
@@ -458,6 +522,36 @@ impl GenerationEngine {
         self.tokens_per_page
     }
 
+    /// Cap the number of live sessions (`serve --sessions N`; 0 disables
+    /// the subsystem — `chat` requests run as plain one-shots).  Sessions
+    /// over the new budget are evicted LRU-first and their pinned trie
+    /// chains released immediately.
+    pub fn set_session_budget(&mut self, max_sessions: usize) {
+        for e in self.sessions.set_budget(max_sessions) {
+            if let Some(chain) = e.pinned {
+                self.prefix.unpin_chain(e.tier, &chain);
+            }
+        }
+    }
+
+    /// Evict sessions idle longer than `ttl_ms` (lazily, at the next
+    /// submit); `None` disables TTL eviction.
+    pub fn set_session_ttl_ms(&mut self, ttl_ms: Option<u64>) {
+        self.sessions.set_ttl_ms(ttl_ms);
+    }
+
+    /// Partition the session-id space (`start + k·stride`) — the cluster
+    /// gives each shard a disjoint residue class so session ids are
+    /// unique across shards and the router can learn id → shard.
+    pub fn set_session_id_space(&mut self, start: u64, stride: u64) {
+        self.sessions.set_id_space(start, stride);
+    }
+
+    /// Live conversations (the `sessions_live` gauge).
+    pub fn sessions_live(&self) -> usize {
+        self.sessions.live()
+    }
+
     /// Drain the undelivered lifecycle events, in emission order.
     pub fn take_events(&mut self) -> Vec<(u64, GenerationEvent)> {
         self.events.drain(..).collect()
@@ -505,6 +599,7 @@ impl GenerationEngine {
                                      ttft_ms: 0.0,
                                      decode_ms: 0.0,
                                      queued_ms: enq.elapsed().as_secs_f64() * 1e3,
+                                     session: session_id(&req),
                                  });
             }
         }
@@ -593,6 +688,18 @@ impl GenerationEngine {
                 if !fp {
                     self.prefix.record_use(shared.len());
                 }
+                // Donation-savings gauge: on a resumed turn the grafted
+                // prefix is conversation history an earlier turn of this
+                // session donated — every grafted token is prefill the
+                // turn did not pay for.
+                if !shared.is_empty() {
+                    if let Some(sid) = session_id(&req) {
+                        if self.sessions.prior_turns(sid) > 0 {
+                            self.stats.session_prefill_tokens_saved +=
+                                shared.len() * self.tokens_per_page;
+                        }
+                    }
+                }
                 // A prompt the staging/cache geometry cannot hold at all
                 // fails fast (real configs have cache_seq >= max_seq, so
                 // this only guards pathological configurations).
@@ -639,8 +746,13 @@ impl GenerationEngine {
                     let hit_stop = req.stop_token == Some(first_tok);
                     if hit_stop || req.max_new_tokens <= 1 {
                         // admission-terminal: unlike the cold path the
-                        // cache already exists — free it (grafted refs
-                        // included) and pull the next request
+                        // cache already exists — record the session turn
+                        // (the cache covers exactly the prompt, so the
+                        // donation matches the non-terminal path), then
+                        // free it (grafted refs included) and pull the
+                        // next request
+                        self.complete_session_turn(&req, &[first_tok],
+                                                   Some(&cache));
                         cache.free(&mut self.pool);
                         let reason = if hit_stop {
                             FinishReason::Stop
@@ -653,6 +765,7 @@ impl GenerationEngine {
                             ttft_ms: ttft,
                             decode_ms: 0.0,
                             queued_ms: enq.elapsed().as_secs_f64() * 1e3,
+                            session: session_id(&req),
                         });
                         continue;
                     }
@@ -702,6 +815,10 @@ impl GenerationEngine {
                 let hit_stop = req.stop_token == Some(first_tok);
                 let budget_done = req.max_new_tokens <= 1;
                 if hit_stop || budget_done {
+                    // no cache exists yet on this path — the turn is
+                    // remembered but nothing can be donated; the next
+                    // resume re-prefills it (correct, just cold)
+                    self.complete_session_turn(&req, &[first_tok], None);
                     let reason = if hit_stop {
                         FinishReason::Stop
                     } else {
@@ -713,6 +830,7 @@ impl GenerationEngine {
                         ttft_ms: ttft,
                         decode_ms: 0.0,
                         queued_ms: enq.elapsed().as_secs_f64() * 1e3,
+                        session: session_id(&req),
                     });
                     continue; // slot is still free — pull the next request
                 }
@@ -872,24 +990,70 @@ impl GenerationEngine {
     }
 
     /// Donate a freshly admitted cache's full prompt pages to the
-    /// prefix trie (no-op when the cache is disabled or the prompt is
-    /// shorter than one page).  The trie retains the pages, so they
-    /// outlive this request; generated tokens are never donated — only
-    /// prompt content recurs across requests.  Donations carry the
-    /// donor's precision tier: pages hold tier-width codes, so a graft
-    /// across tiers would silently misdecode (the trie keys by tier to
-    /// make that impossible).
+    /// prefix trie — prompt content recurs across unrelated requests, so
+    /// cold prefills seed the cache eagerly, before a single token is
+    /// generated.
     fn donate_prompt_pages(&mut self, prompt: &[u16], cache: &SeqCache,
                            tier: QualityTier) {
+        self.donate_chain_pages(prompt, cache, tier);
+    }
+
+    /// Donate the full pages of a token chain resident in `cache` to the
+    /// prefix trie (no-op when the cache is disabled or the chain is
+    /// shorter than one page); returns the donated token count
+    /// (`⌊len/tpp⌋·tpp`).  `tokens` must be a prefix of the cache's
+    /// contents — the prompt at admission, or `prompt ++ generated` at a
+    /// sessioned request's retirement (generated-token donation is what
+    /// lets the next turn graft the whole conversation).  Donations carry
+    /// the donor's precision tier: pages hold tier-width codes, so a
+    /// graft across tiers would silently misdecode (the trie keys by
+    /// tier to make that impossible).
+    fn donate_chain_pages(&mut self, tokens: &[u16], cache: &SeqCache,
+                          tier: QualityTier) -> usize {
         let tpp = self.tokens_per_page;
-        let full = prompt.len() / tpp;
+        let full = tokens.len() / tpp;
         if full == 0 || !self.prefix.enabled() {
-            return;
+            return 0;
         }
         let groups: Vec<PageGroup> =
             (0..full).map(|i| cache.page_group(i)).collect();
-        self.prefix.insert(&mut self.pool, tier, &prompt[..full * tpp],
+        self.prefix.insert(&mut self.pool, tier, &tokens[..full * tpp],
                            &groups);
+        full * tpp
+    }
+
+    /// Retire one conversation turn into its session: donate the chain
+    /// actually resident in the cache (`prompt ++ generated` minus the
+    /// final sampled-but-never-appended token), record the full reply in
+    /// the session history, and move the session's trie pin to the new,
+    /// longer chain so it survives LRU eviction until the next turn.
+    /// Only natural retirements reach here — cancelled / expired / failed
+    /// turns are not remembered.  `cache: None` (cold admission-terminal
+    /// path) records history without donating.
+    fn complete_session_turn(&mut self, req: &Request, generated: &[u16],
+                             cache: Option<&SeqCache>) {
+        let Some(sid) = session_id(req) else { return };
+        let mut chain =
+            Vec::with_capacity(req.prompt.len() + generated.len());
+        chain.extend_from_slice(&req.prompt);
+        chain.extend_from_slice(generated);
+        let donated = match cache {
+            Some(c) => {
+                let cached = c.len.min(chain.len());
+                self.donate_chain_pages(&chain[..cached], c, req.tier)
+            }
+            None => 0,
+        };
+        let donated_chain = (donated > 0).then(|| chain[..donated].to_vec());
+        if let Some(upd) = self.sessions.complete(sid, chain, donated_chain) {
+            if let Some(pin) = upd.pin {
+                self.prefix.pin_chain(upd.tier, &pin);
+            }
+            if let Some(unpin) = upd.unpin {
+                self.prefix.unpin_chain(upd.tier, &unpin);
+            }
+        }
+        self.stats.session_turns += 1;
     }
 
     /// Refresh the whole dense staging view of one slot from its pages.
@@ -1101,6 +1265,12 @@ impl GenerationEngine {
             if hit_stop || budget_done || cache_full {
                 let mut slot = self.slots[i].take().unwrap();
                 let stats = slot.stats();
+                // generated-token donation: the retiring cache holds
+                // `prompt ++ generated[..len-1]` — hand its full pages to
+                // the trie (and the session's pin) before freeing, so the
+                // next turn of this conversation grafts the whole chain
+                self.complete_session_turn(&slot.req, &slot.generated,
+                                           Some(&slot.cache));
                 slot.cache.free(&mut self.pool);
                 let reason = if hit_stop {
                     FinishReason::Stop
@@ -1328,6 +1498,7 @@ mod tests {
             priority,
             deadline_ms,
             tier: QualityTier::from_priority(priority),
+            session: None,
         }
     }
 

@@ -82,6 +82,11 @@ struct Node {
     pages: PageGroup,
     /// clock stamp of the last lookup/insert that touched this node
     last_used: u64,
+    /// sessions currently pinning this node ([`PrefixCache::pin_chain`]):
+    /// a pinned node is exempt from LRU eviction so a live conversation's
+    /// chain cannot be aged out between turns.  `clear` still force-evicts
+    /// pinned nodes, which is why unpins tolerate missing chains.
+    pins: u32,
 }
 
 /// The trie.  Keys are exact token runs (no hashing — a collision would
@@ -231,6 +236,7 @@ impl PrefixCache {
                 children: HashMap::new(),
                 pages: g.clone(),
                 last_used: self.clock,
+                pins: 0,
             };
             let id = match self.free_slots.pop() {
                 Some(slot) => {
@@ -258,13 +264,51 @@ impl PrefixCache {
         }
     }
 
-    /// Least-recently-used evictable leaf: childless, and not touched by
-    /// the operation currently in flight (`last_used < clock`, so an
-    /// admission cannot evict the chain it just matched).
+    /// Walk the page-aligned chain of `tokens` and pin every matched
+    /// node, exempting it from LRU eviction (budget pressure and
+    /// [`Self::evict_for`]).  Sessions pin their conversation chain after
+    /// each donation so a live conversation's KV pages survive between
+    /// turns.  Returns how many nodes were pinned — the walk stops at the
+    /// first uncached run, so a partially-donated chain pins its cached
+    /// prefix only.  Pins are counts: overlapping chains stack.
+    pub fn pin_chain(&mut self, tier: QualityTier, tokens: &[u16]) -> usize {
+        let mut cur = None;
+        let mut pinned = 0;
+        for run in tokens.chunks_exact(self.tokens_per_page) {
+            let Some(id) = self.child(tier, cur, run) else { break };
+            self.nodes[id].as_mut().unwrap().pins += 1;
+            pinned += 1;
+            cur = Some(id);
+        }
+        pinned
+    }
+
+    /// Undo one [`Self::pin_chain`] over the same tokens.  Tolerant by
+    /// design: nodes force-evicted by [`Self::clear`] (or re-donated
+    /// fresh afterwards) simply end the walk or saturate at zero — a
+    /// stale unpin is a no-op, never a panic.
+    pub fn unpin_chain(&mut self, tier: QualityTier, tokens: &[u16]) -> usize {
+        let mut cur = None;
+        let mut unpinned = 0;
+        for run in tokens.chunks_exact(self.tokens_per_page) {
+            let Some(id) = self.child(tier, cur, run) else { break };
+            let node = self.nodes[id].as_mut().unwrap();
+            node.pins = node.pins.saturating_sub(1);
+            unpinned += 1;
+            cur = Some(id);
+        }
+        unpinned
+    }
+
+    /// Least-recently-used evictable leaf: childless, not pinned by a
+    /// session, and not touched by the operation currently in flight
+    /// (`last_used < clock`, so an admission cannot evict the chain it
+    /// just matched).
     fn lru_leaf(&self) -> Option<usize> {
         self.nodes.iter().enumerate()
             .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
-            .filter(|(_, n)| n.children.is_empty() && n.last_used < self.clock)
+            .filter(|(_, n)| n.children.is_empty() && n.pins == 0
+                    && n.last_used < self.clock)
             .min_by_key(|&(_, n)| n.last_used)
             .map(|(i, _)| i)
     }
@@ -305,7 +349,10 @@ impl PrefixCache {
     }
 
     /// Release every cached page (counted into `evicted_pages`) — the
-    /// admin flush and the engine-reconfiguration path.
+    /// admin flush and the engine-reconfiguration path.  Session pins are
+    /// NOT honored here: a flush force-evicts pinned chains too (their
+    /// sessions re-donate on the next turn; the later stale unpins are
+    /// no-ops by construction).
     pub fn clear(&mut self, pool: &mut PagePool) {
         loop {
             let Some(leaf) = self.nodes.iter().enumerate()
@@ -508,6 +555,51 @@ mod tests {
         }
         trie.clear(&mut pool);
         assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn pinned_chains_survive_eviction_until_unpinned() {
+        let mut pool = PagePool::new(8, 64);
+        let mut trie = PrefixCache::new(TPP, L, usize::MAX);
+        let (pa, pb) = (prompt(8, 0), prompt(8, 9));
+        for p in [&pa, &pb] {
+            let gs: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+            trie.insert(&mut pool, T, p, &gs);
+            for g in &gs {
+                release_group(&mut pool, g);
+            }
+        }
+        // pin A (a session's live chain); a partial-page tail is ignored
+        let mut pa_tail = pa.clone();
+        pa_tail.extend_from_slice(&[7; TPP - 1]);
+        assert_eq!(trie.pin_chain(T, &pa_tail), 2);
+        let _ = trie.lookup(T, &prompt(4, 5), 1); // advance the clock
+
+        // pressure that wants everything: only B's chain may go
+        trie.evict_for(&mut pool, usize::MAX);
+        assert_eq!(trie.lookup(T, &pa, 2).len(), 2,
+                   "pinned chain must survive eviction pressure");
+        assert!(trie.lookup(T, &pb, 2).is_empty(), "unpinned chain evicts");
+
+        // unpinning re-arms eviction; a second stale unpin is a no-op
+        assert_eq!(trie.unpin_chain(T, &pa), 2);
+        assert_eq!(trie.unpin_chain(T, &pa), 2, "saturates at zero");
+        let _ = trie.lookup(T, &prompt(4, 5), 1);
+        trie.evict_for(&mut pool, usize::MAX);
+        assert_eq!(trie.pages_pinned(), 0, "unpinned chain must evict");
+        assert_eq!(pool.in_use(), 0);
+
+        // clear() force-evicts pinned chains; the stale unpin that
+        // follows must be harmless (missing chain ⇒ walk ends)
+        let gs: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+        trie.insert(&mut pool, T, &pa, &gs);
+        for g in &gs {
+            release_group(&mut pool, g);
+        }
+        trie.pin_chain(T, &pa);
+        trie.clear(&mut pool);
+        assert_eq!(pool.in_use(), 0, "flush must override pins");
+        assert_eq!(trie.unpin_chain(T, &pa), 0, "stale unpin is a no-op");
     }
 
     #[test]

@@ -42,10 +42,16 @@
 //!                   the TCP `Client`, and the v2 event-frame wire codec.
 //! * [`cluster`]   — sharded serving: N engine shards (one tick thread
 //!                   each) behind one `InferenceService` front, with a
-//!                   prefix-affine load-aware router (longest cached
-//!                   prefix, then queue depth / active slots / KV-page
-//!                   pressure), fair-share priority + deadline
-//!                   scheduling, and a runtime metrics registry.
+//!                   session-affine + prefix-affine load-aware router
+//!                   (owning shard, then longest cached prefix, then
+//!                   queue depth / active slots / KV-page pressure),
+//!                   fair-share priority + deadline scheduling, and a
+//!                   runtime metrics registry.
+//! * [`session`]   — multi-turn chat serving: per-engine `SessionStore`
+//!                   tracking conversation chains, generated-token page
+//!                   donation back into the prefix trie at retirement
+//!                   (turn k+1 grafts the whole history), chain pinning
+//!                   with TTL/LRU session eviction under `--sessions N`.
 //! * [`server`]    — threaded TCP front-end speaking the v2 event-frame
 //!                   protocol (one JSON frame per event, multiplexed by
 //!                   request id; v1 one-shot lines still answered),
@@ -69,5 +75,6 @@ pub mod quant;
 pub mod rotation;
 pub mod runtime;
 pub mod server;
+pub mod session;
 pub mod tensor;
 pub mod util;

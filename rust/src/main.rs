@@ -10,6 +10,11 @@
 //!                 incrementally; --priority / --deadline-ms / --tier
 //!                 scheduling; --self-spec for KV4-draft speculative
 //!                 greedy decode)
+//!   chat          multi-turn conversation against a running server:
+//!                 each turn sends only the new user tokens, the server
+//!                 threads the history and replays prior turns from
+//!                 donated prefix-cache pages (--turns "1,2;3,4" scripted,
+//!                 otherwise interactive; --session ID resumes)
 //!   cluster-bench drive a sharded cluster with synthetic mixed
 //!                 Interactive/Batch traffic and print the per-shard
 //!                 metrics table
@@ -99,6 +104,7 @@ fn main() -> Result<()> {
     match cmd {
         "serve" => serve(&args),
         "generate" => generate(&args),
+        "chat" => chat(&args),
         "cluster-bench" => cluster_bench(&args),
         "ppl" => ppl(&args),
         "zeroshot" => zeroshot(&args),
@@ -108,8 +114,8 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "quarot — outlier-free 4-bit inference (paper reproduction)\n\
-                 usage: quarot <serve|generate|cluster-bench|ppl|zeroshot|\
-                 outliers|verify|info>\n\
+                 usage: quarot <serve|generate|chat|cluster-bench|ppl|\
+                 zeroshot|outliers|verify|info>\n\
                  common flags: --model tiny-mha --scheme quarot-int4\n\
                                --rotation hadamard|random|scaled-hadamard\n\
                                --act-bits / --kv-bits 3|4|6|8|16\n\
@@ -120,10 +126,15 @@ fn main() -> Result<()> {
                                --tier kv4|kv8 (KV-cache precision tier)\n\
                                --self-spec [--draft N] (KV4 drafts,\n\
                                verified greedy decode)\n\
+                 chat:         --port N --turns \"1,2;3,4\" (scripted turns;\n\
+                               omit for interactive) --session ID (resume)\n\
+                               --max-new N\n\
                  serve:        --queue-bound N (per-shard admission)\n\
                                --shards N (engine shards behind one front)\n\
                                --prefix-cache N (shared-prefix page budget\n\
                                per shard; 0 disables, default pages/2)\n\
+                               --sessions N (live chat sessions per shard;\n\
+                               0 disables) --session-ttl-ms N (idle expiry)\n\
                  cluster-bench: --shards N --interactive N --batch N\n\
                                --max-new N --batch-max-new N\n\
                                --prefix-cache N (0 disables)\n\
@@ -166,12 +177,21 @@ fn serve(args: &Args) -> Result<()> {
     // pool (the engine's own default, restated here so the flag is
     // self-documenting)
     let prefix_pages = args.usize_or("prefix-cache", pages / 2);
+    // chat-session budget per shard (0 disables multi-turn serving) and
+    // optional idle expiry
+    let sessions = args.usize_or("sessions",
+                                 quarot::session::DEFAULT_SESSION_BUDGET);
+    let session_ttl_ms: Option<u64> = args.get("session-ttl-ms")
+        .map(|s| s.parse().context("bad --session-ttl-ms"))
+        .transpose()?;
     let handle = quarot::server::serve_sharded(
         move || {
             let art = Artifacts::load(&model)?;
             let runner = runner_for_spec(&art, &spec)?;
             let mut engine = GenerationEngine::new(runner, pages, 7);
             engine.set_prefix_cache_pages(prefix_pages);
+            engine.set_session_budget(sessions);
+            engine.set_session_ttl_ms(session_ttl_ms);
             Ok(engine)
         },
         port,
@@ -180,10 +200,12 @@ fn serve(args: &Args) -> Result<()> {
     )?;
     println!("serving on 127.0.0.1:{} — v2 event-frame protocol \
               (one JSON frame per event; {{\"cmd\":\"submit\"}} / \
-              {{\"cmd\":\"cancel\"}} / {{\"cmd\":\"stats\"}} / \
-              {{\"cmd\":\"metrics\"}} / {{\"cmd\":\"shutdown\"}}); \
-              {} shard(s), per-shard admission bound {}",
-             handle.port, shards, queue_bound);
+              {{\"cmd\":\"chat\"}} / {{\"cmd\":\"cancel\"}} / \
+              {{\"cmd\":\"stats\"}} / {{\"cmd\":\"metrics\"}} / \
+              {{\"cmd\":\"flush-prefix\"}} / {{\"cmd\":\"shutdown\"}}); \
+              {} shard(s), per-shard admission bound {}, \
+              {} session(s) per shard",
+             handle.port, shards, queue_bound, sessions);
     // blocks until a wire shutdown stops the engine and accept loops,
     // then exits cleanly instead of lingering as a serving-nothing zombie
     handle.wait();
@@ -280,6 +302,67 @@ fn generate(args: &Args) -> Result<()> {
     println!("finish: {} | ttft {:.1} ms, decode {:.1} ms, {:.1} tok/s",
              out.reason, out.stats.ttft_ms, out.stats.decode_ms,
              out.stats.tokens_per_sec());
+    Ok(())
+}
+
+/// Multi-turn chat against a running server.  Each turn sends *only the
+/// new user tokens* over `{"cmd":"chat"}`; the server threads the
+/// conversation history onto the prompt and replays the prior turns from
+/// the session's donated prefix-cache pages, so a resumed turn prefills
+/// just the new text.  The session id is assigned by the server on the
+/// first turn (it arrives in the terminal frame's `session` key) and
+/// reused for every turn after.
+fn chat(args: &Args) -> Result<()> {
+    let port = args.usize_or("port", 8747) as u16;
+    let max_new = args.usize_or("max-new", 32);
+    let client = quarot::server::Client::connect(port)
+        .with_context(|| format!("connect to 127.0.0.1:{port} \
+                                  (is `quarot serve` running?)"))?;
+    let mut session: Option<u64> = args.get("session")
+        .map(|s| s.parse().context("bad --session id"))
+        .transpose()?;
+    let parse_turn = |s: &str| -> Result<Vec<u16>> {
+        s.split(',').map(|t| t.trim().parse().context("bad turn token"))
+            .collect()
+    };
+    let mut turn_no = 0usize;
+    let mut run_turn = |prompt: Vec<u16>| -> Result<()> {
+        turn_no += 1;
+        let handle = client
+            .chat(session, &GenerationParams::new(prompt).max_new(max_new))
+            .map_err(|e| anyhow!("{e}"))?;
+        let out = handle.wait()?;
+        if let Some(sid) = out.stats.session {
+            session = Some(sid);
+        }
+        println!("turn {turn_no} [session {}]: {:?}",
+                 session.map_or("-".into(), |s| s.to_string()), out.tokens);
+        println!("  {} — ttft {:.1} ms, {:.1} tok/s",
+                 out.reason, out.stats.ttft_ms, out.stats.tokens_per_sec());
+        Ok(())
+    };
+    if let Some(spec) = args.get("turns") {
+        for turn in spec.split(';') {
+            run_turn(parse_turn(turn)?)?;
+        }
+        return Ok(());
+    }
+    // interactive: one comma-separated token line per turn
+    println!("chat — enter comma-separated token ids per turn \
+              (empty line or EOF ends)");
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if stdin.read_line(&mut line)? == 0 {
+            break;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            break;
+        }
+        run_turn(parse_turn(trimmed)?)?;
+    }
     Ok(())
 }
 

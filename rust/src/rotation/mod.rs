@@ -18,16 +18,17 @@
 //!   Artifacts: the `rot.*` weight set; Q is reconstructible from
 //!   `meta.q_signs`, so `verify` can check `rotation_mismatch`.
 //! * [`RandomOrthogonal`] — QR-orthogonalized Gaussian Q (Table 8's
-//!   weaker ablation).  Artifacts: the `rnd.*` weight set, which ships
-//!   *without* its Q (python keeps only the Hadamard sign vector), so
-//!   offline verification is not available for this scheme.
+//!   weaker ablation).  Artifacts: the `rnd.*` weight set plus the full
+//!   Q itself as `meta.rnd_q` (a QR factorization is not reproducible
+//!   from a seed across languages), so `verify --rotation random`
+//!   re-rotates `base.*` with the stored Q and checks `rnd.*`.
 //! * [`ChannelScaledHadamard`] — SmoothRot-style scale-then-rotate: the
 //!   same Hadamard Q, with SmoothQuant α-migration scales folded into
 //!   the norm/producer weights around it at prep time.
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::runner::{QuantSpec, Variant};
 use crate::hadamard;
@@ -209,18 +210,39 @@ pub fn map_mismatch(ours: &BTreeMap<String, Tensor>,
 /// rotated set.  Hadamard-family schemes reconstruct Q from
 /// `meta.q_signs` (both use the same `rot.*` set — channel scales are a
 /// runtime fold, not baked into the artifacts); the random-orthogonal
-/// set ships without its Q, so verification is declared impossible
-/// rather than silently skipped.
+/// scheme reads its full Q back from the `meta.rnd_q` artifact (a QR-
+/// orthogonalized Gaussian is not reconstructible from a seed across
+/// languages) and checks the `rnd.*` set with it.
 pub fn verify_mismatch(kind: RotationKind, cfg: &ModelConfig, w: &Weights)
                        -> Result<f64> {
     match kind {
         RotationKind::Hadamard | RotationKind::ScaledHadamard => {
             transform::rotation_mismatch(cfg, w)
         }
-        RotationKind::Random => bail!(
-            "rnd.* artifacts ship without their Q (only the Hadamard sign \
-             vector meta.q_signs is stored) — offline verification is only \
-             available for hadamard/scaled-hadamard"),
+        RotationKind::Random => {
+            let d = cfg.d_model;
+            let q_t = w.get("meta.rnd_q").context(
+                "rnd.* artifacts predate the exported random-orthogonal Q \
+                 — re-run `make artifacts` to regenerate meta.rnd_q")?;
+            if q_t.shape != [d, d] {
+                bail!("meta.rnd_q shape {:?} != [{d}, {d}]", q_t.shape);
+            }
+            let q = Mat::from_vec(d, d, q_t.as_f32());
+            let ours = transform::rotate(cfg, &w.with_prefix("base."), &q)?;
+            let rnd = w.with_prefix("rnd.");
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for (k, t) in &ours {
+                let want = rnd.get(k.as_str())
+                    .with_context(|| format!("missing tensor rnd.{k}"))?
+                    .as_f32();
+                for (a, b) in t.as_f32().iter().zip(&want) {
+                    num += ((a - b) as f64).powi(2);
+                    den += (*b as f64).powi(2);
+                }
+            }
+            Ok((num / den.max(1e-12)).sqrt())
+        }
     }
 }
 
@@ -302,6 +324,41 @@ mod tests {
             let mm = map_mismatch(&rot, &drifted).unwrap();
             assert!(mm > 1e-2, "{kind}: drifted Q must be detected, got {mm}");
         }
+    }
+
+    /// Satellite property: `verify --rotation random` checks the `rnd.*`
+    /// set against the Q stored in `meta.rnd_q` — matching at fp-noise
+    /// level with the right Q, erroring (not silently passing) when the
+    /// artifact is missing, and catching a drifted Q.
+    #[test]
+    fn random_verify_reads_q_from_the_artifact() {
+        let cfg = demo_cfg();
+        let mut rng = Rng::new(3);
+        let base = demo_weights(&cfg, &mut rng);
+        let base_ref: BTreeMap<String, &Tensor> =
+            base.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let q = scheme(RotationKind::Random).build_q(cfg.d_model, 23);
+        let rnd = transform::rotate(&cfg, &base_ref, &q).unwrap();
+        let mut w = Weights::default();
+        for (k, v) in &base {
+            w.tensors.insert(format!("base.{k}"), v.clone());
+        }
+        for (k, v) in rnd {
+            w.tensors.insert(format!("rnd.{k}"), v);
+        }
+        let err = verify_mismatch(RotationKind::Random, &cfg, &w)
+            .unwrap_err().to_string();
+        assert!(err.contains("make artifacts"),
+                "missing Q must point at regeneration, got: {err}");
+        let dq = |q: &Mat| Tensor::from_f32(vec![cfg.d_model, cfg.d_model],
+                                            &q.data);
+        w.tensors.insert("meta.rnd_q".into(), dq(&q));
+        let mm = verify_mismatch(RotationKind::Random, &cfg, &w).unwrap();
+        assert!(mm < 1e-6, "stored-Q reconstruction mismatch {mm}");
+        let drifted = scheme(RotationKind::Random).build_q(cfg.d_model, 24);
+        w.tensors.insert("meta.rnd_q".into(), dq(&drifted));
+        let mm = verify_mismatch(RotationKind::Random, &cfg, &w).unwrap();
+        assert!(mm > 1e-2, "drifted Q must be detected, got {mm}");
     }
 
     #[test]

@@ -14,10 +14,18 @@
 //! (`{"prompt": ...}` with no `"cmd"`) are still answered with a single
 //! completion object.
 //!
+//! `{"cmd":"chat"}` submits a conversation turn: it parses into the
+//! same submit path with a session spec attached, so the engine prepends
+//! the stored history, grafts the donated generated-token pages from the
+//! prefix trie, and prefills only the new user text (see
+//! `quarot::session`).  `{"cmd":"flush-prefix"}` drops every shard's
+//! prefix-cache entries and acks once all shards have flushed.
+//!
 //! `{"cmd":"stats"}` answers flat cluster aggregates (live queue depth,
 //! active slots, retire counters, prefix-cache hit rate / tokens saved /
-//! pinned pages); `{"cmd":"metrics"}` adds the full per-shard breakdown
-//! (including each shard's prefix-cache gauges).
+//! pinned pages, session gauges); `{"cmd":"metrics"}` adds the full
+//! per-shard breakdown (including each shard's prefix-cache and session
+//! gauges).
 //!
 //! `{"cmd":"shutdown"}` stops the whole server: it sets the shared
 //! shutdown flag (cluster thread and accept loop both exit) rather than
@@ -96,6 +104,11 @@ enum EngineMsg {
     },
     Metrics {
         reply: mpsc::Sender<String>,
+    },
+    /// Flush every shard's prefix cache; the reply fires after all
+    /// shards have acked their flush.
+    FlushPrefix {
+        reply: mpsc::Sender<()>,
     },
 }
 
@@ -186,6 +199,10 @@ where
                         let m = cluster.metrics();
                         let _ = reply.send(json::write(
                             &wire::encode_metrics(m.full_pairs())));
+                    }
+                    EngineMsg::FlushPrefix { reply } => {
+                        cluster.clear_prefix_caches();
+                        let _ = reply.send(());
                     }
                 }
             }
@@ -356,6 +373,13 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>,
                 let metrics = rrx.recv().unwrap_or_else(|_| "{}".into());
                 let mut w = out.lock().unwrap();
                 writeln!(w, "{metrics}")?;
+            }
+            ClientFrame::FlushPrefix => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(EngineMsg::FlushPrefix { reply: rtx }).is_ok() {
+                    let _ = rrx.recv();
+                }
+                write_frame(&out, &wire::encode_flush_prefix_ack())?;
             }
             ClientFrame::Shutdown => {
                 // the satellite fix: stop the *whole server*, not just

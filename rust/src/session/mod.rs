@@ -1,0 +1,383 @@
+//! Session subsystem — multi-turn chat serving over the prefix cache.
+//!
+//! A *session* is one conversation: the server remembers the full token
+//! chain (every user prompt and every generated reply) so a follow-up
+//! turn submits only the new user text and the engine replays history
+//! from the shared prefix trie instead of re-prefilling it.  Two
+//! mechanisms make that work:
+//!
+//! * **Generated-token donation.**  The prefix cache (PR 5) only ever
+//!   cached *prompt* pages, so turn k+1 — whose prompt is
+//!   `history ++ new text` — missed on everything past turn k's prompt.
+//!   At natural retirement the engine now donates full pages of
+//!   `prompt ++ generated` back into the trie
+//!   (`GenerationEngine::complete_session_turn`), so the next turn grafts the
+//!   whole turn-1..k chain and prefills only the new user text: TTFT on
+//!   turn k is proportional to the new text, not the conversation.
+//! * **Chain pinning.**  Donated pages are only useful if they survive
+//!   until the next turn, so each session pins its latest chain in the
+//!   trie ([`crate::coordinator::prefix::PrefixCache::pin_chain`]),
+//!   exempting it from LRU eviction.  The pin moves forward every turn
+//!   (pin the new, longer chain; unpin the previous one) and is released
+//!   when the session itself is evicted — sessions, not pages, are the
+//!   retention unit, bounded by the `--sessions N` budget (LRU) and an
+//!   optional TTL.
+//!
+//! The [`SessionStore`] lives inside each engine shard: one store per
+//! shard, histories resident where the pages are.  The cluster router
+//! learns session → shard ownership from finished events and routes
+//! resumes back to the owning shard ahead of prefix affinity and load
+//! (`cluster::ClusterCore`), falling through gracefully when that shard
+//! is dead or full — the landing shard then re-registers the id with an
+//! empty history and serves the turn cold (correct, just uncached).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::api::QualityTier;
+
+/// Engine-side default for the session budget (`serve --sessions N`
+/// overrides; 0 disables the subsystem entirely).
+pub const DEFAULT_SESSION_BUDGET: usize = 64;
+
+/// What a submit asks of the session layer.  `New` allocates an id and
+/// starts an empty conversation; `Resume(id)` prepends the stored
+/// history to the request's prompt.  Resuming an unknown id (evicted,
+/// or a cluster-fallback landing on a foreign shard) re-registers it
+/// with an empty history instead of erroring — the turn runs cold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionSpec {
+    New,
+    Resume(u64),
+}
+
+struct Session {
+    tier: QualityTier,
+    /// full conversation chain: prompt₁ ++ reply₁ ++ prompt₂ ++ reply₂ …
+    history: Vec<u16>,
+    /// the chain currently pinned in the prefix trie (page-aligned
+    /// prefix of a previous turn's cache contents); None before the
+    /// first donation
+    pinned: Option<Vec<u16>>,
+    /// retired turns recorded into `history`
+    turns: usize,
+    /// LRU stamp (store clock)
+    last_used: u64,
+    /// wall-clock touch for TTL eviction
+    touched: Instant,
+}
+
+/// A session the store evicted; the engine must release its trie pin.
+pub struct EvictedSession {
+    pub id: u64,
+    pub tier: QualityTier,
+    pub pinned: Option<Vec<u16>>,
+}
+
+/// Outcome of resolving a [`SessionSpec`] at submit time.
+pub struct Resolution {
+    /// the assigned (or resumed) session id
+    pub id: u64,
+    /// stored history to prepend to the request's prompt (empty on a
+    /// fresh or re-registered session)
+    pub history: Vec<u16>,
+    /// turns already retired into `history` — > 0 means this request
+    /// benefits from donated pages (the donation-savings gauge keys on
+    /// this)
+    pub prior_turns: usize,
+    /// the session's tier (fixed at creation; resumes inherit it so the
+    /// chain stays graftable — the trie is tier-keyed)
+    pub tier: QualityTier,
+    /// sessions evicted to make room (budget / TTL); unpin their chains
+    pub evicted: Vec<EvictedSession>,
+}
+
+/// Pin handover returned by [`SessionStore::complete`]: pin the new
+/// chain first, then unpin the old one (pins are counts, so the shared
+/// prefix nets out).
+pub struct PinUpdate {
+    pub tier: QualityTier,
+    pub pin: Option<Vec<u16>>,
+    pub unpin: Option<Vec<u16>>,
+}
+
+/// Per-engine conversation registry: assigns session ids at submit
+/// time, stores each session's token chain, and tracks which chain is
+/// pinned in the prefix trie.  Eviction is LRU under `max_sessions`
+/// plus an optional idle TTL; both return the evicted chains so the
+/// engine can unpin them.
+pub struct SessionStore {
+    max_sessions: usize,
+    ttl: Option<Duration>,
+    /// id space: `start + k·stride` — the cluster gives each shard a
+    /// disjoint residue class so ids are unique cluster-wide
+    next_id: u64,
+    stride: u64,
+    clock: u64,
+    sessions: HashMap<u64, Session>,
+}
+
+impl SessionStore {
+    pub fn new(max_sessions: usize) -> SessionStore {
+        SessionStore {
+            max_sessions,
+            ttl: None,
+            next_id: 1,
+            stride: 1,
+            clock: 0,
+            sessions: HashMap::new(),
+        }
+    }
+
+    /// 0 disables the subsystem: resolves return `None` and requests run
+    /// as plain one-shots.
+    pub fn enabled(&self) -> bool {
+        self.max_sessions > 0
+    }
+
+    pub fn live(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Shrink (or grow) the budget; sessions over the new budget are
+    /// evicted LRU-first and returned for unpinning.
+    pub fn set_budget(&mut self, max_sessions: usize) -> Vec<EvictedSession> {
+        self.max_sessions = max_sessions;
+        let mut evicted = Vec::new();
+        while self.sessions.len() > self.max_sessions {
+            if let Some(e) = self.evict_lru() {
+                evicted.push(e);
+            } else {
+                break;
+            }
+        }
+        evicted
+    }
+
+    /// Idle sessions older than `ttl_ms` are evicted lazily at the next
+    /// resolve.  `None` disables TTL eviction (the default).
+    pub fn set_ttl_ms(&mut self, ttl_ms: Option<u64>) {
+        self.ttl = ttl_ms.map(Duration::from_millis);
+    }
+
+    /// Partition the id space (`start + k·stride`) so every shard of a
+    /// cluster assigns globally-unique session ids.
+    pub fn set_id_space(&mut self, start: u64, stride: u64) {
+        assert!(stride > 0);
+        self.next_id = start.max(1);
+        self.stride = stride;
+    }
+
+    /// Stored conversation chain (None for unknown ids).
+    pub fn history(&self, id: u64) -> Option<&[u16]> {
+        self.sessions.get(&id).map(|s| s.history.as_slice())
+    }
+
+    /// Turns already retired into the session's history.
+    pub fn prior_turns(&self, id: u64) -> usize {
+        self.sessions.get(&id).map_or(0, |s| s.turns)
+    }
+
+    fn evict_lru(&mut self) -> Option<EvictedSession> {
+        let id = *self.sessions.iter()
+            .min_by_key(|(_, s)| s.last_used)
+            .map(|(id, _)| id)?;
+        self.evict(id)
+    }
+
+    fn evict(&mut self, id: u64) -> Option<EvictedSession> {
+        self.sessions.remove(&id)
+            .map(|s| EvictedSession { id, tier: s.tier, pinned: s.pinned })
+    }
+
+    fn sweep_expired(&mut self, out: &mut Vec<EvictedSession>) {
+        let Some(ttl) = self.ttl else { return };
+        let now = Instant::now();
+        let expired: Vec<u64> = self.sessions.iter()
+            .filter(|(_, s)| now.duration_since(s.touched) > ttl)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            out.extend(self.evict(id));
+        }
+    }
+
+    /// Resolve a submit's [`SessionSpec`] — assign or look up the id,
+    /// hand back the history to prepend, and evict (budget/TTL) as
+    /// needed.  Returns `None` when the subsystem is disabled.
+    pub fn resolve(&mut self, spec: SessionSpec, default_tier: QualityTier)
+                   -> Option<Resolution> {
+        if !self.enabled() {
+            return None;
+        }
+        self.clock += 1;
+        let mut evicted = Vec::new();
+        self.sweep_expired(&mut evicted);
+        let id = match spec {
+            SessionSpec::Resume(id) if self.sessions.contains_key(&id) => {
+                let s = self.sessions.get_mut(&id).unwrap();
+                s.last_used = self.clock;
+                s.touched = Instant::now();
+                return Some(Resolution {
+                    id,
+                    history: s.history.clone(),
+                    prior_turns: s.turns,
+                    tier: s.tier,
+                    evicted,
+                });
+            }
+            // unknown id: re-register gracefully (evicted session, or a
+            // cluster fallback landing off the owning shard)
+            SessionSpec::Resume(id) => id,
+            SessionSpec::New => {
+                let id = self.next_id;
+                self.next_id += self.stride;
+                id
+            }
+        };
+        while self.sessions.len() >= self.max_sessions {
+            match self.evict_lru() {
+                Some(e) => evicted.push(e),
+                None => break,
+            }
+        }
+        self.sessions.insert(id, Session {
+            tier: default_tier,
+            history: Vec::new(),
+            pinned: None,
+            turns: 0,
+            last_used: self.clock,
+            touched: Instant::now(),
+        });
+        Some(Resolution {
+            id,
+            history: Vec::new(),
+            prior_turns: 0,
+            tier: default_tier,
+            evicted,
+        })
+    }
+
+    /// Record a retired turn: `history` becomes the full chain including
+    /// the reply, and — when the engine donated pages — the pin moves
+    /// from the previous chain to `donated_chain`.  Returns `None` when
+    /// the session vanished mid-flight (evicted under pressure); the
+    /// reply is simply not remembered.
+    pub fn complete(&mut self, id: u64, new_history: Vec<u16>,
+                    donated_chain: Option<Vec<u16>>) -> Option<PinUpdate> {
+        self.clock += 1;
+        let s = self.sessions.get_mut(&id)?;
+        s.history = new_history;
+        s.turns += 1;
+        s.last_used = self.clock;
+        s.touched = Instant::now();
+        match donated_chain {
+            // no donation this turn (prefix cache disabled, or the turn
+            // retired at admission): the previous pin stands
+            None => Some(PinUpdate { tier: s.tier, pin: None, unpin: None }),
+            Some(chain) => {
+                let unpin = s.pinned.replace(chain.clone());
+                Some(PinUpdate { tier: s.tier, pin: Some(chain), unpin })
+            }
+        }
+    }
+
+    /// Evict every session (engine shutdown / tests), returning the
+    /// chains to unpin.
+    pub fn clear(&mut self) -> Vec<EvictedSession> {
+        let ids: Vec<u64> = self.sessions.keys().copied().collect();
+        ids.into_iter().filter_map(|id| self.evict(id)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: QualityTier = QualityTier::Kv4;
+
+    #[test]
+    fn new_then_resume_threads_history_and_turns() {
+        let mut store = SessionStore::new(4);
+        let r1 = store.resolve(SessionSpec::New, T).unwrap();
+        assert_eq!((r1.id, r1.prior_turns), (1, 0));
+        assert!(r1.history.is_empty() && r1.evicted.is_empty());
+
+        // turn 1 retires: prompt [1,2] + reply [3,4]
+        let upd = store.complete(r1.id, vec![1, 2, 3, 4],
+                                 Some(vec![1, 2, 3])).unwrap();
+        assert_eq!(upd.pin.as_deref(), Some(&[1, 2, 3][..]));
+        assert_eq!(upd.unpin, None);
+
+        let r2 = store.resolve(SessionSpec::Resume(r1.id), T).unwrap();
+        assert_eq!(r2.id, r1.id);
+        assert_eq!(r2.history, vec![1, 2, 3, 4]);
+        assert_eq!(r2.prior_turns, 1);
+
+        // turn 2 retires with a longer chain: pin moves forward
+        let upd = store.complete(r1.id, vec![1, 2, 3, 4, 5, 6],
+                                 Some(vec![1, 2, 3, 4, 5])).unwrap();
+        assert_eq!(upd.pin.as_deref(), Some(&[1, 2, 3, 4, 5][..]));
+        assert_eq!(upd.unpin.as_deref(), Some(&[1, 2, 3][..]));
+        assert_eq!(store.prior_turns(r1.id), 2);
+    }
+
+    #[test]
+    fn lru_eviction_under_budget_returns_pinned_chains() {
+        let mut store = SessionStore::new(2);
+        let a = store.resolve(SessionSpec::New, T).unwrap().id;
+        let b = store.resolve(SessionSpec::New, T).unwrap().id;
+        store.complete(a, vec![1], Some(vec![1])).unwrap();
+        store.complete(b, vec![2], Some(vec![2])).unwrap();
+        // touch a so b is the LRU
+        store.resolve(SessionSpec::Resume(a), T).unwrap();
+
+        let r = store.resolve(SessionSpec::New, T).unwrap();
+        assert_eq!(r.evicted.len(), 1, "budget of 2 must evict one");
+        let e = &r.evicted[0];
+        assert_eq!(e.id, b, "LRU session must go first");
+        assert_eq!(e.pinned.as_deref(), Some(&[2][..]));
+        assert_eq!(store.live(), 2);
+        assert!(store.history(b).is_none());
+    }
+
+    #[test]
+    fn unknown_resume_reregisters_cold() {
+        let mut store = SessionStore::new(2);
+        let r = store.resolve(SessionSpec::Resume(77), T).unwrap();
+        assert_eq!(r.id, 77);
+        assert!(r.history.is_empty());
+        assert_eq!(r.prior_turns, 0);
+        assert_eq!(store.live(), 1);
+        // a completion for an id evicted mid-flight is dropped, not a panic
+        assert!(store.complete(99, vec![1], None).is_none());
+    }
+
+    #[test]
+    fn disabled_store_is_inert_and_id_space_partitions() {
+        let mut store = SessionStore::new(0);
+        assert!(!store.enabled());
+        assert!(store.resolve(SessionSpec::New, T).is_none());
+
+        let mut store = SessionStore::new(8);
+        store.set_id_space(3, 4); // shard 2 of 4
+        let a = store.resolve(SessionSpec::New, T).unwrap().id;
+        let b = store.resolve(SessionSpec::New, T).unwrap().id;
+        assert_eq!((a, b), (3, 7), "ids must stay in the shard's residue");
+    }
+
+    #[test]
+    fn shrinking_budget_and_clear_hand_back_pins() {
+        let mut store = SessionStore::new(4);
+        for i in 0..4u64 {
+            let id = store.resolve(SessionSpec::New, T).unwrap().id;
+            store.complete(id, vec![i as u16], Some(vec![i as u16])).unwrap();
+        }
+        let evicted = store.set_budget(2);
+        assert_eq!(evicted.len(), 2);
+        assert!(evicted.iter().all(|e| e.pinned.is_some()));
+        let rest = store.clear();
+        assert_eq!(rest.len(), 2);
+        assert_eq!(store.live(), 0);
+    }
+}

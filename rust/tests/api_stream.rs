@@ -5,8 +5,12 @@
 //! expiry, fair-share priority admission, cluster-level QueueFull,
 //! 1-shard cluster ≡ LocalSession), the shared prefix cache (hit-path
 //! bit-exactness, page-boundary admission headroom, drained-cluster
-//! refcount-leak checks), and the v2 TCP event-frame protocol
-//! (interleaving, cancel, live stats, raw v1 compatibility).
+//! refcount-leak checks), multi-turn chat sessions (3-turn chat ≡ cold
+//! concatenated-history replay, generated-token donation accounting,
+//! eviction pin-leak regression, session-affinity routing on a 2-shard
+//! cluster, `chat`/`flush-prefix` wire commands), and the v2 TCP
+//! event-frame protocol (interleaving, cancel, live stats, raw v1
+//! compatibility).
 //!
 //! Like `integration.rs`, every test needs `make artifacts` and skips
 //! with a notice when they are absent.
@@ -165,7 +169,7 @@ fn event_path_matches_legacy_shim_byte_identical() {
         id: 0, prompt: prompt.clone(), max_new_tokens: 8,
         sampling, stop_token: None,
         priority: Priority::Interactive, deadline_ms: None,
-        tier: QualityTier::Kv4,
+        tier: QualityTier::Kv4, session: None,
     });
     let legacy = engine.run_to_completion().unwrap();
     assert_eq!(legacy.len(), 1);
@@ -522,6 +526,232 @@ fn drained_cluster_pools_drain_to_zero_after_prefix_clear() {
     let m = cluster.metrics();
     assert_eq!(m.pool_pages_in_use(), 0,
                "flushed cluster must return every shard's pool to zero");
+}
+
+/// Acceptance: a 3-turn chat session is token-for-token identical to
+/// cold resubmission of the concatenated history, and the donation
+/// gauge counts exactly the pages of history each resumed turn grafts
+/// from the trie instead of re-prefilling.
+#[test]
+fn chat_session_matches_cold_replay_and_counts_donated_prefill() {
+    let Some(art) = art() else { return };
+    let eval = art.corpus.split("eval").unwrap();
+    let tpp = TOKENS_PER_PAGE;
+    if eval.len() < 16 * tpp {
+        eprintln!("[skip] eval split too short for chat prompts");
+        return;
+    }
+    let max_new = 8usize;
+    let turns: [Vec<u16>; 3] = [
+        eval[..tpp].to_vec(),
+        eval[12 * tpp..12 * tpp + 8].to_vec(),
+        eval[14 * tpp..14 * tpp + 8].to_vec(),
+    ];
+
+    // chat path: one session, three turns, server-side history
+    let s = session_with_prefix(&art, 2048, 11, 1024);
+    let out1 = s.submit(GenerationParams::new(turns[0].clone())
+            .max_new(max_new).new_session()).unwrap().wait().unwrap();
+    let sid = out1.stats.session.expect("a New session must learn its id");
+    let out2 = s.submit(GenerationParams::new(turns[1].clone())
+            .max_new(max_new).resume_session(sid)).unwrap().wait().unwrap();
+    let out3 = s.submit(GenerationParams::new(turns[2].clone())
+            .max_new(max_new).resume_session(sid)).unwrap().wait().unwrap();
+    assert_eq!(out2.stats.session, Some(sid));
+    assert_eq!(out3.stats.session, Some(sid));
+    // the engine, not the caller, threads the conversation history
+    let h2 = turns[0].len() + max_new + turns[1].len();
+    assert_eq!(out2.stats.prompt_len, h2,
+               "turn 2 must prefill over the stored turn-1 chain");
+    let h3 = h2 + max_new + turns[2].len();
+    assert_eq!(out3.stats.prompt_len, h3);
+
+    // replay path: a cold engine (same seed, prefix cache off) fed the
+    // concatenated history must emit the same tokens, turn for turn
+    let cold = session_with_prefix(&art, 2048, 11, 0);
+    let c1 = cold.submit(GenerationParams::new(turns[0].clone())
+            .max_new(max_new)).unwrap().wait().unwrap();
+    assert_eq!(c1.tokens, out1.tokens, "turn 1 must match cold");
+    let mut hist: Vec<u16> = turns[0].clone();
+    hist.extend_from_slice(&c1.tokens);
+    hist.extend_from_slice(&turns[1]);
+    let c2 = cold.submit(GenerationParams::new(hist.clone())
+            .max_new(max_new)).unwrap().wait().unwrap();
+    assert_eq!(c2.tokens, out2.tokens, "turn 2 must match cold replay");
+    hist.extend_from_slice(&c2.tokens);
+    hist.extend_from_slice(&turns[2]);
+    let c3 = cold.submit(GenerationParams::new(hist)
+            .max_new(max_new)).unwrap().wait().unwrap();
+    assert_eq!(c3.tokens, out3.tokens, "turn 3 must match cold replay");
+
+    // donation accounting: each resumed turn grafts every full page of
+    // its history — the page holding a turn's final sampled token never
+    // reaches the KV cache, so the donated chain (and the savings) is
+    // the history rounded down to whole pages
+    let st = s.stats();
+    let saved2 = (turns[0].len() + max_new - 1) / tpp * tpp;
+    let saved3 = (h2 + max_new - 1) / tpp * tpp;
+    assert_eq!(st.session_prefill_tokens_saved, saved2 + saved3,
+               "saved must be ≈ full history length on turns ≥ 2");
+    assert_eq!(st.session_turns, 3);
+    assert_eq!(s.sessions_live(), 1);
+}
+
+/// Satellite regression: evicting a session must release its pinned
+/// trie chain — after a budget-shrink eviction and a trie flush, the
+/// pinned-page gauge and the pool both return to zero.  A leaked pin
+/// trips the flush's pinned-pages debug assertion; a refcount leak
+/// strands pool pages past the flush.
+#[test]
+fn session_eviction_releases_pinned_chain_pages() {
+    let Some(art) = art() else { return };
+    let eval = art.corpus.split("eval").unwrap();
+    let tpp = TOKENS_PER_PAGE;
+    if eval.len() < 16 * tpp {
+        eprintln!("[skip] eval split too short for chat prompts");
+        return;
+    }
+    let s = session_with_prefix(&art, 2048, 13, 1024);
+
+    // session A: two turns (exercises the pin handover that re-pins the
+    // longer chain before unpinning the turn-1 chain)
+    let sid_a = s.submit(GenerationParams::new(eval[..tpp].to_vec())
+            .max_new(8).new_session()).unwrap()
+        .wait().unwrap().stats.session.unwrap();
+    s.submit(GenerationParams::new(eval[5 * tpp..5 * tpp + 8].to_vec())
+            .max_new(8).resume_session(sid_a)).unwrap().wait().unwrap();
+    // session B: one turn on a disjoint prompt
+    let out_b = s.submit(GenerationParams::new(eval[8 * tpp..9 * tpp].to_vec())
+            .max_new(8).new_session()).unwrap().wait().unwrap();
+    assert_ne!(out_b.stats.session, Some(sid_a), "ids must be distinct");
+    assert_eq!(s.sessions_live(), 2);
+    let ps = s.prefix_stats();
+    assert!(ps.pages_pinned > 0, "donated chains must hold trie pages");
+    assert_eq!(s.pool_in_use(), ps.pages_pinned,
+               "drained sessions must hold only the trie's pages");
+
+    // shrink the budget: the LRU session (A) is evicted and its chain
+    // unpinned; the trie still holds the now-unpinned pages...
+    s.set_session_budget(1);
+    assert_eq!(s.sessions_live(), 1);
+    assert!(s.prefix_stats().pages_pinned > 0);
+
+    // ...until the flush, which must return every last page
+    s.clear_prefix_cache();
+    assert_eq!(s.prefix_stats().pages_pinned, 0,
+               "flush after eviction must empty the trie");
+    assert_eq!(s.pool_in_use(), 0, "no pages may leak past the flush");
+}
+
+/// Session-affinity routing: on a 2-shard cluster every resumed turn
+/// must land on the shard that owns the session's history and donated
+/// chain.  A turn routed to the wrong shard re-registers cold with an
+/// empty history, so its effective prompt — and therefore its greedy
+/// reply — would diverge from the single-engine chat.
+#[test]
+fn cluster_routes_resumed_turns_to_the_owning_shard() {
+    let Some(art) = art() else { return };
+    let eval = art.corpus.split("eval").unwrap();
+    let tpp = TOKENS_PER_PAGE;
+    if eval.len() < 16 * tpp {
+        eprintln!("[skip] eval split too short for chat prompts");
+        return;
+    }
+    let max_new = 8usize;
+    let turns: [Vec<u16>; 3] = [
+        eval[..tpp].to_vec(),
+        eval[12 * tpp..12 * tpp + 8].to_vec(),
+        eval[14 * tpp..14 * tpp + 8].to_vec(),
+    ];
+    let params = |sid: Option<u64>, t: &[u16]| {
+        let p = GenerationParams::new(t.to_vec()).max_new(max_new);
+        match sid {
+            None => p.new_session(),
+            Some(id) => p.resume_session(id),
+        }
+    };
+
+    // reference: the same three turns on a single engine
+    let s = session(&art, 2048, 9, 16);
+    let l1 = s.submit(params(None, &turns[0])).unwrap().wait().unwrap();
+    let lsid = l1.stats.session.expect("New must assign an id");
+    let l2 = s.submit(params(Some(lsid), &turns[1])).unwrap().wait().unwrap();
+    let l3 = s.submit(params(Some(lsid), &turns[2])).unwrap().wait().unwrap();
+
+    let factory: EngineFactory = Arc::new(|| {
+        let art = Artifacts::load("tiny-mha")?;
+        let runner = art.runner(QuantSpec::quarot(4), None)?;
+        Ok(GenerationEngine::new(runner, 2048, 9))
+    });
+    let c = ClusterService::new(factory,
+                                ClusterConfig { shards: 2, queue_bound: 16 });
+    let c1 = c.submit(params(None, &turns[0])).unwrap().wait().unwrap();
+    let sid = c1.stats.session.expect("New must assign an id");
+    let c2 = c.submit(params(Some(sid), &turns[1])).unwrap().wait().unwrap();
+    let c3 = c.submit(params(Some(sid), &turns[2])).unwrap().wait().unwrap();
+    assert_eq!(c2.stats.session, Some(sid));
+    assert_eq!(c3.stats.session, Some(sid));
+    assert_eq!([&l1.tokens, &l2.tokens, &l3.tokens],
+               [&c1.tokens, &c2.tokens, &c3.tokens],
+               "session-affine routing must keep the history on one shard");
+
+    // exactly one shard owns the session, and its donation gauge shows
+    // the same savings a single engine accrues
+    let m = c.metrics();
+    assert_eq!(m.sessions_live(), 1);
+    assert_eq!(m.session_turns(), 3);
+    let h2 = turns[0].len() + max_new + turns[1].len();
+    let expect_saved = (turns[0].len() + max_new - 1) / tpp * tpp
+        + (h2 + max_new - 1) / tpp * tpp;
+    assert_eq!(m.session_prefill_tokens_saved(), expect_saved,
+               "resumed turns must hit the owner's donated chain");
+}
+
+/// The wire path: `chat` frames assign and resume sessions over TCP,
+/// the session gauges surface on the stats frame, and `flush-prefix`
+/// round-trips an ack and returns every trie page to the pool.
+#[test]
+fn tcp_chat_resumes_sessions_and_flush_prefix_acks() {
+    if art().is_none() {
+        return;
+    }
+    let handle = serve(
+        move || {
+            let art = Artifacts::load("tiny-mha")?;
+            let runner = art.runner(QuantSpec::quarot(4), None)?;
+            Ok(GenerationEngine::new(runner, 2048, 3))
+        },
+        0,
+        16,
+    ).unwrap();
+
+    let client = Client::connect(handle.port).unwrap();
+    let t1: Vec<u16> = (0..16).map(|i| 5 + i as u16).collect();
+    let out1 = client.chat(None, &GenerationParams::new(t1.clone()).max_new(8))
+        .unwrap().wait().unwrap();
+    let sid = out1.stats.session.expect("chat must assign a session id");
+    let out2 = client
+        .chat(Some(sid), &GenerationParams::new(vec![40, 41, 42, 43]).max_new(8))
+        .unwrap().wait().unwrap();
+    assert_eq!(out2.stats.session, Some(sid), "a resumed turn keeps its id");
+    assert_eq!(out2.stats.prompt_len, t1.len() + 8 + 4,
+               "the server must prepend the stored history");
+
+    let mut c2 = Client::connect(handle.port).unwrap();
+    let stats = c2.stats().unwrap();
+    assert_eq!(stats.get("sessions_live").unwrap().as_usize(), Some(1));
+    assert_eq!(stats.get("session_turns").unwrap().as_usize(), Some(2));
+    let saved = stats.get("session_prefill_tokens_saved").unwrap()
+        .as_usize().unwrap();
+    assert!(saved >= TOKENS_PER_PAGE,
+            "the resumed turn must be served from the donated chain");
+
+    // flush-prefix: acked, and every trie page returns to the pool
+    c2.flush_prefix().unwrap();
+    let stats = c2.stats().unwrap();
+    assert_eq!(stats.get("prefix_pages_pinned").unwrap().as_f64(), Some(0.0));
+    assert_eq!(stats.get("pool_pages_in_use").unwrap().as_f64(), Some(0.0));
+    handle.shutdown();
 }
 
 #[test]
