@@ -5,12 +5,20 @@
 
 use anyhow::Result;
 
-use quarot::bench_support::{record, Artifacts};
+use quarot::bench_support::{record, Artifacts, CheckSink};
 use quarot::eval;
 use quarot::util::bench::Table;
 
 fn main() -> Result<()> {
-    let art = Artifacts::load("tiny-mha")?;
+    let mut chk = CheckSink::new("fig1_outliers");
+    let art = match Artifacts::load("tiny-mha") {
+        Ok(a) => a,
+        Err(e) if chk.active() => {
+            println!("[check] fig1_outliers skipped: {e}");
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
     let base = art.calib(false, 4)?;
     let rot = art.calib(true, 4)?;
     let site_names = ["attn-in", "out-proj-in", "ffn-in", "down-proj-in"];
@@ -19,8 +27,13 @@ fn main() -> Result<()> {
         &["site", "layer", "baseline", "quarot"]);
     for (b, r) in eval::outlier_stats(&base.amax).iter()
         .zip(eval::outlier_stats(&rot.amax).iter()) {
+        chk.cell("baseline ratio", b.ratio as f64)?;
+        chk.cell("quarot ratio", r.ratio as f64)?;
         t.row(vec![site_names[b.site].into(), format!("{}", b.layer),
                    format!("{:.2}", b.ratio), format!("{:.2}", r.ratio)]);
+    }
+    if chk.done() {
+        return Ok(());
     }
     record("fig1_outliers", &t.render())
 }

@@ -5,13 +5,14 @@
 
 use anyhow::Result;
 
-use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::bench_support::{record, Artifacts, CheckSink};
 use quarot::coordinator::runner::{QuantSpec, Variant};
 use quarot::eval;
 use quarot::util::bench::Table;
 
 fn main() -> Result<()> {
-    let windows = eval_windows();
+    let mut chk = CheckSink::new("table10_had_precision");
+    let windows = chk.windows();
     let mut t = Table::new("Table 10 — online-Hadamard precision (W4A4KV4 RTN)",
                            &["model", "had precision", "ppl"]);
     for model in ["tiny-mha", "small-mha"] {
@@ -25,9 +26,13 @@ fn main() -> Result<()> {
             let spec = QuantSpec { variant, ..QuantSpec::quarot(4) };
             let runner = art.runner_prefill_only(spec, None)?;
             let p = eval::perplexity(&runner, eval_toks, windows)?;
+            chk.cell(label, p)?;
             println!("  [{model}] had {label}: {p:.4}");
             t.row(vec![model.into(), label.into(), format!("{p:.4}")]);
         }
+    }
+    if chk.done() {
+        return Ok(());
     }
     record("table10_had_precision", &t.render())
 }

@@ -5,14 +5,15 @@
 
 use anyhow::Result;
 
-use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::bench_support::{record, Artifacts, CheckSink};
 use quarot::coordinator::runner::{QuantSpec, WeightQuant};
 use quarot::eval;
 use quarot::quant::gptq::GptqCfg;
 use quarot::util::bench::Table;
 
 fn main() -> Result<()> {
-    let windows = eval_windows();
+    let mut chk = CheckSink::new("table11_alt_models");
+    let windows = chk.windows();
     let mut t = Table::new(
         "Tables 11-13 — alternative architectures (LLAMA-3/GQA/Phi proxies)",
         &["model", "method", "precision", "ppl"]);
@@ -25,6 +26,7 @@ fn main() -> Result<()> {
         let calib_rot = art.calib(true, 2)?;
         let fp = art.runner_prefill_only(QuantSpec::fp16_baseline(), None)?;
         let p = eval::perplexity(&fp, eval_toks, windows)?;
+        chk.cell("FP16", p)?;
         t.row(vec![model.into(), "Baseline".into(), "FP16".into(),
                    format!("{p:.4}")]);
         drop(fp);
@@ -38,11 +40,15 @@ fn main() -> Result<()> {
             ] {
                 let runner = art.runner_prefill_only(spec, None)?;
                 let p = eval::perplexity(&runner, eval_toks, windows)?;
+                chk.cell(method, p)?;
                 println!("  [{model}] {method} INT{bits}: {p:.4}");
                 t.row(vec![model.into(), method.into(), format!("INT{bits}"),
                            format!("{p:.4}")]);
             }
         }
+    }
+    if chk.done() {
+        return Ok(());
     }
     record("table11_alt_models", &t.render())
 }

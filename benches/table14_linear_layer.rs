@@ -18,19 +18,23 @@
 use anyhow::Result;
 
 use quarot::backend::{self, BackendKind};
-use quarot::bench_support::record;
+use quarot::bench_support::{record, CheckSink};
 use quarot::gemm;
 use quarot::util::bench::{bench_auto, Table};
 use quarot::util::prng::Rng;
 
 fn main() -> Result<()> {
-    let t_tokens = 64usize;
-    let shapes: &[(usize, usize)] = &[
+    let mut chk = CheckSink::new("table14_linear_layer");
+    let t_tokens = if chk.active() { 8usize } else { 64 };
+    let all_shapes: &[(usize, usize)] = &[
         (1024, 256),   // tiny-mha W_down
         (256, 1024),   // tiny-mha W_up
         (4096, 4096),  // LLAMA2-7B attn (paper row 1)
         (2560, 1024), // LLAMA2-7B W_down-like, 2^7·20 exercises the H20 path
     ];
+    // `--check`: one rep per kernel on the small shapes only — the
+    // smoke drives every backend × gemm path, not the timing sweep
+    let shapes = if chk.active() { &all_shapes[..2] } else { all_shapes };
     let mut t = Table::new(
         "Fig 7 / Table 14 — linear layer per backend: f32 vs int8 vs packed-int4 (ms)",
         &["backend", "K x N", "f32", "int8", "int4", "int4+had", "i4 vs f32",
@@ -45,7 +49,7 @@ fn main() -> Result<()> {
         let w4 = gemm::WeightsI4::quantize(&w, k, n);
         let mut y = vec![0.0f32; t_tokens * n];
         let mut xh = x.clone();
-        let budget = 200.0;
+        let budget = if chk.active() { 1.0 } else { 200.0 };
         let mut scalar_i4_ms = f64::NAN;
         for kind in [BackendKind::Scalar, BackendKind::Blocked,
                      BackendKind::Threaded] {
@@ -67,6 +71,10 @@ fn main() -> Result<()> {
             if kind == BackendKind::Scalar {
                 scalar_i4_ms = s_i4.median_ms();
             }
+            for (label, s) in [("f32", &s_f32), ("int8", &s_i8),
+                               ("int4", &s_i4), ("int4+had", &s_i4h)] {
+                chk.cell(label, s.median_ms())?;
+            }
             let sp = s_f32.median_ms() / s_i4.median_ms();
             let ovh = (s_i4h.median_ms() / s_i4.median_ms() - 1.0) * 100.0;
             let vs_scalar = scalar_i4_ms / s_i4.median_ms();
@@ -85,6 +93,9 @@ fn main() -> Result<()> {
                 format!("{vs_scalar:.2}x"),
             ]);
         }
+    }
+    if chk.done() {
+        return Ok(());
     }
     record("table14_linear_layer", &t.render())
 }

@@ -12,14 +12,19 @@ use anyhow::Result;
 
 use quarot::attention::{CacheF32, CacheQuant, DecodeF32Seq, DecodeQuantSeq};
 use quarot::backend;
-use quarot::bench_support::record;
+use quarot::bench_support::{record, CheckSink};
 use quarot::util::bench::{bench_auto, Table};
 use quarot::util::prng::Rng;
 
 fn main() -> Result<()> {
-    let ctx = 2047usize;
-    let geoms: &[(usize, usize)] = &[(32, 128), (40, 128), (64, 128)];
-    let batches = [1usize, 4, 16];
+    let mut chk = CheckSink::new("table15_kv_decode");
+    // `--check`: one small geometry with a short cache — exercises the
+    // fp32 and packed-int4 batched decode paths, skips the timing sweep
+    let ctx = if chk.active() { 127usize } else { 2047 };
+    let all_geoms: &[(usize, usize)] = &[(32, 128), (40, 128), (64, 128)];
+    let geoms = if chk.active() { &all_geoms[..1] } else { all_geoms };
+    let batches: &[usize] = if chk.active() { &[1, 4] } else { &[1, 4, 16] };
+    let budget = if chk.active() { 1.0 } else { 200.0 };
     let be = backend::default_backend();
     let mut t = Table::new(
         &format!("Table 15 — decode w/ 2047-token cache: fp32 vs packed-int4 \
@@ -42,7 +47,7 @@ fn main() -> Result<()> {
             vq.append(&vt, 0.95);
         }
         let q: Vec<f32> = rng.normal_vec(h * dh);
-        for &b in &batches {
+        for &b in batches {
             let seqs_f: Vec<DecodeF32Seq> = (0..b)
                 .map(|_| DecodeF32Seq { q: &q, k: kf.view(), v: vf.view() })
                 .collect();
@@ -50,12 +55,14 @@ fn main() -> Result<()> {
                 .map(|_| DecodeQuantSeq { q: &q, k: kq.view(), v: vq.view() })
                 .collect();
             let mut out = vec![0.0f32; b * h * dh];
-            let fp = bench_auto(200.0, || {
+            let fp = bench_auto(budget, || {
                 be.decode_f32_batch(&seqs_f, h, &mut out);
             });
-            let i4 = bench_auto(200.0, || {
+            let i4 = bench_auto(budget, || {
                 be.decode_quant_batch(&seqs_q, h, &mut out);
             });
+            chk.cell("fp32", fp.median_ms())?;
+            chk.cell("int4", i4.median_ms())?;
             let ratio = fp.median_ms() / i4.median_ms();
             println!("  {h}x{dh} b={b}: fp {:.2}ms i4 {:.2}ms ratio {ratio:.2}",
                      fp.median_ms(), i4.median_ms());
@@ -64,6 +71,9 @@ fn main() -> Result<()> {
                        format!("{:.2}", i4.median_ms()),
                        format!("{ratio:.2}")]);
         }
+    }
+    if chk.done() {
+        return Ok(());
     }
     record("table15_kv_decode", &t.render())
 }

@@ -14,7 +14,7 @@
 use anyhow::Result;
 
 use quarot::backend::{self, BackendKind};
-use quarot::bench_support::record;
+use quarot::bench_support::{record, CheckSink};
 use quarot::gemm;
 use quarot::util::bench::{bench, Table};
 use quarot::util::prng::Rng;
@@ -32,8 +32,11 @@ fn main() -> Result<()> {
         BlockShape { name: "LLAMA2-7B/8", d: 512, d_kv: 512, dff: 1376 },
         BlockShape { name: "LLAMA2-70B/8", d: 1024, d_kv: 128, dff: 3584 },
     ];
-    let seq = 64usize;
-    let batches = [1usize, 4, 16];
+    let mut chk = CheckSink::new("table16_prefill_speedup");
+    // `--check`: tiny token count, single batch — still composes the
+    // full 7-layer block on every backend
+    let seq = if chk.active() { 8usize } else { 64 };
+    let batches: &[usize] = if chk.active() { &[1] } else { &[1, 4, 16] };
     let mut t = Table::new(
         "Fig 4L / Table 16 — prefill block speedup (int4 vs f32, composed)",
         &["backend", "block", "batch", "f32 ms", "int4 ms", "speedup",
@@ -53,7 +56,7 @@ fn main() -> Result<()> {
                  gemm::WeightsI4::quantize(&w, k, n))
             })
             .collect();
-        for &batch in &batches {
+        for &batch in batches {
             let tokens = seq * batch;
             // one activation set per (block, batch) — shared by backends
             let xs: Vec<Vec<f32>> = layers.iter()
@@ -78,6 +81,8 @@ fn main() -> Result<()> {
                 if kind == BackendKind::Scalar {
                     scalar_i4_ms = i4_ms;
                 }
+                chk.cell("f32 block", f32_ms)?;
+                chk.cell("int4 block", i4_ms)?;
                 let sp = f32_ms / i4_ms;
                 let vs_scalar = scalar_i4_ms / i4_ms;
                 println!("  [{}] {} b={batch}: f32 {f32_ms:.1}ms i4 {i4_ms:.1}ms \
@@ -88,6 +93,9 @@ fn main() -> Result<()> {
                            format!("{sp:.2}x"), format!("{vs_scalar:.2}x")]);
             }
         }
+    }
+    if chk.done() {
+        return Ok(());
     }
     record("table16_prefill_speedup", &t.render())
 }

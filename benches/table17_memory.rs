@@ -9,7 +9,7 @@ use anyhow::Result;
 
 use quarot::coordinator::kvcache::{PagePool, SeqCache};
 use quarot::model::ModelConfig;
-use quarot::bench_support::record;
+use quarot::bench_support::{record, CheckSink};
 use quarot::util::bench::Table;
 use quarot::util::prng::Rng;
 
@@ -23,16 +23,23 @@ fn cfg(name: &str, n_heads: usize, n_kv: usize, layers: usize) -> ModelConfig {
 }
 
 fn main() -> Result<()> {
+    let mut chk = CheckSink::new("table17_memory");
     // one-layer-scaled geometries (the paper measures a single block too)
     let models = [cfg("LLAMA2-7B-like (MHA)", 32, 32, 1),
                   cfg("LLAMA2-70B-like (GQA)", 64, 8, 1)];
+    // `--check`: short sequences only — the page-pool accounting and the
+    // end-of-run leak assert are the point, not the absolute MB
+    let grid: &[(usize, [usize; 3])] = if chk.active() {
+        &[(1, [64, 128, 256]), (4, [64, 128, 256])]
+    } else {
+        &[(1, [256, 1024, 4096]), (16, [256, 1024, 2048])]
+    };
     let mut t = Table::new(
         "Fig 4R / Table 17 — KV memory: fp16-equiv vs packed-int4 pages",
         &["model", "batch", "seq", "fp16 MB", "int4 MB", "saving"]);
     let mut rng = Rng::new(3);
     for m in &models {
-        for &(batch, seqs) in &[(1usize, [256usize, 1024, 4096]),
-                                (16, [256, 1024, 2048])] {
+        for &(batch, seqs) in grid {
             for &seq in &seqs {
                 let geom = SeqCache::new(m, 4, 0.95, 32).geom();
                 let pages_needed =
@@ -55,6 +62,7 @@ fn main() -> Result<()> {
                 let packed: usize = caches.iter().map(|c| c.bytes()).sum();
                 let fp16: usize = caches.iter().map(|c| c.fp16_equiv_bytes()).sum();
                 let saving = fp16 as f64 / packed as f64;
+                chk.cell("saving", saving)?;
                 println!("  {} b={batch} s={seq}: {:.2} MB → {:.2} MB ({saving:.2}x)",
                          m.name, fp16 as f64 / 1e6, packed as f64 / 1e6);
                 t.row(vec![m.name.clone(), format!("{batch}"), format!("{seq}"),
@@ -67,6 +75,9 @@ fn main() -> Result<()> {
                 assert_eq!(pool.in_use(), 0);
             }
         }
+    }
+    if chk.done() {
+        return Ok(());
     }
     record("table17_memory", &t.render())
 }

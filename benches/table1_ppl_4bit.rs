@@ -6,14 +6,15 @@
 
 use anyhow::Result;
 
-use quarot::bench_support::{available_models, eval_windows, record, Artifacts};
+use quarot::bench_support::{available_models, record, Artifacts, CheckSink};
 use quarot::coordinator::runner::{QuantSpec, Variant, WeightQuant};
 use quarot::eval;
 use quarot::quant::{gptq::GptqCfg, rtn::WeightQuantCfg};
 use quarot::util::bench::Table;
 
 fn main() -> Result<()> {
-    let windows = eval_windows();
+    let mut chk = CheckSink::new("table1_ppl_4bit");
+    let windows = chk.windows();
     let mut t = Table::new(
         "Table 1 — 4-bit (W4A4KV4) perplexity",
         &["method", "model", "ppl"]);
@@ -53,9 +54,13 @@ fn main() -> Result<()> {
             let stats = if needs_base_calib { Some(&calib_base) } else { None };
             let runner = art.runner_prefill_only(spec, stats)?;
             let p = eval::perplexity(&runner, eval_toks, windows)?;
+            chk.cell(label, p)?;
             println!("  [{model}] {label:28} {p:.4}");
             t.row(vec![label.into(), model.clone(), format!("{p:.4}")]);
         }
+    }
+    if chk.done() {
+        return Ok(());
     }
     record("table1_ppl_4bit", &t.render())
 }

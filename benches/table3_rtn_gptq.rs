@@ -4,14 +4,15 @@
 
 use anyhow::Result;
 
-use quarot::bench_support::{available_models, eval_windows, record, Artifacts};
+use quarot::bench_support::{available_models, record, Artifacts, CheckSink};
 use quarot::coordinator::runner::{QuantSpec, WeightQuant};
 use quarot::eval;
 use quarot::quant::gptq::GptqCfg;
 use quarot::util::bench::Table;
 
 fn main() -> Result<()> {
-    let windows = eval_windows();
+    let mut chk = CheckSink::new("table3_rtn_gptq");
+    let windows = chk.windows();
     let mut t = Table::new(
         "Table 3/9 — QuaRot RTN vs GPTQ across precisions",
         &["model", "method", "precision", "ppl"]);
@@ -22,6 +23,7 @@ fn main() -> Result<()> {
         {
             let fp = art.runner_prefill_only(QuantSpec::fp16_baseline(), None)?;
             let p = eval::perplexity(&fp, eval_toks, windows)?;
+            chk.cell("FP16", p)?;
             t.row(vec![model.clone(), "Baseline".into(), "FP16".into(),
                        format!("{p:.4}")]);
             println!("  [{model}] FP16 {p:.4}");
@@ -36,11 +38,15 @@ fn main() -> Result<()> {
             ] {
                 let runner = art.runner_prefill_only(spec, None)?;
                 let p = eval::perplexity(&runner, eval_toks, windows)?;
+                chk.cell(method, p)?;
                 println!("  [{model}] {method} INT{bits} {p:.4}");
                 t.row(vec![model.clone(), method.into(), format!("INT{bits}"),
                            format!("{p:.4}")]);
             }
         }
+    }
+    if chk.done() {
+        return Ok(());
     }
     record("table3_rtn_gptq", &t.render())
 }

@@ -4,24 +4,33 @@
 
 use anyhow::Result;
 
-use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::bench_support::{record, Artifacts, CheckSink};
 use quarot::coordinator::runner::{QuantSpec, WeightQuant};
 use quarot::eval;
 use quarot::quant::gptq::GptqCfg;
 use quarot::util::bench::Table;
 
 fn main() -> Result<()> {
-    let windows = eval_windows();
+    let mut chk = CheckSink::new("table4_groupsize");
+    let windows = chk.windows();
     let model = "tiny-mha";
-    let art = Artifacts::load(model)?;
+    let art = match Artifacts::load(model) {
+        Ok(a) => a,
+        Err(e) if chk.active() => {
+            println!("[check] table4_groupsize skipped: {e}");
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
     let eval_toks = art.corpus.split("eval")?;
     let calib_rot = art.calib(true, 4)?;
 
     let mut t = Table::new("Table 4 — group-wise weight quantization",
                            &["method", "ppl"]);
     let fp = art.runner_prefill_only(QuantSpec::fp16_baseline(), None)?;
-    t.row(vec!["Baseline".into(),
-               format!("{:.4}", eval::perplexity(&fp, eval_toks, windows)?)]);
+    let p_base = eval::perplexity(&fp, eval_toks, windows)?;
+    chk.cell("Baseline", p_base)?;
+    t.row(vec!["Baseline".into(), format!("{p_base:.4}")]);
     drop(fp);
     // group sizes must divide every weight's input dim; tiny-mha: 256/1024
     for (label, group) in [("QuaRot (per-column)", 0usize),
@@ -33,8 +42,12 @@ fn main() -> Result<()> {
         };
         let runner = art.runner_prefill_only(spec, None)?;
         let p = eval::perplexity(&runner, eval_toks, windows)?;
+        chk.cell(label, p)?;
         println!("  {label:24} {p:.4}");
         t.row(vec![label.into(), format!("{p:.4}")]);
+    }
+    if chk.done() {
+        return Ok(());
     }
     record("table4_groupsize", &t.render())
 }

@@ -5,14 +5,22 @@
 
 use anyhow::Result;
 
-use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::bench_support::{record, Artifacts, CheckSink};
 use quarot::coordinator::runner::QuantSpec;
 use quarot::eval;
 use quarot::util::bench::Table;
 
 fn main() -> Result<()> {
-    let windows = eval_windows();
-    let art = Artifacts::load("tiny-mha")?;
+    let mut chk = CheckSink::new("table5_clipping");
+    let windows = chk.windows();
+    let art = match Artifacts::load("tiny-mha") {
+        Ok(a) => a,
+        Err(e) if chk.active() => {
+            println!("[check] table5_clipping skipped: {e}");
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
     let eval_toks = art.corpus.split("eval")?;
     let mut t = Table::new("Table 5 — clipping-ratio ablation",
                            &["what", "clip", "ppl"]);
@@ -25,6 +33,7 @@ fn main() -> Result<()> {
         };
         let runner = art.runner_prefill_only(spec, None)?;
         let p = eval::perplexity(&runner, eval_toks, windows)?;
+        chk.cell("input quant", p)?;
         println!("  acts clip {clip}: {p:.4}");
         t.row(vec!["input quant".into(), format!("{clip}"), format!("{p:.4}")]);
     }
@@ -37,8 +46,12 @@ fn main() -> Result<()> {
         };
         let runner = art.runner_prefill_only(spec, None)?;
         let p = eval::perplexity(&runner, eval_toks, windows)?;
+        chk.cell("KV quant", p)?;
         println!("  KV clip {clip}: {p:.4}");
         t.row(vec!["KV quant".into(), format!("{clip}"), format!("{p:.4}")]);
+    }
+    if chk.done() {
+        return Ok(());
     }
     record("table5_clipping", &t.render())
 }

@@ -4,13 +4,14 @@
 
 use anyhow::Result;
 
-use quarot::bench_support::{eval_windows, record, Artifacts};
+use quarot::bench_support::{record, Artifacts, CheckSink};
 use quarot::coordinator::runner::{QuantSpec, Variant};
 use quarot::eval;
 use quarot::util::bench::Table;
 
 fn main() -> Result<()> {
-    let windows = eval_windows();
+    let mut chk = CheckSink::new("table8_random_orth");
+    let windows = chk.windows();
     let mut t = Table::new("Table 8 — rotation matrix ablation (W4A4KV4 RTN)",
                            &["model", "rotation", "ppl"]);
     for model in ["tiny-mha", "tiny-gqa"] {
@@ -21,17 +22,23 @@ fn main() -> Result<()> {
         let eval_toks = art.corpus.split("eval")?;
         {
             let fp = art.runner_prefill_only(QuantSpec::fp16_baseline(), None)?;
+            let p = eval::perplexity(&fp, eval_toks, windows)?;
+            chk.cell("Baseline FP16", p)?;
             t.row(vec![model.into(), "Baseline FP16".into(),
-                       format!("{:.4}", eval::perplexity(&fp, eval_toks, windows)?)]);
+                       format!("{p:.4}")]);
         }
         for (label, variant) in [("QuaRot (Hadamard)", Variant::Quarot),
                                  ("QuaRot (Random orth.)", Variant::QuarotRandom)] {
             let spec = QuantSpec { variant, ..QuantSpec::quarot(4) };
             let runner = art.runner_prefill_only(spec, None)?;
             let p = eval::perplexity(&runner, eval_toks, windows)?;
+            chk.cell(label, p)?;
             println!("  [{model}] {label}: {p:.4}");
             t.row(vec![model.into(), label.into(), format!("{p:.4}")]);
         }
+    }
+    if chk.done() {
+        return Ok(());
     }
     record("table8_random_orth", &t.render())
 }

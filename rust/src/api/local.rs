@@ -87,6 +87,7 @@ pub struct LocalSession {
 }
 
 impl LocalSession {
+    /// Wrap an engine, applying the config's queue bound.
     pub fn new(mut engine: GenerationEngine, cfg: SessionConfig) -> LocalSession {
         engine.set_queue_bound(cfg.queue_bound);
         LocalSession {
@@ -141,10 +142,12 @@ impl LocalSession {
         self.core.borrow().engine.pending()
     }
 
+    /// Snapshot of the engine's cumulative counters.
     pub fn stats(&self) -> EngineStats {
         self.core.borrow().engine.stats.clone()
     }
 
+    /// KV pages currently allocated from the engine's page pool.
     pub fn pool_in_use(&self) -> usize {
         self.core.borrow().engine.pool_in_use()
     }

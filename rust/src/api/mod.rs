@@ -57,6 +57,7 @@ pub enum Priority {
 }
 
 impl Priority {
+    /// Number of priority classes (sizes per-class metric arrays).
     pub const COUNT: usize = 2;
 
     /// Stable class index (also the fair-queue class slot).
@@ -75,6 +76,7 @@ impl Priority {
         }
     }
 
+    /// Wire name of the class (inverse of [`Self::parse`]).
     pub fn as_str(self) -> &'static str {
         match self {
             Priority::Interactive => "interactive",
@@ -82,6 +84,7 @@ impl Priority {
         }
     }
 
+    /// Parse a wire name back to the class; `None` for unknown strings.
     pub fn parse(s: &str) -> Option<Priority> {
         Some(match s {
             "interactive" => Priority::Interactive,
@@ -118,6 +121,7 @@ pub enum QualityTier {
 }
 
 impl QualityTier {
+    /// Number of tiers (sizes per-tier metric arrays).
     pub const COUNT: usize = 2;
 
     /// Stable tier index (metrics slots).
@@ -145,6 +149,7 @@ impl QualityTier {
         }
     }
 
+    /// Wire name of the tier (inverse of [`Self::parse`]).
     pub fn as_str(self) -> &'static str {
         match self {
             QualityTier::Kv4 => "kv4",
@@ -152,6 +157,7 @@ impl QualityTier {
         }
     }
 
+    /// Parse a wire name back to the tier; `None` for unknown strings.
     pub fn parse(s: &str) -> Option<QualityTier> {
         Some(match s {
             "kv4" => QualityTier::Kv4,
@@ -201,6 +207,8 @@ pub struct GenerationParams {
 }
 
 impl GenerationParams {
+    /// Request with defaults: 32 new tokens, greedy sampling, no stop
+    /// token, `Interactive` priority, no deadline, tier from priority.
     pub fn new(prompt: Vec<u16>) -> GenerationParams {
         GenerationParams {
             prompt,
@@ -214,31 +222,39 @@ impl GenerationParams {
         }
     }
 
+    /// Builder: cap the number of generated tokens.
     pub fn max_new(mut self, n: usize) -> GenerationParams {
         self.max_new_tokens = n;
         self
     }
 
+    /// Builder: select the sampling strategy.
     pub fn sampling(mut self, s: Sampling) -> GenerationParams {
         self.sampling = s;
         self
     }
 
+    /// Builder: stop the stream when this token is sampled.
     pub fn stop_at(mut self, token: u16) -> GenerationParams {
         self.stop_token = Some(token);
         self
     }
 
+    /// Builder: set the admission class (scheduling weight).
     pub fn priority(mut self, p: Priority) -> GenerationParams {
         self.priority = p;
         self
     }
 
+    /// Builder: server-side deadline in ms from submission; a lapsed
+    /// request finishes with `DeadlineExceeded`.
     pub fn deadline(mut self, ms: u64) -> GenerationParams {
         self.deadline_ms = Some(ms);
         self
     }
 
+    /// Builder: pin the KV-cache precision tier explicitly (otherwise
+    /// it defaults from the priority class).
     pub fn tier(mut self, t: QualityTier) -> GenerationParams {
         self.tier = Some(t);
         self
@@ -317,6 +333,7 @@ pub enum FinishReason {
 }
 
 impl FinishReason {
+    /// Wire name of the reason (inverse of [`Self::parse`]).
     pub fn as_str(self) -> &'static str {
         match self {
             FinishReason::Stop => "stop",
@@ -327,6 +344,7 @@ impl FinishReason {
         }
     }
 
+    /// Parse a wire name back to the reason; `None` for unknown strings.
     pub fn parse(s: &str) -> Option<FinishReason> {
         Some(match s {
             "stop" => FinishReason::Stop,
@@ -385,6 +403,7 @@ pub enum GenerationEvent {
 }
 
 impl GenerationEvent {
+    /// `true` for `Finished`/`Failed` — no further event can follow.
     pub fn is_terminal(&self) -> bool {
         matches!(self,
                  GenerationEvent::Finished { .. } | GenerationEvent::Failed { .. })
@@ -457,6 +476,7 @@ impl RequestHandle {
         RequestHandle { id, src, done: Cell::new(false) }
     }
 
+    /// The request id this handle streams (for cancel-by-id and logs).
     pub fn id(&self) -> RequestId {
         self.id
     }

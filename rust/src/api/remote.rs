@@ -137,6 +137,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Open a TCP connection to a server on localhost.
     pub fn connect(port: u16) -> Result<Client> {
         let stream = TcpStream::connect(("127.0.0.1", port))?;
         let writer = stream.try_clone()?;
@@ -228,10 +229,12 @@ impl Client {
     pub fn stats(&mut self) -> Result<Value> {
         let mut core = self.core.borrow_mut();
         core.send(&wire::encode_cmd("stats"))?;
-        while core.stats.is_empty() {
+        loop {
+            if let Some(v) = core.stats.pop_front() {
+                return Ok(v);
+            }
             core.pump_one()?;
         }
-        Ok(core.stats.pop_front().unwrap())
     }
 
     /// Full cluster metrics (`{"v":2,"event":"metrics", ...}`) with the
@@ -239,10 +242,12 @@ impl Client {
     pub fn metrics(&mut self) -> Result<Value> {
         let mut core = self.core.borrow_mut();
         core.send(&wire::encode_cmd("metrics"))?;
-        while core.metrics.is_empty() {
+        loop {
+            if let Some(v) = core.metrics.pop_front() {
+                return Ok(v);
+            }
             core.pump_one()?;
         }
-        Ok(core.metrics.pop_front().unwrap())
     }
 
     /// Ask the server to shut down (engine + accept loops exit); resolves

@@ -67,6 +67,7 @@ use super::{FinishReason, GenerationEvent, GenerationParams, Priority,
             Sampling};
 use crate::util::json::{self, n, obj, Value};
 
+/// Wire protocol revision carried in every frame's `v` key.
 pub const PROTOCOL_VERSION: u32 = 2;
 
 fn tag(mut pairs: Vec<(&str, Value)>, event: &str) -> Value {
@@ -119,6 +120,8 @@ pub fn encode_event(id: RequestId, ev: &GenerationEvent, cid: Option<u64>)
     }
 }
 
+/// Admission failure for submit correlation id `cid` (the request never
+/// got an id or a stream).
 pub fn encode_rejected(cid: u64, err: &SubmitError) -> Value {
     let mut pairs = vec![("cid", n(cid as f64))];
     match err {
@@ -138,6 +141,7 @@ pub fn encode_rejected(cid: u64, err: &SubmitError) -> Value {
     tag(pairs, "rejected")
 }
 
+/// Aggregate counters reply (`{"cmd":"stats"}` answer).
 pub fn encode_stats(fields: Vec<(&str, Value)>) -> Value {
     tag(fields, "stats")
 }
@@ -147,6 +151,7 @@ pub fn encode_metrics(fields: Vec<(&str, Value)>) -> Value {
     tag(fields, "metrics")
 }
 
+/// Protocol-level error, optionally tied to a request id.
 pub fn encode_error(id: Option<RequestId>, error: &str) -> Value {
     let mut pairs = Vec::new();
     if let Some(id) = id {
@@ -156,6 +161,7 @@ pub fn encode_error(id: Option<RequestId>, error: &str) -> Value {
     tag(pairs, "error")
 }
 
+/// `{"cmd":"shutdown"}` acknowledgement (last frame before close).
 pub fn encode_shutdown_ack() -> Value {
     tag(vec![("ok", Value::Bool(true))], "shutdown")
 }
@@ -214,6 +220,7 @@ pub fn encode_chat(cid: u64, session: Option<u64>, p: &GenerationParams)
     obj(pairs)
 }
 
+/// Encode a cancel command for a previously-submitted request id.
 pub fn encode_cancel(id: RequestId) -> Value {
     obj(vec![
         ("v", n(PROTOCOL_VERSION as f64)),
@@ -222,6 +229,8 @@ pub fn encode_cancel(id: RequestId) -> Value {
     ])
 }
 
+/// Encode a bare command frame (`stats`, `metrics`, `flush-prefix`,
+/// `shutdown`).
 pub fn encode_cmd(cmd: &str) -> Value {
     obj(vec![("v", n(PROTOCOL_VERSION as f64)), ("cmd", json::s(cmd))])
 }
@@ -280,6 +289,8 @@ pub enum ClientFrame {
     LegacyGenerate { params: GenerationParams },
 }
 
+/// Classify one client→server JSON line (v2 commands plus the v1 bare
+/// `{"prompt": ...}` form).
 pub fn parse_client_frame(v: &Value) -> Result<ClientFrame> {
     match v.get("cmd").and_then(|c| c.as_str()) {
         Some("submit") => Ok(ClientFrame::Submit {
@@ -333,6 +344,7 @@ pub enum ServerFrame {
     Shutdown,
 }
 
+/// Classify one server→client JSON line by its `event` key.
 pub fn parse_server_frame(v: &Value) -> Result<ServerFrame> {
     let kind = v.get("event").and_then(|e| e.as_str())
         .context("frame missing event")?;
@@ -665,9 +677,13 @@ mod tests {
             reason: FinishReason::Stop, stats: stats.clone(),
         };
         let line = json::write(&encode_event(7, &ev, None));
-        let tps = line.find("tokens_per_sec").expect("pre-session key");
-        let sess = line.find("\"session\"").expect("session key");
-        assert!(sess > tps, "session must append after tokens_per_sec: {line}");
+        // NB: util::json serializes objects in BTreeMap (alphabetical)
+        // order, so byte position says nothing about append order.  The
+        // append-after contract lives in the SOURCE pair list, enforced
+        // by quarot-lint against tests/golden/wire_keys.txt; here we
+        // check the key rides the frame alongside every pre-session key.
+        assert!(line.contains("tokens_per_sec"), "pre-session key: {line}");
+        assert!(line.contains("\"session\""), "session key: {line}");
         match parse_server_frame(&json::parse(&line).unwrap()).unwrap() {
             ServerFrame::Event { event: GenerationEvent::Finished {
                 stats: got, .. }, .. } => assert_eq!(got.session, Some(12)),

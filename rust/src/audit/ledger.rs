@@ -1,0 +1,231 @@
+//! Refcount ledger: *who* holds every page of a
+//! [`crate::coordinator::kvcache::PagePool`].
+//!
+//! The pool's refcounts say how many references a page has; the ledger
+//! says whose they are.  Debug builds charge every `alloc`/`retain` to
+//! the ambient *owner label* — set with [`owner`] RAII scopes around
+//! the admission, donation and eviction paths (`"seq:<id>"`,
+//! `"prefix:node<slot>"`, `"session:<sid>"`) — one label per
+//! outstanding reference, and every `release` removes one.  A leak then
+//! reports the holders by name instead of a bare page count, through
+//! `PagePool::assert_drained` at the end of the existing leak smokes.
+//!
+//! Release builds carry a zero-sized [`PageLedger`] and skip the label
+//! formatting entirely (the [`owner`] closure never runs).
+
+#[cfg(debug_assertions)]
+use std::cell::RefCell;
+#[cfg(debug_assertions)]
+use std::collections::HashMap;
+
+#[cfg(debug_assertions)]
+thread_local! {
+    static OWNER: RefCell<Vec<String>> = RefCell::new(Vec::new());
+}
+
+/// RAII owner scope: pages allocated or retained while this is live are
+/// charged to its label.  Scopes nest; the innermost label wins.
+pub struct OwnerScope {
+    _priv: (),
+}
+
+/// Enter an owner scope.  The label closure runs only in debug builds,
+/// so release callers pay neither the `format!` nor the allocation.
+pub fn owner<F: FnOnce() -> String>(label: F) -> OwnerScope {
+    #[cfg(debug_assertions)]
+    OWNER.with(|o| o.borrow_mut().push(label()));
+    #[cfg(not(debug_assertions))]
+    let _ = label;
+    OwnerScope { _priv: () }
+}
+
+impl Drop for OwnerScope {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        OWNER.with(|o| {
+            o.borrow_mut().pop();
+        });
+    }
+}
+
+#[cfg(debug_assertions)]
+fn current_owner() -> String {
+    OWNER.with(|o| {
+        o.borrow().last().cloned().unwrap_or_else(|| "untagged".to_string())
+    })
+}
+
+/// Per-pool ledger mapping page index → outstanding owner labels (one
+/// per live reference).  Inert and field-free in release builds.
+#[derive(Default)]
+pub struct PageLedger {
+    #[cfg(debug_assertions)]
+    held: HashMap<usize, Vec<String>>,
+}
+
+impl PageLedger {
+    /// An empty ledger (every page unreferenced).
+    pub fn new() -> PageLedger {
+        PageLedger::default()
+    }
+
+    /// A fresh allocation: the page's first reference, charged to the
+    /// current owner scope.
+    pub fn on_alloc(&mut self, page: usize) {
+        #[cfg(debug_assertions)]
+        self.held.entry(page).or_default().push(current_owner());
+        #[cfg(not(debug_assertions))]
+        let _ = page;
+    }
+
+    /// An additional reference (CoW graft, donation), charged to the
+    /// current owner scope.
+    pub fn on_retain(&mut self, page: usize) {
+        #[cfg(debug_assertions)]
+        self.held.entry(page).or_default().push(current_owner());
+        #[cfg(not(debug_assertions))]
+        let _ = page;
+    }
+
+    /// One reference dropped.  Prefers removing a label matching the
+    /// current owner scope (so symmetric retain/release pairs cancel
+    /// exactly); otherwise the oldest label goes, keeping the most
+    /// recent — most diagnostic — holders on a leak report.
+    pub fn on_release(&mut self, page: usize) {
+        #[cfg(debug_assertions)]
+        {
+            if let Some(labels) = self.held.get_mut(&page) {
+                let me = current_owner();
+                let pos = labels.iter().rposition(|l| *l == me).unwrap_or(0);
+                if !labels.is_empty() {
+                    labels.remove(pos);
+                }
+                if labels.is_empty() {
+                    self.held.remove(&page);
+                }
+            }
+        }
+        #[cfg(not(debug_assertions))]
+        let _ = page;
+    }
+
+    /// Outstanding `(page, owners)` pairs, page-ordered.  Always empty
+    /// in release builds.
+    pub fn outstanding(&self) -> Vec<(usize, Vec<String>)> {
+        #[cfg(debug_assertions)]
+        {
+            let mut v: Vec<(usize, Vec<String>)> =
+                self.held.iter().map(|(&p, ls)| (p, ls.clone())).collect();
+            v.sort_by_key(|&(p, _)| p);
+            v
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            Vec::new()
+        }
+    }
+
+    /// Live references still on the books (0 in release builds).
+    pub fn live_refs(&self) -> usize {
+        #[cfg(debug_assertions)]
+        {
+            self.held.values().map(Vec::len).sum()
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            0
+        }
+    }
+
+    /// Panic with the per-owner breakdown if any reference is live.
+    /// No-op in release builds (the pool's own `in_use` check still
+    /// runs there — see `PagePool::assert_drained`).
+    pub fn assert_drained(&self, context: &str) {
+        #[cfg(debug_assertions)]
+        {
+            if !self.held.is_empty() {
+                let mut lines = String::new();
+                for (page, owners) in self.outstanding() {
+                    lines.push_str(&format!(
+                        "\n  page {page}: held by {owners:?}"));
+                }
+                panic!("page ledger leak ({context}): {} page(s) still \
+                        referenced{lines}",
+                       self.held.len());
+            }
+        }
+        #[cfg(not(debug_assertions))]
+        let _ = context;
+    }
+
+    /// Forget all bookkeeping (pool teardown paths).
+    pub fn clear(&mut self) {
+        #[cfg(debug_assertions)]
+        self.held.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_traffic_drains() {
+        let mut led = PageLedger::new();
+        {
+            let _o = owner(|| "seq:1".to_string());
+            led.on_alloc(3);
+            led.on_retain(3);
+        }
+        {
+            let _o = owner(|| "seq:1".to_string());
+            led.on_release(3);
+            led.on_release(3);
+        }
+        assert_eq!(led.live_refs(), 0);
+        led.assert_drained("balanced test");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn release_cancels_the_matching_owner_first() {
+        let mut led = PageLedger::new();
+        {
+            let _a = owner(|| "prefix:node0".to_string());
+            led.on_alloc(9);
+        }
+        {
+            let _b = owner(|| "seq:7".to_string());
+            led.on_retain(9);
+            led.on_release(9); // cancels seq:7, not prefix:node0
+        }
+        let out = led.outstanding();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1, vec!["prefix:node0".to_string()]);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn nested_scopes_innermost_wins_and_unwinds() {
+        let _outer = owner(|| "session:4".to_string());
+        let mut led = PageLedger::new();
+        {
+            let _inner = owner(|| "seq:2".to_string());
+            led.on_alloc(0);
+        }
+        led.on_alloc(1);
+        let out = led.outstanding();
+        assert_eq!(out[0].1, vec!["seq:2".to_string()]);
+        assert_eq!(out[1].1, vec!["session:4".to_string()]);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "page ledger leak")]
+    fn leak_reports_the_holder_by_name() {
+        let mut led = PageLedger::new();
+        let _o = owner(|| "seq:42".to_string());
+        led.on_alloc(5);
+        led.assert_drained("deliberate leak");
+    }
+}

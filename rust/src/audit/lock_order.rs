@@ -1,0 +1,457 @@
+//! Lock-order (deadlock-potential) detector — a lockdep-lite.
+//!
+//! Debug builds keep, per thread, the stack of audit *classes* (named
+//! locks or critical sections) currently held.  The first time class
+//! `B` is acquired while `A` is held, the edge `A → B` enters a global
+//! order graph together with a witness (thread name + held chain).  If
+//! inserting an edge would close a cycle, the process panics
+//! immediately, reporting the new acquisition chain *and* the recorded
+//! witness of every edge on the conflicting path — so the schedule that
+//! would deadlock is caught on the first run that merely establishes
+//! both orders, not the unlucky run that interleaves them.
+//!
+//! Classes are interned by name: all locks sharing a name are one
+//! class, and same-class edges are ignored, so re-entry across distinct
+//! objects of one class (e.g. two `PagePool`s) is not flagged.
+//!
+//! Release builds compile all tracking to no-ops; [`AuditedMutex`]
+//! degenerates to a plain poison-policy wrapper over
+//! [`std::sync::Mutex`] and [`LockScope`] to a zero-work marker.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(debug_assertions)]
+use std::cell::RefCell;
+#[cfg(debug_assertions)]
+use std::collections::HashMap;
+#[cfg(debug_assertions)]
+use std::sync::OnceLock;
+
+/// Interned id of one lock class (see the module docs for class
+/// semantics).  Opaque; obtained by [`LockScope::enter`] and
+/// [`AuditedMutex`] internally.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct ClassId(u32);
+
+#[cfg(debug_assertions)]
+#[derive(Default)]
+struct Registry {
+    ids: HashMap<&'static str, u32>,
+    names: Vec<&'static str>,
+    /// `(from, to)` → witness chain that first recorded the edge.
+    edges: HashMap<(u32, u32), String>,
+    /// Adjacency of `edges` for the cycle check.
+    out: HashMap<u32, Vec<u32>>,
+}
+
+#[cfg(debug_assertions)]
+impl Registry {
+    fn name(&self, id: u32) -> &'static str {
+        self.names.get(id as usize).copied().unwrap_or("?")
+    }
+
+    /// Some path `src → … → dst` through recorded edges, if any.
+    fn path(&self, src: u32, dst: u32) -> Option<Vec<u32>> {
+        let mut parent: HashMap<u32, u32> = HashMap::new();
+        let mut stack = vec![src];
+        while let Some(n) = stack.pop() {
+            if n == dst {
+                let mut p = vec![dst];
+                let mut cur = dst;
+                while cur != src {
+                    match parent.get(&cur) {
+                        Some(&prev) => {
+                            p.push(prev);
+                            cur = prev;
+                        }
+                        None => break,
+                    }
+                }
+                p.reverse();
+                return Some(p);
+            }
+            for &next in self.out.get(&n).map(Vec::as_slice).unwrap_or(&[]) {
+                if next != src && !parent.contains_key(&next) {
+                    parent.insert(next, n);
+                    stack.push(next);
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(debug_assertions)]
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Registry::default()))
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    static HELD: RefCell<Vec<ClassId>> = RefCell::new(Vec::new());
+}
+
+#[cfg(debug_assertions)]
+fn intern(name: &'static str) -> ClassId {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(&id) = reg.ids.get(name) {
+        return ClassId(id);
+    }
+    let id = reg.names.len() as u32;
+    reg.names.push(name);
+    reg.ids.insert(name, id);
+    ClassId(id)
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+fn intern(_name: &'static str) -> ClassId {
+    ClassId(0)
+}
+
+/// Record edges `held[i] → class` and cycle-check each new one.  The
+/// panic message (if any) is built under the registry lock but raised
+/// after releasing it, so the registry stays usable for other threads'
+/// reports.
+#[cfg(debug_assertions)]
+fn record_edges(held: &[ClassId], class: ClassId) {
+    let witness = {
+        let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+        let chain: Vec<&str> =
+            held.iter().map(|&ClassId(h)| reg.name(h)).collect();
+        format!("thread '{}' held [{}] while acquiring '{}'",
+                std::thread::current().name().unwrap_or("<unnamed>"),
+                chain.join(" -> "), reg.name(class.0))
+    };
+    let mut failure: Option<String> = None;
+    {
+        let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+        let mut seen_from: Vec<u32> = Vec::new();
+        for &ClassId(from) in held {
+            if from == class.0 || seen_from.contains(&from) {
+                continue;
+            }
+            seen_from.push(from);
+            if reg.edges.contains_key(&(from, class.0)) {
+                continue;
+            }
+            // inserting from → class closes a cycle iff class already
+            // reaches from
+            if let Some(p) = reg.path(class.0, from) {
+                let mut msg = format!(
+                    "lock-order cycle: acquiring '{}' while holding '{}' \
+                     adds '{}' -> '{}', but the reverse order is already \
+                     recorded:\n  new: {}",
+                    reg.name(class.0), reg.name(from), reg.name(from),
+                    reg.name(class.0), witness);
+                for w in p.windows(2) {
+                    let recorded = reg.edges.get(&(w[0], w[1]))
+                        .map(String::as_str)
+                        .unwrap_or("<missing witness>");
+                    msg.push_str(&format!("\n  recorded '{}' -> '{}': {}",
+                                          reg.name(w[0]), reg.name(w[1]),
+                                          recorded));
+                }
+                failure = Some(msg);
+                break;
+            }
+            reg.edges.insert((from, class.0), witness.clone());
+            reg.out.entry(from).or_default().push(class.0);
+        }
+    }
+    if let Some(msg) = failure {
+        panic!("{msg}");
+    }
+}
+
+#[cfg(debug_assertions)]
+fn on_acquire(class: ClassId) {
+    let held: Vec<ClassId> = HELD.with(|h| h.borrow().clone());
+    if !held.is_empty() {
+        record_edges(&held, class);
+    }
+    HELD.with(|h| h.borrow_mut().push(class));
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+fn on_acquire(_class: ClassId) {}
+
+#[cfg(debug_assertions)]
+fn on_release(class: ClassId) {
+    HELD.with(|h| {
+        let mut v = h.borrow_mut();
+        if let Some(pos) = v.iter().rposition(|&c| c == class) {
+            v.remove(pos);
+        }
+    });
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+fn on_release(_class: ClassId) {}
+
+/// Classes currently held by this thread (debug builds; empty in
+/// release).  For tests and diagnostics.
+pub fn held_depth() -> usize {
+    #[cfg(debug_assertions)]
+    {
+        HELD.with(|h| h.borrow().len())
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        0
+    }
+}
+
+/// A [`Mutex`] wrapped with lock-order auditing (debug builds) and an
+/// explicit poison policy per call site.
+pub struct AuditedMutex<T> {
+    name: &'static str,
+    inner: Mutex<T>,
+}
+
+impl<T> AuditedMutex<T> {
+    /// `name` is the lock's audit class (shared by all locks with the
+    /// same name — see the module docs).
+    pub const fn new(name: &'static str, value: T) -> AuditedMutex<T> {
+        AuditedMutex { name, inner: Mutex::new(value) }
+    }
+
+    /// The lock's audit-class name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Lock, panicking if a previous holder panicked mid-update
+    /// (poison): for state that cannot be trusted after a partial
+    /// mutation.
+    pub fn lock(&self) -> AuditedGuard<'_, T> {
+        let class = intern(self.name);
+        on_acquire(class);
+        match self.inner.lock() {
+            Ok(guard) => AuditedGuard { guard: Some(guard), class },
+            Err(_) => {
+                on_release(class);
+                panic!("lock '{}' poisoned by a panicking holder", self.name);
+            }
+        }
+    }
+
+    /// Lock, clearing poison: for state that stays consistent across a
+    /// holder's panic (flags, fully-reassigned values, monotone sets) —
+    /// a panicking peer must not take the whole subsystem down with it.
+    pub fn lock_recover(&self) -> AuditedGuard<'_, T> {
+        let class = intern(self.name);
+        on_acquire(class);
+        let guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        AuditedGuard { guard: Some(guard), class }
+    }
+
+    /// [`Condvar`] wait through the audit layer: the class is released
+    /// while parked (the lock is genuinely not held) and re-acquired on
+    /// wake, so blocked waiters never look like lock holders in the
+    /// order graph.  Poison on the wakeup re-acquire is cleared,
+    /// matching [`Self::lock_recover`].
+    pub fn wait_on<'a>(&'a self, mut held: AuditedGuard<'a, T>, cv: &Condvar)
+                       -> AuditedGuard<'a, T> {
+        let class = held.class;
+        let Some(inner) = held.guard.take() else {
+            unreachable!("audited guard lost its inner guard before drop")
+        };
+        on_release(class);
+        let inner = match cv.wait(inner) {
+            Ok(g) => g,
+            Err(e) => e.into_inner(),
+        };
+        on_acquire(class);
+        AuditedGuard { guard: Some(inner), class }
+    }
+}
+
+/// Guard returned by [`AuditedMutex`]; releases the audit class on
+/// drop.
+pub struct AuditedGuard<'a, T> {
+    guard: Option<MutexGuard<'a, T>>,
+    class: ClassId,
+}
+
+impl<T> Deref for AuditedGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        match &self.guard {
+            Some(g) => g,
+            None => unreachable!("audited guard accessed after wait_on"),
+        }
+    }
+}
+
+impl<T> DerefMut for AuditedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        match &mut self.guard {
+            Some(g) => g,
+            None => unreachable!("audited guard accessed after wait_on"),
+        }
+    }
+}
+
+impl<T> Drop for AuditedGuard<'_, T> {
+    fn drop(&mut self) {
+        // wait_on takes the inner guard out before handing it to the
+        // condvar; only a guard that still owns the lock releases the
+        // audit class
+        if self.guard.take().is_some() {
+            on_release(self.class);
+        }
+    }
+}
+
+/// RAII audit marker for a critical section that is not a literal
+/// mutex — an engine tick, a subsystem entry point — so its ordering
+/// against real locks still lands in the order graph.  Re-entering the
+/// same class nests without recording a self-edge.
+#[must_use = "the scope audits only while it is held"]
+pub struct LockScope {
+    class: ClassId,
+}
+
+impl LockScope {
+    /// Enter the named critical section until the scope drops.
+    pub fn enter(name: &'static str) -> LockScope {
+        let class = intern(name);
+        on_acquire(class);
+        LockScope { class }
+    }
+}
+
+impl Drop for LockScope {
+    fn drop(&mut self) {
+        on_release(self.class);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    // NOTE: the order graph is process-global and `cargo test` runs
+    // tests concurrently, so every test here uses class names unique to
+    // itself ("test.<case>.<lock>") — consistent with each other and
+    // disjoint from the production classes.
+
+    #[test]
+    fn consistent_order_is_silent_and_stack_balances() {
+        let a = AuditedMutex::new("test.consistent.a", 1u32);
+        let b = AuditedMutex::new("test.consistent.b", 2u32);
+        for _ in 0..3 {
+            let ga = a.lock();
+            let gb = b.lock();
+            assert_eq!(*ga + *gb, 3);
+            drop(gb);
+            drop(ga);
+        }
+        assert_eq!(held_depth(), 0, "release must pop the held stack");
+    }
+
+    #[test]
+    fn scopes_and_mutexes_share_one_graph() {
+        let m = AuditedMutex::new("test.scope.m", ());
+        let s = LockScope::enter("test.scope.outer");
+        let g = m.lock();
+        assert!(held_depth() >= 2);
+        drop(g);
+        drop(s);
+        assert_eq!(held_depth(), 0);
+    }
+
+    #[test]
+    fn same_class_reentry_is_not_a_cycle() {
+        // two distinct pools of one class, nested: lockdep-style class
+        // semantics say this is one class and self-edges are ignored
+        let p1 = AuditedMutex::new("test.reentry.pool", 0u8);
+        let p2 = AuditedMutex::new("test.reentry.pool", 0u8);
+        let g1 = p1.lock();
+        let g2 = p2.lock();
+        drop(g2);
+        drop(g1);
+        assert_eq!(held_depth(), 0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock-order cycle")]
+    fn reversed_order_panics_with_both_witnesses() {
+        let a = AuditedMutex::new("test.cycle.a", ());
+        let b = AuditedMutex::new("test.cycle.b", ());
+        {
+            let _ga = a.lock();
+            let _gb = b.lock(); // records a -> b
+        }
+        let _gb = b.lock();
+        let _ga = a.lock(); // b -> a closes the cycle: must panic
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock-order cycle")]
+    fn transitive_cycle_is_detected() {
+        let a = AuditedMutex::new("test.chain.a", ());
+        let b = AuditedMutex::new("test.chain.b", ());
+        let c = AuditedMutex::new("test.chain.c", ());
+        {
+            let _ga = a.lock();
+            let _gb = b.lock(); // a -> b
+        }
+        {
+            let _gb = b.lock();
+            let _gc = c.lock(); // b -> c
+        }
+        let _gc = c.lock();
+        let _ga = a.lock(); // c -> a closes a 3-cycle through b
+    }
+
+    #[test]
+    fn wait_on_releases_the_class_while_parked() {
+        let m = Arc::new(AuditedMutex::new("test.wait.m", false));
+        let cv = Arc::new(Condvar::new());
+        let (m2, cv2) = (m.clone(), cv.clone());
+        let waiter = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            while !*g {
+                g = m2.wait_on(g, &cv2);
+            }
+            assert_eq!(held_depth(), 1, "woken waiter holds the class");
+            drop(g);
+            assert_eq!(held_depth(), 0);
+        });
+        loop {
+            let mut g = m.lock();
+            *g = true;
+            cv.notify_all();
+            drop(g);
+            if waiter.is_finished() {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        if let Err(e) = waiter.join() {
+            std::panic::resume_unwind(e);
+        }
+    }
+
+    #[test]
+    fn lock_recover_clears_poison() {
+        let m = Arc::new(AuditedMutex::new("test.poison.m", 7u32));
+        let m2 = m.clone();
+        let t = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison the lock on purpose");
+        });
+        assert!(t.join().is_err());
+        assert_eq!(*m.lock_recover(), 7, "recover must see the value");
+    }
+}

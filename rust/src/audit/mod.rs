@@ -1,0 +1,34 @@
+//! Debug-gated runtime invariant auditors for the concurrent subsystems.
+//!
+//! Everything in this module is active only under `debug_assertions`
+//! (i.e. `cargo test` and dev builds); release builds compile every
+//! tracker to a no-op so the serving hot paths pay nothing.  Three
+//! auditors cover the invariants that PRs 1–7 enforced by convention:
+//!
+//! * [`lock_order`] — a lockdep-lite: every named lock / critical
+//!   section ([`AuditedMutex`], [`LockScope`]) feeds a global
+//!   acquisition-order graph, and the first cycle (a schedule that
+//!   *could* deadlock) panics with both witness chains — on the run
+//!   that merely establishes the order, not the unlucky interleaving.
+//! * [`ledger`] — a refcount ledger for `coordinator::kvcache::PagePool`:
+//!   every alloc/retain is charged to the ambient [`owner`] label
+//!   (seq id, prefix node, session chain), so a leaked page reports
+//!   *who* held it, and `PagePool::assert_drained` turns the existing
+//!   end-of-test pool checks into ledger-backed ones.
+//! * [`pins`] — a mirror of `coordinator::prefix::PrefixCache` pin
+//!   stacking: counts never go negative, `clear()` zeroes them, and
+//!   saturating unpins on live nodes are tallied for the opt-in
+//!   [`PinAudit::assert_balanced`] check.
+//!
+//! The companion *static* checks live in the `quarot-lint` binary
+//! (`rust/src/bin/quarot-lint.rs`): wire-key append-only order against
+//! `tests/golden/wire_keys.txt`, no `unwrap`/`expect` on non-test hot
+//! paths, bench `--check` gates, and doc coverage of the public API.
+
+pub mod ledger;
+pub mod lock_order;
+pub mod pins;
+
+pub use ledger::{owner, OwnerScope, PageLedger};
+pub use lock_order::{AuditedGuard, AuditedMutex, LockScope};
+pub use pins::PinAudit;

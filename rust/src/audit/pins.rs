@@ -1,0 +1,210 @@
+//! Pin-balance auditor for
+//! [`crate::coordinator::prefix::PrefixCache`] chain pins.
+//!
+//! The trie's `pin_chain`/`unpin_chain` counts are *stacking*: several
+//! sessions may pin a shared chain, and unpins on nodes that were never
+//! pinned (or already unpinned) deliberately saturate at zero — stale
+//! unpins after an eviction must stay harmless no-ops.  That tolerance
+//! makes genuine imbalance invisible at runtime, so the auditor keeps
+//! an independent mirror of every node's pin count plus a tally of
+//! saturating unpins on *live* nodes, and tests opt into strictness via
+//! [`PinAudit::assert_balanced`]:
+//!
+//! * mirror counts can never go negative (saturation is tallied, not
+//!   wrapped);
+//! * `clear()` must zero every count (forced evictions reset the
+//!   mirror);
+//! * LRU eviction of a still-pinned node panics immediately — the trie
+//!   promises pinned chains survive eviction.
+//!
+//! Unpins on *evicted* nodes never reach the auditor at all: the
+//! chain walk stops at the missing child, which is exactly the no-op
+//! the trie documents.  Release builds compile everything to no-ops.
+
+#[cfg(debug_assertions)]
+use std::collections::HashMap;
+
+/// Mirror of the prefix trie's per-node pin counts (keyed by node slot
+/// index), independent of the trie's own bookkeeping.  Zero-sized and
+/// inert in release builds.
+#[derive(Default)]
+pub struct PinAudit {
+    #[cfg(debug_assertions)]
+    counts: HashMap<usize, u32>,
+    #[cfg(debug_assertions)]
+    underflows: u64,
+}
+
+impl PinAudit {
+    /// A fresh, balanced auditor.
+    pub fn new() -> PinAudit {
+        PinAudit::default()
+    }
+
+    /// A node slot was (re)created.  Slot indices are recycled after
+    /// eviction, so the mirror entry starts fresh at zero.
+    pub fn on_insert(&mut self, node: usize) {
+        #[cfg(debug_assertions)]
+        self.counts.insert(node, 0);
+        #[cfg(not(debug_assertions))]
+        let _ = node;
+    }
+
+    /// A pin landed on `node`; `pins` is the trie's count *after* the
+    /// increment, cross-checked against the mirror.
+    pub fn on_pin(&mut self, node: usize, pins: u32) {
+        #[cfg(debug_assertions)]
+        {
+            let c = self.counts.entry(node).or_insert(0);
+            *c += 1;
+            assert_eq!(*c, pins,
+                       "pin mirror diverged on node {node}: audit {c} vs \
+                        trie {pins}");
+        }
+        #[cfg(not(debug_assertions))]
+        let _ = (node, pins);
+    }
+
+    /// An unpin landed on a live `node`.  `saturated` means the trie
+    /// found the count already at zero — tolerated at runtime, tallied
+    /// for [`Self::assert_balanced`]; the mirror itself never goes
+    /// below zero.
+    pub fn on_unpin(&mut self, node: usize, saturated: bool) {
+        #[cfg(debug_assertions)]
+        {
+            if saturated {
+                self.underflows += 1;
+            } else if let Some(c) = self.counts.get_mut(&node) {
+                *c = c.saturating_sub(1);
+            }
+        }
+        #[cfg(not(debug_assertions))]
+        let _ = (node, saturated);
+    }
+
+    /// `node` left the trie.  Normal (LRU / pressure) eviction requires
+    /// a pin-free node; `forced` eviction (`clear()`) zeroes the mirror
+    /// no matter the count.
+    pub fn on_evict(&mut self, node: usize, forced: bool) {
+        #[cfg(debug_assertions)]
+        {
+            if let Some(c) = self.counts.remove(&node) {
+                assert!(forced || c == 0,
+                        "evicting node {node} with {c} live pin(s)");
+            }
+        }
+        #[cfg(not(debug_assertions))]
+        let _ = (node, forced);
+    }
+
+    /// The trie was cleared wholesale: every mirror count resets.
+    pub fn on_clear(&mut self) {
+        #[cfg(debug_assertions)]
+        {
+            self.counts.clear();
+            self.underflows = 0;
+        }
+    }
+
+    /// Saturating unpins observed on live nodes (0 in release builds).
+    pub fn underflows(&self) -> u64 {
+        #[cfg(debug_assertions)]
+        {
+            self.underflows
+        }
+        #[cfg(not(debug_assertions))]
+        {
+            0
+        }
+    }
+
+    /// Opt-in strict check for tests: every mirror count is back at
+    /// zero and no live-node unpin ever hit an already-zero count.
+    /// No-op in release builds.
+    pub fn assert_balanced(&self) {
+        #[cfg(debug_assertions)]
+        {
+            let mut pinned: Vec<(usize, u32)> = self.counts.iter()
+                .filter(|&(_, &c)| c > 0)
+                .map(|(&n, &c)| (n, c))
+                .collect();
+            pinned.sort_unstable();
+            assert!(pinned.is_empty() && self.underflows == 0,
+                    "pin audit unbalanced: {} node(s) still pinned {:?}, \
+                     {} unpin underflow(s)",
+                    pinned.len(), pinned, self.underflows);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stacked_pins_balance_out() {
+        let mut audit = PinAudit::new();
+        audit.on_insert(0);
+        audit.on_pin(0, 1);
+        audit.on_pin(0, 2); // two sessions share the node
+        audit.on_unpin(0, false);
+        audit.on_unpin(0, false);
+        audit.on_evict(0, false);
+        audit.assert_balanced();
+    }
+
+    #[test]
+    fn slot_reuse_resets_the_mirror() {
+        let mut audit = PinAudit::new();
+        audit.on_insert(3);
+        audit.on_pin(3, 1);
+        audit.on_unpin(3, false);
+        audit.on_evict(3, false);
+        // the slot index comes back for a brand-new node
+        audit.on_insert(3);
+        audit.on_pin(3, 1); // trie count restarts at 1: mirror must too
+        audit.on_unpin(3, false);
+        audit.assert_balanced();
+    }
+
+    #[test]
+    fn forced_clear_zeroes_pinned_mirrors() {
+        let mut audit = PinAudit::new();
+        audit.on_insert(1);
+        audit.on_pin(1, 1);
+        audit.on_evict(1, true); // clear() path: pinned but forced
+        audit.on_clear();
+        audit.assert_balanced();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "pin audit unbalanced")]
+    fn saturating_unpin_fails_the_strict_check() {
+        let mut audit = PinAudit::new();
+        audit.on_insert(0);
+        audit.on_pin(0, 1);
+        audit.on_unpin(0, false);
+        audit.on_unpin(0, true); // live node, count already zero
+        audit.assert_balanced();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "live pin(s)")]
+    fn lru_evicting_a_pinned_node_panics() {
+        let mut audit = PinAudit::new();
+        audit.on_insert(2);
+        audit.on_pin(2, 1);
+        audit.on_evict(2, false); // unforced eviction of a pinned node
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "pin mirror diverged")]
+    fn mirror_divergence_is_caught_at_the_pin() {
+        let mut audit = PinAudit::new();
+        audit.on_insert(0);
+        audit.on_pin(0, 5); // trie claims 5, mirror says 1
+    }
+}

@@ -14,8 +14,10 @@
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, OnceLock};
 use std::thread;
+
+use crate::audit::AuditedMutex;
 
 type Task = dyn Fn(usize) + Sync;
 
@@ -39,7 +41,7 @@ struct State {
 }
 
 struct Shared {
-    state: Mutex<State>,
+    state: AuditedMutex<State>,
     work: Condvar,
     done: Condvar,
     next_chunk: AtomicUsize,
@@ -51,8 +53,10 @@ thread_local! {
 
 pub struct WorkerPool {
     shared: Arc<Shared>,
-    /// Serializes job submission (one job in flight at a time).
-    submit: Mutex<()>,
+    /// Serializes job submission (one job in flight at a time).  The
+    /// submit → state nesting in [`Self::run`] is the pool's one lock
+    /// order, recorded by the audit layer in debug builds.
+    submit: AuditedMutex<()>,
     lanes: usize,
     handles: Vec<thread::JoinHandle<()>>,
 }
@@ -63,7 +67,7 @@ impl WorkerPool {
     pub fn new(lanes: usize) -> WorkerPool {
         let lanes = lanes.max(1);
         let shared = Arc::new(Shared {
-            state: Mutex::new(State {
+            state: AuditedMutex::new("backend.pool.state", State {
                 job: None,
                 seq: 0,
                 remaining: 0,
@@ -82,7 +86,12 @@ impl WorkerPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        WorkerPool { shared, submit: Mutex::new(()), lanes, handles }
+        WorkerPool {
+            shared,
+            submit: AuditedMutex::new("backend.pool.submit", ()),
+            lanes,
+            handles,
+        }
     }
 
     /// Total execution lanes (submitter + workers).
@@ -112,14 +121,14 @@ impl WorkerPool {
         // mutex on unwind; the guarded section holds no invariant-bearing
         // state (it only serializes submissions), so clear the poison
         // instead of bricking the process-global pool.
-        let _guard = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        let _guard = self.submit.lock_recover();
         // SAFETY: workers dereference `task` only while `remaining > 0`,
         // and `JoinGuard` blocks — even on unwind from a panicking chunk
         // on this thread — until `remaining == 0`, so `f` strictly
         // outlives every use.
         let task: &'static Task = unsafe { std::mem::transmute::<&Task, &'static Task>(f) };
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state.lock();
             self.shared.next_chunk.store(0, Ordering::SeqCst);
             st.job = Some(Job { task, n_chunks });
             st.seq = st.seq.wrapping_add(1);
@@ -150,9 +159,9 @@ struct JoinGuard<'a>(&'a Shared);
 impl Drop for JoinGuard<'_> {
     fn drop(&mut self) {
         IN_PARALLEL.with(|p| p.set(false));
-        let mut st = self.0.state.lock().unwrap();
+        let mut st = self.0.state.lock();
         while st.remaining > 0 {
-            st = self.0.done.wait(st).unwrap();
+            st = self.0.state.wait_on(st, &self.0.done);
         }
         st.job = None;
     }
@@ -161,7 +170,7 @@ impl Drop for JoinGuard<'_> {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.shared.state.lock();
             st.shutdown = true;
             self.shared.work.notify_all();
         }
@@ -177,7 +186,7 @@ fn worker_loop(shared: Arc<Shared>) {
     loop {
         let job;
         {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.state.lock();
             loop {
                 if st.shutdown {
                     return;
@@ -189,7 +198,7 @@ fn worker_loop(shared: Arc<Shared>) {
                         break;
                     }
                 }
-                st = shared.work.wait(st).unwrap();
+                st = shared.state.wait_on(st, &shared.work);
             }
         }
         loop {
@@ -208,7 +217,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 std::process::abort();
             }
         }
-        let mut st = shared.state.lock().unwrap();
+        let mut st = shared.state.lock();
         st.remaining -= 1;
         if st.remaining == 0 {
             shared.done.notify_all();

@@ -26,6 +26,61 @@ pub fn probe_items() -> usize {
         .unwrap_or(40)
 }
 
+/// `-- --check` CI accounting shared by the table benches: a reduced
+/// eval budget, a finiteness gate on every metric cell, and a one-line
+/// verdict.  Every bench binary must expose the mode (enforced by
+/// `quarot-lint`'s bench-check rule); like the serving smokes, a table
+/// bench self-skips models whose artifacts are absent, so `--check`
+/// stays green on runners without `make artifacts` while still
+/// compiling and driving the whole sweep.
+pub struct CheckSink {
+    name: &'static str,
+    active: bool,
+    cells: usize,
+}
+
+impl CheckSink {
+    pub fn new(name: &'static str) -> CheckSink {
+        CheckSink {
+            name,
+            active: std::env::args().any(|a| a == "--check"),
+            cells: 0,
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        self.active
+    }
+
+    /// Eval budget: one window in `--check` mode, the usual
+    /// [`eval_windows`] sweep otherwise.
+    pub fn windows(&self) -> usize {
+        if self.active { 1 } else { eval_windows() }
+    }
+
+    /// Record one metric cell; in `--check` mode a non-finite value
+    /// fails the smoke.
+    pub fn cell(&mut self, label: &str, v: f64) -> Result<()> {
+        if self.active {
+            anyhow::ensure!(v.is_finite(),
+                            "[check] {}: non-finite {label}: {v}", self.name);
+        }
+        self.cells += 1;
+        Ok(())
+    }
+
+    /// In `--check` mode prints the verdict and returns `true` — the
+    /// caller skips the `record` step; `false` means run the bench's
+    /// normal tail.
+    pub fn done(&self) -> bool {
+        if self.active {
+            println!("[check] {} OK ({} finite metric cell(s))",
+                     self.name, self.cells);
+        }
+        self.active
+    }
+}
+
 pub struct Artifacts {
     pub dir: String,
     pub weights: Weights,

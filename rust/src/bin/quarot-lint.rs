@@ -1,0 +1,511 @@
+//! `quarot-lint` — repo-specific source lints, run in CI and locally
+//! via `cargo run --bin quarot-lint` (exit code 0 = clean).
+//!
+//! Rules:
+//!
+//! 1. `wire-keys` — the pair lists behind the `stats` / `metrics` /
+//!    `per_shard` / `finished` frames (rust/src/cluster/metrics.rs,
+//!    rust/src/api/wire.rs) must match tests/golden/wire_keys.txt in
+//!    order.  New keys may only be *appended*, and must be appended to
+//!    the golden in the same change.  (util::json serializes objects
+//!    alphabetically, so source pair order is the only place the
+//!    append-only contract is observable — rust/tests/wire_golden.rs
+//!    covers the runtime half.)
+//! 2. `no-unwrap` — non-test code under rust/src must not call
+//!    `.unwrap()` / `.expect(`; deliberate exceptions are listed in
+//!    quarot-lint.allow as `path: trimmed line`.  Allow entries that no
+//!    longer match anything are themselves findings, so the list can
+//!    only shrink.
+//! 3. `bench-check` — every benches/*.rs must expose a `-- --check`
+//!    smoke mode (the CI acceptance hook).
+//! 4. `pub-docs` — every `pub` item declaration (fn / struct / enum /
+//!    trait / const / static / type) in rust/src/api and
+//!    rust/src/cluster carries a `///` doc comment.  `pub use`
+//!    re-exports, `pub mod` declarations (documented module-side with
+//!    `//!`) and struct fields are out of scope.
+//!
+//! The analyzer is deliberately line-based, std-only and dependency
+//! free: string/char literals are blanked and `//` comments stripped
+//! before matching, and everything from the first `#[cfg(test)]` to
+//! end-of-file is skipped (test modules sit at the bottom of files in
+//! this repo).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+struct Finding {
+    /// repo-relative path
+    file: String,
+    /// 1-based; 0 for whole-file findings
+    line: usize,
+    rule: &'static str,
+    msg: String,
+    /// set on rule-2 findings: the `path: trimmed line` allowlist key
+    allow_key: Option<String>,
+}
+
+fn main() -> ExitCode {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    match run(root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("quarot-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                eprintln!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+            }
+            eprintln!("quarot-lint: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("quarot-lint: error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut findings = Vec::new();
+    check_wire_keys(root, &mut findings)?;
+    check_unwrap_policy(root, &mut findings)?;
+    check_bench_check(root, &mut findings)?;
+    check_pub_docs(root, &mut findings)?;
+    apply_allowlist(root, &mut findings)?;
+    Ok(findings)
+}
+
+// ---------------------------------------------------------------- util
+
+fn read(root: &Path, rel: &str) -> Result<String, String> {
+    fs::read_to_string(root.join(rel)).map_err(|e| format!("read {rel}: {e}"))
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).display().to_string()
+}
+
+/// All .rs files under `dir`, recursively, in sorted order.
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("scan {}: {e}", dir.display()))?;
+    let mut paths = Vec::new();
+    for ent in rd {
+        let ent = ent.map_err(|e| format!("scan {}: {e}", dir.display()))?;
+        paths.push(ent.path());
+    }
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Where a char literal starting at `bytes[start] == '\''` ends
+/// (exclusive), or None if this is a lifetime tick.
+fn char_literal_end(bytes: &[u8], start: usize) -> Option<usize> {
+    let next = *bytes.get(start + 1)?;
+    if next == b'\\' {
+        // escaped: '\n', '\\', '\u{1f600}', ... — scan to the close
+        let mut i = start + 3;
+        while i < bytes.len() && bytes[i] != b'\'' {
+            i += 1;
+        }
+        if i < bytes.len() {
+            return Some(i + 1);
+        }
+        return None;
+    }
+    // plain 'x' (possibly multibyte): close quote within a few bytes;
+    // anything farther is a lifetime ('a, 'static)
+    let limit = (start + 6).min(bytes.len());
+    (start + 2..limit).find(|&j| bytes[j] == b'\'').map(|j| j + 1)
+}
+
+/// Strip `//` comments (outside literals); with `blank_strings`, also
+/// blank out string/char-literal contents so needles inside them never
+/// match.
+fn scrub(line: &str, blank_strings: bool) -> String {
+    let bytes = line.as_bytes();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'"' => {
+                let start = i;
+                i += 1;
+                while i < bytes.len() {
+                    match bytes[i] {
+                        b'\\' => i += 2,
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                if blank_strings {
+                    out.push_str("\"\"");
+                } else {
+                    let end = i.min(bytes.len());
+                    out.push_str(&String::from_utf8_lossy(&bytes[start..end]));
+                }
+            }
+            b'\'' => {
+                if let Some(end) = char_literal_end(bytes, i) {
+                    if blank_strings {
+                        out.push_str("' '");
+                    } else {
+                        out.push_str(&String::from_utf8_lossy(&bytes[i..end]));
+                    }
+                    i = end;
+                } else {
+                    out.push('\'');
+                    i += 1;
+                }
+            }
+            b'/' if bytes.get(i + 1) == Some(&b'/') => break,
+            b => {
+                out.push(b as char);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------- rule 1: wire
+
+/// Golden file sections: `[name]` headers, one key per line, trailing
+/// `?` = optional (presence varies, position does not).
+fn parse_golden(text: &str) -> Vec<(String, Vec<String>)> {
+    let mut sections: Vec<(String, Vec<String>)> = Vec::new();
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            sections.push((name.to_string(), Vec::new()));
+        } else if let Some((_, keys)) = sections.last_mut() {
+            keys.push(line.strip_suffix('?').unwrap_or(line).to_string());
+        }
+    }
+    sections
+}
+
+fn golden_section<'a>(sections: &'a [(String, Vec<String>)], name: &str)
+                      -> Result<&'a [String], String> {
+    sections.iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, keys)| keys.as_slice())
+        .ok_or_else(|| format!("tests/golden/wire_keys.txt: section [{name}] missing"))
+}
+
+/// The source slice from `start_marker` to (exclusive) `end_marker`.
+fn source_region<'a>(text: &'a str, start_marker: &str, end_marker: &str,
+                     rel: &str) -> Result<(usize, &'a str), String> {
+    let s = text.find(start_marker).ok_or_else(|| {
+        format!("{rel}: marker `{start_marker}` not found — update quarot-lint's wire-key rule")
+    })?;
+    let line = text[..s].lines().count().max(1);
+    let rest = &text[s..];
+    let e = rest.find(end_marker).unwrap_or(rest.len());
+    Ok((line, &rest[..e]))
+}
+
+/// Extract `("key",` literals, in order, from a comment-stripped region.
+fn pair_keys(region: &str) -> Vec<String> {
+    let mut keys = Vec::new();
+    for line in region.lines() {
+        let clean = scrub(line, false);
+        let bytes = clean.as_bytes();
+        let mut i = 0;
+        while i + 1 < bytes.len() {
+            if bytes[i] == b'(' && bytes[i + 1] == b'"' {
+                let mut j = i + 2;
+                while j < bytes.len() && bytes[j] != b'"' {
+                    j += 1;
+                }
+                if j + 1 < bytes.len() && bytes[j + 1] == b',' {
+                    keys.push(clean[i + 2..j].to_string());
+                }
+                i = j + 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+    keys
+}
+
+/// Append-only check: `golden` must be an exact prefix of `actual`;
+/// keys past the golden are new and must be recorded there.
+fn compare_keys(golden: &[String], actual: &[String], what: &str,
+                file: &str, line: usize, findings: &mut Vec<Finding>) {
+    for (i, name) in golden.iter().enumerate() {
+        if actual.get(i).map(String::as_str) != Some(name.as_str()) {
+            findings.push(Finding {
+                file: file.to_string(),
+                line,
+                rule: "wire-keys",
+                msg: format!(
+                    "{what}: key #{i} is {:?} but the golden says {name:?} — \
+                     wire keys are append-only (tests/golden/wire_keys.txt)",
+                    actual.get(i).map(String::as_str).unwrap_or("<missing>")),
+                allow_key: None,
+            });
+            return;
+        }
+    }
+    if actual.len() > golden.len() {
+        findings.push(Finding {
+            file: file.to_string(),
+            line,
+            rule: "wire-keys",
+            msg: format!(
+                "{what}: new key(s) {:?} not recorded in \
+                 tests/golden/wire_keys.txt — append them to the section",
+                &actual[golden.len()..]),
+            allow_key: None,
+        });
+    }
+}
+
+fn check_wire_keys(root: &Path, findings: &mut Vec<Finding>)
+                   -> Result<(), String> {
+    let golden = parse_golden(&read(root, "tests/golden/wire_keys.txt")?);
+    let stats = golden_section(&golden, "stats")?;
+    let per_shard = golden_section(&golden, "per_shard")?;
+    let finished = golden_section(&golden, "finished")?;
+    let envelope = ["v".to_string(), "event".to_string()];
+    if stats.len() < 3 || stats[..2] != envelope || finished.len() < 4
+        || finished[..2] != envelope || finished[2] != "id" {
+        return Err("tests/golden/wire_keys.txt: [stats] must open with \
+                    v,event and [finished] with v,event,id".to_string());
+    }
+
+    let metrics_rel = "rust/src/cluster/metrics.rs";
+    let metrics = read(root, metrics_rel)?;
+    let (line, region) =
+        source_region(&metrics, "fn summary_pairs", "fn full_pairs", metrics_rel)?;
+    compare_keys(&stats[2..], &pair_keys(region), "summary_pairs()",
+                 metrics_rel, line, findings);
+
+    let (line, region) =
+        source_region(&metrics, "fn to_value", "impl ClusterMetrics", metrics_rel)?;
+    compare_keys(per_shard, &pair_keys(region), "ShardMetrics::to_value()",
+                 metrics_rel, line, findings);
+
+    let (line, region) =
+        source_region(&metrics, "fn full_pairs", "fn render", metrics_rel)?;
+    if pair_keys(region) != ["per_shard"] {
+        findings.push(Finding {
+            file: metrics_rel.to_string(),
+            line,
+            rule: "wire-keys",
+            msg: "full_pairs() must extend summary_pairs() with exactly \
+                  one appended `per_shard` key".to_string(),
+            allow_key: None,
+        });
+    }
+
+    let wire_rel = "rust/src/api/wire.rs";
+    let wire = read(root, wire_rel)?;
+    let (line, region) = source_region(
+        &wire, "GenerationEvent::Finished { reason, stats } =>",
+        "GenerationEvent::Failed", wire_rel)?;
+    // `id` rides in via the shared `idv` binding, not a literal pair
+    if !region.contains("idv") {
+        findings.push(Finding {
+            file: wire_rel.to_string(),
+            line,
+            rule: "wire-keys",
+            msg: "finished frame no longer leads with the shared `idv` \
+                  id pair".to_string(),
+            allow_key: None,
+        });
+    }
+    compare_keys(&finished[3..], &pair_keys(region), "finished frame",
+                 wire_rel, line, findings);
+
+    if !(wire.contains("pairs.insert(0, (\"v\"")
+         && wire.contains("pairs.insert(1, (\"event\"")) {
+        findings.push(Finding {
+            file: wire_rel.to_string(),
+            line: 0,
+            rule: "wire-keys",
+            msg: "tag() no longer pins `v` / `event` at the head of every \
+                  frame".to_string(),
+            allow_key: None,
+        });
+    }
+    Ok(())
+}
+
+// --------------------------------------------------- rule 2: no-unwrap
+
+fn check_unwrap_policy(root: &Path, findings: &mut Vec<Finding>)
+                       -> Result<(), String> {
+    let mut files = Vec::new();
+    rs_files(&root.join("rust/src"), &mut files)?;
+    for path in files {
+        let rel = rel_path(root, &path);
+        let text = fs::read_to_string(&path).map_err(|e| format!("read {rel}: {e}"))?;
+        for (idx, raw) in text.lines().enumerate() {
+            let code = scrub(raw, true);
+            // scrubbed, so the attribute in a comment or string (this
+            // file's own docs, say) doesn't end the scan early
+            if code.contains("#[cfg(test)]") {
+                break; // test modules sit at the bottom of the file
+            }
+            for needle in [".unwrap()", ".expect("] {
+                if code.contains(needle) {
+                    findings.push(Finding {
+                        file: rel.clone(),
+                        line: idx + 1,
+                        rule: "no-unwrap",
+                        msg: format!(
+                            "`{needle}` in non-test code — recover or \
+                             propagate, or record the line in \
+                             quarot-lint.allow"),
+                        allow_key: Some(format!("{rel}: {}", raw.trim())),
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------- rule 3: bench-check
+
+fn check_bench_check(root: &Path, findings: &mut Vec<Finding>)
+                     -> Result<(), String> {
+    let mut files = Vec::new();
+    rs_files(&root.join("benches"), &mut files)?;
+    for path in files {
+        let rel = rel_path(root, &path);
+        let text = fs::read_to_string(&path).map_err(|e| format!("read {rel}: {e}"))?;
+        // `CheckSink::new` parses `--check` itself, so using it counts
+        if !text.contains("--check") && !text.contains("CheckSink") {
+            findings.push(Finding {
+                file: rel,
+                line: 0,
+                rule: "bench-check",
+                msg: "bench lacks a `-- --check` smoke mode (every bench \
+                      must be runnable as a CI acceptance check; use \
+                      bench_support::CheckSink)".to_string(),
+                allow_key: None,
+            });
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------- rule 4: pub-docs
+
+const DOC_ITEM_KEYWORDS: [&str; 7] =
+    ["fn", "struct", "enum", "trait", "const", "static", "type"];
+
+fn is_pub_item(trimmed: &str) -> bool {
+    let Some(rest) = trimmed.strip_prefix("pub ") else {
+        return false;
+    };
+    // `pub unsafe fn`, `pub async fn` would land here too if they ever
+    // appear; today the repo is sync + safe, so plain keywords suffice.
+    DOC_ITEM_KEYWORDS.iter().any(|kw| {
+        rest.strip_prefix(kw)
+            .is_some_and(|r| r.starts_with(' ') || r.starts_with('<'))
+    })
+}
+
+fn check_pub_docs(root: &Path, findings: &mut Vec<Finding>)
+                  -> Result<(), String> {
+    for sub in ["rust/src/api", "rust/src/cluster"] {
+        let mut files = Vec::new();
+        rs_files(&root.join(sub), &mut files)?;
+        for path in files {
+            let rel = rel_path(root, &path);
+            let text = fs::read_to_string(&path)
+                .map_err(|e| format!("read {rel}: {e}"))?;
+            let lines: Vec<&str> = text.lines().collect();
+            for (idx, raw) in lines.iter().enumerate() {
+                if scrub(raw, true).contains("#[cfg(test)]") {
+                    break;
+                }
+                let trimmed = raw.trim_start();
+                if !is_pub_item(trimmed) {
+                    continue;
+                }
+                // walk back over attribute lines to the doc (or not)
+                let mut j = idx;
+                while j > 0 && lines[j - 1].trim_start().starts_with("#[") {
+                    j -= 1;
+                }
+                let documented =
+                    j > 0 && lines[j - 1].trim_start().starts_with("///");
+                if !documented {
+                    let name = trimmed.split_whitespace().take(3)
+                        .collect::<Vec<_>>().join(" ");
+                    findings.push(Finding {
+                        file: rel.clone(),
+                        line: idx + 1,
+                        rule: "pub-docs",
+                        msg: format!("public item `{name} ...` has no doc \
+                                      comment"),
+                        allow_key: None,
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// -------------------------------------------------------- allowlisting
+
+fn apply_allowlist(root: &Path, findings: &mut Vec<Finding>)
+                   -> Result<(), String> {
+    let path = root.join("quarot-lint.allow");
+    let text = match fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+        Err(e) => return Err(format!("read quarot-lint.allow: {e}")),
+    };
+    let entries: Vec<(usize, String)> = text.lines().enumerate()
+        .map(|(i, l)| (i + 1, l.trim()))
+        .filter(|(_, l)| !l.is_empty() && !l.starts_with('#'))
+        .map(|(i, l)| (i, l.to_string()))
+        .collect();
+    let mut used = vec![false; entries.len()];
+    findings.retain(|f| {
+        let Some(key) = &f.allow_key else {
+            return true;
+        };
+        match entries.iter().position(|(_, e)| e == key) {
+            Some(pos) => {
+                used[pos] = true;
+                false // deliberately allowed
+            }
+            None => true,
+        }
+    });
+    for (pos, (lineno, entry)) in entries.iter().enumerate() {
+        if !used[pos] {
+            findings.push(Finding {
+                file: "quarot-lint.allow".to_string(),
+                line: *lineno,
+                rule: "stale-allow",
+                msg: format!("entry matches no finding any more — remove \
+                              it: `{entry}`"),
+                allow_key: None,
+            });
+        }
+    }
+    Ok(())
+}

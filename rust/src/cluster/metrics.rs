@@ -82,6 +82,7 @@ pub struct ShardMetrics {
 }
 
 impl ShardMetrics {
+    /// Snapshot a live engine's counters and gauges into one row.
     pub fn from_engine(shard: usize, engine: &GenerationEngine) -> ShardMetrics {
         let st = &engine.stats;
         ShardMetrics {
@@ -119,6 +120,7 @@ impl ShardMetrics {
         ShardMetrics { shard, ..Default::default() }
     }
 
+    /// Mean time-to-first-token over this shard's started requests.
     pub fn avg_ttft_ms(&self) -> f64 {
         if self.ttft_count == 0 {
             return 0.0;
@@ -126,6 +128,8 @@ impl ShardMetrics {
         self.ttft_sum_ms / self.ttft_count as f64
     }
 
+    /// One `per_shard` JSON row (key order is part of the wire contract
+    /// — see `tests/golden/wire_keys.txt`).
     pub fn to_value(&self) -> Value {
         obj(vec![
             ("shard", n(self.shard as f64)),
@@ -179,38 +183,47 @@ impl ClusterMetrics {
         self.shards.iter().map(f).sum()
     }
 
+    /// Shards that answered the snapshot (engine thread still alive).
     pub fn live_shards(&self) -> usize {
         self.shards.iter().filter(|s| s.alive).count()
     }
 
+    /// Queued (not yet scheduled) requests across all shards.
     pub fn queue_depth(&self) -> usize {
         self.sum(|s| s.queue_depth)
     }
 
+    /// Requests currently decoding across all shards.
     pub fn active_slots(&self) -> usize {
         self.sum(|s| s.active_slots)
     }
 
+    /// Requests finished normally, summed across shards.
     pub fn completed(&self) -> usize {
         self.sum(|s| s.completed)
     }
 
+    /// Requests cancelled by the caller, summed across shards.
     pub fn cancelled(&self) -> usize {
         self.sum(|s| s.cancelled)
     }
 
+    /// Requests that errored mid-stream, summed across shards.
     pub fn failed(&self) -> usize {
         self.sum(|s| s.failed)
     }
 
+    /// Requests dropped for a lapsed deadline, summed across shards.
     pub fn deadline_exceeded(&self) -> usize {
         self.sum(|s| s.deadline_exceeded)
     }
 
+    /// KV pages currently allocated, summed across shard pools.
     pub fn pool_pages_in_use(&self) -> usize {
         self.sum(|s| s.pool.in_use)
     }
 
+    /// Total provisioned KV pages, summed across shard pools.
     pub fn pool_pages_total(&self) -> usize {
         self.sum(|s| s.pool.pages_total)
     }
@@ -230,10 +243,12 @@ impl ClusterMetrics {
         self.shards.iter().map(|s| s.tokens_per_sec).sum()
     }
 
+    /// Prefix-cache probe count, summed across shards.
     pub fn prefix_lookups(&self) -> usize {
         self.sum(|s| s.prefix.lookups)
     }
 
+    /// Prefix-cache probes that matched a cached chain, summed.
     pub fn prefix_hits(&self) -> usize {
         self.sum(|s| s.prefix.hits)
     }
@@ -259,18 +274,22 @@ impl ClusterMetrics {
         self.sum(|s| s.prefix.pages_pinned)
     }
 
+    /// Completed requests that ran on the 4-bit KV tier, summed.
     pub fn kv4_completed(&self) -> usize {
         self.sum(|s| s.kv4_completed)
     }
 
+    /// Completed requests that ran on the 8-bit KV tier, summed.
     pub fn kv8_completed(&self) -> usize {
         self.sum(|s| s.kv8_completed)
     }
 
+    /// Tokens decoded on the 4-bit KV tier, summed across shards.
     pub fn kv4_decode_tokens(&self) -> usize {
         self.sum(|s| s.kv4_decode_tokens)
     }
 
+    /// Tokens decoded on the 8-bit KV tier, summed across shards.
     pub fn kv8_decode_tokens(&self) -> usize {
         self.sum(|s| s.kv8_decode_tokens)
     }

@@ -221,6 +221,9 @@ fn flush_events(engine: &mut GenerationEngine,
 
 fn handle_msg(shard_idx: usize, engine: &mut GenerationEngine, msg: ShardMsg,
               gauges: &ShardGauges) {
+    // lock-order class: control handling sits above everything the
+    // engine acquires (engine.tick, coordinator.prefix, …)
+    let _audit = crate::audit::LockScope::enter("cluster.shard");
     match msg {
         ShardMsg::Submit { req, reply } => {
             let r = engine.try_submit(req);
@@ -331,6 +334,7 @@ fn shard_loop(shard_idx: usize, n_shards: usize, factory: EngineFactory,
         }
         let ticked = engine.pending() > 0;
         if ticked {
+            let _audit = crate::audit::LockScope::enter("cluster.shard");
             if let Err(e) = engine.tick() {
                 engine.fail_all(&format!("engine tick failed: {e:#}"));
             }
@@ -744,6 +748,7 @@ impl ClusterService {
         self.core.borrow().pending()
     }
 
+    /// Number of shards this cluster was built with (live or not).
     pub fn shards(&self) -> usize {
         self.core.borrow().shards.len()
     }

@@ -42,6 +42,7 @@ use crate::api::{FinishReason, GenerationEvent, Priority, QualityTier,
                  RequestStats, SubmitError};
 use crate::attention::{DecodeF32Seq, DecodeQuantSeq, KvCodes, KvF32View,
                        KvQuantView};
+use crate::audit::LockScope;
 use crate::backend::pool::SendPtr;
 use crate::backend::ComputeBackend;
 use crate::model::ModelConfig;
@@ -444,6 +445,7 @@ impl GenerationEngine {
             let hit = self.slots[i].as_ref().is_some_and(|s| s.req.id == id);
             if hit {
                 let mut slot = self.slots[i].take().unwrap();
+                let _own = crate::audit::owner(|| format!("seq:{id}"));
                 let stats = slot.stats();
                 slot.cache.free(&mut self.pool);
                 self.emit_finish(id, slot.req.tier, FinishReason::Cancelled,
@@ -608,6 +610,8 @@ impl GenerationEngine {
                 .is_some_and(|s| deadline_expired(&s.req, s.enqueued));
             if expired {
                 let mut slot = self.slots[i].take().unwrap();
+                let _own = crate::audit::owner(
+                    || format!("seq:{}", slot.req.id));
                 let stats = slot.stats();
                 slot.cache.free(&mut self.pool);
                 self.emit_finish(slot.req.id, slot.req.tier,
@@ -685,6 +689,9 @@ impl GenerationEngine {
                 let Some((req, enq)) = self.queue.pop() else {
                     break 'slots;
                 };
+                // ledger owner for every page this admission touches
+                // (graft retains, prefill allocs, terminal frees)
+                let _own = crate::audit::owner(|| format!("seq:{}", req.id));
                 if !fp {
                     self.prefix.record_use(shared.len());
                 }
@@ -1033,6 +1040,7 @@ impl GenerationEngine {
     fn complete_session_turn(&mut self, req: &Request, generated: &[u16],
                              cache: Option<&SeqCache>) {
         let Some(sid) = session_id(req) else { return };
+        let _own = crate::audit::owner(|| format!("session:{sid}"));
         let mut chain =
             Vec::with_capacity(req.prompt.len() + generated.len());
         chain.extend_from_slice(&req.prompt);
@@ -1207,6 +1215,9 @@ impl GenerationEngine {
     /// sample, retire.  Returns number of tokens produced this tick
     /// (events are queued for [`Self::take_events`]).
     pub fn tick(&mut self) -> Result<usize> {
+        // lock-order class: the tick body acquires pool/prefix classes
+        // beneath it, pinning the engine.tick → coordinator.* ordering
+        let _audit = LockScope::enter("engine.tick");
         self.expire_deadlines();
         self.admit()?;
         let cfg = self.runner.cfg.clone();
@@ -1264,6 +1275,7 @@ impl GenerationEngine {
             let cache_full = sl.cache.len + 2 >= cfg.cache_seq;
             if hit_stop || budget_done || cache_full {
                 let mut slot = self.slots[i].take().unwrap();
+                let _own = crate::audit::owner(|| format!("seq:{id}"));
                 let stats = slot.stats();
                 // generated-token donation: the retiring cache holds
                 // `prompt ++ generated[..len-1]` — hand its full pages to
@@ -1292,6 +1304,10 @@ impl GenerationEngine {
         // running; freed pages may even unblock them next tick.
         let mut appended: Vec<usize> = Vec::with_capacity(survivors.len());
         for &i in &survivors {
+            let Some(rid) = self.slots[i].as_ref().map(|s| s.req.id) else {
+                continue;
+            };
+            let _own = crate::audit::owner(|| format!("seq:{rid}"));
             match self.append_to_cache(i, &k_new, &v_new) {
                 Ok(()) => appended.push(i),
                 Err(e) => {
@@ -1606,6 +1622,89 @@ mod tests {
         // weights 4:1 → 400/100 exactly, but allow one quantum of drift
         assert!((served[0] as i64 - 400).abs() <= 5, "served {served:?}");
         assert!(served[1] >= 95, "batch starved: {served:?}");
+    }
+
+    #[test]
+    fn fair_queue_invariants_hold_under_random_schedules() {
+        // Randomized push/pop interleavings, then a sustained
+        // dual-backlog drain.  Invariants after every pop:
+        //   * credits sum to zero and stay within one scheduling quantum
+        //     (the deficit counter never runs away in either direction);
+        //   * each class pops in FIFO order;
+        // and over the backlogged phase:
+        //   * service converges on the 4:1 weight ratio;
+        //   * neither class ever waits more than one full quantum of
+        //     consecutive foreign pops (no starvation).
+        let quantum: i64 = CLASS_WEIGHTS.iter().sum();
+        crate::util::prop::check("fair_queue_random_schedules", 40, |rng| {
+            let mut q = FairQueue::new();
+            let mut next_id = 0u64;
+            let mut last_popped = [None::<u64>; Priority::COUNT];
+            let mut check_pop = |q: &mut FairQueue,
+                                 last: &mut [Option<u64>; Priority::COUNT]|
+                                 -> Result<Option<Priority>, String> {
+                let Some((r, _)) = q.pop() else { return Ok(None) };
+                let c = r.priority.index();
+                crate::prop_assert!(
+                    q.credit.iter().sum::<i64>() == 0,
+                    "credits must sum to zero, got {:?}", q.credit);
+                crate::prop_assert!(
+                    q.credit.iter().all(|d| d.abs() <= quantum),
+                    "deficit ran away: {:?} (quantum {quantum})", q.credit);
+                crate::prop_assert!(
+                    !last[c].is_some_and(|prev| prev >= r.id),
+                    "class {c} popped id {} after {:?} (FIFO broken)",
+                    r.id, last[c]);
+                last[c] = Some(r.id);
+                Ok(Some(r.priority))
+            };
+            // phase 1: random arrivals and pops
+            for _ in 0..rng.below(120) {
+                if rng.f64() < 0.55 {
+                    let pri = if rng.f64() < 0.5 { Priority::Interactive }
+                              else { Priority::Batch };
+                    q.push_back(req(next_id, pri, None), Instant::now());
+                    next_id += 1;
+                } else {
+                    check_pop(&mut q, &mut last_popped)?;
+                }
+            }
+            // phase 2: both lanes kept backlogged — measure shares and
+            // the longest run a class goes unserved
+            let mut served = [0i64; Priority::COUNT];
+            let mut unserved_run = [0i64; Priority::COUNT];
+            let pops = 100 + rng.below(100) as i64;
+            for _ in 0..pops {
+                for c in [Priority::Interactive, Priority::Batch] {
+                    while q.classes[c.index()].len() < 2 {
+                        q.push_back(req(next_id, c, None), Instant::now());
+                        next_id += 1;
+                    }
+                }
+                let Some(pri) = check_pop(&mut q, &mut last_popped)? else {
+                    return Err("backlogged queue returned None".into());
+                };
+                for c in 0..Priority::COUNT {
+                    if c == pri.index() {
+                        served[c] += 1;
+                        unserved_run[c] = 0;
+                    } else {
+                        unserved_run[c] += 1;
+                        crate::prop_assert!(
+                            unserved_run[c] <= quantum,
+                            "class {c} starved for {} consecutive pops",
+                            unserved_run[c]);
+                    }
+                }
+            }
+            // 4:1 convergence within one quantum of the exact share
+            let want_batch = pops / quantum;
+            crate::prop_assert!(
+                (served[Priority::Batch.index()] - want_batch).abs() <= quantum,
+                "batch share off: served {served:?} over {pops} pops \
+                 (want ~{want_batch})");
+            Ok(())
+        });
     }
 
     /// The admission page estimate must reserve first-decode-append

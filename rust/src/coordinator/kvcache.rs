@@ -12,6 +12,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::audit::{LockScope, PageLedger};
 use crate::model::ModelConfig;
 use crate::quant::kv;
 
@@ -30,6 +31,10 @@ pub struct PagePool {
     free: Vec<usize>,
     refcount: Vec<u32>,
     pub high_water: usize,
+    /// Debug-build refcount ledger: every reference is charged to the
+    /// ambient [`crate::audit::owner`] label so leaks name their holder
+    /// ([`Self::assert_drained`]).  Zero-sized in release builds.
+    ledger: PageLedger,
 }
 
 pub type PageId = usize;
@@ -67,14 +72,17 @@ impl PagePool {
             free: (0..n_pages).rev().collect(),
             refcount: vec![0; n_pages],
             high_water: 0,
+            ledger: PageLedger::new(),
         }
     }
 
     pub fn alloc(&mut self) -> Result<PageId> {
+        let _audit = LockScope::enter("coordinator.pagepool");
         match self.free.pop() {
             Some(id) => {
                 self.refcount[id] = 1;
                 self.high_water = self.high_water.max(self.in_use());
+                self.ledger.on_alloc(id);
                 Ok(id)
             }
             None => bail!("KV page pool exhausted ({} pages)", self.pages.len()),
@@ -85,17 +93,21 @@ impl PagePool {
     /// grafted shared prefixes).  Retaining a free page panics: sharing
     /// is only defined for pages some owner is keeping alive.
     pub fn retain(&mut self, id: PageId) {
+        let _audit = LockScope::enter("coordinator.pagepool");
         assert!(self.refcount[id] > 0,
                 "retain of free page {id} (only live pages can be shared)");
         self.refcount[id] += 1;
+        self.ledger.on_retain(id);
     }
 
     /// Drop one reference; the page returns to the free list when the
     /// last owner releases it.
     pub fn release(&mut self, id: PageId) {
+        let _audit = LockScope::enter("coordinator.pagepool");
         assert!(self.refcount[id] > 0,
                 "double free of page {id} (or free of a never-allocated page)");
         self.refcount[id] -= 1;
+        self.ledger.on_release(id);
         if self.refcount[id] == 0 {
             self.free.push(id);
         }
@@ -143,6 +155,23 @@ impl PagePool {
             in_use: self.in_use(),
             high_water: self.high_water,
         }
+    }
+
+    /// End-of-test leak check: every page back in the free list, and (in
+    /// debug builds) the owner ledger empty.  A leak panics with the
+    /// per-owner breakdown — *who* still holds each page — instead of a
+    /// bare count.
+    pub fn assert_drained(&self, context: &str) {
+        self.ledger.assert_drained(context);
+        assert_eq!(self.in_use(), 0,
+                   "page pool not drained ({context}): {} page(s) in use",
+                   self.in_use());
+    }
+
+    /// Outstanding `(page, owner labels)` pairs from the debug ledger
+    /// (always empty in release builds) — diagnostics for leak hunts.
+    pub fn outstanding_owners(&self) -> Vec<(PageId, Vec<String>)> {
+        self.ledger.outstanding()
     }
 }
 
@@ -630,6 +659,7 @@ mod tests {
             c.free(&mut pool);
         }
         assert_eq!(pool.in_use(), 0, "pages leaked");
+        pool.assert_drained("free_releases_everything");
     }
 
     #[test]
@@ -724,13 +754,19 @@ mod tests {
             }
             c
         };
-        let donor = build(&mut pool, 0, None);
+        let donor = {
+            let _o = crate::audit::owner(|| "seq:donor".to_string());
+            build(&mut pool, 0, None)
+        };
         // "donate" the two full pages (8 of the 11 tokens) like the trie:
         // retain every page in the donated groups
         let groups: Vec<PageGroup> = (0..2).map(|i| donor.page_group(i)).collect();
-        for g in &groups {
-            for &p in g.k.iter().chain(g.v.iter()) {
-                pool.retain(p);
+        {
+            let _o = crate::audit::owner(|| "prefix:donated".to_string());
+            for g in &groups {
+                for &p in g.k.iter().chain(g.v.iter()) {
+                    pool.retain(p);
+                }
             }
         }
         let cold = build(&mut pool, 0, None);
@@ -756,12 +792,20 @@ mod tests {
         }
         assert!(pool.in_use() > 0,
                 "donated refs must keep the shared pages alive");
-        for g in &groups {
-            for &p in g.k.iter().chain(g.v.iter()) {
-                pool.release(p);
+        #[cfg(debug_assertions)]
+        assert!(pool.outstanding_owners().iter()
+                    .all(|(_, owners)| owners.contains(&"prefix:donated".to_string())),
+                "surviving refs must be the donated ones");
+        {
+            let _o = crate::audit::owner(|| "prefix:donated".to_string());
+            for g in &groups {
+                for &p in g.k.iter().chain(g.v.iter()) {
+                    pool.release(p);
+                }
             }
         }
         assert_eq!(pool.in_use(), 0, "refcount leak after the last owner");
+        pool.assert_drained("graft leak smoke");
     }
 
     /// Exhausting the pool mid-append fails atomically: nothing is
@@ -833,5 +877,71 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// N threads churn alloc/retain/release against one shared pool,
+    /// each under its own ledger owner label.  Afterwards the pool must
+    /// be fully drained — ledger included — and the high-water mark
+    /// must equal the peak occupancy actually observed (tracked under
+    /// the same lock, so the comparison is exact, not racy).
+    #[test]
+    fn concurrent_pool_churn_drains_and_high_water_is_exact() {
+        use std::sync::{Arc, Mutex};
+        const THREADS: usize = 4;
+        const OPS: usize = 500;
+        // (pool, observed peak occupancy) under one lock
+        let shared = Arc::new(Mutex::new((PagePool::new(8, 48), 0usize)));
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let shared = Arc::clone(&shared);
+            handles.push(std::thread::spawn(move || {
+                let _o = crate::audit::owner(|| format!("stress:{t}"));
+                let mut rng = Rng::new(0xC0FFEE ^ t as u64);
+                // one entry per reference this thread holds
+                let mut held: Vec<usize> = Vec::new();
+                for _ in 0..OPS {
+                    let mut g = shared.lock().unwrap();
+                    let (pool, observed) = &mut *g;
+                    let roll = rng.f64();
+                    if roll < 0.45 {
+                        if let Ok(id) = pool.alloc() {
+                            held.push(id);
+                        }
+                    } else if roll < 0.65 && !held.is_empty() {
+                        let id = held[rng.below(held.len())];
+                        pool.retain(id);
+                        held.push(id);
+                    } else if !held.is_empty() {
+                        let id = held.swap_remove(rng.below(held.len()));
+                        pool.release(id);
+                    }
+                    *observed = (*observed).max(pool.in_use());
+                }
+                let mut g = shared.lock().unwrap();
+                for id in held.drain(..) {
+                    g.0.release(id);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let g = shared.lock().unwrap();
+        assert_eq!(g.0.in_use(), 0, "churn must return every page");
+        g.0.assert_drained("concurrent churn");
+        assert_eq!(g.0.high_water, g.1,
+                   "high-water mark must equal the observed peak");
+    }
+
+    /// Deliberately-broken negative: an unreleased reference must make
+    /// `assert_drained` fire and name the owner label that held it.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "page ledger leak")]
+    fn undrained_pool_names_the_leaking_owner() {
+        let mut pool = PagePool::new(8, 4);
+        let _o = crate::audit::owner(|| "seq:leaker".to_string());
+        let _page = pool.alloc().unwrap();
+        pool.assert_drained("negative leak test");
     }
 }

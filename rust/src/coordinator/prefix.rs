@@ -37,6 +37,7 @@
 use std::collections::HashMap;
 
 use crate::api::QualityTier;
+use crate::audit::{LockScope, PinAudit};
 
 use super::kvcache::{PageGroup, PagePool};
 
@@ -102,6 +103,10 @@ pub struct PrefixCache {
     free_slots: Vec<usize>,
     clock: u64,
     stats: PrefixStats,
+    /// Debug-build mirror of per-node pin counts (slot-reuse aware);
+    /// tests opt into strictness via [`Self::assert_pins_balanced`].
+    /// Zero-sized in release builds.
+    audit: PinAudit,
 }
 
 impl PrefixCache {
@@ -117,6 +122,7 @@ impl PrefixCache {
             free_slots: Vec::new(),
             clock: 0,
             stats: PrefixStats::default(),
+            audit: PinAudit::new(),
         }
     }
 
@@ -163,6 +169,7 @@ impl PrefixCache {
         if self.max_pages == 0 {
             return Vec::new();
         }
+        let _audit = LockScope::enter("coordinator.prefix");
         self.clock += 1;
         let mut out = Vec::new();
         let mut cur = None;
@@ -207,6 +214,7 @@ impl PrefixCache {
         }
         assert!(groups.len() * self.tokens_per_page <= prompt.len(),
                 "donated groups exceed the prompt");
+        let _audit = LockScope::enter("coordinator.prefix");
         self.clock += 1;
         let gp = self.group_pages();
         let mut cur: Option<usize> = None;
@@ -220,14 +228,22 @@ impl PrefixCache {
             }
             while self.stats.pages_pinned + gp > self.max_pages {
                 let Some(leaf) = self.lru_leaf() else { break };
-                self.evict_node(pool, leaf);
+                self.evict_node(pool, leaf, false);
             }
             if self.stats.pages_pinned + gp > self.max_pages {
                 break; // budget held by entries hotter than this donation
             }
-            for l in 0..self.n_layers {
-                pool.retain(g.k[l]);
-                pool.retain(g.v[l]);
+            // the slot this node will land in (free_slots pops from the
+            // back) — charged as the ledger owner of the retained refs
+            let slot_hint = self.free_slots.last().copied()
+                .unwrap_or(self.nodes.len());
+            {
+                let _own = crate::audit::owner(
+                    || format!("prefix:node{slot_hint}"));
+                for l in 0..self.n_layers {
+                    pool.retain(g.k[l]);
+                    pool.retain(g.v[l]);
+                }
             }
             let node = Node {
                 run: run.into(),
@@ -248,6 +264,8 @@ impl PrefixCache {
                     self.nodes.len() - 1
                 }
             };
+            debug_assert_eq!(id, slot_hint, "owner label names the wrong slot");
+            self.audit.on_insert(id);
             match cur {
                 None => {
                     self.roots.entry(tier).or_default()
@@ -272,11 +290,15 @@ impl PrefixCache {
     /// first uncached run, so a partially-donated chain pins its cached
     /// prefix only.  Pins are counts: overlapping chains stack.
     pub fn pin_chain(&mut self, tier: QualityTier, tokens: &[u16]) -> usize {
+        let _audit = LockScope::enter("coordinator.prefix");
         let mut cur = None;
         let mut pinned = 0;
         for run in tokens.chunks_exact(self.tokens_per_page) {
             let Some(id) = self.child(tier, cur, run) else { break };
-            self.nodes[id].as_mut().unwrap().pins += 1;
+            let node = self.nodes[id].as_mut().unwrap();
+            node.pins += 1;
+            let pins_after = node.pins;
+            self.audit.on_pin(id, pins_after);
             pinned += 1;
             cur = Some(id);
         }
@@ -288,12 +310,15 @@ impl PrefixCache {
     /// fresh afterwards) simply end the walk or saturate at zero — a
     /// stale unpin is a no-op, never a panic.
     pub fn unpin_chain(&mut self, tier: QualityTier, tokens: &[u16]) -> usize {
+        let _audit = LockScope::enter("coordinator.prefix");
         let mut cur = None;
         let mut unpinned = 0;
         for run in tokens.chunks_exact(self.tokens_per_page) {
             let Some(id) = self.child(tier, cur, run) else { break };
             let node = self.nodes[id].as_mut().unwrap();
+            let saturated = node.pins == 0;
             node.pins = node.pins.saturating_sub(1);
+            self.audit.on_unpin(id, saturated);
             unpinned += 1;
             cur = Some(id);
         }
@@ -313,7 +338,8 @@ impl PrefixCache {
             .map(|(i, _)| i)
     }
 
-    fn evict_node(&mut self, pool: &mut PagePool, id: usize) {
+    fn evict_node(&mut self, pool: &mut PagePool, id: usize, forced: bool) {
+        self.audit.on_evict(id, forced);
         let node = self.nodes[id].take().unwrap();
         debug_assert!(node.children.is_empty(), "evicting an interior node");
         for l in 0..self.n_layers {
@@ -342,9 +368,10 @@ impl PrefixCache {
     /// reference), so under pressure this converges on releasing
     /// exactly the pages nobody is actively decoding over.
     pub fn evict_for(&mut self, pool: &mut PagePool, target: usize) {
+        let _audit = LockScope::enter("coordinator.prefix");
         while pool.available() < target {
             let Some(leaf) = self.lru_leaf() else { return };
-            self.evict_node(pool, leaf);
+            self.evict_node(pool, leaf, false);
         }
     }
 
@@ -354,17 +381,28 @@ impl PrefixCache {
     /// sessions re-donate on the next turn; the later stale unpins are
     /// no-ops by construction).
     pub fn clear(&mut self, pool: &mut PagePool) {
+        let _audit = LockScope::enter("coordinator.prefix");
         loop {
             let Some(leaf) = self.nodes.iter().enumerate()
                 .find(|(_, n)| n.as_ref().is_some_and(|n| n.children.is_empty()))
                 .map(|(i, _)| i)
             else { break };
-            self.evict_node(pool, leaf);
+            self.evict_node(pool, leaf, true);
         }
         debug_assert_eq!(self.stats.pages_pinned, 0, "pinned pages leaked");
         self.roots.clear();
         self.nodes.clear();
         self.free_slots.clear();
+        self.audit.on_clear();
+    }
+
+    /// Opt-in strict pin check for tests and leak smokes: every node's
+    /// pin count is back at zero and no unpin on a *live* node ever hit
+    /// an already-zero count (stale unpins after [`Self::clear`] never
+    /// reach the auditor — the chain walk ends at the missing node).
+    /// No-op in release builds.
+    pub fn assert_pins_balanced(&self) {
+        self.audit.assert_balanced();
     }
 }
 
@@ -600,6 +638,60 @@ mod tests {
         trie.clear(&mut pool);
         assert_eq!(pool.in_use(), 0, "flush must override pins");
         assert_eq!(trie.unpin_chain(T, &pa), 0, "stale unpin is a no-op");
+    }
+
+    #[test]
+    fn pin_audit_balances_across_stacking_and_slot_reuse() {
+        let mut pool = PagePool::new(8, 64);
+        let mut trie = PrefixCache::new(TPP, L, usize::MAX);
+        let pa = prompt(8, 0);
+        let ga: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+        trie.insert(&mut pool, T, &pa, &ga);
+        for g in &ga {
+            release_group(&mut pool, g);
+        }
+        // two sessions stack pins on the shared chain; both unpin
+        assert_eq!(trie.pin_chain(T, &pa), 2);
+        assert_eq!(trie.pin_chain(T, &pa), 2);
+        assert_eq!(trie.unpin_chain(T, &pa), 2);
+        assert_eq!(trie.unpin_chain(T, &pa), 2);
+        trie.assert_pins_balanced();
+
+        // evict the chain, re-donate into the recycled slots, pin again:
+        // the mirror must restart from zero per slot
+        let _ = trie.lookup(T, &prompt(4, 5), 1); // advance the clock
+        trie.evict_for(&mut pool, usize::MAX);
+        assert_eq!(trie.pages_pinned(), 0);
+        let gb: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+        trie.insert(&mut pool, T, &pa, &gb);
+        for g in &gb {
+            release_group(&mut pool, g);
+        }
+        assert_eq!(trie.pin_chain(T, &pa), 2);
+        assert_eq!(trie.unpin_chain(T, &pa), 2);
+        trie.assert_pins_balanced();
+        trie.clear(&mut pool);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "pin audit unbalanced")]
+    fn stale_unpin_on_a_live_chain_fails_the_strict_check() {
+        let mut pool = PagePool::new(8, 64);
+        let mut trie = PrefixCache::new(TPP, L, usize::MAX);
+        let pa = prompt(8, 0);
+        let ga: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+        trie.insert(&mut pool, T, &pa, &ga);
+        for g in &ga {
+            release_group(&mut pool, g);
+        }
+        trie.pin_chain(T, &pa);
+        trie.unpin_chain(T, &pa);
+        // the chain is still cached, so this stale unpin saturates on
+        // live nodes — tolerated at runtime, fatal under strictness
+        trie.unpin_chain(T, &pa);
+        trie.assert_pins_balanced();
     }
 
     #[test]

@@ -11,6 +11,12 @@
 //!
 //! * [`util`]      — zero-dependency substrates: JSON, PRNG, CLI, bench and
 //!                   property-test harnesses.
+//! * [`audit`]     — debug-gated runtime invariant auditors: lock-order
+//!                   (deadlock-potential) detection over the concurrent
+//!                   subsystems, a page-refcount ledger with owner
+//!                   labels, and a prefix-pin balance mirror; compiled
+//!                   to no-ops in release builds.  (The static
+//!                   companion checks live in the `quarot-lint` binary.)
 //! * [`tensor`]    — row-major f32 matrices for the offline toolchain.
 //! * [`linalg`]    — Cholesky / triangular solves / QR (GPTQ + Table 8).
 //! * [`hadamard`]  — fast Walsh–Hadamard transforms incl. Kronecker H12/H20.
@@ -62,6 +68,7 @@
 
 pub mod api;
 pub mod attention;
+pub mod audit;
 pub mod backend;
 pub mod bench_support;
 pub mod cluster;

@@ -36,13 +36,14 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::api::wire::{self, ClientFrame};
 use crate::api::{GenerationEvent, GenerationParams, RequestId, SubmitError};
+use crate::audit::AuditedMutex;
 use crate::cluster::{ClusterConfig, ClusterService, EngineFactory};
 use crate::coordinator::batcher::GenerationEngine;
 use crate::util::json::{self, Value};
@@ -267,15 +268,21 @@ fn route_all(cluster: &ClusterService,
     moved
 }
 
-fn write_frame(out: &Mutex<TcpStream>, v: &Value) -> std::io::Result<()> {
-    let mut w = out.lock().unwrap();
+/// Serialize one frame onto the shared connection stream.  Uses the
+/// poison-recovering lock: a writer that panicked mid-frame must not
+/// take down every other thread of this connection — the client sees a
+/// torn line (and resyncs at the next newline) instead of a dead socket
+/// with leaked in-flight requests.
+fn write_frame(out: &AuditedMutex<TcpStream>, v: &Value) -> std::io::Result<()> {
+    let mut w = out.lock_recover();
     writeln!(w, "{}", json::write(v))
 }
 
 fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>,
                shutdown: Arc<AtomicBool>) -> Result<()> {
     let local_addr = stream.local_addr()?;
-    let out = Arc::new(Mutex::new(stream.try_clone()?));
+    let out = Arc::new(AuditedMutex::new("server.conn.out",
+                                         stream.try_clone()?));
     let mut reader = BufReader::new(stream);
 
     // one writer per connection: encodes routed events as v2 frames.
@@ -283,14 +290,14 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>,
     // disconnect cleanup below only cancels requests still in flight
     // instead of round-tripping a no-op Cancel per request ever served.
     let (etx, erx) = mpsc::channel::<RoutedEvent>();
-    let live: Arc<Mutex<std::collections::HashSet<RequestId>>> =
-        Arc::new(Mutex::new(Default::default()));
+    let live: Arc<AuditedMutex<std::collections::HashSet<RequestId>>> =
+        Arc::new(AuditedMutex::new("server.conn.live", Default::default()));
     let out_w = out.clone();
     let live_w = live.clone();
     let writer = std::thread::spawn(move || {
         for (id, ev, cid) in erx {
             if ev.is_terminal() {
-                live_w.lock().unwrap().remove(&id);
+                live_w.lock_recover().remove(&id);
             }
             if write_frame(&out_w, &wire::encode_event(id, &ev, cid)).is_err() {
                 break; // client went away; events drain into the void
@@ -341,7 +348,7 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>,
             ClientFrame::Submit { cid, params } => {
                 match submit_to_engine(&tx, params, cid, etx.clone()) {
                     Ok(id) => {
-                        live.lock().unwrap().insert(id);
+                        live.lock_recover().insert(id);
                     }
                     Err(e) => {
                         write_frame(&out, &wire::encode_rejected(cid, &e))?;
@@ -364,14 +371,14 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>,
                 let (rtx, rrx) = mpsc::channel();
                 let _ = tx.send(EngineMsg::Stats { reply: rtx });
                 let stats = rrx.recv().unwrap_or_else(|_| "{}".into());
-                let mut w = out.lock().unwrap();
+                let mut w = out.lock_recover();
                 writeln!(w, "{stats}")?;
             }
             ClientFrame::Metrics => {
                 let (rtx, rrx) = mpsc::channel();
                 let _ = tx.send(EngineMsg::Metrics { reply: rtx });
                 let metrics = rrx.recv().unwrap_or_else(|_| "{}".into());
-                let mut w = out.lock().unwrap();
+                let mut w = out.lock_recover();
                 writeln!(w, "{metrics}")?;
             }
             ClientFrame::FlushPrefix => {
@@ -396,11 +403,11 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>,
                 match submit_to_engine(&tx, params, 0, ltx) {
                     Ok(_) => {
                         let resp = fold_legacy(&lrx);
-                        let mut w = out.lock().unwrap();
+                        let mut w = out.lock_recover();
                         writeln!(w, "{}", json::write(&resp))?;
                     }
                     Err(e) => {
-                        let mut w = out.lock().unwrap();
+                        let mut w = out.lock_recover();
                         writeln!(w, "{}", json::write(&json::obj(vec![
                             ("error", json::s(&format!("{e}"))),
                         ])))?;
@@ -412,8 +419,12 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>,
     };
     let result = conn_loop();
     // a dropped connection must not leak slots: cancel whatever is still
-    // in flight (terminal requests were already pruned by the writer)
-    let still_live: Vec<RequestId> = live.lock().unwrap().iter().copied().collect();
+    // in flight (terminal requests were already pruned by the writer).
+    // lock_recover: even if the writer thread panicked holding the set,
+    // this cleanup must still run — a poisoned lock here would leak the
+    // very slots it exists to reclaim
+    let still_live: Vec<RequestId> =
+        live.lock_recover().iter().copied().collect();
     for id in still_live {
         let (rtx, rrx) = mpsc::channel();
         if tx.send(EngineMsg::Cancel { id, reply: rtx }).is_ok() {

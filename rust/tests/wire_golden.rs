@@ -1,0 +1,175 @@
+//! Golden-file regression test for the append-only wire key contract.
+//!
+//! `tests/golden/wire_keys.txt` records, per frame, the SOURCE order of
+//! the key/value pairs each frame is built from.  That order is the v2
+//! compatibility contract: keys may be appended, never renamed, removed
+//! or reordered.  This test checks the running code against the golden:
+//!
+//! - pair-list order for `summary_pairs()` / `full_pairs()` (the pair
+//!   Vec preserves source order, so order is directly observable);
+//! - key *sets* for the serialized `stats` / `metrics` / `per_shard` /
+//!   `finished` frames (util::json stores objects in a BTreeMap, so the
+//!   serialized byte order is alphabetical and only membership is
+//!   observable after encoding).
+//!
+//! The source-level ORDER of the obj()-built frames is enforced by
+//! `cargo run --bin quarot-lint`, which parses the pair lists in
+//! rust/src/cluster/metrics.rs and rust/src/api/wire.rs and compares
+//! them against the same golden file.
+
+use quarot::api::wire;
+use quarot::api::{FinishReason, GenerationEvent, RequestStats};
+use quarot::cluster::{ClusterMetrics, ShardMetrics};
+use quarot::util::json::Value;
+
+const GOLDEN: &str = include_str!("../../tests/golden/wire_keys.txt");
+
+/// One golden key: name plus whether a trailing `?` marked it optional.
+struct Key {
+    name: String,
+    optional: bool,
+}
+
+fn golden_section(section: &str) -> Vec<Key> {
+    let mut keys = Vec::new();
+    let mut in_section = false;
+    for raw in GOLDEN.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            in_section = name.strip_suffix(']') == Some(section);
+            continue;
+        }
+        if in_section {
+            let (name, optional) = match line.strip_suffix('?') {
+                Some(base) => (base, true),
+                None => (line, false),
+            };
+            keys.push(Key { name: name.to_string(), optional });
+        }
+    }
+    assert!(!keys.is_empty(), "golden section [{section}] missing or empty");
+    keys
+}
+
+fn obj_keys(v: &Value) -> Vec<String> {
+    v.as_obj()
+        .unwrap_or_else(|| panic!("expected an object frame, got {v:?}"))
+        .keys()
+        .cloned()
+        .collect()
+}
+
+fn assert_key_set(frame: &Value, golden: &[Key], skip_optional: bool,
+                  what: &str) {
+    let mut want: Vec<&str> = golden.iter()
+        .filter(|k| !(skip_optional && k.optional))
+        .map(|k| k.name.as_str())
+        .collect();
+    want.sort_unstable();
+    let got = obj_keys(frame);
+    let got: Vec<&str> = got.iter().map(String::as_str).collect();
+    // BTreeMap keys come out sorted, so sorted-golden vs keys() is an
+    // exact set comparison that also reports order of the diff stably.
+    assert_eq!(got, want, "{what}: serialized key set drifted");
+}
+
+/// A metrics value with every source populated, so no key is skipped
+/// by an is-empty fast path anywhere.
+fn sample_metrics() -> ClusterMetrics {
+    let shard = ShardMetrics {
+        shard: 0,
+        alive: true,
+        queue_depth: 2,
+        active_slots: 1,
+        queue_bound: 64,
+        completed: 5,
+        cancelled: 1,
+        failed: 1,
+        deadline_exceeded: 1,
+        decode_steps: 40,
+        decode_tokens: 80,
+        tokens_per_sec: 123.4,
+        ttft_sum_ms: 50.0,
+        ttft_count: 5,
+        peak_cache_bytes: 4096,
+        sessions_live: 1,
+        session_turns: 3,
+        session_prefill_tokens_saved: 17,
+        ..ShardMetrics::default()
+    };
+    ClusterMetrics { queue_bound: 64, shards: vec![shard] }
+}
+
+#[test]
+fn stats_pair_order_matches_golden() {
+    let golden = golden_section("stats");
+    assert_eq!(golden[0].name, "v");
+    assert_eq!(golden[1].name, "event");
+    let want: Vec<&str> = golden[2..].iter().map(|k| k.name.as_str()).collect();
+
+    let m = sample_metrics();
+    let got: Vec<&str> = m.summary_pairs().iter().map(|(k, _)| *k).collect();
+    assert_eq!(got, want,
+               "summary_pairs() order drifted from [stats] golden \
+                (keys are append-only)");
+
+    // full_pairs (the `metrics` frame) = stats pairs + per_shard tail.
+    let full: Vec<&str> = m.full_pairs().iter().map(|(k, _)| *k).collect();
+    assert_eq!(&full[..want.len()], &want[..]);
+    assert_eq!(&full[want.len()..], &["per_shard"][..]);
+}
+
+#[test]
+fn stats_and_metrics_frames_match_golden_key_sets() {
+    let m = sample_metrics();
+    let stats = golden_section("stats");
+    assert_key_set(&wire::encode_stats(m.summary_pairs()), &stats, false,
+                   "stats frame");
+
+    let mut with_per_shard: Vec<Key> = golden_section("stats");
+    with_per_shard.push(Key { name: "per_shard".to_string(), optional: false });
+    let metrics = wire::encode_metrics(m.full_pairs());
+    assert_key_set(&metrics, &with_per_shard, false, "metrics frame");
+
+    let per_shard = golden_section("per_shard");
+    match metrics.get("per_shard") {
+        Some(Value::Arr(rows)) if !rows.is_empty() => {
+            for row in rows {
+                assert_key_set(row, &per_shard, false, "per_shard row");
+            }
+        }
+        other => panic!("metrics frame lost per_shard rows: {other:?}"),
+    }
+}
+
+#[test]
+fn finished_frame_matches_golden_key_set() {
+    let golden = golden_section("finished");
+    let stats = RequestStats {
+        prompt_len: 7,
+        generated: 3,
+        ttft_ms: 1.0,
+        decode_ms: 2.0,
+        queued_ms: 0.5,
+        session: None,
+    };
+
+    // one-shot: every required key, no optional ones
+    let ev = GenerationEvent::Finished {
+        reason: FinishReason::Stop,
+        stats: stats.clone(),
+    };
+    assert_key_set(&wire::encode_event(9, &ev, None), &golden, true,
+                   "finished frame (one-shot)");
+
+    // chat turn: the optional `session` key rides along
+    let ev = GenerationEvent::Finished {
+        reason: FinishReason::Stop,
+        stats: RequestStats { session: Some(12), ..stats },
+    };
+    assert_key_set(&wire::encode_event(9, &ev, None), &golden, false,
+                   "finished frame (chat)");
+}

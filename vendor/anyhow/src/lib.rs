@@ -172,6 +172,22 @@ macro_rules! bail {
     };
 }
 
+/// Early-return with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($tt:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($tt)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ", stringify!($cond))));
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +226,18 @@ mod tests {
             bail!("nope {}", 1);
         }
         assert_eq!(failing().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn ensure_gates_on_condition() {
+        fn inner(x: usize) -> Result<()> {
+            ensure!(x < 10, "too big: {x}");
+            ensure!(x != 5);
+            Ok(())
+        }
+        assert!(inner(3).is_ok());
+        assert_eq!(inner(30).unwrap_err().to_string(), "too big: 30");
+        assert!(inner(5).unwrap_err().to_string().contains("x != 5"));
     }
 
     #[test]
