@@ -85,7 +85,7 @@ fn run(art: &Artifacts, shared_pct: usize, prefix_pages: usize) -> Result<Run> {
         bail!("leak: {} pages still allocated after the prefix flush",
               session.pool_in_use());
     }
-    Ok(Run { ttft: LatencySummary::of(&mut ttfts), stats, streams })
+    Ok(Run { ttft: LatencySummary::of(&ttfts), stats, streams })
 }
 
 /// Acceptance: cache-on ≡ cache-off token streams at every mix, plus

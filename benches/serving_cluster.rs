@@ -87,11 +87,14 @@ fn run_workload(art: &Artifacts, shards: usize, n_batch: usize,
             .map_err(|e| anyhow::anyhow!("{e}")))
         .collect::<Result<_>>()?;
 
-    let mut i_out = drain_class(&interactive)?;
+    let i_out = drain_class(&interactive)?;
     let mut b_out = drain_class(&batch)?;
     let wall = t0.elapsed().as_secs_f64();
-    let i_sum = LatencySummary::of(&mut i_out.ttfts);
-    let b_sum = LatencySummary::of(&mut b_out.ttfts); // sorts ascending
+    let i_sum = LatencySummary::of(&i_out.ttfts);
+    let b_sum = LatencySummary::of(&b_out.ttfts);
+    // sort explicitly for the tail slice (LatencySummary no longer
+    // mutates its input — it reduces through telemetry::Histogram)
+    b_out.ttfts.sort_by(|a, b| a.total_cmp(b));
     let tail: &[f64] = &b_out.ttfts[b_out.ttfts.len()
                                         .saturating_sub(n_interactive)..];
     let tail_mean = tail.iter().sum::<f64>() / tail.len().max(1) as f64;

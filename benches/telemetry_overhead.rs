@@ -1,0 +1,237 @@
+//! Telemetry overhead bench: decode throughput with the span recorder
+//! off vs on, on the identical continuous-batching workload.
+//!
+//! Full mode drives the same request mix three times — recorder
+//! disabled, recorder on at full fidelity, and recorder on with 1-in-8
+//! `decode_token` sampling — and reports wall time, decode tokens/sec
+//! and spans drained per configuration.  Recording is a bounds check
+//! plus a 64-byte copy into a preallocated ring, so the on/off columns
+//! should be indistinguishable; the table is the receipt.
+//!
+//! `--check` is the CI acceptance smoke: a disabled recorder must
+//! record nothing, an enabled one must account for every span the
+//! lifecycle implies **exactly** (queued / prefill / admitted /
+//! finish per request, `decode_token` against the engine's decode-token
+//! counter through the sampler, tick phases against `decode_steps`),
+//! the engine percentiles must be finite and monotone
+//! (p50 ≤ p90 ≤ p99 ≤ p99.9), and the drained ring must shape valid
+//! Chrome-trace JSON.
+//!
+//! Like the other serving benches, it self-skips with exit 0 when AOT
+//! artifacts are absent, so CI stays green without `make artifacts`.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use quarot::api::{GenerationParams, LocalSession, SessionConfig};
+use quarot::bench_support::{record, Artifacts, CheckSink};
+use quarot::coordinator::batcher::{EngineStats, GenerationEngine};
+use quarot::coordinator::runner::QuantSpec;
+use quarot::telemetry::{chrome_trace_json, Span};
+use quarot::util::bench::Table;
+use quarot::util::json;
+
+const MODEL: &str = "tiny-mha";
+const SEED: u64 = 23;
+const PAGES: usize = 4096;
+const PROMPT: usize = 16;
+/// Ring capacity for the traced runs — sized so the workload can never
+/// wrap (wrapping would break the exact span accounting).
+const RING: usize = 4096;
+
+struct Run {
+    wall_ms: f64,
+    spans: Vec<Span>,
+    stats: EngineStats,
+}
+
+impl Run {
+    fn tokens_per_sec(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            return 0.0;
+        }
+        self.stats.decode_tokens as f64 / (self.wall_ms / 1e3)
+    }
+}
+
+/// Drive `n_reqs` concurrent requests of `max_new` tokens each through
+/// a fresh engine at a fixed seed, then drain its span ring.
+fn run(art: &Artifacts, n_reqs: usize, max_new: usize, ring: usize,
+       sample: u64) -> Result<Run> {
+    let runner = art.runner(QuantSpec::quarot(4), None)?;
+    let s = LocalSession::new(GenerationEngine::new(runner, PAGES, SEED),
+                              SessionConfig::default());
+    s.set_trace_buffer(ring);
+    s.set_trace_sample(sample);
+    let eval = art.corpus.split("eval")?;
+    if eval.len() < n_reqs * PROMPT {
+        bail!("eval split too short ({} tokens) for {n_reqs} prompts",
+              eval.len());
+    }
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_reqs)
+        .map(|i| {
+            let prompt = eval[i * PROMPT..(i + 1) * PROMPT].to_vec();
+            s.submit(GenerationParams::new(prompt).max_new(max_new))
+                .map_err(|e| anyhow!("{e}"))
+        })
+        .collect::<Result<_>>()?;
+    for h in &handles {
+        h.wait()?;
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok(Run { wall_ms, spans: s.drain_spans(), stats: s.stats() })
+}
+
+fn count(spans: &[Span], name: &str) -> usize {
+    spans.iter().filter(|sp| sp.name == name).count()
+}
+
+/// Finiteness + monotonicity gate over one engine histogram's
+/// percentile ladder.
+fn check_hist(sink: &mut CheckSink, label: &str,
+              hist: &quarot::telemetry::Histogram, want_count: u64)
+              -> Result<()> {
+    if hist.count() != want_count {
+        bail!("{label}: {} samples recorded, expected {want_count}",
+              hist.count());
+    }
+    let mut prev = 0.0f64;
+    for (q, tag) in [(0.50, "p50"), (0.90, "p90"), (0.99, "p99"),
+                     (0.999, "p99.9")] {
+        let v = hist.quantile(q);
+        sink.cell(&format!("{label} {tag}"), v)?;
+        if v + 1e-9 < prev {
+            bail!("{label}: {tag} = {v} < previous quantile {prev} — \
+                   percentile ladder must be monotone");
+        }
+        prev = v;
+    }
+    Ok(())
+}
+
+/// Acceptance: exact span accounting on/off/sampled, monotone finite
+/// percentiles, valid Chrome-trace shaping.
+fn check(art: &Artifacts, sink: &mut CheckSink) -> Result<()> {
+    let (n, g) = (4usize, 8usize);
+
+    // recorder disabled: the hot path must record nothing at all
+    let off = run(art, n, g, 0, 1)?;
+    if !off.spans.is_empty() {
+        bail!("disabled recorder drained {} span(s)", off.spans.len());
+    }
+    sink.cell("off tok/s", off.tokens_per_sec())?;
+
+    // recorder on, full fidelity: every lifecycle span accounted for
+    let on = run(art, n, g, RING, 1)?;
+    sink.cell("on tok/s", on.tokens_per_sec())?;
+    if on.spans.len() >= RING {
+        bail!("span ring wrapped — grow RING to keep accounting exact");
+    }
+    if on.stats.decode_tokens != n * (g - 1) {
+        bail!("workload drifted: {} decode tokens, expected {} \
+               ({} reqs × {} post-admission tokens)",
+              on.stats.decode_tokens, n * (g - 1), n, g - 1);
+    }
+    let steps = on.stats.decode_steps;
+    for (name, want) in [
+        ("queued", n),
+        ("prefill", n),
+        ("admitted", n),
+        ("finish:max_tokens", n),
+        // the first token of each request lands at admission; every
+        // later one is a decode-tick sample with its own span
+        ("decode_token", on.stats.decode_tokens),
+        ("tick.decode", steps),
+        ("tick.sample", steps),
+        ("tick.append", steps),
+    ] {
+        let got = count(&on.spans, name);
+        if got != want {
+            bail!("span accounting: {got} `{name}` span(s), expected {want}");
+        }
+    }
+    // admit runs on every tick, decode only on ticks with active slots
+    if count(&on.spans, "tick.admit") < steps {
+        bail!("fewer tick.admit spans than decode ticks");
+    }
+
+    // percentile ladders: one TTFT/queue-wait sample per request, one
+    // ITL sample per decode token, one tick sample per decode step
+    check_hist(sink, "ttft", &on.stats.ttft_hist, n as u64)?;
+    check_hist(sink, "itl", &on.stats.itl_hist,
+               on.stats.decode_tokens as u64)?;
+    check_hist(sink, "queue_wait", &on.stats.queue_wait_hist, n as u64)?;
+    check_hist(sink, "tick", &on.stats.tick_hist, steps as u64)?;
+
+    // 1-in-K sampling thins exactly the decode_token stream
+    let k = 8u64;
+    let sampled = run(art, n, g, RING, k)?;
+    sink.cell("sampled tok/s", sampled.tokens_per_sec())?;
+    let want = sampled.stats.decode_tokens / k as usize;
+    if count(&sampled.spans, "decode_token") != want {
+        bail!("1-in-{k} sampling kept {} decode spans, expected {want}",
+              count(&sampled.spans, "decode_token"));
+    }
+    for name in ["queued", "prefill", "admitted", "finish:max_tokens"] {
+        if count(&sampled.spans, name) != n {
+            bail!("sampling must not thin lifecycle `{name}` spans");
+        }
+    }
+
+    // the drained ring shapes a valid Chrome-trace document
+    let doc = chrome_trace_json(&on.spans, 0);
+    let back = json::parse(&json::write(&doc))
+        .map_err(|e| anyhow!("trace JSON does not round-trip: {e}"))?;
+    let events = back.get("traceEvents").and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("trace JSON lost its traceEvents array"))?;
+    if events.len() != on.spans.len() {
+        bail!("trace export: {} events from {} spans", events.len(),
+              on.spans.len());
+    }
+
+    println!("[check] {} spans accounted exactly over {n}×{g} tokens; \
+              sampled run kept {want} decode span(s)",
+             on.spans.len());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let mut sink = CheckSink::new("telemetry_overhead");
+    let art = match Artifacts::load(MODEL) {
+        Ok(a) => a,
+        Err(_) => {
+            eprintln!("[skip] artifacts missing — run `make artifacts`");
+            return Ok(());
+        }
+    };
+
+    if sink.active() {
+        check(&art, &mut sink)?;
+        sink.done();
+        return Ok(());
+    }
+
+    let (n, g) = (8usize, 32usize);
+    let configs: [(&str, usize, u64); 3] = [
+        ("tracing off", 0, 1),
+        ("tracing on", RING, 1),
+        ("on, 1-in-8", RING, 8),
+    ];
+    let mut t = Table::new(
+        "Telemetry overhead — decode throughput, span recorder off vs on",
+        &["config", "wall ms", "decode tok/s", "spans drained"]);
+    for (label, ring, sample) in configs {
+        let r = run(&art, n, g, ring, sample)?;
+        println!("  {label:11} {:.1} ms, {:.0} tok/s, {} span(s)",
+                 r.wall_ms, r.tokens_per_sec(), r.spans.len());
+        t.row(vec![
+            label.to_string(),
+            format!("{:.1}", r.wall_ms),
+            format!("{:.0}", r.tokens_per_sec()),
+            format!("{}", r.spans.len()),
+        ]);
+    }
+    record("telemetry_overhead", &t.render())
+}

@@ -14,6 +14,7 @@ use super::{EventSource, GenerationEvent, GenerationParams, InferenceService,
             RequestHandle, RequestId, SubmitError};
 use crate::coordinator::batcher::{EngineStats, GenerationEngine};
 use crate::coordinator::prefix::PrefixStats;
+use crate::telemetry::Span;
 
 /// Session-level knobs.
 #[derive(Clone, Copy, Debug)]
@@ -172,6 +173,23 @@ impl LocalSession {
     /// Live conversations (the `sessions_live` gauge).
     pub fn sessions_live(&self) -> usize {
         self.core.borrow().engine.sessions_live()
+    }
+
+    /// Enable request-lifecycle tracing with a span ring of `capacity`
+    /// entries (0 disables; the ring overwrites oldest-first).
+    pub fn set_trace_buffer(&self, capacity: usize) {
+        self.core.borrow_mut().engine.set_trace_buffer(capacity);
+    }
+
+    /// Keep one in every `every` per-token `decode_token` spans
+    /// (1 = keep all; lifecycle and tick-phase spans are never sampled).
+    pub fn set_trace_sample(&self, every: u64) {
+        self.core.borrow_mut().engine.set_trace_sample(every);
+    }
+
+    /// Drain the recorded spans in record order, emptying the ring.
+    pub fn drain_spans(&self) -> Vec<Span> {
+        self.core.borrow_mut().engine.drain_spans()
     }
 }
 

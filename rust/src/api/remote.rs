@@ -33,6 +33,7 @@ struct RemoteCore {
     released: HashSet<RequestId>,
     stats: VecDeque<Value>,
     metrics: VecDeque<Value>,
+    traces: VecDeque<Value>,
     /// Pending `flush-prefix` acknowledgements.
     flush_acks: usize,
     saw_shutdown: bool,
@@ -78,6 +79,7 @@ impl RemoteCore {
                 }
                 ServerFrame::Stats(v) => self.stats.push_back(v),
                 ServerFrame::Metrics(v) => self.metrics.push_back(v),
+                ServerFrame::Trace(v) => self.traces.push_back(v),
                 ServerFrame::FlushPrefixAck => self.flush_acks += 1,
                 ServerFrame::Error { id, error } => {
                     // Id-tagged advisory errors are never injected into a
@@ -151,6 +153,7 @@ impl Client {
                 released: HashSet::new(),
                 stats: VecDeque::new(),
                 metrics: VecDeque::new(),
+                traces: VecDeque::new(),
                 flush_acks: 0,
                 saw_shutdown: false,
             })),
@@ -244,6 +247,22 @@ impl Client {
         core.send(&wire::encode_cmd("metrics"))?;
         loop {
             if let Some(v) = core.metrics.pop_front() {
+                return Ok(v);
+            }
+            core.pump_one()?;
+        }
+    }
+
+    /// Drain every shard's span ring into a Chrome-trace frame
+    /// (`{"v":2,"event":"trace","traceEvents":[..]}`).  The
+    /// `traceEvents` value is a complete Chrome-trace / Perfetto
+    /// document body; each call returns the window recorded since the
+    /// previous one (the server-side rings are emptied by the drain).
+    pub fn trace(&mut self) -> Result<Value> {
+        let mut core = self.core.borrow_mut();
+        core.send(&wire::encode_cmd("trace"))?;
+        loop {
+            if let Some(v) = core.traces.pop_front() {
                 return Ok(v);
             }
             core.pump_one()?;

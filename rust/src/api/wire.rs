@@ -28,6 +28,7 @@
 //! {"v":2,"cmd":"cancel","id":7}
 //! {"v":2,"cmd":"stats"}
 //! {"v":2,"cmd":"metrics"}
+//! {"v":2,"cmd":"trace"}
 //! {"v":2,"cmd":"flush-prefix"}
 //! {"v":2,"cmd":"shutdown"}
 //! ```
@@ -57,8 +58,13 @@
 //! keys strictly after the pre-existing ones (`kv4_*`/`kv8_*` stats keys
 //! in the tier revision; the `chat`/`flush-prefix` cmds, the session
 //! gauges, and the optional `finished.session` key in the session
+//! revision; the `trace` cmd plus the `*_p50/p90/p99/p999_ms` latency
+//! percentile keys on `stats`/`metrics` frames in the telemetry
 //! revision), so a v2 client older than the server parses every frame it
-//! knew about unchanged.
+//! knew about unchanged.  `trace` answers
+//! `{"v":2,"event":"trace","traceEvents":[..]}` — the drained span ring
+//! in Chrome-trace JSON array format (load the `traceEvents` value in
+//! `chrome://tracing` or Perfetto).
 
 use anyhow::{bail, Context, Result};
 
@@ -149,6 +155,12 @@ pub fn encode_stats(fields: Vec<(&str, Value)>) -> Value {
 /// Full per-shard metrics reply (`{"cmd":"metrics"}` answer).
 pub fn encode_metrics(fields: Vec<(&str, Value)>) -> Value {
     tag(fields, "metrics")
+}
+
+/// Chrome-trace reply (`{"cmd":"trace"}` answer): the drained span
+/// ring as a `traceEvents` array (Chrome-trace / Perfetto JSON).
+pub fn encode_trace(trace_events: Vec<Value>) -> Value {
+    tag(vec![("traceEvents", Value::Arr(trace_events))], "trace")
 }
 
 /// Protocol-level error, optionally tied to a request id.
@@ -282,6 +294,9 @@ pub enum ClientFrame {
     Stats,
     /// Full per-shard cluster metrics.
     Metrics,
+    /// Drain every shard's span ring as Chrome-trace JSON
+    /// (`{"cmd":"trace"}`).
+    Trace,
     /// Drop every shard's prefix-cache entries (`{"cmd":"flush-prefix"}`).
     FlushPrefix,
     Shutdown,
@@ -317,6 +332,7 @@ pub fn parse_client_frame(v: &Value) -> Result<ClientFrame> {
         }),
         Some("stats") => Ok(ClientFrame::Stats),
         Some("metrics") => Ok(ClientFrame::Metrics),
+        Some("trace") => Ok(ClientFrame::Trace),
         Some("flush-prefix") => Ok(ClientFrame::FlushPrefix),
         Some("shutdown") => Ok(ClientFrame::Shutdown),
         Some(other) => bail!("unknown cmd '{other}'"),
@@ -338,6 +354,8 @@ pub enum ServerFrame {
     Stats(Value),
     /// Per-shard cluster metrics payload.
     Metrics(Value),
+    /// Chrome-trace payload (the whole frame, `traceEvents` inside).
+    Trace(Value),
     /// `flush-prefix` acknowledgement.
     FlushPrefixAck,
     Error { id: Option<RequestId>, error: String },
@@ -412,6 +430,7 @@ pub fn parse_server_frame(v: &Value) -> Result<ServerFrame> {
         }
         "stats" => ServerFrame::Stats(v.clone()),
         "metrics" => ServerFrame::Metrics(v.clone()),
+        "trace" => ServerFrame::Trace(v.clone()),
         "flush-prefix" => ServerFrame::FlushPrefixAck,
         "error" => ServerFrame::Error {
             id: v.get("id").and_then(|i| i.as_usize()).map(|i| i as u64),
@@ -534,6 +553,29 @@ mod tests {
         match parse_server_frame(&mf).unwrap() {
             ServerFrame::Metrics(v) => {
                 assert_eq!(v.get("shards").unwrap().as_usize(), Some(2));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_frames_roundtrip() {
+        assert!(matches!(parse_client_frame(&reparse(&encode_cmd("trace"))),
+                         Ok(ClientFrame::Trace)));
+        let span = crate::telemetry::Span::new("prefill", 7, 1.5, 2.0)
+            .arg("graft_tokens", 16.0);
+        let events = crate::telemetry::chrome_trace_events(&[span], 0);
+        let frame = reparse(&encode_trace(events));
+        match parse_server_frame(&frame).unwrap() {
+            ServerFrame::Trace(v) => {
+                let evs = v.get("traceEvents").and_then(|e| e.as_arr())
+                    .expect("traceEvents array");
+                assert_eq!(evs.len(), 1);
+                assert_eq!(evs[0].get("name").unwrap().as_str(),
+                           Some("prefill"));
+                // Chrome-trace timestamps are microseconds
+                assert_eq!(evs[0].get("ts").unwrap().as_f64(), Some(1500.0));
+                assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
             }
             other => panic!("wrong frame {other:?}"),
         }

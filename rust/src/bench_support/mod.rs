@@ -169,26 +169,35 @@ pub fn drain_event_signatures(handles: &[RequestHandle])
     }).collect()
 }
 
-/// Drained outcomes of one scheduling class: raw TTFT samples (unsorted)
-/// plus total generated tokens.  Feed the samples to
-/// [`crate::cluster::LatencySummary::of`] for mean/p95.
+/// Drained outcomes of one scheduling class: raw TTFT and mean
+/// inter-token-latency samples (unsorted) plus total generated tokens.
+/// Feed the samples to [`crate::cluster::LatencySummary::of`] for
+/// mean/p50/p95/p99.
 pub struct DrainedClass {
     pub ttfts: Vec<f64>,
+    /// One sample per request that generated ≥ 2 tokens: its decode
+    /// time divided by its token gaps (a per-request mean ITL — the
+    /// engine-side `itl_hist` has the true per-gap distribution).
+    pub itls: Vec<f64>,
     pub tokens: usize,
 }
 
 /// Block until every handle reaches its terminal event, collecting the
-/// class's TTFT samples and token count (shared by
+/// class's TTFT/ITL samples and token count (shared by
 /// `benches/serving_cluster.rs` and `quarot cluster-bench`).
 pub fn drain_class(handles: &[RequestHandle]) -> Result<DrainedClass> {
     let mut ttfts = Vec::with_capacity(handles.len());
+    let mut itls = Vec::with_capacity(handles.len());
     let mut tokens = 0usize;
     for h in handles {
         let out = h.wait()?;
         ttfts.push(out.stats.ttft_ms);
+        if out.stats.generated > 1 {
+            itls.push(out.stats.decode_ms / (out.stats.generated - 1) as f64);
+        }
         tokens += out.tokens.len();
     }
-    Ok(DrainedClass { ttfts, tokens })
+    Ok(DrainedClass { ttfts, itls, tokens })
 }
 
 /// Write a rendered table into bench_out/<name>.txt (and echo to stdout).

@@ -19,8 +19,8 @@
 //! 3. `bench-check` — every benches/*.rs must expose a `-- --check`
 //!    smoke mode (the CI acceptance hook).
 //! 4. `pub-docs` — every `pub` item declaration (fn / struct / enum /
-//!    trait / const / static / type) in rust/src/api and
-//!    rust/src/cluster carries a `///` doc comment.  `pub use`
+//!    trait / const / static / type) in rust/src/api, rust/src/cluster
+//!    and rust/src/telemetry carries a `///` doc comment.  `pub use`
 //!    re-exports, `pub mod` declarations (documented module-side with
 //!    `//!`) and struct fields are out of scope.
 //!
@@ -426,7 +426,7 @@ fn is_pub_item(trimmed: &str) -> bool {
 
 fn check_pub_docs(root: &Path, findings: &mut Vec<Finding>)
                   -> Result<(), String> {
-    for sub in ["rust/src/api", "rust/src/cluster"] {
+    for sub in ["rust/src/api", "rust/src/cluster", "rust/src/telemetry"] {
         let mut files = Vec::new();
         rs_files(&root.join(sub), &mut files)?;
         for path in files {

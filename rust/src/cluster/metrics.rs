@@ -14,30 +14,43 @@
 use crate::coordinator::batcher::GenerationEngine;
 use crate::coordinator::kvcache::PoolStats;
 use crate::coordinator::prefix::PrefixStats;
+use crate::telemetry::Histogram;
 use crate::util::bench::Table;
 use crate::util::json::{n, obj, Value};
 
-/// Mean / p95 over a batch of latency samples — the one reduction the
-/// bench harnesses and `cluster-bench` share (nearest-rank p95 on the
-/// sorted samples).
+/// Mean / percentiles over a batch of latency samples — the one
+/// reduction the bench harnesses and `cluster-bench` share.  Backed by
+/// [`telemetry::Histogram`](crate::telemetry::Histogram): the mean is
+/// exact (sum/count), percentiles are log-bucket quantized (≲19 %
+/// relative error) and therefore consistent with the wire
+/// `stats`/`metrics` percentile keys, which flow through the same
+/// histogram.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LatencySummary {
     pub mean_ms: f64,
+    pub p50_ms: f64,
     pub p95_ms: f64,
+    pub p99_ms: f64,
 }
 
 impl LatencySummary {
-    /// Sorts `samples` ascending in place; empty input yields zeros.
-    pub fn of(samples: &mut [f64]) -> LatencySummary {
-        if samples.is_empty() {
-            return LatencySummary::default();
+    /// Reduce a sample batch (order irrelevant; empty yields zeros).
+    pub fn of(samples: &[f64]) -> LatencySummary {
+        let mut h = Histogram::new();
+        for &s in samples {
+            h.record(s);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        // nearest-rank: the ceil(0.95·n)-th smallest sample (1-based)
-        let rank = (samples.len() * 95).div_ceil(100);
+        LatencySummary::of_hist(&h)
+    }
+
+    /// Reduce an already-built histogram (e.g. a merged shard
+    /// aggregate) to the bench-facing summary.
+    pub fn of_hist(h: &Histogram) -> LatencySummary {
         LatencySummary {
-            mean_ms: samples.iter().sum::<f64>() / samples.len() as f64,
-            p95_ms: samples[rank - 1],
+            mean_ms: h.mean_ms(),
+            p50_ms: h.quantile(0.50),
+            p95_ms: h.quantile(0.95),
+            p99_ms: h.quantile(0.99),
         }
     }
 }
@@ -79,6 +92,14 @@ pub struct ShardMetrics {
     /// prompt tokens resume turns skipped prefilling because the
     /// session's donated chain was grafted from the prefix trie
     pub session_prefill_tokens_saved: usize,
+    /// time-to-first-token distribution (mergeable log histogram)
+    pub ttft_hist: Histogram,
+    /// inter-token latency distribution
+    pub itl_hist: Histogram,
+    /// admission queue-wait distribution
+    pub queue_wait_hist: Histogram,
+    /// decode-tick duration distribution
+    pub tick_hist: Histogram,
 }
 
 impl ShardMetrics {
@@ -111,6 +132,10 @@ impl ShardMetrics {
             sessions_live: engine.sessions_live(),
             session_turns: st.session_turns,
             session_prefill_tokens_saved: st.session_prefill_tokens_saved,
+            ttft_hist: st.ttft_hist.clone(),
+            itl_hist: st.itl_hist.clone(),
+            queue_wait_hist: st.queue_wait_hist.clone(),
+            tick_hist: st.tick_hist.clone(),
         }
     }
 
@@ -165,6 +190,24 @@ impl ShardMetrics {
             ("session_turns", n(self.session_turns as f64)),
             ("session_prefill_tokens_saved",
              n(self.session_prefill_tokens_saved as f64)),
+            // latency-percentile additions — appended after the session
+            // tail key so positional consumers keep working
+            ("ttft_p50_ms", n(self.ttft_hist.quantile(0.50))),
+            ("ttft_p90_ms", n(self.ttft_hist.quantile(0.90))),
+            ("ttft_p99_ms", n(self.ttft_hist.quantile(0.99))),
+            ("ttft_p999_ms", n(self.ttft_hist.quantile(0.999))),
+            ("itl_p50_ms", n(self.itl_hist.quantile(0.50))),
+            ("itl_p90_ms", n(self.itl_hist.quantile(0.90))),
+            ("itl_p99_ms", n(self.itl_hist.quantile(0.99))),
+            ("itl_p999_ms", n(self.itl_hist.quantile(0.999))),
+            ("queue_wait_p50_ms", n(self.queue_wait_hist.quantile(0.50))),
+            ("queue_wait_p90_ms", n(self.queue_wait_hist.quantile(0.90))),
+            ("queue_wait_p99_ms", n(self.queue_wait_hist.quantile(0.99))),
+            ("queue_wait_p999_ms", n(self.queue_wait_hist.quantile(0.999))),
+            ("tick_p50_ms", n(self.tick_hist.quantile(0.50))),
+            ("tick_p90_ms", n(self.tick_hist.quantile(0.90))),
+            ("tick_p99_ms", n(self.tick_hist.quantile(0.99))),
+            ("tick_p999_ms", n(self.tick_hist.quantile(0.999))),
         ])
     }
 }
@@ -320,13 +363,55 @@ impl ClusterMetrics {
         sum / count as f64
     }
 
+    /// Cluster-wide TTFT distribution: the shard histograms *merged*
+    /// (bucket-count addition), never averaged — a shard serving 9× the
+    /// traffic weighs 9× in every quantile, exactly as the union of the
+    /// underlying samples would.
+    pub fn ttft_hist(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for s in &self.shards {
+            h.merge(&s.ttft_hist);
+        }
+        h
+    }
+
+    /// Cluster-wide inter-token latency distribution (merged shards).
+    pub fn itl_hist(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for s in &self.shards {
+            h.merge(&s.itl_hist);
+        }
+        h
+    }
+
+    /// Cluster-wide admission queue-wait distribution (merged shards).
+    pub fn queue_wait_hist(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for s in &self.shards {
+            h.merge(&s.queue_wait_hist);
+        }
+        h
+    }
+
+    /// Cluster-wide decode-tick duration distribution (merged shards).
+    pub fn tick_hist(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for s in &self.shards {
+            h.merge(&s.tick_hist);
+        }
+        h
+    }
+
     /// Flat cluster-wide aggregates — the v2 `stats` frame payload.  The
     /// pre-cluster keys (`completed`, `pool_pages_in_use`, `queue_bound`,
     /// ...) keep their meaning; `queue_depth` / `active_slots` / `shards`
     /// / `deadline_exceeded` / `kv_high_water` / `avg_ttft_ms` are the
     /// live-load additions.
     pub fn summary_pairs(&self) -> Vec<(&'static str, Value)> {
-        vec![
+        let (ttft, itl, qw, tick) =
+            (self.ttft_hist(), self.itl_hist(),
+             self.queue_wait_hist(), self.tick_hist());
+        let mut pairs = vec![
             ("shards", n(self.shards.len() as f64)),
             ("live_shards", n(self.live_shards() as f64)),
             ("queue_bound", n(self.queue_bound as f64)),
@@ -362,7 +447,29 @@ impl ClusterMetrics {
             ("session_turns", n(self.session_turns() as f64)),
             ("session_prefill_tokens_saved",
              n(self.session_prefill_tokens_saved() as f64)),
-        ]
+        ];
+        // latency-percentile additions — merged shard histograms (never
+        // averages of shard averages), appended after the session tail
+        // key so positional consumers of older frames keep working
+        pairs.extend([
+            ("ttft_p50_ms", n(ttft.quantile(0.50))),
+            ("ttft_p90_ms", n(ttft.quantile(0.90))),
+            ("ttft_p99_ms", n(ttft.quantile(0.99))),
+            ("ttft_p999_ms", n(ttft.quantile(0.999))),
+            ("itl_p50_ms", n(itl.quantile(0.50))),
+            ("itl_p90_ms", n(itl.quantile(0.90))),
+            ("itl_p99_ms", n(itl.quantile(0.99))),
+            ("itl_p999_ms", n(itl.quantile(0.999))),
+            ("queue_wait_p50_ms", n(qw.quantile(0.50))),
+            ("queue_wait_p90_ms", n(qw.quantile(0.90))),
+            ("queue_wait_p99_ms", n(qw.quantile(0.99))),
+            ("queue_wait_p999_ms", n(qw.quantile(0.999))),
+            ("tick_p50_ms", n(tick.quantile(0.50))),
+            ("tick_p90_ms", n(tick.quantile(0.90))),
+            ("tick_p99_ms", n(tick.quantile(0.99))),
+            ("tick_p999_ms", n(tick.quantile(0.999))),
+        ]);
+        pairs
     }
 
     /// Summary plus the per-shard breakdown — the `{"cmd":"metrics"}`
@@ -503,7 +610,10 @@ mod tests {
                     "kv4_decode_tokens", "kv8_decode_tokens",
                     // session additions
                     "sessions_live", "session_turns",
-                    "session_prefill_tokens_saved"] {
+                    "session_prefill_tokens_saved",
+                    // latency-percentile additions
+                    "ttft_p50_ms", "ttft_p999_ms", "itl_p50_ms",
+                    "queue_wait_p99_ms", "tick_p90_ms"] {
             assert!(v.get(key).is_some(), "summary missing key {key}");
         }
         // new keys append strictly after every pre-existing key: a v1
@@ -514,6 +624,8 @@ mod tests {
                 "tier keys must append after the v1 tail key");
         assert!(idx("sessions_live") > idx("kv8_decode_tokens"),
                 "session keys must append after the tier tail key");
+        assert!(idx("ttft_p50_ms") > idx("session_prefill_tokens_saved"),
+                "percentile keys must append after the session tail key");
         // same contract on the per-shard rows
         let row = m.shards[0].to_value();
         assert_eq!(row.get("sessions_live").unwrap().as_usize(), Some(1));
@@ -541,18 +653,58 @@ mod tests {
     }
 
     #[test]
-    fn latency_summary_sorts_and_reduces() {
-        let mut samples = vec![5.0, 1.0, 3.0, 2.0, 4.0];
-        let s = LatencySummary::of(&mut samples);
-        assert_eq!(samples, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
-        assert!((s.mean_ms - 3.0).abs() < 1e-12);
-        // nearest-rank p95 of 5 samples = ceil(4.75) = 5th = the max —
-        // small batches must not understate their tail
+    fn latency_summary_reduces_through_the_histogram() {
+        let samples = [5.0, 1.0, 3.0, 2.0, 4.0];
+        let s = LatencySummary::of(&samples);
+        assert!((s.mean_ms - 3.0).abs() < 1e-12, "mean is exact");
+        // log buckets at 4/octave have <=~19% width: percentile reads are
+        // representative values, not exact order statistics
+        assert!((s.p50_ms - 3.0).abs() / 3.0 < 0.2, "p50 ~ median");
+        // the tail quantiles of 5 samples land in the max's bucket, and
+        // quantile() clamps to the observed max — small batches must not
+        // understate (or overstate) their tail
         assert_eq!(s.p95_ms, 5.0);
-        let mut twenty: Vec<f64> = (1..=20).map(|i| i as f64).collect();
-        assert_eq!(LatencySummary::of(&mut twenty).p95_ms, 19.0);
-        let empty = LatencySummary::of(&mut []);
-        assert_eq!((empty.mean_ms, empty.p95_ms), (0.0, 0.0));
+        assert_eq!(s.p99_ms, 5.0);
+        // constant stream: every percentile is the value, exactly
+        let c = LatencySummary::of(&[7.0; 9]);
+        assert_eq!((c.p50_ms, c.p99_ms), (7.0, 7.0));
+        let empty = LatencySummary::of(&[]);
+        assert_eq!((empty.mean_ms, empty.p50_ms, empty.p95_ms, empty.p99_ms),
+                   (0.0, 0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn cluster_percentiles_merge_histograms_not_shard_averages() {
+        // shard 0: 90 fast requests (2ms TTFT); shard 1: 10 slow (200ms).
+        // Averaging per-shard medians would claim ~101ms "typical" —
+        // merging the histograms must keep p50 at the fast cohort and
+        // the p99.9 tail at the slow one.
+        let mut fast = shard(0, 0, 0, 90);
+        for _ in 0..90 {
+            fast.ttft_hist.record(2.0);
+        }
+        let mut slow = shard(1, 0, 0, 10);
+        for _ in 0..10 {
+            slow.ttft_hist.record(200.0);
+        }
+        let naive_avg_of_medians =
+            (fast.ttft_hist.quantile(0.5) + slow.ttft_hist.quantile(0.5)) / 2.0;
+        assert!(naive_avg_of_medians > 50.0,
+                "precondition: the biased estimate is way off");
+
+        let m = ClusterMetrics { queue_bound: 8, shards: vec![fast, slow] };
+        let merged = m.ttft_hist();
+        assert_eq!(merged.count(), 100);
+        let p50 = merged.quantile(0.50);
+        assert!((p50 - 2.0).abs() / 2.0 < 0.2,
+                "merged p50 must track the 90% fast cohort, got {p50}");
+        let p999 = merged.quantile(0.999);
+        assert!((p999 - 200.0).abs() / 200.0 < 0.2,
+                "merged p99.9 must surface the slow tail, got {p999}");
+        // and that is what the wire summary reports
+        let v = obj(m.summary_pairs());
+        let wire_p50 = v.get("ttft_p50_ms").unwrap().as_f64().unwrap();
+        assert!((wire_p50 - p50).abs() < 1e-9);
     }
 
     #[test]

@@ -56,6 +56,8 @@ use crate::api::{EventSource, GenerationEvent, GenerationParams,
                  InferenceService, RequestHandle, RequestId, SubmitError};
 use crate::coordinator::batcher::{GenerationEngine, Request, TOKENS_PER_PAGE};
 use crate::session::SessionSpec;
+use crate::telemetry::{chrome_trace_events, Span};
+use crate::util::json::Value;
 
 pub mod metrics;
 
@@ -103,6 +105,10 @@ enum ShardMsg {
     },
     Metrics {
         reply: mpsc::Sender<ShardMetrics>,
+    },
+    /// Drain the shard's span ring (tracing; empties the ring).
+    Trace {
+        reply: mpsc::Sender<Vec<Span>>,
     },
     /// Flush the shard's prefix cache, releasing its pinned pages.
     ClearPrefix {
@@ -240,6 +246,11 @@ fn handle_msg(shard_idx: usize, engine: &mut GenerationEngine, msg: ShardMsg,
         ShardMsg::Metrics { reply } => {
             let _ = reply.send(ShardMetrics::from_engine(shard_idx, engine));
         }
+        ShardMsg::Trace { reply } => {
+            // the tick thread drains its own ring — readers never touch
+            // the recorder, so tracing cannot block or race the hot path
+            let _ = reply.send(engine.drain_spans());
+        }
         ShardMsg::ClearPrefix { reply } => {
             engine.clear_prefix_cache();
             publish_gauges(engine, gauges);
@@ -292,6 +303,9 @@ fn shard_loop(shard_idx: usize, n_shards: usize, factory: EngineFactory,
                     }
                     Ok(ShardMsg::Metrics { reply }) => {
                         let _ = reply.send(ShardMetrics::dead(shard_idx));
+                    }
+                    Ok(ShardMsg::Trace { reply }) => {
+                        let _ = reply.send(Vec::new());
                     }
                     Ok(ShardMsg::ClearPrefix { reply }) => {
                         let _ = reply.send(());
@@ -756,6 +770,33 @@ impl ClusterService {
     /// Snapshot every shard's live load and lifetime counters.
     pub fn metrics(&self) -> ClusterMetrics {
         self.core.borrow().metrics()
+    }
+
+    /// Drain every shard's span ring into Chrome-trace complete-event
+    /// objects (`pid` = shard index, `tid` = request id, 0 = engine
+    /// phases).  Draining empties the rings: each call returns the
+    /// window recorded since the previous one.  Shards with tracing
+    /// disabled (or dead) contribute nothing.
+    pub fn trace_events(&self) -> Vec<Value> {
+        let core = self.core.borrow();
+        // fan out first, collect second — like `metrics`, the wait
+        // overlaps across shards
+        let pending: Vec<Option<mpsc::Receiver<Vec<Span>>>> = core.shards
+            .iter()
+            .map(|s| {
+                let (rtx, rrx) = mpsc::channel();
+                s.ctl.send(ShardMsg::Trace { reply: rtx }).ok().map(|_| rrx)
+            })
+            .collect();
+        let mut events = Vec::new();
+        for (i, rrx) in pending.into_iter().enumerate() {
+            let spans = match rrx {
+                Some(rrx) => rrx.recv().unwrap_or_default(),
+                None => Vec::new(),
+            };
+            events.extend(chrome_trace_events(&spans, i as u64));
+        }
+        events
     }
 
     /// Flush every shard's prefix cache, releasing the pages it pins

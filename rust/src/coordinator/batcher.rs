@@ -47,6 +47,7 @@ use crate::backend::pool::SendPtr;
 use crate::backend::ComputeBackend;
 use crate::model::ModelConfig;
 use crate::session::{SessionSpec, SessionStore, DEFAULT_SESSION_BUDGET};
+use crate::telemetry::{Clock, Histogram, MonotonicClock, Span, SpanRecorder};
 use crate::util::prng::Rng;
 
 /// Tokens per KV page — the unit of paging, of prefix sharing, and of
@@ -87,9 +88,11 @@ fn session_id(req: &Request) -> Option<u64> {
     }
 }
 
-fn deadline_expired(req: &Request, enqueued: Instant) -> bool {
-    req.deadline_ms
-        .is_some_and(|d| enqueued.elapsed().as_secs_f64() * 1e3 >= d as f64)
+/// Whether `req`'s deadline lapsed, on the engine's [`Clock`] timeline
+/// (`enqueued_ms`/`now_ms` are readings of the same clock — tests drive
+/// this with a `ManualClock` instead of sleeping).
+fn deadline_expired(req: &Request, enqueued_ms: f64, now_ms: f64) -> bool {
+    req.deadline_ms.is_some_and(|d| now_ms - enqueued_ms >= d as f64)
 }
 
 /// Priority-class admission queue: one FIFO lane per [`Priority`] class,
@@ -98,7 +101,8 @@ fn deadline_expired(req: &Request, enqueued: Instant) -> bool {
 /// Batch is never starved (and an empty competitor hands its share over
 /// entirely).  Within a lane, FIFO order is preserved.
 pub(crate) struct FairQueue {
-    classes: [VecDeque<(Request, Instant)>; Priority::COUNT],
+    /// Each entry carries its enqueue time as a [`Clock`] ms reading.
+    classes: [VecDeque<(Request, f64)>; Priority::COUNT],
     credit: [i64; Priority::COUNT],
 }
 
@@ -117,8 +121,8 @@ impl FairQueue {
         self.classes.iter().map(|c| c.len()).sum()
     }
 
-    fn push_back(&mut self, req: Request, enqueued: Instant) {
-        self.classes[req.priority.index()].push_back((req, enqueued));
+    fn push_back(&mut self, req: Request, enqueued_ms: f64) {
+        self.classes[req.priority.index()].push_back((req, enqueued_ms));
     }
 
     /// The class the next [`Self::pop`] will serve, plus the credit state
@@ -151,19 +155,19 @@ impl FairQueue {
     }
 
     /// The request the next pop will return, scheduler state untouched.
-    fn peek(&self) -> Option<&(Request, Instant)> {
+    fn peek(&self) -> Option<&(Request, f64)> {
         let (c, _) = self.scheduled()?;
         self.classes[c].front()
     }
 
     /// Next request under weighted deficit round-robin.
-    fn pop(&mut self) -> Option<(Request, Instant)> {
+    fn pop(&mut self) -> Option<(Request, f64)> {
         let (c, credit) = self.scheduled()?;
         self.credit = credit;
         self.classes[c].pop_front()
     }
 
-    fn remove_by_id(&mut self, id: u64) -> Option<(Request, Instant)> {
+    fn remove_by_id(&mut self, id: u64) -> Option<(Request, f64)> {
         for class in self.classes.iter_mut() {
             if let Some(pos) = class.iter().position(|(r, _)| r.id == id) {
                 return class.remove(pos);
@@ -173,7 +177,7 @@ impl FairQueue {
     }
 
     /// Class-order drain (engine teardown — scheduling no longer matters).
-    fn pop_any(&mut self) -> Option<(Request, Instant)> {
+    fn pop_any(&mut self) -> Option<(Request, f64)> {
         self.classes.iter_mut().find_map(|c| c.pop_front())
     }
 
@@ -181,13 +185,13 @@ impl FairQueue {
         self.classes.iter().flatten().any(|(r, _)| r.deadline_ms.is_some())
     }
 
-    /// Remove every queued request whose deadline has lapsed.
-    fn take_expired(&mut self) -> Vec<(Request, Instant)> {
+    /// Remove every queued request whose deadline has lapsed at `now_ms`.
+    fn take_expired(&mut self, now_ms: f64) -> Vec<(Request, f64)> {
         let mut out = Vec::new();
         for class in self.classes.iter_mut() {
             let mut keep = VecDeque::with_capacity(class.len());
             for (req, enq) in class.drain(..) {
-                if deadline_expired(&req, enq) {
+                if deadline_expired(&req, enq, now_ms) {
                     out.push((req, enq));
                 } else {
                     keep.push_back((req, enq));
@@ -214,19 +218,23 @@ struct Slot {
     cache: SeqCache,
     generated: Vec<u16>,
     next_token: u16,
-    enqueued: Instant,
-    started: Instant,
+    /// Enqueue / first-token times as [`Clock`] ms readings.
+    enqueued_ms: f64,
+    started_ms: f64,
+    /// When this slot's most recent token was sampled — the inter-token
+    /// latency histogram records `now - last_token_ms` every tick.
+    last_token_ms: f64,
     ttft_ms: f64,
 }
 
 impl Slot {
-    fn stats(&self) -> RequestStats {
+    fn stats(&self, now_ms: f64) -> RequestStats {
         RequestStats {
             prompt_len: self.req.prompt.len(),
             generated: self.generated.len(),
             ttft_ms: self.ttft_ms,
-            decode_ms: self.started.elapsed().as_secs_f64() * 1e3,
-            queued_ms: self.enqueued.elapsed().as_secs_f64() * 1e3,
+            decode_ms: now_ms - self.started_ms,
+            queued_ms: now_ms - self.enqueued_ms,
             session: session_id(&self.req),
         }
     }
@@ -272,6 +280,17 @@ pub struct EngineStats {
     /// the headline win of generated-token donation (on turn k this is
     /// ≈ the full turn-1..k-1 history length)
     pub session_prefill_tokens_saved: usize,
+    /// time-to-first-token distribution (one sample per started request);
+    /// log-bucketed and mergeable, so the cluster layer aggregates by
+    /// merging shard histograms rather than averaging shard averages
+    pub ttft_hist: Histogram,
+    /// inter-token latency: one sample per decode token after the first
+    pub itl_hist: Histogram,
+    /// admission queue wait (enqueue → pop) per started request
+    pub queue_wait_hist: Histogram,
+    /// wall duration of every decode tick (ticks with no active slots
+    /// are not recorded)
+    pub tick_hist: Histogram,
 }
 
 impl EngineStats {
@@ -312,6 +331,17 @@ pub struct GenerationEngine {
     /// Undelivered lifecycle events, in emission order.
     events: VecDeque<(u64, GenerationEvent)>,
     next_id: u64,
+    /// Time source for every request timestamp (TTFT, queue wait,
+    /// deadlines, span times).  Tests inject a `ManualClock` for
+    /// deterministic latency assertions; production keeps the default
+    /// [`MonotonicClock`].
+    clock: Arc<dyn Clock>,
+    /// Lifecycle/phase span ring, owned and written only by the tick
+    /// thread (capacity 0 — the default — disables tracing entirely).
+    recorder: SpanRecorder,
+    /// Configured 1-in-N sampling for per-token decode spans, kept here
+    /// so `set_trace_buffer` can rebuild the ring without losing it.
+    trace_sample: u64,
 }
 
 impl GenerationEngine {
@@ -343,8 +373,53 @@ impl GenerationEngine {
             tokens_per_page,
             events: VecDeque::new(),
             next_id: 1,
+            clock: Arc::new(MonotonicClock::new()),
+            recorder: SpanRecorder::new(0),
+            trace_sample: 1,
             runner,
         }
+    }
+
+    /// Inject a time source for request timestamps (TTFT, queue wait,
+    /// deadlines, span times).  Tests pass a
+    /// [`crate::telemetry::ManualClock`] and advance it explicitly; the
+    /// default is wall-clock [`MonotonicClock`].
+    pub fn set_clock(&mut self, clock: Arc<dyn Clock>) {
+        self.clock = clock;
+    }
+
+    /// Size the lifecycle span ring (`serve --trace-buffer N`): keep the
+    /// most recent `capacity` spans for `{"cmd":"trace"}` / `quarot
+    /// trace` export.  0 (the default) disables tracing — every record
+    /// call is a cheap early-out.  Resizing discards buffered spans.
+    pub fn set_trace_buffer(&mut self, capacity: usize) {
+        self.recorder = SpanRecorder::new(capacity);
+        self.recorder.set_sample_every(self.trace_sample);
+    }
+
+    /// Keep only 1-in-`n` per-token `decode_token` spans (`serve
+    /// --trace-sample N`) — the one span class that scales with tokens
+    /// rather than requests.  1 (the default) keeps them all.
+    pub fn set_trace_sample(&mut self, every: u64) {
+        self.trace_sample = every.max(1);
+        self.recorder.set_sample_every(self.trace_sample);
+    }
+
+    /// Whether span recording is active (trace buffer > 0).
+    pub fn trace_enabled(&self) -> bool {
+        self.recorder.enabled()
+    }
+
+    /// Take every buffered span, oldest first, emptying the ring.  Called
+    /// from the shard's control mailbox between ticks — never concurrent
+    /// with recording.
+    pub fn drain_spans(&mut self) -> Vec<Span> {
+        self.recorder.drain()
+    }
+
+    /// Spans overwritten because the trace ring was full.
+    pub fn spans_dropped(&self) -> u64 {
+        self.recorder.dropped()
     }
 
     /// Cap the waiting queue; submissions beyond it are rejected with
@@ -414,8 +489,14 @@ impl GenerationEngine {
             self.next_id = self.next_id.max(req.id + 1);
         }
         let id = req.id;
+        let now = self.clock.now_ms();
         self.events.push_back((id, GenerationEvent::Queued));
-        self.queue.push_back(req, Instant::now());
+        if self.recorder.enabled() {
+            self.recorder.record(Span::new("queued", id, now, 0.0)
+                .arg("queue_depth", self.queue.len() as f64)
+                .arg("prompt_len", req.prompt.len() as f64));
+        }
+        self.queue.push_back(req, now);
         Ok(id)
     }
 
@@ -431,12 +512,13 @@ impl GenerationEngine {
     /// if the id is unknown or already terminal.
     pub fn cancel(&mut self, id: u64) -> bool {
         if let Some((req, enq)) = self.queue.remove_by_id(id) {
+            let now = self.clock.now_ms();
             self.emit_finish(id, req.tier, FinishReason::Cancelled, RequestStats {
                 prompt_len: req.prompt.len(),
                 generated: 0,
                 ttft_ms: 0.0,
                 decode_ms: 0.0,
-                queued_ms: enq.elapsed().as_secs_f64() * 1e3,
+                queued_ms: now - enq,
                 session: session_id(&req),
             });
             return true;
@@ -446,7 +528,7 @@ impl GenerationEngine {
             if hit {
                 let mut slot = self.slots[i].take().unwrap();
                 let _own = crate::audit::owner(|| format!("seq:{id}"));
-                let stats = slot.stats();
+                let stats = slot.stats(self.clock.now_ms());
                 slot.cache.free(&mut self.pool);
                 self.emit_finish(id, slot.req.tier, FinishReason::Cancelled,
                                  stats);
@@ -583,6 +665,18 @@ impl GenerationEngine {
                 }
             }
         }
+        if self.recorder.enabled() {
+            let name = match reason {
+                FinishReason::Stop => "finish:stop",
+                FinishReason::MaxTokens => "finish:max_tokens",
+                FinishReason::CacheFull => "finish:cache_full",
+                FinishReason::Cancelled => "finish:cancelled",
+                FinishReason::DeadlineExceeded => "finish:deadline",
+            };
+            let now = self.clock.now_ms();
+            self.recorder.record(Span::new(name, id, now, 0.0)
+                .arg("generated", stats.generated as f64));
+        }
         self.events.push_back((id, GenerationEvent::Finished { reason, stats }));
     }
 
@@ -591,8 +685,9 @@ impl GenerationEngine {
     /// pages immediately (same path as cancellation).  Runs at the top of
     /// every tick, so enforcement is mid-stream at tick granularity.
     fn expire_deadlines(&mut self) {
+        let now = self.clock.now_ms();
         if self.queue.has_deadlines() {
-            for (req, enq) in self.queue.take_expired() {
+            for (req, enq) in self.queue.take_expired(now) {
                 self.emit_finish(req.id, req.tier,
                                  FinishReason::DeadlineExceeded,
                                  RequestStats {
@@ -600,19 +695,19 @@ impl GenerationEngine {
                                      generated: 0,
                                      ttft_ms: 0.0,
                                      decode_ms: 0.0,
-                                     queued_ms: enq.elapsed().as_secs_f64() * 1e3,
+                                     queued_ms: now - enq,
                                      session: session_id(&req),
                                  });
             }
         }
         for i in 0..self.slots.len() {
             let expired = self.slots[i].as_ref()
-                .is_some_and(|s| deadline_expired(&s.req, s.enqueued));
+                .is_some_and(|s| deadline_expired(&s.req, s.enqueued_ms, now));
             if expired {
                 let mut slot = self.slots[i].take().unwrap();
                 let _own = crate::audit::owner(
                     || format!("seq:{}", slot.req.id));
-                let stats = slot.stats();
+                let stats = slot.stats(now);
                 slot.cache.free(&mut self.pool);
                 self.emit_finish(slot.req.id, slot.req.tier,
                                  FinishReason::DeadlineExceeded, stats);
@@ -689,6 +784,10 @@ impl GenerationEngine {
                 let Some((req, enq)) = self.queue.pop() else {
                     break 'slots;
                 };
+                // admission queue wait: enqueue → this pop, on the
+                // engine clock (feeds the queue-wait histogram at the
+                // Started emission below)
+                let wait_ms = self.clock.now_ms() - enq;
                 // ledger owner for every page this admission touches
                 // (graft retains, prefill allocs, terminal frees)
                 let _own = crate::audit::owner(|| format!("seq:{}", req.id));
@@ -724,10 +823,19 @@ impl GenerationEngine {
                     // only the uncached suffix (through the decode
                     // graph), sample the first token off the final
                     // suffix step's logits ----
+                    let pf_start = self.clock.now_ms();
                     let t0 = Instant::now();
                     let built = self.graft_and_extend(slot_idx, &req, &shared);
-                    self.stats.total_prefill_ms +=
-                        t0.elapsed().as_secs_f64() * 1e3;
+                    let pf_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    self.stats.total_prefill_ms += pf_ms;
+                    if self.recorder.enabled() {
+                        let graft = shared.len() * self.tokens_per_page;
+                        self.recorder.record(
+                            Span::new("prefill", req.id, pf_start, pf_ms)
+                                .arg("suffix_tokens",
+                                     (req.prompt.len() - graft) as f64)
+                                .arg("graft_tokens", graft as f64));
+                    }
                     let (mut cache, first_logits) = match built {
                         Ok(x) => x,
                         Err(e) => {
@@ -741,9 +849,19 @@ impl GenerationEngine {
                     };
                     let first_tok = sample(&first_logits, req.sampling,
                                            &mut self.rng) as u16;
-                    let ttft = enq.elapsed().as_secs_f64() * 1e3;
+                    let now = self.clock.now_ms();
+                    let ttft = now - enq;
                     self.stats.ttft_sum_ms += ttft;
                     self.stats.ttft_count += 1;
+                    self.stats.ttft_hist.record(ttft);
+                    self.stats.queue_wait_hist.record(wait_ms);
+                    if self.recorder.enabled() {
+                        let graft = shared.len() * self.tokens_per_page;
+                        self.recorder.record(
+                            Span::new("admitted", req.id, enq, wait_ms)
+                                .arg("graft_tokens", graft as f64)
+                                .arg("prompt_len", req.prompt.len() as f64));
+                    }
                     self.events.push_back((req.id, GenerationEvent::Started {
                         ttft_ms: ttft,
                     }));
@@ -771,7 +889,7 @@ impl GenerationEngine {
                             generated: 1,
                             ttft_ms: ttft,
                             decode_ms: 0.0,
-                            queued_ms: enq.elapsed().as_secs_f64() * 1e3,
+                            queued_ms: self.clock.now_ms() - enq,
                             session: session_id(&req),
                         });
                         continue;
@@ -780,8 +898,9 @@ impl GenerationEngine {
                     self.slots[slot_idx] = Some(Slot {
                         generated: vec![first_tok],
                         next_token: first_tok,
-                        enqueued: enq,
-                        started: Instant::now(),
+                        enqueued_ms: enq,
+                        started_ms: now,
+                        last_token_ms: now,
                         ttft_ms: ttft,
                         req,
                         cache,
@@ -790,6 +909,7 @@ impl GenerationEngine {
                 }
 
                 // ---- cold path: full prefill ----
+                let pf_start = self.clock.now_ms();
                 let t0 = Instant::now();
                 let pre = match self.runner.prefill(&req.prompt) {
                     Ok(p) => p,
@@ -801,7 +921,14 @@ impl GenerationEngine {
                         continue;
                     }
                 };
-                self.stats.total_prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+                let pf_ms = t0.elapsed().as_secs_f64() * 1e3;
+                self.stats.total_prefill_ms += pf_ms;
+                if self.recorder.enabled() {
+                    self.recorder.record(
+                        Span::new("prefill", req.id, pf_start, pf_ms)
+                            .arg("suffix_tokens", req.prompt.len() as f64)
+                            .arg("graft_tokens", 0.0));
+                }
 
                 // Sample the first token from the prefill logits *before*
                 // building any cache state: a request that ends here (stop
@@ -810,9 +937,18 @@ impl GenerationEngine {
                 let v = cfg.vocab;
                 let last = &pre.logits[(pre.len - 1) * v..pre.len * v];
                 let first_tok = sample(last, req.sampling, &mut self.rng) as u16;
-                let ttft = enq.elapsed().as_secs_f64() * 1e3;
+                let now = self.clock.now_ms();
+                let ttft = now - enq;
                 self.stats.ttft_sum_ms += ttft;
                 self.stats.ttft_count += 1;
+                self.stats.ttft_hist.record(ttft);
+                self.stats.queue_wait_hist.record(wait_ms);
+                if self.recorder.enabled() {
+                    self.recorder.record(
+                        Span::new("admitted", req.id, enq, wait_ms)
+                            .arg("graft_tokens", 0.0)
+                            .arg("prompt_len", req.prompt.len() as f64));
+                }
                 self.events.push_back((req.id, GenerationEvent::Started {
                     ttft_ms: ttft,
                 }));
@@ -836,7 +972,7 @@ impl GenerationEngine {
                         generated: 1,
                         ttft_ms: ttft,
                         decode_ms: 0.0,
-                        queued_ms: enq.elapsed().as_secs_f64() * 1e3,
+                        queued_ms: self.clock.now_ms() - enq,
                         session: session_id(&req),
                     });
                     continue; // slot is still free — pull the next request
@@ -888,8 +1024,9 @@ impl GenerationEngine {
                 self.slots[slot_idx] = Some(Slot {
                     generated: vec![first_tok],
                     next_token: first_tok,
-                    enqueued: enq,
-                    started: Instant::now(),
+                    enqueued_ms: enq,
+                    started_ms: now,
+                    last_token_ms: now,
                     ttft_ms: ttft,
                     req,
                     cache,
@@ -1041,6 +1178,7 @@ impl GenerationEngine {
                              cache: Option<&SeqCache>) {
         let Some(sid) = session_id(req) else { return };
         let _own = crate::audit::owner(|| format!("session:{sid}"));
+        let don_start = self.clock.now_ms();
         let mut chain =
             Vec::with_capacity(req.prompt.len() + generated.len());
         chain.extend_from_slice(&req.prompt);
@@ -1052,6 +1190,12 @@ impl GenerationEngine {
             }
             None => 0,
         };
+        if self.recorder.enabled() {
+            let dur = self.clock.now_ms() - don_start;
+            self.recorder.record(
+                Span::new("session.donate", req.id, don_start, dur)
+                    .arg("donated_tokens", donated as f64));
+        }
         let donated_chain = (donated > 0).then(|| chain[..donated].to_vec());
         if let Some(upd) = self.sessions.complete(sid, chain, donated_chain) {
             if let Some(pin) = upd.pin {
@@ -1218,8 +1362,14 @@ impl GenerationEngine {
         // lock-order class: the tick body acquires pool/prefix classes
         // beneath it, pinning the engine.tick → coordinator.* ordering
         let _audit = LockScope::enter("engine.tick");
+        let tick_t0 = Instant::now();
+        let admit_start = self.clock.now_ms();
         self.expire_deadlines();
         self.admit()?;
+        if self.recorder.enabled() {
+            let dur = self.clock.now_ms() - admit_start;
+            self.recorder.record(Span::new("tick.admit", 0, admit_start, dur));
+        }
         let cfg = self.runner.cfg.clone();
         let b = cfg.decode_batch;
         let active: Vec<usize> = (0..b).filter(|&i| self.slots[i].is_some()).collect();
@@ -1233,9 +1383,15 @@ impl GenerationEngine {
             tokens[i] = sl.next_token as i32;
             lens[i] = sl.cache.len as i32;
         }
+        let dec_start = self.clock.now_ms();
         let t0 = Instant::now();
         let (logits, k_new, v_new) = self.runner.decode(&tokens, &lens, &self.staging)?;
         let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        if self.recorder.enabled() {
+            self.recorder.record(
+                Span::new("tick.decode", 0, dec_start, step_ms)
+                    .arg("batch", active.len() as f64));
+        }
         self.stats.decode_steps += 1;
         self.stats.decode_tokens += active.len();
         for &i in &active {
@@ -1254,6 +1410,7 @@ impl GenerationEngine {
         // tight pool can recycle pages within the tick, and a retiring
         // slot's final K/V — which nothing would ever read — is never
         // appended at all.
+        let sample_start = self.clock.now_ms();
         let mut survivors: Vec<usize> = Vec::with_capacity(active.len());
         for &i in &active {
             let sl = self.slots[i].as_mut().unwrap();
@@ -1264,6 +1421,17 @@ impl GenerationEngine {
             produced += 1;
             let id = sl.req.id;
             let index = sl.generated.len() - 1;
+            // inter-token latency: every tick token has a predecessor
+            // (the first token lands at admission), so record
+            // unconditionally against the slot's last-token timestamp
+            let itl = sample_start - sl.last_token_ms;
+            sl.last_token_ms = sample_start;
+            self.stats.itl_hist.record(itl);
+            if self.recorder.enabled() {
+                self.recorder.record_sampled(
+                    Span::new("decode_token", id, dec_start, step_ms)
+                        .arg("index", index as f64));
+            }
             self.events.push_back((id, GenerationEvent::Token {
                 token: next, index,
             }));
@@ -1276,7 +1444,7 @@ impl GenerationEngine {
             if hit_stop || budget_done || cache_full {
                 let mut slot = self.slots[i].take().unwrap();
                 let _own = crate::audit::owner(|| format!("seq:{id}"));
-                let stats = slot.stats();
+                let stats = slot.stats(sample_start);
                 // generated-token donation: the retiring cache holds
                 // `prompt ++ generated[..len-1]` — hand its full pages to
                 // the trie (and the session's pin) before freeing, so the
@@ -1302,6 +1470,12 @@ impl GenerationEngine {
         // append failure (pool exhausted mid-decode) retires only the
         // offending slot with `Failed` — concurrent requests keep
         // running; freed pages may even unblock them next tick.
+        if self.recorder.enabled() {
+            let dur = self.clock.now_ms() - sample_start;
+            self.recorder.record(Span::new("tick.sample", 0, sample_start, dur)
+                .arg("batch", active.len() as f64));
+        }
+        let append_start = self.clock.now_ms();
         let mut appended: Vec<usize> = Vec::with_capacity(survivors.len());
         for &i in &survivors {
             let Some(rid) = self.slots[i].as_ref().map(|s| s.req.id) else {
@@ -1323,12 +1497,19 @@ impl GenerationEngine {
         if !self.runner.spec.kv_is_fp() && !appended.is_empty() {
             self.refresh_staging_for(&appended);
         }
+        if self.recorder.enabled() {
+            let dur = self.clock.now_ms() - append_start;
+            self.recorder.record(
+                Span::new("tick.append", 0, append_start, dur)
+                    .arg("batch", appended.len() as f64));
+        }
         let cache_bytes: usize = self.slots.iter().flatten().map(|s| s.cache.bytes()).sum();
         let fp16_bytes: usize = self.slots.iter().flatten()
             .map(|s| s.cache.fp16_equiv_bytes()).sum();
         self.stats.peak_cache_bytes = self.stats.peak_cache_bytes.max(cache_bytes);
         self.stats.peak_cache_fp16_bytes =
             self.stats.peak_cache_fp16_bytes.max(fp16_bytes);
+        self.stats.tick_hist.record(tick_t0.elapsed().as_secs_f64() * 1e3);
         Ok(produced)
     }
 
@@ -1523,10 +1704,10 @@ mod tests {
         // both classes backlogged: weights 4:1 give the cycle I,I,B,I,I
         let mut q = FairQueue::new();
         for i in 0..8 {
-            q.push_back(req(100 + i, Priority::Interactive, None), Instant::now());
+            q.push_back(req(100 + i, Priority::Interactive, None), 0.0);
         }
         for i in 0..2 {
-            q.push_back(req(200 + i, Priority::Batch, None), Instant::now());
+            q.push_back(req(200 + i, Priority::Batch, None), 0.0);
         }
         assert_eq!(q.len(), 10);
         let order: Vec<Priority> =
@@ -1547,7 +1728,7 @@ mod tests {
     fn fair_queue_single_class_is_fifo() {
         let mut q = FairQueue::new();
         for i in 0..5 {
-            q.push_back(req(i, Priority::Batch, None), Instant::now());
+            q.push_back(req(i, Priority::Batch, None), 0.0);
         }
         let ids: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|(r, _)| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
@@ -1561,8 +1742,8 @@ mod tests {
         // deficit scheduler or change which request pops next
         let mut q = FairQueue::new();
         for i in 0..4 {
-            q.push_back(req(100 + i, Priority::Interactive, None), Instant::now());
-            q.push_back(req(200 + i, Priority::Batch, None), Instant::now());
+            q.push_back(req(100 + i, Priority::Interactive, None), 0.0);
+            q.push_back(req(200 + i, Priority::Batch, None), 0.0);
         }
         let mut popped = Vec::new();
         while let Some(head_id) = q.peek().map(|(r, _)| r.id) {
@@ -1585,12 +1766,11 @@ mod tests {
     #[test]
     fn fair_queue_remove_and_expiry() {
         let mut q = FairQueue::new();
-        let now = Instant::now();
-        q.push_back(req(1, Priority::Interactive, None), now);
-        q.push_back(req(2, Priority::Batch, Some(0)), now); // expired on arrival
-        q.push_back(req(3, Priority::Batch, Some(60_000)), now);
+        q.push_back(req(1, Priority::Interactive, None), 0.0);
+        q.push_back(req(2, Priority::Batch, Some(0)), 0.0); // expired on arrival
+        q.push_back(req(3, Priority::Batch, Some(60_000)), 0.0);
         assert!(q.has_deadlines());
-        let expired = q.take_expired();
+        let expired = q.take_expired(0.0);
         assert_eq!(expired.len(), 1);
         assert_eq!(expired[0].0.id, 2);
         assert_eq!(q.len(), 2);
@@ -1598,6 +1778,26 @@ mod tests {
         assert!(q.remove_by_id(3).is_none());
         assert!(!q.has_deadlines());
         assert_eq!(q.len(), 1);
+    }
+
+    /// Satellite of the telemetry clock: deadlines are evaluated on an
+    /// injected [`Clock`] reading, so a `ManualClock` pins the exact
+    /// expiry tick — no sleeping, no scheduler jitter.
+    #[test]
+    fn queued_deadlines_fire_exactly_on_the_manual_clock() {
+        use crate::telemetry::{Clock, ManualClock};
+        let clock = ManualClock::new();
+        let mut q = FairQueue::new();
+        q.push_back(req(1, Priority::Interactive, Some(50)), clock.now_ms());
+        q.push_back(req(2, Priority::Batch, None), clock.now_ms());
+        clock.advance_ms(49.0);
+        assert!(q.take_expired(clock.now_ms()).is_empty(),
+                "one ms short of the deadline must not expire");
+        clock.advance_ms(1.0);
+        let expired = q.take_expired(clock.now_ms());
+        assert_eq!(expired.len(), 1, "deadline must fire at exactly 50 ms");
+        assert_eq!(expired[0].0.id, 1);
+        assert_eq!(q.len(), 1, "the deadline-free request stays queued");
     }
 
     #[test]
@@ -1609,11 +1809,11 @@ mod tests {
         let mut served = [0usize; 2];
         for _ in 0..500 {
             while q.classes[0].len() < 2 {
-                q.push_back(req(next, Priority::Interactive, None), Instant::now());
+                q.push_back(req(next, Priority::Interactive, None), 0.0);
                 next += 1;
             }
             while q.classes[1].len() < 2 {
-                q.push_back(req(next, Priority::Batch, None), Instant::now());
+                q.push_back(req(next, Priority::Batch, None), 0.0);
                 next += 1;
             }
             let (r, _) = q.pop().unwrap();
@@ -1663,7 +1863,7 @@ mod tests {
                 if rng.f64() < 0.55 {
                     let pri = if rng.f64() < 0.5 { Priority::Interactive }
                               else { Priority::Batch };
-                    q.push_back(req(next_id, pri, None), Instant::now());
+                    q.push_back(req(next_id, pri, None), 0.0);
                     next_id += 1;
                 } else {
                     check_pop(&mut q, &mut last_popped)?;
@@ -1677,7 +1877,7 @@ mod tests {
             for _ in 0..pops {
                 for c in [Priority::Interactive, Priority::Batch] {
                     while q.classes[c.index()].len() < 2 {
-                        q.push_back(req(next_id, c, None), Instant::now());
+                        q.push_back(req(next_id, c, None), 0.0);
                         next_id += 1;
                     }
                 }

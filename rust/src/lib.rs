@@ -62,6 +62,13 @@
 //!                   protocol (one JSON frame per event, multiplexed by
 //!                   request id; v1 one-shot lines still answered),
 //!                   serving a `ClusterService` (`--shards N`).
+//! * [`telemetry`] — request-lifecycle tracing and latency histograms:
+//!                   injectable `Clock`, mergeable log-bucketed
+//!                   `Histogram` (p50/p90/p99/p99.9 on the wire),
+//!                   lock-free `SpanRecorder` ring with Chrome-trace /
+//!                   Perfetto export (`{"cmd":"trace"}`, `quarot trace`),
+//!                   and the `Timed` backend decorator for op-level
+//!                   attribution.
 //! * [`eval`]      — perplexity, zero-shot probes, outlier statistics
 //!                   (NLL reductions batched through the backend).
 //! * [`bench_support`] — shared workload generators for `cargo bench`.
@@ -83,5 +90,6 @@ pub mod rotation;
 pub mod runtime;
 pub mod server;
 pub mod session;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;

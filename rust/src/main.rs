@@ -17,7 +17,12 @@
 //!                 otherwise interactive; --session ID resumes)
 //!   cluster-bench drive a sharded cluster with synthetic mixed
 //!                 Interactive/Batch traffic and print the per-shard
-//!                 metrics table
+//!                 metrics table (p50/p99 TTFT and inter-token latency
+//!                 per class)
+//!   trace         drain a running server's span rings
+//!                 (`{"cmd":"trace"}`) and write Chrome-trace JSON to
+//!                 --out (or stdout) — open in chrome://tracing or
+//!                 Perfetto; serve with --trace-buffer N to record
 //!   ppl        perplexity of a quantization spec on the eval split
 //!   zeroshot   probe-task accuracies
 //!   outliers   Fig.1 activation outlier statistics (base vs rotated)
@@ -106,6 +111,7 @@ fn main() -> Result<()> {
         "generate" => generate(&args),
         "chat" => chat(&args),
         "cluster-bench" => cluster_bench(&args),
+        "trace" => trace(&args),
         "ppl" => ppl(&args),
         "zeroshot" => zeroshot(&args),
         "outliers" => outliers(&args),
@@ -114,7 +120,7 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "quarot — outlier-free 4-bit inference (paper reproduction)\n\
-                 usage: quarot <serve|generate|chat|cluster-bench|ppl|\
+                 usage: quarot <serve|generate|chat|cluster-bench|trace|ppl|\
                  zeroshot|outliers|verify|info>\n\
                  common flags: --model tiny-mha --scheme quarot-int4\n\
                                --rotation hadamard|random|scaled-hadamard\n\
@@ -135,6 +141,10 @@ fn main() -> Result<()> {
                                per shard; 0 disables, default pages/2)\n\
                                --sessions N (live chat sessions per shard;\n\
                                0 disables) --session-ttl-ms N (idle expiry)\n\
+                               --trace-buffer N (per-shard span ring; 0 off)\n\
+                               --trace-sample K (keep 1-in-K decode spans)\n\
+                 trace:        --port N --out trace.json (Chrome-trace\n\
+                               export; omit --out for stdout)\n\
                  cluster-bench: --shards N --interactive N --batch N\n\
                                --max-new N --batch-max-new N\n\
                                --prefix-cache N (0 disables)\n\
@@ -184,6 +194,10 @@ fn serve(args: &Args) -> Result<()> {
     let session_ttl_ms: Option<u64> = args.get("session-ttl-ms")
         .map(|s| s.parse().context("bad --session-ttl-ms"))
         .transpose()?;
+    // per-shard span-ring capacity (0 = tracing off) and decode-token
+    // sampling rate for `{"cmd":"trace"}` / `quarot trace`
+    let trace_buffer = args.usize_or("trace-buffer", 0);
+    let trace_sample = args.usize_or("trace-sample", 1) as u64;
     let handle = quarot::server::serve_sharded(
         move || {
             let art = Artifacts::load(&model)?;
@@ -192,6 +206,8 @@ fn serve(args: &Args) -> Result<()> {
             engine.set_prefix_cache_pages(prefix_pages);
             engine.set_session_budget(sessions);
             engine.set_session_ttl_ms(session_ttl_ms);
+            engine.set_trace_buffer(trace_buffer);
+            engine.set_trace_sample(trace_sample);
             Ok(engine)
         },
         port,
@@ -202,7 +218,8 @@ fn serve(args: &Args) -> Result<()> {
               (one JSON frame per event; {{\"cmd\":\"submit\"}} / \
               {{\"cmd\":\"chat\"}} / {{\"cmd\":\"cancel\"}} / \
               {{\"cmd\":\"stats\"}} / {{\"cmd\":\"metrics\"}} / \
-              {{\"cmd\":\"flush-prefix\"}} / {{\"cmd\":\"shutdown\"}}); \
+              {{\"cmd\":\"trace\"}} / {{\"cmd\":\"flush-prefix\"}} / \
+              {{\"cmd\":\"shutdown\"}}); \
               {} shard(s), per-shard admission bound {}, \
               {} session(s) per shard",
              handle.port, shards, queue_bound, sessions);
@@ -419,11 +436,14 @@ fn cluster_bench(args: &Args) -> Result<()> {
     let mut tokens = 0usize;
     let mut report = |label: &str, handles: &[quarot::api::RequestHandle]|
                      -> Result<()> {
-        let mut class = bench_support::drain_class(handles)?;
-        let lat = LatencySummary::of(&mut class.ttfts);
+        let class = bench_support::drain_class(handles)?;
+        let lat = LatencySummary::of(&class.ttfts);
+        let itl = LatencySummary::of(&class.itls);
         println!("  {label:11} {} reqs, {} tokens, \
-                  ttft mean {:.1} ms / p95 {:.1} ms",
-                 handles.len(), class.tokens, lat.mean_ms, lat.p95_ms);
+                  ttft p50 {:.1} / p99 {:.1} ms (mean {:.1}), \
+                  itl p50 {:.2} / p99 {:.2} ms",
+                 handles.len(), class.tokens, lat.p50_ms, lat.p99_ms,
+                 lat.mean_ms, itl.p50_ms, itl.p99_ms);
         tokens += class.tokens;
         Ok(())
     };
@@ -433,6 +453,43 @@ fn cluster_bench(args: &Args) -> Result<()> {
     println!("  aggregate   {:.1} tok/s over {wall:.2} s wall",
              tokens as f64 / wall);
     println!("{}", cluster.metrics().render());
+    Ok(())
+}
+
+/// Drain a running server's span rings into a Chrome-trace JSON file
+/// (`--out`, stdout otherwise).  The server must be running with
+/// `--trace-buffer N > 0`, or the document is valid but empty; each
+/// invocation returns the window recorded since the previous drain.
+fn trace(args: &Args) -> Result<()> {
+    use quarot::util::json;
+    let port = args.usize_or("port", 8747) as u16;
+    let mut client = quarot::server::Client::connect(port)
+        .with_context(|| format!("connect to 127.0.0.1:{port} \
+                                  (is `quarot serve` running?)"))?;
+    let frame = client.trace()?;
+    // re-shape the wire frame into a plain Chrome-trace document:
+    // chrome://tracing and Perfetto expect {"traceEvents":[..]} with no
+    // protocol envelope
+    let events = frame.get("traceEvents").cloned()
+        .unwrap_or(json::Value::Arr(Vec::new()));
+    let n_events = match &events {
+        json::Value::Arr(a) => a.len(),
+        _ => 0,
+    };
+    let doc = json::write(&json::obj(vec![("traceEvents", events)]));
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &doc)
+                .with_context(|| format!("write {path}"))?;
+            eprintln!("wrote {n_events} trace event(s) to {path} — open in \
+                       chrome://tracing or https://ui.perfetto.dev");
+            if n_events == 0 {
+                eprintln!("(empty trace: is the server running with \
+                           --trace-buffer N?)");
+            }
+        }
+        None => println!("{doc}"),
+    }
     Ok(())
 }
 

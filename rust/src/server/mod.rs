@@ -23,9 +23,13 @@
 //!
 //! `{"cmd":"stats"}` answers flat cluster aggregates (live queue depth,
 //! active slots, retire counters, prefix-cache hit rate / tokens saved /
-//! pinned pages, session gauges); `{"cmd":"metrics"}` adds the full
-//! per-shard breakdown (including each shard's prefix-cache and session
-//! gauges).
+//! pinned pages, session gauges, merged latency percentiles);
+//! `{"cmd":"metrics"}` adds the full per-shard breakdown (including each
+//! shard's prefix-cache and session gauges).  `{"cmd":"trace"}` drains
+//! every shard's span ring into one Chrome-trace frame
+//! (`{"v":2,"event":"trace","traceEvents":[..]}`); the serve flags
+//! `--trace-buffer N` / `--trace-sample K` size the per-shard rings and
+//! the decode-token sampling rate.
 //!
 //! `{"cmd":"shutdown"}` stops the whole server: it sets the shared
 //! shutdown flag (cluster thread and accept loop both exit) rather than
@@ -104,6 +108,10 @@ enum EngineMsg {
         reply: mpsc::Sender<String>,
     },
     Metrics {
+        reply: mpsc::Sender<String>,
+    },
+    /// Drain every shard's span ring into one Chrome-trace frame.
+    Trace {
         reply: mpsc::Sender<String>,
     },
     /// Flush every shard's prefix cache; the reply fires after all
@@ -200,6 +208,10 @@ where
                         let m = cluster.metrics();
                         let _ = reply.send(json::write(
                             &wire::encode_metrics(m.full_pairs())));
+                    }
+                    EngineMsg::Trace { reply } => {
+                        let _ = reply.send(json::write(
+                            &wire::encode_trace(cluster.trace_events())));
                     }
                     EngineMsg::FlushPrefix { reply } => {
                         cluster.clear_prefix_caches();
@@ -380,6 +392,13 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<EngineMsg>,
                 let metrics = rrx.recv().unwrap_or_else(|_| "{}".into());
                 let mut w = out.lock_recover();
                 writeln!(w, "{metrics}")?;
+            }
+            ClientFrame::Trace => {
+                let (rtx, rrx) = mpsc::channel();
+                let _ = tx.send(EngineMsg::Trace { reply: rtx });
+                let trace = rrx.recv().unwrap_or_else(|_| "{}".into());
+                let mut w = out.lock_recover();
+                writeln!(w, "{trace}")?;
             }
             ClientFrame::FlushPrefix => {
                 let (rtx, rrx) = mpsc::channel();

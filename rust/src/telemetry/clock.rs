@@ -1,0 +1,115 @@
+//! Injectable monotonic time source.
+//!
+//! Everything in the serving stack that timestamps a request (TTFT,
+//! queue wait, deadlines, span start/duration) reads time through a
+//! [`Clock`] instead of calling `Instant::now()` directly.  Production
+//! injects [`MonotonicClock`]; deterministic tests inject a
+//! [`ManualClock`] and advance it explicitly — a deadline test asserts
+//! "expired after `advance_ms(50)`" instead of sleeping and hoping the
+//! scheduler cooperates.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonic milliseconds-since-origin time source.
+///
+/// Implementations must be monotone non-decreasing; the absolute origin
+/// is arbitrary (only differences are meaningful).  `Send + Sync` so one
+/// clock can be shared by the batcher, the cluster shards and tests via
+/// `Arc<dyn Clock>`.
+pub trait Clock: Send + Sync {
+    /// Milliseconds since this clock's origin.
+    fn now_ms(&self) -> f64;
+}
+
+/// Wall-clock [`Clock`] over a fixed `Instant` origin — the production
+/// default.
+#[derive(Debug)]
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    /// A clock whose origin is "now".
+    pub fn new() -> MonotonicClock {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> MonotonicClock {
+        MonotonicClock::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_ms(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Hand-advanced [`Clock`] for deterministic latency/deadline tests.
+///
+/// Time only moves when a test calls [`ManualClock::advance_ms`] (or
+/// [`ManualClock::set_ms`]), stored as integer microseconds in an atomic
+/// so shared `Arc<ManualClock>` handles stay `Sync` without a lock.
+#[derive(Debug, Default)]
+pub struct ManualClock {
+    micros: AtomicU64,
+}
+
+impl ManualClock {
+    /// A manual clock starting at 0 ms.
+    pub fn new() -> ManualClock {
+        ManualClock { micros: AtomicU64::new(0) }
+    }
+
+    /// Advance the clock by `ms` (saturating; negative/NaN ignored).
+    pub fn advance_ms(&self, ms: f64) {
+        if ms.is_finite() && ms > 0.0 {
+            self.micros.fetch_add((ms * 1e3) as u64, Ordering::SeqCst);
+        }
+    }
+
+    /// Jump the clock to an absolute `ms` reading (monotone use is the
+    /// caller's responsibility).
+    pub fn set_ms(&self, ms: f64) {
+        let us = if ms.is_finite() && ms > 0.0 { (ms * 1e3) as u64 } else { 0 };
+        self.micros.store(us, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ms(&self) -> f64 {
+        self.micros.load(Ordering::SeqCst) as f64 / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_is_deterministic() {
+        let c = ManualClock::new();
+        assert_eq!(c.now_ms(), 0.0);
+        c.advance_ms(12.5);
+        assert_eq!(c.now_ms(), 12.5);
+        c.advance_ms(0.25);
+        assert_eq!(c.now_ms(), 12.75);
+        // garbage advances are ignored, not panics
+        c.advance_ms(-5.0);
+        c.advance_ms(f64::NAN);
+        assert_eq!(c.now_ms(), 12.75);
+        c.set_ms(1000.0);
+        assert_eq!(c.now_ms(), 1000.0);
+    }
+
+    #[test]
+    fn monotonic_clock_is_nondecreasing() {
+        let c = MonotonicClock::new();
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(b >= a && a >= 0.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Fixed-size log-bucketed latency histogram (HDR-style).
+//!
+//! 128 buckets, 4 per octave, starting at 1 µs: bucket `i` covers
+//! `[2^(i/4), 2^((i+1)/4))` µs, so the range spans 1 µs … ~4.3 × 10⁶ ms
+//! with a bounded `2^(1/4) − 1 ≈ 19 %` relative quantization error —
+//! plenty for latency percentiles, tiny enough (~1 KiB) to embed one
+//! per metric per shard and ship in snapshots.
+//!
+//! The histogram is *mergeable*: [`Histogram::merge`] adds bucket
+//! counts, so a cluster aggregate is the histogram of the union of all
+//! shards' samples.  That is the fix for average-of-averages bias —
+//! a shard serving 9× the traffic weighs 9× in the merged quantile,
+//! exactly as it should.
+
+/// Number of log buckets (4 per octave over ~32 octaves).
+const BUCKETS: usize = 128;
+
+/// Smallest resolvable value: 1 µs expressed in ms.
+const MIN_MS: f64 = 1e-3;
+
+/// Buckets per octave (factor-of-2 range).
+const PER_OCTAVE: f64 = 4.0;
+
+/// Log-bucketed latency histogram over milliseconds.
+///
+/// O(1) record, O(buckets) quantile, mergeable across shards; `sum` and
+/// `count` are kept exactly so [`Histogram::mean_ms`] has no bucket
+/// error (only quantiles are quantized).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+// [u64; 128] has no derived Default (std arrays stop at 32); spell the
+// empty histogram out by hand.
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            counts: [0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+}
+
+fn bucket_of(ms: f64) -> usize {
+    if ms <= MIN_MS {
+        return 0;
+    }
+    let b = ((ms / MIN_MS).log2() * PER_OCTAVE) as usize;
+    b.min(BUCKETS - 1)
+}
+
+/// Geometric midpoint of a bucket — the value a quantile in that bucket
+/// reports.  Strictly increasing in `i`, which is what keeps quantiles
+/// monotone in `q`.
+fn representative(i: usize) -> f64 {
+    MIN_MS * ((i as f64 + 0.5) / PER_OCTAVE).exp2()
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one sample in milliseconds.  Non-finite samples are
+    /// dropped; negatives clamp to zero (a clock can never run
+    /// backwards through `telemetry::Clock`, but a subtraction upstream
+    /// might round below zero).
+    pub fn record(&mut self, ms: f64) {
+        if !ms.is_finite() {
+            return;
+        }
+        let ms = ms.max(0.0);
+        self.counts[bucket_of(ms)] += 1;
+        self.count += 1;
+        self.sum += ms;
+        self.min = self.min.min(ms);
+        self.max = self.max.max(ms);
+    }
+
+    /// Fold another histogram in (bucket-count addition).  After the
+    /// merge, `self` is the histogram of the concatenation of both
+    /// sample sets.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sum of all samples in ms.
+    pub fn sum_ms(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean in ms (0.0 when empty) — `sum/count`, no bucket error.
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    /// Smallest recorded sample (0.0 when empty).
+    pub fn min_ms(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    /// Largest recorded sample (0.0 when empty).
+    pub fn max_ms(&self) -> f64 {
+        self.max
+    }
+
+    /// Nearest-rank quantile, `q` in `[0, 1]`; 0.0 when empty.
+    ///
+    /// The reported value is the containing bucket's geometric midpoint
+    /// clamped into `[min, max]`, so single-bucket histograms answer
+    /// exactly and `quantile(a) <= quantile(b)` whenever `a <= b`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_answers_zero_everywhere() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.min_ms(), 0.0);
+        assert_eq!(h.max_ms(), 0.0);
+        for q in [0.0, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(h.quantile(q), 0.0);
+        }
+    }
+
+    #[test]
+    fn single_value_histogram_is_exact() {
+        let mut h = Histogram::new();
+        for _ in 0..10 {
+            h.record(7.0);
+        }
+        // clamping into [min, max] makes a one-value histogram exact
+        assert_eq!(h.quantile(0.5), 7.0);
+        assert_eq!(h.quantile(0.999), 7.0);
+        assert_eq!(h.mean_ms(), 7.0);
+        assert_eq!(h.min_ms(), 7.0);
+        assert_eq!(h.max_ms(), 7.0);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bucket_accurate() {
+        let mut h = Histogram::new();
+        // log-spaced samples over 5 decades
+        for i in 0..1000 {
+            h.record(1e-2 * 1.02f64.powi(i % 500));
+        }
+        let qs = [0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0];
+        let vs: Vec<f64> = qs.iter().map(|&q| h.quantile(q)).collect();
+        for w in vs.windows(2) {
+            assert!(w[0] <= w[1], "quantiles must be monotone: {vs:?}");
+        }
+        assert!(vs[0] >= h.min_ms() && *vs.last().unwrap() <= h.max_ms());
+        // bucket error bound: a known p50 over uniform ranks
+        let mut h = Histogram::new();
+        for i in 1..=1001u32 {
+            h.record(i as f64 * 0.1); // 0.1 .. 100.1 ms, median 50.1
+        }
+        let p50 = h.quantile(0.5);
+        assert!((p50 / 50.1 - 1.0).abs() < 0.2,
+                "p50 {p50} strayed past the 19% bucket bound");
+    }
+
+    #[test]
+    fn merge_equals_concatenation() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut both = Histogram::new();
+        for i in 0..200 {
+            let v = 0.05 * (i as f64 + 1.0);
+            if i % 3 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.sum_ms(), both.sum_ms());
+        assert_eq!(a.min_ms(), both.min_ms());
+        assert_eq!(a.max_ms(), both.max_ms());
+        for q in [0.1, 0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(a.quantile(q), both.quantile(q),
+                       "merged quantile must equal the union's at q={q}");
+        }
+    }
+
+    #[test]
+    fn garbage_samples_are_dropped_or_clamped() {
+        let mut h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert!(h.is_empty(), "non-finite samples must be dropped");
+        h.record(-3.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min_ms(), 0.0, "negatives clamp to zero");
+        // extreme-but-finite values land in the terminal buckets
+        h.record(1e12);
+        h.record(1e-12);
+        assert_eq!(h.count(), 3);
+        assert!(h.quantile(1.0) <= h.max_ms());
+    }
+}

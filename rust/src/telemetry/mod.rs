@@ -1,0 +1,39 @@
+//! Request-lifecycle tracing and latency histograms for the serving
+//! stack — the measurement substrate behind every "p99 TTFT" claim.
+//!
+//! Three building blocks, all std-only and allocation-free on the hot
+//! path:
+//!
+//! * [`Clock`] — injectable monotonic time source.  The engine and the
+//!   cluster take an `Arc<dyn Clock>` so latency/deadline tests run
+//!   against a [`ManualClock`] deterministically instead of sleeping;
+//!   production uses [`MonotonicClock`] (an `Instant` origin).
+//! * [`Histogram`] — fixed 128-bucket log-scale (HDR-style) latency
+//!   histogram: O(1) record, mergeable across shards (merge = add the
+//!   bucket counts, so cluster aggregates are computed over the *union*
+//!   of samples, never by averaging per-shard averages), quantiles with
+//!   a bounded ~19 % relative bucket error.  TTFT, inter-token latency,
+//!   queue wait and tick duration all flow through it, surfaced as
+//!   p50/p90/p99/p99.9 on the wire `stats`/`metrics` frames.
+//! * [`Span`] / [`SpanRecorder`] — a fixed-capacity ring of lifecycle
+//!   spans (submit → queued → admitted → prefill → per-token decode →
+//!   finish, plus per-tick engine phases).  The recorder is owned by
+//!   the engine's tick thread — recording is a plain ring store with no
+//!   locks or allocation — and is drained through the shard's existing
+//!   control mailbox, so no reader ever blocks the tick.  Drained spans
+//!   export as Chrome-trace / Perfetto JSON ([`chrome_trace_json`],
+//!   the wire `{"cmd":"trace"}` command, `quarot trace --out f.json`).
+//!
+//! [`Timed`] wraps any [`crate::backend::ComputeBackend`] with per-op
+//! call/time counters (lock-free atomics) for op-level attribution in
+//! benches and tests.
+
+pub mod clock;
+pub mod histogram;
+pub mod span;
+pub mod timed;
+
+pub use clock::{Clock, ManualClock, MonotonicClock};
+pub use histogram::Histogram;
+pub use span::{chrome_trace_events, chrome_trace_json, Span, SpanRecorder};
+pub use timed::{OpTiming, Timed};

@@ -1,0 +1,301 @@
+//! Lifecycle spans and the fixed-capacity ring recorder.
+//!
+//! A [`Span`] is a closed interval on the engine's [`super::Clock`]
+//! timeline: a request-lifecycle step (`queued`, `admitted`, `prefill`,
+//! `decode_token`, `finish:<reason>`) tagged with its request id, or a
+//! per-tick engine phase (`tick.admit`, `tick.decode`, `tick.sample`,
+//! `tick.append`, `session.donate`) tagged track 0.  Spans are `Copy`
+//! and carry at most two fixed key/value args — recording never
+//! allocates.
+//!
+//! The [`SpanRecorder`] is a plain preallocated ring owned by the
+//! engine: exactly one writer (the tick thread), no locks, no atomics.
+//! Readers never touch it directly — a drain request rides the shard's
+//! control mailbox and the tick thread answers with
+//! [`SpanRecorder::drain`] between ticks, so tracing can never block
+//! the hot path.  When the ring is full the *oldest* spans are
+//! overwritten (a trace buffer wants the most recent window) and
+//! [`SpanRecorder::dropped`] counts the overwrites.
+
+use crate::util::json::{self, n, obj, Value};
+
+/// Maximum fixed args per span (keyed slots; an empty-string key means
+/// the slot is unused).
+pub const MAX_SPAN_ARGS: usize = 2;
+
+/// One recorded interval on the engine timeline.  `track` is the
+/// request id, or 0 for engine-phase spans.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    /// Static span name (e.g. `"queued"`, `"decode_token"`,
+    /// `"tick.decode"`).
+    pub name: &'static str,
+    /// Request id, or 0 for per-tick engine phases.
+    pub track: u64,
+    /// Start, in the recording engine's [`super::Clock`] ms timeline.
+    pub start_ms: f64,
+    /// Duration in ms (0 for instant markers).
+    pub dur_ms: f64,
+    /// Up to [`MAX_SPAN_ARGS`] numeric args; `""` keys are unused slots.
+    pub args: [(&'static str, f64); MAX_SPAN_ARGS],
+}
+
+impl Span {
+    /// A span with no args.
+    pub fn new(name: &'static str, track: u64, start_ms: f64, dur_ms: f64)
+               -> Span {
+        Span { name, track, start_ms, dur_ms, args: [("", 0.0); MAX_SPAN_ARGS] }
+    }
+
+    /// Attach a numeric arg (first free slot; silently dropped once all
+    /// [`MAX_SPAN_ARGS`] slots are taken — spans are fixed-size by
+    /// design).
+    pub fn arg(mut self, key: &'static str, v: f64) -> Span {
+        for slot in self.args.iter_mut() {
+            if slot.0.is_empty() {
+                *slot = (key, v);
+                break;
+            }
+        }
+        self
+    }
+}
+
+/// Fixed-capacity single-writer ring of [`Span`]s (see module docs for
+/// the threading contract).  Capacity 0 disables recording entirely —
+/// every `record` is a cheap early-out.
+#[derive(Debug)]
+pub struct SpanRecorder {
+    buf: Vec<Span>,
+    /// Next write position when the ring has wrapped.
+    head: usize,
+    wrapped: bool,
+    dropped: u64,
+    /// Keep 1-in-N `decode_token` spans (1 = all, 0 treated as 1).
+    sample_every: u64,
+    token_seq: u64,
+}
+
+impl SpanRecorder {
+    /// A recorder holding at most `capacity` spans (preallocated;
+    /// 0 disables recording).
+    pub fn new(capacity: usize) -> SpanRecorder {
+        SpanRecorder {
+            buf: Vec::with_capacity(capacity),
+            head: 0,
+            wrapped: false,
+            dropped: 0,
+            sample_every: 1,
+            token_seq: 0,
+        }
+    }
+
+    /// Whether spans are being recorded at all (capacity > 0).
+    pub fn enabled(&self) -> bool {
+        self.buf.capacity() > 0
+    }
+
+    /// Down-sample per-token spans to 1-in-`n` (`record_sampled`); 0 and
+    /// 1 both mean "keep every span".
+    pub fn set_sample_every(&mut self, n: u64) {
+        self.sample_every = n.max(1);
+    }
+
+    /// Record a span unconditionally (subject to capacity).
+    pub fn record(&mut self, span: Span) {
+        if self.buf.capacity() == 0 {
+            return;
+        }
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(span);
+            return;
+        }
+        // full: overwrite the oldest entry
+        self.buf[self.head] = span;
+        self.head = (self.head + 1) % self.buf.len();
+        self.wrapped = true;
+        self.dropped += 1;
+    }
+
+    /// Record a high-frequency span (per-token decode) through the
+    /// sampling rate: only every `sample_every`-th call lands.
+    pub fn record_sampled(&mut self, span: Span) {
+        if self.buf.capacity() == 0 {
+            return;
+        }
+        self.token_seq += 1;
+        if self.token_seq % self.sample_every == 0 {
+            self.record(span);
+        }
+    }
+
+    /// Spans currently buffered.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no spans are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Spans overwritten because the ring was full (monotone counter,
+    /// not reset by drains).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Take every buffered span in record order, emptying the ring.
+    /// Called by the owning tick thread between ticks.
+    pub fn drain(&mut self) -> Vec<Span> {
+        let head = std::mem::take(&mut self.head);
+        let wrapped = std::mem::take(&mut self.wrapped);
+        let mut out = std::mem::take(&mut self.buf);
+        // keep the allocation contract: the fresh buf must preserve the
+        // recorder's capacity (capacity 0 stays disabled)
+        self.buf = Vec::with_capacity(out.capacity());
+        if wrapped {
+            out.rotate_left(head);
+        }
+        out
+    }
+}
+
+/// Chrome-trace (`chrome://tracing` / Perfetto) complete-event objects
+/// for `spans`, one `"ph":"X"` event each.  `pid` is the shard index;
+/// the request id (or 0 for engine phases) becomes the `tid` so every
+/// request renders as its own row.  Times convert ms → µs as the format
+/// requires.
+pub fn chrome_trace_events(spans: &[Span], pid: u64) -> Vec<Value> {
+    spans.iter()
+        .map(|s| {
+            let mut pairs = vec![
+                ("name", json::s(s.name)),
+                ("ph", json::s("X")),
+                ("ts", n(s.start_ms * 1e3)),
+                ("dur", n(s.dur_ms * 1e3)),
+                ("pid", n(pid as f64)),
+                ("tid", n(s.track as f64)),
+            ];
+            let args: Vec<(&str, Value)> = s.args.iter()
+                .filter(|(k, _)| !k.is_empty())
+                .map(|&(k, v)| (k, n(v)))
+                .collect();
+            if !args.is_empty() {
+                pairs.push(("args", obj(args)));
+            }
+            obj(pairs)
+        })
+        .collect()
+}
+
+/// A complete Chrome-trace JSON document (`{"traceEvents":[...]}`) —
+/// what `quarot trace --out trace.json` writes and Perfetto opens
+/// directly.
+pub fn chrome_trace_json(spans: &[Span], pid: u64) -> Value {
+    obj(vec![("traceEvents", Value::Arr(chrome_trace_events(spans, pid)))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(i: u64) -> Span {
+        Span::new("s", i, i as f64, 1.0)
+    }
+
+    #[test]
+    fn ring_preserves_order_and_drops_oldest() {
+        let mut r = SpanRecorder::new(4);
+        assert!(r.enabled() && r.is_empty());
+        for i in 0..3 {
+            r.record(sp(i));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 0);
+        let spans = r.drain();
+        assert_eq!(spans.iter().map(|s| s.track).collect::<Vec<_>>(),
+                   vec![0, 1, 2]);
+        assert!(r.is_empty());
+
+        // wrap: capacity 4, record 6 → oldest two overwritten
+        for i in 0..6 {
+            r.record(sp(i));
+        }
+        assert_eq!(r.dropped(), 2);
+        let spans = r.drain();
+        assert_eq!(spans.iter().map(|s| s.track).collect::<Vec<_>>(),
+                   vec![2, 3, 4, 5],
+                   "drain must return the newest window in record order");
+        // the recorder keeps working after a post-wrap drain
+        r.record(sp(9));
+        assert_eq!(r.drain().len(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_disables_recording() {
+        let mut r = SpanRecorder::new(0);
+        assert!(!r.enabled());
+        r.record(sp(1));
+        r.record_sampled(sp(2));
+        assert!(r.is_empty());
+        assert_eq!(r.dropped(), 0);
+        assert!(r.drain().is_empty());
+        // a drain must not accidentally enable a disabled recorder
+        r.record(sp(3));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn sampling_keeps_one_in_n() {
+        let mut r = SpanRecorder::new(64);
+        r.set_sample_every(4);
+        for i in 0..16 {
+            r.record_sampled(sp(i));
+        }
+        assert_eq!(r.len(), 4, "1-in-4 sampling must keep 4 of 16");
+        // unsampled records are unaffected
+        r.record(sp(99));
+        assert_eq!(r.len(), 5);
+    }
+
+    #[test]
+    fn span_args_fill_fixed_slots() {
+        let s = Span::new("admitted", 7, 1.0, 2.0)
+            .arg("graft_tokens", 32.0)
+            .arg("prompt_len", 40.0)
+            .arg("overflow", 1.0); // silently dropped: slots are fixed
+        assert_eq!(s.args[0], ("graft_tokens", 32.0));
+        assert_eq!(s.args[1], ("prompt_len", 40.0));
+    }
+
+    #[test]
+    fn chrome_trace_shapes_complete_events() {
+        let spans = [
+            Span::new("queued", 7, 1.5, 0.5).arg("queue_depth", 3.0),
+            Span::new("tick.decode", 0, 2.0, 4.0),
+        ];
+        let doc = chrome_trace_json(&spans, 1);
+        let events = doc.get("traceEvents").and_then(|v| v.as_arr())
+            .expect("traceEvents array");
+        assert_eq!(events.len(), 2);
+        let e0 = &events[0];
+        assert_eq!(e0.get("name").and_then(|v| v.as_str()), Some("queued"));
+        assert_eq!(e0.get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(e0.get("ts").and_then(|v| v.as_f64()), Some(1500.0));
+        assert_eq!(e0.get("dur").and_then(|v| v.as_f64()), Some(500.0));
+        assert_eq!(e0.get("pid").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(e0.get("tid").and_then(|v| v.as_f64()), Some(7.0));
+        assert_eq!(e0.get("args").and_then(|a| a.get("queue_depth"))
+                       .and_then(|v| v.as_f64()),
+                   Some(3.0));
+        // arg-less spans omit the args object entirely
+        assert!(events[1].get("args").is_none());
+        // the document round-trips through the json writer/parser
+        let txt = json::write(&doc);
+        let back = json::parse(&txt).expect("valid JSON");
+        assert_eq!(back.get("traceEvents").and_then(|v| v.as_arr())
+                       .map(|a| a.len()),
+                   Some(2));
+    }
+}

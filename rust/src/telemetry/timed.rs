@@ -1,0 +1,206 @@
+//! Op-level backend timing: [`Timed`] wraps any
+//! [`ComputeBackend`] and counts calls + wall time per op with
+//! lock-free atomics, so benches and tests can attribute a slow tick to
+//! the kernel that spent it (staging dequant vs decode attention vs
+//! sampling GEMMs) without touching the backends themselves.
+//!
+//! The counters are `AtomicU64` (call count, total nanoseconds), safe
+//! under the `Threaded` pool's concurrent op calls; `snapshot()` reads
+//! them without stopping the world.  Timing uses `Instant` directly —
+//! op durations are real kernel wall time, not the engine's injectable
+//! [`super::Clock`] timeline (which exists for *deterministic* request
+//! timestamps, the opposite of what a kernel profile wants).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::attention::{DecodeF32Seq, DecodeQuantSeq};
+use crate::backend::ComputeBackend;
+use crate::gemm::{WeightsF32, WeightsI4, WeightsI8};
+
+/// Stable op names, index-aligned with the internal counter array.
+const OP_NAMES: [&str; N_OPS] = [
+    "gemm_f32", "gemm_i8", "gemm_i4", "had_rows", "quant_rows",
+    "kv_quant_slab", "kv_dequant", "decode_f32_batch", "decode_quant_batch",
+    "nll_rows", "par_for",
+];
+
+const N_OPS: usize = 11;
+
+const GEMM_F32: usize = 0;
+const GEMM_I8: usize = 1;
+const GEMM_I4: usize = 2;
+const HAD_ROWS: usize = 3;
+const QUANT_ROWS: usize = 4;
+const KV_QUANT_SLAB: usize = 5;
+const KV_DEQUANT: usize = 6;
+const DECODE_F32: usize = 7;
+const DECODE_QUANT: usize = 8;
+const NLL_ROWS: usize = 9;
+const PAR_FOR: usize = 10;
+
+#[derive(Default)]
+struct OpCounter {
+    calls: AtomicU64,
+    nanos: AtomicU64,
+}
+
+/// One op's accumulated timing, as read by [`Timed::snapshot`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpTiming {
+    /// Backend op name (`"gemm_i4"`, `"decode_quant_batch"`, …).
+    pub op: &'static str,
+    /// Calls observed since construction.
+    pub calls: u64,
+    /// Total wall time spent inside the op, ms.
+    pub total_ms: f64,
+}
+
+/// A [`ComputeBackend`] decorator adding per-op call/time counters.
+/// Delegates every op to the inner backend bit-for-bit; the only cost
+/// is two `Instant` reads and two relaxed atomic adds per call.
+pub struct Timed<B> {
+    inner: B,
+    ops: [OpCounter; N_OPS],
+}
+
+impl<B> Timed<B> {
+    /// Wrap `inner` with zeroed counters.
+    pub fn new(inner: B) -> Timed<B> {
+        Timed { inner, ops: Default::default() }
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// Per-op timings in stable op order (every op listed, including
+    /// never-called ones at zero).
+    pub fn snapshot(&self) -> Vec<OpTiming> {
+        self.ops.iter().zip(OP_NAMES.iter())
+            .map(|(c, &op)| OpTiming {
+                op,
+                calls: c.calls.load(Ordering::Relaxed),
+                total_ms: c.nanos.load(Ordering::Relaxed) as f64 / 1e6,
+            })
+            .collect()
+    }
+
+    /// Total calls across every op.
+    pub fn total_calls(&self) -> u64 {
+        self.ops.iter().map(|c| c.calls.load(Ordering::Relaxed)).sum()
+    }
+
+    fn timed<T>(&self, op: usize, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let c = &self.ops[op];
+        c.calls.fetch_add(1, Ordering::Relaxed);
+        c.nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+}
+
+impl<B: ComputeBackend> ComputeBackend for Timed<B> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn gemm_f32(&self, x: &[f32], t: usize, w: &WeightsF32, y: &mut [f32]) {
+        self.timed(GEMM_F32, || self.inner.gemm_f32(x, t, w, y))
+    }
+
+    fn gemm_i8(&self, x: &[f32], t: usize, w: &WeightsI8, bits: u32, clip: f32,
+               y: &mut [f32]) {
+        self.timed(GEMM_I8, || self.inner.gemm_i8(x, t, w, bits, clip, y))
+    }
+
+    fn gemm_i4(&self, x: &[f32], t: usize, w: &WeightsI4, clip: f32,
+               y: &mut [f32]) {
+        self.timed(GEMM_I4, || self.inner.gemm_i4(x, t, w, clip, y))
+    }
+
+    fn had_rows(&self, x: &mut [f32], d: usize) {
+        self.timed(HAD_ROWS, || self.inner.had_rows(x, d))
+    }
+
+    fn quant_rows(&self, x: &[f32], d: usize, bits: u32, clip: f32,
+                  codes: &mut [i8], scales: &mut [f32]) {
+        self.timed(QUANT_ROWS,
+                   || self.inner.quant_rows(x, d, bits, clip, codes, scales))
+    }
+
+    fn kv_quant_slab(&self, x: &[f32], d: usize, group: usize, bits: u32,
+                     clip: f32) -> (Vec<i8>, Vec<f32>, Vec<f32>) {
+        self.timed(KV_QUANT_SLAB,
+                   || self.inner.kv_quant_slab(x, d, group, bits, clip))
+    }
+
+    fn kv_dequant(&self, codes: &[i8], scales: &[f32], zeros: &[f32],
+                  group: usize, out: &mut [f32]) {
+        self.timed(KV_DEQUANT,
+                   || self.inner.kv_dequant(codes, scales, zeros, group, out))
+    }
+
+    fn decode_f32_batch(&self, seqs: &[DecodeF32Seq<'_>], n_heads: usize,
+                        out: &mut [f32]) {
+        self.timed(DECODE_F32,
+                   || self.inner.decode_f32_batch(seqs, n_heads, out))
+    }
+
+    fn decode_quant_batch(&self, seqs: &[DecodeQuantSeq<'_>], n_heads: usize,
+                          out: &mut [f32]) {
+        self.timed(DECODE_QUANT,
+                   || self.inner.decode_quant_batch(seqs, n_heads, out))
+    }
+
+    fn nll_rows(&self, logits: &[f32], vocab: usize, targets: &[u16],
+                out: &mut [f64]) {
+        self.timed(NLL_ROWS, || self.inner.nll_rows(logits, vocab, targets, out))
+    }
+
+    fn par_for(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.timed(PAR_FOR, || self.inner.par_for(n, f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::ScalarRef;
+
+    #[test]
+    fn timed_backend_counts_calls_and_stays_bit_exact() {
+        let timed = Timed::new(ScalarRef);
+        let base = ScalarRef;
+        assert_eq!(timed.total_calls(), 0);
+
+        // had_rows: d=4 WHT on two rows, vs the bare backend
+        let mut a = vec![1.0f32, 2.0, 3.0, 4.0, -1.0, 0.5, 2.0, -2.0];
+        let mut b = a.clone();
+        timed.had_rows(&mut a, 4);
+        base.had_rows(&mut b, 4);
+        assert_eq!(a, b, "Timed must delegate bit-for-bit");
+
+        // nll_rows
+        let logits = vec![0.1f32, 0.7, 0.2, 0.9, 0.1, 0.0];
+        let mut out = vec![0.0f64; 2];
+        timed.nll_rows(&logits, 3, &[1, 0], &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+
+        // par_for is counted once however many tasks it fans out
+        timed.par_for(8, &|_| {});
+
+        let snap = timed.snapshot();
+        assert_eq!(snap.len(), OP_NAMES.len());
+        let get = |op: &str| snap.iter().find(|t| t.op == op)
+            .map(|t| t.calls).unwrap_or(0);
+        assert_eq!(get("had_rows"), 1);
+        assert_eq!(get("nll_rows"), 1);
+        assert_eq!(get("par_for"), 1);
+        assert_eq!(get("gemm_f32"), 0);
+        assert_eq!(timed.total_calls(), 3);
+        assert!(snap.iter().all(|t| t.total_ms >= 0.0));
+    }
+}

@@ -8,9 +8,10 @@
 //! refcount-leak checks), multi-turn chat sessions (3-turn chat ≡ cold
 //! concatenated-history replay, generated-token donation accounting,
 //! eviction pin-leak regression, session-affinity routing on a 2-shard
-//! cluster, `chat`/`flush-prefix` wire commands), and the v2 TCP
+//! cluster, `chat`/`flush-prefix` wire commands), the v2 TCP
 //! event-frame protocol (interleaving, cancel, live stats, raw v1
-//! compatibility).
+//! compatibility), and request-lifecycle tracing (the traced span
+//! sequence must mirror the `GenerationEvent` stream).
 //!
 //! Like `integration.rs`, every test needs `make artifacts` and skips
 //! with a notice when they are absent.
@@ -943,4 +944,62 @@ fn wire_shutdown_cmd_stops_the_whole_server() {
         }
     };
     assert!(refused, "server still answering after wire shutdown");
+}
+#[test]
+fn traced_span_sequence_matches_the_event_stream() {
+    let Some(art) = art() else { return };
+    let prompt = art.corpus.split("eval").unwrap()[..8].to_vec();
+    let s = session(&art, 512, 7, 16);
+    s.set_trace_buffer(256); // default sampling (1): keep every decode span
+    let h = s.submit(GenerationParams::new(prompt.clone()).max_new(6)).unwrap();
+    let id = h.id();
+
+    let mut events = Vec::new();
+    while let Some(ev) = h.next_event().unwrap() {
+        events.push(ev);
+    }
+    let token_events = events.iter()
+        .filter(|e| matches!(e, GenerationEvent::Token { .. }))
+        .count();
+    assert_eq!(token_events, 6);
+
+    let spans = s.drain_spans();
+    // lifecycle spans ride the request's track (= its id); per-tick
+    // engine phase spans ride track 0
+    let lifecycle: Vec<&str> = spans.iter()
+        .filter(|sp| sp.track == id)
+        .map(|sp| sp.name)
+        .collect();
+    // record order mirrors the event stream: `queued` at submit,
+    // `prefill` + `admitted` during the admission tick (which also
+    // emits Started and the index-0 Token), one `decode_token` per
+    // subsequent Token event, and the finish marker last
+    let mut want = vec!["queued", "prefill", "admitted"];
+    want.extend(std::iter::repeat("decode_token").take(token_events - 1));
+    want.push("finish:max_tokens");
+    assert_eq!(lifecycle, want,
+               "traced span sequence must mirror the event stream");
+
+    // decode spans carry the token index: contiguous 1..N, matching the
+    // Token events that followed the admission token
+    let decode_idx: Vec<f64> = spans.iter()
+        .filter(|sp| sp.track == id && sp.name == "decode_token")
+        .map(|sp| sp.args[0].1)
+        .collect();
+    let want_idx: Vec<f64> = (1..token_events).map(|i| i as f64).collect();
+    assert_eq!(decode_idx, want_idx);
+
+    // the tick phases that produced those tokens were traced too
+    assert!(spans.iter().any(|sp| sp.track == 0 && sp.name == "tick.decode"),
+            "engine phase spans missing from the ring");
+
+    // draining emptied the ring
+    assert!(s.drain_spans().is_empty());
+
+    // disabling the recorder stops recording entirely
+    s.set_trace_buffer(0);
+    let h2 = s.submit(GenerationParams::new(prompt).max_new(3)).unwrap();
+    h2.wait().unwrap();
+    assert!(s.drain_spans().is_empty(),
+            "a disabled recorder must record nothing");
 }

@@ -79,7 +79,7 @@ fn assert_key_set(frame: &Value, golden: &[Key], skip_optional: bool,
 /// A metrics value with every source populated, so no key is skipped
 /// by an is-empty fast path anywhere.
 fn sample_metrics() -> ClusterMetrics {
-    let shard = ShardMetrics {
+    let mut shard = ShardMetrics {
         shard: 0,
         alive: true,
         queue_depth: 2,
@@ -100,6 +100,14 @@ fn sample_metrics() -> ClusterMetrics {
         session_prefill_tokens_saved: 17,
         ..ShardMetrics::default()
     };
+    // populate every latency histogram so the percentile keys are
+    // computed from real samples, not the empty-histogram zero path
+    for ms in [2.0, 5.0, 40.0] {
+        shard.ttft_hist.record(ms);
+        shard.itl_hist.record(ms / 4.0);
+        shard.queue_wait_hist.record(ms / 2.0);
+        shard.tick_hist.record(ms / 8.0);
+    }
     ClusterMetrics { queue_bound: 64, shards: vec![shard] }
 }
 
