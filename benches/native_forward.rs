@@ -1,0 +1,189 @@
+//! Native (graph-free) forward-pass serving bench — throughput of the
+//! `--executor native` path, side by side with the PJRT graph path
+//! where AOT artifacts exist.
+//!
+//! The native rows need no artifacts: they serve a synthetic-weight
+//! model built in memory ([`synthetic_archive`]), so this bench runs —
+//! and its `--check` smoke bites — on machines without `make
+//! artifacts`.  The `tiny-mha` rows (both executors over the same real
+//! weight archive) are artifact-gated and self-skip like the other
+//! serving benches.
+//!
+//! `--check` (CI) pins the scalar backend and asserts the chunked-
+//! prefill contract on a cold S-token prompt at chunk budgets
+//! 1 / 5 / 64:
+//!
+//! - identical token streams (chunk 1 IS the old token-at-a-time
+//!   suffix loop, so agreement pins the refactor's numerics);
+//! - `prefill_chunk_tokens == suffix_prefill_tokens == S`;
+//! - `prefill_chunks == ceil(S / chunk)` — the tick-budget acceptance
+//!   criterion: an S-token uncached prompt costs ceil(S/chunk) prefill
+//!   calls, not S.
+
+use anyhow::{bail, ensure, Result};
+
+use quarot::api::{Priority, QualityTier, Sampling};
+use quarot::backend::{self, BackendKind};
+use quarot::bench_support::{record, synthetic_archive, Artifacts};
+use quarot::coordinator::batcher::{
+    EngineStats, GenerationEngine, Request, DEFAULT_PREFILL_CHUNK,
+};
+use quarot::coordinator::runner::{ExecutorKind, QuantSpec, Runner};
+use quarot::forward::weights::canonical_weight_order;
+use quarot::model::ModelConfig;
+use quarot::util::bench::Table;
+
+const MODEL: &str = "tiny-mha";
+const SEED: u64 = 11;
+
+/// Proven-dimension toy config (the same shape the engine-level unit
+/// tests serve): MHA→GQA grouping, two layers, hadamard-compatible d_ff.
+fn bench_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "native-bench".into(),
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_head: 4,
+        d_ff: 24,
+        max_seq: 48,
+        cache_seq: 64,
+        decode_batch: 2,
+        kv_group: 4,
+        rope_theta: 1e4,
+        train_ppl: 0.0,
+    }
+}
+
+fn request(prompt: Vec<u16>, max_new: usize) -> Request {
+    Request {
+        id: 0,
+        prompt,
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        stop_token: None,
+        priority: Priority::Interactive,
+        deadline_ms: None,
+        tier: QualityTier::Kv4,
+        session: None,
+    }
+}
+
+fn prompt_tokens(vocab: usize, len: usize, salt: usize) -> Vec<u16> {
+    (0..len).map(|i| ((i * 7 + salt * 13) % (vocab - 1)) as u16).collect()
+}
+
+/// One cold workload on a fresh engine; returns the completed token
+/// streams (request-submission order) and the final counters.
+fn run_workload(runner: Runner, chunk: usize, n_reqs: usize, prompt_len: usize,
+                max_new: usize) -> Result<(Vec<Vec<u16>>, EngineStats)> {
+    let vocab = runner.cfg.vocab;
+    let mut eng = GenerationEngine::new(runner, 256, 9);
+    eng.set_prefill_chunk(chunk);
+    let mut ids = Vec::new();
+    for r in 0..n_reqs {
+        ids.push(eng.submit(request(prompt_tokens(vocab, prompt_len, r),
+                                    max_new)));
+    }
+    let mut done = eng.run_to_completion()?;
+    ensure!(done.len() == n_reqs,
+            "expected {n_reqs} completions, got {}", done.len());
+    done.sort_by_key(|c| ids.iter().position(|&i| i == c.id));
+    Ok((done.into_iter().map(|c| c.tokens).collect(), eng.stats.clone()))
+}
+
+/// `--check`: chunk-size invariance + ceil(S/chunk) budget accounting
+/// on the scalar backend (bit-stable across forward shapes).
+fn check_chunk_contract() -> Result<()> {
+    let cfg = bench_cfg();
+    let weights = synthetic_archive(&cfg, SEED)?;
+    const S: usize = 23;
+    let mut streams: Vec<Vec<Vec<u16>>> = Vec::new();
+    for &chunk in &[1usize, 5, 64] {
+        let runner = Runner::new_native_with_backend(
+            &cfg, &canonical_weight_order(), &weights, QuantSpec::quarot(4),
+            None, backend::make(BackendKind::Scalar))?;
+        let (tokens, st) = run_workload(runner, chunk, 1, S, 8)?;
+        ensure!(st.suffix_prefill_tokens == S,
+                "chunk {chunk}: cold suffix must be the whole {S}-token \
+                 prompt, counted {}", st.suffix_prefill_tokens);
+        ensure!(st.prefill_chunk_tokens == st.suffix_prefill_tokens,
+                "chunk {chunk}: chunk-token counter diverged from suffix \
+                 counter ({} vs {})",
+                st.prefill_chunk_tokens, st.suffix_prefill_tokens);
+        let want = S.div_ceil(chunk);
+        ensure!(st.prefill_chunks == want,
+                "chunk {chunk}: {S}-token suffix must cost ceil({S}/{chunk}) \
+                 = {want} prefill calls, counted {}", st.prefill_chunks);
+        println!("[check] chunk {chunk:>2}: {} prefill call(s) for the \
+                  {S}-token cold prompt", st.prefill_chunks);
+        streams.push(tokens);
+    }
+    if streams[1..].iter().any(|s| *s != streams[0]) {
+        bail!("chunked prefill is not chunk-size invariant: token streams \
+               diverged across budgets 1/5/64");
+    }
+    println!("[check] native_forward OK (chunk-size-invariant streams, \
+              exact ceil(S/chunk) budget accounting)");
+    Ok(())
+}
+
+/// Row of the throughput table from one workload's engine counters.
+fn row(t: &mut Table, executor: &str, model: &str, chunk: usize,
+       st: &EngineStats) {
+    let pf_tps = st.suffix_prefill_tokens as f64
+        / (st.total_prefill_ms / 1e3).max(1e-9);
+    let dec_tps = st.decode_tokens as f64
+        / (st.total_decode_ms / 1e3).max(1e-9);
+    let ttft = st.ttft_sum_ms / (st.ttft_count as f64).max(1.0);
+    t.row(vec![
+        executor.into(),
+        model.into(),
+        format!("{chunk}"),
+        format!("{pf_tps:.0}"),
+        format!("{dec_tps:.0}"),
+        format!("{ttft:.2}"),
+    ]);
+}
+
+fn main() -> Result<()> {
+    if std::env::args().any(|a| a == "--check") {
+        return check_chunk_contract();
+    }
+
+    let mut t = Table::new(
+        "Serving throughput by executor — chunked prefill + batched decode",
+        &["executor", "model", "chunk", "prefill tok/s", "decode tok/s",
+          "avg ttft ms"]);
+
+    // Native rows on the synthetic archive: always runnable.
+    let cfg = bench_cfg();
+    let weights = synthetic_archive(&cfg, SEED)?;
+    for &chunk in &[1usize, 8, DEFAULT_PREFILL_CHUNK] {
+        let runner = Runner::new_native_from_parts(
+            &cfg, &canonical_weight_order(), &weights, QuantSpec::quarot(4),
+            None)?;
+        let (_, st) = run_workload(runner, chunk, 8, 24, 16)?;
+        row(&mut t, "native", "synthetic", chunk, &st);
+    }
+
+    // Real-archive rows, both executors, artifact-gated self-skip.
+    match Artifacts::load(MODEL) {
+        Ok(art) => {
+            for kind in [ExecutorKind::Pjrt, ExecutorKind::Native] {
+                let runner = art.runner_kind(kind, QuantSpec::quarot(4),
+                                             None)?;
+                let (_, st) = run_workload(runner, DEFAULT_PREFILL_CHUNK,
+                                           8, 24, 16)?;
+                row(&mut t, kind.name(), MODEL, DEFAULT_PREFILL_CHUNK, &st);
+            }
+        }
+        Err(_) => eprintln!(
+            "[skip] {MODEL} artifacts missing — run `make artifacts` for \
+             the real-archive executor comparison"),
+    }
+
+    record("native_forward", &t.render())
+}

@@ -12,7 +12,8 @@
 //!
 //! `--check` is the CI acceptance smoke: chat token streams must be
 //! **bit-exact** vs the cold replay at every turn, the donation gauge
-//! must equal the page-rounded history on every turn ≥ 2, the session
+//! must equal the exact resident history on every turn ≥ 2 (tail-page
+//! donation makes the savings token-exact, not page-rounded), the session
 //! gauges must partition the trace exactly, and a budget shrink plus
 //! trie flush must return the pool to zero (no pin/refcount leaks).
 //!
@@ -61,16 +62,17 @@ fn trace(art: &Artifacts) -> Result<Vec<Vec<Vec<u16>>>> {
 
 /// Tokens a session's turn-k admission grafts from the donated chain:
 /// the previous turn's effective prompt plus its generated tokens bar
-/// the final sampled one, rounded down to whole pages (0 on turn 1).
+/// the final sampled one — token-exact, NOT page-rounded, because
+/// retirement donates the partially-filled tail page alongside the full
+/// ones and the next turn grafts it by copy (0 on turn 1).
 fn expected_saved(turn_lens: &[usize]) -> usize {
-    let tpp = TOKENS_PER_PAGE;
     let mut hist = 0usize; // history length entering the turn
     let mut prev_prompt = 0usize; // previous turn's effective prompt
     let mut saved = 0usize;
     for (k, &t) in turn_lens.iter().enumerate() {
         let prompt = hist + t;
         if k > 0 {
-            saved += (prev_prompt + MAX_NEW - 1) / tpp * tpp;
+            saved += prev_prompt + MAX_NEW - 1;
         }
         prev_prompt = prompt;
         hist = prompt + MAX_NEW;
@@ -169,7 +171,7 @@ fn check(art: &Artifacts) -> Result<()> {
     }
     let st = s.stats();
     if st.session_prefill_tokens_saved != expect {
-        bail!("donation gauge {} != page-rounded history {expect}",
+        bail!("donation gauge {} != exact resident history {expect}",
               st.session_prefill_tokens_saved);
     }
     if st.session_turns != N_SESSIONS * N_TURNS {

@@ -2,13 +2,16 @@
 //! subcommands: artifact discovery, engine/runner construction, spec
 //! shorthands and result recording.
 
+use std::collections::BTreeMap;
+
 use anyhow::{Context, Result};
 
 use crate::api::{GenerationEvent, RequestHandle};
-use crate::coordinator::runner::{CalibStats, QuantSpec, Runner};
+use crate::coordinator::runner::{CalibStats, ExecutorKind, QuantSpec, Runner};
 use crate::model::corpus::{load_probes, Corpus, ProbeTask};
-use crate::model::Weights;
+use crate::model::{transform, ModelConfig, Tensor, Weights};
 use crate::runtime::Engine;
+use crate::util::prng::Rng;
 
 pub const ARTIFACTS: &str = "artifacts";
 
@@ -131,6 +134,25 @@ impl Artifacts {
         Runner::new(engine, &self.weights, spec, stats)
     }
 
+    /// Graph-free native runner: the engine contributes only its manifest
+    /// (no PJRT client is created, no graphs are compiled) and the
+    /// forward pass runs on the in-process compute backend.
+    pub fn runner_native(&self, spec: QuantSpec, stats: Option<&CalibStats>)
+                         -> Result<Runner> {
+        let engine = self.engine_graphs(&[])?;
+        Runner::new_native(engine, &self.weights, spec, stats)
+    }
+
+    /// Runner on the requested executor (`--executor` dispatch): `Pjrt`
+    /// compiles this spec's graphs, `Native` is [`Self::runner_native`].
+    pub fn runner_kind(&self, kind: ExecutorKind, spec: QuantSpec,
+                       stats: Option<&CalibStats>) -> Result<Runner> {
+        match kind {
+            ExecutorKind::Pjrt => self.runner(spec, stats),
+            ExecutorKind::Native => self.runner_native(spec, stats),
+        }
+    }
+
     /// Calibration stats via the collect graph (cached per rotation).
     pub fn calib(&self, rotated: bool, windows: usize) -> Result<CalibStats> {
         let graph = if rotated { "collect_quarot" } else { "collect_baseline" };
@@ -138,6 +160,48 @@ impl Artifacts {
         Runner::collect_stats(&engine, &self.weights, rotated,
                               self.corpus.split("calib")?, windows)
     }
+}
+
+/// Synthetic `base.*` + `rot.*` weight archive at `cfg`'s shape — the
+/// tensor layout a real artifact dir holds, generated in memory.  Lets
+/// the native (graph-free) executor run benches and smokes on machines
+/// without `make artifacts`.  Deterministic in `seed`: the base set is
+/// seeded gaussian noise, the rotated set is the exact QuaRot Stage-1
+/// transform of it.
+pub fn synthetic_archive(cfg: &ModelConfig, seed: u64) -> Result<Weights> {
+    let mut rng = Rng::new(seed);
+    let (d, da, dkv, dff, l, v) = (cfg.d_model, cfg.d_attn(), cfg.d_kv(),
+                                   cfg.d_ff, cfg.n_layers, cfg.vocab);
+    let t = |shape: Vec<usize>, rng: &mut Rng| {
+        let n: usize = shape.iter().product();
+        Tensor::from_f32(shape, &rng.normal_vec(n))
+    };
+    let mut base = BTreeMap::new();
+    base.insert("embed".to_string(), t(vec![v, d], &mut rng));
+    base.insert("final_norm".to_string(), t(vec![d], &mut rng));
+    base.insert("lm_head".to_string(), t(vec![d, v], &mut rng));
+    base.insert("attn_norm".to_string(), t(vec![l, d], &mut rng));
+    base.insert("wq".to_string(), t(vec![l, d, da], &mut rng));
+    base.insert("wk".to_string(), t(vec![l, d, dkv], &mut rng));
+    base.insert("wv".to_string(), t(vec![l, d, dkv], &mut rng));
+    base.insert("wo".to_string(), t(vec![l, da, d], &mut rng));
+    base.insert("ffn_norm".to_string(), t(vec![l, d], &mut rng));
+    base.insert("wup".to_string(), t(vec![l, d, dff], &mut rng));
+    base.insert("wgate".to_string(), t(vec![l, d, dff], &mut rng));
+    base.insert("wdown".to_string(), t(vec![l, dff, d], &mut rng));
+    let q = transform::q_from_signs(cfg.d_model,
+                                    &Rng::new(seed ^ 0x5eed).signs(cfg.d_model));
+    let refs: BTreeMap<String, &Tensor> =
+        base.iter().map(|(k, t)| (k.clone(), t)).collect();
+    let rot = transform::rotate(cfg, &refs, &q)?;
+    let mut tensors = BTreeMap::new();
+    for (k, t) in base {
+        tensors.insert(format!("base.{k}"), t);
+    }
+    for (k, t) in rot {
+        tensors.insert(format!("rot.{k}"), t);
+    }
+    Ok(Weights { tensors })
 }
 
 /// Timing-free signature of one generation event — what the 1-shard

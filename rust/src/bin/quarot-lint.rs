@@ -426,7 +426,8 @@ fn is_pub_item(trimmed: &str) -> bool {
 
 fn check_pub_docs(root: &Path, findings: &mut Vec<Finding>)
                   -> Result<(), String> {
-    for sub in ["rust/src/api", "rust/src/cluster", "rust/src/telemetry"] {
+    for sub in ["rust/src/api", "rust/src/cluster", "rust/src/forward",
+                "rust/src/telemetry"] {
         let mut files = Vec::new();
         rs_files(&root.join(sub), &mut files)?;
         for path in files {

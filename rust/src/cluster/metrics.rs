@@ -100,6 +100,14 @@ pub struct ShardMetrics {
     pub queue_wait_hist: Histogram,
     /// decode-tick duration distribution
     pub tick_hist: Histogram,
+    /// executor this shard's engine runs on ("pjrt" / "native"; empty
+    /// for a dead shard that never built its engine)
+    pub executor: String,
+    /// prefill chunks executed (each covers up to the engine's
+    /// per-tick chunk budget of uncached suffix tokens)
+    pub prefill_chunks: usize,
+    /// uncached suffix tokens prefilled through the chunked path
+    pub prefill_chunk_tokens: usize,
 }
 
 impl ShardMetrics {
@@ -136,6 +144,9 @@ impl ShardMetrics {
             itl_hist: st.itl_hist.clone(),
             queue_wait_hist: st.queue_wait_hist.clone(),
             tick_hist: st.tick_hist.clone(),
+            executor: engine.runner.executor_name().to_string(),
+            prefill_chunks: st.prefill_chunks,
+            prefill_chunk_tokens: st.prefill_chunk_tokens,
         }
     }
 
@@ -208,6 +219,11 @@ impl ShardMetrics {
             ("tick_p90_ms", n(self.tick_hist.quantile(0.90))),
             ("tick_p99_ms", n(self.tick_hist.quantile(0.99))),
             ("tick_p999_ms", n(self.tick_hist.quantile(0.999))),
+            // executor additions — appended after the percentile tail
+            // key so positional consumers keep working
+            ("executor", Value::Str(self.executor.clone())),
+            ("prefill_chunks", n(self.prefill_chunks as f64)),
+            ("prefill_chunk_tokens", n(self.prefill_chunk_tokens as f64)),
         ])
     }
 }
@@ -353,6 +369,32 @@ impl ClusterMetrics {
         self.sum(|s| s.session_prefill_tokens_saved)
     }
 
+    /// Executor the cluster's live shards run on: the shared name when
+    /// they agree ("pjrt" / "native"), "mixed" when heterogeneous
+    /// factories built different paths, "none" when no shard ever built
+    /// an engine.
+    pub fn executor(&self) -> String {
+        let mut names = self.shards.iter()
+            .filter(|s| !s.executor.is_empty())
+            .map(|s| s.executor.as_str());
+        match names.next() {
+            None => "none".to_string(),
+            Some(first) if names.all(|x| x == first) => first.to_string(),
+            Some(_) => "mixed".to_string(),
+        }
+    }
+
+    /// Prefill chunks executed across all shards.
+    pub fn prefill_chunks(&self) -> usize {
+        self.sum(|s| s.prefill_chunks)
+    }
+
+    /// Uncached suffix tokens prefilled through the chunked path,
+    /// summed across shards.
+    pub fn prefill_chunk_tokens(&self) -> usize {
+        self.sum(|s| s.prefill_chunk_tokens)
+    }
+
     /// TTFT averaged over every request that started, across shards.
     pub fn avg_ttft_ms(&self) -> f64 {
         let count: usize = self.sum(|s| s.ttft_count);
@@ -469,6 +511,13 @@ impl ClusterMetrics {
             ("tick_p99_ms", n(tick.quantile(0.99))),
             ("tick_p999_ms", n(tick.quantile(0.999))),
         ]);
+        // executor additions — appended after the percentile tail key
+        // so positional consumers of older frames keep working
+        pairs.extend([
+            ("executor", Value::Str(self.executor())),
+            ("prefill_chunks", n(self.prefill_chunks() as f64)),
+            ("prefill_chunk_tokens", n(self.prefill_chunk_tokens() as f64)),
+        ]);
         pairs
     }
 
@@ -557,6 +606,9 @@ mod tests {
             tokens_per_sec: 50.0,
             ttft_sum_ms: 30.0 * done as f64,
             ttft_count: done,
+            executor: "pjrt".to_string(),
+            prefill_chunks: 2 * done,
+            prefill_chunk_tokens: 24 * done,
             ..Default::default()
         }
     }
@@ -588,6 +640,28 @@ mod tests {
         assert_eq!(m.sessions_live(), 2);
         assert_eq!(m.session_turns(), 10);
         assert_eq!(m.session_prefill_tokens_saved(), 160);
+        assert_eq!(m.prefill_chunks(), 20);
+        assert_eq!(m.prefill_chunk_tokens(), 240);
+        // dead shard 2 never built an engine (empty executor) and must
+        // not turn an otherwise-uniform cluster "mixed"
+        assert_eq!(m.executor(), "pjrt");
+    }
+
+    #[test]
+    fn cluster_executor_reports_mixed_and_none() {
+        let mut native = shard(1, 0, 0, 1);
+        native.executor = "native".to_string();
+        let m = ClusterMetrics {
+            queue_bound: 8,
+            shards: vec![shard(0, 0, 0, 1), native],
+        };
+        assert_eq!(m.executor(), "mixed");
+        assert_eq!(ClusterMetrics::default().executor(), "none");
+        let dead_only = ClusterMetrics {
+            queue_bound: 8,
+            shards: vec![ShardMetrics::dead(0)],
+        };
+        assert_eq!(dead_only.executor(), "none");
     }
 
     #[test]
@@ -613,7 +687,9 @@ mod tests {
                     "session_prefill_tokens_saved",
                     // latency-percentile additions
                     "ttft_p50_ms", "ttft_p999_ms", "itl_p50_ms",
-                    "queue_wait_p99_ms", "tick_p90_ms"] {
+                    "queue_wait_p99_ms", "tick_p90_ms",
+                    // executor additions
+                    "executor", "prefill_chunks", "prefill_chunk_tokens"] {
             assert!(v.get(key).is_some(), "summary missing key {key}");
         }
         // new keys append strictly after every pre-existing key: a v1
@@ -626,11 +702,17 @@ mod tests {
                 "session keys must append after the tier tail key");
         assert!(idx("ttft_p50_ms") > idx("session_prefill_tokens_saved"),
                 "percentile keys must append after the session tail key");
+        assert!(idx("executor") > idx("tick_p999_ms"),
+                "executor keys must append after the percentile tail key");
         // same contract on the per-shard rows
         let row = m.shards[0].to_value();
         assert_eq!(row.get("sessions_live").unwrap().as_usize(), Some(1));
         assert_eq!(row.get("session_prefill_tokens_saved").unwrap().as_usize(),
                    Some(16));
+        assert_eq!(row.get("executor"),
+                   Some(&Value::Str("pjrt".to_string())));
+        assert_eq!(row.get("prefill_chunk_tokens").unwrap().as_usize(),
+                   Some(24));
     }
 
     #[test]

@@ -54,6 +54,10 @@ use crate::util::prng::Rng;
 /// the cluster router's prefix-affinity hashing.
 pub const TOKENS_PER_PAGE: usize = 16;
 
+/// Default per-tick prefill token budget shared between chunked-prefill
+/// jobs and decode slots (`--prefill-chunk` overrides).
+pub const DEFAULT_PREFILL_CHUNK: usize = 32;
+
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
@@ -240,6 +244,42 @@ impl Slot {
     }
 }
 
+/// A prefix-hit admission whose uncached suffix is still prefilling.
+/// The job occupies a slot index (it owns that slot's staging lane); the
+/// tick advances it chunk by chunk under the shared prefill/decode token
+/// budget and promotes it to a live [`Slot`] when the prompt completes.
+/// Until then the request has emitted no `Started` — a deadline or cancel
+/// retires it mid-prefill, freeing its pages immediately.
+struct PrefillJob {
+    req: Request,
+    /// Grafted prefix plus every suffix token appended so far;
+    /// `cache.len` is the prompt position the next chunk starts at.
+    cache: SeqCache,
+    /// Tokens grafted from the prefix cache at admission.
+    graft_tokens: usize,
+    /// Accumulated forward-pass wall time across chunks (becomes the
+    /// "prefill" span duration at completion).
+    pf_ms: f64,
+    enqueued_ms: f64,
+    /// Queue wait recorded when the request was popped (feeds the
+    /// queue-wait histogram at `Started`).
+    wait_ms: f64,
+}
+
+impl PrefillJob {
+    /// Terminal stats for a job retired before its first token.
+    fn stats(&self, now_ms: f64) -> RequestStats {
+        RequestStats {
+            prompt_len: self.req.prompt.len(),
+            generated: 0,
+            ttft_ms: 0.0,
+            decode_ms: 0.0,
+            queued_ms: now_ms - self.enqueued_ms,
+            session: session_id(&self.req),
+        }
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     pub completed: usize,
@@ -259,9 +299,17 @@ pub struct EngineStats {
     pub kv8_completed: usize,
     pub kv4_decode_tokens: usize,
     pub kv8_decode_tokens: usize,
-    /// prompt tokens prefilled through the decode graph on the
-    /// prefix-cache hit path (the uncached suffixes)
+    /// prompt tokens prefilled through the executor on the prefix-cache
+    /// hit path (the uncached suffixes)
     pub suffix_prefill_tokens: usize,
+    /// chunked-prefill accounting: forward passes (one per
+    /// [`Runner::prefill_chunk`] call) and the suffix tokens they
+    /// covered.  `prefill_chunk_tokens == suffix_prefill_tokens` always;
+    /// `prefill_chunks` is what the per-tick budget bounds — a lone
+    /// S-token suffix on an idle engine takes exactly
+    /// `ceil(S / prefill_chunk)` chunks, one per tick
+    pub prefill_chunks: usize,
+    pub prefill_chunk_tokens: usize,
     pub total_decode_ms: f64,
     pub total_prefill_ms: f64,
     pub peak_cache_bytes: usize,
@@ -315,6 +363,13 @@ pub struct GenerationEngine {
     /// dense staging rather than pages).
     prefix: PrefixCache,
     slots: Vec<Option<Slot>>,
+    /// In-flight chunked suffix prefills, indexed like `slots` — a slot
+    /// is free for admission only when both its entries are `None`.
+    prefill_jobs: Vec<Option<PrefillJob>>,
+    /// Per-tick prefill token budget shared with decode: each active
+    /// decode slot reserves one token, the remainder is split across
+    /// jobs (minimum one each, so neither side ever starves).
+    prefill_chunk: usize,
     /// Fair-share admission queue (weighted deficit across priority
     /// classes — see [`FairQueue`]).
     queue: FairQueue,
@@ -365,6 +420,8 @@ impl GenerationEngine {
             prefix: PrefixCache::new(tokens_per_page, cfg.n_layers,
                                      if fp { 0 } else { pool_pages / 2 }),
             slots: (0..cfg.decode_batch).map(|_| None).collect(),
+            prefill_jobs: (0..cfg.decode_batch).map(|_| None).collect(),
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
             queue: FairQueue::new(),
             queue_bound: usize::MAX,
             sessions: SessionStore::new(DEFAULT_SESSION_BUDGET),
@@ -420,6 +477,21 @@ impl GenerationEngine {
     /// Spans overwritten because the trace ring was full.
     pub fn spans_dropped(&self) -> u64 {
         self.recorder.dropped()
+    }
+
+    /// Set the per-tick prefill token budget (`serve --prefill-chunk N`)
+    /// shared between chunked-prefill jobs and decode slots: each active
+    /// decode slot reserves one budget token (decode never stalls behind
+    /// a long prompt), and the remainder is split evenly across in-flight
+    /// jobs — but every job always advances by at least one token per
+    /// tick, so prefill cannot be starved by a full decode batch either.
+    pub fn set_prefill_chunk(&mut self, tokens: usize) {
+        self.prefill_chunk = tokens.max(1);
+    }
+
+    /// The per-tick prefill token budget.
+    pub fn prefill_chunk(&self) -> usize {
+        self.prefill_chunk
     }
 
     /// Cap the waiting queue; submissions beyond it are rejected with
@@ -523,6 +595,21 @@ impl GenerationEngine {
             });
             return true;
         }
+        // mid-prefill cancellation: a chunked suffix job retires between
+        // chunks, grafted refs and allocated pages freed immediately
+        for i in 0..self.prefill_jobs.len() {
+            let hit = self.prefill_jobs[i].as_ref()
+                .is_some_and(|j| j.req.id == id);
+            if hit {
+                let mut job = self.prefill_jobs[i].take().unwrap();
+                let _own = crate::audit::owner(|| format!("seq:{id}"));
+                let stats = job.stats(self.clock.now_ms());
+                job.cache.free(&mut self.pool);
+                self.emit_finish(id, job.req.tier, FinishReason::Cancelled,
+                                 stats);
+                return true;
+            }
+        }
         for i in 0..self.slots.len() {
             let hit = self.slots[i].as_ref().is_some_and(|s| s.req.id == id);
             if hit {
@@ -548,6 +635,15 @@ impl GenerationEngine {
                 error: error.to_string(),
             }));
         }
+        for i in 0..self.prefill_jobs.len() {
+            if let Some(mut job) = self.prefill_jobs[i].take() {
+                job.cache.free(&mut self.pool);
+                self.stats.failed += 1;
+                self.events.push_back((job.req.id, GenerationEvent::Failed {
+                    error: error.to_string(),
+                }));
+            }
+        }
         for i in 0..self.slots.len() {
             if let Some(mut slot) = self.slots[i].take() {
                 slot.cache.free(&mut self.pool);
@@ -560,7 +656,13 @@ impl GenerationEngine {
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.active_slot_count()
+        self.queue.len() + self.active_slot_count() + self.prefill_jobs_active()
+    }
+
+    /// Prefix-hit admissions whose suffix is still chunk-prefilling
+    /// (each occupies a slot but has not emitted `Started` yet).
+    pub fn prefill_jobs_active(&self) -> usize {
+        self.prefill_jobs.iter().filter(|j| j.is_some()).count()
     }
 
     /// Requests waiting for admission (the router's primary load signal).
@@ -700,6 +802,22 @@ impl GenerationEngine {
                                  });
             }
         }
+        // mid-prefill enforcement: a long-prompt request whose deadline
+        // lapses between chunks retires here, before its next chunk ever
+        // runs, with every grafted and allocated page freed
+        for i in 0..self.prefill_jobs.len() {
+            let expired = self.prefill_jobs[i].as_ref()
+                .is_some_and(|j| deadline_expired(&j.req, j.enqueued_ms, now));
+            if expired {
+                let mut job = self.prefill_jobs[i].take().unwrap();
+                let _own = crate::audit::owner(
+                    || format!("seq:{}", job.req.id));
+                let stats = job.stats(now);
+                job.cache.free(&mut self.pool);
+                self.emit_finish(job.req.id, job.req.tier,
+                                 FinishReason::DeadlineExceeded, stats);
+            }
+        }
         for i in 0..self.slots.len() {
             let expired = self.slots[i].as_ref()
                 .is_some_and(|s| deadline_expired(&s.req, s.enqueued_ms, now));
@@ -727,7 +845,9 @@ impl GenerationEngine {
     /// queued request is pulled immediately.
     fn admit(&mut self) -> Result<()> {
         'slots: for slot_idx in 0..self.slots.len() {
-            if self.slots[slot_idx].is_some() {
+            if self.slots[slot_idx].is_some()
+                || self.prefill_jobs[slot_idx].is_some()
+            {
                 continue;
             }
             loop {
@@ -819,89 +939,47 @@ impl GenerationEngine {
                 }
 
                 if !shared.is_empty() {
-                    // ---- prefix-hit path: graft shared pages, prefill
-                    // only the uncached suffix (through the decode
-                    // graph), sample the first token off the final
-                    // suffix step's logits ----
-                    let pf_start = self.clock.now_ms();
-                    let t0 = Instant::now();
-                    let built = self.graft_and_extend(slot_idx, &req, &shared);
-                    let pf_ms = t0.elapsed().as_secs_f64() * 1e3;
-                    self.stats.total_prefill_ms += pf_ms;
-                    if self.recorder.enabled() {
-                        let graft = shared.len() * self.tokens_per_page;
-                        self.recorder.record(
-                            Span::new("prefill", req.id, pf_start, pf_ms)
-                                .arg("suffix_tokens",
-                                     (req.prompt.len() - graft) as f64)
-                                .arg("graft_tokens", graft as f64));
-                    }
-                    let (mut cache, first_logits) = match built {
-                        Ok(x) => x,
-                        Err(e) => {
-                            self.stats.failed += 1;
-                            self.events.push_back((req.id,
-                                                   GenerationEvent::Failed {
-                                error: format!("suffix prefill failed: {e:#}"),
-                            }));
-                            continue;
+                    // ---- prefix-hit path: graft the shared pages
+                    // (retained, read-only) and hand the uncached suffix
+                    // to a chunked-prefill job.  The tick advances the
+                    // job alongside live decode slots under the shared
+                    // token budget, so a long suffix no longer
+                    // monopolises admission, and the request can retire
+                    // mid-prefill on deadline or cancel.  `Started` and
+                    // the first token are emitted when the job's final
+                    // chunk lands ([`Self::finish_prefill_job`]).
+                    let mut cache = SeqCache::new(&cfg,
+                                                  self.cache_bits_for(req.tier),
+                                                  self.runner.spec.kv_clip,
+                                                  self.tokens_per_page);
+                    cache.graft_prefix(&mut self.pool, &shared);
+                    // Tail continuation: a retired turn's partially-
+                    // filled last page copies in (never shared — the
+                    // sequence keeps appending into it).  Failure just
+                    // leaves the tokens to the suffix prefill.
+                    if let Some((tg, tlen)) = self.prefix.lookup_tail(
+                        req.tier, &req.prompt, shared.len())
+                    {
+                        if cache.graft_partial_tail(&mut self.pool, &tg,
+                                                    tlen).is_ok()
+                        {
+                            if let Some(sid) = session_id(&req) {
+                                if self.sessions.prior_turns(sid) > 0 {
+                                    self.stats.session_prefill_tokens_saved
+                                        += tlen;
+                                }
+                            }
                         }
-                    };
-                    let first_tok = sample(&first_logits, req.sampling,
-                                           &mut self.rng) as u16;
-                    let now = self.clock.now_ms();
-                    let ttft = now - enq;
-                    self.stats.ttft_sum_ms += ttft;
-                    self.stats.ttft_count += 1;
-                    self.stats.ttft_hist.record(ttft);
-                    self.stats.queue_wait_hist.record(wait_ms);
-                    if self.recorder.enabled() {
-                        let graft = shared.len() * self.tokens_per_page;
-                        self.recorder.record(
-                            Span::new("admitted", req.id, enq, wait_ms)
-                                .arg("graft_tokens", graft as f64)
-                                .arg("prompt_len", req.prompt.len() as f64));
                     }
-                    self.events.push_back((req.id, GenerationEvent::Started {
-                        ttft_ms: ttft,
-                    }));
-                    self.events.push_back((req.id, GenerationEvent::Token {
-                        token: first_tok, index: 0,
-                    }));
-                    let hit_stop = req.stop_token == Some(first_tok);
-                    if hit_stop || req.max_new_tokens <= 1 {
-                        // admission-terminal: unlike the cold path the
-                        // cache already exists — record the session turn
-                        // (the cache covers exactly the prompt, so the
-                        // donation matches the non-terminal path), then
-                        // free it (grafted refs included) and pull the
-                        // next request
-                        self.complete_session_turn(&req, &[first_tok],
-                                                   Some(&cache));
-                        cache.free(&mut self.pool);
-                        let reason = if hit_stop {
-                            FinishReason::Stop
-                        } else {
-                            FinishReason::MaxTokens
-                        };
-                        self.emit_finish(req.id, req.tier, reason, RequestStats {
-                            prompt_len: req.prompt.len(),
-                            generated: 1,
-                            ttft_ms: ttft,
-                            decode_ms: 0.0,
-                            queued_ms: self.clock.now_ms() - enq,
-                            session: session_id(&req),
-                        });
-                        continue;
-                    }
-                    self.donate_prompt_pages(&req.prompt, &cache, req.tier);
-                    self.slots[slot_idx] = Some(Slot {
-                        generated: vec![first_tok],
-                        next_token: first_tok,
+                    debug_assert!(cache.len < req.prompt.len(),
+                                  "at least one suffix token must stay \
+                                   uncached");
+                    self.load_slot_staging(slot_idx, &cache);
+                    self.prefill_jobs[slot_idx] = Some(PrefillJob {
+                        graft_tokens: cache.len,
+                        pf_ms: 0.0,
                         enqueued_ms: enq,
-                        started_ms: now,
-                        last_token_ms: now,
-                        ttft_ms: ttft,
+                        wait_ms,
                         req,
                         cache,
                     });
@@ -1037,100 +1115,188 @@ impl GenerationEngine {
         Ok(())
     }
 
-    /// Hit-path admission: graft the shared prefix pages (retained,
-    /// read-only), then run the uncached suffix through the *decode*
-    /// graph one token at a time — suffix tokens must attend over the
-    /// grafted prefix at their true positions, which the fixed-shape
-    /// prefill graph cannot express.  Each step appends that token's
-    /// K/V into the cache and stages it; the final step's logits are
-    /// the first-token sampling distribution (the cold path reads the
-    /// same distribution off the prefill graph's last prompt position).
-    /// On error the partially built cache — grafted refs included — is
-    /// freed before returning.
-    fn graft_and_extend(&mut self, slot_idx: usize, req: &Request,
-                        shared: &[PageGroup]) -> Result<(SeqCache, Vec<f32>)> {
-        let cfg = self.runner.cfg.clone();
-        let (b, v, d) = (cfg.decode_batch, cfg.vocab, cfg.d_kv());
-        let mut cache = SeqCache::new(&cfg, self.cache_bits_for(req.tier),
-                                      self.runner.spec.kv_clip,
-                                      self.tokens_per_page);
-        cache.graft_prefix(&mut self.pool, shared);
-        debug_assert!(cache.len < req.prompt.len(),
-                      "at least one suffix token must stay uncached");
-        self.load_slot_staging(slot_idx, &cache);
-        let mut first_logits = vec![0.0f32; v];
-        while cache.len < req.prompt.len() {
-            // a batched decode step where only this slot's lane is
-            // meaningful: the other lanes read zero-length caches and
-            // their outputs are discarded, so no live slot is touched
-            let mut tokens = vec![0i32; b];
-            let mut lens = vec![0i32; b];
-            tokens[slot_idx] = req.prompt[cache.len] as i32;
-            lens[slot_idx] = cache.len as i32;
-            let step = self.runner.decode(&tokens, &lens, &self.staging);
-            let (logits, k_new, v_new) = match step {
-                Ok(x) => x,
-                Err(e) => {
-                    cache.free(&mut self.pool);
-                    return Err(e);
-                }
-            };
-            // all-or-nothing across the layer loop (admission already
-            // sized the pool for the whole suffix, so this only trips
-            // if that estimate is ever broken)
-            if self.pool.available() < cache.pages_needed_for_append() {
-                cache.free(&mut self.pool);
-                bail!("KV page pool exhausted during suffix prefill");
-            }
-            for l in 0..cfg.n_layers {
-                let o = (l * b + slot_idx) * d;
-                if let Err(e) = cache.append_layer(&mut self.pool, l,
-                                                   &k_new[o..o + d],
-                                                   &v_new[o..o + d],
-                                                   cfg.kv_group) {
-                    cache.free(&mut self.pool);
-                    return Err(e);
-                }
-            }
-            cache.bump();
-            self.stage_token(slot_idx, &cache, cache.len - 1);
-            self.stats.suffix_prefill_tokens += 1;
-            first_logits.copy_from_slice(
-                &logits[slot_idx * v..(slot_idx + 1) * v]);
+    /// Advance every in-flight chunked-prefill job under the shared tick
+    /// budget.  Of the `prefill_chunk` prefill-token budget, each active
+    /// decode slot reserves one token (decode keeps advancing every tick
+    /// regardless of prefill load), and the remainder is split evenly
+    /// across jobs — but a job always gets at least one token, so
+    /// prefill can never be starved either.  A lone job on an otherwise
+    /// idle engine therefore processes `prefill_chunk` tokens per tick:
+    /// an S-token suffix completes in `ceil(S / prefill_chunk)` ticks,
+    /// not S.
+    fn advance_prefill_jobs(&mut self) {
+        let n_jobs = self.prefill_jobs_active();
+        if n_jobs == 0 {
+            return;
         }
-        Ok((cache, first_logits))
+        let decoding = self.slots.iter().filter(|s| s.is_some()).count();
+        let spare = self.prefill_chunk.saturating_sub(decoding);
+        let per_job = (spare / n_jobs).max(1);
+        for idx in 0..self.prefill_jobs.len() {
+            if self.prefill_jobs[idx].is_some() {
+                self.advance_prefill_job(idx, per_job);
+            }
+        }
     }
 
-    /// Write one token of `cache` into slot `slot`'s dense staging
-    /// region (all layers, K and V) — the sequential single-token twin
-    /// of [`Self::refresh_staging_for`], used while a cache is still
-    /// being built at admission (the slot is not installed yet).
-    fn stage_token(&mut self, slot: usize, cache: &SeqCache, t: usize) {
+    /// Run up to `quota` suffix tokens of the job in `slot_idx` through
+    /// one [`Runner::prefill_chunk`] call — the executor computes them at
+    /// their true positions against the slot's staging lane (attending
+    /// over the grafted prefix) and quantizes their K/V into the lane as
+    /// it goes — then append the chunk's raw K/V to the job's paged
+    /// cache.  When the chunk finishes the prompt, the job is promoted to
+    /// a live slot and joins the same tick's decode batch.  Any failure
+    /// frees the cache (grafted refs included) and retires the request
+    /// with `Failed`; concurrent slots are untouched.
+    fn advance_prefill_job(&mut self, slot_idx: usize, quota: usize) {
+        let mut job = self.prefill_jobs[slot_idx].take().unwrap();
+        let id = job.req.id;
+        let _own = crate::audit::owner(|| format!("seq:{id}"));
         let cfg = self.runner.cfg.clone();
-        let (l_n, b, s) = (cfg.n_layers, cfg.decode_batch, cfg.cache_seq);
-        let d = cfg.d_kv();
-        let ng = d / cfg.kv_group;
-        let mut codes = vec![0i8; d];
-        let mut scales = vec![0.0f32; ng];
-        let mut zeros = vec![0.0f32; ng];
-        for l in 0..l_n {
-            for want_v in [false, true] {
-                cache.read_token(&self.pool, l, t, want_v,
-                                 &mut codes, &mut scales, &mut zeros);
-                let co = ((l * b + slot) * s + t) * d;
-                let go = ((l * b + slot) * s + t) * ng;
-                let (dc, ds, dz) = if want_v {
-                    (&mut self.staging.v_codes, &mut self.staging.v_scale,
-                     &mut self.staging.v_zero)
-                } else {
-                    (&mut self.staging.k_codes, &mut self.staging.k_scale,
-                     &mut self.staging.k_zero)
-                };
-                dc[co..co + d].copy_from_slice(&codes);
-                ds[go..go + ng].copy_from_slice(&scales);
-                dz[go..go + ng].copy_from_slice(&zeros);
+        let remaining = job.req.prompt.len() - job.cache.len;
+        let take = quota.min(remaining);
+        let chunk = job.req.prompt[job.cache.len..job.cache.len + take].to_vec();
+        let start_pos = job.cache.len;
+        let bits = self.cache_bits_for(job.req.tier);
+        let pf_start = self.clock.now_ms();
+        let t0 = Instant::now();
+        let res = self.runner.prefill_chunk(&chunk, start_pos, slot_idx, bits,
+                                            &mut self.staging);
+        let pf_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.total_prefill_ms += pf_ms;
+        job.pf_ms += pf_ms;
+        let res = match res {
+            Ok(r) => r,
+            Err(e) => {
+                job.cache.free(&mut self.pool);
+                self.stats.failed += 1;
+                self.events.push_back((id, GenerationEvent::Failed {
+                    error: format!("suffix prefill failed: {e:#}"),
+                }));
+                return;
             }
+        };
+        // Append the chunk's raw K/V token-major: chunk position j of
+        // layer l lives at (l·T + j)·d in the `[L][T][d_kv]` slabs.  The
+        // pool reservation is all-or-nothing per token (admission sized
+        // the pool for the whole suffix, so exhaustion here means that
+        // estimate was broken).
+        let d = cfg.d_kv();
+        for j in 0..take {
+            if self.pool.available() < job.cache.pages_needed_for_append() {
+                job.cache.free(&mut self.pool);
+                self.stats.failed += 1;
+                self.events.push_back((id, GenerationEvent::Failed {
+                    error: "KV page pool exhausted during suffix prefill"
+                        .to_string(),
+                }));
+                return;
+            }
+            for l in 0..cfg.n_layers {
+                let o = (l * take + j) * d;
+                if let Err(e) = job.cache.append_layer(
+                    &mut self.pool, l, &res.k[o..o + d], &res.v[o..o + d],
+                    cfg.kv_group)
+                {
+                    job.cache.free(&mut self.pool);
+                    self.stats.failed += 1;
+                    self.events.push_back((id, GenerationEvent::Failed {
+                        error: format!("suffix prefill failed: {e:#}"),
+                    }));
+                    return;
+                }
+            }
+            job.cache.bump();
         }
+        self.stats.suffix_prefill_tokens += take;
+        self.stats.prefill_chunks += 1;
+        self.stats.prefill_chunk_tokens += take;
+        if self.recorder.enabled() {
+            self.recorder.record(
+                Span::new("prefill.chunk", id, pf_start, pf_ms)
+                    .arg("tokens", take as f64)
+                    .arg("pos", start_pos as f64));
+        }
+        if job.cache.len < job.req.prompt.len() {
+            self.prefill_jobs[slot_idx] = Some(job);
+            return;
+        }
+        let v = cfg.vocab;
+        let first_logits = res.logits[(take - 1) * v..take * v].to_vec();
+        self.finish_prefill_job(slot_idx, job, first_logits);
+    }
+
+    /// A job's final chunk just landed: sample the first token off the
+    /// last chunk row's logits (the same distribution the cold path reads
+    /// off the prefill output's last prompt position), emit the admission
+    /// telemetry, and either retire at admission (stop token, one-token
+    /// budget) or install the live slot.
+    fn finish_prefill_job(&mut self, slot_idx: usize, job: PrefillJob,
+                          first_logits: Vec<f32>) {
+        let PrefillJob { req, mut cache, graft_tokens, pf_ms,
+                         enqueued_ms: enq, wait_ms } = job;
+        if self.recorder.enabled() {
+            let end = self.clock.now_ms();
+            self.recorder.record(
+                Span::new("prefill", req.id, end - pf_ms, pf_ms)
+                    .arg("suffix_tokens",
+                         (req.prompt.len() - graft_tokens) as f64)
+                    .arg("graft_tokens", graft_tokens as f64));
+        }
+        let first_tok = sample(&first_logits, req.sampling,
+                               &mut self.rng) as u16;
+        let now = self.clock.now_ms();
+        let ttft = now - enq;
+        self.stats.ttft_sum_ms += ttft;
+        self.stats.ttft_count += 1;
+        self.stats.ttft_hist.record(ttft);
+        self.stats.queue_wait_hist.record(wait_ms);
+        if self.recorder.enabled() {
+            self.recorder.record(
+                Span::new("admitted", req.id, enq, wait_ms)
+                    .arg("graft_tokens", graft_tokens as f64)
+                    .arg("prompt_len", req.prompt.len() as f64));
+        }
+        self.events.push_back((req.id, GenerationEvent::Started {
+            ttft_ms: ttft,
+        }));
+        self.events.push_back((req.id, GenerationEvent::Token {
+            token: first_tok, index: 0,
+        }));
+        let hit_stop = req.stop_token == Some(first_tok);
+        if hit_stop || req.max_new_tokens <= 1 {
+            // admission-terminal: the cache covers exactly the prompt, so
+            // the session donation matches the non-terminal path; free it
+            // (grafted refs included) — the slot stays open
+            self.complete_session_turn(&req, &[first_tok], Some(&cache));
+            cache.free(&mut self.pool);
+            let reason = if hit_stop {
+                FinishReason::Stop
+            } else {
+                FinishReason::MaxTokens
+            };
+            let stats = RequestStats {
+                prompt_len: req.prompt.len(),
+                generated: 1,
+                ttft_ms: ttft,
+                decode_ms: 0.0,
+                queued_ms: self.clock.now_ms() - enq,
+                session: session_id(&req),
+            };
+            self.emit_finish(req.id, req.tier, reason, stats);
+            return;
+        }
+        self.donate_prompt_pages(&req.prompt, &cache, req.tier);
+        self.slots[slot_idx] = Some(Slot {
+            generated: vec![first_tok],
+            next_token: first_tok,
+            enqueued_ms: enq,
+            started_ms: now,
+            last_token_ms: now,
+            ttft_ms: ttft,
+            req,
+            cache,
+        });
     }
 
     /// Donate a freshly admitted cache's full prompt pages to the
@@ -1186,7 +1352,19 @@ impl GenerationEngine {
         let donated = match cache {
             Some(c) => {
                 let cached = c.len.min(chain.len());
-                self.donate_chain_pages(&chain[..cached], c, req.tier)
+                let mut donated =
+                    self.donate_chain_pages(&chain[..cached], c, req.tier);
+                // The partially-filled last page goes in too: the next
+                // turn copies it instead of re-prefilling the sub-page
+                // remainder, making donation savings token-exact.
+                if cached == c.len && self.prefix.enabled() {
+                    if let Some((tg, tlen)) = c.tail_page_group() {
+                        self.prefix.insert_tail(&mut self.pool, req.tier,
+                                                &chain[..cached], &tg);
+                        donated += tlen;
+                    }
+                }
+                donated
             }
             None => 0,
         };
@@ -1370,6 +1548,10 @@ impl GenerationEngine {
             let dur = self.clock.now_ms() - admit_start;
             self.recorder.record(Span::new("tick.admit", 0, admit_start, dur));
         }
+        // chunked suffix prefills advance before the decode step: a job
+        // whose final chunk lands this tick installs its slot in time to
+        // join this very decode batch (continuous batching, no idle tick)
+        self.advance_prefill_jobs();
         let cfg = self.runner.cfg.clone();
         let b = cfg.decode_batch;
         let active: Vec<usize> = (0..b).filter(|&i| self.slots[i].is_some()).collect();
@@ -2044,6 +2226,286 @@ mod tests {
             staged_decode_attention(be.as_ref(), &cfg, true, &staging, layer,
                                     &active, &qs, &mut got);
             assert!(got == want, "staged f32 decode diverged on {}", be.name());
+        }
+    }
+
+    /// Engine-level tests over the native executor — the first serving
+    /// tests that run without PJRT artifacts (`Runner::new_native_*`
+    /// needs no compiled graphs, so plain `cargo test` drives the full
+    /// submit → tick → events pipeline end to end).
+    mod native_engine {
+        use super::*;
+        use crate::coordinator::runner::QuantSpec;
+        use crate::forward::native::tests::archive_for;
+        use crate::forward::weights::canonical_weight_order;
+        use crate::telemetry::ManualClock;
+
+        fn engine_cfg() -> ModelConfig {
+            ModelConfig {
+                name: "native-engine".into(),
+                vocab: 32,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 4,
+                n_kv_heads: 2,
+                d_head: 4,
+                d_ff: 24,
+                max_seq: 48,
+                cache_seq: 64,
+                decode_batch: 2,
+                kv_group: 4,
+                rope_theta: 1e4,
+                train_ppl: 0.0,
+            }
+        }
+
+        /// Engine on the scalar backend: per-row arithmetic is bit-stable
+        /// there regardless of how many rows share a forward pass, which
+        /// the chunk-size-invariance assertions below rely on.
+        fn engine(pool_pages: usize, seed: u64) -> GenerationEngine {
+            let cfg = engine_cfg();
+            let weights = archive_for(&cfg, 11);
+            let runner = Runner::new_native_with_backend(
+                &cfg, &canonical_weight_order(), &weights,
+                QuantSpec::quarot(4), None,
+                backend::make(BackendKind::Scalar)).unwrap();
+            GenerationEngine::new(runner, pool_pages, seed)
+        }
+
+        fn request(prompt: Vec<u16>, max_new: usize,
+                   deadline_ms: Option<u64>) -> Request {
+            Request {
+                id: 0,
+                prompt,
+                max_new_tokens: max_new,
+                sampling: Sampling::Greedy,
+                stop_token: None,
+                priority: Priority::Interactive,
+                deadline_ms,
+                tier: QualityTier::Kv4,
+                session: None,
+            }
+        }
+
+        /// Two full pages of head tokens shared by the warm and hit
+        /// prompts (TOKENS_PER_PAGE = 16).
+        fn head() -> Vec<u16> {
+            (0..32u16).map(|i| i * 5 % 31).collect()
+        }
+
+        /// Seed the prefix cache: a cold request whose prompt covers the
+        /// two-page head (cold admission donates the full prompt pages).
+        fn warm(eng: &mut GenerationEngine) {
+            let mut prompt = head();
+            prompt.extend_from_slice(&[1, 2, 3]);
+            eng.submit(request(prompt, 2, None));
+            eng.run_to_completion().unwrap();
+        }
+
+        #[test]
+        fn native_engine_serves_end_to_end() {
+            let mut eng = engine(256, 5);
+            assert_eq!(eng.runner.executor_name(), "native");
+            let prompt: Vec<u16> = (0..20u16).map(|i| i * 7 % 31).collect();
+            let id = eng.submit(request(prompt.clone(), 6, None));
+            let done = eng.run_to_completion().unwrap();
+            assert_eq!(done.len(), 1);
+            assert_eq!(done[0].id, id);
+            assert_eq!(done[0].prompt_len, prompt.len());
+            assert_eq!(done[0].tokens.len(), 6);
+            assert!(done[0].tokens.iter().all(|&t| (t as usize) < 32));
+            // all pages back except what the prefix trie retains
+            eng.clear_prefix_cache();
+            assert_eq!(eng.pool_in_use(), 0);
+        }
+
+        /// One warm + one prefix-hit request at the given chunk budget;
+        /// returns the hit's generated tokens and the final stats.
+        fn run_hit_workload(chunk: usize) -> (Vec<u16>, EngineStats) {
+            let mut eng = engine(256, 9);
+            eng.set_prefill_chunk(chunk);
+            warm(&mut eng);
+            let mut hit = head();
+            hit.extend_from_slice(&[9, 4, 22, 13, 30, 2, 17]);
+            eng.submit(request(hit, 5, None));
+            let done = eng.run_to_completion().unwrap();
+            assert_eq!(done.len(), 1);
+            assert_eq!(done[0].tokens.len(), 5);
+            (done[0].tokens.clone(), eng.stats.clone())
+        }
+
+        /// Satellite: chunked suffix prefill is bit-exact across chunk
+        /// sizes — chunk 1 IS the old token-at-a-time loop, so agreement
+        /// at 1 / 3 / whole-suffix pins the refactor's numerics, and the
+        /// chunk counters pin the ceil(S/chunk) budget accounting.
+        #[test]
+        fn chunked_suffix_prefill_is_chunk_size_invariant() {
+            let (t1, s1) = run_hit_workload(1);
+            let (t3, s3) = run_hit_workload(3);
+            let (tn, sn) = run_hit_workload(64);
+            assert_eq!(t1, t3, "chunk 3 diverged from token-at-a-time");
+            assert_eq!(t1, tn, "whole-suffix chunk diverged");
+            for s in [&s1, &s3, &sn] {
+                assert_eq!(s.suffix_prefill_tokens, 7);
+                assert_eq!(s.prefill_chunk_tokens, 7);
+            }
+            assert_eq!(s1.prefill_chunks, 7); // ceil(7/1)
+            assert_eq!(s3.prefill_chunks, 3); // ceil(7/3)
+            assert_eq!(sn.prefill_chunks, 1); // ceil(7/64)
+        }
+
+        /// Acceptance: an S-token uncached suffix on an idle engine
+        /// completes in ceil(S/chunk) ticks, not S — `Started` fires on
+        /// exactly that tick.
+        #[test]
+        fn suffix_completes_in_ceil_s_over_chunk_ticks() {
+            let mut eng = engine(256, 2);
+            eng.set_prefill_chunk(3);
+            warm(&mut eng);
+            let mut hit = head();
+            hit.extend_from_slice(&[5, 11, 2, 28, 7, 19, 3]); // S = 7
+            eng.submit(request(hit, 4, None));
+            eng.take_events();
+            let mut started_tick = None;
+            for tick in 1..=6 {
+                eng.tick().unwrap();
+                let started = eng.take_events().iter().any(|(_, e)| {
+                    matches!(e, GenerationEvent::Started { .. })
+                });
+                if started {
+                    started_tick = Some(tick);
+                    break;
+                }
+            }
+            assert_eq!(started_tick, Some(3), "ceil(7/3) = 3 ticks");
+            assert_eq!(eng.stats.prefill_chunks, 3);
+            assert_eq!(eng.stats.suffix_prefill_tokens, 7);
+        }
+
+        /// Satellite regression (ManualClock): a request whose deadline
+        /// lapses mid-prefill retires between chunks with
+        /// `DeadlineExceeded`, never emits `Started`, and returns every
+        /// page — grafted refs included — to the pool.
+        #[test]
+        fn deadline_retires_job_mid_prefill_and_frees_pages() {
+            let clock = Arc::new(ManualClock::new());
+            let mut eng = engine(256, 7);
+            eng.set_clock(clock.clone());
+            eng.set_prefill_chunk(2);
+            warm(&mut eng);
+            let retained = eng.pool_in_use();
+            let mut hit = head();
+            hit.extend((0..10u16).map(|i| i + 3));
+            let id = eng.submit(request(hit, 8, Some(50)));
+            eng.take_events();
+            eng.tick().unwrap(); // admits the job, runs its first chunk
+            assert_eq!(eng.prefill_jobs_active(), 1);
+            assert!(eng.stats.suffix_prefill_tokens < 10,
+                    "prefill must still be in flight");
+            clock.advance_ms(60.0);
+            eng.tick().unwrap(); // deadline fires before the next chunk
+            let evs = eng.take_events();
+            assert!(evs.iter().any(|(eid, e)| *eid == id && matches!(e,
+                GenerationEvent::Finished {
+                    reason: FinishReason::DeadlineExceeded, ..
+                })), "expected DeadlineExceeded, got {evs:?}");
+            assert!(!evs.iter().any(
+                        |(_, e)| matches!(e, GenerationEvent::Started { .. })),
+                    "an expired job must never start");
+            assert_eq!(eng.prefill_jobs_active(), 0);
+            assert_eq!(eng.pool_in_use(), retained,
+                       "job pages must return to the pool");
+            assert_eq!(eng.stats.deadline_exceeded, 1);
+        }
+
+        /// Mid-prefill cancellation takes the same retirement path.
+        #[test]
+        fn cancel_retires_job_mid_prefill() {
+            let mut eng = engine(256, 4);
+            eng.set_prefill_chunk(2);
+            warm(&mut eng);
+            let retained = eng.pool_in_use();
+            let mut hit = head();
+            hit.extend((0..9u16).map(|i| i + 6));
+            let id = eng.submit(request(hit, 8, None));
+            eng.tick().unwrap();
+            assert_eq!(eng.prefill_jobs_active(), 1);
+            assert!(eng.cancel(id));
+            let evs = eng.take_events();
+            assert!(evs.iter().any(|(eid, e)| *eid == id && matches!(e,
+                GenerationEvent::Finished {
+                    reason: FinishReason::Cancelled, ..
+                })));
+            assert_eq!(eng.prefill_jobs_active(), 0);
+            assert_eq!(eng.pool_in_use(), retained);
+            eng.tick().unwrap();
+            assert_eq!(eng.pending(), 0);
+        }
+
+        /// Satellite: generated-token donation is token-exact — turn 2
+        /// grafts the full pages AND the copied tail page of turn 1's
+        /// resident chain, so the savings gauge equals
+        /// `prev_prompt + generated − 1` exactly (not page-rounded).
+        #[test]
+        fn session_tail_donation_savings_are_token_exact() {
+            let mut eng = engine(256, 6);
+            let prompt1: Vec<u16> =
+                (0..20u16).map(|i| (i * 3 + 1) % 31).collect();
+            let mut req = request(prompt1, 6, None);
+            req.session = Some(SessionSpec::New);
+            let id1 = eng.submit(req);
+            let mut sid = None;
+            while eng.pending() > 0 {
+                eng.tick().unwrap();
+                for (eid, e) in eng.take_events() {
+                    if eid == id1 {
+                        if let GenerationEvent::Finished { stats, .. } = e {
+                            sid = stats.session;
+                        }
+                    }
+                }
+            }
+            let sid = sid.expect("turn 1 must resolve a session");
+            assert_eq!(eng.stats.session_prefill_tokens_saved, 0);
+
+            let mut req2 = request(vec![7, 9, 11, 13, 2], 4, None);
+            req2.session = Some(SessionSpec::Resume(sid));
+            eng.submit(req2);
+            eng.run_to_completion().unwrap();
+            // resident chain of turn 1: 20 prompt + 6 generated − 1
+            // never-appended = 25 tokens = 1 full page + a 9-token tail
+            assert_eq!(eng.stats.session_prefill_tokens_saved, 25);
+            // turn-2 prompt = 26-token history + 5 new = 31; 25 grafted,
+            // 6 prefilled
+            assert_eq!(eng.stats.suffix_prefill_tokens, 31 - 25);
+        }
+
+        /// Acceptance: decode slots advance every tick while a chunked
+        /// prefill is in flight — the shared budget never stalls decode.
+        #[test]
+        fn decode_advances_every_tick_alongside_prefill_jobs() {
+            let mut eng = engine(256, 3);
+            eng.set_prefill_chunk(2);
+            warm(&mut eng);
+            // slot A: short cold prompt, long decode budget
+            let cold: Vec<u16> = (0..8u16).map(|i| 30 - i).collect();
+            let d_id = eng.submit(request(cold, 10, None));
+            eng.tick().unwrap();
+            // slot B: prefix hit with an 8-token suffix; at budget 2 with
+            // one decoding slot it advances 1 token/tick
+            let mut hit = head();
+            hit.extend((0..8u16).map(|i| i + 12));
+            eng.submit(request(hit, 2, None));
+            eng.take_events();
+            for tick in 0..3 {
+                eng.tick().unwrap();
+                assert_eq!(eng.prefill_jobs_active(), 1,
+                           "suffix must still be prefilling at tick {tick}");
+                let evs = eng.take_events();
+                assert!(evs.iter().any(|(eid, e)| *eid == d_id && matches!(e,
+                    GenerationEvent::Token { .. })),
+                    "decode slot must produce a token every tick, tick {tick}");
+            }
         }
     }
 }

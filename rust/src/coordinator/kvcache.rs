@@ -393,6 +393,61 @@ impl SeqCache {
         }
     }
 
+    /// The page ids holding the trailing *partial* page (`len % tpp`
+    /// tokens) of every layer, plus that token count — what the session
+    /// retirement path donates beyond [`Self::page_group`]'s full pages.
+    /// `None` when the length is page-aligned (nothing partial) or the
+    /// tail lives outside the pool (fp16 pass-through slots).
+    pub fn tail_page_group(&self) -> Option<(PageGroup, usize)> {
+        let tpp = self.geom.tokens_per_page;
+        let tail = self.len % tpp;
+        let idx = self.len / tpp;
+        if tail == 0 || self.k.iter().chain(self.v.iter())
+            .any(|s| s.pages.len() <= idx)
+        {
+            return None;
+        }
+        Some((PageGroup {
+            k: self.k.iter().map(|s| s.pages[idx]).collect(),
+            v: self.v.iter().map(|s| s.pages[idx]).collect(),
+        }, tail))
+    }
+
+    /// Continue a grafted chain through a donated *partial* tail page.
+    /// Unlike [`Self::graft_prefix`]'s full pages, a partial page will be
+    /// written again (the sequence keeps appending into it), so sharing
+    /// it would break the CoW invariant — instead the first `tail_len`
+    /// tokens' bytes are **copied** into fresh exclusively-owned pages.
+    /// Atomic: all `2·n_layers` pages are reserved before any copy.
+    pub fn graft_partial_tail(&mut self, pool: &mut PagePool,
+                              group: &PageGroup, tail_len: usize) -> Result<()> {
+        let tpp = self.geom.tokens_per_page;
+        assert!(tail_len > 0 && tail_len < tpp,
+                "tail graft must be a partial page ({tail_len} of {tpp})");
+        assert_eq!(self.len % tpp, 0,
+                   "tail graft must land on a page boundary");
+        assert_eq!(group.k.len(), self.n_layers, "page group layer count");
+        assert_eq!(group.v.len(), self.n_layers, "page group layer count");
+        let need = 2 * self.n_layers;
+        if pool.available() < need {
+            bail!("KV page pool exhausted (tail graft needs {need} pages, \
+                   {} free of {})", pool.available(), pool.capacity());
+        }
+        let bytes = tail_len * self.geom.token_bytes();
+        for (streams, pages) in [(&mut self.k, &group.k),
+                                 (&mut self.v, &group.v)] {
+            for (s, &src) in streams.iter_mut().zip(pages) {
+                let data = pool.page(src)[..bytes].to_vec();
+                let dst = pool.alloc()?;
+                pool.page_mut(dst)[..bytes].copy_from_slice(&data);
+                s.pages.push(dst);
+                s.len_tokens += tail_len;
+            }
+        }
+        self.len += tail_len;
+        Ok(())
+    }
+
     pub fn bump(&mut self) {
         self.len += 1;
     }
@@ -806,6 +861,82 @@ mod tests {
         }
         assert_eq!(pool.in_use(), 0, "refcount leak after the last owner");
         pool.assert_drained("graft leak smoke");
+    }
+
+    /// A partial tail page donated at retirement and grafted by COPY
+    /// must read back byte-identical to a cold build, stay independent
+    /// of the donor's pages (the donor can free first), and keep
+    /// appending past the copied tokens without a CoW violation.
+    #[test]
+    fn tail_graft_copies_bytes_and_stays_independent() {
+        let cfg = cfg();
+        let tpp = 4usize;
+        let geom = SeqCache::new(&cfg, 4, 0.95, tpp).geom();
+        let mut pool = PagePool::new(geom.page_bytes(), 256);
+        let d = cfg.d_kv();
+        let mut rng = Rng::new(21);
+        let toks: Vec<(Vec<f32>, Vec<f32>)> = (0..9)
+            .map(|_| (rng.normal_vec(d), rng.normal_vec(d)))
+            .collect();
+        let append = |pool: &mut PagePool, c: &mut SeqCache,
+                      range: std::ops::Range<usize>| {
+            for (k, v) in &toks[range] {
+                for l in 0..cfg.n_layers {
+                    c.append_layer(pool, l, k, v, cfg.kv_group).unwrap();
+                }
+                c.bump();
+            }
+        };
+
+        // donor: 6 tokens = one full page + a 2-token tail
+        let mut donor = SeqCache::new(&cfg, 4, 0.95, tpp);
+        append(&mut pool, &mut donor, 0..6);
+        assert!(SeqCache::new(&cfg, 4, 0.95, tpp).tail_page_group().is_none(),
+                "empty cache has no tail");
+        let full = vec![donor.page_group(0)];
+        let (tail, tail_len) = donor.tail_page_group().unwrap();
+        assert_eq!(tail_len, 2);
+        // the trie's donation: retain both the full and the tail pages
+        for g in full.iter().chain([&tail]) {
+            for &p in g.k.iter().chain(g.v.iter()) {
+                pool.retain(p);
+            }
+        }
+        donor.free(&mut pool);
+
+        // grafted build: full page shared, tail copied, rest appended
+        let mut hot = SeqCache::new(&cfg, 4, 0.95, tpp);
+        hot.graft_prefix(&mut pool, &full);
+        hot.graft_partial_tail(&mut pool, &tail, tail_len).unwrap();
+        assert_eq!(hot.len, 6);
+        append(&mut pool, &mut hot, 6..9);
+
+        let mut cold = SeqCache::new(&cfg, 4, 0.95, tpp);
+        append(&mut pool, &mut cold, 0..9);
+
+        let mut want = (vec![0i8; d], vec![0.0f32; geom.groups],
+                        vec![0.0f32; geom.groups]);
+        let mut got = want.clone();
+        for l in 0..cfg.n_layers {
+            for t in 0..toks.len() {
+                for want_v in [false, true] {
+                    cold.read_token(&pool, l, t, want_v,
+                                    &mut want.0, &mut want.1, &mut want.2);
+                    hot.read_token(&pool, l, t, want_v,
+                                   &mut got.0, &mut got.1, &mut got.2);
+                    assert!(got == want, "layer {l} tok {t} v={want_v} diverged");
+                }
+            }
+        }
+        hot.free(&mut pool);
+        cold.free(&mut pool);
+        // the "trie" still holds its donated refs; releasing them drains
+        for g in full.iter().chain([&tail]) {
+            for &p in g.k.iter().chain(g.v.iter()) {
+                pool.release(p);
+            }
+        }
+        assert_eq!(pool.in_use(), 0, "refcount leak after tail graft");
     }
 
     /// Exhausting the pool mid-append fails atomically: nothing is

@@ -216,7 +216,6 @@ impl PrefixCache {
                 "donated groups exceed the prompt");
         let _audit = LockScope::enter("coordinator.prefix");
         self.clock += 1;
-        let gp = self.group_pages();
         let mut cur: Option<usize> = None;
         for (i, g) in groups.iter().enumerate() {
             let run = &prompt[i * self.tokens_per_page
@@ -226,60 +225,144 @@ impl PrefixCache {
                 cur = Some(id);
                 continue;
             }
-            while self.stats.pages_pinned + gp > self.max_pages {
-                let Some(leaf) = self.lru_leaf() else { break };
-                self.evict_node(pool, leaf, false);
+            match self.attach_node(pool, tier, cur, run, g) {
+                Some(id) => cur = Some(id),
+                // budget held by entries hotter than this donation
+                None => break,
             }
-            if self.stats.pages_pinned + gp > self.max_pages {
-                break; // budget held by entries hotter than this donation
+        }
+    }
+
+    /// Retain `g`'s pages and hang a new node for `run` off `parent`
+    /// (the shared tail of [`Self::insert`] and [`Self::insert_tail`]).
+    /// Evicts LRU leaves to make budget room first; `None` when the
+    /// budget is held by hotter entries.
+    fn attach_node(&mut self, pool: &mut PagePool, tier: QualityTier,
+                   parent: Option<usize>, run: &[u16], g: &PageGroup)
+                   -> Option<usize> {
+        let gp = self.group_pages();
+        while self.stats.pages_pinned + gp > self.max_pages {
+            let Some(leaf) = self.lru_leaf() else { break };
+            self.evict_node(pool, leaf, false);
+        }
+        if self.stats.pages_pinned + gp > self.max_pages {
+            return None;
+        }
+        // the slot this node will land in (free_slots pops from the
+        // back) — charged as the ledger owner of the retained refs
+        let slot_hint = self.free_slots.last().copied()
+            .unwrap_or(self.nodes.len());
+        {
+            let _own = crate::audit::owner(
+                || format!("prefix:node{slot_hint}"));
+            for l in 0..self.n_layers {
+                pool.retain(g.k[l]);
+                pool.retain(g.v[l]);
             }
-            // the slot this node will land in (free_slots pops from the
-            // back) — charged as the ledger owner of the retained refs
-            let slot_hint = self.free_slots.last().copied()
-                .unwrap_or(self.nodes.len());
-            {
-                let _own = crate::audit::owner(
-                    || format!("prefix:node{slot_hint}"));
-                for l in 0..self.n_layers {
-                    pool.retain(g.k[l]);
-                    pool.retain(g.v[l]);
-                }
+        }
+        let node = Node {
+            run: run.into(),
+            tier,
+            parent,
+            children: HashMap::new(),
+            pages: g.clone(),
+            last_used: self.clock,
+            pins: 0,
+        };
+        let id = match self.free_slots.pop() {
+            Some(slot) => {
+                self.nodes[slot] = Some(node);
+                slot
             }
-            let node = Node {
-                run: run.into(),
-                tier,
-                parent: cur,
-                children: HashMap::new(),
-                pages: g.clone(),
-                last_used: self.clock,
-                pins: 0,
-            };
-            let id = match self.free_slots.pop() {
-                Some(slot) => {
-                    self.nodes[slot] = Some(node);
-                    slot
-                }
-                None => {
-                    self.nodes.push(Some(node));
-                    self.nodes.len() - 1
-                }
-            };
-            debug_assert_eq!(id, slot_hint, "owner label names the wrong slot");
-            self.audit.on_insert(id);
-            match cur {
-                None => {
-                    self.roots.entry(tier).or_default()
-                        .insert(run.into(), id);
-                }
-                Some(p) => {
-                    self.nodes[p].as_mut().unwrap()
-                        .children.insert(run.into(), id);
-                }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
             }
-            self.stats.pages_pinned += gp;
-            self.stats.inserted_pages += gp;
+        };
+        debug_assert_eq!(id, slot_hint, "owner label names the wrong slot");
+        self.audit.on_insert(id);
+        match parent {
+            None => {
+                self.roots.entry(tier).or_default()
+                    .insert(run.into(), id);
+            }
+            Some(p) => {
+                self.nodes[p].as_mut().unwrap()
+                    .children.insert(run.into(), id);
+            }
+        }
+        self.stats.pages_pinned += gp;
+        self.stats.inserted_pages += gp;
+        Some(id)
+    }
+
+    /// Donate the *partial* trailing page of a retired chain: a leaf
+    /// keyed by the sub-page run `chain[⌊len/tpp⌋·tpp..]`.  Partial runs
+    /// are invisible to [`Self::lookup`] / [`Self::pin_chain`] (both walk
+    /// `chunks_exact` full runs) — only [`Self::lookup_tail`] reaches
+    /// them, so grafting semantics of full pages are untouched.  The
+    /// tail only attaches when every full page ahead of it is cached
+    /// (otherwise no lookup could ever reach it); identical re-donations
+    /// keep the first donor, like [`Self::insert`].
+    pub fn insert_tail(&mut self, pool: &mut PagePool, tier: QualityTier,
+                       chain: &[u16], group: &PageGroup) {
+        if self.max_pages == 0 {
+            return;
+        }
+        let tpp = self.tokens_per_page;
+        let tail = chain.len() % tpp;
+        if tail == 0 {
+            return;
+        }
+        let _audit = LockScope::enter("coordinator.prefix");
+        self.clock += 1;
+        let mut cur = None;
+        for run in chain[..chain.len() - tail].chunks_exact(tpp) {
+            let Some(id) = self.child(tier, cur, run) else { return };
+            self.nodes[id].as_mut().unwrap().last_used = self.clock;
             cur = Some(id);
         }
+        let run = &chain[chain.len() - tail..];
+        if self.child(tier, cur, run).is_none() {
+            self.attach_node(pool, tier, cur, run, group);
+        }
+    }
+
+    /// Longest donated partial-tail run extending a `matched`-group
+    /// [`Self::lookup`] chain of `prompt`.  The run must be a *strict*
+    /// prefix of the prompt's remainder — at least one suffix token
+    /// always stays uncached for the first-token logits.  Returns the
+    /// tail's pages (to **copy**, never share — see
+    /// [`super::kvcache::SeqCache::graft_partial_tail`]) and its token
+    /// count.  Does not advance the LRU clock: it rides the admission's
+    /// in-flight stamp so the chain [`Self::lookup`] just touched stays
+    /// eviction-protected.
+    pub fn lookup_tail(&mut self, tier: QualityTier, prompt: &[u16],
+                       matched: usize) -> Option<(PageGroup, usize)> {
+        if self.max_pages == 0 {
+            return None;
+        }
+        let _audit = LockScope::enter("coordinator.prefix");
+        let tpp = self.tokens_per_page;
+        let mut cur = None;
+        for run in prompt.chunks_exact(tpp).take(matched) {
+            cur = Some(self.child(tier, cur, run)?);
+        }
+        let rest = &prompt[matched * tpp..];
+        let table = match cur {
+            None => self.roots.get(&tier)?,
+            Some(p) => &self.nodes[p].as_ref().unwrap().children,
+        };
+        // longest strict-prefix partial run; ties are impossible (two
+        // equal-length prefixes of `rest` are the same run)
+        let best = table.iter()
+            .filter(|(run, _)| run.len() < tpp && run.len() < rest.len()
+                    && rest.starts_with(run))
+            .max_by_key(|(run, _)| run.len())
+            .map(|(_, &id)| id)?;
+        let node = self.nodes[best].as_mut().unwrap();
+        node.last_used = self.clock;
+        Some((node.pages.clone(), node.run.len()))
     }
 
     /// Walk the page-aligned chain of `tokens` and pin every matched
@@ -692,6 +775,81 @@ mod tests {
         // live nodes — tolerated at runtime, fatal under strictness
         trie.unpin_chain(T, &pa);
         trie.assert_pins_balanced();
+    }
+
+    /// Partial-tail donations: reachable only through `lookup_tail`
+    /// with a strictly-longer remainder, invisible to full-run lookups
+    /// and pins, first donor wins, and evictable as ordinary leaves.
+    #[test]
+    fn tail_donation_lookup_and_isolation() {
+        let mut pool = PagePool::new(8, 64);
+        let mut trie = PrefixCache::new(TPP, L, usize::MAX);
+        let chain = prompt(10, 0); // 2 full groups + 2-token tail
+        let gs: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+        trie.insert(&mut pool, T, &chain, &gs);
+        let gt = group(&mut pool);
+        trie.insert_tail(&mut pool, T, &chain, &gt);
+        assert_eq!(trie.pages_pinned(), 3 * 2 * L);
+
+        // full-run lookup still sees exactly the full groups
+        assert_eq!(trie.lookup(T, &chain, 3), gs);
+        // a next-turn prompt: same chain plus new user text
+        let mut next = chain.clone();
+        next.extend_from_slice(&[40, 41, 42]);
+        assert_eq!(trie.lookup_tail(T, &next, 2), Some((gt.clone(), 2)));
+        // the remainder must be strictly longer than the tail — a
+        // prompt that *ends* at the tail keeps its last token uncached
+        assert_eq!(trie.lookup_tail(T, &chain, 2), None);
+        // diverging tail tokens miss
+        let mut div = chain.clone();
+        div[9] ^= 1;
+        div.push(40);
+        assert_eq!(trie.lookup_tail(T, &div, 2), None);
+        // wrong tier misses
+        assert_eq!(trie.lookup_tail(QualityTier::Kv8, &next, 2), None);
+        // re-donation keeps the first donor and pins nothing new
+        let gt2 = group(&mut pool);
+        trie.insert_tail(&mut pool, T, &chain, &gt2);
+        assert_eq!(trie.pages_pinned(), 3 * 2 * L, "re-donation must not pin");
+        assert_eq!(trie.lookup_tail(T, &next, 2), Some((gt.clone(), 2)));
+        // pins walk full runs only: the tail leaf stays evictable
+        assert_eq!(trie.pin_chain(T, &chain), 2);
+        let _ = trie.lookup(T, &prompt(4, 9), 1); // advance the clock
+        trie.evict_for(&mut pool, usize::MAX);
+        assert_eq!(trie.lookup_tail(T, &next, 2), None, "tail leaf evicts");
+        assert_eq!(trie.lookup(T, &chain, 2).len(), 2,
+                   "pinned full chain survives");
+        assert_eq!(trie.unpin_chain(T, &chain), 2);
+
+        for g in gs.iter().chain([&gt, &gt2]) {
+            release_group(&mut pool, g);
+        }
+        trie.clear(&mut pool);
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    /// A tail whose full-page chain was never donated must not attach —
+    /// no lookup could ever reach it, and its pages must not be pinned.
+    #[test]
+    fn orphan_tail_is_rejected() {
+        let mut pool = PagePool::new(8, 64);
+        let mut trie = PrefixCache::new(TPP, L, usize::MAX);
+        let chain = prompt(10, 0);
+        let gt = group(&mut pool);
+        trie.insert_tail(&mut pool, T, &chain, &gt); // nothing cached ahead
+        assert_eq!(trie.pages_pinned(), 0);
+        // page-aligned chains have no tail to donate
+        let aligned = prompt(8, 0);
+        let gs: Vec<PageGroup> = (0..2).map(|_| group(&mut pool)).collect();
+        trie.insert(&mut pool, T, &aligned, &gs);
+        let before = trie.pages_pinned();
+        trie.insert_tail(&mut pool, T, &aligned, &gt);
+        assert_eq!(trie.pages_pinned(), before);
+        for g in gs.iter().chain([&gt]) {
+            release_group(&mut pool, g);
+        }
+        trie.clear(&mut pool);
+        assert_eq!(pool.in_use(), 0);
     }
 
     #[test]

@@ -1,13 +1,18 @@
-//! Typed façade over the PJRT engine: assembles graph argument lists from a
-//! quantization spec + the weight archive, and exposes model-level
-//! `prefill` / `decode` / `collect` calls the batcher and the eval harness
-//! share.
+//! Model-level dispatcher: a [`Runner`] owns one [`ModelExecutor`] —
+//! either the AOT-graph [`PjrtExecutor`] or the pure-rust
+//! [`crate::forward::NativeExecutor`] — and exposes the `prefill` /
+//! `prefill_chunk` / `decode` / `collect` calls the batcher and the eval
+//! harness share, plus the weight-preparation pipeline both executors
+//! reuse.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::backend::{self, ComputeBackend};
+pub use crate::forward::{ChunkResult, DecodeStaging, ExecutorKind,
+                         ModelExecutor, Prefilled};
+use crate::forward::{stage_kv_token, NativeExecutor};
 use crate::model::{ModelConfig, Weights};
 use crate::quant::{self, sym_levels};
 use crate::runtime::{Engine, HostTensor};
@@ -143,24 +148,25 @@ pub const SITE_WEIGHTS: [&[&str]; 4] =
     [&["wq", "wk", "wv"], &["wo"], &["wup", "wgate"], &["wdown"]];
 pub const SITE_MASKS: [&str; 4] = ["mask_attn", "mask_out", "mask_ffn", "mask_down"];
 
-pub struct Runner {
-    pub engine: Engine,
-    pub cfg: ModelConfig,
-    pub spec: QuantSpec,
-    /// Native compute backend for the serving hot paths (weight prep
-    /// fan-out here; staging dequant + slot fan-out in the batcher).
-    /// Selected via `backend::default_backend()` — `--backend` flag /
-    /// `QUAROT_BACKEND` env, defaulting to shape-aware auto.
-    pub backend: Arc<dyn ComputeBackend>,
+/// The original AOT-graph execution path: assembles PJRT argument lists
+/// and runs the compiled prefill/decode executables.  Kept bit-for-bit —
+/// `prefill` and `decode` are the pre-refactor `Runner` methods moved
+/// behind the trait, and `prefill_chunk` replays the decode graph
+/// token-at-a-time exactly like the old partial-hit suffix loop did
+/// (same graph, same lane layout, same `quant_slab` staging arithmetic).
+pub struct PjrtExecutor {
+    engine: Engine,
+    cfg: ModelConfig,
+    spec: QuantSpec,
     prefill_graph: String,
     decode_graph: String,
 }
 
-impl Runner {
-    /// Build a runner: quantize the weights per `spec`, pin them (+ masks)
-    /// on the prefill/decode graphs.
+impl PjrtExecutor {
+    /// Quantize the weights per `spec` and pin them (+ masks) on the
+    /// prefill/decode graphs.
     pub fn new(mut engine: Engine, weights: &Weights, spec: QuantSpec,
-               stats: Option<&CalibStats>) -> Result<Runner> {
+               stats: Option<&CalibStats>) -> Result<PjrtExecutor> {
         let cfg = engine.manifest.model.clone();
         let prepared = prepare_weights(&cfg, &engine.manifest.weight_order,
                                        weights, &spec, stats)?;
@@ -178,19 +184,10 @@ impl Runner {
         if engine.has_graph(&decode_graph) {
             engine.set_weights(&decode_graph, &prepared)?;
         }
-        Ok(Runner {
-            engine,
-            cfg,
-            spec,
-            backend: backend::default_backend(),
-            prefill_graph,
-            decode_graph,
-        })
+        Ok(PjrtExecutor { engine, cfg, spec, prefill_graph, decode_graph })
     }
 
-    /// Prefill `tokens` (padded to max_seq internally).  Returns
-    /// (logits (S, V) for the real length, k, v (L, S_real, d_kv)).
-    pub fn prefill(&self, tokens: &[u16]) -> Result<Prefilled> {
+    fn prefill_impl(&self, tokens: &[u16]) -> Result<Prefilled> {
         let (cfg, s_max) = (&self.cfg, self.cfg.max_seq);
         let s_real = tokens.len();
         if s_real == 0 || s_real > s_max {
@@ -226,10 +223,9 @@ impl Runner {
         Ok(Prefilled { logits, ks, vs, len: s_real })
     }
 
-    /// One batched decode step.  `staging` carries the dense cache views.
-    /// Returns (logits (B, V), k_new, v_new (L, B, d_kv)).
-    pub fn decode(&self, tokens: &[i32], cur_lens: &[i32], staging: &DecodeStaging)
-                  -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    fn decode_impl(&self, tokens: &[i32], cur_lens: &[i32],
+                   staging: &DecodeStaging)
+                   -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         let dynamic: Vec<HostTensor> = if self.spec.kv_is_fp() {
             vec![
                 HostTensor::I32(tokens.to_vec()),
@@ -255,6 +251,171 @@ impl Runner {
         };
         let out = self.engine.run(&self.decode_graph, &dynamic)?;
         Ok((out[0].f32().to_vec(), out[1].f32().to_vec(), out[2].f32().to_vec()))
+    }
+
+    /// Replay `tokens` at positions `start_pos..` through the decode
+    /// graph, one token per step — the same graph invocation sequence
+    /// (and therefore the same bits) as the old token-at-a-time suffix
+    /// loop in the batcher, with the staging writes hoisted here.
+    fn prefill_chunk_impl(&self, tokens: &[u16], start_pos: usize,
+                          slot: usize, kv_bits: u32,
+                          staging: &mut DecodeStaging) -> Result<ChunkResult> {
+        let cfg = &self.cfg;
+        let b = cfg.decode_batch;
+        let (v, d_kv, l) = (cfg.vocab, cfg.d_kv(), cfg.n_layers);
+        let t_n = tokens.len();
+        if t_n == 0 {
+            bail!("empty prefill chunk");
+        }
+        if slot >= b {
+            bail!("chunk slot {slot} out of range");
+        }
+        if start_pos + t_n > cfg.cache_seq {
+            bail!("chunk [{start_pos}, {}) beyond cache_seq {}",
+                  start_pos + t_n, cfg.cache_seq);
+        }
+        let fp = self.spec.kv_is_fp();
+        let mut logits = vec![0.0f32; t_n * v];
+        let mut ks = vec![0.0f32; l * t_n * d_kv];
+        let mut vs = vec![0.0f32; l * t_n * d_kv];
+        for (j, &tok) in tokens.iter().enumerate() {
+            let mut toks = vec![0i32; b];
+            let mut lens = vec![0i32; b];
+            toks[slot] = tok as i32;
+            lens[slot] = (start_pos + j) as i32;
+            let (lg, kn, vn) = self.decode_impl(&toks, &lens, staging)?;
+            logits[j * v..(j + 1) * v]
+                .copy_from_slice(&lg[slot * v..(slot + 1) * v]);
+            for li in 0..l {
+                let o = (li * b + slot) * d_kv;
+                ks[(li * t_n + j) * d_kv..(li * t_n + j + 1) * d_kv]
+                    .copy_from_slice(&kn[o..o + d_kv]);
+                vs[(li * t_n + j) * d_kv..(li * t_n + j + 1) * d_kv]
+                    .copy_from_slice(&vn[o..o + d_kv]);
+            }
+            stage_kv_token(staging, cfg, slot, start_pos + j, kv_bits,
+                           self.spec.kv_clip, fp, &kn, &vn);
+        }
+        Ok(ChunkResult { logits, k: ks, v: vs })
+    }
+}
+
+impl ModelExecutor for PjrtExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prefill(&self, tokens: &[u16]) -> Result<Prefilled> {
+        self.prefill_impl(tokens)
+    }
+
+    fn decode(&self, tokens: &[i32], cur_lens: &[i32], staging: &DecodeStaging)
+              -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.decode_impl(tokens, cur_lens, staging)
+    }
+
+    fn prefill_chunk(&self, tokens: &[u16], start_pos: usize, slot: usize,
+                     kv_bits: u32, staging: &mut DecodeStaging)
+                     -> Result<ChunkResult> {
+        self.prefill_chunk_impl(tokens, start_pos, slot, kv_bits, staging)
+    }
+}
+
+/// Model-level dispatcher the batcher / eval harness / benches drive:
+/// one [`ModelExecutor`] behind a stable façade, plus the shared config,
+/// spec, and compute backend.
+pub struct Runner {
+    exec: Box<dyn ModelExecutor>,
+    pub cfg: ModelConfig,
+    pub spec: QuantSpec,
+    /// Native compute backend for the serving hot paths (weight prep
+    /// fan-out here; staging dequant + slot fan-out in the batcher).
+    /// Selected via `backend::default_backend()` — `--backend` flag /
+    /// `QUAROT_BACKEND` env, defaulting to shape-aware auto.
+    pub backend: Arc<dyn ComputeBackend>,
+}
+
+impl Runner {
+    /// Build a runner on the PJRT graph path: quantize the weights per
+    /// `spec`, pin them (+ masks) on the prefill/decode graphs.
+    pub fn new(engine: Engine, weights: &Weights, spec: QuantSpec,
+               stats: Option<&CalibStats>) -> Result<Runner> {
+        let exec = PjrtExecutor::new(engine, weights, spec.clone(), stats)?;
+        let cfg = exec.cfg.clone();
+        Ok(Runner {
+            exec: Box::new(exec),
+            cfg,
+            spec,
+            backend: backend::default_backend(),
+        })
+    }
+
+    /// Build a runner on the native path: the engine contributes only its
+    /// manifest (model config + weight order) and is dropped — no PJRT
+    /// client, no graphs.  Load it with `Engine::load(dir, Some(&[]))`.
+    pub fn new_native(engine: Engine, weights: &Weights, spec: QuantSpec,
+                      stats: Option<&CalibStats>) -> Result<Runner> {
+        let cfg = engine.manifest.model.clone();
+        let order = engine.manifest.weight_order.clone();
+        Self::new_native_from_parts(&cfg, &order, weights, spec, stats)
+    }
+
+    /// Artifact-free native construction (tests / benches build the
+    /// config + weight archive in memory).
+    pub fn new_native_from_parts(cfg: &ModelConfig, order: &[String],
+                                 weights: &Weights, spec: QuantSpec,
+                                 stats: Option<&CalibStats>) -> Result<Runner> {
+        Self::new_native_with_backend(cfg, order, weights, spec, stats,
+                                      backend::default_backend())
+    }
+
+    /// Native construction on an explicit compute backend.  Tests and
+    /// benches pin the scalar oracle here when they compare runs across
+    /// different forward shapes (chunk sizes): per-row arithmetic is
+    /// bit-stable on a fixed backend, while the auto backend may pick
+    /// differently-tiled kernels for different row counts.
+    pub fn new_native_with_backend(cfg: &ModelConfig, order: &[String],
+                                   weights: &Weights, spec: QuantSpec,
+                                   stats: Option<&CalibStats>,
+                                   backend: Arc<dyn ComputeBackend>)
+                                   -> Result<Runner> {
+        let exec = NativeExecutor::new(cfg, order, weights, spec.clone(),
+                                       stats, backend.clone())?;
+        Ok(Runner {
+            exec: Box::new(exec),
+            cfg: cfg.clone(),
+            spec,
+            backend,
+        })
+    }
+
+    /// Which execution path serves this runner ("pjrt" / "native").
+    pub fn executor_name(&self) -> &'static str {
+        self.exec.name()
+    }
+
+    /// Prefill `tokens` (graph path pads to max_seq internally).  Returns
+    /// (logits (S, V) for the real length, k, v (L, S_real, d_kv)).
+    pub fn prefill(&self, tokens: &[u16]) -> Result<Prefilled> {
+        self.exec.prefill(tokens)
+    }
+
+    /// One batched decode step.  `staging` carries the dense cache views.
+    /// Returns (logits (B, V), k_new, v_new (L, B, d_kv)).
+    pub fn decode(&self, tokens: &[i32], cur_lens: &[i32],
+                  staging: &DecodeStaging)
+                  -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.exec.decode(tokens, cur_lens, staging)
+    }
+
+    /// Process `tokens` at true positions `start_pos..start_pos+T` for
+    /// slot `slot`, staging each token's K/V at `kv_bits` as it goes.
+    /// Returns per-token logits plus the raw chunk K/V for the paged
+    /// cache.
+    pub fn prefill_chunk(&self, tokens: &[u16], start_pos: usize,
+                         slot: usize, kv_bits: u32,
+                         staging: &mut DecodeStaging) -> Result<ChunkResult> {
+        self.exec.prefill_chunk(tokens, start_pos, slot, kv_bits, staging)
     }
 
     /// Run the matching collect graph over calibration windows and
@@ -300,51 +461,6 @@ impl Runner {
             }
         }
         Ok(stats)
-    }
-}
-
-pub struct Prefilled {
-    pub logits: Vec<f32>,
-    pub ks: Vec<f32>,
-    pub vs: Vec<f32>,
-    pub len: usize,
-}
-
-/// Dense staging buffers for the decode graph's cache inputs.
-pub struct DecodeStaging {
-    pub k_codes: Vec<i8>,
-    pub k_scale: Vec<f32>,
-    pub k_zero: Vec<f32>,
-    pub v_codes: Vec<i8>,
-    pub v_scale: Vec<f32>,
-    pub v_zero: Vec<f32>,
-    /// fp16-baseline path (kv_bits == 16): raw f32 caches.
-    pub k_f32: Vec<f32>,
-    pub v_f32: Vec<f32>,
-}
-
-impl DecodeStaging {
-    pub fn new(cfg: &ModelConfig, fp: bool) -> DecodeStaging {
-        let (l, b, s) = (cfg.n_layers, cfg.decode_batch, cfg.cache_seq);
-        let d = cfg.d_kv();
-        let ng = d / cfg.kv_group;
-        if fp {
-            DecodeStaging {
-                k_codes: vec![], k_scale: vec![], k_zero: vec![],
-                v_codes: vec![], v_scale: vec![], v_zero: vec![],
-                k_f32: vec![0.0; l * b * s * d], v_f32: vec![0.0; l * b * s * d],
-            }
-        } else {
-            DecodeStaging {
-                k_codes: vec![0; l * b * s * d],
-                k_scale: vec![0.0; l * b * s * ng],
-                k_zero: vec![0.0; l * b * s * ng],
-                v_codes: vec![0; l * b * s * d],
-                v_scale: vec![0.0; l * b * s * ng],
-                v_zero: vec![0.0; l * b * s * ng],
-                k_f32: vec![], v_f32: vec![],
-            }
-        }
     }
 }
 

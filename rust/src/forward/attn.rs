@@ -1,0 +1,376 @@
+//! Attention kernels for the native executor.
+//!
+//! The decode graphs (and the python reference `kv_decode_attention`) score
+//! the new token's K/V in **full precision** alongside the quantized cache:
+//! the softmax jointly covers cache positions `0..len` plus the self token
+//! at index `len`, whose K/V never round-trip through the codec.  The
+//! batcher's `staged_decode_attention` kernels cover cached positions only,
+//! so the native executor needs the tail-augmented variants here — the same
+//! fused-dequant inner loops as `attention::decode_head_quant`
+//! (`q·deq(c) = scale·(q·c) + zero·Σq`), with the fp self-token folded into
+//! the same online softmax.  Quantizing the self token into the lane first
+//! and attending over `len + 1` cached rows would *not* be equivalent: the
+//! graph's tail is exact, the cache is not.
+//!
+//! [`causal_prefill`] is the prefill-graph counterpart: plain f32 causal
+//! attention over K/V the caller has already fake-quantized (the prefill
+//! graphs run `kv_fake_quant` on the whole sequence, self token included).
+
+use crate::attention::{unpack_nibble_pair, KvCodes, KvF32View, KvQuantView};
+
+/// One decode step for all `n_heads` of one sequence over a group-quantized
+/// KV view, with the new token's raw `k_tail`/`v_tail` (`d_kv` each) as a
+/// full-precision softmax tail.  `q` is `d_attn` long; `out` receives
+/// `d_attn`.  An empty cache degenerates to attending over the tail alone
+/// (`out = v_tail` per head).
+pub fn decode_tail_quant(q: &[f32], k: &KvQuantView<'_>, v: &KvQuantView<'_>,
+                         n_heads: usize, k_tail: &[f32], v_tail: &[f32],
+                         out: &mut [f32]) {
+    let (hk, dh, group) = (k.n_kv_heads, k.d_head, k.group);
+    let d = hk * dh;
+    let rep = n_heads / hk;
+    let sm = 1.0 / (dh as f32).sqrt();
+    let groups_per_tok = d / group;
+    let gh = dh / group;
+    let s = k.len;
+    let mut scores = vec![0.0f32; s];
+    let mut qsum = vec![0.0f32; gh];
+    let mut zacc = vec![0.0f32; gh];
+    for h in 0..n_heads {
+        let kvh = h / rep;
+        let qh = &q[h * dh..(h + 1) * dh];
+        let kt = &k_tail[kvh * dh..(kvh + 1) * dh];
+        let vt = &v_tail[kvh * dh..(kvh + 1) * dh];
+        let oh = &mut out[h * dh..(h + 1) * dh];
+        for (dst, g) in qsum.iter_mut().zip(qh.chunks_exact(group)) {
+            *dst = g.iter().sum();
+        }
+        // score pass: fused dequant over the cache, then the fp tail
+        let mut tail = 0.0f32;
+        for i in 0..dh {
+            tail += qh[i] * kt[i];
+        }
+        tail *= sm;
+        let mut mx = tail;
+        for (t, sc_out) in scores.iter_mut().enumerate() {
+            let base = t * d + kvh * dh;
+            let gbase = t * groups_per_tok + kvh * gh;
+            let mut sc = 0.0f32;
+            for gi in 0..gh {
+                let scale = k.scales[gbase + gi];
+                let zero = k.zeros[gbase + gi];
+                let goff = gi * group;
+                let mut dot = 0.0f32;
+                match k.codes {
+                    KvCodes::Packed4(codes) => {
+                        let cb = (base + goff) / 2;
+                        for (j, &byte) in codes[cb..cb + group / 2].iter()
+                            .enumerate() {
+                            let (lo, hi) = unpack_nibble_pair(byte);
+                            dot += qh[goff + 2 * j] * lo
+                                 + qh[goff + 2 * j + 1] * hi;
+                        }
+                    }
+                    KvCodes::I8(codes) => {
+                        let cb = base + goff;
+                        for (j, &c) in codes[cb..cb + group].iter().enumerate() {
+                            dot += qh[goff + j] * c as f32;
+                        }
+                    }
+                }
+                sc += scale * dot + zero * qsum[gi];
+            }
+            let sc = sc * sm;
+            *sc_out = sc;
+            mx = mx.max(sc);
+        }
+        // value pass: cache contribution with the zero-point accumulator,
+        // then the fp tail, one joint softmax denominator
+        let p_tail = (tail - mx).exp();
+        let mut denom = p_tail;
+        oh.fill(0.0);
+        zacc.fill(0.0);
+        for (t, &sc) in scores.iter().enumerate() {
+            let p = (sc - mx).exp();
+            denom += p;
+            let base = t * d + kvh * dh;
+            let gbase = t * groups_per_tok + kvh * gh;
+            for gi in 0..gh {
+                let ps = p * v.scales[gbase + gi];
+                zacc[gi] += p * v.zeros[gbase + gi];
+                let goff = gi * group;
+                match v.codes {
+                    KvCodes::Packed4(codes) => {
+                        let cb = (base + goff) / 2;
+                        for (j, &byte) in codes[cb..cb + group / 2].iter()
+                            .enumerate() {
+                            let (lo, hi) = unpack_nibble_pair(byte);
+                            oh[goff + 2 * j] += ps * lo;
+                            oh[goff + 2 * j + 1] += ps * hi;
+                        }
+                    }
+                    KvCodes::I8(codes) => {
+                        let cb = base + goff;
+                        for (j, &c) in codes[cb..cb + group].iter().enumerate() {
+                            oh[goff + j] += ps * c as f32;
+                        }
+                    }
+                }
+            }
+        }
+        let inv = 1.0 / denom;
+        for (i, o) in oh.iter_mut().enumerate() {
+            let gi = i / group;
+            *o = (*o + zacc[gi] + p_tail * vt[i]) * inv;
+        }
+    }
+}
+
+/// [`decode_tail_quant`] over raw f32 KV streams (fp16-baseline staging).
+pub fn decode_tail_f32(q: &[f32], k: &KvF32View<'_>, v: &KvF32View<'_>,
+                       n_heads: usize, k_tail: &[f32], v_tail: &[f32],
+                       out: &mut [f32]) {
+    let (hk, dh) = (k.n_kv_heads, k.d_head);
+    let rep = n_heads / hk;
+    let sm = 1.0 / (dh as f32).sqrt();
+    let s = k.len;
+    let mut scores = vec![0.0f32; s];
+    for h in 0..n_heads {
+        let kvh = h / rep;
+        let qh = &q[h * dh..(h + 1) * dh];
+        let kt = &k_tail[kvh * dh..(kvh + 1) * dh];
+        let vt = &v_tail[kvh * dh..(kvh + 1) * dh];
+        let oh = &mut out[h * dh..(h + 1) * dh];
+        let mut tail = 0.0f32;
+        for i in 0..dh {
+            tail += qh[i] * kt[i];
+        }
+        tail *= sm;
+        let mut mx = tail;
+        for (t, sc_out) in scores.iter_mut().enumerate() {
+            let krow = &k.data[(t * hk + kvh) * dh..][..dh];
+            let mut dot = 0.0f32;
+            for i in 0..dh {
+                dot += qh[i] * krow[i];
+            }
+            let sc = dot * sm;
+            *sc_out = sc;
+            mx = mx.max(sc);
+        }
+        let p_tail = (tail - mx).exp();
+        let mut denom = p_tail;
+        oh.fill(0.0);
+        for (t, &sc) in scores.iter().enumerate() {
+            let p = (sc - mx).exp();
+            denom += p;
+            let vrow = &v.data[(t * hk + kvh) * dh..][..dh];
+            for i in 0..dh {
+                oh[i] += p * vrow[i];
+            }
+        }
+        let inv = 1.0 / denom;
+        for (i, o) in oh.iter_mut().enumerate() {
+            *o = (*o + p_tail * vt[i]) * inv;
+        }
+    }
+}
+
+/// Causal f32 attention over a whole prompt (prefill-graph semantics).
+///
+/// `q` is `(S, d_attn)`; `k`/`v` are `(S, d_kv)` token rows the caller has
+/// already fake-quantized (or left raw on the fp path).  Row `i` attends
+/// to positions `0..=i` (self included).  `out` receives `(S, d_attn)`.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_prefill(q: &[f32], k: &[f32], v: &[f32], s: usize,
+                      n_heads: usize, n_kv_heads: usize, d_head: usize,
+                      out: &mut [f32]) {
+    let d_attn = n_heads * d_head;
+    let d_kv = n_kv_heads * d_head;
+    let rep = n_heads / n_kv_heads;
+    let sm = 1.0 / (d_head as f32).sqrt();
+    let mut scores = vec![0.0f32; s];
+    for i in 0..s {
+        for h in 0..n_heads {
+            let kvh = h / rep;
+            let qh = &q[i * d_attn + h * d_head..][..d_head];
+            let oh = &mut out[i * d_attn + h * d_head..][..d_head];
+            let mut mx = f32::MIN;
+            for (j, sc_out) in scores[..=i].iter_mut().enumerate() {
+                let krow = &k[j * d_kv + kvh * d_head..][..d_head];
+                let mut dot = 0.0f32;
+                for e in 0..d_head {
+                    dot += qh[e] * krow[e];
+                }
+                let sc = dot * sm;
+                *sc_out = sc;
+                mx = mx.max(sc);
+            }
+            let mut denom = 0.0f32;
+            oh.fill(0.0);
+            for (j, &sc) in scores[..=i].iter().enumerate() {
+                let p = (sc - mx).exp();
+                denom += p;
+                let vrow = &v[j * d_kv + kvh * d_head..][..d_head];
+                for e in 0..d_head {
+                    oh[e] += p * vrow[e];
+                }
+            }
+            let inv = 1.0 / denom;
+            for o in oh.iter_mut() {
+                *o *= inv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{DecodeScratch, DecodeQuantSeq, KvQuantView};
+    use crate::quant::kv;
+    use crate::util::prng::Rng;
+
+    // With the tail score pushed to -inf (impossible via a real dot, so we
+    // instead compare against a cache that *contains* the tail token in
+    // quantized form at 16-wide precision), the fused kernel must agree
+    // with a straightforward dequant-then-softmax oracle.
+    fn oracle_tail_quant(q: &[f32], k: &KvQuantView<'_>, v: &KvQuantView<'_>,
+                         n_heads: usize, k_tail: &[f32], v_tail: &[f32],
+                         out: &mut [f32]) {
+        let (hk, dh, group) = (k.n_kv_heads, k.d_head, k.group);
+        let d = hk * dh;
+        let s = k.len;
+        let mut kd = vec![0.0f32; s * d];
+        let mut vd = vec![0.0f32; s * d];
+        if let (KvCodes::I8(kc), KvCodes::I8(vc)) = (&k.codes, &v.codes) {
+            for g in 0..s * d / group {
+                kv::dequant_group(&kc[g * group..(g + 1) * group], k.scales[g],
+                                  k.zeros[g], &mut kd[g * group..(g + 1) * group]);
+                kv::dequant_group(&vc[g * group..(g + 1) * group], v.scales[g],
+                                  v.zeros[g], &mut vd[g * group..(g + 1) * group]);
+            }
+        } else {
+            panic!("oracle expects unpacked codes");
+        }
+        let rep = n_heads / hk;
+        let sm = 1.0 / (dh as f32).sqrt();
+        for h in 0..n_heads {
+            let kvh = h / rep;
+            let qh = &q[h * dh..(h + 1) * dh];
+            let oh = &mut out[h * dh..(h + 1) * dh];
+            let mut scores: Vec<f32> = (0..s).map(|t| {
+                let kr = &kd[t * d + kvh * dh..][..dh];
+                qh.iter().zip(kr).map(|(a, b)| a * b).sum::<f32>() * sm
+            }).collect();
+            let kt = &k_tail[kvh * dh..(kvh + 1) * dh];
+            scores.push(qh.iter().zip(kt).map(|(a, b)| a * b).sum::<f32>() * sm);
+            let mx = scores.iter().fold(f32::MIN, |m, &x| m.max(x));
+            let ps: Vec<f32> = scores.iter().map(|&x| (x - mx).exp()).collect();
+            let denom: f32 = ps.iter().sum();
+            oh.fill(0.0);
+            for (t, &p) in ps[..s].iter().enumerate() {
+                let vr = &vd[t * d + kvh * dh..][..dh];
+                for i in 0..dh {
+                    oh[i] += p * vr[i];
+                }
+            }
+            let vt = &v_tail[kvh * dh..(kvh + 1) * dh];
+            for i in 0..dh {
+                oh[i] = (oh[i] + ps[s] * vt[i]) / denom;
+            }
+        }
+    }
+
+    #[test]
+    fn tail_quant_matches_dequant_oracle() {
+        let (hk, nh, dh, group, s) = (2usize, 4usize, 8usize, 4usize, 5usize);
+        let d = hk * dh;
+        let mut rng = Rng::new(7);
+        let raw_k = rng.normal_vec(s * d);
+        let raw_v = rng.normal_vec(s * d);
+        let (kc, ksc, kz) = kv::quant_slab(&raw_k, d, group, 4, 0.95);
+        let (vc, vsc, vz) = kv::quant_slab(&raw_v, d, group, 4, 0.95);
+        let kview = KvQuantView { n_kv_heads: hk, d_head: dh, group, len: s,
+                                  codes: KvCodes::I8(&kc), scales: &ksc, zeros: &kz };
+        let vview = KvQuantView { n_kv_heads: hk, d_head: dh, group, len: s,
+                                  codes: KvCodes::I8(&vc), scales: &vsc, zeros: &vz };
+        let q = rng.normal_vec(nh * dh);
+        let k_tail = rng.normal_vec(d);
+        let v_tail = rng.normal_vec(d);
+        let mut got = vec![0.0f32; nh * dh];
+        let mut want = vec![0.0f32; nh * dh];
+        decode_tail_quant(&q, &kview, &vview, nh, &k_tail, &v_tail, &mut got);
+        oracle_tail_quant(&q, &kview, &vview, nh, &k_tail, &v_tail, &mut want);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "fused {a} vs oracle {b}");
+        }
+    }
+
+    #[test]
+    fn empty_cache_returns_tail_value() {
+        let (hk, nh, dh, group) = (2usize, 4usize, 8usize, 4usize);
+        let d = hk * dh;
+        let mut rng = Rng::new(9);
+        let q = rng.normal_vec(nh * dh);
+        let k_tail = rng.normal_vec(d);
+        let v_tail = rng.normal_vec(d);
+        let kview = KvQuantView { n_kv_heads: hk, d_head: dh, group, len: 0,
+                                  codes: KvCodes::I8(&[]), scales: &[], zeros: &[] };
+        let vview = KvQuantView { n_kv_heads: hk, d_head: dh, group, len: 0,
+                                  codes: KvCodes::I8(&[]), scales: &[], zeros: &[] };
+        let mut out = vec![0.0f32; nh * dh];
+        decode_tail_quant(&q, &kview, &vview, nh, &k_tail, &v_tail, &mut out);
+        let rep = nh / hk;
+        for h in 0..nh {
+            let kvh = h / rep;
+            for i in 0..dh {
+                let want = v_tail[kvh * dh + i];
+                let got = out[h * dh + i];
+                assert!((got - want).abs() < 1e-6, "softmax over the tail \
+                         alone must return the tail value: {got} vs {want}");
+            }
+        }
+    }
+
+    // When the tail has already been quantized *into* the cache, the
+    // cache-only kernel over len+1 rows is a different computation than the
+    // fp-tail kernel over len rows + tail — the whole reason these kernels
+    // exist.  Sanity-check they agree loosely (the codec error bounds the
+    // difference) but are not the identical computation.
+    #[test]
+    fn fp_tail_tracks_quantized_tail() {
+        let (hk, nh, dh, group, s) = (2usize, 2usize, 8usize, 4usize, 6usize);
+        let d = hk * dh;
+        let mut rng = Rng::new(11);
+        let raw_k = rng.normal_vec((s + 1) * d);
+        let raw_v = rng.normal_vec((s + 1) * d);
+        let (kc, ksc, kz) = kv::quant_slab(&raw_k, d, group, 8, 1.0);
+        let (vc, vsc, vz) = kv::quant_slab(&raw_v, d, group, 8, 1.0);
+        let q = rng.normal_vec(nh * dh);
+        // fp-tail over the first s rows + raw tail
+        let kview = KvQuantView { n_kv_heads: hk, d_head: dh, group, len: s,
+                                  codes: KvCodes::I8(&kc[..s * d]),
+                                  scales: &ksc[..s * d / group],
+                                  zeros: &kz[..s * d / group] };
+        let vview = KvQuantView { n_kv_heads: hk, d_head: dh, group, len: s,
+                                  codes: KvCodes::I8(&vc[..s * d]),
+                                  scales: &vsc[..s * d / group],
+                                  zeros: &vz[..s * d / group] };
+        let mut with_tail = vec![0.0f32; nh * dh];
+        decode_tail_quant(&q, &kview, &vview, nh,
+                          &raw_k[s * d..], &raw_v[s * d..], &mut with_tail);
+        // cache-only kernel over all s+1 quantized rows
+        let kfull = KvQuantView { n_kv_heads: hk, d_head: dh, group, len: s + 1,
+                                  codes: KvCodes::I8(&kc), scales: &ksc, zeros: &kz };
+        let vfull = KvQuantView { n_kv_heads: hk, d_head: dh, group, len: s + 1,
+                                  codes: KvCodes::I8(&vc), scales: &vsc, zeros: &vz };
+        let seq = DecodeQuantSeq { q: &q, k: kfull, v: vfull };
+        let mut quantized = vec![0.0f32; nh * dh];
+        crate::attention::decode_seq_quant_ref(&seq, nh, &mut quantized,
+                                               &mut DecodeScratch::default());
+        for (a, b) in with_tail.iter().zip(&quantized) {
+            assert!((a - b).abs() < 0.05, "fp tail should track 8-bit \
+                     quantized tail closely: {a} vs {b}");
+        }
+    }
+}

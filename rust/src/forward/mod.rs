@@ -1,0 +1,222 @@
+//! Graph-free model execution: the [`ModelExecutor`] trait and its impls.
+//!
+//! The coordinator used to be welded to the PJRT engine — every QKV/FFN
+//! projection round-tripped an AOT-compiled graph even though
+//! `staged_decode_attention` already ran natively.  This module breaks that
+//! coupling: [`ModelExecutor`] is the model-level contract the batcher and
+//! the eval harness actually need (whole-prompt prefill, batched decode,
+//! chunked suffix prefill), and `coordinator/runner.rs` becomes a thin
+//! dispatcher over two implementations:
+//!
+//! * `PjrtExecutor` (in `coordinator/runner.rs`) — the existing graph
+//!   path, kept bit-for-bit;
+//! * [`NativeExecutor`] — a pure-rust forward pass built from the
+//!   [`crate::backend::ComputeBackend`] ops (int4/int8 GEMM, online
+//!   Hadamard, activation quant) plus the fused tail-attention kernels in
+//!   [`attn`], so `quarot serve --executor native` runs with **zero** PJRT
+//!   graphs loaded.
+//!
+//! Chunked prefill is part of the contract: [`ModelExecutor::prefill_chunk`]
+//! processes N suffix tokens at their true positions against a slot's
+//! staging lane, writing the freshly quantized K/V back into the lane as it
+//! goes.  Both executors share [`stage_kv_row`], which is bit-identical to
+//! the `SeqCache::write_token` → `stage_token` round-trip the old
+//! token-at-a-time suffix loop performed, so chunked prefill reproduces the
+//! old path's numerics exactly.
+
+pub mod attn;
+pub mod native;
+pub mod weights;
+
+pub use native::NativeExecutor;
+pub use weights::NativeWeights;
+
+use anyhow::{bail, Result};
+
+use crate::model::ModelConfig;
+use crate::quant::kv;
+
+/// Full-sequence prefill output: logits for every real position plus the
+/// raw (pre-quantization) per-layer K/V streams, layer-major
+/// `[L][S][d_kv]`, trimmed to the real length.
+pub struct Prefilled {
+    /// `(S, vocab)` logits for the real (unpadded) prompt length.
+    pub logits: Vec<f32>,
+    /// Raw key stream, `[L][S][d_kv]` (post-RoPE / post-Hadamard).
+    pub ks: Vec<f32>,
+    /// Raw value stream, `[L][S][d_kv]`.
+    pub vs: Vec<f32>,
+    /// Real prompt length S.
+    pub len: usize,
+}
+
+/// Dense staging buffers for the decode path's cache inputs: per
+/// (layer, slot) lanes of `cache_seq` token rows, either group-quantized
+/// codes + scales + zeros or raw f32 (the fp16-baseline path).
+pub struct DecodeStaging {
+    /// Key codes, `[L][B][cache_seq][d_kv]` (unpacked i8, any bit width).
+    pub k_codes: Vec<i8>,
+    /// Key group scales, `[L][B][cache_seq][d_kv / kv_group]`.
+    pub k_scale: Vec<f32>,
+    /// Key group zero-points, same shape as `k_scale`.
+    pub k_zero: Vec<f32>,
+    /// Value codes, same shape as `k_codes`.
+    pub v_codes: Vec<i8>,
+    /// Value group scales, same shape as `k_scale`.
+    pub v_scale: Vec<f32>,
+    /// Value group zero-points, same shape as `k_scale`.
+    pub v_zero: Vec<f32>,
+    /// fp16-baseline path (kv_bits == 16): raw f32 key cache.
+    pub k_f32: Vec<f32>,
+    /// fp16-baseline path: raw f32 value cache.
+    pub v_f32: Vec<f32>,
+}
+
+impl DecodeStaging {
+    /// Allocate zeroed staging for `cfg.decode_batch` slots; `fp` selects
+    /// the raw-f32 layout over the quantized one.
+    pub fn new(cfg: &ModelConfig, fp: bool) -> DecodeStaging {
+        let (l, b, s) = (cfg.n_layers, cfg.decode_batch, cfg.cache_seq);
+        let d = cfg.d_kv();
+        let ng = d / cfg.kv_group;
+        if fp {
+            DecodeStaging {
+                k_codes: vec![], k_scale: vec![], k_zero: vec![],
+                v_codes: vec![], v_scale: vec![], v_zero: vec![],
+                k_f32: vec![0.0; l * b * s * d], v_f32: vec![0.0; l * b * s * d],
+            }
+        } else {
+            DecodeStaging {
+                k_codes: vec![0; l * b * s * d],
+                k_scale: vec![0.0; l * b * s * ng],
+                k_zero: vec![0.0; l * b * s * ng],
+                v_codes: vec![0; l * b * s * d],
+                v_scale: vec![0.0; l * b * s * ng],
+                v_zero: vec![0.0; l * b * s * ng],
+                k_f32: vec![], v_f32: vec![],
+            }
+        }
+    }
+}
+
+/// Output of one [`ModelExecutor::prefill_chunk`] call.
+pub struct ChunkResult {
+    /// `(T, vocab)` logits — one row per chunk token, in order.  The last
+    /// row is the one the batcher samples from when the chunk finishes the
+    /// prompt.
+    pub logits: Vec<f32>,
+    /// Raw per-layer keys for the chunk, `[L][T][d_kv]` — what the batcher
+    /// appends to the paged `SeqCache` (the staging lane is already
+    /// written by the executor).
+    pub k: Vec<f32>,
+    /// Raw per-layer values, `[L][T][d_kv]`.
+    pub v: Vec<f32>,
+}
+
+/// A model execution path the coordinator can drive: whole-prompt prefill,
+/// one batched decode step, and chunked suffix prefill against a slot's
+/// staging lane.  Implementations must be drop-in equivalent at the
+/// contract level (same shapes, same staging layout); see
+/// `rust/src/forward/native.rs` for the numerical-parity notes between the
+/// graph and native paths.
+pub trait ModelExecutor: Send + Sync {
+    /// Short name for metrics / logs ("pjrt" / "native").
+    fn name(&self) -> &'static str;
+
+    /// Prefill `tokens` (length 1..=max_seq).  Prefill-graph semantics:
+    /// causal attention over the *fake-quantized* K/V including the self
+    /// token; returned K/V are raw.
+    fn prefill(&self, tokens: &[u16]) -> Result<Prefilled>;
+
+    /// One batched decode step over all `decode_batch` lanes.  Decode-graph
+    /// semantics: quantized (or fp) staging history per lane plus the new
+    /// token's K/V as a full-precision softmax tail.  Returns
+    /// `(logits (B, vocab), k_new, v_new (L, B, d_kv))`.
+    fn decode(&self, tokens: &[i32], cur_lens: &[i32], staging: &DecodeStaging)
+              -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>;
+
+    /// Process `tokens` at true positions `start_pos..start_pos+T` for slot
+    /// `slot`, with decode-step semantics per token (history + fp tail),
+    /// quantizing each token's K/V into the slot's staging lane at `kv_bits`
+    /// as it goes.  The caller appends the returned raw K/V to the paged
+    /// cache afterwards.
+    fn prefill_chunk(&self, tokens: &[u16], start_pos: usize, slot: usize,
+                     kv_bits: u32, staging: &mut DecodeStaging)
+                     -> Result<ChunkResult>;
+}
+
+/// Which [`ModelExecutor`] implementation serves requests
+/// (`--executor` flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// AOT-compiled PJRT graphs (the original path).
+    Pjrt,
+    /// Pure-rust forward pass over the compute backend; no graphs loaded.
+    Native,
+}
+
+impl ExecutorKind {
+    /// Parse a `--executor` flag value.
+    pub fn parse(s: &str) -> Result<ExecutorKind> {
+        match s {
+            "pjrt" => Ok(ExecutorKind::Pjrt),
+            "native" => Ok(ExecutorKind::Native),
+            other => bail!("unknown executor '{other}' (expected pjrt|native)"),
+        }
+    }
+
+    /// The wire/metrics name ("pjrt" / "native").
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecutorKind::Pjrt => "pjrt",
+            ExecutorKind::Native => "native",
+        }
+    }
+}
+
+/// Quantize (or copy, on the fp path) one freshly computed K/V token row
+/// into slot `slot`'s staging lane at position `t`, for one layer.
+///
+/// Bit-identical to the `SeqCache::write_token` → `stage_token` round-trip
+/// the old token-at-a-time suffix loop performed: both call
+/// [`crate::quant::kv::quant_slab`] on the same raw row (nibble pack +
+/// sign-extending unpack are exact), so chunked prefill leaves the staging
+/// lane byte-for-byte as the old path did.
+#[allow(clippy::too_many_arguments)]
+pub fn stage_kv_row(staging: &mut DecodeStaging, cfg: &ModelConfig, layer: usize,
+                    slot: usize, t: usize, bits: u32, clip: f32, fp: bool,
+                    k_row: &[f32], v_row: &[f32]) {
+    let (b, s) = (cfg.decode_batch, cfg.cache_seq);
+    let d = cfg.d_kv();
+    let ng = d / cfg.kv_group;
+    let co = ((layer * b + slot) * s + t) * d;
+    if fp {
+        staging.k_f32[co..co + d].copy_from_slice(k_row);
+        staging.v_f32[co..co + d].copy_from_slice(v_row);
+        return;
+    }
+    let go = ((layer * b + slot) * s + t) * ng;
+    let (kc, ks, kz) = kv::quant_slab(k_row, d, cfg.kv_group, bits, clip);
+    staging.k_codes[co..co + d].copy_from_slice(&kc);
+    staging.k_scale[go..go + ng].copy_from_slice(&ks);
+    staging.k_zero[go..go + ng].copy_from_slice(&kz);
+    let (vc, vs, vz) = kv::quant_slab(v_row, d, cfg.kv_group, bits, clip);
+    staging.v_codes[co..co + d].copy_from_slice(&vc);
+    staging.v_scale[go..go + ng].copy_from_slice(&vs);
+    staging.v_zero[go..go + ng].copy_from_slice(&vz);
+}
+
+/// [`stage_kv_row`] over a whole decode-step `(L, B, d_kv)` K/V slab:
+/// stages every layer of slot `slot`'s new token at position `t`.
+#[allow(clippy::too_many_arguments)]
+pub fn stage_kv_token(staging: &mut DecodeStaging, cfg: &ModelConfig, slot: usize,
+                      t: usize, bits: u32, clip: f32, fp: bool,
+                      k_new: &[f32], v_new: &[f32]) {
+    let b = cfg.decode_batch;
+    let d = cfg.d_kv();
+    for l in 0..cfg.n_layers {
+        let o = (l * b + slot) * d;
+        stage_kv_row(staging, cfg, l, slot, t, bits, clip, fp,
+                     &k_new[o..o + d], &v_new[o..o + d]);
+    }
+}

@@ -1,0 +1,625 @@
+//! The native [`ModelExecutor`]: a pure-rust forward pass over the
+//! [`crate::backend::ComputeBackend`] ops — int4/int8 GEMM projections,
+//! online Hadamards, activation quant, RMSNorm — plus the fused
+//! tail-attention kernels in [`super::attn`].  `quarot serve --executor
+//! native` runs entirely through this path with zero PJRT graphs loaded.
+//!
+//! # Semantics (mirrors `python/compile/model.py`)
+//!
+//! *Prefill* uses the prefill-graph convention: causal f32 attention over
+//! the **fake-quantized** K/V (self token included), returning the raw
+//! K/V streams.  *Decode* and *prefill chunks* use the decode-graph
+//! convention: quantized staging history per lane plus the new token's
+//! K/V as a full-precision softmax tail.  The split matches the compiled
+//! graphs exactly — a prefix-cache partial hit already replays its suffix
+//! under decode semantics on the PJRT path, and the repo's golden tests
+//! accept that as bit-comparable.
+//!
+//! # Numerical parity vs the graph path
+//!
+//! Weight grids are bit-identical (see [`super::weights`]); activation
+//! grids are the same formula.  Floating-point *summation order* inside
+//! GEMMs and softmaxes differs from XLA's, so native logits track the
+//! graph path to tight tolerance and equal argmax, not bitwise — the
+//! artifact-gated parity test in `rust/tests/integration.rs` pins that.
+//! Within the native path itself, chunked prefill is **bitwise** equal to
+//! token-at-a-time prefill at any chunk size: every per-row op is
+//! independent of the batch dimension (per-output-element GEMM
+//! accumulation, per-row norms/quant/rotations), and the staging lane
+//! evolves through the identical sequence of `stage_kv_row` writes.  The
+//! tests below pin this at chunk sizes 1/3/N for both staging layouts.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::attention::{KvCodes, KvF32View, KvQuantView};
+use crate::backend::ComputeBackend;
+use crate::coordinator::runner::{CalibStats, QuantSpec, Variant};
+use crate::hadamard::{had_headdim, had_heads};
+use crate::model::{ModelConfig, Weights};
+use crate::quant::kv;
+
+use super::weights::{LayerWeights, NativeWeights};
+use super::{attn, stage_kv_row, ChunkResult, DecodeStaging, ModelExecutor,
+            Prefilled};
+
+/// RMSNorm epsilon — matches `python/compile/model.py::_NORM_EPS`.
+const NORM_EPS: f32 = 1e-5;
+
+/// Graph-free model executor over packed native weights.
+pub struct NativeExecutor {
+    cfg: ModelConfig,
+    spec: QuantSpec,
+    backend: Arc<dyn ComputeBackend>,
+    weights: NativeWeights,
+}
+
+/// How a forward pass touches the staging lanes: decode reads history
+/// only; prefill chunks also write each fresh token's quantized K/V.
+enum StagingAccess<'a> {
+    Read(&'a DecodeStaging),
+    Write { staging: &'a mut DecodeStaging, bits: u32 },
+}
+
+impl StagingAccess<'_> {
+    fn staging(&self) -> &DecodeStaging {
+        match self {
+            StagingAccess::Read(s) => s,
+            StagingAccess::Write { staging, .. } => staging,
+        }
+    }
+}
+
+fn rmsnorm_row(x: &[f32], gamma: &[f32], out: &mut [f32]) {
+    let d = x.len();
+    let ss: f32 = x.iter().map(|v| v * v).sum();
+    let inv = 1.0 / (ss / d as f32 + NORM_EPS).sqrt();
+    for i in 0..d {
+        out[i] = x[i] * inv * gamma[i];
+    }
+}
+
+/// Half-split RoPE at one position (python `rope`): `x1 = x[..half]`,
+/// `x2 = x[half..]` per head; values are never applied (caller skips v).
+fn rope_row(x: &mut [f32], n_heads: usize, d_head: usize, pos: usize,
+            theta: f32) {
+    let half = d_head / 2;
+    for h in 0..n_heads {
+        let xh = &mut x[h * d_head..(h + 1) * d_head];
+        for i in 0..half {
+            let freq = theta.powf(-(i as f32) / half as f32);
+            let ang = pos as f32 * freq;
+            let (sin, cos) = ang.sin_cos();
+            let (x1, x2) = (xh[i], xh[i + half]);
+            xh[i] = x1 * cos - x2 * sin;
+            xh[i + half] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Round-to-nearest-even f32 → bf16 → f32 (the `had_bf16` graph variant
+/// casts every online-Hadamard output through bf16).
+fn round_bf16(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+fn round_bf16_slice(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = round_bf16(*v);
+    }
+}
+
+impl NativeExecutor {
+    /// Pack `weights` per `spec` and build the executor.  `order` is the
+    /// manifest weight order; `stats` feeds GPTQ/SmoothQuant preparation
+    /// exactly like the graph path.
+    pub fn new(cfg: &ModelConfig, order: &[String], weights: &Weights,
+               spec: QuantSpec, stats: Option<&CalibStats>,
+               backend: Arc<dyn ComputeBackend>) -> Result<NativeExecutor> {
+        if cfg.d_head % cfg.kv_group != 0 {
+            bail!("native executor needs d_head % kv_group == 0 \
+                   (got {} % {})", cfg.d_head, cfg.kv_group);
+        }
+        let packed = NativeWeights::build(cfg, order, weights, &spec, stats)?;
+        Ok(NativeExecutor {
+            cfg: cfg.clone(),
+            spec,
+            backend,
+            weights: packed,
+        })
+    }
+
+    /// Packed weight footprint in bytes (bench table).
+    pub fn weight_bytes(&self) -> usize {
+        self.weights.bytes()
+    }
+
+    fn embed_rows(&self, tokens: &[i32], x: &mut [f32]) {
+        let d = self.cfg.d_model;
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = (t.max(0) as usize).min(self.cfg.vocab - 1);
+            x[i * d..(i + 1) * d]
+                .copy_from_slice(&self.weights.embed[t * d..(t + 1) * d]);
+        }
+    }
+
+    /// Pre-attention half of a layer: norm → QKV projections → RoPE →
+    /// per-head Hadamard (rotated variants).  Returns `(q, k, v)` rows.
+    fn qkv_rows(&self, lw: &LayerWeights, x: &[f32], n: usize, poss: &[usize])
+                -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let cfg = &self.cfg;
+        let (d, da, dkv, dh) = (cfg.d_model, cfg.d_attn(), cfg.d_kv(), cfg.d_head);
+        let (ab, ac) = (self.spec.act_bits, self.spec.act_clip);
+        let be = &*self.backend;
+        let rot = self.spec.variant.is_rotated();
+        let h16 = self.spec.variant == Variant::QuarotH16;
+        let theta = cfg.rope_theta as f32;
+        let mut h = vec![0.0f32; n * d];
+        for i in 0..n {
+            rmsnorm_row(&x[i * d..(i + 1) * d], &lw.attn_norm,
+                        &mut h[i * d..(i + 1) * d]);
+        }
+        let mut q = vec![0.0f32; n * da];
+        let mut k = vec![0.0f32; n * dkv];
+        let mut v = vec![0.0f32; n * dkv];
+        lw.wq.apply(be, &h, n, ab, ac, &mut q);
+        lw.wk.apply(be, &h, n, ab, ac, &mut k);
+        lw.wv.apply(be, &h, n, ab, ac, &mut v);
+        for i in 0..n {
+            let qi = &mut q[i * da..(i + 1) * da];
+            let ki = &mut k[i * dkv..(i + 1) * dkv];
+            rope_row(qi, cfg.n_heads, dh, poss[i], theta);
+            rope_row(ki, cfg.n_kv_heads, dh, poss[i], theta);
+            if rot {
+                had_headdim(qi, dh);
+                had_headdim(ki, dh);
+                if h16 {
+                    round_bf16_slice(qi);
+                    round_bf16_slice(ki);
+                }
+            }
+        }
+        (q, k, v)
+    }
+
+    /// Post-attention half: per-head-mixing Hadamard → output projection →
+    /// residual → FFN (norm, up·silu(gate), online WHT, down) → residual.
+    fn finish_layer(&self, lw: &LayerWeights, x: &mut [f32], att: &mut [f32],
+                    n: usize) {
+        let cfg = &self.cfg;
+        let (d, da, dff) = (cfg.d_model, cfg.d_attn(), cfg.d_ff);
+        let (ab, ac) = (self.spec.act_bits, self.spec.act_clip);
+        let be = &*self.backend;
+        let rot = self.spec.variant.is_rotated();
+        let h16 = self.spec.variant == Variant::QuarotH16;
+        if rot {
+            for i in 0..n {
+                let ai = &mut att[i * da..(i + 1) * da];
+                had_heads(ai, cfg.n_heads);
+                if h16 {
+                    round_bf16_slice(ai);
+                }
+            }
+        }
+        let mut proj = vec![0.0f32; n * d];
+        lw.wo.apply(be, att, n, ab, ac, &mut proj);
+        for (xv, pv) in x.iter_mut().zip(&proj) {
+            *xv += pv;
+        }
+        let mut h = vec![0.0f32; n * d];
+        for i in 0..n {
+            rmsnorm_row(&x[i * d..(i + 1) * d], &lw.ffn_norm,
+                        &mut h[i * d..(i + 1) * d]);
+        }
+        let mut up = vec![0.0f32; n * dff];
+        let mut gate = vec![0.0f32; n * dff];
+        lw.wup.apply(be, &h, n, ab, ac, &mut up);
+        lw.wgate.apply(be, &h, n, ab, ac, &mut gate);
+        for (u, g) in up.iter_mut().zip(&gate) {
+            *u *= silu(*g);
+        }
+        if rot {
+            be.had_rows(&mut up, dff);
+            if h16 {
+                round_bf16_slice(&mut up);
+            }
+        }
+        lw.wdown.apply(be, &up, n, ab, ac, &mut proj);
+        for (xv, pv) in x.iter_mut().zip(&proj) {
+            *xv += pv;
+        }
+    }
+
+    /// Final norm + LM head (never activation-quantized, like the graphs).
+    fn head_logits(&self, x: &[f32], n: usize) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let mut h = vec![0.0f32; n * d];
+        for i in 0..n {
+            rmsnorm_row(&x[i * d..(i + 1) * d], &self.weights.final_norm,
+                        &mut h[i * d..(i + 1) * d]);
+        }
+        let mut logits = vec![0.0f32; n * self.cfg.vocab];
+        self.backend.gemm_f32(&h, n, &self.weights.lm_head, &mut logits);
+        logits
+    }
+
+    /// Decode-semantics forward over `n` rows: row `i` is token
+    /// `tokens[i]` of staging lane `lanes[i]` at position `poss[i]`,
+    /// attending over the lane's first `poss[i]` staged entries plus its
+    /// own fp K/V tail.  In `Write` mode each row's K/V is staged at its
+    /// position *before* the next row runs — within a chunk, row `i+1`
+    /// sees row `i` exactly as a later decode step would.  Returns
+    /// `(logits (n, vocab), k, v (L, n, d_kv) raw)`.
+    fn forward_rows(&self, tokens: &[i32], lanes: &[usize], poss: &[usize],
+                    mut access: StagingAccess<'_>)
+                    -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let cfg = &self.cfg;
+        let n = tokens.len();
+        let (d, da, dkv) = (cfg.d_model, cfg.d_attn(), cfg.d_kv());
+        let (b, s) = (cfg.decode_batch, cfg.cache_seq);
+        let ng = dkv / cfg.kv_group;
+        let fp = self.spec.kv_is_fp();
+        let mut x = vec![0.0f32; n * d];
+        self.embed_rows(tokens, &mut x);
+        let mut ks = vec![0.0f32; cfg.n_layers * n * dkv];
+        let mut vs = vec![0.0f32; cfg.n_layers * n * dkv];
+        let mut att = vec![0.0f32; n * da];
+        for (l, lw) in self.weights.layers.iter().enumerate() {
+            let (q, k, v) = self.qkv_rows(lw, &x, n, poss);
+            for i in 0..n {
+                let (lane, pos) = (lanes[i], poss[i]);
+                let qi = &q[i * da..(i + 1) * da];
+                let ki = &k[i * dkv..(i + 1) * dkv];
+                let vi = &v[i * dkv..(i + 1) * dkv];
+                let ai = &mut att[i * da..(i + 1) * da];
+                let lane_tok = (l * b + lane) * s;
+                let st = access.staging();
+                if fp {
+                    let kview = KvF32View {
+                        n_kv_heads: cfg.n_kv_heads, d_head: cfg.d_head,
+                        len: pos,
+                        data: &st.k_f32[lane_tok * dkv..(lane_tok + pos) * dkv],
+                    };
+                    let vview = KvF32View {
+                        data: &st.v_f32[lane_tok * dkv..(lane_tok + pos) * dkv],
+                        ..kview
+                    };
+                    attn::decode_tail_f32(qi, &kview, &vview, cfg.n_heads,
+                                          ki, vi, ai);
+                } else {
+                    let co = lane_tok * dkv;
+                    let go = lane_tok * ng;
+                    let kview = KvQuantView {
+                        n_kv_heads: cfg.n_kv_heads, d_head: cfg.d_head,
+                        group: cfg.kv_group, len: pos,
+                        codes: KvCodes::I8(&st.k_codes[co..co + pos * dkv]),
+                        scales: &st.k_scale[go..go + pos * ng],
+                        zeros: &st.k_zero[go..go + pos * ng],
+                    };
+                    let vview = KvQuantView {
+                        codes: KvCodes::I8(&st.v_codes[co..co + pos * dkv]),
+                        scales: &st.v_scale[go..go + pos * ng],
+                        zeros: &st.v_zero[go..go + pos * ng],
+                        ..kview
+                    };
+                    attn::decode_tail_quant(qi, &kview, &vview, cfg.n_heads,
+                                            ki, vi, ai);
+                }
+                if let StagingAccess::Write { staging, bits } = &mut access {
+                    stage_kv_row(staging, cfg, l, lane, pos, *bits,
+                                 self.spec.kv_clip, fp, ki, vi);
+                }
+                ks[(l * n + i) * dkv..(l * n + i + 1) * dkv]
+                    .copy_from_slice(ki);
+                vs[(l * n + i) * dkv..(l * n + i + 1) * dkv]
+                    .copy_from_slice(vi);
+            }
+            self.finish_layer(lw, &mut x, &mut att, n);
+        }
+        Ok((self.head_logits(&x, n), ks, vs))
+    }
+
+    /// Fake-quantize a `(n, d_kv)` K or V slab through the grouped codec
+    /// (prefill-graph `kv_fake_quant`); `bits >= 16` passes through.
+    fn fake_kv(&self, raw: &[f32], bits: u32) -> Vec<f32> {
+        if bits >= 16 {
+            return raw.to_vec();
+        }
+        let (codes, scales, zeros) = self.backend.kv_quant_slab(
+            raw, self.cfg.d_kv(), self.cfg.kv_group, bits, self.spec.kv_clip);
+        let mut out = vec![0.0f32; raw.len()];
+        self.backend.kv_dequant(&codes, &scales, &zeros, self.cfg.kv_group,
+                                &mut out);
+        out
+    }
+}
+
+impl ModelExecutor for NativeExecutor {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn prefill(&self, tokens: &[u16]) -> Result<Prefilled> {
+        let cfg = &self.cfg;
+        let n = tokens.len();
+        if n == 0 || n > cfg.max_seq {
+            bail!("prefill length {n} outside 1..={}", cfg.max_seq);
+        }
+        let (d, da, dkv) = (cfg.d_model, cfg.d_attn(), cfg.d_kv());
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let poss: Vec<usize> = (0..n).collect();
+        let mut x = vec![0.0f32; n * d];
+        self.embed_rows(&toks, &mut x);
+        let mut ks = vec![0.0f32; cfg.n_layers * n * dkv];
+        let mut vs = vec![0.0f32; cfg.n_layers * n * dkv];
+        let mut att = vec![0.0f32; n * da];
+        for (l, lw) in self.weights.layers.iter().enumerate() {
+            let (q, k, v) = self.qkv_rows(lw, &x, n, &poss);
+            // prefill-graph semantics: attend over fake-quantized K/V,
+            // self token included; the returned streams stay raw
+            let k_att = self.fake_kv(&k, self.spec.kv_bits);
+            let v_att = self.fake_kv(&v, self.spec.kv_bits_v);
+            attn::causal_prefill(&q, &k_att, &v_att, n, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.d_head, &mut att);
+            ks[l * n * dkv..(l + 1) * n * dkv].copy_from_slice(&k);
+            vs[l * n * dkv..(l + 1) * n * dkv].copy_from_slice(&v);
+            self.finish_layer(lw, &mut x, &mut att, n);
+        }
+        Ok(Prefilled { logits: self.head_logits(&x, n), ks, vs, len: n })
+    }
+
+    fn decode(&self, tokens: &[i32], cur_lens: &[i32], staging: &DecodeStaging)
+              -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let b = self.cfg.decode_batch;
+        if tokens.len() != b || cur_lens.len() != b {
+            bail!("decode expects {b}-lane token/len vectors");
+        }
+        let lanes: Vec<usize> = (0..b).collect();
+        let poss: Vec<usize> = cur_lens.iter().map(|&l| l.max(0) as usize)
+            .collect();
+        if let Some(&p) = poss.iter().max() {
+            if p >= self.cfg.cache_seq {
+                bail!("decode position {p} beyond cache_seq {}",
+                      self.cfg.cache_seq);
+            }
+        }
+        self.forward_rows(tokens, &lanes, &poss, StagingAccess::Read(staging))
+    }
+
+    fn prefill_chunk(&self, tokens: &[u16], start_pos: usize, slot: usize,
+                     kv_bits: u32, staging: &mut DecodeStaging)
+                     -> Result<ChunkResult> {
+        let cfg = &self.cfg;
+        let t = tokens.len();
+        if t == 0 {
+            bail!("empty prefill chunk");
+        }
+        if slot >= cfg.decode_batch {
+            bail!("chunk slot {slot} out of range");
+        }
+        if start_pos + t > cfg.cache_seq {
+            bail!("chunk [{start_pos}, {}) beyond cache_seq {}",
+                  start_pos + t, cfg.cache_seq);
+        }
+        let toks: Vec<i32> = tokens.iter().map(|&x| x as i32).collect();
+        let lanes = vec![slot; t];
+        let poss: Vec<usize> = (start_pos..start_pos + t).collect();
+        let (logits, k, v) = self.forward_rows(
+            &toks, &lanes, &poss,
+            StagingAccess::Write { staging, bits: kv_bits })?;
+        Ok(ChunkResult { logits, k, v })
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    use crate::backend;
+    use crate::coordinator::runner::QuantSpec;
+    use crate::forward::weights::canonical_weight_order;
+    use crate::model::transform::{self, tests::{demo_cfg, demo_weights}};
+    use crate::model::weights::Tensor;
+    use crate::util::prng::Rng;
+
+    /// Archive with both `base.*` (raw) and `rot.*` (QuaRot-rotated)
+    /// weight sets — like a real artifact dir — for an arbitrary config
+    /// (engine-level tests want longer sequence dims than [`demo_cfg`]).
+    pub(crate) fn archive_for(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        let base = demo_weights(cfg, &mut rng);
+        let signs = Rng::new(seed ^ 0x5eed).signs(cfg.d_model);
+        let q = transform::q_from_signs(cfg.d_model, &signs);
+        let refs: BTreeMap<String, &Tensor> =
+            base.iter().map(|(k, v)| (k.clone(), v)).collect();
+        let rot = transform::rotate(cfg, &refs, &q).unwrap();
+        let mut tensors = BTreeMap::new();
+        for (k, v) in base {
+            tensors.insert(format!("base.{k}"), v);
+        }
+        for (k, v) in rot {
+            tensors.insert(format!("rot.{k}"), v);
+        }
+        Weights { tensors }
+    }
+
+    /// Demo archive at the [`demo_cfg`] shape.
+    pub(crate) fn demo_archive(seed: u64) -> (ModelConfig, Weights) {
+        let cfg = demo_cfg();
+        let weights = archive_for(&cfg, seed);
+        (cfg, weights)
+    }
+
+    pub(crate) fn demo_executor(spec: QuantSpec, seed: u64)
+                                -> (ModelConfig, NativeExecutor) {
+        let (cfg, weights) = demo_archive(seed);
+        let exec = NativeExecutor::new(&cfg, &canonical_weight_order(),
+                                       &weights, spec, None,
+                                       backend::make(backend::BackendKind::Scalar))
+            .unwrap();
+        (cfg, exec)
+    }
+
+    fn rotated_fp_spec() -> QuantSpec {
+        QuantSpec { variant: Variant::Quarot, ..QuantSpec::fp16_baseline() }
+    }
+
+    // The rotation is an exact reparameterization: with quantization off,
+    // the rotated native forward must reproduce the unrotated one.  This
+    // exercises every piece at once — folded norms, RoPE placement,
+    // per-head and cross-head Hadamards, wo/wdown transforms.
+    #[test]
+    fn rotated_fp_forward_matches_baseline() {
+        let (_, base) = demo_executor(QuantSpec::fp16_baseline(), 42);
+        let (_, rot) = demo_executor(rotated_fp_spec(), 42);
+        let prompt: Vec<u16> = vec![3, 9, 1, 27, 5, 14];
+        let pb = base.prefill(&prompt).unwrap();
+        let pr = rot.prefill(&prompt).unwrap();
+        let amax = pb.logits.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        for (i, (a, b)) in pb.logits.iter().zip(&pr.logits).enumerate() {
+            assert!((a - b).abs() <= 1e-3 * amax.max(1.0),
+                    "logit {i}: baseline {a} vs rotated {b}");
+        }
+    }
+
+    // int4 QuaRot spec: the whole int path must run and stay finite, and
+    // greedy argmax should still track the fp forward most of the time on
+    // this tiny random model (weak but catches catastrophic breakage).
+    #[test]
+    fn quarot_int4_prefill_is_finite() {
+        let (_, exec) = demo_executor(QuantSpec::quarot(4), 7);
+        let prompt: Vec<u16> = vec![1, 2, 3, 4, 5, 6, 7];
+        let p = exec.prefill(&prompt).unwrap();
+        assert!(p.logits.iter().all(|v| v.is_finite()));
+        assert!(p.ks.iter().chain(&p.vs).all(|v| v.is_finite()));
+    }
+
+    /// Drive prefill_chunk over `prompt` in chunks of `chunk` from an
+    /// empty lane, returning (staging, all logits, all k, all v).
+    fn run_chunked(exec: &NativeExecutor, cfg: &ModelConfig, prompt: &[u16],
+                   chunk: usize, kv_bits: u32)
+                   -> (DecodeStaging, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let fp = exec.spec.kv_is_fp();
+        let mut staging = DecodeStaging::new(cfg, fp);
+        let mut logits = Vec::new();
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        let mut pos = 0;
+        for piece in prompt.chunks(chunk) {
+            let r = exec.prefill_chunk(piece, pos, 1, kv_bits, &mut staging)
+                .unwrap();
+            logits.extend_from_slice(&r.logits);
+            ks.push(r.k);
+            vs.push(r.v);
+            pos += piece.len();
+        }
+        // flatten [L][T][d] chunk slabs into per-token-order streams
+        let d = cfg.d_kv();
+        let flat = |chunks: &[Vec<f32>]| -> Vec<f32> {
+            let mut out = Vec::new();
+            for l in 0..cfg.n_layers {
+                for c in chunks {
+                    let t = c.len() / (cfg.n_layers * d);
+                    out.extend_from_slice(&c[l * t * d..(l + 1) * t * d]);
+                }
+            }
+            out
+        };
+        (staging, logits, flat(&ks), flat(&vs))
+    }
+
+    fn assert_chunk_invariance(spec: QuantSpec, kv_bits: u32) {
+        let (cfg, exec) = demo_executor(spec, 99);
+        let prompt: Vec<u16> = vec![5, 1, 19, 2, 30, 11, 4];
+        let n = prompt.len();
+        let (st1, lg1, k1, v1) = run_chunked(&exec, &cfg, &prompt, 1, kv_bits);
+        for chunk in [3, n] {
+            let (st, lg, k, v) = run_chunked(&exec, &cfg, &prompt, chunk,
+                                             kv_bits);
+            assert!(lg1.iter().zip(&lg)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "chunk={chunk}: logits diverged from token-at-a-time");
+            assert!(k1.iter().zip(&k).all(|(a, b)| a.to_bits() == b.to_bits())
+                    && v1.iter().zip(&v)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "chunk={chunk}: raw K/V diverged");
+            assert_eq!(st1.k_codes, st.k_codes, "chunk={chunk}: staging codes");
+            assert!(st1.k_scale.iter().zip(&st.k_scale)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "chunk={chunk}: staging scales");
+            assert!(st1.k_f32.iter().zip(&st.k_f32)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "chunk={chunk}: fp staging");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_bitwise_equals_token_at_a_time_int4() {
+        assert_chunk_invariance(QuantSpec::quarot(4), 4);
+    }
+
+    #[test]
+    fn chunked_prefill_bitwise_equals_token_at_a_time_kv8() {
+        assert_chunk_invariance(QuantSpec::quarot(8), 8);
+    }
+
+    #[test]
+    fn chunked_prefill_bitwise_equals_token_at_a_time_fp() {
+        assert_chunk_invariance(QuantSpec::fp16_baseline(), 16);
+    }
+
+    // A chunked suffix must be bitwise identical to the same tokens
+    // decoded one-at-a-time through `decode()` — the PJRT suffix loop's
+    // contract, transplanted to the native path.
+    #[test]
+    fn chunk_matches_decode_loop() {
+        let spec = QuantSpec::quarot(4);
+        let (cfg, exec) = demo_executor(spec.clone(), 13);
+        let prompt: Vec<u16> = vec![8, 21, 2, 17, 9];
+        let (st_chunk, lg_chunk, _, _) =
+            run_chunked(&exec, &cfg, &prompt, prompt.len(), 4);
+        // token-at-a-time through the public decode() + manual staging
+        let mut staging = DecodeStaging::new(&cfg, false);
+        let b = cfg.decode_batch;
+        let mut lg_loop = Vec::new();
+        for (t, &tok) in prompt.iter().enumerate() {
+            let mut toks = vec![0i32; b];
+            let mut lens = vec![0i32; b];
+            toks[1] = tok as i32;
+            lens[1] = t as i32;
+            let (lg, kn, vn) = exec.decode(&toks, &lens, &staging).unwrap();
+            lg_loop.extend_from_slice(&lg[cfg.vocab..2 * cfg.vocab]);
+            super::super::stage_kv_token(&mut staging, &cfg, 1, t, 4,
+                                         spec.kv_clip, false, &kn, &vn);
+        }
+        assert!(lg_chunk.iter().zip(&lg_loop)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "chunked prefill != decode loop");
+        assert_eq!(st_chunk.k_codes, staging.k_codes);
+        assert_eq!(st_chunk.v_codes, staging.v_codes);
+    }
+
+    // On the fp path, prefill-graph semantics and decode semantics
+    // coincide (no codec anywhere), so cold prefill and chunked prefill
+    // must agree to fp round-off.
+    #[test]
+    fn fp_prefill_agrees_with_chunked() {
+        let (cfg, exec) = demo_executor(QuantSpec::fp16_baseline(), 3);
+        let prompt: Vec<u16> = vec![2, 7, 18, 25, 6];
+        let cold = exec.prefill(&prompt).unwrap();
+        let (_, lg, _, _) = run_chunked(&exec, &cfg, &prompt, 2, 16);
+        let amax = cold.logits.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        for (a, b) in cold.logits.iter().zip(&lg) {
+            assert!((a - b).abs() <= 1e-4 * amax.max(1.0),
+                    "cold {a} vs chunked {b}");
+        }
+    }
+}

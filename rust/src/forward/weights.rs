@@ -1,0 +1,353 @@
+//! Native weight preparation: pack the spec-quantized model weights into
+//! the [`crate::gemm`] containers the `ComputeBackend` GEMMs consume.
+//!
+//! Parity contract with the graph path: the compiled graphs are handed
+//! *fake-quantized* f32 weights (`prepare_weights`) and multiply them
+//! against fake-quantized activations in f32.  The native path must
+//! compute on the **same weight grid**:
+//!
+//! * For the flagship per-channel symmetric RTN specs (QuaRot's W4A4 /
+//!   W8A8), [`crate::quant::rtn::quant_weight_int_searched`] re-derives
+//!   the exact clip-searched integer codes + scales, so the int4/int8
+//!   GEMM kernels compute `Σ qx·qw · sx·sw` on precisely the values the
+//!   graph saw — a true integer path, not a second lossy quantization.
+//!   (`WeightsI8::quantize`'s full-range grid would *shift* every weight
+//!   by `levels/(levels+0.5)`; never re-quantize prepared weights.)
+//! * Every other weight scheme (GPTQ, grouped/asymmetric RTN,
+//!   SmoothQuant folds, FP16) falls back to the prepared f32 matrices
+//!   with explicit activation fake-quant before an f32 GEMM — exactly the
+//!   graph's arithmetic for all spec combinations.
+//!
+//! QUIK outlier masks (`spec.outliers > 0`) are a baseline-graph-only
+//! feature and are rejected at construction.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::ComputeBackend;
+use crate::coordinator::runner::{prepare_weights, QuantSpec, WeightQuant};
+use crate::gemm::{WeightsF32, WeightsI4, WeightsI8};
+use crate::model::{ModelConfig, Weights};
+use crate::quant::rtn;
+use crate::tensor::Mat;
+
+/// One projection weight in whichever container the spec maps to.
+pub enum ProjWeight {
+    /// f32 columns; `quant_acts` replays the graph's activation
+    /// fake-quant before the GEMM (false on the FP16 path).
+    F32 {
+        /// Column-major f32 weight.
+        w: WeightsF32,
+        /// Fake-quantize activation rows before multiplying.
+        quant_acts: bool,
+    },
+    /// int8 codes on the exact clip-searched RTN grid.
+    I8(WeightsI8),
+    /// nibble-packed int4 codes on the exact clip-searched RTN grid.
+    I4(WeightsI4),
+}
+
+impl ProjWeight {
+    /// `y (t×n) = quant_site(x) @ W` through the backend: the integer
+    /// containers quantize activations inside the fused GEMM; the f32
+    /// container fake-quantizes explicitly (when `quant_acts`) then runs
+    /// the f32 GEMM.
+    pub fn apply(&self, backend: &dyn ComputeBackend, x: &[f32], t: usize,
+                 act_bits: u32, act_clip: f32, y: &mut [f32]) {
+        match self {
+            ProjWeight::F32 { w, quant_acts } => {
+                if *quant_acts && act_bits > 0 {
+                    let d = w.k;
+                    let mut codes = vec![0i8; t * d];
+                    let mut scales = vec![0.0f32; t];
+                    backend.quant_rows(x, d, act_bits, act_clip,
+                                       &mut codes, &mut scales);
+                    let mut xq = vec![0.0f32; t * d];
+                    for r in 0..t {
+                        let s = scales[r];
+                        for i in 0..d {
+                            xq[r * d + i] = codes[r * d + i] as f32 * s;
+                        }
+                    }
+                    backend.gemm_f32(&xq, t, w, y);
+                } else {
+                    backend.gemm_f32(x, t, w, y);
+                }
+            }
+            ProjWeight::I8(w) => backend.gemm_i8(x, t, w, act_bits, act_clip, y),
+            ProjWeight::I4(w) => backend.gemm_i4(x, t, w, act_clip, y),
+        }
+    }
+
+    /// Container memory footprint (weight bytes + scales).
+    pub fn bytes(&self) -> usize {
+        match self {
+            ProjWeight::F32 { w, .. } => w.bytes(),
+            ProjWeight::I8(w) => w.bytes(),
+            ProjWeight::I4(w) => w.bytes(),
+        }
+    }
+}
+
+/// Per-layer packed projection weights + folded norm gammas.
+pub struct LayerWeights {
+    /// Pre-attention RMSNorm gamma (ones after rotation folding).
+    pub attn_norm: Vec<f32>,
+    /// Pre-FFN RMSNorm gamma.
+    pub ffn_norm: Vec<f32>,
+    /// Query projection `(d_model, d_attn)`.
+    pub wq: ProjWeight,
+    /// Key projection `(d_model, d_kv)`.
+    pub wk: ProjWeight,
+    /// Value projection `(d_model, d_kv)`.
+    pub wv: ProjWeight,
+    /// Attention output projection `(d_attn, d_model)`.
+    pub wo: ProjWeight,
+    /// FFN up projection `(d_model, d_ff)`.
+    pub wup: ProjWeight,
+    /// FFN gate projection `(d_model, d_ff)`.
+    pub wgate: ProjWeight,
+    /// FFN down projection `(d_ff, d_model)`.
+    pub wdown: ProjWeight,
+}
+
+/// The whole model, packed for the native executor.
+pub struct NativeWeights {
+    /// Embedding table, row-major `(vocab, d_model)`, always f32.
+    pub embed: Vec<f32>,
+    /// Final RMSNorm gamma.
+    pub final_norm: Vec<f32>,
+    /// LM head `(d_model, vocab)`, always f32 (never activation-quantized).
+    pub lm_head: WeightsF32,
+    /// Per-layer projections.
+    pub layers: Vec<LayerWeights>,
+}
+
+/// The canonical weight-name set every archive variant carries — the
+/// manifest `weight_order` for artifact-backed models, and the order the
+/// artifact-free test constructors use.
+pub fn canonical_weight_order() -> Vec<String> {
+    ["embed", "final_norm", "lm_head", "attn_norm", "wq", "wk", "wv", "wo",
+     "ffn_norm", "wup", "wgate", "wdown"]
+        .iter().map(|s| s.to_string()).collect()
+}
+
+/// Row/col shape of each per-layer projection.
+fn proj_shape(cfg: &ModelConfig, name: &str) -> (usize, usize) {
+    let (d, da, dkv, dff) = (cfg.d_model, cfg.d_attn(), cfg.d_kv(), cfg.d_ff);
+    match name {
+        "wq" => (d, da),
+        "wk" | "wv" => (d, dkv),
+        "wo" => (da, d),
+        "wup" | "wgate" => (d, dff),
+        "wdown" => (dff, d),
+        other => panic!("not a projection: {other}"),
+    }
+}
+
+const PROJ_NAMES: [&str; 7] = ["wq", "wk", "wv", "wo", "wup", "wgate", "wdown"];
+
+impl NativeWeights {
+    /// Quantize + pack the archive per `spec`.  `order` is the manifest
+    /// weight order (which names exist); `stats` feeds GPTQ/SmoothQuant
+    /// like the graph path.
+    pub fn build(cfg: &ModelConfig, order: &[String], weights: &Weights,
+                 spec: &QuantSpec,
+                 stats: Option<&crate::coordinator::runner::CalibStats>)
+                 -> Result<NativeWeights> {
+        if spec.outliers > 0 {
+            bail!("native executor does not support QUIK outlier masks \
+                   (baseline graph only)");
+        }
+        let int_grid = match &spec.weights {
+            WeightQuant::Rtn(q) => {
+                (q.symmetric && q.group == 0 && !spec.smooth
+                 && (1..=8).contains(&spec.act_bits))
+                    .then_some(*q)
+            }
+            _ => None,
+        };
+        if let Some(qcfg) = int_grid {
+            Self::build_int(cfg, order, weights, spec, qcfg)
+        } else {
+            Self::build_f32(cfg, order, weights, spec, stats)
+        }
+    }
+
+    /// Integer containers on the exact clip-searched RTN grid
+    /// (per-channel symmetric RTN, no smooth fold, quantized acts).
+    fn build_int(cfg: &ModelConfig, order: &[String], weights: &Weights,
+                 spec: &QuantSpec, qcfg: rtn::WeightQuantCfg)
+                 -> Result<NativeWeights> {
+        let prefix = spec.variant.weight_prefix();
+        let load = |name: &str| -> Result<Vec<f32>> {
+            Ok(weights.get(&format!("{prefix}{name}"))?.as_f32())
+        };
+        for name in PROJ_NAMES {
+            if !order.iter().any(|n| n == name) {
+                bail!("weight order missing '{name}'");
+            }
+        }
+        let pack = |m: &Mat| -> ProjWeight {
+            let (codes, scales) = rtn::quant_weight_int_searched(m, &qcfg);
+            if spec.act_bits == 4 && qcfg.bits == 4 {
+                let kp = m.rows.div_ceil(2);
+                let mut cols = vec![0u8; kp * m.cols];
+                for c in 0..m.cols {
+                    let col = &codes[c * m.rows..(c + 1) * m.rows];
+                    for (i, pair) in col.chunks(2).enumerate() {
+                        let lo = (pair[0] as u8) & 0x0F;
+                        let hi = if pair.len() > 1 { (pair[1] as u8) & 0x0F }
+                                 else { 0 };
+                        cols[c * kp + i] = lo | (hi << 4);
+                    }
+                }
+                ProjWeight::I4(WeightsI4 { k: m.rows, n: m.cols, cols, scales })
+            } else {
+                ProjWeight::I8(WeightsI8 { k: m.rows, n: m.cols,
+                                           cols: codes, scales })
+            }
+        };
+        let mut projs: BTreeMap<&str, Vec<ProjWeight>> = BTreeMap::new();
+        for name in PROJ_NAMES {
+            let (r, c) = proj_shape(cfg, name);
+            let flat = load(name)?;
+            let per: Vec<ProjWeight> = (0..cfg.n_layers).map(|l| {
+                let m = Mat::from_vec(r, c,
+                                      flat[l * r * c..(l + 1) * r * c].to_vec());
+                pack(&m)
+            }).collect();
+            projs.insert(name, per);
+        }
+        Self::assemble(cfg, load("embed")?, load("final_norm")?,
+                       load("lm_head")?, load("attn_norm")?,
+                       load("ffn_norm")?, projs)
+    }
+
+    /// Fallback: run the graph path's `prepare_weights` verbatim and wrap
+    /// the fake-quantized f32 matrices, replaying activation fake-quant
+    /// explicitly — graph arithmetic for every spec combination.
+    fn build_f32(cfg: &ModelConfig, order: &[String], weights: &Weights,
+                 spec: &QuantSpec,
+                 stats: Option<&crate::coordinator::runner::CalibStats>)
+                 -> Result<NativeWeights> {
+        let prepared = prepare_weights(cfg, order, weights, spec, stats)?;
+        let by_name: BTreeMap<&str, &[f32]> = order.iter()
+            .zip(&prepared)
+            .map(|(n, t)| (n.as_str(), t.f32()))
+            .collect();
+        let get = |name: &str| -> Result<Vec<f32>> {
+            Ok(by_name.get(name)
+                .with_context(|| format!("weight order missing '{name}'"))?
+                .to_vec())
+        };
+        let quant_acts = spec.act_bits > 0;
+        let mut projs: BTreeMap<&str, Vec<ProjWeight>> = BTreeMap::new();
+        for name in PROJ_NAMES {
+            let (r, c) = proj_shape(cfg, name);
+            let flat = get(name)?;
+            let per: Vec<ProjWeight> = (0..cfg.n_layers).map(|l| {
+                ProjWeight::F32 {
+                    w: WeightsF32::from_row_major(
+                        &flat[l * r * c..(l + 1) * r * c], r, c),
+                    quant_acts,
+                }
+            }).collect();
+            projs.insert(name, per);
+        }
+        Self::assemble(cfg, get("embed")?, get("final_norm")?,
+                       get("lm_head")?, get("attn_norm")?,
+                       get("ffn_norm")?, projs)
+    }
+
+    fn assemble(cfg: &ModelConfig, embed: Vec<f32>, final_norm: Vec<f32>,
+                lm_head: Vec<f32>, attn_norm: Vec<f32>, ffn_norm: Vec<f32>,
+                mut projs: BTreeMap<&str, Vec<ProjWeight>>)
+                -> Result<NativeWeights> {
+        let d = cfg.d_model;
+        if embed.len() != cfg.vocab * d {
+            bail!("embed shape mismatch: {} != {}", embed.len(), cfg.vocab * d);
+        }
+        let mut take = |name: &str| -> Vec<ProjWeight> {
+            projs.remove(name).expect("packed above")
+        };
+        let (mut wq, mut wk, mut wv, mut wo) =
+            (take("wq"), take("wk"), take("wv"), take("wo"));
+        let (mut wup, mut wgate, mut wdown) =
+            (take("wup"), take("wgate"), take("wdown"));
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in (0..cfg.n_layers).rev() {
+            layers.push(LayerWeights {
+                attn_norm: attn_norm[l * d..(l + 1) * d].to_vec(),
+                ffn_norm: ffn_norm[l * d..(l + 1) * d].to_vec(),
+                wq: wq.pop().expect("layer count"),
+                wk: wk.pop().expect("layer count"),
+                wv: wv.pop().expect("layer count"),
+                wo: wo.pop().expect("layer count"),
+                wup: wup.pop().expect("layer count"),
+                wgate: wgate.pop().expect("layer count"),
+                wdown: wdown.pop().expect("layer count"),
+            });
+        }
+        layers.reverse();
+        Ok(NativeWeights {
+            embed,
+            final_norm,
+            lm_head: WeightsF32::from_row_major(&lm_head, d, cfg.vocab),
+            layers,
+        })
+    }
+
+    /// Total packed weight bytes (embed + head + projections + norms).
+    pub fn bytes(&self) -> usize {
+        let mut b = (self.embed.len() + self.final_norm.len()) * 4
+            + self.lm_head.bytes();
+        for l in &self.layers {
+            b += (l.attn_norm.len() + l.ffn_norm.len()) * 4;
+            for p in [&l.wq, &l.wk, &l.wv, &l.wo, &l.wup, &l.wgate, &l.wdown] {
+                b += p.bytes();
+            }
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend;
+    use crate::util::prng::Rng;
+
+    // I4 and I8 containers built from the same searched codes must produce
+    // bit-identical GEMM results: integer accumulation is order-exact, and
+    // the epilogue is the same expression.
+    #[test]
+    fn i4_and_i8_containers_agree_bitwise() {
+        let mut rng = Rng::new(3);
+        let (k, n, t) = (16usize, 6usize, 3usize);
+        let m = Mat::randn(k, n, &mut rng);
+        let qcfg = rtn::WeightQuantCfg::rtn(4);
+        let (codes, scales) = rtn::quant_weight_int_searched(&m, &qcfg);
+        let i8w = WeightsI8 { k, n, cols: codes.clone(), scales: scales.clone() };
+        let kp = k.div_ceil(2);
+        let mut cols = vec![0u8; kp * n];
+        for c in 0..n {
+            let col = &codes[c * k..(c + 1) * k];
+            for (i, pair) in col.chunks(2).enumerate() {
+                cols[c * kp + i] = ((pair[0] as u8) & 0x0F)
+                    | (((pair[1] as u8) & 0x0F) << 4);
+            }
+        }
+        let i4w = WeightsI4 { k, n, cols, scales };
+        let be = backend::make(backend::BackendKind::Scalar);
+        let x = rng.normal_vec(t * k);
+        let mut y8 = vec![0.0f32; t * n];
+        let mut y4 = vec![0.0f32; t * n];
+        be.gemm_i8(&x, t, &i8w, 4, 0.9, &mut y8);
+        be.gemm_i4(&x, t, &i4w, 0.9, &mut y4);
+        for (a, b) in y8.iter().zip(&y4) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+}

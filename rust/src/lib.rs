@@ -37,6 +37,11 @@
 //!                   channel-scaled Hadamard — `--rotation` selects one
 //!                   end-to-end (spec → weight prep → verify).
 //! * [`runtime`]   — PJRT engine: manifest-driven executable registry.
+//! * [`forward`]   — graph-free model execution: the `ModelExecutor`
+//!                   contract (prefill / batched decode / chunked suffix
+//!                   prefill) and the native pure-rust forward pass built
+//!                   from the backend ops, so `--executor native` serves
+//!                   with zero PJRT graphs loaded.
 //! * [`coordinator`] — the serving layer: continuous batcher, paged
 //!                   quantized KV-cache manager with refcounted pages,
 //!                   the shared prompt-prefix trie (grafted at
@@ -81,6 +86,7 @@ pub mod bench_support;
 pub mod cluster;
 pub mod coordinator;
 pub mod eval;
+pub mod forward;
 pub mod gemm;
 pub mod hadamard;
 pub mod linalg;

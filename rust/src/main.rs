@@ -5,7 +5,10 @@
 //!   serve         start the TCP serving front-end (QuaRot-INT4 by
 //!                 default; v2 event-frame protocol, --queue-bound for
 //!                 per-shard admission, --shards N engine shards,
-//!                 --prefix-cache N shared-prefix page budget)
+//!                 --prefix-cache N shared-prefix page budget,
+//!                 --executor pjrt|native to pick the graph or the
+//!                 graph-free pure-rust forward path, --prefill-chunk N
+//!                 for the per-tick chunked-prefill budget)
 //!   generate      generation from a token prompt (--stream prints tokens
 //!                 incrementally; --priority / --deadline-ms / --tier
 //!                 scheduling; --self-spec for KV4-draft speculative
@@ -39,8 +42,9 @@ use quarot::api::{GenerationEvent, GenerationParams, LocalSession, Priority,
 use quarot::bench_support::{self, Artifacts};
 use quarot::cluster::{ClusterConfig, ClusterService, EngineFactory,
                       LatencySummary};
-use quarot::coordinator::batcher::GenerationEngine;
-use quarot::coordinator::runner::{QuantSpec, Runner, Variant, WeightQuant};
+use quarot::coordinator::batcher::{GenerationEngine, DEFAULT_PREFILL_CHUNK};
+use quarot::coordinator::runner::{ExecutorKind, QuantSpec, Runner, Variant,
+                                  WeightQuant};
 use quarot::coordinator::selfspec::{self, SelfSpecDecoder};
 use quarot::eval;
 use quarot::quant;
@@ -94,6 +98,19 @@ fn parse_bits(flag: &str, s: &str) -> Result<u32> {
     Ok(bits)
 }
 
+/// `--executor` dispatch: `pjrt` runs the AOT-compiled graphs (the
+/// default), `native` runs the pure-rust forward pass and loads zero
+/// PJRT graphs (only the manifest and weights).
+fn executor_from_args(a: &Args) -> Result<ExecutorKind> {
+    ExecutorKind::parse(&a.str_or("executor", "pjrt"))
+}
+
+/// `--prefill-chunk`: prompt tokens prefilled per engine tick, sharing
+/// the tick budget with active decode slots (continuous batching).
+fn prefill_chunk_from_args(a: &Args) -> usize {
+    a.usize_or("prefill-chunk", DEFAULT_PREFILL_CHUNK)
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     // Compute-backend selection applies to every subcommand (serve /
@@ -126,6 +143,12 @@ fn main() -> Result<()> {
                                --rotation hadamard|random|scaled-hadamard\n\
                                --act-bits / --kv-bits 3|4|6|8|16\n\
                                --backend scalar|blocked|threaded|auto (default auto)\n\
+                               --executor pjrt|native (AOT graphs vs the\n\
+                               pure-rust forward pass; native loads zero\n\
+                               PJRT graphs)\n\
+                               --prefill-chunk N (prompt tokens prefilled\n\
+                               per tick, budget shared with decode;\n\
+                               default 32)\n\
                  generate:     --stream (incremental tokens) --temperature --top-k\n\
                                --stop-token --priority interactive|batch\n\
                                --deadline-ms N (server-side deadline)\n\
@@ -158,20 +181,26 @@ fn main() -> Result<()> {
 /// Build a runner for `spec`, collecting calibration stats when the
 /// spec needs them (the scaled-hadamard rotation folds per-channel
 /// scales into the weights, which requires activation amax).
-fn runner_for_spec(art: &Artifacts, spec: &QuantSpec) -> Result<Runner> {
+fn runner_for_spec(art: &Artifacts, spec: &QuantSpec, kind: ExecutorKind)
+                   -> Result<Runner> {
     let stats = if spec.smooth {
+        if kind == ExecutorKind::Native {
+            bail!("--executor native cannot run smoothed schemes: the \
+                   calibration pass needs the PJRT collect graph \
+                   (use --executor pjrt)");
+        }
         Some(art.calib(spec.variant.is_rotated(), 4)?)
     } else {
         None
     };
-    art.runner(spec.clone(), stats.as_ref())
+    art.runner_kind(kind, spec.clone(), stats.as_ref())
 }
 
 fn build_runner(args: &Args) -> Result<(Artifacts, Runner)> {
     let model = args.str_or("model", "tiny-mha");
     let art = Artifacts::load(&model)?;
     let spec = spec_from_args(args)?;
-    let runner = runner_for_spec(&art, &spec)?;
+    let runner = runner_for_spec(&art, &spec, executor_from_args(args)?)?;
     Ok((art, runner))
 }
 
@@ -198,11 +227,14 @@ fn serve(args: &Args) -> Result<()> {
     // sampling rate for `{"cmd":"trace"}` / `quarot trace`
     let trace_buffer = args.usize_or("trace-buffer", 0);
     let trace_sample = args.usize_or("trace-sample", 1) as u64;
+    let executor = executor_from_args(args)?;
+    let prefill_chunk = prefill_chunk_from_args(args);
     let handle = quarot::server::serve_sharded(
         move || {
             let art = Artifacts::load(&model)?;
-            let runner = runner_for_spec(&art, &spec)?;
+            let runner = runner_for_spec(&art, &spec, executor)?;
             let mut engine = GenerationEngine::new(runner, pages, 7);
+            engine.set_prefill_chunk(prefill_chunk);
             engine.set_prefix_cache_pages(prefix_pages);
             engine.set_session_budget(sessions);
             engine.set_session_ttl_ms(session_ttl_ms);
@@ -220,9 +252,10 @@ fn serve(args: &Args) -> Result<()> {
               {{\"cmd\":\"stats\"}} / {{\"cmd\":\"metrics\"}} / \
               {{\"cmd\":\"trace\"}} / {{\"cmd\":\"flush-prefix\"}} / \
               {{\"cmd\":\"shutdown\"}}); \
-              {} shard(s), per-shard admission bound {}, \
-              {} session(s) per shard",
-             handle.port, shards, queue_bound, sessions);
+              {} shard(s) on the {} executor, per-shard admission bound {}, \
+              {} session(s) per shard, prefill chunk {}",
+             handle.port, shards, executor.name(), queue_bound, sessions,
+             prefill_chunk);
     // blocks until a wire shutdown stops the engine and accept loops,
     // then exits cleanly instead of lingering as a serving-nothing zombie
     handle.wait();
@@ -283,8 +316,9 @@ fn generate(args: &Args) -> Result<()> {
         params = params.tier(quarot::api::QualityTier::parse(t)
             .with_context(|| format!("unknown tier '{t}' (kv4|kv8)"))?);
     }
-    let session = LocalSession::new(GenerationEngine::new(runner, 1024, 7),
-                                    SessionConfig::default());
+    let mut engine = GenerationEngine::new(runner, 1024, 7);
+    engine.set_prefill_chunk(prefill_chunk_from_args(args));
+    let session = LocalSession::new(engine, SessionConfig::default());
     let handle = session.submit(params).map_err(|e| anyhow!("{e}"))?;
 
     if args.bool("stream") {
@@ -402,11 +436,14 @@ fn cluster_bench(args: &Args) -> Result<()> {
         bail!("eval split too short ({} tokens) for prompts", eval_toks.len());
     }
     let prefix_pages = args.usize_or("prefix-cache", pages / 2);
+    let executor = executor_from_args(args)?;
+    let prefill_chunk = prefill_chunk_from_args(args);
     let m = model.clone();
     let factory: EngineFactory = Arc::new(move || {
         let art = Artifacts::load(&m)?;
-        let runner = runner_for_spec(&art, &spec)?;
+        let runner = runner_for_spec(&art, &spec, executor)?;
         let mut engine = GenerationEngine::new(runner, pages, 7);
+        engine.set_prefill_chunk(prefill_chunk);
         engine.set_prefix_cache_pages(prefix_pages);
         Ok(engine)
     });

@@ -94,6 +94,52 @@ pub fn fake_quant_weight(w: &mut Mat, cfg: &WeightQuantCfg) {
     }
 }
 
+/// Integer-emitting per-column symmetric quantization with the same MSE
+/// clip search as [`fake_quant_weight`] (per-channel only: `group == 0`,
+/// `symmetric`).  Returns **column-major** codes (`cols[c * rows + r]`,
+/// the [`crate::gemm::WeightsI8::cols`] layout) plus per-column scales
+/// whose dequantization `code · scale` is bit-identical to the values
+/// [`fake_quant_weight`] writes — so integer-GEMM containers built from
+/// them compute on exactly the weight grid the compiled graphs were
+/// handed, rather than re-quantizing an already-quantized matrix.
+pub fn quant_weight_int_searched(w: &Mat, cfg: &WeightQuantCfg)
+                                 -> (Vec<i8>, Vec<f32>) {
+    assert!(cfg.symmetric && cfg.group == 0,
+            "searched int codes are per-channel symmetric only");
+    let levels = super::sym_levels(cfg.bits) as f32;
+    let mut codes = vec![0i8; w.rows * w.cols];
+    let mut scales = vec![0.0f32; w.cols];
+    for c in 0..w.cols {
+        let col = w.col(c);
+        let amax = col.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        // identical candidate sequence, error arithmetic (f32 residual
+        // cast to f64) and strict-improvement tie-break as `fq_group`
+        let mut best: Option<(f64, f32)> = None;
+        for i in 0..cfg.clip_steps.max(1) {
+            let clip = if cfg.clip_steps <= 1 {
+                1.0
+            } else {
+                1.0 - (1.0 - cfg.min_clip) * i as f32
+                    / (cfg.clip_steps - 1) as f32
+            };
+            let s = (amax * clip).max(1e-8) / levels;
+            let err: f64 = col.iter().map(|&v| {
+                let q = (v / s).round().clamp(-levels, levels) * s;
+                ((q - v) as f64).powi(2)
+            }).sum();
+            if best.as_ref().map(|(e, _)| err < *e).unwrap_or(true) {
+                best = Some((err, s));
+            }
+        }
+        let s = best.unwrap().1;
+        scales[c] = s;
+        for (r, &v) in col.iter().enumerate() {
+            codes[c * w.rows + r] = (v / s).round().clamp(-levels, levels) as i8;
+        }
+    }
+    (codes, scales)
+}
+
 /// Integer-emitting per-column symmetric quantization: (codes, scales).
 /// Codes in [-levels, levels]; used by the native int GEMM benches.
 pub fn quant_weight_int(w: &Mat, bits: u32) -> (Vec<i8>, Vec<f32>) {
@@ -195,6 +241,25 @@ mod tests {
             for c in 0..w.cols {
                 let deq = codes[r * w.cols + c] as f32 * scales[c];
                 assert!((deq - fq[(r, c)]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn searched_int_codes_bit_identical_to_fake_quant() {
+        // the native executor's whole parity story: codes · scale must
+        // reproduce the clip-searched fake-quant grid *bitwise*
+        let mut rng = Rng::new(5);
+        let w = Mat::randn(32, 12, &mut rng);
+        let cfg = WeightQuantCfg::rtn(4);
+        let (codes, scales) = quant_weight_int_searched(&w, &cfg);
+        let mut fq = w.clone();
+        fake_quant_weight(&mut fq, &cfg);
+        for c in 0..w.cols {
+            for r in 0..w.rows {
+                let deq = codes[c * w.rows + r] as f32 * scales[c];
+                assert_eq!(deq.to_bits(), fq[(r, c)].to_bits(),
+                           "({r},{c}): {deq} != {}", fq[(r, c)]);
             }
         }
     }

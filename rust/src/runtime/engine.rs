@@ -66,8 +66,12 @@ struct LoadedGraph {
 }
 
 /// Engine = PJRT client + compiled executables + pinned weight buffers.
+///
+/// The client is created lazily: loading with `only: Some(&[])` (the
+/// native executor's manifest-only mode) compiles nothing and never
+/// touches PJRT, so construction succeeds with zero graphs loaded.
 pub struct Engine {
-    client: xla::PjRtClient,
+    client: Option<xla::PjRtClient>,
     graphs: HashMap<String, LoadedGraph>,
     pub manifest: Manifest,
     /// graph name → (first weight arg index, device buffers)
@@ -76,26 +80,38 @@ pub struct Engine {
 
 impl Engine {
     /// Load every graph in `dir`'s manifest.  `only` restricts compilation
-    /// to the named graphs (compiling all ~12 takes a few seconds each).
+    /// to the named graphs (compiling all ~12 takes a few seconds each);
+    /// `Some(&[])` loads the manifest alone — no PJRT client, no graphs.
     pub fn load(dir: &str, only: Option<&[&str]>) -> Result<Engine> {
         let manifest = Manifest::load(&format!("{dir}/manifest.json"))?;
-        let client = xla::PjRtClient::cpu().context("PJRT cpu client")?;
+        let wanted: Vec<&GraphSpec> = manifest.graphs.iter()
+            .filter(|spec| only.map_or(true,
+                |names| names.contains(&spec.name.as_str())))
+            .collect();
+        let client = if wanted.is_empty() {
+            None
+        } else {
+            Some(xla::PjRtClient::cpu().context("PJRT cpu client")?)
+        };
         let mut graphs = HashMap::new();
-        for spec in &manifest.graphs {
-            if let Some(names) = only {
-                if !names.contains(&spec.name.as_str()) {
-                    continue;
-                }
+        if let Some(client) = &client {
+            for spec in wanted {
+                let path = format!("{dir}/{}", spec.file);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parse {path}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)
+                    .with_context(|| format!("compile {}", spec.name))?;
+                graphs.insert(spec.name.clone(),
+                              LoadedGraph { spec: spec.clone(), exe });
             }
-            let path = format!("{dir}/{}", spec.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parse {path}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)
-                .with_context(|| format!("compile {}", spec.name))?;
-            graphs.insert(spec.name.clone(), LoadedGraph { spec: spec.clone(), exe });
         }
         Ok(Engine { client, graphs, manifest, pinned: HashMap::new() })
+    }
+
+    fn client(&self) -> Result<&xla::PjRtClient> {
+        self.client.as_ref()
+            .context("engine was loaded graph-free (no PJRT client)")
     }
 
     pub fn has_graph(&self, name: &str) -> bool {
@@ -107,10 +123,11 @@ impl Engine {
     }
 
     fn to_buffer(&self, t: &HostTensor, shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        let client = self.client()?;
         Ok(match t {
-            HostTensor::F32(v) => self.client.buffer_from_host_buffer(v, shape, None)?,
-            HostTensor::I32(v) => self.client.buffer_from_host_buffer(v, shape, None)?,
-            HostTensor::I8(v) => self.client.buffer_from_host_buffer(v, shape, None)?,
+            HostTensor::F32(v) => client.buffer_from_host_buffer(v, shape, None)?,
+            HostTensor::I32(v) => client.buffer_from_host_buffer(v, shape, None)?,
+            HostTensor::I8(v) => client.buffer_from_host_buffer(v, shape, None)?,
         })
     }
 

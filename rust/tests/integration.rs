@@ -71,6 +71,56 @@ fn computational_invariance_through_compiled_graphs() {
     assert!(max_err < 5e-3 * scale, "invariance violated: {max_err} vs {scale}");
 }
 
+/// Argmax per logits row — the token a greedy sampler would pick.
+fn argmaxes(logits: &[f32], vocab: usize) -> Vec<usize> {
+    logits.chunks(vocab)
+        .map(|row| {
+            row.iter().enumerate()
+                .fold((0usize, f32::NEG_INFINITY),
+                      |best, (i, &v)| if v > best.1 { (i, v) } else { best })
+                .0
+        })
+        .collect()
+}
+
+/// Tentpole parity gate: the native (graph-free) executor must agree
+/// with the PJRT graph path on the same artifact weights.  Bitwise
+/// equality is off the table — XLA fuses and reorders fp32 summations
+/// differently than the in-process backend — so the contract is
+/// numeric: per-position logits within a small relative tolerance and
+/// greedy-argmax agreement on (almost) every position, under both the
+/// fp16 baseline spec and the full QuaRot A4KV4 spec.
+#[test]
+fn native_executor_matches_pjrt_logits() {
+    let Some(art) = art() else { return };
+    let toks = art.corpus.split("eval").unwrap()[..64].to_vec();
+    for (label, spec, tol) in [
+        ("fp16-baseline", QuantSpec::fp16_baseline(), 5e-3f32),
+        ("quarot-a4kv4", QuantSpec::quarot(4), 2e-2f32),
+    ] {
+        let pjrt = art.runner_prefill_only(spec.clone(), None).unwrap();
+        let vocab = pjrt.cfg.vocab;
+        let l_pjrt = pjrt.prefill(&toks).unwrap().logits;
+        drop(pjrt);
+        let native = art.runner_native(spec, None).unwrap();
+        assert_eq!(native.executor_name(), "native");
+        let l_native = native.prefill(&toks).unwrap().logits;
+        assert_eq!(l_pjrt.len(), l_native.len(), "{label}: logits shape");
+        let scale = l_pjrt.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let max_err = l_pjrt.iter().zip(&l_native)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        assert!(max_err < tol * scale,
+                "{label}: native drifted from PJRT: {max_err} vs scale {scale}");
+        let (a, b) = (argmaxes(&l_pjrt, vocab), argmaxes(&l_native, vocab));
+        let mismatches = a.iter().zip(&b).filter(|(x, y)| x != y).count();
+        // near-ties may flip under a different summation order; more
+        // than a few positions flipping means a real numeric bug
+        assert!(mismatches * 20 <= a.len(),
+                "{label}: greedy argmax diverged on {mismatches}/{} positions",
+                a.len());
+    }
+}
+
 #[test]
 fn quantization_ordering_int8_beats_int4() {
     let Some(art) = art() else { return };

@@ -98,6 +98,9 @@ fn sample_metrics() -> ClusterMetrics {
         sessions_live: 1,
         session_turns: 3,
         session_prefill_tokens_saved: 17,
+        executor: "pjrt".to_string(),
+        prefill_chunks: 4,
+        prefill_chunk_tokens: 96,
         ..ShardMetrics::default()
     };
     // populate every latency histogram so the percentile keys are
